@@ -1,0 +1,67 @@
+//! Bench L3 hot path: PJRT dispatch latency through the live runtime —
+//! stage forward, backward and optimizer executions, plus the literal
+//! staging cost the coordinator pays per microbatch.
+//!
+//! Skips (with a notice) if `make artifacts` has not been run.
+
+use dsmem::runtime::executable::{f32_literal, i32_literal};
+use dsmem::runtime::{ArtifactManifest, Runtime};
+use dsmem::util::bench::{bench, black_box};
+use dsmem::util::Rng64;
+use std::path::Path;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("runtime_exec: artifacts/ not built (run `make artifacts`); skipping");
+        return Ok(());
+    }
+    let manifest = ArtifactManifest::load(dir)?;
+    let rt = Runtime::load(manifest)?;
+    let man = &rt.manifest;
+    let (b, s) = (man.micro_batch, man.seq_len);
+
+    // Stage-0 forward with real initial params.
+    let stage0 = rt.stage(0)?;
+    let mut rng = Rng64::new(7);
+    let mut params = Vec::new();
+    for (i, file) in stage0.stage.init_params.iter().enumerate() {
+        let bytes = std::fs::read(man.dir.join(file))?;
+        let vals: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        params.push(f32_literal(&vals, &stage0.fwd.spec.inputs[i].shape)?);
+    }
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(man.vocab_size) as i32).collect();
+    let x = i32_literal(&tokens, &[b, s])?;
+
+    let mut args: Vec<&xla::Literal> = params.iter().collect();
+    args.push(&x);
+
+    let r = bench("stage0_fwd (b=4,s=128)", Duration::from_secs(10), || {
+        black_box(stage0.fwd.run(&args).unwrap());
+    });
+    r.report();
+    println!(
+        "  → {:.1} microbatches/s forward",
+        r.per_sec()
+    );
+
+    // Literal staging: the host→literal copy the coordinator pays per param set.
+    let flat: Vec<f32> = (0..1_000_000).map(|i| i as f32).collect();
+    bench("f32_literal 4MB", Duration::from_secs(3), || {
+        black_box(f32_literal(&flat, &[1000, 1000]).unwrap());
+    })
+    .report();
+
+    // to_vec readback (gradient accumulation path).
+    let lit = f32_literal(&flat, &[1000, 1000])?;
+    bench("literal_to_vec 4MB", Duration::from_secs(3), || {
+        black_box(lit.to_vec::<f32>().unwrap());
+    })
+    .report();
+
+    Ok(())
+}

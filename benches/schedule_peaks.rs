@@ -1,0 +1,58 @@
+//! Bench E2: schedule-dependent peak activation memory — extends the paper's
+//! per-microbatch Table 10 to whole-step peaks under GPipe / 1F1B /
+//! interleaved-1F1B, and times the cluster simulator.
+
+use dsmem::analysis::{MemoryModel, ZeroStrategy};
+use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
+use dsmem::report::gib;
+use dsmem::sim::{MemClass, ScheduleKind, SimEngine};
+use dsmem::util::bench::{bench, black_box};
+use std::time::Duration;
+
+fn main() {
+    let cs = CaseStudy::paper();
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+
+    println!("worst-stage activation peak, b=1, m=16 (Table 10 is per-microbatch):\n");
+    for (name, kind) in [
+        ("gpipe", ScheduleKind::GPipe),
+        ("1f1b", ScheduleKind::OneFOneB),
+        ("interleaved-v2", ScheduleKind::Interleaved1F1B { chunks: 2 }),
+    ] {
+        for rc in [RecomputePolicy::None, RecomputePolicy::Full] {
+            let mut act = ActivationConfig::paper(1);
+            act.recompute = rc;
+            let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+            let res = eng.run(kind, 16).unwrap();
+            let worst = res.peak_stage();
+            println!(
+                "  {:<16} AC {:<5} peak act {:>7.1} GiB  total {:>7.1} GiB  (stage {}, {} inflight)",
+                name,
+                rc.name(),
+                gib(worst.timeline.peak(MemClass::Activations)),
+                gib(worst.timeline.total_peak()),
+                worst.stage,
+                worst.peak_inflight
+            );
+        }
+    }
+    println!();
+
+    let act = ActivationConfig::paper(1);
+    let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+    bench("sim_step_1f1b_m16_pp16", Duration::from_secs(3), || {
+        black_box(eng.run(ScheduleKind::OneFOneB, 16).unwrap());
+    })
+    .report();
+    bench("sim_step_gpipe_m64_pp16", Duration::from_secs(3), || {
+        black_box(eng.run(ScheduleKind::GPipe, 64).unwrap());
+    })
+    .report();
+
+    let mut eng_frag = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+    eng_frag.simulate_allocator = true;
+    bench("sim_step_with_allocator", Duration::from_secs(3), || {
+        black_box(eng_frag.run(ScheduleKind::OneFOneB, 8).unwrap());
+    })
+    .report();
+}

@@ -1,0 +1,68 @@
+//! Bench E4: feasibility-sweep throughput — the library's "serving" hot path
+//! (a capacity planner evaluates thousands of configurations). Measures
+//! configs/second through the full analytical model.
+
+use dsmem::analysis::{total::sweep, MemoryModel, Overheads};
+use dsmem::config::{ActivationConfig, CaseStudy, ParallelConfig};
+use dsmem::util::bench::{bench, black_box};
+use std::time::Duration;
+
+fn main() {
+    let cs = CaseStudy::paper();
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+
+    // The packaged 36-point sweep.
+    let r = bench("sweep_36pt(b×AC×ZeRO)", Duration::from_secs(3), || {
+        black_box(sweep(&mm, &cs.activation, Overheads::paper_midpoint()));
+    });
+    r.report();
+    println!("  → {:.0} configs/s\n", 36.0 * r.per_sec());
+
+    // A wide layout scan: every valid (tp, ep, pp) for a 1024-GPU fleet.
+    let r2 = bench("layout_scan_1024gpu", Duration::from_secs(3), || {
+        let mut best = u64::MAX;
+        for tp in [1u64, 2, 4, 8] {
+            for pp in [8u64, 16, 32] {
+                for ep in [4u64, 8, 16, 32] {
+                    let world = 1024;
+                    if world % (tp * pp) != 0 {
+                        continue;
+                    }
+                    let dp = world / (tp * pp);
+                    let p = ParallelConfig { dp, tp, pp, ep, etp: 1 };
+                    // Keep plans valid: the front-loaded split must not
+                    // produce an empty stage for this (l, pp).
+                    if p.validate().is_err()
+                        || dsmem::analysis::StageSplit::FrontLoaded.layer_counts(61, pp).is_err()
+                    {
+                        continue;
+                    }
+                    let mut act = ActivationConfig::paper(1);
+                    act.sp = tp;
+                    if act.validate().is_err() {
+                        continue;
+                    }
+                    let mm = MemoryModel::new(&cs.model, &p, cs.dtypes);
+                    let rep = mm.device_memory(
+                        &act,
+                        dsmem::analysis::ZeroStrategy::OsG,
+                        Overheads::paper_midpoint(),
+                    );
+                    best = best.min(rep.total_bytes());
+                }
+            }
+        }
+        black_box(best);
+    });
+    r2.report();
+
+    // Single full device-memory evaluation.
+    bench("device_memory_single", Duration::from_secs(2), || {
+        black_box(mm.device_memory(
+            &cs.activation,
+            dsmem::analysis::ZeroStrategy::OsG,
+            Overheads::paper_midpoint(),
+        ));
+    })
+    .report();
+}

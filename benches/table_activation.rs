@@ -1,0 +1,39 @@
+//! Bench T10/F2/F3: regenerate paper Table 10 (activation memory, AC None vs
+//! Full, b ∈ {1,2,4}) plus the Figure 2/3 tapes, and time tape construction.
+
+use dsmem::analysis::MemoryModel;
+use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
+use dsmem::report::tables::paper_table;
+use dsmem::util::bench::{bench, black_box};
+use std::time::Duration;
+
+fn main() {
+    let cs = CaseStudy::paper();
+    println!("{}", paper_table(&cs, 10).unwrap().render());
+
+    // Figures 2 and 3: the tapes themselves.
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+    let rep = mm.activation_report(&ActivationConfig::paper(1));
+    println!("{}", rep.mla.render(RecomputePolicy::None));
+    println!("{}", rep.moe.render(RecomputePolicy::None));
+
+    bench("activation_report(b=1)", Duration::from_secs(2), || {
+        black_box(mm.activation_report(&ActivationConfig::paper(1)));
+    })
+    .report();
+    bench("table10_full_render", Duration::from_secs(2), || {
+        black_box(paper_table(&cs, 10).unwrap());
+    })
+    .report();
+
+    // Selective-attention extension: how much of the b=1 tape is the s² term?
+    let none = rep.total_stage_bytes(RecomputePolicy::None);
+    let sel = rep.mla_stage_bytes(RecomputePolicy::SelectiveAttention)
+        + rep.moe_stage_bytes(RecomputePolicy::SelectiveAttention);
+    println!(
+        "selective-attention recompute saves {:.1} GiB of {:.1} GiB ({:.0}%)",
+        dsmem::report::gib(none - sel),
+        dsmem::report::gib(none),
+        100.0 * (none - sel) as f64 / none as f64
+    );
+}

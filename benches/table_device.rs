@@ -1,0 +1,29 @@
+//! Bench T6: regenerate paper Table 6 (per-device static partitioning under
+//! TP/EP/ETP) and time the device-analysis path across EP degrees.
+
+use dsmem::analysis::MemoryModel;
+use dsmem::config::{CaseStudy, ParallelConfig};
+use dsmem::report::tables::paper_table;
+use dsmem::util::bench::{bench, black_box};
+use std::time::Duration;
+
+fn main() {
+    let cs = CaseStudy::paper();
+    println!("{}", paper_table(&cs, 6).unwrap().render());
+
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+    bench("device_static_params(paper)", Duration::from_secs(2), || {
+        black_box(mm.device_static_params().total_params());
+    })
+    .report();
+
+    for ep in [1u64, 4, 8, 16, 64] {
+        let p = ParallelConfig { ep, ..cs.parallel };
+        let mm = MemoryModel::new(&cs.model, &p, cs.dtypes);
+        let name = format!("device_static_params(ep={ep})");
+        bench(&name, Duration::from_secs(1), || {
+            black_box(mm.device_static_params().total_params());
+        })
+        .report();
+    }
+}

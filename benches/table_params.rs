@@ -1,0 +1,32 @@
+//! Bench T3/T4: regenerate paper Tables 3 and 4 (layer- and stage-level
+//! parameter counting) and time the analysis path.
+
+use dsmem::config::CaseStudy;
+use dsmem::report::tables::paper_table;
+use dsmem::util::bench::{bench, black_box};
+use std::time::Duration;
+
+fn main() {
+    let cs = CaseStudy::paper();
+
+    // Regenerate (the actual deliverable).
+    for n in [3u8, 4] {
+        println!("{}", paper_table(&cs, n).unwrap().render());
+    }
+
+    // Time it.
+    bench("table3_layer_census", Duration::from_secs(2), || {
+        black_box(paper_table(&cs, 3).unwrap());
+    })
+    .report();
+    bench("table4_stage_plan", Duration::from_secs(2), || {
+        black_box(paper_table(&cs, 4).unwrap());
+    })
+    .report();
+
+    let mm = dsmem::analysis::MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+    bench("param_table_build", Duration::from_secs(2), || {
+        black_box(mm.param_table().total_params());
+    })
+    .report();
+}

@@ -1,0 +1,35 @@
+//! Bench T8: regenerate paper Table 8 (ZeRO os / os+g / os+g+params) and
+//! time the sharding analysis, including the Megatron-optimizer ablation.
+
+use dsmem::analysis::MemoryModel;
+use dsmem::config::{CaseStudy, DtypePolicy};
+use dsmem::report::tables::paper_table;
+use dsmem::util::bench::{bench, black_box};
+use std::time::Duration;
+
+fn main() {
+    let cs = CaseStudy::paper();
+    println!("{}", paper_table(&cs, 8).unwrap().render());
+
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+    bench("zero_report(paper 8B optimizer)", Duration::from_secs(2), || {
+        black_box(mm.zero_report());
+    })
+    .report();
+
+    // Ablation: classic Megatron mixed precision (12 B/param optimizer).
+    let mm12 = MemoryModel::new(&cs.model, &cs.parallel, DtypePolicy::megatron_mixed());
+    let r8 = mm.zero_report();
+    let r12 = mm12.zero_report();
+    println!("\nAblation — optimizer bytes/param (ZeRO none):");
+    println!(
+        "  paper 4+2+2 policy: {:.2} GiB | megatron 4+4+4: {:.2} GiB (x{:.2})",
+        dsmem::report::gib(r8.rows[0].optimizer_bytes),
+        dsmem::report::gib(r12.rows[0].optimizer_bytes),
+        r12.rows[0].optimizer_bytes as f64 / r8.rows[0].optimizer_bytes as f64
+    );
+    bench("zero_report(megatron 12B optimizer)", Duration::from_secs(2), || {
+        black_box(mm12.zero_report());
+    })
+    .report();
+}

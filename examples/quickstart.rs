@@ -1,0 +1,60 @@
+//! Quickstart: reproduce the paper's headline numbers in a dozen lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dsmem::analysis::{MemoryModel, Overheads, ZeroStrategy};
+use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
+use dsmem::report::{gib, tables::paper_table};
+
+fn main() -> anyhow::Result<()> {
+    // The paper's case study: DeepSeek-v3 under DP32 TP2 PP16 EP8 ETP1.
+    let cs = CaseStudy::paper();
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+
+    // Table 3/4: the model is 671 B parameters; the heaviest PP16 stage holds 46 B.
+    let params = mm.param_table();
+    println!("total parameters: {}", params.total_params());
+    assert_eq!(params.total_params(), 671_026_522_112);
+
+    // Table 6: one GPU of a middle stage stores 6.25 B params = 11.64 GiB.
+    let dev = mm.device_static_params();
+    println!(
+        "per-device static params: {} ({:.2} GiB)",
+        dev.total_params(),
+        gib(dev.total_bytes())
+    );
+    assert_eq!(dev.total_params(), 6_250_364_928);
+
+    // Table 8: ZeRO os+g+params shrinks P+G+O from 81.5 to 9.66 GiB.
+    let zero = mm.zero_report();
+    for row in &zero.rows {
+        println!(
+            "ZeRO {:<12} P+G+O = {:>6.2} GiB",
+            row.strategy.name(),
+            gib(row.total_bytes())
+        );
+    }
+
+    // Table 10: activation memory per device, with and without recomputation.
+    let act = ActivationConfig::paper(1);
+    let rep = mm.activation_report(&act);
+    println!(
+        "activations b=1: none = {:.2} GiB, full recompute = {:.3} GiB",
+        gib(rep.total_stage_bytes(RecomputePolicy::None)),
+        gib(rep.total_stage_bytes(RecomputePolicy::Full)),
+    );
+
+    // End-to-end: does the paper's configuration fit an 80 GiB device?
+    let report = mm.device_memory(&act, ZeroStrategy::OsG, Overheads::paper_midpoint());
+    println!(
+        "os+g, b=1, AC none, §6 overheads → {:.1} GiB on an 80 GiB device: {}",
+        gib(report.total_bytes()),
+        if report.fits(80 * dsmem::GIB as u64) { "FITS" } else { "DOES NOT FIT" }
+    );
+
+    // And print the full Table 8 in the paper's format.
+    println!("\n{}", paper_table(&cs, 8)?.render());
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Parallelism sweep (experiment E4): which (TP, EP, ZeRO, micro-batch,
+//! recompute) combinations fit DeepSeek-v3 training on an 80 GiB device —
+//! the decision the paper's analysis exists to inform.
+//!
+//! ```bash
+//! cargo run --release --example sweep_parallelism
+//! ```
+
+use dsmem::analysis::{total::sweep, MemoryModel, Overheads};
+use dsmem::config::{ActivationConfig, CaseStudy, ParallelConfig};
+use dsmem::report::{gib, Table};
+
+fn main() -> anyhow::Result<()> {
+    let cs = CaseStudy::paper();
+    let hbm = 80 * dsmem::GIB as u64;
+
+    // Part 1: the paper's fixed parallel config, swept over (b, AC, ZeRO).
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+    let mut t = Table::new(
+        "DeepSeek-v3 @ DP32 TP2 PP16 EP8 — (b × AC × ZeRO) vs 80 GiB",
+        &["b", "recompute", "ZeRO", "total GiB", "fits"],
+    );
+    let mut fitting = 0;
+    let pts = sweep(&mm, &cs.activation, Overheads::paper_midpoint());
+    for p in &pts {
+        fitting += u32::from(p.fits_80g);
+        t.row(vec![
+            p.micro_batch.to_string(),
+            p.recompute.name().into(),
+            p.zero.name().into(),
+            format!("{:.1}", gib(p.total_bytes)),
+            if p.fits_80g { "yes".into() } else { "-".into() },
+        ]);
+    }
+    print!("{}", t.render());
+    println!("{fitting}/{} combinations fit\n", pts.len());
+
+    // Part 2: vary TP and EP at fixed world size (DP adjusts), b=1, os+g.
+    let mut t2 = Table::new(
+        "Layout sweep (world = 1024, PP16, b=1, os+g, AC none)",
+        &["TP", "EP", "DP", "EDP", "static GiB", "P+G+O GiB", "act GiB", "total GiB", "fits"],
+    );
+    for tp in [1u64, 2, 4, 8] {
+        for ep in [4u64, 8, 16, 32, 64] {
+            let dp = 1024 / (16 * tp);
+            let p = ParallelConfig { dp, tp, pp: 16, ep, etp: 1 };
+            if p.validate().is_err() || cs.model.n_routed_experts % ep != 0 {
+                continue;
+            }
+            let mut act = ActivationConfig::paper(1);
+            act.sp = tp; // SP tied to TP as in Megatron
+            if act.validate().is_err() {
+                continue;
+            }
+            let mm = MemoryModel::new(&cs.model, &p, cs.dtypes);
+            let rep = mm.device_memory(
+                &act,
+                dsmem::analysis::ZeroStrategy::OsG,
+                Overheads::paper_midpoint(),
+            );
+            t2.row(vec![
+                tp.to_string(),
+                ep.to_string(),
+                dp.to_string(),
+                p.edp().to_string(),
+                format!("{:.1}", gib(rep.params_bytes)),
+                format!(
+                    "{:.1}",
+                    gib(rep.params_bytes + rep.gradient_bytes + rep.optimizer_bytes)
+                ),
+                format!("{:.1}", gib(rep.activation_bytes)),
+                format!("{:.1}", gib(rep.total_bytes())),
+                if rep.total_bytes() <= hbm { "yes".into() } else { "-".into() },
+            ]);
+        }
+    }
+    print!("{}", t2.render());
+    Ok(())
+}

@@ -1,0 +1,219 @@
+"""AOT pipeline: lower every stage executable to HLO *text* and write the
+artifact bundle consumed by the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Outputs in ``--out`` (default ``../artifacts``):
+  * ``stage{i}_{fwd,fwd_verbose,bwd,opt}.hlo.txt``
+  * ``stage{i}_param{j}.bin``   — initial parameters (raw little-endian f32)
+  * ``manifest.json``           — shapes/dtypes/roles (rust/src/runtime/manifest.rs)
+
+Usage: ``python -m compile.aot [--out DIR] [--no-verbose]``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import MINI, MiniConfig
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(np.shape(x), x.dtype)
+
+
+def buf_json(name: str, aval, role: str) -> dict:
+    dt = {"float32": "f32", "int32": "i32"}[str(aval.dtype)]
+    return {"name": name, "shape": [int(d) for d in aval.shape], "dtype": dt, "role": role}
+
+
+def lower_and_save(fn, specs, path: str) -> None:
+    # keep_unused: the HLO entry signature must match the manifest exactly
+    # even if XLA could prune an argument (e.g. a layernorm weight that only
+    # affects a pruned branch of a vjp).
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def build(cfg: MiniConfig, out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    b, s = cfg.micro_batch, cfg.seq_len
+    tok_spec = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+    executables = []
+    stages = []
+    total_params = 0
+
+    for stage in range(cfg.pp):
+        last = stage == cfg.pp - 1
+        first = stage == 0
+        specs = M.stage_param_specs(cfg, stage)
+        params = M.init_stage_params(cfg, stage)
+        total_params += sum(int(np.prod(sh)) for _, sh in specs)
+        param_specs = [spec_of(p) for p in params]
+        names = [n for n, _ in specs]
+
+        # Save initial parameters.
+        init_files = []
+        for j, arr in enumerate(params):
+            fname = f"stage{stage}_param{j}.bin"
+            arr.astype("<f4").tofile(os.path.join(out_dir, fname))
+            init_files.append(fname)
+
+        x_spec = tok_spec if first else jax.ShapeDtypeStruct((b, s, cfg.hidden_size), jnp.float32)
+        fwd_extra = [x_spec] + ([tok_spec] if last else [])
+
+        # ---- forward -------------------------------------------------------
+        fwd = M.make_stage_fwd(cfg, stage)
+        fwd_out_avals = jax.eval_shape(fwd, *param_specs, *fwd_extra)
+        n_res = len(fwd_out_avals) - 1
+        lower_and_save(fwd, param_specs + fwd_extra, os.path.join(out_dir, f"stage{stage}_fwd.hlo.txt"))
+        fwd_inputs = (
+            [buf_json(n, a, "param") for n, a in zip(names, param_specs)]
+            + [buf_json("x", x_spec, "input")]
+            + ([buf_json("labels", tok_spec, "labels")] if last else [])
+        )
+        fwd_outputs = [buf_json("loss" if last else "y", fwd_out_avals[0], "loss" if last else "output")]
+        fwd_outputs += [
+            buf_json(f"res{i}", a, "residual") for i, a in enumerate(fwd_out_avals[1:])
+        ]
+        executables.append(
+            {"name": f"stage{stage}_fwd", "hlo": f"stage{stage}_fwd.hlo.txt",
+             "inputs": fwd_inputs, "outputs": fwd_outputs}
+        )
+
+        # ---- verbose forward (AC-None tape) ---------------------------------
+        n_inter = 0
+        if verbose:
+            fwd_v = M.make_stage_fwd(cfg, stage, verbose=True)
+            v_avals = jax.eval_shape(fwd_v, *param_specs, *fwd_extra)
+            n_inter = len(v_avals) - 1 - n_res
+            lower_and_save(
+                fwd_v, param_specs + fwd_extra,
+                os.path.join(out_dir, f"stage{stage}_fwd_verbose.hlo.txt"),
+            )
+            v_outputs = list(fwd_outputs) + [
+                buf_json(f"int{i}", a, "intermediate")
+                for i, a in enumerate(v_avals[1 + n_res:])
+            ]
+            executables.append(
+                {"name": f"stage{stage}_fwd_verbose", "hlo": f"stage{stage}_fwd_verbose.hlo.txt",
+                 "inputs": fwd_inputs, "outputs": v_outputs}
+            )
+
+        # ---- backward --------------------------------------------------------
+        bwd = M.make_stage_bwd(cfg, stage)
+        res_specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in fwd_out_avals[1:]]
+        dy_spec = (
+            [tok_spec] if last
+            else [jax.ShapeDtypeStruct((b, s, cfg.hidden_size), jnp.float32)]
+        )
+        bwd_specs = param_specs + res_specs + dy_spec
+        lower_and_save(bwd, bwd_specs, os.path.join(out_dir, f"stage{stage}_bwd.hlo.txt"))
+        bwd_inputs = (
+            [buf_json(n, a, "param") for n, a in zip(names, param_specs)]
+            + [buf_json(f"res{i}", a, "residual") for i, a in enumerate(res_specs)]
+            + [buf_json("labels" if last else "dy", dy_spec[0], "labels" if last else "dy")]
+        )
+        bwd_outputs = (
+            [] if first
+            else [buf_json("dx", jax.ShapeDtypeStruct((b, s, cfg.hidden_size), jnp.float32), "dx")]
+        )
+        bwd_outputs += [buf_json(f"d_{n}", a, "grad") for n, a in zip(names, param_specs)]
+        executables.append(
+            {"name": f"stage{stage}_bwd", "hlo": f"stage{stage}_bwd.hlo.txt",
+             "inputs": bwd_inputs, "outputs": bwd_outputs}
+        )
+
+        # ---- optimizer -------------------------------------------------------
+        opt = M.make_stage_opt(cfg, stage)
+        step_spec = jax.ShapeDtypeStruct((), jnp.float32)
+        opt_specs = param_specs * 4 + [step_spec]
+        lower_and_save(opt, opt_specs, os.path.join(out_dir, f"stage{stage}_opt.hlo.txt"))
+        opt_inputs = (
+            [buf_json(n, a, "param") for n, a in zip(names, param_specs)]
+            + [buf_json(f"d_{n}", a, "grad") for n, a in zip(names, param_specs)]
+            + [buf_json(f"m_{n}", a, "opt_m") for n, a in zip(names, param_specs)]
+            + [buf_json(f"v_{n}", a, "opt_v") for n, a in zip(names, param_specs)]
+            + [buf_json("step", step_spec, "step")]
+        )
+        opt_outputs = (
+            [buf_json(n, a, "param") for n, a in zip(names, param_specs)]
+            + [buf_json(f"m_{n}", a, "opt_m") for n, a in zip(names, param_specs)]
+            + [buf_json(f"v_{n}", a, "opt_v") for n, a in zip(names, param_specs)]
+        )
+        executables.append(
+            {"name": f"stage{stage}_opt", "hlo": f"stage{stage}_opt.hlo.txt",
+             "inputs": opt_inputs, "outputs": opt_outputs}
+        )
+
+        layers = list(cfg.layers_of_stage(stage))
+        stages.append(
+            {
+                "stage": stage,
+                "first_layer": layers[0],
+                "num_layers": len(layers),
+                "num_params": len(specs),
+                "num_residuals": n_res,
+                "num_intermediates": n_inter,
+                "fwd": f"stage{stage}_fwd",
+                "fwd_verbose": f"stage{stage}_fwd_verbose" if verbose else None,
+                "bwd": f"stage{stage}_bwd",
+                "opt": f"stage{stage}_opt",
+                "init_params": init_files,
+                "takes_tokens": first,
+                "computes_loss": last,
+            }
+        )
+        print(f"stage {stage}: {len(specs)} param tensors, {n_res} residuals, "
+              f"{n_inter} intermediates")
+
+    manifest = {
+        "model_name": "deepseek-mini",
+        "pp": cfg.pp,
+        "micro_batch": cfg.micro_batch,
+        "seq_len": cfg.seq_len,
+        "vocab_size": cfg.vocab_size,
+        "hidden_size": cfg.hidden_size,
+        "total_params": total_params,
+        "executables": executables,
+        "stages": stages,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(executables)} executables + manifest to {out_dir} "
+          f"({total_params:,} params)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--no-verbose", action="store_true",
+                    help="skip the AC-None verbose forwards (faster build)")
+    args = ap.parse_args()
+    build(MINI, os.path.abspath(args.out), verbose=not args.no_verbose)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Mini-DeepSeek configuration — MUST stay in sync with
+``rust/src/config/model.rs::ModelConfig::mini()`` (asserted by
+``python/tests/test_model.py`` against the values below and by the Rust
+integration test against the manifest).
+
+The topology mirrors DeepSeek-v3 (paper Table 1): MLA attention with q/kv
+LoRA compression and decoupled RoPE dims, hybrid dense-first layers, and a
+shared+routed SwiGLU MoE with top-k routing — scaled so a CPU-PJRT pipeline
+trains in minutes.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MiniConfig:
+    # Architecture (paper notation in comments).
+    hidden_size: int = 256            # h
+    moe_intermediate_size: int = 352  # h_E
+    intermediate_size: int = 1024     # h_F
+    qk_nope_head_dim: int = 32        # d_h
+    num_attention_heads: int = 4      # n_h
+    q_lora_rank: int = 96             # d_cq
+    qk_rope_head_dim: int = 16        # d_hr
+    kv_lora_rank: int = 64            # d_c
+    n_routed_experts: int = 8         # N
+    n_shared_experts: int = 1         # N_s
+    num_experts_per_tok: int = 2      # N_r
+    num_hidden_layers: int = 6        # l
+    first_k_dense: int = 1            # dense-FFN layers before MoE starts
+    vocab_size: int = 2048            # v
+
+    # Training shapes (baked into the AOT artifacts).
+    micro_batch: int = 4              # b
+    seq_len: int = 128                # s
+    pp: int = 2                       # pipeline stages
+
+    # Optimizer (baked into stage*_opt).
+    lr: float = 3e-3
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+
+    # RNG seed for parameter init.
+    seed: int = 20250710
+
+    @property
+    def attn_inner_dim(self) -> int:
+        return self.qk_nope_head_dim * self.num_attention_heads
+
+    def layers_of_stage(self, stage: int) -> range:
+        """Front-loaded split of ``num_hidden_layers`` over ``pp`` stages
+        (same rule as ``analysis::stages::StageSplit::FrontLoaded``)."""
+        per = -(-self.num_hidden_layers // self.pp)  # ceil
+        first = min(stage * per, self.num_hidden_layers)
+        last = min(first + per, self.num_hidden_layers)
+        return range(first, last)
+
+
+MINI = MiniConfig()

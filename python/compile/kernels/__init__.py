@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels (interpret=True — lowered to plain HLO so the
+CPU PJRT client can run them; see DESIGN.md §Hardware-Adaptation for the
+TPU tiling story)."""
+
+from .mla_attention import mla_attention
+from .moe import moe_expert_mlp
+from .rmsnorm import rmsnorm
+
+__all__ = ["mla_attention", "moe_expert_mlp", "rmsnorm"]

@@ -1,0 +1,82 @@
+"""Causal multi-head attention core as a Pallas kernel — the MLA hot spot.
+
+The kernel computes, for one (batch, head) grid cell held in VMEM:
+
+    scores = (q @ k^T) * scale + causal_mask
+    probs  = softmax(scores)
+    out    = probs @ v
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's GPU framing
+(warp-level softmax over shared-memory tiles) becomes a grid over
+(batch, head) with the whole (s, d) q/k/v blocks staged into VMEM via
+BlockSpec and the s×s score tile consumed by the MXU; for the mini shapes
+(s=128, d=48) the per-cell footprint is s·d·3·4B + s²·4B ≈ 138 KiB — far
+under VMEM, so no inner flash-style tiling is needed. At DeepSeek scale
+(s=4096) the same kernel would tile the key dimension with an online
+softmax; the paper's 5·b·n_h·s² activation term is exactly the untiled
+variant's residency, which is what we reproduce.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    # Blocks arrive as (1, 1, s, d) — peel the unit dims.
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.dot(q, k.T) * scale
+    # Causal mask: position i attends to j <= i.
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    scores = jnp.where(cols <= rows, scores, NEG_INF)
+    # Row-stable softmax.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(probs, v)
+
+
+@jax.custom_vjp
+def mla_attention(q, k, v):
+    """Causal attention. ``q``/``k``: [b, n_h, s, d_qk]; ``v``: [b, n_h, s, d_v].
+
+    Returns [b, n_h, s, d_v]. ``d_qk`` may differ from ``d_v`` (MLA's
+    nope+rope query/key width vs value width). Forward = Pallas kernel;
+    backward = VJP of the jnp reference (exact same math).
+    """
+    b, nh, s, dqk = q.shape
+    dv = v.shape[-1]
+    return pl.pallas_call(
+        _attn_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, nh, s, dv), q.dtype),
+        grid=(b, nh),
+        in_specs=[
+            pl.BlockSpec((1, 1, s, dqk), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, dqk), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, dv), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, s, dv), lambda i, j: (i, j, 0, 0)),
+        interpret=True,
+    )(q, k, v)
+
+
+def _attn_fwd(q, k, v):
+    return mla_attention(q, k, v), (q, k, v)
+
+
+def _attn_bwd(saved, g):
+    q, k, v = saved
+    _, vjp = jax.vjp(ref.mla_attention_ref, q, k, v)
+    return vjp(g)
+
+
+mla_attention.defvjp(_attn_fwd, _attn_bwd)

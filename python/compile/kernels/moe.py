@@ -1,0 +1,71 @@
+"""MoE expert SwiGLU MLPs as a Pallas kernel — the paper's FFN-MoE hot spot.
+
+Computes every expert's MLP over the full token set in one grid sweep:
+
+    y[e] = (silu(x @ Wg[e]) * (x @ Wu[e])) @ Wd[e]      for e in 0..N
+
+The caller weights ``y`` by the (top-k, renormalized) router probabilities
+and sums — the dense "einsum dispatch" formulation of MoE, which is exactly
+differentiable and EP-shardable.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the CUDA formulation is a
+grouped GEMM with warp-level gather/scatter of each expert's token subset;
+on TPU we instead grid over experts and let BlockSpec stage the expert's
+weight triple into VMEM while the MXU consumes (tokens × h) @ (h × h_E)
+tiles. Weights per expert are h·h_E·3·4B ≈ 1.0 MiB (mini), so an expert's
+whole working set (weights + a 512-token activation tile ≈ 1.9 MiB) double-
+buffers comfortably in ~16 MiB VMEM. At DeepSeek scale the tokens dimension
+tiles as well (E_token = b·s·N_r/N per the paper's §5.2).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _moe_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    x = x_ref[...]          # (t, h) — all tokens
+    wg = wg_ref[0]          # (h, h_E) — this expert's gate
+    wu = wu_ref[0]
+    wd = wd_ref[0]          # (h_E, h)
+    g = jnp.dot(x, wg)
+    u = jnp.dot(x, wu)
+    act = g * jax.lax.logistic(g) * u  # SwiGLU: silu(g) ⊙ u
+    o_ref[0] = jnp.dot(act, wd)
+
+
+@jax.custom_vjp
+def moe_expert_mlp(x, wg, wu, wd):
+    """All-expert SwiGLU. ``x``: [t, h]; ``wg``/``wu``: [N, h, h_E];
+    ``wd``: [N, h_E, h]. Returns [N, t, h]. Forward = Pallas kernel;
+    backward = VJP of the jnp reference."""
+    n, h, he = wg.shape
+    t = x.shape[0]
+    return pl.pallas_call(
+        _moe_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, t, h), x.dtype),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((t, h), lambda e: (0, 0)),
+            pl.BlockSpec((1, h, he), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, h, he), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, he, h), lambda e: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, h), lambda e: (e, 0, 0)),
+        interpret=True,
+    )(x, wg, wu, wd)
+
+
+def _moe_fwd(x, wg, wu, wd):
+    return moe_expert_mlp(x, wg, wu, wd), (x, wg, wu, wd)
+
+
+def _moe_bwd(saved, g):
+    x, wg, wu, wd = saved
+    _, vjp = jax.vjp(ref.moe_expert_mlp_ref, x, wg, wu, wd)
+    return vjp(g)
+
+
+moe_expert_mlp.defvjp(_moe_fwd, _moe_bwd)

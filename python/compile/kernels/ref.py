@@ -1,0 +1,33 @@
+"""Pure-jnp reference oracles for the Pallas kernels — the build-time
+correctness signal (pytest asserts allclose against these; hypothesis-style
+shape sweeps live in python/tests/test_kernels.py)."""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def rmsnorm_ref(x, w):
+    """RMSNorm over the last axis."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + EPS) * w
+
+
+def mla_attention_ref(q, k, v):
+    """Causal softmax(QK^T)V. q/k: [b, nh, s, dqk]; v: [b, nh, s, dv]."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (d ** 0.5)
+    s = q.shape[2]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def moe_expert_mlp_ref(x, wg, wu, wd):
+    """All-expert SwiGLU. x: [t, h]; wg/wu: [N, h, hE]; wd: [N, hE, h]."""
+    g = jnp.einsum("th,nhe->nte", x, wg)
+    u = jnp.einsum("th,nhe->nte", x, wu)
+    act = jax.nn.silu(g) * u
+    return jnp.einsum("nte,neh->nth", act, wd)

@@ -1,0 +1,409 @@
+"""Layer-2: the mini-DeepSeek model (MLA + shared/routed MoE) in JAX,
+calling the Layer-1 Pallas kernels, split into pipeline stages with
+explicit flat-tensor calling conventions for AOT export.
+
+Conventions (mirrored in ``rust/src/runtime/manifest.rs``):
+
+* ``stage_fwd(params…, x[, labels])   -> (y|loss, res…)`` where ``res`` is
+  the per-layer block-input list — the live analogue of the paper's
+  "AC Full" policy (store only RMSNorm-1 inputs, recompute the rest);
+* ``stage_fwd_verbose``: additionally returns the intermediate tape
+  (latents, q/k/v, attention probs, router probs, expert hiddens) so the
+  coordinator can *hold* the paper's "AC None" residency;
+* ``stage_bwd(params…, res…, dy|labels) -> (dx?, dparams…)`` recomputes each
+  layer from its saved input via ``jax.vjp`` (layer-granular recompute);
+* ``stage_opt(params…, grads…, m…, v…, step) -> (params'…, m'…, v'…)``
+  is Adam with bias correction, hyper-parameters baked from MiniConfig.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MINI, MiniConfig
+from .kernels import mla_attention, moe_expert_mlp, rmsnorm
+
+# ---------------------------------------------------------------------------
+# Parameter schema
+# ---------------------------------------------------------------------------
+
+
+def layer_param_specs(cfg: MiniConfig, layer: int):
+    """Ordered (name, shape) list for one transformer layer."""
+    h = cfg.hidden_size
+    dcq, dc = cfg.q_lora_rank, cfg.kv_lora_rank
+    dh, dhr, nh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.num_attention_heads
+    specs = [
+        (f"l{layer}.norm1", (h,)),
+        (f"l{layer}.wdq", (dcq, h)),
+        (f"l{layer}.q_ln", (dcq,)),
+        (f"l{layer}.wuq", (dh * nh, dcq)),
+        (f"l{layer}.wqr", (dhr * nh, dcq)),
+        (f"l{layer}.wdkv", (dc, h)),
+        (f"l{layer}.kv_ln", (dc,)),
+        (f"l{layer}.wuk", (dh * nh, dc)),
+        (f"l{layer}.wkr", (dhr, h)),
+        (f"l{layer}.wuv", (dh * nh, dc)),
+        (f"l{layer}.wo", (h, dh * nh)),
+        (f"l{layer}.norm2", (h,)),
+    ]
+    if layer < cfg.first_k_dense:
+        hf = cfg.intermediate_size
+        specs += [
+            (f"l{layer}.ffn.gate", (h, hf)),
+            (f"l{layer}.ffn.up", (h, hf)),
+            (f"l{layer}.ffn.down", (hf, h)),
+        ]
+    else:
+        he = cfg.moe_intermediate_size
+        n = cfg.n_routed_experts
+        specs += [
+            (f"l{layer}.router", (n, h)),
+            (f"l{layer}.moe.gate", (n, h, he)),   # routed experts, stacked
+            (f"l{layer}.moe.up", (n, h, he)),
+            (f"l{layer}.moe.down", (n, he, h)),
+            (f"l{layer}.shared.gate", (h, he)),   # shared expert (N_s = 1)
+            (f"l{layer}.shared.up", (h, he)),
+            (f"l{layer}.shared.down", (he, h)),
+        ]
+    return specs
+
+
+def stage_param_specs(cfg: MiniConfig, stage: int):
+    """Ordered (name, shape) list for one pipeline stage."""
+    specs = []
+    if stage == 0:
+        specs.append(("embed", (cfg.vocab_size, cfg.hidden_size)))
+    for layer in cfg.layers_of_stage(stage):
+        specs += layer_param_specs(cfg, layer)
+    if stage == cfg.pp - 1:
+        specs.append(("final_norm", (cfg.hidden_size,)))
+        specs.append(("head", (cfg.hidden_size, cfg.vocab_size)))
+    return specs
+
+
+def init_stage_params(cfg: MiniConfig, stage: int):
+    """Deterministic scaled-normal init (numpy; written to .bin by aot.py)."""
+    rng = np.random.default_rng(cfg.seed + stage)
+    out = []
+    for name, shape in stage_param_specs(cfg, stage):
+        if name.endswith(("norm1", "norm2", "q_ln", "kv_ln", "final_norm")):
+            arr = np.ones(shape, np.float32)
+        else:
+            # Glorot-style scale keeps activations O(1) for both x@W and x@W.T.
+            scale = math.sqrt(2.0 / (shape[0] + shape[-1])) if len(shape) >= 2 else 0.02
+            arr = rng.normal(0.0, scale, shape).astype(np.float32)
+        out.append(arr)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward blocks
+# ---------------------------------------------------------------------------
+
+
+def _rope(x, base: float = 10000.0):
+    """Rotary embedding over the last axis. x: [b, s, n, d] (d even)."""
+    b, s, n, d = x.shape
+    half = d // 2
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    inv = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * inv  # [s, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def mla_block(cfg: MiniConfig, p: dict, x, collect=None):
+    """Multi-head latent attention. x: [b, s, h] → [b, s, h]."""
+    b, s, h = x.shape
+    nh, dh, dhr = cfg.num_attention_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+
+    cq = rmsnorm(x @ p["wdq"].T, p["q_ln"])            # [b, s, d_cq]
+    ckv = rmsnorm(x @ p["wdkv"].T, p["kv_ln"])         # [b, s, d_c]
+
+    q = (cq @ p["wuq"].T).reshape(b, s, nh, dh)
+    qr = _rope((cq @ p["wqr"].T).reshape(b, s, nh, dhr))
+    k = (ckv @ p["wuk"].T).reshape(b, s, nh, dh)
+    kr = _rope((x @ p["wkr"].T).reshape(b, s, 1, dhr))  # shared rope-k
+    kr = jnp.broadcast_to(kr, (b, s, nh, dhr))
+    v = (ckv @ p["wuv"].T).reshape(b, s, nh, dh)
+
+    qf = jnp.concatenate([q, qr], axis=-1).transpose(0, 2, 1, 3)  # [b, nh, s, dh+dhr]
+    kf = jnp.concatenate([k, kr], axis=-1).transpose(0, 2, 1, 3)
+    vf = v.transpose(0, 2, 1, 3)
+
+    ctx = mla_attention(qf, kf, vf)                    # [b, nh, s, dh]
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * dh)
+    out = ctx @ p["wo"].T
+
+    if collect is not None:
+        collect += [cq, ckv, qf, kf, vf, ctx]
+    return out
+
+
+def dense_ffn(p: dict, x):
+    """SwiGLU dense FFN."""
+    g = x @ p["ffn.gate"]
+    u = x @ p["ffn.up"]
+    return (jax.nn.silu(g) * u) @ p["ffn.down"]
+
+
+def moe_block(cfg: MiniConfig, p: dict, x, collect=None):
+    """Shared + routed MoE with top-k softmax routing. x: [b, s, h]."""
+    b, s, h = x.shape
+    t = b * s
+    xt = x.reshape(t, h)
+
+    logits = xt @ p["router"].T                         # [t, N]
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Top-k by iterative argmax: k passes of (argmax, mask) lower to plain
+    # reduce/select HLO — the modern `topk` custom op is rejected by the
+    # xla_extension 0.5.1 text parser the Rust runtime embeds.
+    w = jnp.zeros_like(probs)
+    masked = probs
+    rows = jnp.arange(t)
+    for _ in range(cfg.num_experts_per_tok):
+        i = jnp.argmax(masked, axis=-1)                 # [t]
+        v = jnp.take_along_axis(probs, i[:, None], axis=-1)[:, 0]
+        w = w.at[rows, i].set(v)
+        masked = masked.at[rows, i].set(-jnp.inf)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)          # renormalize (v3-style)
+
+    expert_out = moe_expert_mlp(xt, p["moe.gate"], p["moe.up"], p["moe.down"])  # [N, t, h]
+    routed = jnp.einsum("tn,nth->th", w, expert_out)
+
+    sg = xt @ p["shared.gate"]
+    su = xt @ p["shared.up"]
+    shared = (jax.nn.silu(sg) * su) @ p["shared.down"]
+
+    if collect is not None:
+        collect += [logits, probs, expert_out, sg, su]
+    return (routed + shared).reshape(b, s, h)
+
+
+def transformer_layer(cfg: MiniConfig, layer: int, p: dict, x, collect=None):
+    """Pre-norm residual layer: x + MLA(norm1(x)); x + MLP(norm2(x))."""
+    a = rmsnorm(x, p["norm1"])
+    x = x + mla_block(cfg, p, a, collect)
+    m = rmsnorm(x, p["norm2"])
+    if layer < cfg.first_k_dense:
+        x = x + dense_ffn(p, m)
+    else:
+        x = x + moe_block(cfg, p, m, collect)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Stage functions (flat-arg calling conventions)
+# ---------------------------------------------------------------------------
+
+
+def _group_params(cfg: MiniConfig, stage: int, flat):
+    """Flat tensor list → (embed?, [per-layer dict], final_norm?, head?)."""
+    specs = stage_param_specs(cfg, stage)
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    by_name = dict(zip((n for n, _ in specs), flat))
+    layers = []
+    for layer in cfg.layers_of_stage(stage):
+        prefix = f"l{layer}."
+        layers.append(
+            {k[len(prefix):]: v for k, v in by_name.items() if k.startswith(prefix)}
+        )
+    return by_name, layers
+
+
+def _layer_fn(cfg: MiniConfig, stage: int, idx: int):
+    """The per-layer function used for fwd and (recomputing) bwd: maps
+    (layer-param dict, x) → y. ``idx`` is the position within the stage."""
+    layer = list(cfg.layers_of_stage(stage))[idx]
+
+    def fn(lp, x):
+        return transformer_layer(cfg, layer, lp, x)
+
+    return fn
+
+
+def make_stage_fwd(cfg: MiniConfig, stage: int, verbose: bool = False):
+    """Build the stage forward with flat args.
+
+    Returns ``fwd(*flat_params, x[, labels]) -> (y|loss, *res[, *intermediates])``.
+    ``res`` = the input of each layer (+ nothing else): AC-Full residency.
+    """
+    last = stage == cfg.pp - 1
+
+    def fwd(*args):
+        nspec = len(stage_param_specs(cfg, stage))
+        flat = list(args[:nspec])
+        rest = args[nspec:]
+        x = rest[0]
+        labels = rest[1] if last else None
+        by_name, layers = _group_params(cfg, stage, flat)
+
+        collect = [] if verbose else None
+        res = []
+        if stage == 0:
+            res.append(x)  # token ids (i32) — residual for embed bwd
+            hdn = by_name["embed"][x]
+        else:
+            hdn = x
+        for i, lp in enumerate(layers):
+            res.append(hdn)
+            if verbose:
+                hdn = transformer_layer(cfg, list(cfg.layers_of_stage(stage))[i], lp, hdn, collect)
+            else:
+                hdn = _layer_fn(cfg, stage, i)(lp, hdn)
+        if last:
+            res.append(hdn)  # input of the head block
+            hn = rmsnorm(hdn, by_name["final_norm"])
+            logits = hn @ by_name["head"]
+            y = softmax_xent(logits, labels)
+        else:
+            y = hdn
+        outs = [y] + res
+        if verbose:
+            outs += collect
+        return tuple(outs)
+
+    return fwd
+
+
+def softmax_xent(logits, labels):
+    """Mean cross-entropy. logits: [b, s, v]; labels: [b, s] int32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - picked)
+
+
+def make_stage_bwd(cfg: MiniConfig, stage: int):
+    """Build the stage backward with flat args.
+
+    ``bwd(*flat_params, *res, dy|labels) -> (dx?, *dparams)`` — walks the
+    layers in reverse, recomputing each from its saved input via jax.vjp
+    (layer-granular recomputation = the paper's AC-Full compute/memory
+    trade).
+    """
+    last = stage == cfg.pp - 1
+    first = stage == 0
+
+    def bwd(*args):
+        nspec = len(stage_param_specs(cfg, stage))
+        specs = stage_param_specs(cfg, stage)
+        flat = list(args[:nspec])
+        by_name = dict(zip((n for n, _ in specs), flat))
+        n_layers = len(list(cfg.layers_of_stage(stage)))
+        n_res = n_layers + (1 if first else 0) + (1 if last else 0)
+        res = list(args[nspec:nspec + n_res])
+
+        grads = {name: jnp.zeros_like(t) for name, t in by_name.items()}
+        _, layers = _group_params(cfg, stage, flat)
+
+        if last:
+            labels = args[-1]
+            head_in = res[-1]
+
+            def head_fn(fn_w, hd_w, hx):
+                hn = rmsnorm(hx, fn_w)
+                return softmax_xent(hn @ hd_w, labels)
+
+            _, vjp = jax.vjp(head_fn, by_name["final_norm"], by_name["head"], head_in)
+            dfn, dhd, dy = vjp(jnp.float32(1.0))
+            grads["final_norm"] += dfn
+            grads["head"] += dhd
+        else:
+            dy = args[-1]
+
+        # Layers in reverse, recomputed from their saved inputs.
+        layer_ids = list(cfg.layers_of_stage(stage))
+        res_offset = 1 if first else 0
+        for i in reversed(range(n_layers)):
+            lp = layers[i]
+            x_in = res[res_offset + i]
+            _, vjp = jax.vjp(_layer_fn(cfg, stage, i), lp, x_in)
+            dlp, dx = vjp(dy)
+            for k, v in dlp.items():
+                grads[f"l{layer_ids[i]}.{k}"] += v
+            dy = dx
+
+        if first:
+            tokens = res[0]
+
+            def embed_fn(w):
+                return w[tokens]
+
+            _, vjp = jax.vjp(embed_fn, by_name["embed"])
+            (demb,) = vjp(dy)
+            grads["embed"] += demb
+            outs = []
+        else:
+            outs = [dy]
+
+        outs += [grads[name] for name, _ in specs]
+        return tuple(outs)
+
+    return bwd
+
+
+def make_stage_opt(cfg: MiniConfig, stage: int):
+    """Adam with bias correction; hyper-params baked from ``cfg``.
+
+    ``opt(*params, *grads, *m, *v, step) -> (*params', *m', *v')``.
+    """
+    n = len(stage_param_specs(cfg, stage))
+    b1, b2, lr, eps = cfg.beta1, cfg.beta2, cfg.lr, cfg.eps
+
+    def opt(*args):
+        params = args[:n]
+        grads = args[n:2 * n]
+        m = args[2 * n:3 * n]
+        v = args[3 * n:4 * n]
+        step = args[4 * n]
+        bc1 = 1.0 - b1 ** step
+        bc2 = 1.0 - b2 ** step
+        new_p, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(params, grads, m, v):
+            mi = b1 * mi + (1.0 - b1) * g
+            vi = b2 * vi + (1.0 - b2) * (g * g)
+            update = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            new_p.append(p - lr * update)
+            new_m.append(mi)
+            new_v.append(vi)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v)
+
+    return opt
+
+
+# ---------------------------------------------------------------------------
+# Reference whole-model forward (for tests: stages must compose to this)
+# ---------------------------------------------------------------------------
+
+
+def full_forward_loss(cfg: MiniConfig, stage_params: list, tokens, labels):
+    """Run all stages in sequence; returns the scalar loss."""
+    x = tokens
+    for stage in range(cfg.pp):
+        fwd = make_stage_fwd(cfg, stage)
+        outs = fwd(*stage_params[stage], x, *( [labels] if stage == cfg.pp - 1 else [] ))
+        x = outs[0]
+    return x
+
+
+def count_params(cfg: MiniConfig) -> int:
+    total = 0
+    for stage in range(cfg.pp):
+        for _, shape in stage_param_specs(cfg, stage):
+            sz = 1
+            for d in shape:
+                sz *= d
+            total += sz
+    return total
+
+
+if __name__ == "__main__":
+    print(f"mini-DeepSeek: {count_params(MINI):,} parameters")
+    for st in range(MINI.pp):
+        print(f"  stage {st}: layers {list(MINI.layers_of_stage(st))}, "
+              f"{len(stage_param_specs(MINI, st))} tensors")

@@ -1,0 +1,104 @@
+"""AOT pipeline: manifest schema integrity, HLO-text compatibility with the
+xla_extension 0.5.1 parser (no modern custom ops), and init-param files."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_top_level(manifest):
+    from compile.config import MINI
+    from compile.model import count_params
+
+    assert manifest["model_name"] == "deepseek-mini"
+    assert manifest["pp"] == MINI.pp
+    assert manifest["micro_batch"] == MINI.micro_batch
+    assert manifest["seq_len"] == MINI.seq_len
+    assert manifest["vocab_size"] == MINI.vocab_size
+    assert manifest["total_params"] == count_params(MINI)
+
+
+def test_every_hlo_file_exists_and_is_legacy_parseable(manifest):
+    # The embedded XLA 0.5.1 text parser rejects several modern ops; make
+    # sure none of them appear (the `topk` regression bit us once).
+    banned = [" topk(", " ragged-dot(", " composite("]
+    for exe in manifest["executables"]:
+        path = os.path.join(ART, exe["hlo"])
+        assert os.path.exists(path), exe["hlo"]
+        text = open(path).read()
+        assert text.startswith("HloModule"), exe["hlo"]
+        for op in banned:
+            assert op not in text, f"{exe['hlo']} contains banned op {op}"
+
+
+def test_calling_conventions(manifest):
+    for st in manifest["stages"]:
+        p, r = st["num_params"], st["num_residuals"]
+        by_name = {e["name"]: e for e in manifest["executables"]}
+        fwd, bwd, opt = by_name[st["fwd"]], by_name[st["bwd"]], by_name[st["opt"]]
+        assert len(fwd["inputs"]) == p + 1 + (1 if st["computes_loss"] else 0)
+        assert len(fwd["outputs"]) == 1 + r
+        assert len(bwd["inputs"]) == p + r + 1
+        assert len(bwd["outputs"]) == p + (0 if st["stage"] == 0 else 1)
+        assert len(opt["inputs"]) == 4 * p + 1
+        assert len(opt["outputs"]) == 3 * p
+        if st["fwd_verbose"]:
+            fv = by_name[st["fwd_verbose"]]
+            assert len(fv["outputs"]) == 1 + r + st["num_intermediates"]
+
+
+def test_roles_are_consistent(manifest):
+    for st in manifest["stages"]:
+        by_name = {e["name"]: e for e in manifest["executables"]}
+        fwd = by_name[st["fwd"]]
+        roles = [b["role"] for b in fwd["inputs"]]
+        assert roles[: st["num_params"]] == ["param"] * st["num_params"]
+        assert roles[st["num_params"]] == "input"
+        out_roles = [b["role"] for b in fwd["outputs"]]
+        assert out_roles[0] in ("loss", "output")
+        assert all(r == "residual" for r in out_roles[1:])
+
+
+def test_init_param_files_match_specs(manifest):
+    from compile.config import MINI
+    from compile.model import stage_param_specs
+
+    for st in manifest["stages"]:
+        specs = stage_param_specs(MINI, st["stage"])
+        assert len(st["init_params"]) == len(specs)
+        for fname, (name, shape) in zip(st["init_params"], specs):
+            path = os.path.join(ART, fname)
+            data = np.fromfile(path, dtype="<f4")
+            assert data.size == int(np.prod(shape)), name
+            assert np.isfinite(data).all(), name
+
+
+def test_residual_bytes_match_ac_full_model(manifest):
+    """The residual set carried fwd→bwd must be exactly the paper's AC-Full
+    residency: one [b,s,h] f32 block input per layer (+ tokens on stage 0,
+    + head input on the last stage)."""
+    from compile.config import MINI
+
+    b, s, h = MINI.micro_batch, MINI.seq_len, MINI.hidden_size
+    for st in manifest["stages"]:
+        by_name = {e["name"]: e for e in manifest["executables"]}
+        fwd = by_name[st["fwd"]]
+        res = [o for o in fwd["outputs"] if o["role"] == "residual"]
+        hidden_res = [r for r in res if r["shape"] == [b, s, h]]
+        expected_hidden = st["num_layers"] + (1 if st["computes_loss"] else 0)
+        assert len(hidden_res) == expected_hidden

@@ -1,0 +1,168 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, swept over shapes
+(hypothesis-style parameter sweeps without the dependency) plus gradient
+checks through the custom_vjp rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import mla_attention, moe_expert_mlp, rmsnorm
+from compile.kernels.ref import (
+    mla_attention_ref,
+    moe_expert_mlp_ref,
+    rmsnorm_ref,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def randn(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(0, scale, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "shape",
+    [
+        (4, 8),
+        (1, 256),
+        (3, 5, 64),          # odd row count → padding path
+        (2, 128, 256),       # the model's actual shape
+        (129, 32),           # rows not divisible by the 128-row block
+        (1, 1, 16),
+    ],
+)
+def test_rmsnorm_matches_ref(shape):
+    x = randn(*shape)
+    w = randn(shape[-1], scale=0.5) + 1.0
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm(x, w)), np.asarray(rmsnorm_ref(x, w)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_rmsnorm_scale_invariance():
+    # RMSNorm(c·x) == RMSNorm(x) for c > 0 (up to eps).
+    x = randn(8, 64)
+    w = jnp.ones(64)
+    a = rmsnorm(x, w)
+    b = rmsnorm(10.0 * x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_rmsnorm_grad_matches_ref_grad():
+    x = randn(6, 32)
+    w = randn(32) + 1.0
+    g_kernel = jax.grad(lambda x, w: jnp.sum(jnp.sin(rmsnorm(x, w))), argnums=(0, 1))(x, w)
+    g_ref = jax.grad(lambda x, w: jnp.sum(jnp.sin(rmsnorm_ref(x, w))), argnums=(0, 1))(x, w)
+    for a, b in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MLA attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,nh,s,dqk,dv",
+    [
+        (1, 1, 4, 8, 8),
+        (2, 4, 16, 12, 8),    # dqk != dv (the MLA case)
+        (1, 2, 128, 48, 32),  # the model's shape
+        (3, 1, 7, 5, 3),      # odd everything
+    ],
+)
+def test_attention_matches_ref(b, nh, s, dqk, dv):
+    q, k = randn(b, nh, s, dqk), randn(b, nh, s, dqk)
+    v = randn(b, nh, s, dv)
+    np.testing.assert_allclose(
+        np.asarray(mla_attention(q, k, v)),
+        np.asarray(mla_attention_ref(q, k, v)),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+def test_attention_is_causal():
+    # Output at position i must not depend on inputs at positions > i.
+    b, nh, s, d = 1, 2, 8, 4
+    q, k, v = randn(b, nh, s, d), randn(b, nh, s, d), randn(b, nh, s, d)
+    out1 = np.asarray(mla_attention(q, k, v))
+    k2 = k.at[:, :, -1, :].set(99.0)
+    v2 = v.at[:, :, -1, :].set(-99.0)
+    out2 = np.asarray(mla_attention(q, k2, v2))
+    np.testing.assert_allclose(out1[:, :, :-1], out2[:, :, :-1], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(out1[:, :, -1], out2[:, :, -1])
+
+
+def test_attention_rows_sum_to_convex_combination():
+    # With v = all-ones, causal softmax must return exactly ones.
+    b, nh, s, d = 1, 1, 16, 8
+    q, k = randn(b, nh, s, d), randn(b, nh, s, d)
+    v = jnp.ones((b, nh, s, d))
+    np.testing.assert_allclose(np.asarray(mla_attention(q, k, v)), 1.0, rtol=1e-5)
+
+
+def test_attention_grads_match_ref():
+    b, nh, s, d = 1, 2, 8, 4
+    q, k, v = randn(b, nh, s, d), randn(b, nh, s, d), randn(b, nh, s, d)
+    f_kernel = lambda q, k, v: jnp.sum(mla_attention(q, k, v) ** 2)
+    f_ref = lambda q, k, v: jnp.sum(mla_attention_ref(q, k, v) ** 2)
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE expert MLP
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,t,h,he",
+    [
+        (1, 4, 8, 16),
+        (8, 512, 256, 352),  # the model's shape
+        (3, 7, 12, 20),      # odd sizes
+    ],
+)
+def test_moe_matches_ref(n, t, h, he):
+    x = randn(t, h)
+    wg, wu = randn(n, h, he, scale=0.1), randn(n, h, he, scale=0.1)
+    wd = randn(n, he, h, scale=0.1)
+    np.testing.assert_allclose(
+        np.asarray(moe_expert_mlp(x, wg, wu, wd)),
+        np.asarray(moe_expert_mlp_ref(x, wg, wu, wd)),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+def test_moe_experts_are_independent():
+    # Zeroing expert e's weights must zero only slice e of the output.
+    n, t, h, he = 4, 8, 16, 8
+    x = randn(t, h)
+    wg, wu, wd = randn(n, h, he), randn(n, h, he), randn(n, he, h)
+    base = np.asarray(moe_expert_mlp(x, wg, wu, wd))
+    wd2 = wd.at[2].set(0.0)
+    out = np.asarray(moe_expert_mlp(x, wg, wu, wd2))
+    np.testing.assert_allclose(out[2], 0.0, atol=1e-7)
+    np.testing.assert_allclose(np.delete(out, 2, 0), np.delete(base, 2, 0), rtol=1e-6)
+
+
+def test_moe_grads_match_ref():
+    n, t, h, he = 2, 6, 8, 12
+    x = randn(t, h)
+    wg, wu, wd = randn(n, h, he), randn(n, h, he), randn(n, he, h)
+    f_kernel = lambda *a: jnp.sum(moe_expert_mlp(*a) ** 2)
+    f_ref = lambda *a: jnp.sum(moe_expert_mlp_ref(*a) ** 2)
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)

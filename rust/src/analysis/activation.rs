@@ -1,0 +1,433 @@
+//! Activation-memory analysis — paper §5, regenerates Table 10; the tapes
+//! themselves are Figures 2 and 3.
+//!
+//! Every intermediate tensor a transformer layer must keep alive for the
+//! backward pass is modeled as an [`ActTensor`]: a name, a logical shape, a
+//! bytes-per-element, a parallel divisor (how SP/TP shrink it on one device)
+//! and a retention class deciding which recomputation policies keep it.
+//!
+//! Summing the tape reproduces the paper's closed-form formulas exactly
+//! (asserted in the tests), and printing it reproduces the activation
+//! "patterns" of Figures 2–3.
+
+use crate::config::{ActivationConfig, ModelConfig, ParallelConfig, RecomputePolicy};
+
+/// Which block a tensor belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Component {
+    Mla,
+    Moe,
+}
+
+/// Retention class under recomputation policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Retain {
+    /// Block input — kept under every policy (recompute restarts from it).
+    BlockInput,
+    /// Router output — kept even under full recompute ("for consistency", §5.2).
+    RouterOutput,
+    /// Attention score/probability tensors — dropped by selective recompute.
+    AttentionScore,
+    /// Any other intermediate — dropped by full recompute.
+    Intermediate,
+}
+
+/// One entry of the activation tape.
+#[derive(Debug, Clone)]
+pub struct ActTensor {
+    pub name: &'static str,
+    pub component: Component,
+    /// Human-readable logical shape, e.g. `[b, s, h]`.
+    pub shape: String,
+    /// Bytes of the full (unparallelized) tensor.
+    pub full_bytes: u64,
+    /// Divisor applied on one device (SP or TP sharding; 1 = replicated).
+    pub divisor: u64,
+    pub retain: Retain,
+}
+
+impl ActTensor {
+    /// Bytes on one device.
+    pub fn device_bytes(&self) -> u64 {
+        self.full_bytes / self.divisor
+    }
+
+    /// Is this tensor stored under `policy`?
+    pub fn retained(&self, policy: RecomputePolicy) -> bool {
+        match policy {
+            RecomputePolicy::None => true,
+            RecomputePolicy::Full => {
+                matches!(self.retain, Retain::BlockInput | Retain::RouterOutput)
+            }
+            RecomputePolicy::SelectiveAttention => {
+                !matches!(self.retain, Retain::AttentionScore)
+            }
+        }
+    }
+}
+
+/// A full per-layer activation tape for one component.
+#[derive(Debug, Clone)]
+pub struct ActivationTape {
+    pub component: Component,
+    pub tensors: Vec<ActTensor>,
+}
+
+impl ActivationTape {
+    /// Per-device bytes of this tape under `policy` (one layer, one microbatch).
+    pub fn device_bytes(&self, policy: RecomputePolicy) -> u64 {
+        self.tensors.iter().filter(|t| t.retained(policy)).map(|t| t.device_bytes()).sum()
+    }
+
+    /// Full (unparallelized) bytes with no recomputation — the paper's first
+    /// formula in §5.1.
+    pub fn full_bytes(&self) -> u64 {
+        self.tensors.iter().map(|t| t.full_bytes).sum()
+    }
+
+    /// Render the tape (Figure 2 / Figure 3).
+    pub fn render(&self, policy: RecomputePolicy) -> String {
+        let mut out = String::new();
+        let title = match self.component {
+            Component::Mla => "MLA activation pattern (Figure 2)",
+            Component::Moe => "MoE activation pattern (Figure 3)",
+        };
+        out.push_str(&format!("{title} — policy {}\n", policy.name()));
+        out.push_str(&format!(
+            "  {:<28} {:<22} {:>14} {:>5} {:>14} {:>5}\n",
+            "tensor", "shape", "full bytes", "div", "dev bytes", "kept"
+        ));
+        for t in &self.tensors {
+            out.push_str(&format!(
+                "  {:<28} {:<22} {:>14} {:>5} {:>14} {:>5}\n",
+                t.name,
+                t.shape,
+                t.full_bytes,
+                t.divisor,
+                t.device_bytes(),
+                if t.retained(policy) { "yes" } else { "-" }
+            ));
+        }
+        out.push_str(&format!(
+            "  per-layer device bytes under {}: {}\n",
+            policy.name(),
+            self.device_bytes(policy)
+        ));
+        out
+    }
+}
+
+/// Build the MLA tape (paper §5.1, Figure 2) for one layer and one microbatch.
+///
+/// Bytes use the paper's convention: BF16 tensors are 2 B/elem, dropout masks
+/// 1 B/elem. With SP on (degree = TP), sequence-sharded tensors divide by SP;
+/// head-sharded tensors divide by TP. The compressed latents (`c_Q`, `c_KV`)
+/// stay undivided because their producing weights are replicated (§5.1).
+pub fn mla_tape(m: &ModelConfig, a: &ActivationConfig) -> ActivationTape {
+    let b = a.micro_batch;
+    let s = a.seq_len / a.cp; // CP shards the sequence before the block.
+    let h = m.hidden_size;
+    let nh = m.num_attention_heads;
+    let dh = m.qk_nope_head_dim;
+    let dhr = m.qk_rope_head_dim;
+    let dcq = m.q_lora_rank;
+    let dc = m.kv_lora_rank;
+    let sp = a.sp;
+    let tp = a.sp.max(1); // heads split across TP; paper uses TP = SP = 2.
+
+    let t = |name, component, shape: String, full_bytes, divisor, retain| ActTensor {
+        name,
+        component,
+        shape,
+        full_bytes,
+        divisor,
+        retain,
+    };
+
+    ActivationTape {
+        component: Component::Mla,
+        tensors: vec![
+            // 4bsh term: block input + RMSNorm output, both [b,s,h] bf16, SP-sharded.
+            t("ln1_input", Component::Mla, format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::BlockInput),
+            t("ln1_output", Component::Mla, format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::Intermediate),
+            // 2bs(dcq+dc): compressed latents, replicated (weights unsplit).
+            t("c_Q (W^DQ out)", Component::Mla, format!("[{b},{s},{dcq}]"), 2 * b * s * dcq, 1, Retain::Intermediate),
+            t("c_KV (W^DKV out)", Component::Mla, format!("[{b},{s},{dc}]"), 2 * b * s * dc, 1, Retain::Intermediate),
+            // 4bs(dh+dhr)nh: q = [q_nope; q_rope] and k = [k_nope; k_rope], head-sharded.
+            t("q (nope+rope)", Component::Mla, format!("[{b},{s},{nh},{}]", dh + dhr), 2 * b * s * (dh + dhr) * nh, tp, Retain::Intermediate),
+            t("k (nope+rope)", Component::Mla, format!("[{b},{s},{nh},{}]", dh + dhr), 2 * b * s * (dh + dhr) * nh, tp, Retain::Intermediate),
+            // 2bs·dh·nh: v, head-sharded.
+            t("v (W^UV out)", Component::Mla, format!("[{b},{s},{nh},{dh}]"), 2 * b * s * dh * nh, tp, Retain::Intermediate),
+            // 5b·nh·s²: scores (2) + softmax probs (2) + dropout mask (1), head-sharded.
+            t("attn_scores QK^T", Component::Mla, format!("[{b},{nh},{s},{s}]"), 2 * b * nh * s * s, tp, Retain::AttentionScore),
+            t("attn_probs softmax", Component::Mla, format!("[{b},{nh},{s},{s}]"), 2 * b * nh * s * s, tp, Retain::AttentionScore),
+            t("attn_dropout_mask", Component::Mla, format!("[{b},{nh},{s},{s}]"), b * nh * s * s, tp, Retain::AttentionScore),
+            // 2bs·dh·nh: attention context (input to W^O), head-sharded.
+            t("attn_context", Component::Mla, format!("[{b},{s},{nh},{dh}]"), 2 * b * s * dh * nh, tp, Retain::Intermediate),
+            // bsh: output dropout mask, 1 B/elem, SP-sharded.
+            t("out_dropout_mask", Component::Mla, format!("[{b},{s},{h}]"), b * s * h, sp, Retain::Intermediate),
+        ],
+    }
+}
+
+/// Build the MoE tape (paper §5.2, Figure 3) for one layer and one microbatch,
+/// on one EP rank holding `N/EP` routed experts (+ all shared experts).
+pub fn moe_tape(m: &ModelConfig, p: &ParallelConfig, a: &ActivationConfig) -> ActivationTape {
+    let b = a.micro_batch;
+    let s = a.seq_len / a.cp;
+    let h = m.hidden_size;
+    let he = m.moe_intermediate_size;
+    let n = m.n_routed_experts;
+    let nr = m.num_experts_per_tok;
+    let ns = m.n_shared_experts;
+    let sp = a.sp;
+    let routed_per_rank = n / p.ep;
+    // E_token: average tokens per routed expert (paper §5.2), per microbatch.
+    // Stored per-expert tensors scale with it. The ×(bytes) coefficients below
+    // follow the paper: per routed expert 3·E·h + 8·E·h_E bytes; per shared
+    // expert the same with E → b·s.
+    let e_tok = |mult: u64| b * s * nr * mult / n; // E_token × mult (integer-safe for our configs)
+
+    let t = |name, shape: String, full_bytes, divisor, retain| ActTensor {
+        name,
+        component: Component::Moe,
+        shape,
+        full_bytes,
+        divisor,
+        retain,
+    };
+
+    ActivationTape {
+        component: Component::Moe,
+        tensors: vec![
+            // 4bsh/2: LN2 input + output, SP-sharded.
+            t("ln2_input", format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::BlockInput),
+            t("ln2_output", format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::Intermediate),
+            // 4bsN: router logits + softmax probs (bf16), undivided (post-gather).
+            t("router_logits", format!("[{b},{s},{n}]"), 2 * b * s * n, 1, Retain::Intermediate),
+            t("router_probs", format!("[{b},{s},{n}]"), 2 * b * s * n, 1, Retain::Intermediate),
+            // 2bsN_r: selected top-k routing weights, kept under full recompute.
+            t("topk_weights", format!("[{b},{s},{nr}]"), 2 * b * s * nr, 1, Retain::RouterOutput),
+            // Routed experts on this rank: 3·E·h (input 2B + combine mask 1B)
+            // + 8·E·h_E (gate, up, silu, gated product — all 2B).
+            t(
+                "routed_expert_inputs",
+                format!("{routed_per_rank}x[E_tok,{h}]"),
+                routed_per_rank * e_tok(3 * h),
+                1,
+                Retain::Intermediate,
+            ),
+            t(
+                "routed_expert_hidden",
+                format!("{routed_per_rank}x[E_tok,{he}]x4"),
+                routed_per_rank * e_tok(8 * he),
+                1,
+                Retain::Intermediate,
+            ),
+            // Shared expert(s) process every token: 3bsh + 8bsh_E each.
+            t(
+                "shared_expert_input",
+                format!("{ns}x[{b},{s},{h}]"),
+                ns * 3 * b * s * h,
+                1,
+                Retain::Intermediate,
+            ),
+            t(
+                "shared_expert_hidden",
+                format!("{ns}x[{b},{s},{he}]x4"),
+                ns * 8 * b * s * he,
+                1,
+                Retain::Intermediate,
+            ),
+        ],
+    }
+}
+
+/// Activation totals per device for a PP stage (Table 10).
+#[derive(Debug, Clone)]
+pub struct ActivationReport {
+    pub mla: ActivationTape,
+    pub moe: ActivationTape,
+    pub layers_per_stage: u64,
+    pub config: ActivationConfig,
+}
+
+impl ActivationReport {
+    pub fn build(
+        m: &ModelConfig,
+        p: &ParallelConfig,
+        a: &ActivationConfig,
+        layers_per_stage: u64,
+    ) -> Self {
+        Self {
+            mla: mla_tape(m, a),
+            moe: moe_tape(m, p, a),
+            layers_per_stage,
+            config: *a,
+        }
+    }
+
+    /// Per-device MLA bytes for the whole stage under `policy`.
+    pub fn mla_stage_bytes(&self, policy: RecomputePolicy) -> u64 {
+        self.mla.device_bytes(policy) * self.layers_per_stage
+    }
+
+    /// Per-device MoE bytes for the whole stage under `policy`.
+    pub fn moe_stage_bytes(&self, policy: RecomputePolicy) -> u64 {
+        self.moe.device_bytes(policy) * self.layers_per_stage
+    }
+
+    /// Table 10 "Total" row.
+    pub fn total_stage_bytes(&self, policy: RecomputePolicy) -> u64 {
+        self.mla_stage_bytes(policy) + self.moe_stage_bytes(policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ActivationConfig, ModelConfig, ParallelConfig};
+
+    fn setup(b: u64) -> (ModelConfig, ParallelConfig, ActivationConfig) {
+        (ModelConfig::deepseek_v3(), ParallelConfig::paper_case_study(), ActivationConfig::paper(b))
+    }
+
+    /// Paper §5.1 closed form, 4-layer stage, AC None:
+    /// 10bsh + 8bs(dcq+dc) + 16bs·dh·nh + 8bs·dhr·nh + 10b·nh·s².
+    fn paper_mla_4layers(m: &ModelConfig, b: u64, s: u64) -> u64 {
+        let (h, nh, dh, dhr, dcq, dc) = (
+            m.hidden_size,
+            m.num_attention_heads,
+            m.qk_nope_head_dim,
+            m.qk_rope_head_dim,
+            m.q_lora_rank,
+            m.kv_lora_rank,
+        );
+        10 * b * s * h
+            + 8 * b * s * (dcq + dc)
+            + 16 * b * s * dh * nh
+            + 8 * b * s * dhr * nh
+            + 10 * b * nh * s * s
+    }
+
+    /// Paper §5.2 closed form, 4-layer stage, AC None:
+    /// 20bsh + 16bsN + 8bsNr + 4bs·Nr/N·(96h + 256h_E) + 32bsh_E.
+    fn paper_moe_4layers(m: &ModelConfig, b: u64, s: u64) -> u64 {
+        let (h, he, n, nr) = (
+            m.hidden_size,
+            m.moe_intermediate_size,
+            m.n_routed_experts,
+            m.num_experts_per_tok,
+        );
+        20 * b * s * h
+            + 16 * b * s * n
+            + 8 * b * s * nr
+            + 4 * b * s * nr * (96 * h + 256 * he) / n
+            + 32 * b * s * he
+    }
+
+    #[test]
+    fn mla_tape_sums_to_formula() {
+        for b in [1, 2, 4] {
+            let (m, _p, a) = setup(b);
+            let tape = mla_tape(&m, &a);
+            assert_eq!(
+                tape.device_bytes(RecomputePolicy::None) * 4,
+                paper_mla_4layers(&m, b, a.seq_len),
+                "b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn moe_tape_sums_to_formula() {
+        for b in [1, 2, 4] {
+            let (m, p, a) = setup(b);
+            let tape = moe_tape(&m, &p, &a);
+            assert_eq!(
+                tape.device_bytes(RecomputePolicy::None) * 4,
+                paper_moe_4layers(&m, b, a.seq_len),
+                "b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_table10_full_recompute() {
+        let (m, p, a) = setup(1);
+        let (b, s, h, nr) = (1u64, a.seq_len, m.hidden_size, m.num_experts_per_tok);
+        // MLA Full: 4bsh per 4 layers (= 2bsh/2 per layer).
+        let mla = mla_tape(&m, &a);
+        assert_eq!(mla.device_bytes(RecomputePolicy::Full) * 4, 4 * b * s * h);
+        // MoE Full: 4bsh + 8bsNr per 4 layers.
+        let moe = moe_tape(&m, &p, &a);
+        assert_eq!(moe.device_bytes(RecomputePolicy::Full) * 4, 4 * b * s * h + 8 * b * s * nr);
+    }
+
+    #[test]
+    fn unparallelized_mla_matches_paper_prefix_formula() {
+        // §5.1's first display: 4bsh + 2bs(dcq+dc) + 4bs(dh+dhr)nh + 2bs·dh·nh
+        // + 5b·nh·s² + 2bs·dh·nh + bsh.
+        let (m, _p, a) = setup(2);
+        let (b, s) = (a.micro_batch, a.seq_len);
+        let (h, nh, dh, dhr, dcq, dc) = (
+            m.hidden_size,
+            m.num_attention_heads,
+            m.qk_nope_head_dim,
+            m.qk_rope_head_dim,
+            m.q_lora_rank,
+            m.kv_lora_rank,
+        );
+        let expected = 4 * b * s * h
+            + 2 * b * s * (dcq + dc)
+            + 4 * b * s * (dh + dhr) * nh
+            + 2 * b * s * dh * nh
+            + 5 * b * nh * s * s
+            + 2 * b * s * dh * nh
+            + b * s * h;
+        assert_eq!(mla_tape(&m, &a).full_bytes(), expected);
+    }
+
+    #[test]
+    fn table10_gib_magnitudes() {
+        // b=1, s=4096: the 10·b·nh·s² attention term alone is 20 GiB — the
+        // dominant term the paper's figure highlights.
+        let (m, p, a) = setup(1);
+        let rep = ActivationReport::build(&m, &p, &a, 4);
+        let none = rep.total_stage_bytes(RecomputePolicy::None) as f64 / crate::GIB;
+        let full = rep.total_stage_bytes(RecomputePolicy::Full) as f64 / crate::GIB;
+        assert!(none > 20.0 && none < 40.0, "none = {none} GiB");
+        assert!(full < 0.5, "full = {full} GiB");
+        assert!(none / full > 50.0);
+    }
+
+    #[test]
+    fn selective_attention_drops_square_terms() {
+        let (m, _p, a) = setup(1);
+        let tape = mla_tape(&m, &a);
+        let none = tape.device_bytes(RecomputePolicy::None);
+        let sel = tape.device_bytes(RecomputePolicy::SelectiveAttention);
+        let (b, s, nh) = (a.micro_batch, a.seq_len, m.num_attention_heads);
+        assert_eq!(none - sel, 5 * b * nh * s * s / 2);
+    }
+
+    #[test]
+    fn activation_scales_linearly_in_microbatch() {
+        let (m, p, _): (ModelConfig, ParallelConfig, _) = setup(1);
+        let r1 = ActivationReport::build(&m, &p, &ActivationConfig::paper(1), 4);
+        let r4 = ActivationReport::build(&m, &p, &ActivationConfig::paper(4), 4);
+        assert_eq!(
+            r4.total_stage_bytes(RecomputePolicy::None),
+            4 * r1.total_stage_bytes(RecomputePolicy::None)
+        );
+    }
+
+    #[test]
+    fn render_contains_dominant_tensors() {
+        let (m, p, a) = setup(1);
+        let s = mla_tape(&m, &a).render(RecomputePolicy::None);
+        assert!(s.contains("attn_scores"));
+        let s = moe_tape(&m, &p, &a).render(RecomputePolicy::Full);
+        assert!(s.contains("topk_weights"));
+    }
+}

@@ -1,0 +1,195 @@
+//! Per-device static-parameter partitioning under TP/EP/ETP — paper §3,
+//! regenerates Table 6.
+//!
+//! For a chosen pipeline stage, computes what one GPU actually stores:
+//!   * RMSNorms — replicated across TP ranks (§3.1);
+//!   * MLA — Megatron split set `{W^UQ, W^UK, W^UV, W^O}` ÷ TP, rest replicated (§3.2);
+//!   * MoE router — replicated; routed experts ÷ EP, shared experts replicated,
+//!     each expert ÷ ETP (§3.3);
+//!   * embedding / LM head — vocab-parallel ÷ TP (only on first/last stages);
+//!   * dense FFN — column/row split ÷ TP (only on stages holding dense layers).
+//!
+//! The paper's Table 6 analyses a Stages-1–14 archetype (4 MoE layers, no
+//! embedding/head); this module is generic over any stage.
+
+use super::stages::StagePlan;
+use crate::config::{Dtype, ModelConfig, ParallelConfig};
+use crate::model::{dense, embedding, mla, moe};
+
+/// Static parameters held by one device of a given pipeline stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceStaticParams {
+    pub stage: u64,
+    pub num_layers: u64,
+    pub moe_layers: u64,
+    /// RMSNorm params per device (replicated).
+    pub norms: u64,
+    /// MLA params per device (TP-partitioned per §3.2).
+    pub mla: u64,
+    /// Dense-FFN params per device (÷ TP; 0 for pure-MoE stages).
+    pub dense_ffn: u64,
+    /// Embedding params per device (÷ TP; 0 unless first stage).
+    pub embedding: u64,
+    /// LM-head params per device (÷ TP; 0 unless last stage).
+    pub head: u64,
+    /// MoE router params per device (replicated).
+    pub router: u64,
+    /// Expert params per device (÷ EP, shared replicated, ÷ ETP).
+    pub experts: u64,
+    /// Weight dtype used for byte columns.
+    pub weight_dtype: Dtype,
+}
+
+impl DeviceStaticParams {
+    /// Compute the partitioning for `stage` of `plan`.
+    pub fn for_stage(
+        m: &ModelConfig,
+        p: &ParallelConfig,
+        plan: &StagePlan,
+        stage: usize,
+        weight_dtype: Dtype,
+    ) -> Self {
+        let info = plan.stages[stage];
+        let n = info.num_layers;
+        let moe_layers = info.moe_layers;
+        let dense_layers = n - moe_layers;
+        let first = info.first_layer;
+        let last = info.first_layer + n - 1;
+        let l = m.num_hidden_layers;
+
+        Self {
+            stage: info.stage,
+            num_layers: n,
+            moe_layers,
+            norms: dense::norm_params_per_layer(m) * n
+                + if last == l - 1 { dense::final_norm_params(m) } else { 0 },
+            mla: mla::params_per_tp_rank(m, p.tp) * n,
+            dense_ffn: dense::ffn_params_per_layer(m) / p.tp * dense_layers,
+            embedding: if first == 0 { embedding::embedding_params(m) / p.tp } else { 0 },
+            head: if last == l - 1 { embedding::head_params(m) / p.tp } else { 0 },
+            router: moe::router_params(m) * moe_layers,
+            experts: moe::expert_params_per_rank(m, p.ep, p.etp) * moe_layers,
+            weight_dtype,
+        }
+    }
+
+    /// The paper's "Non-MoE Part": everything replicated or TP-sharded across
+    /// the plain DP dimension (norms + MLA + dense + embedding + head).
+    pub fn non_moe_params(&self) -> u64 {
+        self.norms + self.mla + self.dense_ffn + self.embedding + self.head
+    }
+
+    /// The paper's "MoE part": router + experts, sharded across EDP under ZeRO.
+    pub fn moe_params(&self) -> u64 {
+        self.router + self.experts
+    }
+
+    /// Total static parameters per device (Table 6 bottom row).
+    pub fn total_params(&self) -> u64 {
+        self.non_moe_params() + self.moe_params()
+    }
+
+    /// Total bytes at the weight dtype.
+    pub fn total_bytes(&self) -> u64 {
+        self.total_params() * self.weight_dtype.bytes() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::stages::StageSplit;
+    use crate::model::CountMode;
+
+    fn paper_device() -> DeviceStaticParams {
+        let m = ModelConfig::deepseek_v3();
+        let p = ParallelConfig::paper_case_study();
+        let plan = StagePlan::build(&m, p.pp, StageSplit::FrontLoaded, CountMode::PaperCompat);
+        DeviceStaticParams::for_stage(&m, &p, &plan, 1, Dtype::Bf16)
+    }
+
+    #[test]
+    fn paper_table6() {
+        let d = paper_device();
+        assert_eq!(d.norms, 65_536); // §3.1: 16,384 × 4
+        assert_eq!(d.mla, 429_654_016); // §3.2
+        assert_eq!(d.non_moe_params(), 429_719_552); // Table 6 "Non-MoE Part"
+        assert_eq!(d.router, 1_835_008 * 4);
+        assert_eq!(d.experts, 5_813_305_344); // §3.3: 132 experts
+        assert_eq!(d.moe_params(), 5_820_645_376); // Table 6 "MoE"
+        assert_eq!(d.total_params(), 6_250_364_928); // Table 6 "Total"
+        assert_eq!(d.total_bytes(), 12_500_729_856); // 11.64 GiB
+        let gib = d.total_bytes() as f64 / crate::GIB;
+        assert!((gib - 11.64).abs() < 0.01, "{gib}");
+    }
+
+    #[test]
+    fn paper_table6_mb_columns() {
+        let d = paper_device();
+        // MLA: 819.5 MB; MoE: 11,102 MB ≈ 10.84 GB (paper).
+        let mla_mib = (d.mla * 2) as f64 / crate::MIB;
+        assert!((mla_mib - 819.5).abs() < 0.5, "{mla_mib}");
+        let moe_mib = (d.moe_params() * 2) as f64 / crate::MIB;
+        assert!((moe_mib - 11_102.0).abs() < 1.0, "{moe_mib}");
+    }
+
+    #[test]
+    fn stage0_includes_embedding_and_dense() {
+        let m = ModelConfig::deepseek_v3();
+        let p = ParallelConfig::paper_case_study();
+        let plan = StagePlan::build(&m, p.pp, StageSplit::FrontLoaded, CountMode::PaperCompat);
+        let d = DeviceStaticParams::for_stage(&m, &p, &plan, 0, Dtype::Bf16);
+        assert_eq!(d.embedding, 926_679_040 / 2);
+        assert_eq!(d.head, 0);
+        assert_eq!(d.dense_ffn, 396_361_728 / 2 * 3);
+        assert_eq!(d.moe_layers, 1);
+    }
+
+    #[test]
+    fn stage15_includes_head_and_final_norm() {
+        let m = ModelConfig::deepseek_v3();
+        let p = ParallelConfig::paper_case_study();
+        let plan = StagePlan::build(&m, p.pp, StageSplit::FrontLoaded, CountMode::PaperCompat);
+        let d = DeviceStaticParams::for_stage(&m, &p, &plan, 15, Dtype::Bf16);
+        assert_eq!(d.head, 926_679_040 / 2);
+        assert_eq!(d.embedding, 0);
+        assert_eq!(d.norms, 16_384 + 7168);
+    }
+
+    #[test]
+    fn devices_of_stage_sum_to_stage_params_modulo_replication() {
+        // With TP=1, EP=1 a single device holds the entire stage (strict mode;
+        // replication of shared experts/norms doesn't inflate anything).
+        let m = ModelConfig::deepseek_v3();
+        let p = ParallelConfig { dp: 1, tp: 1, pp: 16, ep: 1, etp: 1 };
+        let plan = StagePlan::build(&m, p.pp, StageSplit::FrontLoaded, CountMode::Strict);
+        for s in 0..16 {
+            let d = DeviceStaticParams::for_stage(&m, &p, &plan, s, Dtype::Bf16);
+            let extra_final_norm =
+                if s == 15 { dense::final_norm_params(&m) } else { 0 };
+            assert_eq!(
+                d.total_params(),
+                plan.stages[s].params + extra_final_norm,
+                "stage {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn ep_sharding_scales_expert_params() {
+        let m = ModelConfig::deepseek_v3();
+        let plan_p = ParallelConfig::paper_case_study();
+        let plan =
+            StagePlan::build(&m, plan_p.pp, StageSplit::FrontLoaded, CountMode::PaperCompat);
+        let mut per_ep = Vec::new();
+        for ep in [1u64, 2, 4, 8, 16] {
+            let p = ParallelConfig { ep, ..plan_p };
+            let d = DeviceStaticParams::for_stage(&m, &p, &plan, 1, Dtype::Bf16);
+            per_ep.push(d.experts);
+        }
+        // Monotonically decreasing, with the shared expert as the replicated floor.
+        for w in per_ep.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+}

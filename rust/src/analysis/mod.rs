@@ -1,0 +1,121 @@
+//! The paper's contribution: closed-form device-level memory analysis of
+//! DeepSeek-style MoE training.
+//!
+//! * [`params`]  — layer-level parameter counting            (paper Table 3)
+//! * [`stages`]  — pipeline-stage parameter splits            (paper Table 4)
+//! * [`device`]  — per-device static partitioning (TP/EP/ETP) (paper Table 6)
+//! * [`zero`]    — DeepSpeed-ZeRO sharding across DP/EDP      (paper Table 8)
+//! * [`activation`] — activation tapes + recomputation        (paper §5, Table 10, Figs 2–3)
+//! * [`total`]   — end-to-end per-device memory + §6 overheads, feasibility sweeps
+//!
+//! [`MemoryModel`] is the facade wiring a [`CaseStudy`]'s four config axes
+//! through all of the above.
+
+pub mod activation;
+pub mod bubble;
+pub mod device;
+pub mod inference;
+pub mod params;
+pub mod stages;
+pub mod total;
+pub mod zero;
+
+pub use activation::{ActTensor, ActivationReport, ActivationTape, Component};
+pub use device::DeviceStaticParams;
+pub use params::ParamTable;
+pub use stages::{StagePlan, StageSplit};
+pub use total::{DeviceMemoryReport, Overheads};
+pub use zero::{ZeroReport, ZeroStrategy};
+
+use crate::config::{ActivationConfig, DtypePolicy, ModelConfig, ParallelConfig};
+use crate::model::CountMode;
+
+/// Facade over the full analytical model for one (model, parallel, dtype) triple.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub model: ModelConfig,
+    pub parallel: ParallelConfig,
+    pub dtypes: DtypePolicy,
+    pub mode: CountMode,
+    pub split: StageSplit,
+}
+
+impl MemoryModel {
+    /// Build with paper-compatible counting and the paper's front-loaded PP split.
+    pub fn new(model: &ModelConfig, parallel: &ParallelConfig, dtypes: DtypePolicy) -> Self {
+        Self {
+            model: model.clone(),
+            parallel: *parallel,
+            dtypes,
+            mode: CountMode::PaperCompat,
+            split: StageSplit::FrontLoaded,
+        }
+    }
+
+    pub fn with_mode(mut self, mode: CountMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_split(mut self, split: StageSplit) -> Self {
+        self.split = split;
+        self
+    }
+
+    /// Layer-level parameter table (Table 3).
+    pub fn param_table(&self) -> ParamTable {
+        ParamTable::build(&self.model, self.mode, self.dtypes.weight)
+    }
+
+    /// Pipeline-stage plan and per-stage totals (Table 4).
+    pub fn stage_plan(&self) -> StagePlan {
+        StagePlan::build(&self.model, self.parallel.pp, self.split.clone(), self.mode)
+    }
+
+    /// Static parameters per device on the heaviest stage (Table 6).
+    pub fn device_static_params(&self) -> DeviceStaticParams {
+        let plan = self.stage_plan();
+        DeviceStaticParams::for_stage(
+            &self.model,
+            &self.parallel,
+            &plan,
+            plan.heaviest_stage(),
+            self.dtypes.weight,
+        )
+    }
+
+    /// ZeRO sharding report for every strategy (Table 8).
+    pub fn zero_report(&self) -> ZeroReport {
+        ZeroReport::build(&self.device_static_params(), &self.parallel, self.dtypes)
+    }
+
+    /// Activation analysis for one microbatch config (Table 10; tapes = Figs 2–3).
+    pub fn activation_report(&self, act: &ActivationConfig) -> ActivationReport {
+        let plan = self.stage_plan();
+        ActivationReport::build(
+            &self.model,
+            &self.parallel,
+            act,
+            plan.stages[plan.heaviest_stage()].num_layers,
+        )
+    }
+
+    /// Full per-device memory report (params+grads+opt+act+overheads).
+    pub fn device_memory(&self, act: &ActivationConfig, zero: ZeroStrategy, ov: Overheads) -> DeviceMemoryReport {
+        DeviceMemoryReport::build(self, act, zero, ov)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CaseStudy;
+
+    #[test]
+    fn facade_reproduces_headline_numbers() {
+        let cs = CaseStudy::paper();
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        assert_eq!(mm.param_table().total_params(), 671_026_522_112);
+        assert_eq!(mm.device_static_params().total_params(), 6_250_364_928);
+    }
+}

@@ -1,0 +1,142 @@
+//! Layer-level parameter counting — regenerates paper Table 3.
+//!
+//! Groups the per-layer census of [`crate::model::ModelParams`] into the
+//! paper's row structure (layer 0 / dense layers / MoE layers / last layer)
+//! and attaches byte sizes for a weight dtype.
+
+use crate::config::{Dtype, ModelConfig};
+use crate::model::{CountMode, LayerParams, ModelParams};
+
+/// One row of Table 3: a contiguous group of identically-shaped layers.
+#[derive(Debug, Clone)]
+pub struct ParamRow {
+    /// Layer index range, inclusive.
+    pub first_layer: u64,
+    pub last_layer: u64,
+    /// Component breakdown of a single layer in the group.
+    pub layer: LayerParams,
+    /// Parameters per layer in this group.
+    pub params_per_layer: u64,
+}
+
+impl ParamRow {
+    pub fn num_layers(&self) -> u64 {
+        self.last_layer - self.first_layer + 1
+    }
+
+    pub fn group_params(&self) -> u64 {
+        self.params_per_layer * self.num_layers()
+    }
+}
+
+/// The full Table 3 for a model.
+#[derive(Debug, Clone)]
+pub struct ParamTable {
+    pub rows: Vec<ParamRow>,
+    pub weight_dtype: Dtype,
+    census: ModelParams,
+}
+
+impl ParamTable {
+    pub fn build(m: &ModelConfig, mode: CountMode, weight_dtype: Dtype) -> Self {
+        let census = ModelParams::build(m, mode);
+        let mut rows: Vec<ParamRow> = Vec::new();
+        for layer in &census.layers {
+            let total = layer.total();
+            match rows.last_mut() {
+                // Group consecutive layers with identical composition.
+                Some(row)
+                    if row.params_per_layer == total
+                        && row.layer.kind == layer.kind
+                        && row.layer.embedding == layer.embedding
+                        && row.layer.head == layer.head =>
+                {
+                    row.last_layer = layer.index;
+                }
+                _ => rows.push(ParamRow {
+                    first_layer: layer.index,
+                    last_layer: layer.index,
+                    layer: *layer,
+                    params_per_layer: total,
+                }),
+            }
+        }
+        Self { rows, weight_dtype, census }
+    }
+
+    /// Total model parameters.
+    pub fn total_params(&self) -> u64 {
+        self.census.total()
+    }
+
+    /// Total bytes at the weight dtype.
+    pub fn total_bytes(&self) -> u64 {
+        self.total_params() * self.weight_dtype.bytes() as u64
+    }
+
+    /// Bytes of one layer in row `i`.
+    pub fn row_layer_bytes(&self, i: usize) -> u64 {
+        self.rows[i].params_per_layer * self.weight_dtype.bytes() as u64
+    }
+
+    /// Per-layer census (for stage planning).
+    pub fn census(&self) -> &ModelParams {
+        &self.census
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn table() -> ParamTable {
+        ParamTable::build(&ModelConfig::deepseek_v3(), CountMode::PaperCompat, Dtype::Bf16)
+    }
+
+    #[test]
+    fn paper_table3() {
+        let t = table();
+        // Paper Table 3 has exactly 4 row groups: L0, L1-2, L3-59, L60.
+        assert_eq!(t.rows.len(), 4);
+        assert_eq!((t.rows[0].first_layer, t.rows[0].last_layer), (0, 0));
+        assert_eq!((t.rows[1].first_layer, t.rows[1].last_layer), (1, 2));
+        assert_eq!((t.rows[2].first_layer, t.rows[2].last_layer), (3, 59));
+        assert_eq!((t.rows[3].first_layer, t.rows[3].last_layer), (60, 60));
+
+        assert_eq!(t.rows[0].params_per_layer, 1_510_164_480); // 1.5 B
+        assert_eq!(t.rows[1].params_per_layer, 583_485_440); // 0.58 B
+        assert_eq!(t.rows[2].params_per_layer, 11_507_288_064); // 11.5 B
+        assert_eq!(t.rows[3].params_per_layer, 12_433_967_104); // 12.4 B
+        assert_eq!(t.total_params(), 671_026_522_112); // 671 B
+    }
+
+    #[test]
+    fn paper_table3_mb_column() {
+        let t = table();
+        // Paper: layer 1-2 = 1112 MB; layers 3-59 = 21950 MB; layer 60 = 23712 MB.
+        let mb = |i: usize| (t.row_layer_bytes(i) as f64 / crate::MIB).round() as u64;
+        assert_eq!(mb(1), 1113); // paper rounds to 1112 (uses 0.58B*2/2^20 with its own rounding)
+        assert_eq!(mb(2), 21_948); // paper: 21950
+        assert_eq!(mb(3), 23_716); // paper: 23712
+        // Totals: paper says ~1,280,000 MB ≈ 1250 GB.
+        let total_gib = t.total_bytes() as f64 / crate::GIB;
+        assert!((total_gib - 1249.87).abs() < 0.1, "{total_gib}");
+    }
+
+    #[test]
+    fn v2_table_has_dense_and_moe_groups() {
+        let t = ParamTable::build(&ModelConfig::deepseek_v2(), CountMode::Strict, Dtype::Bf16);
+        assert!(t.rows.len() >= 3);
+        // DeepSeek-v2 ≈ 236B params; sanity band (our count is of the published cfg).
+        let b = t.total_params() as f64 / 1e9;
+        assert!((200.0..260.0).contains(&b), "v2 total {b} B");
+    }
+
+    #[test]
+    fn mini_model_census_is_consistent() {
+        let t = ParamTable::build(&ModelConfig::mini(), CountMode::Strict, Dtype::Fp32);
+        let sum: u64 = t.rows.iter().map(|r| r.group_params()).sum();
+        assert_eq!(sum, t.total_params());
+    }
+}

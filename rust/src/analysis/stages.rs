@@ -1,0 +1,203 @@
+//! Pipeline-parallel stage planning — regenerates paper Table 4.
+//!
+//! The paper's PP16 plan is *front-loaded*: every stage takes `ceil(l/pp)`
+//! layers until the remainder runs out, so stage 0 holds layers 0–3,
+//! stages 1–14 hold 4 MoE layers each, and stage 15 holds only layer 60
+//! (which still weighs 12.4 B because of the LM head).
+
+use crate::config::{Dtype, ModelConfig};
+use crate::model::{CountMode, ModelParams};
+
+/// How to distribute `l` layers over `pp` stages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StageSplit {
+    /// The paper's rule: fill each stage with `ceil(l/pp)` layers front-to-back.
+    FrontLoaded,
+    /// Balanced split: `l % pp` stages get `ceil`, the rest `floor`.
+    Balanced,
+    /// Explicit per-stage layer counts (must sum to `l`).
+    Custom(Vec<u64>),
+}
+
+impl StageSplit {
+    /// Resolve to per-stage layer counts.
+    pub fn layer_counts(&self, l: u64, pp: u64) -> anyhow::Result<Vec<u64>> {
+        let counts = match self {
+            StageSplit::FrontLoaded => {
+                let per = l.div_ceil(pp);
+                let mut left = l;
+                (0..pp)
+                    .map(|_| {
+                        let take = per.min(left);
+                        left -= take;
+                        take
+                    })
+                    .collect::<Vec<_>>()
+            }
+            StageSplit::Balanced => {
+                let base = l / pp;
+                let extra = l % pp;
+                (0..pp).map(|i| base + u64::from(i < extra)).collect()
+            }
+            StageSplit::Custom(c) => c.clone(),
+        };
+        if counts.len() != pp as usize {
+            anyhow::bail!("stage split has {} entries, expected pp={pp}", counts.len());
+        }
+        if counts.iter().sum::<u64>() != l {
+            anyhow::bail!("stage split sums to {}, expected l={l}", counts.iter().sum::<u64>());
+        }
+        if counts.iter().any(|&c| c == 0) {
+            anyhow::bail!("stage split contains an empty stage: {counts:?}");
+        }
+        Ok(counts)
+    }
+}
+
+/// One pipeline stage and its parameter load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageInfo {
+    pub stage: u64,
+    /// First layer index hosted by this stage.
+    pub first_layer: u64,
+    pub num_layers: u64,
+    /// Total parameters of this stage (all TP/EP ranks combined).
+    pub params: u64,
+    /// Number of MoE layers within this stage.
+    pub moe_layers: u64,
+}
+
+/// The resolved plan for all stages (Table 4).
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    pub stages: Vec<StageInfo>,
+    pub mode: CountMode,
+}
+
+impl StagePlan {
+    pub fn build(m: &ModelConfig, pp: u64, split: StageSplit, mode: CountMode) -> Self {
+        let counts = split
+            .layer_counts(m.num_hidden_layers, pp)
+            .expect("invalid stage split for model/pp");
+        let census = ModelParams::build(m, mode);
+        let mut first = 0u64;
+        let stages = counts
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                let layers = &census.layers[first as usize..(first + n) as usize];
+                let info = StageInfo {
+                    stage: i as u64,
+                    first_layer: first,
+                    num_layers: n,
+                    params: layers.iter().map(|l| l.total()).sum(),
+                    moe_layers: layers
+                        .iter()
+                        .filter(|l| l.kind == crate::model::LayerKind::Moe)
+                        .count() as u64,
+                };
+                first += n;
+                info
+            })
+            .collect();
+        Self { stages, mode }
+    }
+
+    /// Index of the stage with the most parameters (the paper analyses this one).
+    pub fn heaviest_stage(&self) -> usize {
+        self.stages
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, s)| s.params)
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Sum over all stages (must equal the model total).
+    pub fn total_params(&self) -> u64 {
+        self.stages.iter().map(|s| s.params).sum()
+    }
+
+    /// Per-stage bytes at a weight dtype.
+    pub fn stage_bytes(&self, stage: usize, dtype: Dtype) -> u64 {
+        self.stages[stage].params * dtype.bytes() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn plan() -> StagePlan {
+        StagePlan::build(&ModelConfig::deepseek_v3(), 16, StageSplit::FrontLoaded, CountMode::PaperCompat)
+    }
+
+    #[test]
+    fn paper_table4_layer_counts() {
+        let p = plan();
+        assert_eq!(p.stages.len(), 16);
+        assert_eq!(p.stages[0].num_layers, 4);
+        for s in 1..15 {
+            assert_eq!(p.stages[s].num_layers, 4);
+        }
+        assert_eq!(p.stages[15].num_layers, 1);
+    }
+
+    #[test]
+    fn paper_table4_params() {
+        let p = plan();
+        // Stage 0: 14.16 B (embedding + 3 dense + 1 MoE layer).
+        assert_eq!(p.stages[0].params, 14_184_423_424);
+        // Stages 1-14: 46 B each.
+        for s in 1..15 {
+            assert_eq!(p.stages[s].params, 46_029_152_256);
+        }
+        // Stage 15: 12.4 B.
+        assert_eq!(p.stages[15].params, 12_433_967_104);
+        // Sum = 671 B.
+        assert_eq!(p.total_params(), 671_026_522_112);
+    }
+
+    #[test]
+    fn paper_table4_gb_column() {
+        let p = plan();
+        let gib = |s: usize| p.stage_bytes(s, crate::config::Dtype::Bf16) as f64 / crate::GIB;
+        assert!((gib(0) - 26.4).abs() < 0.1); // paper: 26
+        assert!((gib(1) - 85.7).abs() < 0.1); // paper: 86
+        assert!((gib(15) - 23.2).abs() < 0.1); // paper: 23
+    }
+
+    #[test]
+    fn heaviest_stage_is_a_middle_stage() {
+        let p = plan();
+        let h = p.heaviest_stage();
+        assert!((1..15).contains(&h), "heaviest = {h}");
+        assert_eq!(p.stages[h].moe_layers, 4);
+    }
+
+    #[test]
+    fn balanced_split_differs_from_front_loaded() {
+        let fl = StageSplit::FrontLoaded.layer_counts(61, 16).unwrap();
+        let ba = StageSplit::Balanced.layer_counts(61, 16).unwrap();
+        assert_eq!(fl.iter().sum::<u64>(), 61);
+        assert_eq!(ba.iter().sum::<u64>(), 61);
+        assert_eq!(fl[15], 1);
+        assert_eq!(ba[15], 3);
+    }
+
+    #[test]
+    fn custom_split_validated() {
+        assert!(StageSplit::Custom(vec![61]).layer_counts(61, 16).is_err());
+        assert!(StageSplit::Custom(vec![4; 16]).layer_counts(61, 16).is_err());
+        let mut c = vec![4; 15];
+        c.push(1);
+        assert!(StageSplit::Custom(c).layer_counts(61, 16).is_ok());
+    }
+
+    #[test]
+    fn empty_stage_rejected() {
+        // 3 layers on 4 stages front-loaded would leave stage 3 empty.
+        assert!(StageSplit::FrontLoaded.layer_counts(3, 4).is_err());
+    }
+}

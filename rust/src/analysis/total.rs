@@ -1,0 +1,211 @@
+//! End-to-end per-device memory totals — stitches Tables 6, 8 and 10 together
+//! and adds the paper's §6 overheads (temporal comm buffers + fragmentation).
+//!
+//! Also provides the configuration-sweep used by `examples/sweep_parallelism.rs`
+//! and `benches/sweep.rs`: which (b, AC, ZeRO) combinations fit a device budget.
+
+use super::activation::ActivationReport;
+use super::zero::{ZeroReport, ZeroStrategy};
+use super::MemoryModel;
+use crate::config::{ActivationConfig, RecomputePolicy};
+
+/// §6 overheads. The paper gives ranges; defaults sit mid-range.
+#[derive(Debug, Clone, Copy)]
+pub struct Overheads {
+    /// Temporary communication buffers per device, bytes (paper: 0.8–2 GB).
+    pub comm_buffer_bytes: u64,
+    /// Fragmentation as a fraction of allocated memory (paper: 0.05–0.30).
+    pub fragmentation: f64,
+    /// Microbatches whose activations are simultaneously live. The paper's
+    /// per-microbatch analysis corresponds to 1; 1F1B on stage `i` of `p`
+    /// stages holds up to `p - i` (see `sim::schedule`).
+    pub inflight_microbatches: u64,
+}
+
+impl Overheads {
+    /// Paper §6 midpoints, single in-flight microbatch (the paper's implicit setting).
+    pub fn paper_midpoint() -> Self {
+        Self {
+            comm_buffer_bytes: (1.4 * crate::GIB) as u64,
+            fragmentation: 0.15,
+            inflight_microbatches: 1,
+        }
+    }
+
+    /// No overheads (pure Table-6/8/10 arithmetic).
+    pub fn none() -> Self {
+        Self { comm_buffer_bytes: 0, fragmentation: 0.0, inflight_microbatches: 1 }
+    }
+}
+
+/// Complete per-device memory report.
+#[derive(Debug, Clone)]
+pub struct DeviceMemoryReport {
+    pub zero: ZeroStrategy,
+    pub recompute: RecomputePolicy,
+    pub params_bytes: u64,
+    pub gradient_bytes: u64,
+    pub optimizer_bytes: u64,
+    pub activation_bytes: u64,
+    pub comm_buffer_bytes: u64,
+    pub fragmentation_bytes: u64,
+}
+
+impl DeviceMemoryReport {
+    pub fn build(
+        mm: &MemoryModel,
+        act: &ActivationConfig,
+        zero: ZeroStrategy,
+        ov: Overheads,
+    ) -> Self {
+        let zr: ZeroReport = mm.zero_report();
+        let row = *zr.row(zero);
+        let ar: ActivationReport = mm.activation_report(act);
+        let act_bytes = ar.total_stage_bytes(act.recompute) * ov.inflight_microbatches;
+        let allocated =
+            row.params_bytes + row.gradient_bytes + row.optimizer_bytes + act_bytes;
+        Self {
+            zero,
+            recompute: act.recompute,
+            params_bytes: row.params_bytes,
+            gradient_bytes: row.gradient_bytes,
+            optimizer_bytes: row.optimizer_bytes,
+            activation_bytes: act_bytes,
+            comm_buffer_bytes: ov.comm_buffer_bytes,
+            fragmentation_bytes: (allocated as f64 * ov.fragmentation) as u64,
+        }
+    }
+
+    /// Grand total bytes per device.
+    pub fn total_bytes(&self) -> u64 {
+        self.params_bytes
+            + self.gradient_bytes
+            + self.optimizer_bytes
+            + self.activation_bytes
+            + self.comm_buffer_bytes
+            + self.fragmentation_bytes
+    }
+
+    /// Does this configuration fit a device with `hbm_bytes` of memory?
+    pub fn fits(&self, hbm_bytes: u64) -> bool {
+        self.total_bytes() <= hbm_bytes
+    }
+}
+
+/// One point of the feasibility sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub micro_batch: u64,
+    pub recompute: RecomputePolicy,
+    pub zero: ZeroStrategy,
+    pub total_bytes: u64,
+    pub fits_80g: bool,
+}
+
+/// Sweep (b × AC × ZeRO) for a memory model — extension experiment E4.
+pub fn sweep(mm: &MemoryModel, base: &ActivationConfig, ov: Overheads) -> Vec<SweepPoint> {
+    let hbm80 = 80 * crate::GIB as u64;
+    let mut out = Vec::new();
+    for b in [1u64, 2, 4] {
+        for rc in [RecomputePolicy::None, RecomputePolicy::SelectiveAttention, RecomputePolicy::Full] {
+            for z in ZeroStrategy::ALL {
+                let act = ActivationConfig { micro_batch: b, recompute: rc, ..*base };
+                let rep = DeviceMemoryReport::build(mm, &act, z, ov);
+                out.push(SweepPoint {
+                    micro_batch: b,
+                    recompute: rc,
+                    zero: z,
+                    total_bytes: rep.total_bytes(),
+                    fits_80g: rep.fits(hbm80),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CaseStudy;
+
+    fn mm() -> MemoryModel {
+        let cs = CaseStudy::paper();
+        MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes)
+    }
+
+    #[test]
+    fn paper_composition_none_b1() {
+        // Without ZeRO, b=1, no recompute, no overheads:
+        // P+G+O = 81.5 GiB (Table 8) + activations (Table 10).
+        let mm = mm();
+        let act = ActivationConfig::paper(1);
+        let rep = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::None, Overheads::none());
+        let pgo = (rep.params_bytes + rep.gradient_bytes + rep.optimizer_bytes) as f64 / crate::GIB;
+        assert!((pgo - 81.5).abs() < 0.1, "{pgo}");
+        assert!(rep.activation_bytes > 0);
+        assert_eq!(
+            rep.total_bytes(),
+            rep.params_bytes + rep.gradient_bytes + rep.optimizer_bytes + rep.activation_bytes
+        );
+    }
+
+    #[test]
+    fn fragmentation_and_buffers_add_up() {
+        let mm = mm();
+        let act = ActivationConfig::paper(1);
+        let ov = Overheads { comm_buffer_bytes: crate::GIB as u64, fragmentation: 0.10, inflight_microbatches: 1 };
+        let with = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::OsG, ov);
+        let without = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::OsG, Overheads::none());
+        let alloc = without.total_bytes();
+        assert_eq!(with.total_bytes(), alloc + crate::GIB as u64 + (alloc as f64 * 0.10) as u64);
+    }
+
+    #[test]
+    fn sweep_covers_grid_and_is_monotone_in_b() {
+        let mm = mm();
+        let pts = sweep(&mm, &ActivationConfig::paper(1), Overheads::none());
+        assert_eq!(pts.len(), 3 * 3 * 4);
+        // For fixed (AC, ZeRO), memory grows with micro-batch.
+        for rc in [RecomputePolicy::None, RecomputePolicy::Full] {
+            for z in ZeroStrategy::ALL {
+                let series: Vec<u64> = pts
+                    .iter()
+                    .filter(|p| p.recompute == rc && p.zero == z)
+                    .map(|p| p.total_bytes)
+                    .collect();
+                assert!(series.windows(2).all(|w| w[0] < w[1]), "{rc:?} {z:?} {series:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn headline_feasibility_shape() {
+        // The paper's implicit conclusion: without ZeRO nothing fits 80 GB
+        // (81.5 GiB static alone); with os+g(+params) and recompute it fits.
+        let mm = mm();
+        let pts = sweep(&mm, &ActivationConfig::paper(1), Overheads::paper_midpoint());
+        let none_fit = pts.iter().filter(|p| p.zero == ZeroStrategy::None).any(|p| p.fits_80g);
+        assert!(!none_fit);
+        let best = pts
+            .iter()
+            .find(|p| {
+                p.micro_batch == 1
+                    && p.zero == ZeroStrategy::OsGParams
+                    && p.recompute == RecomputePolicy::Full
+            })
+            .unwrap();
+        assert!(best.fits_80g, "{:.1} GiB", best.total_bytes as f64 / crate::GIB);
+    }
+
+    #[test]
+    fn inflight_microbatches_scale_activations() {
+        let mm = mm();
+        let act = ActivationConfig::paper(1);
+        let ov1 = Overheads { inflight_microbatches: 1, ..Overheads::none() };
+        let ov4 = Overheads { inflight_microbatches: 4, ..Overheads::none() };
+        let r1 = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::None, ov1);
+        let r4 = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::None, ov4);
+        assert_eq!(r4.activation_bytes, 4 * r1.activation_bytes);
+    }
+}

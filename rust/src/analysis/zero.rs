@@ -1,0 +1,186 @@
+//! DeepSpeed-ZeRO sharding analysis — paper §4, regenerates Table 8.
+//!
+//! ZeRO shards training state across data-parallel groups. Because the MoE
+//! parameters replicate across *EDP* (not DP) groups, the two partitions
+//! shard with different divisors:
+//!
+//! ```text
+//! sharded_params = non_moe / DP + moe / EDP
+//! ```
+//!
+//! * `os`          — optimizer states sharded;
+//! * `os+g`        — + gradients sharded;
+//! * `os+g+params` — + weights sharded (ZeRO-3).
+
+use super::device::DeviceStaticParams;
+use crate::config::{DtypePolicy, ParallelConfig};
+
+/// ZeRO strategy (paper Table 8 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ZeroStrategy {
+    None,
+    Os,
+    OsG,
+    OsGParams,
+}
+
+impl ZeroStrategy {
+    pub const ALL: [ZeroStrategy; 4] =
+        [ZeroStrategy::None, ZeroStrategy::Os, ZeroStrategy::OsG, ZeroStrategy::OsGParams];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ZeroStrategy::None => "None",
+            ZeroStrategy::Os => "os",
+            ZeroStrategy::OsG => "os+g",
+            ZeroStrategy::OsGParams => "os+g+params",
+        }
+    }
+
+    pub fn shards_optimizer(self) -> bool {
+        !matches!(self, ZeroStrategy::None)
+    }
+
+    pub fn shards_gradients(self) -> bool {
+        matches!(self, ZeroStrategy::OsG | ZeroStrategy::OsGParams)
+    }
+
+    pub fn shards_params(self) -> bool {
+        matches!(self, ZeroStrategy::OsGParams)
+    }
+}
+
+/// Memory of one ZeRO strategy, in bytes per device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ZeroRow {
+    pub strategy: ZeroStrategy,
+    pub params_bytes: u64,
+    pub gradient_bytes: u64,
+    pub optimizer_bytes: u64,
+}
+
+impl ZeroRow {
+    /// The P+G+O column of Table 8.
+    pub fn total_bytes(&self) -> u64 {
+        self.params_bytes + self.gradient_bytes + self.optimizer_bytes
+    }
+}
+
+/// Table 8 for one device partitioning.
+#[derive(Debug, Clone)]
+pub struct ZeroReport {
+    pub rows: Vec<ZeroRow>,
+    /// Unsharded per-device parameter count the report is based on.
+    pub device_params: u64,
+    /// `non_moe/DP + moe/EDP` — the sharded parameter count.
+    pub sharded_params: u64,
+}
+
+impl ZeroReport {
+    pub fn build(dev: &DeviceStaticParams, p: &ParallelConfig, dt: DtypePolicy) -> Self {
+        let full = dev.total_params();
+        let sharded = dev.non_moe_params() / p.dp + dev.moe_params() / p.edp();
+        let wb = dt.weight.bytes() as u64;
+        let gb = dt.gradient.bytes() as u64;
+        let ob = dt.optimizer_bytes_per_param() as u64;
+
+        let rows = ZeroStrategy::ALL
+            .iter()
+            .map(|&s| ZeroRow {
+                strategy: s,
+                params_bytes: if s.shards_params() { sharded * wb } else { full * wb },
+                gradient_bytes: if s.shards_gradients() { sharded * gb } else { full * gb },
+                optimizer_bytes: if s.shards_optimizer() { sharded * ob } else { full * ob },
+            })
+            .collect();
+        Self { rows, device_params: full, sharded_params: sharded }
+    }
+
+    pub fn row(&self, s: ZeroStrategy) -> &ZeroRow {
+        self.rows.iter().find(|r| r.strategy == s).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{StagePlan, StageSplit};
+    use crate::config::{Dtype, ModelConfig};
+    use crate::model::CountMode;
+
+    fn report() -> ZeroReport {
+        let m = ModelConfig::deepseek_v3();
+        let p = ParallelConfig::paper_case_study();
+        let plan = StagePlan::build(&m, p.pp, StageSplit::FrontLoaded, CountMode::PaperCompat);
+        let dev = DeviceStaticParams::for_stage(&m, &p, &plan, 1, Dtype::Bf16);
+        ZeroReport::build(&dev, &p, DtypePolicy::paper_bf16())
+    }
+
+    fn gib(b: u64) -> f64 {
+        b as f64 / crate::GIB
+    }
+
+    #[test]
+    fn paper_sharded_param_count() {
+        let r = report();
+        // (429,719,552 / 32) + (5,820,645,376 / 8) = 741,009,408.
+        assert_eq!(r.sharded_params, 741_009_408);
+    }
+
+    #[test]
+    fn paper_table8_none() {
+        let r = report();
+        let row = r.row(ZeroStrategy::None);
+        assert!((gib(row.params_bytes) - 11.64).abs() < 0.01);
+        assert!((gib(row.gradient_bytes) - 23.28).abs() < 0.01); // paper: 23.3
+        assert!((gib(row.optimizer_bytes) - 46.57).abs() < 0.01); // paper: 46.6
+        assert!((gib(row.total_bytes()) - 81.5).abs() < 0.1); // paper: 81.54
+    }
+
+    #[test]
+    fn paper_table8_os() {
+        let r = report();
+        let row = r.row(ZeroStrategy::Os);
+        assert!((gib(row.optimizer_bytes) - 5.52).abs() < 0.01);
+        assert!((gib(row.total_bytes()) - 40.44).abs() < 0.1); // paper: 40.46
+    }
+
+    #[test]
+    fn paper_table8_os_g() {
+        let r = report();
+        let row = r.row(ZeroStrategy::OsG);
+        assert!((gib(row.gradient_bytes) - 2.76).abs() < 0.01);
+        assert!((gib(row.total_bytes()) - 19.92).abs() < 0.05);
+    }
+
+    #[test]
+    fn paper_table8_os_g_params() {
+        let r = report();
+        let row = r.row(ZeroStrategy::OsGParams);
+        assert!((gib(row.params_bytes) - 1.38).abs() < 0.01);
+        assert!((gib(row.total_bytes()) - 9.66).abs() < 0.05);
+    }
+
+    #[test]
+    fn strategies_monotonically_shrink() {
+        let r = report();
+        let totals: Vec<u64> = ZeroStrategy::ALL.iter().map(|&s| r.row(s).total_bytes()).collect();
+        for w in totals.windows(2) {
+            assert!(w[0] > w[1], "{totals:?}");
+        }
+    }
+
+    #[test]
+    fn megatron_optimizer_ablation() {
+        // With FP32 Adam moments (12 B/param) the unsharded optimizer grows 1.5×.
+        let m = ModelConfig::deepseek_v3();
+        let p = ParallelConfig::paper_case_study();
+        let plan = StagePlan::build(&m, p.pp, StageSplit::FrontLoaded, CountMode::PaperCompat);
+        let dev = DeviceStaticParams::for_stage(&m, &p, &plan, 1, Dtype::Bf16);
+        let r8 = ZeroReport::build(&dev, &p, DtypePolicy::paper_bf16());
+        let r12 = ZeroReport::build(&dev, &p, DtypePolicy::megatron_mixed());
+        let a = r8.row(ZeroStrategy::None).optimizer_bytes as f64;
+        let b = r12.row(ZeroStrategy::None).optimizer_bytes as f64;
+        assert!((b / a - 1.5).abs() < 1e-9);
+    }
+}

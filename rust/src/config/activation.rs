@@ -1,0 +1,102 @@
+//! Activation-analysis configuration (paper Table 9).
+
+
+/// Recomputation policy (paper §5 considers the "two native cases"; we also
+/// support Megatron-style selective recomputation as an extension — it
+/// recomputes the attention score/context tensors, the dominant `O(s²)` terms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecomputePolicy {
+    /// Store every intermediate activation.
+    None,
+    /// Recompute everything; only keep the block inputs (and Router outputs for
+    /// MoE, "for consistency" per the paper).
+    Full,
+    /// Extension: recompute only the attention `softmax(QKᵀ)` score/probability
+    /// tensors (the `5·b·n_h·s²` terms of the paper's MLA formula).
+    SelectiveAttention,
+}
+
+impl RecomputePolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            RecomputePolicy::None => "None",
+            RecomputePolicy::Full => "Full",
+            RecomputePolicy::SelectiveAttention => "Selective(attn)",
+        }
+    }
+}
+
+/// Per-microbatch activation setting (paper Table 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ActivationConfig {
+    /// `b` — micro batch size (the paper sweeps 1/2/4).
+    pub micro_batch: u64,
+    /// `s` — sequence length (4096 in the paper).
+    pub seq_len: u64,
+    /// Sequence-parallelism degree (Megatron SP; "On, 2" in the paper means
+    /// SP enabled with degree = TP = 2).
+    pub sp: u64,
+    /// Context-parallelism degree (1 in the paper).
+    pub cp: u64,
+    /// Activation recomputation policy.
+    pub recompute: RecomputePolicy,
+}
+
+impl ActivationConfig {
+    /// The paper's Table 9 with a chosen micro-batch size (b ∈ {1,2,4}).
+    pub fn paper(micro_batch: u64) -> Self {
+        Self { micro_batch, seq_len: 4096, sp: 2, cp: 1, recompute: RecomputePolicy::None }
+    }
+
+    /// Same but with full recomputation.
+    pub fn paper_full_recompute(micro_batch: u64) -> Self {
+        Self { recompute: RecomputePolicy::Full, ..Self::paper(micro_batch) }
+    }
+
+    /// Tokens per microbatch (`b·s`), before any SP/CP division.
+    pub fn tokens(&self) -> u64 {
+        self.micro_batch * self.seq_len
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.micro_batch == 0 || self.seq_len == 0 {
+            anyhow::bail!("micro_batch and seq_len must be > 0");
+        }
+        if self.sp == 0 || self.cp == 0 {
+            anyhow::bail!("sp and cp must be > 0");
+        }
+        if self.seq_len % (self.sp * self.cp) != 0 {
+            anyhow::bail!(
+                "seq_len ({}) must be divisible by sp*cp ({})",
+                self.seq_len,
+                self.sp * self.cp
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table9() {
+        for b in [1, 2, 4] {
+            let a = ActivationConfig::paper(b);
+            assert_eq!(a.micro_batch, b);
+            assert_eq!(a.seq_len, 4096);
+            assert_eq!(a.sp, 2);
+            assert_eq!(a.cp, 1);
+            assert_eq!(a.recompute, RecomputePolicy::None);
+            a.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn seq_divisibility_enforced() {
+        let mut a = ActivationConfig::paper(1);
+        a.seq_len = 4095; // not divisible by sp=2
+        assert!(a.validate().is_err());
+    }
+}

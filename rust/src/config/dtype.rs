@@ -1,0 +1,153 @@
+//! Data-type policy (paper Table 7).
+//!
+//! The memory model is linear in bytes-per-element, so the whole analysis is
+//! parameterized by a [`DtypePolicy`]. The paper's case study uses BF16 weights
+//! and activations, FP32 gradients, and a mixed-precision Adam state
+//! (FP32 master copy + BF16 momentum + BF16 variance = 8 bytes/param).
+
+
+/// Element data types the analysis understands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    Fp32,
+    Bf16,
+    Fp16,
+    Fp8,
+    Int8,
+    Int32,
+}
+
+impl Dtype {
+    /// Bytes per element.
+    pub const fn bytes(self) -> u64 {
+        match self {
+            Dtype::Fp32 | Dtype::Int32 => 4,
+            Dtype::Bf16 | Dtype::Fp16 => 2,
+            Dtype::Fp8 | Dtype::Int8 => 1,
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            Dtype::Fp32 => "FP32",
+            Dtype::Bf16 => "BF16",
+            Dtype::Fp16 => "FP16",
+            Dtype::Fp8 => "FP8",
+            Dtype::Int8 => "INT8",
+            Dtype::Int32 => "INT32",
+        }
+    }
+}
+
+/// The training numerics policy: which dtype each memory class uses (Table 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DtypePolicy {
+    /// Model weights.
+    pub weight: Dtype,
+    /// Saved activations.
+    pub activation: Dtype,
+    /// Gradient accumulation buffer.
+    pub gradient: Dtype,
+    /// Optimizer: master copy of parameters.
+    pub master_copy: Dtype,
+    /// Optimizer: Adam first moment.
+    pub momentum: Dtype,
+    /// Optimizer: Adam second moment.
+    pub variance: Dtype,
+}
+
+impl DtypePolicy {
+    /// The paper's Table 7: BF16 weights/activations, FP32 grads,
+    /// FP32 master + BF16 momentum + BF16 variance.
+    pub fn paper_bf16() -> Self {
+        Self {
+            weight: Dtype::Bf16,
+            activation: Dtype::Bf16,
+            gradient: Dtype::Fp32,
+            master_copy: Dtype::Fp32,
+            momentum: Dtype::Bf16,
+            variance: Dtype::Bf16,
+        }
+    }
+
+    /// Plain FP32 everywhere — the live CPU mini-training path uses this; the
+    /// validation harness plugs it into the same formulas.
+    pub fn all_fp32() -> Self {
+        Self {
+            weight: Dtype::Fp32,
+            activation: Dtype::Fp32,
+            gradient: Dtype::Fp32,
+            master_copy: Dtype::Fp32,
+            momentum: Dtype::Fp32,
+            variance: Dtype::Fp32,
+        }
+    }
+
+    /// FP8 weight/activation training (DeepSeek-v3's actual recipe, which the
+    /// paper scopes out): FP8 weights + activations, FP32 grads, paper-style
+    /// mixed Adam. NOTE: per-tile scaling factors add ~1/128² of weight bytes
+    /// (FP32 scale per 128×128 tile) — below the model's rounding and not
+    /// itemized, as in the paper.
+    pub fn fp8_mixed() -> Self {
+        Self {
+            weight: Dtype::Fp8,
+            activation: Dtype::Fp8,
+            gradient: Dtype::Fp32,
+            master_copy: Dtype::Fp32,
+            momentum: Dtype::Bf16,
+            variance: Dtype::Bf16,
+        }
+    }
+
+    /// Classic Megatron mixed precision (FP32 Adam moments, 4+4+4=12 B optimizer,
+    /// FP32 grads): useful as an ablation against the paper's 8 B policy.
+    pub fn megatron_mixed() -> Self {
+        Self {
+            weight: Dtype::Bf16,
+            activation: Dtype::Bf16,
+            gradient: Dtype::Fp32,
+            master_copy: Dtype::Fp32,
+            momentum: Dtype::Fp32,
+            variance: Dtype::Fp32,
+        }
+    }
+
+    /// Total optimizer-state bytes per parameter (paper: 4 + 2 + 2 = 8).
+    pub fn optimizer_bytes_per_param(&self) -> u64 {
+        self.master_copy.bytes() + self.momentum.bytes() + self.variance.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_per_dtype() {
+        assert_eq!(Dtype::Fp32.bytes(), 4);
+        assert_eq!(Dtype::Bf16.bytes(), 2);
+        assert_eq!(Dtype::Fp16.bytes(), 2);
+        assert_eq!(Dtype::Fp8.bytes(), 1);
+    }
+
+    #[test]
+    fn paper_table7() {
+        let p = DtypePolicy::paper_bf16();
+        assert_eq!(p.weight.bytes(), 2);
+        assert_eq!(p.activation.bytes(), 2);
+        assert_eq!(p.gradient.bytes(), 4);
+        assert_eq!(p.optimizer_bytes_per_param(), 8);
+    }
+
+    #[test]
+    fn megatron_ablation_is_12_bytes() {
+        assert_eq!(DtypePolicy::megatron_mixed().optimizer_bytes_per_param(), 12);
+    }
+
+    #[test]
+    fn fp8_policy_halves_weight_bytes() {
+        let p = DtypePolicy::fp8_mixed();
+        assert_eq!(p.weight.bytes(), 1);
+        assert_eq!(p.optimizer_bytes_per_param(), 8); // unchanged vs paper
+    }
+}

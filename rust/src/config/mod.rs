@@ -1,0 +1,105 @@
+//! Configuration layer: model architecture, parallelism layout, dtype policy,
+//! activation-analysis settings and live-training settings.
+//!
+//! Everything downstream (analysis, simulator, coordinator) is a pure function of
+//! these configs, mirroring how the paper parameterizes its formulas (Tables 1, 5,
+//! 7 and 9 are all *inputs*; Tables 3, 4, 6, 8 and 10 are *outputs*).
+
+mod activation;
+mod dtype;
+mod model;
+mod parallel;
+mod training;
+
+pub use activation::{ActivationConfig, RecomputePolicy};
+pub use dtype::{Dtype, DtypePolicy};
+pub use model::ModelConfig;
+pub use parallel::ParallelConfig;
+pub use training::{LiveSchedule, TrainingConfig};
+
+/// A fully-specified analysis case: the four config axes the paper sweeps.
+#[derive(Debug, Clone)]
+pub struct CaseStudy {
+    pub model: ModelConfig,
+    pub parallel: ParallelConfig,
+    pub dtypes: DtypePolicy,
+    pub activation: ActivationConfig,
+}
+
+impl CaseStudy {
+    /// The paper's exact case study: DeepSeek-v3 under DP32 TP2 PP16 EP8 ETP1,
+    /// BF16 weights / FP32 grads / mixed Adam, b=1 s=4096 SP-on.
+    pub fn paper() -> Self {
+        Self {
+            model: ModelConfig::deepseek_v3(),
+            parallel: ParallelConfig::paper_case_study(),
+            dtypes: DtypePolicy::paper_bf16(),
+            activation: ActivationConfig::paper(1),
+        }
+    }
+
+    /// Validate cross-config consistency (e.g. EP divides expert count, PP divides
+    /// layers, SP implies TP match).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.model.validate()?;
+        self.parallel.validate()?;
+        self.activation.validate()?;
+        if self.model.n_routed_experts % self.parallel.ep != 0 {
+            anyhow::bail!(
+                "EP={} does not divide n_routed_experts={}",
+                self.parallel.ep,
+                self.model.n_routed_experts
+            );
+        }
+        if self.activation.sp > 1 && self.activation.sp != self.parallel.tp {
+            anyhow::bail!(
+                "sequence parallelism degree ({}) must equal TP ({}) as in Megatron-LM",
+                self.activation.sp,
+                self.parallel.tp
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_case_study_is_valid() {
+        CaseStudy::paper().validate().unwrap();
+    }
+
+    #[test]
+    fn dtype_bytes() {
+        // Table 7 of the paper.
+        let p = DtypePolicy::paper_bf16();
+        assert_eq!(p.weight.bytes(), 2);
+        assert_eq!(p.activation.bytes(), 2);
+        assert_eq!(p.gradient.bytes(), 4);
+        assert_eq!(p.optimizer_bytes_per_param(), 8); // fp32 copy + bf16 m + bf16 v
+    }
+
+    #[test]
+    fn clone_preserves_fields() {
+        let case = CaseStudy::paper();
+        let back = case.clone();
+        assert_eq!(back.model.hidden_size, case.model.hidden_size);
+        assert_eq!(back.parallel.ep, case.parallel.ep);
+    }
+
+    #[test]
+    fn invalid_ep_rejected() {
+        let mut case = CaseStudy::paper();
+        case.parallel.ep = 7; // 256 % 7 != 0
+        assert!(case.validate().is_err());
+    }
+
+    #[test]
+    fn sp_must_match_tp() {
+        let mut case = CaseStudy::paper();
+        case.activation.sp = 4; // TP = 2
+        assert!(case.validate().is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Model architecture configuration (paper Table 1).
+//!
+//! The struct is a faithful superset of the HuggingFace `config.json` fields the
+//! paper cites, using the paper's notation in the doc comments:
+//! `h, h_E, h_F, d_h, n_h, d_cq, d_hr, d_c, N, N_s, l, v`.
+
+
+/// Architecture description of a DeepSeek-style MLA + MoE transformer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    /// Human-readable name (e.g. `deepseek-v3`).
+    pub name: String,
+    /// `h` — hidden dimension (`hidden_size`).
+    pub hidden_size: u64,
+    /// `h_E` — hidden dimension of each MoE expert's MLP (`moe_intermediate_size`).
+    pub moe_intermediate_size: u64,
+    /// `h_F` — hidden dimension of the dense (non-MoE) MLP (`intermediate_size`).
+    pub intermediate_size: u64,
+    /// `d_h` — per-head dimension of the non-rope q/k and of v (`qk_nope_head_dim`).
+    pub qk_nope_head_dim: u64,
+    /// `n_h` — number of attention heads (`num_attention_heads`).
+    pub num_attention_heads: u64,
+    /// `d_cq` — query compression dimension (`q_lora_rank`).
+    pub q_lora_rank: u64,
+    /// `d_hr` — per-head dimension of rope q/k (`qk_rope_head_dim`).
+    pub qk_rope_head_dim: u64,
+    /// `d_c` — key-value compression dimension (`kv_lora_rank`).
+    pub kv_lora_rank: u64,
+    /// `N` — number of routed experts per MoE layer (`n_routed_experts`).
+    pub n_routed_experts: u64,
+    /// `N_s` — number of shared experts per MoE layer (`n_shared_experts`).
+    pub n_shared_experts: u64,
+    /// `N_r` — number of routed experts activated per token (`num_experts_per_tok`).
+    pub num_experts_per_tok: u64,
+    /// `l` — total number of transformer layers (`num_hidden_layers`).
+    pub num_hidden_layers: u64,
+    /// Number of leading layers that use a dense FFN instead of MoE
+    /// (`first_k_dense_replace`; 3 for DeepSeek-v3).
+    pub first_k_dense: u64,
+    /// `v` — vocabulary size (`vocab_size`).
+    pub vocab_size: u64,
+    /// Whether input embedding and output head share weights (false for DeepSeek-v3).
+    pub tie_word_embeddings: bool,
+}
+
+impl ModelConfig {
+    /// DeepSeek-v3 (paper Table 1). 671B total parameters.
+    pub fn deepseek_v3() -> Self {
+        Self {
+            name: "deepseek-v3".into(),
+            hidden_size: 7168,
+            moe_intermediate_size: 2048,
+            intermediate_size: 18432,
+            qk_nope_head_dim: 128,
+            num_attention_heads: 128,
+            q_lora_rank: 1536,
+            qk_rope_head_dim: 64,
+            kv_lora_rank: 512,
+            n_routed_experts: 256,
+            n_shared_experts: 1,
+            num_experts_per_tok: 8,
+            num_hidden_layers: 61,
+            first_k_dense: 3,
+            vocab_size: 129280,
+            tie_word_embeddings: false,
+        }
+    }
+
+    /// DeepSeek-v2 (236B; the paper says its analysis "is equally applicable").
+    /// Values from the published `config.json`. Note v2 has no q-LoRA layernorm
+    /// asymmetries that matter here; 2 shared experts and top-6 routing.
+    pub fn deepseek_v2() -> Self {
+        Self {
+            name: "deepseek-v2".into(),
+            hidden_size: 5120,
+            moe_intermediate_size: 1536,
+            intermediate_size: 12288,
+            qk_nope_head_dim: 128,
+            num_attention_heads: 128,
+            q_lora_rank: 1536,
+            qk_rope_head_dim: 64,
+            kv_lora_rank: 512,
+            n_routed_experts: 160,
+            n_shared_experts: 2,
+            num_experts_per_tok: 6,
+            num_hidden_layers: 60,
+            first_k_dense: 1,
+            vocab_size: 102400,
+            tie_word_embeddings: false,
+        }
+    }
+
+    /// The runnable mini-DeepSeek used by the live training path (`examples/
+    /// train_pipeline.rs`). Same topology as v3 (MLA + shared/routed MoE, hybrid
+    /// dense-first layers), scaled so a CPU-PJRT pipeline trains in minutes.
+    /// Must stay in sync with `python/compile/model.py::MINI`.
+    pub fn mini() -> Self {
+        Self {
+            name: "deepseek-mini".into(),
+            hidden_size: 256,
+            moe_intermediate_size: 352,
+            intermediate_size: 1024,
+            qk_nope_head_dim: 32,
+            num_attention_heads: 4,
+            q_lora_rank: 96,
+            qk_rope_head_dim: 16,
+            kv_lora_rank: 64,
+            n_routed_experts: 8,
+            n_shared_experts: 1,
+            num_experts_per_tok: 2,
+            num_hidden_layers: 6,
+            first_k_dense: 1,
+            vocab_size: 2048,
+            tie_word_embeddings: false,
+        }
+    }
+
+    /// Number of MoE layers (`l - first_k_dense`).
+    pub fn num_moe_layers(&self) -> u64 {
+        self.num_hidden_layers - self.first_k_dense
+    }
+
+    /// `d_h * n_h` — the full attention projection width (16384 for v3).
+    pub fn attn_inner_dim(&self) -> u64 {
+        self.qk_nope_head_dim * self.num_attention_heads
+    }
+
+    /// Sanity-check the architecture.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.num_hidden_layers == 0 {
+            anyhow::bail!("num_hidden_layers must be > 0");
+        }
+        if self.first_k_dense > self.num_hidden_layers {
+            anyhow::bail!(
+                "first_k_dense ({}) exceeds num_hidden_layers ({})",
+                self.first_k_dense,
+                self.num_hidden_layers
+            );
+        }
+        if self.num_experts_per_tok > self.n_routed_experts {
+            anyhow::bail!(
+                "num_experts_per_tok ({}) exceeds n_routed_experts ({})",
+                self.num_experts_per_tok,
+                self.n_routed_experts
+            );
+        }
+        for (name, v) in [
+            ("hidden_size", self.hidden_size),
+            ("moe_intermediate_size", self.moe_intermediate_size),
+            ("num_attention_heads", self.num_attention_heads),
+            ("vocab_size", self.vocab_size),
+        ] {
+            if v == 0 {
+                anyhow::bail!("{name} must be > 0");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v3_matches_paper_table1() {
+        let m = ModelConfig::deepseek_v3();
+        assert_eq!(m.hidden_size, 7168);
+        assert_eq!(m.moe_intermediate_size, 2048);
+        assert_eq!(m.intermediate_size, 18432);
+        assert_eq!(m.qk_nope_head_dim, 128);
+        assert_eq!(m.num_attention_heads, 128);
+        assert_eq!(m.q_lora_rank, 1536);
+        assert_eq!(m.qk_rope_head_dim, 64);
+        assert_eq!(m.kv_lora_rank, 512);
+        assert_eq!(m.n_routed_experts, 256);
+        assert_eq!(m.n_shared_experts, 1);
+        assert_eq!(m.num_hidden_layers, 61);
+        assert_eq!(m.vocab_size, 129280);
+        assert_eq!(m.attn_inner_dim(), 16384);
+        assert_eq!(m.num_moe_layers(), 58);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn v2_and_mini_are_valid() {
+        ModelConfig::deepseek_v2().validate().unwrap();
+        ModelConfig::mini().validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut m = ModelConfig::deepseek_v3();
+        m.first_k_dense = 99;
+        assert!(m.validate().is_err());
+
+        let mut m = ModelConfig::deepseek_v3();
+        m.num_experts_per_tok = 512;
+        assert!(m.validate().is_err());
+
+        let mut m = ModelConfig::deepseek_v3();
+        m.hidden_size = 0;
+        assert!(m.validate().is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Parallelism configuration (paper Table 5).
+//!
+//! The grid follows Megatron-LM semantics: `world = DP × TP × PP` for the dense
+//! (non-MoE) parameters, while the MoE parameters live on an `EP × ETP × EDP`
+//! re-factoring of the same `DP × TP` plane:
+//!
+//! ```text
+//!   DP · TP = EP · ETP · EDP          (per PP stage)
+//! ```
+//!
+//! so with the paper's DP=32, TP=2, EP=8, ETP=1 we get EDP = 32·2/(8·1) = 8.
+
+
+/// 3D(+expert) parallel layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Data parallelism degree (DP).
+    pub dp: u64,
+    /// Tensor parallelism degree (TP).
+    pub tp: u64,
+    /// Pipeline parallelism degree (PP) — number of stages.
+    pub pp: u64,
+    /// Expert parallelism degree (EP): routed experts are sharded EP-ways.
+    pub ep: u64,
+    /// Expert tensor parallelism (ETP): TP *inside* each expert (1 = experts unsplit).
+    pub etp: u64,
+}
+
+impl ParallelConfig {
+    /// The paper's case-study configuration (Table 5): DP32 TP2 PP16 EP8 ETP1 → EDP8.
+    pub fn paper_case_study() -> Self {
+        Self { dp: 32, tp: 2, pp: 16, ep: 8, etp: 1 }
+    }
+
+    /// Single-device layout (useful for the mini live path and unit tests).
+    pub fn single() -> Self {
+        Self { dp: 1, tp: 1, pp: 1, ep: 1, etp: 1 }
+    }
+
+    /// Expert data parallelism: `EDP = DP·TP / (EP·ETP)` (Table 5 reports 8).
+    pub fn edp(&self) -> u64 {
+        self.dp * self.tp / (self.ep * self.etp)
+    }
+
+    /// Total number of devices: `DP·TP·PP`.
+    pub fn world_size(&self) -> u64 {
+        self.dp * self.tp * self.pp
+    }
+
+    /// Devices per pipeline stage: `DP·TP`.
+    pub fn devices_per_stage(&self) -> u64 {
+        self.dp * self.tp
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, v) in [
+            ("dp", self.dp),
+            ("tp", self.tp),
+            ("pp", self.pp),
+            ("ep", self.ep),
+            ("etp", self.etp),
+        ] {
+            if v == 0 {
+                anyhow::bail!("{name} must be > 0");
+            }
+        }
+        let plane = self.dp * self.tp;
+        let expert_plane = self.ep * self.etp;
+        if plane % expert_plane != 0 {
+            anyhow::bail!(
+                "EP·ETP ({expert_plane}) must divide DP·TP ({plane}) so EDP is integral"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table5() {
+        let p = ParallelConfig::paper_case_study();
+        assert_eq!(p.dp, 32);
+        assert_eq!(p.tp, 2);
+        assert_eq!(p.pp, 16);
+        assert_eq!(p.ep, 8);
+        assert_eq!(p.etp, 1);
+        assert_eq!(p.edp(), 8); // Table 5: EDP = 8
+        assert_eq!(p.world_size(), 1024);
+        assert_eq!(p.devices_per_stage(), 64);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn edp_derivation() {
+        // EDP = DP*TP/(EP*ETP) across a few layouts.
+        let p = ParallelConfig { dp: 16, tp: 4, pp: 8, ep: 16, etp: 2 };
+        assert_eq!(p.edp(), 2);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn non_integral_edp_rejected() {
+        let p = ParallelConfig { dp: 3, tp: 1, pp: 1, ep: 2, etp: 1 };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn zero_degree_rejected() {
+        let p = ParallelConfig { dp: 0, tp: 1, pp: 1, ep: 1, etp: 1 };
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Live-training configuration for the mini pipeline runtime
+//! (`coordinator` + `trainer`). Build-time counterpart: `python/compile/model.py`.
+
+use std::path::PathBuf;
+
+/// Settings for the end-to-end mini training run.
+#[derive(Debug, Clone)]
+pub struct TrainingConfig {
+    /// Directory with `manifest.json` + `*.hlo.txt` produced by `make artifacts`.
+    pub artifacts_dir: PathBuf,
+    /// Number of pipeline stages (must match the AOT'd artifact set).
+    pub pp: u64,
+    /// Data-parallel replicas driven by the coordinator (gradient all-reduce in Rust).
+    pub dp: u64,
+    /// Microbatches per global step (gradient accumulation across the pipeline).
+    pub num_microbatches: u64,
+    /// Micro-batch size (must match the AOT'd example shapes).
+    pub micro_batch: u64,
+    /// Sequence length (must match the AOT'd example shapes).
+    pub seq_len: u64,
+    /// Total optimizer steps to run.
+    pub steps: u64,
+    /// Adam learning rate (baked into the AOT'd optimizer executable's scalar input).
+    pub lr: f32,
+    /// Shard Adam moments across DP ranks (ZeRO-os analogue). With `dp == 1`
+    /// this is a no-op.
+    pub zero_os: bool,
+    /// Use the verbose forward (holds the full AC-None intermediate tape
+    /// between fwd and bwd) instead of layer-input residuals (AC Full).
+    pub verbose_activations: bool,
+    /// Pipeline schedule for the live run.
+    pub schedule: LiveSchedule,
+    /// RNG seed for the synthetic corpus.
+    pub seed: u64,
+    /// Log every `log_every` steps.
+    pub log_every: u64,
+}
+
+/// Schedules the live coordinator supports (the simulator supports more).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LiveSchedule {
+    /// All forwards, then all backwards (max activation residency).
+    GPipe,
+    /// One-forward-one-backward steady state (Megatron-LM default).
+    OneFOneB,
+}
+
+impl TrainingConfig {
+    /// Defaults matching `python/compile/model.py::MINI` and `make artifacts`.
+    pub fn mini_default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            pp: 2,
+            dp: 1,
+            num_microbatches: 4,
+            micro_batch: 4,
+            seq_len: 128,
+            steps: 200,
+            lr: 1e-3,
+            zero_os: false,
+            verbose_activations: false,
+            schedule: LiveSchedule::OneFOneB,
+            seed: 0xD5EE_C0DE,
+            log_every: 10,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.pp == 0 || self.dp == 0 || self.num_microbatches == 0 {
+            anyhow::bail!("pp, dp, num_microbatches must be > 0");
+        }
+        if self.micro_batch == 0 || self.seq_len == 0 || self.steps == 0 {
+            anyhow::bail!("micro_batch, seq_len, steps must be > 0");
+        }
+        if self.num_microbatches < self.pp && self.schedule == LiveSchedule::OneFOneB {
+            // 1F1B still works but degenerates; warn via error in strict validation.
+            anyhow::bail!(
+                "1F1B needs num_microbatches ({}) >= pp ({}) to fill the pipeline",
+                self.num_microbatches,
+                self.pp
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mini_default_valid() {
+        TrainingConfig::mini_default().validate().unwrap();
+    }
+
+    #[test]
+    fn underfilled_1f1b_rejected() {
+        let mut c = TrainingConfig::mini_default();
+        c.pp = 8;
+        c.num_microbatches = 2;
+        assert!(c.validate().is_err());
+    }
+}

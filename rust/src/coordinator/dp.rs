@@ -1,0 +1,95 @@
+//! Data-parallel gradient all-reduce, performed by the coordinator in Rust
+//! (the in-process analogue of NCCL ring all-reduce across DP replicas).
+//!
+//! Gradients live as flat `Vec<f32>` accumulators (one per parameter tensor
+//! per replica); `all_reduce_mean` averages them across replicas in place.
+
+/// Average gradient sets across DP replicas, in place.
+///
+/// `grads[replica][tensor]` — every replica ends up with identical averaged
+/// tensors, exactly like an all-reduce followed by a 1/dp scale.
+pub fn all_reduce_mean(grads: &mut [Vec<Vec<f32>>]) -> anyhow::Result<()> {
+    let dp = grads.len();
+    if dp <= 1 {
+        return Ok(());
+    }
+    let n_tensors = grads[0].len();
+    for g in grads.iter() {
+        if g.len() != n_tensors {
+            anyhow::bail!("replica gradient sets differ in tensor count");
+        }
+    }
+    let scale = 1.0 / dp as f32;
+    for t in 0..n_tensors {
+        let len = grads[0][t].len();
+        // Reduce into replica 0.
+        for r in 1..dp {
+            if grads[r][t].len() != len {
+                anyhow::bail!("tensor {t}: replica {r} has length {} != {len}", grads[r][t].len());
+            }
+            let (head, tail) = grads.split_at_mut(r);
+            let dst = &mut head[0][t];
+            let src = &tail[0][t];
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                *d += *s;
+            }
+        }
+        for v in grads[0][t].iter_mut() {
+            *v *= scale;
+        }
+        // Broadcast back.
+        let reduced = grads[0][t].clone();
+        for r in 1..dp {
+            grads[r][t].copy_from_slice(&reduced);
+        }
+    }
+    Ok(())
+}
+
+/// Bytes moved by a ring all-reduce of `bytes` over `dp` ranks (per device):
+/// `2·(dp−1)/dp · bytes` — used for comm accounting.
+pub fn ring_all_reduce_traffic(bytes: u64, dp: u64) -> u64 {
+    if dp <= 1 {
+        0
+    } else {
+        2 * (dp - 1) * bytes / dp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_of_two_replicas() {
+        let mut g = vec![
+            vec![vec![1.0f32, 2.0], vec![10.0]],
+            vec![vec![3.0f32, 6.0], vec![30.0]],
+        ];
+        all_reduce_mean(&mut g).unwrap();
+        assert_eq!(g[0][0], vec![2.0, 4.0]);
+        assert_eq!(g[1][0], vec![2.0, 4.0]);
+        assert_eq!(g[0][1], vec![20.0]);
+        assert_eq!(g[1][1], vec![20.0]);
+    }
+
+    #[test]
+    fn single_replica_is_noop() {
+        let mut g = vec![vec![vec![5.0f32]]];
+        all_reduce_mean(&mut g).unwrap();
+        assert_eq!(g[0][0], vec![5.0]);
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        let mut g = vec![vec![vec![1.0f32, 2.0]], vec![vec![1.0f32]]];
+        assert!(all_reduce_mean(&mut g).is_err());
+    }
+
+    #[test]
+    fn ring_traffic_formula() {
+        assert_eq!(ring_all_reduce_traffic(1000, 1), 0);
+        assert_eq!(ring_all_reduce_traffic(1000, 2), 1000);
+        assert_eq!(ring_all_reduce_traffic(800, 8), 1400);
+    }
+}

@@ -1,0 +1,13 @@
+//! The live distributed-training coordinator: a microbatch pipeline scheduler
+//! (GPipe / 1F1B) over per-stage PJRT executables, data-parallel gradient
+//! all-reduce in Rust, and an optionally ZeRO-os-sharded Adam step.
+//!
+//! This is the runtime counterpart of the paper's analysis: every buffer it
+//! holds is registered in [`crate::runtime::TrackedMemory`], so measured peak
+//! bytes can be compared against the analytical model (experiment E3).
+
+pub mod dp;
+pub mod optimizer;
+pub mod pipeline;
+
+pub use pipeline::{PipelineCoordinator, StepStats};

@@ -1,0 +1,191 @@
+//! Optimizer-state management: drives the AOT-compiled Adam executable per
+//! stage and implements ZeRO-os-style sharding of the moments across DP
+//! replicas (each parameter tensor has one owner replica that holds m/v and
+//! computes the update; the result is broadcast).
+//!
+//! Perf note (EXPERIMENTS.md §Perf): parameters and Adam moments are
+//! **literal-resident** — they live as `xla::Literal`s across steps and the
+//! optimizer consumes/produces them directly. Only gradients cross the
+//! host boundary (they must, for microbatch accumulation and the DP
+//! all-reduce). The earlier host-resident design paid 5·p large host copies
+//! per stage per step (params to_vec + rebuild, m/v to_vec + rebuild ×2).
+
+use crate::runtime::executable::{f32_literal, literal_bytes, LoadedExecutable};
+use crate::runtime::{MemTag, TrackedMemory};
+use std::sync::Arc;
+
+/// Adam moment state for one stage (per replica; ZeRO-os keeps only owned
+/// tensors materialized).
+pub struct OptimizerState {
+    /// First moment per param tensor (None if not owned under ZeRO-os).
+    pub m: Vec<Option<xla::Literal>>,
+    /// Second moment per param tensor.
+    pub v: Vec<Option<xla::Literal>>,
+    /// Step counter (Adam bias correction), shared.
+    pub step: u64,
+    /// Which replica owns each tensor (round-robin).
+    pub owner: Vec<u64>,
+    zero_os: bool,
+    dp: u64,
+}
+
+impl OptimizerState {
+    /// Initialize zero moments for `shapes` on replica `replica` of `dp`.
+    pub fn new(
+        shapes: &[Vec<u64>],
+        replica: u64,
+        dp: u64,
+        zero_os: bool,
+        tracker: &TrackedMemory,
+    ) -> anyhow::Result<Self> {
+        let owner: Vec<u64> = (0..shapes.len() as u64).map(|i| i % dp).collect();
+        let mut m = Vec::with_capacity(shapes.len());
+        let mut v = Vec::with_capacity(shapes.len());
+        for (i, shape) in shapes.iter().enumerate() {
+            let owned = !zero_os || dp == 1 || owner[i] == replica;
+            if owned {
+                let n: u64 = shape.iter().product();
+                tracker.alloc(MemTag::OptimizerM, 4 * n);
+                tracker.alloc(MemTag::OptimizerV, 4 * n);
+                m.push(Some(f32_literal(&vec![0.0; n as usize], shape)?));
+                v.push(Some(f32_literal(&vec![0.0; n as usize], shape)?));
+            } else {
+                m.push(None);
+                v.push(None);
+            }
+        }
+        Ok(Self { m, v, step: 0, owner, zero_os, dp })
+    }
+
+    /// Does this replica own tensor `i`?
+    pub fn owns(&self, replica: u64, i: usize) -> bool {
+        !self.zero_os || self.dp == 1 || self.owner[i] == replica
+    }
+}
+
+/// Apply one Adam step for a whole stage via the `opt` executable.
+///
+/// `params[i]` are the live parameter literals, replaced in place by the
+/// executable's outputs; `grads[i]` the averaged host gradients. Under
+/// ZeRO-os the executable still runs on every replica (single-process
+/// harness), but un-owned tensors feed zero moments and their parameter
+/// outputs are discarded — the caller broadcasts the owner's literal — so
+/// per-replica state bytes match the sharded accounting.
+pub fn adam_step(
+    opt: &Arc<LoadedExecutable>,
+    params: &mut [xla::Literal],
+    grads: &[Vec<f32>],
+    state: &mut OptimizerState,
+    shapes: &[Vec<u64>],
+    replica: u64,
+    tracker: &TrackedMemory,
+) -> anyhow::Result<()> {
+    state.step += 1;
+    let p = params.len();
+
+    // Grad literals (the one unavoidable host→device staging).
+    let mut grad_lits = Vec::with_capacity(p);
+    for i in 0..p {
+        grad_lits.push(f32_literal(&grads[i], &shapes[i])?);
+    }
+    // Zero-moment scratch only for un-owned tensors (ZeRO-os).
+    let mut scratch: Vec<Option<xla::Literal>> = Vec::with_capacity(p);
+    for i in 0..p {
+        if state.m[i].is_none() {
+            let n: usize = shapes[i].iter().product::<u64>() as usize;
+            scratch.push(Some(f32_literal(&vec![0.0; n], &shapes[i])?));
+        } else {
+            scratch.push(None);
+        }
+    }
+    let step_lit = xla::Literal::scalar(state.step as f32);
+
+    let mut args: Vec<&xla::Literal> = Vec::with_capacity(4 * p + 1);
+    args.extend(params.iter());
+    args.extend(grad_lits.iter());
+    for i in 0..p {
+        args.push(state.m[i].as_ref().unwrap_or_else(|| scratch[i].as_ref().unwrap()));
+    }
+    for i in 0..p {
+        args.push(state.v[i].as_ref().unwrap_or_else(|| scratch[i].as_ref().unwrap()));
+    }
+    args.push(&step_lit);
+
+    // Transient staging accounting (grad literals + scratch + step).
+    let staged: u64 = grad_lits.iter().map(literal_bytes).sum::<u64>()
+        + scratch.iter().flatten().map(literal_bytes).sum::<u64>();
+    tracker.alloc(MemTag::CommBuffers, staged);
+    let mut outs = opt.run(&args)?;
+    drop(args);
+    tracker.free(MemTag::CommBuffers, staged);
+
+    // Outputs (reverse order pops): v'…, m'…, params'….
+    debug_assert_eq!(outs.len(), 3 * p);
+    let vs: Vec<xla::Literal> = outs.split_off(2 * p);
+    let ms: Vec<xla::Literal> = outs.split_off(p);
+    let ps: Vec<xla::Literal> = outs;
+    for (i, lit) in ps.into_iter().enumerate() {
+        if state.owns(replica, i) {
+            params[i] = lit;
+        }
+    }
+    for (i, lit) in ms.into_iter().enumerate() {
+        if state.m[i].is_some() {
+            state.m[i] = Some(lit);
+        }
+    }
+    for (i, lit) in vs.into_iter().enumerate() {
+        if state.v[i].is_some() {
+            state.v[i] = Some(lit);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes(sizes: &[u64]) -> Vec<Vec<u64>> {
+        sizes.iter().map(|&n| vec![n]).collect()
+    }
+
+    #[test]
+    fn zero_os_shards_ownership_round_robin() {
+        let tracker = TrackedMemory::new();
+        let sh = shapes(&[10, 20, 30, 40]);
+        let s0 = OptimizerState::new(&sh, 0, 2, true, &tracker).unwrap();
+        assert!(s0.m[0].is_some() && s0.m[2].is_some());
+        assert!(s0.m[1].is_none() && s0.m[3].is_none());
+        let bytes = tracker.snapshot().current_of(MemTag::OptimizerM);
+        assert_eq!(bytes, 4 * (10 + 30));
+
+        let s1 = OptimizerState::new(&sh, 1, 2, true, &tracker).unwrap();
+        assert!(s1.m[1].is_some() && s1.m[3].is_some());
+    }
+
+    #[test]
+    fn no_zero_keeps_everything() {
+        let tracker = TrackedMemory::new();
+        let s = OptimizerState::new(&shapes(&[8, 8]), 0, 4, false, &tracker).unwrap();
+        assert!(s.m.iter().all(|m| m.is_some()));
+        assert_eq!(tracker.snapshot().current_of(MemTag::OptimizerV), 4 * 16);
+    }
+
+    #[test]
+    fn ownership_query() {
+        let tracker = TrackedMemory::new();
+        let s = OptimizerState::new(&shapes(&[1, 1, 1]), 0, 3, true, &tracker).unwrap();
+        assert!(s.owns(0, 0));
+        assert!(!s.owns(0, 1));
+        assert!(s.owns(1, 1));
+    }
+
+    #[test]
+    fn moments_start_at_zero() {
+        let tracker = TrackedMemory::new();
+        let s = OptimizerState::new(&shapes(&[4]), 0, 1, false, &tracker).unwrap();
+        let m = s.m[0].as_ref().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(m, vec![0.0; 4]);
+    }
+}

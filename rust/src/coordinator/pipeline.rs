@@ -1,0 +1,445 @@
+//! The live pipeline-parallel training coordinator.
+//!
+//! Runs the paper's training loop for real, at mini scale, on CPU-PJRT:
+//! every PP stage is a "virtual device" with its own executables, parameter
+//! literals and [`TrackedMemory`]; microbatches flow through a dependency-
+//! driven replay of a [`Schedule`] (GPipe or 1F1B); DP replicas all-reduce
+//! gradients in Rust; Adam runs via the AOT'd `stage{i}_opt` executable with
+//! optional ZeRO-os moment sharding.
+
+use super::dp::all_reduce_mean;
+use super::optimizer::{adam_step, OptimizerState};
+use crate::config::{LiveSchedule, TrainingConfig};
+use crate::runtime::executable::{f32_literal, i32_literal, literal_bytes};
+use crate::runtime::memory::MemorySnapshot;
+use crate::runtime::{MemTag, Runtime, StageExecutables, TrackedMemory};
+use crate::sim::{Schedule, ScheduleKind};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One pipeline stage of one DP replica — a "virtual device".
+///
+/// Parameters are literal-resident (see `coordinator::optimizer`): the
+/// literals ARE the canonical weights; no host copy is kept.
+struct StageRuntime {
+    exes: StageExecutables,
+    /// Live parameter literals (replaced in place by the optimizer step).
+    params_lit: Vec<xla::Literal>,
+    param_shapes: Vec<Vec<u64>>,
+    param_sizes: Vec<usize>,
+    opt: OptimizerState,
+    /// Gradient accumulators (flat f32, zeroed each step).
+    grad_acc: Vec<Vec<f32>>,
+    tracker: Arc<TrackedMemory>,
+}
+
+/// Statistics of one optimizer step.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub step: u64,
+    /// Mean loss across microbatches and replicas.
+    pub loss: f32,
+    pub wall_ms: f64,
+    /// Per-stage memory snapshots of replica 0.
+    pub memory: Vec<MemorySnapshot>,
+}
+
+/// The coordinator.
+pub struct PipelineCoordinator {
+    pub cfg: TrainingConfig,
+    runtime: Arc<Runtime>,
+    /// `replicas[dp][stage]`.
+    replicas: Vec<Vec<StageRuntime>>,
+    steps_done: u64,
+}
+
+impl PipelineCoordinator {
+    /// Build from a loaded runtime: reads initial params, allocates gradient
+    /// accumulators and optimizer state, registers everything with per-stage
+    /// trackers.
+    pub fn new(runtime: Arc<Runtime>, cfg: TrainingConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let man = &runtime.manifest;
+        if man.pp != cfg.pp {
+            anyhow::bail!("artifacts were built for pp={}, config wants pp={}", man.pp, cfg.pp);
+        }
+        if man.micro_batch != cfg.micro_batch || man.seq_len != cfg.seq_len {
+            anyhow::bail!(
+                "artifacts shapes (b={}, s={}) do not match config (b={}, s={})",
+                man.micro_batch,
+                man.seq_len,
+                cfg.micro_batch,
+                cfg.seq_len
+            );
+        }
+
+        let mut replicas = Vec::with_capacity(cfg.dp as usize);
+        for replica in 0..cfg.dp {
+            let mut stages = Vec::with_capacity(cfg.pp as usize);
+            for s in 0..cfg.pp as usize {
+                let exes = runtime.stage(s)?;
+                let tracker = Arc::new(TrackedMemory::new());
+
+                // Initial parameters from the artifact bundle, straight into
+                // literals (no host-resident copy).
+                let mut params_lit = Vec::new();
+                let mut param_shapes = Vec::new();
+                let mut param_sizes = Vec::new();
+                for (i, file) in exes.stage.init_params.iter().enumerate() {
+                    let path = man.dir.join(file);
+                    let bytes = std::fs::read(&path)
+                        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+                    let vals: Vec<f32> = bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    let spec = &exes.fwd.spec.inputs[i];
+                    if vals.len() as u64 != spec.numel() {
+                        anyhow::bail!(
+                            "{}: {} f32s, spec {} wants {}",
+                            path.display(),
+                            vals.len(),
+                            spec.name,
+                            spec.numel()
+                        );
+                    }
+                    tracker.alloc(MemTag::Params, spec.bytes());
+                    params_lit.push(f32_literal(&vals, &spec.shape)?);
+                    param_shapes.push(spec.shape.clone());
+                    param_sizes.push(vals.len());
+                }
+
+                // Gradient accumulators (fp32, same sizes).
+                for n in &param_sizes {
+                    tracker.alloc(MemTag::Gradients, 4 * *n as u64);
+                }
+                let grad_acc: Vec<Vec<f32>> =
+                    param_sizes.iter().map(|&n| vec![0.0; n]).collect();
+
+                let opt = OptimizerState::new(
+                    &param_shapes,
+                    replica,
+                    cfg.dp,
+                    cfg.zero_os,
+                    &tracker,
+                )?;
+
+                stages.push(StageRuntime {
+                    exes,
+                    params_lit,
+                    param_shapes,
+                    param_sizes,
+                    opt,
+                    grad_acc,
+                    tracker,
+                });
+            }
+            replicas.push(stages);
+        }
+        Ok(Self { cfg, runtime, replicas, steps_done: 0 })
+    }
+
+    /// Number of parameters across all stages.
+    pub fn total_params(&self) -> u64 {
+        self.replicas[0]
+            .iter()
+            .flat_map(|s| s.param_sizes.iter())
+            .map(|&n| n as u64)
+            .sum()
+    }
+
+    /// Per-stage memory snapshots of replica 0.
+    pub fn memory_snapshots(&self) -> Vec<MemorySnapshot> {
+        self.replicas[0].iter().map(|s| s.tracker.snapshot()).collect()
+    }
+
+    /// Run one optimizer step over `num_microbatches` microbatches per replica.
+    ///
+    /// `data[replica][microbatch]` = (tokens, labels), each `b*s` i32.
+    pub fn step(&mut self, data: &[Vec<(Vec<i32>, Vec<i32>)>]) -> anyhow::Result<StepStats> {
+        let t0 = Instant::now();
+        if data.len() != self.cfg.dp as usize {
+            anyhow::bail!("data for {} replicas, dp={}", data.len(), self.cfg.dp);
+        }
+        let m = self.cfg.num_microbatches;
+        let kind = match self.cfg.schedule {
+            LiveSchedule::GPipe => ScheduleKind::GPipe,
+            LiveSchedule::OneFOneB => ScheduleKind::OneFOneB,
+        };
+        let schedule = Schedule::build(kind, self.cfg.pp, m)?;
+
+        // Zero gradient accumulators.
+        for stages in &mut self.replicas {
+            for st in stages {
+                for g in &mut st.grad_acc {
+                    g.iter_mut().for_each(|x| *x = 0.0);
+                }
+            }
+        }
+
+        let mut losses = Vec::new();
+        for r in 0..self.cfg.dp as usize {
+            let loss = self.run_replica_step(r, &schedule, &data[r])?;
+            losses.extend(loss);
+        }
+
+        // DP gradient all-reduce (per stage, across replicas).
+        if self.cfg.dp > 1 {
+            for s in 0..self.cfg.pp as usize {
+                let mut grads: Vec<Vec<Vec<f32>>> = self
+                    .replicas
+                    .iter()
+                    .map(|stages| stages[s].grad_acc.clone())
+                    .collect();
+                all_reduce_mean(&mut grads)?;
+                for (r, g) in grads.into_iter().enumerate() {
+                    self.replicas[r][s].grad_acc = g;
+                }
+            }
+        }
+
+        // Optimizer step per replica/stage; then broadcast owned params.
+        for r in 0..self.cfg.dp as usize {
+            for s in 0..self.cfg.pp as usize {
+                let st = &mut self.replicas[r][s];
+                // Average accumulated grads over microbatches, in place.
+                let scale = 1.0 / m as f32;
+                for g in &mut st.grad_acc {
+                    g.iter_mut().for_each(|x| *x *= scale);
+                }
+                let opt_exe = st.exes.opt.clone();
+                let shapes = st.param_shapes.clone();
+                let tracker = st.tracker.clone();
+                let grads = std::mem::take(&mut st.grad_acc);
+                let res = adam_step(
+                    &opt_exe,
+                    &mut st.params_lit,
+                    &grads,
+                    &mut st.opt,
+                    &shapes,
+                    r as u64,
+                    &tracker,
+                );
+                st.grad_acc = grads;
+                res?;
+            }
+        }
+        if self.cfg.zero_os && self.cfg.dp > 1 {
+            // Broadcast each tensor's literal from its owner replica.
+            for s in 0..self.cfg.pp as usize {
+                let n_tensors = self.replicas[0][s].params_lit.len();
+                for i in 0..n_tensors {
+                    let owner = self.replicas[0][s].opt.owner[i] as usize;
+                    let value = self.replicas[owner][s].params_lit[i].clone();
+                    for r in 0..self.cfg.dp as usize {
+                        if r != owner {
+                            self.replicas[r][s].params_lit[i] = value.clone();
+                        }
+                    }
+                }
+            }
+        }
+
+        self.steps_done += 1;
+        Ok(StepStats {
+            step: self.steps_done,
+            loss: losses.iter().sum::<f32>() / losses.len() as f32,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            memory: self.memory_snapshots(),
+        })
+    }
+
+    /// Dependency-driven replay of the schedule for one replica.
+    /// Returns per-microbatch losses.
+    fn run_replica_step(
+        &mut self,
+        r: usize,
+        schedule: &Schedule,
+        microbatches: &[(Vec<i32>, Vec<i32>)],
+    ) -> anyhow::Result<Vec<f32>> {
+        let pp = self.cfg.pp as usize;
+        let m = self.cfg.num_microbatches as usize;
+        if microbatches.len() != m {
+            anyhow::bail!("got {} microbatches, want {m}", microbatches.len());
+        }
+        let bs = (self.cfg.micro_batch * self.cfg.seq_len) as usize;
+        let shape = [self.cfg.micro_batch, self.cfg.seq_len];
+
+        // Boundary tensors.
+        let mut fwd_out: HashMap<(usize, usize), xla::Literal> = HashMap::new(); // y of (stage, mb)
+        let mut bwd_dx: HashMap<(usize, usize), xla::Literal> = HashMap::new(); // dx of (stage, mb)
+        let mut fwd_done = vec![vec![false; m]; pp];
+        let mut bwd_done = vec![vec![false; m]; pp];
+        // Residual sets held between fwd and bwd: (stage, mb) → literals + bytes.
+        let mut residuals: HashMap<(usize, usize), (Vec<xla::Literal>, u64, u64)> = HashMap::new();
+        let mut losses = vec![0f32; m];
+
+        let mut next_op = vec![0usize; pp];
+        let total_ops: usize = schedule.ops.iter().map(|o| o.len()).sum();
+        let mut done_ops = 0usize;
+
+        while done_ops < total_ops {
+            let mut progressed = false;
+            for s in 0..pp {
+                let Some(op) = schedule.ops[s].get(next_op[s]) else { continue };
+                match *op {
+                    crate::sim::PipelineOp::Forward { mb, .. } => {
+                        let mb = mb as usize;
+                        let ready = s == 0 || fwd_done[s - 1][mb];
+                        if !ready {
+                            continue;
+                        }
+                        let st = &self.replicas[r][s];
+                        let is_last = st.exes.stage.computes_loss;
+                        let use_verbose =
+                            self.cfg.verbose_activations && st.exes.fwd_verbose.is_some();
+                        let exe = if use_verbose {
+                            st.exes.fwd_verbose.as_ref().unwrap().clone()
+                        } else {
+                            st.exes.fwd.clone()
+                        };
+
+                        // Input x: tokens for stage 0, previous boundary otherwise.
+                        let (tokens, labels) = &microbatches[mb];
+                        let x_own;
+                        let x: &xla::Literal = if s == 0 {
+                            debug_assert_eq!(tokens.len(), bs);
+                            x_own = i32_literal(tokens, &shape)?;
+                            &x_own
+                        } else {
+                            fwd_out.get(&(s - 1, mb)).expect("dependency checked")
+                        };
+                        let labels_lit;
+                        let mut args: Vec<&xla::Literal> =
+                            st.params_lit.iter().collect();
+                        args.push(x);
+                        if is_last {
+                            labels_lit = i32_literal(labels, &shape)?;
+                            args.push(&labels_lit);
+                        }
+
+                        let mut outs = exe.run(&args)?;
+                        // outs: y/loss, res…, [intermediates…].
+                        let n_res = st.exes.stage.num_residuals as usize;
+                        let y = outs.remove(0);
+                        let res: Vec<xla::Literal> = outs.drain(..n_res).collect();
+                        let inter: Vec<xla::Literal> = outs; // empty unless verbose
+
+                        let res_bytes: u64 = res.iter().map(literal_bytes).sum();
+                        let inter_bytes: u64 = inter.iter().map(literal_bytes).sum();
+                        st.tracker.alloc(MemTag::Residuals, res_bytes);
+                        if inter_bytes > 0 {
+                            st.tracker.alloc(MemTag::Intermediates, inter_bytes);
+                        }
+                        let mut held = res;
+                        held.extend(inter);
+                        residuals.insert((s, mb), (held, res_bytes, inter_bytes));
+
+                        if is_last {
+                            losses[mb] = y.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?[0];
+                        } else {
+                            st.tracker.alloc(MemTag::IoBuffers, literal_bytes(&y));
+                            fwd_out.insert((s, mb), y);
+                        }
+                        fwd_done[s][mb] = true;
+                        next_op[s] += 1;
+                        done_ops += 1;
+                        progressed = true;
+                    }
+                    crate::sim::PipelineOp::Backward { mb, .. } => {
+                        let mb = mb as usize;
+                        let is_last = s == pp - 1;
+                        let ready = fwd_done[s][mb] && (is_last || bwd_done[s + 1][mb]);
+                        if !ready {
+                            continue;
+                        }
+                        let st = &self.replicas[r][s];
+                        let computes_loss = st.exes.stage.computes_loss;
+
+                        let (held, res_bytes, inter_bytes) =
+                            residuals.remove(&(s, mb)).expect("forward ran");
+                        let n_res = st.exes.stage.num_residuals as usize;
+
+                        let labels_lit;
+                        let mut dy_owned: Option<xla::Literal> = None;
+                        let mut args: Vec<&xla::Literal> = st.params_lit.iter().collect();
+                        for res in held.iter().take(n_res) {
+                            args.push(res);
+                        }
+                        if computes_loss {
+                            labels_lit = i32_literal(&microbatches[mb].1, &shape)?;
+                            args.push(&labels_lit);
+                        } else {
+                            dy_owned = Some(
+                                bwd_dx
+                                    .remove(&(s + 1, mb))
+                                    .expect("downstream backward ran"),
+                            );
+                            args.push(dy_owned.as_ref().unwrap());
+                        }
+
+                        let mut outs = st.exes.bwd.run(&args)?;
+                        drop(args);
+                        // dy consumed: release its accounting on the producer stage.
+                        if let Some(dy) = dy_owned.take() {
+                            self.replicas[r][s + 1]
+                                .tracker
+                                .free(MemTag::IoBuffers, literal_bytes(&dy));
+                        }
+                        // outs: [dx if stage>0], dparams….
+                        if s > 0 {
+                            let dx = outs.remove(0);
+                            st.tracker.alloc(MemTag::IoBuffers, literal_bytes(&dx));
+                            bwd_dx.insert((s, mb), dx);
+                        }
+                        // Free this microbatch's residuals and boundary input.
+                        st.tracker.free(MemTag::Residuals, res_bytes);
+                        if inter_bytes > 0 {
+                            st.tracker.free(MemTag::Intermediates, inter_bytes);
+                        }
+                        drop(held);
+                        if s > 0 {
+                            if let Some(y) = fwd_out.remove(&(s - 1, mb)) {
+                                self.replicas[r][s - 1]
+                                    .tracker
+                                    .free(MemTag::IoBuffers, literal_bytes(&y));
+                            }
+                        }
+
+                        // Accumulate dparams.
+                        let st = &mut self.replicas[r][s];
+                        for (i, g) in outs.iter().enumerate() {
+                            let gv = g.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                            for (a, b) in st.grad_acc[i].iter_mut().zip(gv.iter()) {
+                                *a += *b;
+                            }
+                        }
+                        // dx consumed by stage s-1's backward later; account
+                        // its release there.
+                        bwd_done[s][mb] = true;
+                        next_op[s] += 1;
+                        done_ops += 1;
+                        progressed = true;
+                    }
+                }
+            }
+            if !progressed {
+                anyhow::bail!("pipeline deadlock: schedule dependency cycle");
+            }
+        }
+
+        // Release any dx consumed by stage 0 (it has no upstream) and leftover
+        // boundary accounting.
+        for ((s, _mb), dx) in bwd_dx.drain() {
+            self.replicas[r][s].tracker.free(MemTag::IoBuffers, literal_bytes(&dx));
+        }
+
+        Ok(losses)
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+}

@@ -1,0 +1,58 @@
+//! # dsmem — Memory analysis & memory-faithful training runtime for DeepSeek-style MoE models
+//!
+//! Reproduction of *"Memory Analysis on the Training Course of DeepSeek Models"*
+//! (Zhang & Su, 2025). The library has three pillars:
+//!
+//! 1. **Analytical memory model** ([`analysis`]) — the paper's contribution: closed-form
+//!    device-level memory accounting for parameters, gradients, optimizer states and
+//!    activations of MLA + MoE transformers under 3D parallelism (DP/TP/PP/EP/ETP),
+//!    DeepSpeed-ZeRO sharding and activation-recomputation policies. Every table and
+//!    figure of the paper is regenerated from these modules (see `DESIGN.md` §4).
+//!
+//! 2. **Cluster memory simulator** ([`sim`]) — an event-driven substrate that replays a
+//!    training step on every device of the parallel grid: a caching-allocator model
+//!    (fragmentation, §6 of the paper), pipeline schedules (GPipe / 1F1B / interleaved)
+//!    and collective-buffer accounting. It extends the paper's per-microbatch analysis
+//!    to schedule-dependent peak memory.
+//!
+//! 3. **Live mini-training runtime** ([`runtime`], [`coordinator`], [`trainer`]) — a real
+//!    pipeline-parallel training loop over AOT-compiled XLA executables (JAX + Pallas at
+//!    build time, PJRT + Rust at run time) whose *measured* tagged memory is validated
+//!    against the analytical model.
+//!
+//! ## Quickstart
+//!
+//! (`no_run`: doctest binaries don't inherit the `-Wl,-rpath` pointing at
+//! `libxla_extension.so`; `examples/quickstart.rs` runs the same code.)
+//!
+//! ```no_run
+//! use dsmem::config::{ModelConfig, ParallelConfig, DtypePolicy, ActivationConfig};
+//! use dsmem::analysis::MemoryModel;
+//!
+//! let model = ModelConfig::deepseek_v3();
+//! let parallel = ParallelConfig::paper_case_study();
+//! let mm = MemoryModel::new(&model, &parallel, DtypePolicy::paper_bf16());
+//!
+//! // Table 6: static parameters per device on the largest PP stage.
+//! let dev = mm.device_static_params();
+//! assert_eq!(dev.total_params(), 6_250_364_928);
+//! ```
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod model;
+pub mod parallel;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod trainer;
+pub mod util;
+
+/// Library version (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// One binary gigabyte (GiB) — the paper's "GB" is binary.
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+/// One binary megabyte (MiB).
+pub const MIB: f64 = 1024.0 * 1024.0;

@@ -1,0 +1,328 @@
+//! `dsmem` — CLI for the DeepSeek training-memory analysis library.
+//!
+//! Subcommands (hand-rolled arg parsing; the build is fully offline):
+//! * `tables`    — regenerate the paper's tables (1..=10) from the model;
+//! * `analyze`   — architecture diagram, activation tapes, device breakdown;
+//! * `sweep`     — (b × AC × ZeRO) feasibility sweep against an HBM budget;
+//! * `simulate`  — run the cluster memory simulator over a schedule;
+//! * `train`     — run the live mini pipeline training loop (needs artifacts).
+
+use dsmem::analysis::{MemoryModel, Overheads, ZeroStrategy};
+use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy, TrainingConfig};
+use dsmem::report::{fmt_bytes, gib, tables::paper_table};
+use dsmem::sim::{ScheduleKind, SimEngine};
+use std::collections::HashMap;
+
+const USAGE: &str = "\
+dsmem — memory analysis of DeepSeek-style MoE training (Zhang & Su 2025 reproduction)
+
+USAGE: dsmem <COMMAND> [OPTIONS]
+
+COMMANDS:
+  tables     Print the paper's tables        [--table N] [--model M] [--format text|markdown|csv]
+  analyze    Diagrams & tapes                [--arch] [--tape mla|moe] [--micro-batch B] [--model M]
+  sweep      Feasibility sweep               [--hbm-gib G] [--model M]
+  simulate   Cluster memory simulation       [--schedule gpipe|1f1b|interleaved] [--microbatches M]
+             [--micro-batch B] [--zero none|os|os_g|os_g_params] [--recompute] [--frag]
+             [--trace FILE.json] [--model M]
+  kvcache    Inference KV-cache analysis     [--tokens N] [--model M]  (MLA vs MHA vs GQA)
+  bubble     Pipeline bubble-vs-memory sweep [--pp P]
+  train      Live mini pipeline training     [--artifacts DIR] [--steps N] [--dp D]
+             [--zero-os] [--verbose-acts] [--schedule gpipe|1f1b] [--microbatches M]
+  help       Show this message
+
+Model presets: deepseek-v3 (default) | deepseek-v2 | mini
+";
+
+/// Tiny flag parser: `--key value` and boolean `--key`.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], boolean: &[&str]) -> anyhow::Result<Self> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                anyhow::bail!("unexpected argument: {a}");
+            };
+            if boolean.contains(&key) {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let v = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
+                flags.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+}
+
+fn case_study(model: &str) -> anyhow::Result<CaseStudy> {
+    let mut cs = CaseStudy::paper();
+    match model {
+        "deepseek-v3" => {}
+        "deepseek-v2" => cs.model = dsmem::config::ModelConfig::deepseek_v2(),
+        "mini" => {
+            cs.model = dsmem::config::ModelConfig::mini();
+            cs.parallel = dsmem::config::ParallelConfig { dp: 1, tp: 1, pp: 2, ep: 1, etp: 1 };
+            cs.activation.sp = 1;
+            cs.activation.seq_len = 128;
+        }
+        other => anyhow::bail!("unknown model preset: {other}"),
+    }
+    cs.validate()?;
+    Ok(cs)
+}
+
+fn zero_of(s: &str) -> anyhow::Result<ZeroStrategy> {
+    Ok(match s {
+        "none" => ZeroStrategy::None,
+        "os" => ZeroStrategy::Os,
+        "os_g" => ZeroStrategy::OsG,
+        "os_g_params" => ZeroStrategy::OsGParams,
+        other => anyhow::bail!("unknown zero strategy: {other}"),
+    })
+}
+
+fn schedule_of(s: &str) -> anyhow::Result<ScheduleKind> {
+    Ok(match s {
+        "gpipe" => ScheduleKind::GPipe,
+        "1f1b" => ScheduleKind::OneFOneB,
+        "interleaved" => ScheduleKind::Interleaved1F1B { chunks: 2 },
+        other => anyhow::bail!("unknown schedule: {other}"),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+
+    match cmd {
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        "tables" => {
+            let a = Args::parse(rest, &[])?;
+            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let nums: Vec<u8> = match a.opt("table") {
+                Some(n) => vec![n.parse()?],
+                None => (1..=10).collect(),
+            };
+            let format = a.get("format", "text");
+            for n in nums {
+                let t = paper_table(&cs, n)?;
+                match format.as_str() {
+                    "markdown" => print!("{}", t.to_markdown()),
+                    "csv" => print!("{}", t.to_csv()),
+                    _ => print!("{}", t.render()),
+                }
+                println!();
+            }
+        }
+        "analyze" => {
+            let a = Args::parse(rest, &["arch"])?;
+            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+            if a.has("arch") {
+                let census = mm.param_table();
+                println!("{}", census.census().architecture_diagram(&cs.model));
+            }
+            if let Some(which) = a.opt("tape") {
+                let act = ActivationConfig {
+                    micro_batch: a.get_u64("micro-batch", 1)?,
+                    ..cs.activation
+                };
+                let rep = mm.activation_report(&act);
+                let t = match which {
+                    "mla" => &rep.mla,
+                    "moe" => &rep.moe,
+                    other => anyhow::bail!("tape must be mla|moe, got {other}"),
+                };
+                println!("{}", t.render(act.recompute));
+                println!("{}", t.render(RecomputePolicy::Full));
+            }
+            if !a.has("arch") && a.opt("tape").is_none() {
+                let d = mm.device_static_params();
+                println!(
+                    "device static params (stage {}): {} ({})",
+                    d.stage,
+                    d.total_params(),
+                    fmt_bytes(d.total_bytes())
+                );
+            }
+        }
+        "sweep" => {
+            let a = Args::parse(rest, &[])?;
+            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let hbm_gib = a.get_f64("hbm-gib", 80.0)?;
+            let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+            let pts =
+                dsmem::analysis::total::sweep(&mm, &cs.activation, Overheads::paper_midpoint());
+            let budget = (hbm_gib * dsmem::GIB) as u64;
+            let mut t = dsmem::report::Table::new(
+                format!("Feasibility sweep vs {hbm_gib} GiB"),
+                &["b", "recompute", "ZeRO", "total", "fits"],
+            );
+            for p in pts {
+                t.row(vec![
+                    p.micro_batch.to_string(),
+                    p.recompute.name().into(),
+                    p.zero.name().into(),
+                    fmt_bytes(p.total_bytes),
+                    if p.total_bytes <= budget { "yes".into() } else { "NO".into() },
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "kvcache" => {
+            let a = Args::parse(rest, &[])?;
+            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let tokens = a.get_u64("tokens", 128 * 1024)?;
+            use dsmem::analysis::inference::{kv_cache, mla_vs_mha_ratio, CacheKind};
+            let mut t = dsmem::report::Table::new(
+                format!("KV cache for {} tokens in flight ({})", tokens, cs.model.name),
+                &["attention", "bytes/token (all layers)", "device total"],
+            );
+            for kind in [
+                CacheKind::Mha,
+                CacheKind::Gqa { groups: 8 },
+                CacheKind::Mla,
+            ] {
+                let rep = kv_cache(&cs.model, kind, tokens, cs.dtypes.weight, cs.parallel.tp);
+                t.row(vec![
+                    kind.name(),
+                    fmt_bytes(rep.bytes_per_token),
+                    fmt_bytes(rep.device_bytes),
+                ]);
+            }
+            print!("{}", t.render());
+            println!(
+                "MLA cache = {:.2}% of MHA ({:.1}% reduction)",
+                100.0 * mla_vs_mha_ratio(&cs.model),
+                100.0 * (1.0 - mla_vs_mha_ratio(&cs.model))
+            );
+        }
+        "bubble" => {
+            let a = Args::parse(rest, &[])?;
+            let pp = a.get_u64("pp", 16)?;
+            let mut t = dsmem::report::Table::new(
+                format!("Bubble vs activation frontier (p={pp})"),
+                &["schedule", "m", "bubble %", "inflight (mb-equiv, stage 0)"],
+            );
+            for pt in dsmem::analysis::bubble::frontier(pp, &[pp, 2 * pp, 4 * pp]) {
+                t.row(vec![
+                    pt.kind.name(),
+                    pt.microbatches.to_string(),
+                    format!("{:.1}", 100.0 * pt.bubble),
+                    format!("{:.1}", pt.inflight_mb_equiv),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "simulate" => {
+            let a = Args::parse(rest, &["recompute", "frag"])?;
+            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+            let mut act = ActivationConfig {
+                micro_batch: a.get_u64("micro-batch", 1)?,
+                ..cs.activation
+            };
+            if a.has("recompute") {
+                act.recompute = RecomputePolicy::Full;
+            }
+            let mut eng = SimEngine::new(&mm, act, zero_of(&a.get("zero", "os_g"))?);
+            eng.simulate_allocator = a.has("frag");
+            eng.record_events = a.opt("trace").is_some();
+            let res = eng.run(
+                schedule_of(&a.get("schedule", "1f1b"))?,
+                a.get_u64("microbatches", 16)?,
+            )?;
+            if let Some(path) = a.opt("trace") {
+                let tls: Vec<(u64, &dsmem::sim::MemoryTimeline)> =
+                    res.stages.iter().map(|s| (s.stage, &s.timeline)).collect();
+                std::fs::write(path, dsmem::sim::trace::to_chrome_trace(&tls))?;
+                println!("wrote chrome trace to {path} (open in chrome://tracing)");
+            }
+            let mut t = dsmem::report::Table::new(
+                format!("Simulated step: {} m={}", res.schedule, res.num_microbatches),
+                &["stage", "inflight", "peak total", "peak act", "frag"],
+            );
+            for st in &res.stages {
+                t.row(vec![
+                    st.stage.to_string(),
+                    st.peak_inflight.to_string(),
+                    format!("{:.2} GiB", gib(st.timeline.total_peak())),
+                    format!(
+                        "{:.2} GiB",
+                        gib(st.timeline.peak(dsmem::sim::MemClass::Activations))
+                    ),
+                    st.alloc_stats
+                        .map(|x| format!("{:.1}%", 100.0 * x.fragmentation()))
+                        .unwrap_or_else(|| "-".into()),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "train" => {
+            let a = Args::parse(rest, &["zero-os", "verbose-acts"])?;
+            let artifacts = a.get("artifacts", "artifacts");
+            let manifest =
+                dsmem::runtime::ArtifactManifest::load(std::path::Path::new(&artifacts))?;
+            let mut cfg = TrainingConfig::mini_default();
+            cfg.artifacts_dir = artifacts.into();
+            cfg.steps = a.get_u64("steps", 50)?;
+            cfg.dp = a.get_u64("dp", 1)?;
+            cfg.num_microbatches = a.get_u64("microbatches", 4)?;
+            cfg.zero_os = a.has("zero-os");
+            cfg.verbose_activations = a.has("verbose-acts");
+            cfg.log_every = a.get_u64("log-every", 10)?;
+            cfg.pp = manifest.pp;
+            cfg.micro_batch = manifest.micro_batch;
+            cfg.seq_len = manifest.seq_len;
+            cfg.schedule = match a.get("schedule", "1f1b").as_str() {
+                "gpipe" => dsmem::config::LiveSchedule::GPipe,
+                _ => dsmem::config::LiveSchedule::OneFOneB,
+            };
+            dsmem::trainer::run_training(manifest, cfg)?;
+        }
+        other => {
+            eprint!("unknown command: {other}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,192 @@
+//! Layer composition: assembles the per-layer components into the full model
+//! (paper Figure 1 + Table 3).
+//!
+//! Layer kinds for DeepSeek-v3:
+//!   * layer 0                 — embedding + MLA + dense FFN + norms
+//!   * layers 1..first_k_dense — MLA + dense FFN + norms
+//!   * layers first_k..l-2     — MLA + MoE (router + experts) + norms
+//!   * layer  l-1              — MoE layer + LM head
+
+use super::{dense, embedding, mla, moe, CountMode};
+use crate::config::ModelConfig;
+
+/// The MLP flavour of a transformer layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    DenseFfn,
+    Moe,
+}
+
+/// Component-wise parameter counts for one transformer layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerParams {
+    pub index: u64,
+    pub kind: LayerKind,
+    /// Embedding params if this layer hosts the input embedding (layer 0).
+    pub embedding: u64,
+    /// LM-head params if this layer hosts the output head (last layer).
+    pub head: u64,
+    pub mla: u64,
+    /// Router ("Gate") params — 0 for dense layers.
+    pub router: u64,
+    /// Expert (MoE) or dense-FFN ("MLP") params.
+    pub mlp: u64,
+    /// RMSNorm params (the paper's "LN" row).
+    pub norms: u64,
+}
+
+impl LayerParams {
+    /// Total parameters of this layer.
+    pub fn total(&self) -> u64 {
+        self.embedding + self.head + self.mla + self.router + self.mlp + self.norms
+    }
+}
+
+/// The whole model, layer by layer.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub layers: Vec<LayerParams>,
+    pub mode: CountMode,
+}
+
+impl ModelParams {
+    /// Build the per-layer parameter census for `m`.
+    pub fn build(m: &ModelConfig, mode: CountMode) -> Self {
+        let l = m.num_hidden_layers;
+        let layers = (0..l)
+            .map(|i| {
+                let kind = if i < m.first_k_dense { LayerKind::DenseFfn } else { LayerKind::Moe };
+                let (router, mlp) = match kind {
+                    LayerKind::DenseFfn => (0, dense::ffn_params_per_layer(m)),
+                    LayerKind::Moe => {
+                        (moe::router_params(m), moe::expert_params_per_layer(m))
+                    }
+                };
+                LayerParams {
+                    index: i,
+                    kind,
+                    embedding: if i == 0 { embedding::embedding_params(m) } else { 0 },
+                    head: if i == l - 1 { embedding::head_params(m) } else { 0 },
+                    mla: mla::params_per_layer(m, mode),
+                    router,
+                    mlp,
+                    norms: dense::norm_params_per_layer(m),
+                }
+            })
+            .collect();
+        Self { layers, mode }
+    }
+
+    /// Total model parameters (the paper's 671B for v3 in `PaperCompat`).
+    pub fn total(&self) -> u64 {
+        self.layers.iter().map(|l| l.total()).sum()
+    }
+
+    /// Number of layers of each kind — Figure 1's census (3 dense + 58 MoE).
+    pub fn census(&self) -> (u64, u64) {
+        let dense = self.layers.iter().filter(|l| l.kind == LayerKind::DenseFfn).count() as u64;
+        (dense, self.layers.len() as u64 - dense)
+    }
+
+    /// ASCII rendering of Figure 1 (architecture overview).
+    pub fn architecture_diagram(&self, m: &ModelConfig) -> String {
+        let (dense, moe_n) = self.census();
+        let mut s = String::new();
+        s.push_str(&format!("DeepSeek architecture: {}\n", m.name));
+        s.push_str(&format!("  {} layers = {} dense-FFN + {} MoE\n", self.layers.len(), dense, moe_n));
+        s.push_str("  ┌───────────────────────────────────┐\n");
+        s.push_str(&format!("  │ Embedding [{} x {}]        │\n", m.vocab_size, m.hidden_size));
+        s.push_str("  ├───────────────────────────────────┤  ┐\n");
+        s.push_str("  │ RMSNorm → MLA → (+) residual      │  │\n");
+        s.push_str(&format!("  │ RMSNorm → dense FFN (h_F={}) │  │ × {}\n", m.intermediate_size, dense));
+        s.push_str("  ├───────────────────────────────────┤  ┘\n");
+        s.push_str("  │ RMSNorm → MLA → (+) residual      │  ┐\n");
+        s.push_str(&format!(
+            "  │ RMSNorm → MoE ({}r+{}s, top-{})    │  │ × {}\n",
+            m.n_routed_experts, m.n_shared_experts, m.num_experts_per_tok, moe_n
+        ));
+        s.push_str("  ├───────────────────────────────────┤  ┘\n");
+        s.push_str(&format!("  │ RMSNorm → Head [{} x {}]   │\n", m.hidden_size, m.vocab_size));
+        s.push_str("  └───────────────────────────────────┘\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v3() -> ModelParams {
+        ModelParams::build(&ModelConfig::deepseek_v3(), CountMode::PaperCompat)
+    }
+
+    #[test]
+    fn layer_census() {
+        let (dense, moe_n) = v3().census();
+        assert_eq!(dense, 3);
+        assert_eq!(moe_n, 58);
+    }
+
+    #[test]
+    fn paper_table3_layer0() {
+        let p = v3();
+        let l0 = &p.layers[0];
+        assert_eq!(l0.embedding, 926_679_040);
+        assert_eq!(l0.mla, 187_107_328);
+        assert_eq!(l0.mlp, 396_361_728);
+        assert_eq!(l0.norms, 16_384);
+        assert_eq!(l0.total(), 1_510_164_480); // "1.5 B"
+    }
+
+    #[test]
+    fn paper_table3_layers_1_2() {
+        let p = v3();
+        for i in [1usize, 2] {
+            assert_eq!(p.layers[i].total(), 583_485_440); // "0.58 B"
+        }
+    }
+
+    #[test]
+    fn paper_table3_moe_layers() {
+        let p = v3();
+        for i in 3..60usize {
+            let l = &p.layers[i];
+            assert_eq!(l.router, 1_835_008);
+            assert_eq!(l.mlp, 11_318_329_344);
+            assert_eq!(l.total(), 11_507_288_064); // "11.5 B"
+        }
+    }
+
+    #[test]
+    fn paper_table3_layer60() {
+        let p = v3();
+        let l = &p.layers[60];
+        assert_eq!(l.head, 926_679_040);
+        assert_eq!(l.total(), 12_433_967_104); // "12.4 B"
+    }
+
+    #[test]
+    fn paper_table3_total_671b() {
+        // Paper total: "671 B", 1250 GB in BF16.
+        let total = v3().total();
+        assert_eq!(total, 671_026_522_112);
+        let gib = (total * 2) as f64 / crate::GIB;
+        assert!((gib - 1249.8).abs() < 0.5, "gib = {gib}");
+    }
+
+    #[test]
+    fn diagram_mentions_census() {
+        let m = ModelConfig::deepseek_v3();
+        let d = v3().architecture_diagram(&m);
+        assert!(d.contains("3 dense-FFN + 58 MoE"));
+    }
+
+    #[test]
+    fn strict_mode_differs_by_lora_norms() {
+        let m = ModelConfig::deepseek_v3();
+        let compat = ModelParams::build(&m, CountMode::PaperCompat).total();
+        let strict = ModelParams::build(&m, CountMode::Strict).total();
+        // 2048 double-counted params per layer × 61 layers.
+        assert_eq!(compat - strict, 2048 * 61);
+    }
+}

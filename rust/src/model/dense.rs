@@ -1,0 +1,52 @@
+//! Dense (non-MoE) FFN and RMSNorm parameter matrices — the first
+//! `first_k_dense` layers of DeepSeek-v3 use a standard SwiGLU FFN of width
+//! `h_F` (Table 3's `3·[7168,18432]`).
+
+use super::{ParamMatrix, TpSplit};
+use crate::config::ModelConfig;
+
+/// The three matrices of the dense SwiGLU FFN.
+pub fn ffn_matrices(m: &ModelConfig) -> Vec<ParamMatrix> {
+    let h = m.hidden_size;
+    let hf = m.intermediate_size;
+    vec![
+        ParamMatrix::new("ffn.gate_proj", vec![h, hf], TpSplit::Column),
+        ParamMatrix::new("ffn.up_proj", vec![h, hf], TpSplit::Column),
+        ParamMatrix::new("ffn.down_proj", vec![hf, h], TpSplit::Row),
+    ]
+}
+
+/// Dense-FFN parameters per layer (`3·h·h_F`; 396,361,728 for v3).
+pub fn ffn_params_per_layer(m: &ModelConfig) -> u64 {
+    super::total_numel(&ffn_matrices(m))
+}
+
+/// RMSNorm parameters per layer, as the paper's "LN" row counts them:
+/// input norm (h) + pre-MLP norm (h) + q-LoRA norm (d_cq) + kv-LoRA norm (d_c)
+/// = `2·7168 + 1536 + 512 = 16,384` for v3.
+pub fn norm_params_per_layer(m: &ModelConfig) -> u64 {
+    2 * m.hidden_size + m.q_lora_rank + m.kv_lora_rank
+}
+
+/// The final model-level RMSNorm before the head (size `h`). The paper's
+/// tables fold this into rounding; we expose it for `Strict` accounting.
+pub fn final_norm_params(m: &ModelConfig) -> u64 {
+    m.hidden_size
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ffn_count() {
+        let m = ModelConfig::deepseek_v3();
+        assert_eq!(ffn_params_per_layer(&m), 396_361_728);
+    }
+
+    #[test]
+    fn paper_ln_count() {
+        let m = ModelConfig::deepseek_v3();
+        assert_eq!(norm_params_per_layer(&m), 16_384);
+    }
+}

@@ -1,0 +1,45 @@
+//! Token embedding and LM head matrices (paper Table 3's `[129280, 7168]`
+//! rows). DeepSeek-v3 does not tie them: the embedding lives in layer 0's
+//! stage and the head in the last layer's stage.
+
+use super::{ParamMatrix, TpSplit};
+use crate::config::ModelConfig;
+
+/// Input token embedding `[v, h]` (vocab-parallel column split in Megatron).
+pub fn embedding_matrix(m: &ModelConfig) -> ParamMatrix {
+    ParamMatrix::new("embed_tokens", vec![m.vocab_size, m.hidden_size], TpSplit::Column)
+}
+
+/// Output head `[h, v]`.
+pub fn head_matrix(m: &ModelConfig) -> ParamMatrix {
+    ParamMatrix::new("lm_head", vec![m.hidden_size, m.vocab_size], TpSplit::Column)
+}
+
+/// Embedding parameter count (`v·h`; 926,679,040 for v3).
+pub fn embedding_params(m: &ModelConfig) -> u64 {
+    embedding_matrix(m).numel()
+}
+
+/// Head parameter count (equal to embedding; 0 if tied).
+pub fn head_params(m: &ModelConfig) -> u64 {
+    if m.tie_word_embeddings { 0 } else { head_matrix(m).numel() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_embedding_counts() {
+        let m = ModelConfig::deepseek_v3();
+        assert_eq!(embedding_params(&m), 926_679_040);
+        assert_eq!(head_params(&m), 926_679_040);
+    }
+
+    #[test]
+    fn tied_head_is_zero() {
+        let mut m = ModelConfig::deepseek_v3();
+        m.tie_word_embeddings = true;
+        assert_eq!(head_params(&m), 0);
+    }
+}

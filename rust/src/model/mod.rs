@@ -1,0 +1,103 @@
+//! Parameter-shape algebra: every weight matrix of the DeepSeek transformer,
+//! component by component (paper Table 2 and the counting rules behind Table 3).
+//!
+//! Each component exposes its full list of [`ParamMatrix`]es so downstream code
+//! (analysis, report, simulator) can partition / render / allocate them without
+//! re-deriving shapes. Counting has two modes ([`CountMode`]): `PaperCompat`
+//! reproduces the paper's tables bit-for-bit (including its benign double-count
+//! of the q/kv LoRA layernorms, see DESIGN.md §5), `Strict` counts each
+//! parameter exactly once.
+
+pub mod blocks;
+pub mod dense;
+pub mod embedding;
+pub mod mla;
+pub mod moe;
+
+pub use blocks::{LayerKind, LayerParams, ModelParams};
+
+
+/// How to resolve the paper's counting quirks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CountMode {
+    /// Match the paper's tables exactly (MLA includes the q/kv LoRA norms *and*
+    /// the LN row counts them again).
+    PaperCompat,
+    /// Count every parameter exactly once (MLA = its 8 matrices; norms live in
+    /// the LN component).
+    Strict,
+}
+
+/// TP partitioning behaviour of one weight matrix under Megatron-style TP.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TpSplit {
+    /// Split along the output dimension (ColumnParallelLinear).
+    Column,
+    /// Split along the input dimension (RowParallelLinear).
+    Row,
+    /// Replicated on every TP rank (NoParallelLinear / norms / router).
+    Replicated,
+}
+
+/// One named parameter matrix with its logical (unpartitioned) shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamMatrix {
+    /// Paper notation, e.g. `W^UQ`, `gate_proj`.
+    pub name: &'static str,
+    /// Logical shape `[out, in]` (or `[n]` for vectors).
+    pub shape: Vec<u64>,
+    /// How Megatron-LM TP partitions it.
+    pub tp_split: TpSplit,
+}
+
+impl ParamMatrix {
+    pub fn new(name: &'static str, shape: Vec<u64>, tp_split: TpSplit) -> Self {
+        Self { name, shape, tp_split }
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> u64 {
+        self.shape.iter().product()
+    }
+
+    /// Element count held by one TP rank of degree `tp`.
+    ///
+    /// Column/Row splits divide evenly (Megatron requires divisibility; our
+    /// configs guarantee it — asserted here).
+    pub fn numel_per_tp_rank(&self, tp: u64) -> u64 {
+        match self.tp_split {
+            TpSplit::Replicated => self.numel(),
+            TpSplit::Column | TpSplit::Row => {
+                debug_assert!(
+                    self.numel() % tp == 0,
+                    "{}: numel {} not divisible by tp {}",
+                    self.name,
+                    self.numel(),
+                    tp
+                );
+                self.numel() / tp
+            }
+        }
+    }
+}
+
+/// Sum of element counts over a slice of matrices.
+pub fn total_numel(mats: &[ParamMatrix]) -> u64 {
+    mats.iter().map(|m| m.numel()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_tp_partition() {
+        let m = ParamMatrix::new("W", vec![16384, 1536], TpSplit::Column);
+        assert_eq!(m.numel(), 25_165_824);
+        assert_eq!(m.numel_per_tp_rank(2), 12_582_912);
+        assert_eq!(m.numel_per_tp_rank(1), 25_165_824);
+
+        let r = ParamMatrix::new("norm", vec![7168], TpSplit::Replicated);
+        assert_eq!(r.numel_per_tp_rank(8), 7168);
+    }
+}

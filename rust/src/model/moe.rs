@@ -1,0 +1,100 @@
+//! MoE linear layer parameter matrices — paper Table 2 and §3.3.
+//!
+//! Each expert (routed or shared) is a SwiGLU MLP with three matrices
+//! (`gate_proj`, `up_proj`, `down_proj`) of `h·h_E` parameters each. The Router
+//! is an `[N, h]` matrix, never TP-partitioned. Under ETP=1, expert matrices
+//! are not TP-partitioned either; under ETP>1 they split like a dense MLP.
+
+use super::{ParamMatrix, TpSplit};
+use crate::config::ModelConfig;
+
+/// The three matrices of a single expert MLP.
+pub fn expert_matrices(m: &ModelConfig) -> Vec<ParamMatrix> {
+    let h = m.hidden_size;
+    let he = m.moe_intermediate_size;
+    vec![
+        ParamMatrix::new("gate_proj", vec![h, he], TpSplit::Column),
+        ParamMatrix::new("up_proj", vec![h, he], TpSplit::Column),
+        ParamMatrix::new("down_proj", vec![he, h], TpSplit::Row),
+    ]
+}
+
+/// The router / gate matrix `[N, h]`.
+pub fn router_matrix(m: &ModelConfig) -> ParamMatrix {
+    ParamMatrix::new("router", vec![m.n_routed_experts, m.hidden_size], TpSplit::Replicated)
+}
+
+/// Parameters of one expert (`3·h·h_E`).
+pub fn params_per_expert(m: &ModelConfig) -> u64 {
+    super::total_numel(&expert_matrices(m))
+}
+
+/// Router parameters per MoE layer (`N·h`; 1,835,008 for v3).
+pub fn router_params(m: &ModelConfig) -> u64 {
+    router_matrix(m).numel()
+}
+
+/// All experts of one MoE layer: `N` routed + `N_s` shared (Table 3 counts
+/// `3·[7168,2048]·257`).
+pub fn expert_params_per_layer(m: &ModelConfig) -> u64 {
+    params_per_expert(m) * (m.n_routed_experts + m.n_shared_experts)
+}
+
+/// Total MoE parameters per layer (router + all experts).
+pub fn params_per_layer(m: &ModelConfig) -> u64 {
+    router_params(m) + expert_params_per_layer(m)
+}
+
+/// Experts resident on one (EP, ETP) rank: routed experts are sharded EP-ways,
+/// shared experts are replicated on every rank (paper §3.3 quotes the Megatron
+/// `moe_layer.py` shared-expert build).
+pub fn experts_per_ep_rank(m: &ModelConfig, ep: u64) -> u64 {
+    m.n_routed_experts / ep + m.n_shared_experts
+}
+
+/// Expert parameters held by one rank under (EP, ETP):
+/// routed/EP experts + replicated shared experts, all divided by ETP.
+pub fn expert_params_per_rank(m: &ModelConfig, ep: u64, etp: u64) -> u64 {
+    experts_per_ep_rank(m, ep) * params_per_expert(m) / etp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table2_shapes() {
+        let m = ModelConfig::deepseek_v3();
+        let mats = expert_matrices(&m);
+        assert_eq!(mats[0].shape, vec![7168, 2048]);
+        assert_eq!(mats[1].shape, vec![7168, 2048]);
+        assert_eq!(mats[2].shape, vec![2048, 7168]);
+        assert_eq!(params_per_expert(&m), 3 * 7168 * 2048);
+    }
+
+    #[test]
+    fn paper_router_and_layer_counts() {
+        let m = ModelConfig::deepseek_v3();
+        assert_eq!(router_params(&m), 1_835_008); // Table 3: Gate
+        assert_eq!(expert_params_per_layer(&m), 11_318_329_344); // Table 3: MoE
+        assert_eq!(params_per_layer(&m), 11_320_164_352);
+    }
+
+    #[test]
+    fn paper_ep8_rank_counts() {
+        let m = ModelConfig::deepseek_v3();
+        // §3.3: 32 routed + 1 shared = 33 experts per rank per layer;
+        // 4 layers → 132 experts → 5,813,305,344 params.
+        assert_eq!(experts_per_ep_rank(&m, 8), 33);
+        assert_eq!(expert_params_per_rank(&m, 8, 1) * 4, 5_813_305_344);
+    }
+
+    #[test]
+    fn etp_divides_expert_params() {
+        let m = ModelConfig::deepseek_v3();
+        assert_eq!(
+            expert_params_per_rank(&m, 8, 2) * 2,
+            expert_params_per_rank(&m, 8, 1)
+        );
+    }
+}

@@ -1,0 +1,127 @@
+//! Device grid: global-rank ↔ parallel-coordinate mapping.
+
+use crate::config::ParallelConfig;
+
+/// Coordinates of one device in the parallel grid.
+///
+/// Megatron-LM rank order: `rank = pp·(DP·TP) + dp·TP + tp` — TP neighbours
+/// are adjacent (same node / NVLink), PP groups span nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceCoord {
+    pub dp: u64,
+    pub tp: u64,
+    pub pp: u64,
+}
+
+impl DeviceCoord {
+    /// Expert-parallel rank of this device: the DP×TP plane of each stage is
+    /// re-factored as EDP × EP × ETP (ETP fastest, matching TP locality).
+    pub fn ep_rank(&self, cfg: &ParallelConfig) -> u64 {
+        let plane_rank = self.dp * cfg.tp + self.tp;
+        (plane_rank / cfg.etp) % cfg.ep
+    }
+
+    /// Expert-data-parallel rank.
+    pub fn edp_rank(&self, cfg: &ParallelConfig) -> u64 {
+        let plane_rank = self.dp * cfg.tp + self.tp;
+        plane_rank / (cfg.ep * cfg.etp)
+    }
+
+    /// Expert-tensor-parallel rank.
+    pub fn etp_rank(&self, cfg: &ParallelConfig) -> u64 {
+        let plane_rank = self.dp * cfg.tp + self.tp;
+        plane_rank % cfg.etp
+    }
+}
+
+/// The full device grid for a parallel configuration.
+#[derive(Debug, Clone)]
+pub struct RankGrid {
+    pub cfg: ParallelConfig,
+}
+
+impl RankGrid {
+    pub fn new(cfg: ParallelConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        Ok(Self { cfg })
+    }
+
+    pub fn world_size(&self) -> u64 {
+        self.cfg.world_size()
+    }
+
+    /// Global rank → coordinates.
+    pub fn coord(&self, rank: u64) -> DeviceCoord {
+        debug_assert!(rank < self.world_size());
+        let plane = self.cfg.dp * self.cfg.tp;
+        DeviceCoord {
+            pp: rank / plane,
+            dp: (rank % plane) / self.cfg.tp,
+            tp: rank % self.cfg.tp,
+        }
+    }
+
+    /// Coordinates → global rank.
+    pub fn rank(&self, c: DeviceCoord) -> u64 {
+        c.pp * self.cfg.dp * self.cfg.tp + c.dp * self.cfg.tp + c.tp
+    }
+
+    /// Iterate over every device coordinate.
+    pub fn iter(&self) -> impl Iterator<Item = DeviceCoord> + '_ {
+        (0..self.world_size()).map(|r| self.coord(r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> RankGrid {
+        RankGrid::new(ParallelConfig::paper_case_study()).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_all_ranks() {
+        let g = grid();
+        for r in 0..g.world_size() {
+            assert_eq!(g.rank(g.coord(r)), r);
+        }
+    }
+
+    #[test]
+    fn paper_world_is_1024() {
+        assert_eq!(grid().world_size(), 1024);
+    }
+
+    #[test]
+    fn tp_is_fastest_dim() {
+        let g = grid();
+        let a = g.coord(0);
+        let b = g.coord(1);
+        assert_eq!((a.dp, a.pp), (b.dp, b.pp));
+        assert_eq!(b.tp, 1);
+    }
+
+    #[test]
+    fn ep_covers_plane() {
+        // Within one PP stage, EP ranks 0..8 each appear EDP×ETP = 8 times.
+        let g = grid();
+        let mut counts = vec![0u64; g.cfg.ep as usize];
+        for c in g.iter().filter(|c| c.pp == 0) {
+            counts[c.ep_rank(&g.cfg) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 8), "{counts:?}");
+    }
+
+    #[test]
+    fn edp_times_ep_etp_equals_plane() {
+        let g = grid();
+        for c in g.iter().filter(|c| c.pp == 0) {
+            let plane_rank = c.dp * g.cfg.tp + c.tp;
+            let rebuilt = c.edp_rank(&g.cfg) * g.cfg.ep * g.cfg.etp
+                + c.ep_rank(&g.cfg) * g.cfg.etp
+                + c.etp_rank(&g.cfg);
+            assert_eq!(plane_rank, rebuilt);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Communication-group construction: the sets of devices that participate in
+//! each collective (DP all-reduce, TP all-reduce/all-gather, PP point-to-point,
+//! EP all-to-all, EDP all-reduce for expert gradients).
+
+use super::grid::{DeviceCoord, RankGrid};
+
+/// The kind of parallel group a collective runs over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GroupKind {
+    /// Data-parallel replicas of the same (tp, pp) shard — gradient all-reduce.
+    Dp,
+    /// Tensor-parallel ranks of the same (dp, pp) — activation all-reduce / SP gathers.
+    Tp,
+    /// Pipeline stages of the same (dp, tp) — send/recv chain.
+    Pp,
+    /// Expert-parallel ranks within a stage — token all-to-all dispatch/combine.
+    Ep,
+    /// Expert-data-parallel replicas — expert-gradient all-reduce.
+    Edp,
+}
+
+/// One concrete communication group (sorted member ranks).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CommGroup {
+    pub kind: GroupKind,
+    pub ranks: Vec<u64>,
+}
+
+impl CommGroup {
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+}
+
+/// Build every group of a kind for the grid.
+pub fn build_groups(grid: &RankGrid, kind: GroupKind) -> Vec<CommGroup> {
+    use std::collections::BTreeMap;
+    let cfg = &grid.cfg;
+    let mut buckets: BTreeMap<(u64, u64, u64), Vec<u64>> = BTreeMap::new();
+    for c in grid.iter() {
+        // Key = the coordinates held constant within the group.
+        let key = match kind {
+            GroupKind::Dp => (c.tp, c.pp, 0),
+            GroupKind::Tp => (c.dp, c.pp, 0),
+            GroupKind::Pp => (c.dp, c.tp, 0),
+            GroupKind::Ep => (c.pp, c.edp_rank(cfg), c.etp_rank(cfg)),
+            GroupKind::Edp => (c.pp, c.ep_rank(cfg), c.etp_rank(cfg)),
+        };
+        buckets.entry(key).or_default().push(grid.rank(c));
+    }
+    buckets
+        .into_values()
+        .map(|mut ranks| {
+            ranks.sort_unstable();
+            CommGroup { kind, ranks }
+        })
+        .collect()
+}
+
+/// The group of `kind` containing `coord`.
+pub fn group_of(grid: &RankGrid, kind: GroupKind, coord: DeviceCoord) -> CommGroup {
+    let rank = grid.rank(coord);
+    build_groups(grid, kind)
+        .into_iter()
+        .find(|g| g.ranks.contains(&rank))
+        .expect("every rank belongs to exactly one group per kind")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelConfig;
+
+    fn grid() -> RankGrid {
+        RankGrid::new(ParallelConfig::paper_case_study()).unwrap()
+    }
+
+    #[test]
+    fn group_sizes_match_degrees() {
+        let g = grid();
+        for (kind, size, count) in [
+            (GroupKind::Dp, 32usize, 32usize),  // TP2 × PP16 groups
+            (GroupKind::Tp, 2, 512),            // DP32 × PP16
+            (GroupKind::Pp, 16, 64),            // DP32 × TP2
+            (GroupKind::Ep, 8, 128),            // PP16 × EDP8 × ETP1
+            (GroupKind::Edp, 8, 128),           // PP16 × EP8 × ETP1
+        ] {
+            let groups = build_groups(&g, kind);
+            assert_eq!(groups.len(), count, "{kind:?} count");
+            assert!(groups.iter().all(|gr| gr.size() == size), "{kind:?} size");
+        }
+    }
+
+    #[test]
+    fn groups_partition_the_world() {
+        let g = grid();
+        for kind in [GroupKind::Dp, GroupKind::Tp, GroupKind::Pp, GroupKind::Ep, GroupKind::Edp] {
+            let mut seen = vec![false; g.world_size() as usize];
+            for gr in build_groups(&g, kind) {
+                for r in gr.ranks {
+                    assert!(!seen[r as usize], "{kind:?}: rank {r} in two groups");
+                    seen[r as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{kind:?}: uncovered ranks");
+        }
+    }
+
+    #[test]
+    fn group_of_contains_coord() {
+        let g = grid();
+        let c = g.coord(777);
+        let gr = group_of(&g, GroupKind::Dp, c);
+        assert!(gr.ranks.contains(&777));
+        assert_eq!(gr.size(), 32);
+    }
+}

@@ -1,0 +1,13 @@
+//! Rank-grid topology: maps global device ranks to (DP, TP, PP, EP, EDP)
+//! coordinates and builds communication groups, Megatron-LM order
+//! (tp fastest, then dp, then pp).
+//!
+//! This substrate backs both the cluster simulator (every simulated device is
+//! a grid coordinate) and the live coordinator (which runs a small grid
+//! in-process).
+
+mod grid;
+mod groups;
+
+pub use grid::{DeviceCoord, RankGrid};
+pub use groups::{build_groups, group_of, CommGroup, GroupKind};

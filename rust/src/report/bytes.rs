@@ -1,0 +1,70 @@
+//! Byte / count formatting helpers. The paper's GB/MB are binary (GiB/MiB).
+
+/// Bytes → GiB.
+pub fn gib(bytes: u64) -> f64 {
+    bytes as f64 / crate::GIB
+}
+
+/// Bytes → MiB.
+pub fn mib(bytes: u64) -> f64 {
+    bytes as f64 / crate::MIB
+}
+
+/// Human-readable bytes with the paper's binary units.
+pub fn fmt_bytes(bytes: u64) -> String {
+    if bytes >= crate::GIB as u64 {
+        format!("{:.2} GB", gib(bytes))
+    } else if bytes >= crate::MIB as u64 {
+        format!("{:.1} MB", mib(bytes))
+    } else if bytes >= 1024 {
+        format!("{:.1} KB", bytes as f64 / 1024.0)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Parameter counts in the paper's style ("11.5 B", "0.58 B", "1,835,008").
+pub fn fmt_count(n: u64) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.2} B", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.1} M", n as f64 / 1e6)
+    } else {
+        group_digits(n)
+    }
+}
+
+/// `1835008` → `1,835,008`.
+pub fn group_digits(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouping() {
+        assert_eq!(group_digits(0), "0");
+        assert_eq!(group_digits(999), "999");
+        assert_eq!(group_digits(1000), "1,000");
+        assert_eq!(group_digits(1_835_008), "1,835,008");
+        assert_eq!(group_digits(6_250_364_928), "6,250,364,928");
+    }
+
+    #[test]
+    fn units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KB");
+        assert_eq!(fmt_bytes(12_500_729_856), "11.64 GB"); // Table 6 total
+        assert_eq!(fmt_count(11_507_288_064), "11.51 B");
+    }
+}

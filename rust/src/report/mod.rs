@@ -1,0 +1,9 @@
+//! Table rendering: regenerates the paper's tables as formatted text / CSV /
+//! markdown. Used by the `dsmem tables` CLI and the benches.
+
+mod bytes;
+mod table;
+pub mod tables;
+
+pub use bytes::{fmt_bytes, fmt_count, gib, mib};
+pub use table::Table;

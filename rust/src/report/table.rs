@@ -1,0 +1,113 @@
+//! Minimal column-aligned table printer with markdown/CSV export.
+
+/// A simple text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        debug_assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Aligned plain-text rendering.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<width$} | ", c, width = w[i]));
+            }
+            s.trim_end().to_string() + "\n"
+        };
+        out.push_str(&line(&self.headers, &w));
+        out.push_str(&format!(
+            "|{}\n",
+            w.iter().map(|x| "-".repeat(x + 2) + "|").collect::<String>()
+        ));
+        for r in &self.rows {
+            out.push_str(&line(r, &w));
+        }
+        out
+    }
+
+    /// GitHub-flavoured markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!("|{}\n", "---|".repeat(self.headers.len())));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+
+    /// CSV export.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",") + "\n";
+        for r in &self.rows {
+            out.push_str(&(r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",") + "\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Table {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "hello, world".into()]);
+        t
+    }
+
+    #[test]
+    fn render_aligns() {
+        let s = t().render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("| a | b"));
+    }
+
+    #[test]
+    fn markdown_has_separator() {
+        assert!(t().to_markdown().contains("|---|---|"));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        assert!(t().to_csv().contains("\"hello, world\""));
+    }
+}

@@ -1,0 +1,323 @@
+//! Paper-table generators: `paper_table(n)` renders Table *n* of the paper
+//! from the analytical model (inputs 1/2/5/7/9 echo configs; outputs
+//! 3/4/6/8/10 are computed).
+
+use super::bytes::{fmt_bytes, fmt_count, gib, group_digits, mib};
+use super::Table;
+use crate::analysis::{MemoryModel, ZeroStrategy};
+use crate::config::{ActivationConfig, CaseStudy, RecomputePolicy};
+use crate::model::{mla, moe};
+
+/// Render paper Table `n` (1..=10) for a case study.
+pub fn paper_table(cs: &CaseStudy, n: u8) -> anyhow::Result<Table> {
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+    Ok(match n {
+        1 => table1(cs),
+        2 => table2(cs),
+        3 => table3(&mm),
+        4 => table4(&mm),
+        5 => table5(cs),
+        6 => table6(&mm),
+        7 => table7(cs),
+        8 => table8(&mm),
+        9 => table9(cs),
+        10 => table10(&mm, &cs.activation),
+        _ => anyhow::bail!("paper has tables 1..=10, got {n}"),
+    })
+}
+
+fn table1(cs: &CaseStudy) -> Table {
+    let m = &cs.model;
+    let mut t = Table::new(
+        format!("Table 1: Structure configuration of {}", m.name),
+        &["Notation", "Representation", "Value"],
+    );
+    for (nota, repr, v) in [
+        ("h", "hidden dimension", m.hidden_size),
+        ("h_E", "hidden dimension of MoE's MLP", m.moe_intermediate_size),
+        ("h_F", "hidden dimension of non-MoE's MLP", m.intermediate_size),
+        ("d_h", "dimension per head", m.qk_nope_head_dim),
+        ("n_h", "No. of attention heads", m.num_attention_heads),
+        ("d_cq", "query compression dimension", m.q_lora_rank),
+        ("d_hr", "per-head dimension of q/k for rope", m.qk_rope_head_dim),
+        ("d_c", "key-value compression dimension", m.kv_lora_rank),
+        ("N", "No. of routed experts in MoE layer", m.n_routed_experts),
+        ("N_s", "No. of shared experts in MoE layer", m.n_shared_experts),
+        ("l", "No. of transformer layers", m.num_hidden_layers),
+        ("v", "vocabulary size", m.vocab_size),
+    ] {
+        t.row(vec![nota.into(), repr.into(), v.to_string()]);
+    }
+    t
+}
+
+fn table2(cs: &CaseStudy) -> Table {
+    let mut t = Table::new(
+        "Table 2: Shape of parameter matrices of MoE transformer block",
+        &["Component", "Matrix", "Shape"],
+    );
+    for mat in mla::matrices(&cs.model) {
+        t.row(vec!["MLA".into(), mat.name.into(), format!("{:?}", mat.shape)]);
+    }
+    for mat in moe::expert_matrices(&cs.model) {
+        t.row(vec!["MoE".into(), mat.name.into(), format!("{:?}", mat.shape)]);
+    }
+    t
+}
+
+fn table3(mm: &MemoryModel) -> Table {
+    let pt = mm.param_table();
+    let mut t = Table::new(
+        "Table 3: Model parameter counting at layer-level",
+        &["Layers", "No. Params/Layer", "Per Layer", "MB", "GB"],
+    );
+    for (i, row) in pt.rows.iter().enumerate() {
+        let span = if row.first_layer == row.last_layer {
+            format!("Layer {}", row.first_layer)
+        } else {
+            format!("Layers {} - {}", row.first_layer, row.last_layer)
+        };
+        let bytes = pt.row_layer_bytes(i);
+        t.row(vec![
+            span,
+            group_digits(row.params_per_layer),
+            fmt_count(row.params_per_layer),
+            format!("{:.0}", mib(bytes)),
+            format!("{:.2}", gib(bytes)),
+        ]);
+    }
+    t.row(vec![
+        "Total".into(),
+        group_digits(pt.total_params()),
+        fmt_count(pt.total_params()),
+        format!("{:.0}", mib(pt.total_bytes())),
+        format!("{:.0}", gib(pt.total_bytes())),
+    ]);
+    t
+}
+
+fn table4(mm: &MemoryModel) -> Table {
+    let plan = mm.stage_plan();
+    let mut t = Table::new(
+        format!("Table 4: Per-stage memory of model parameters under PP{}", mm.parallel.pp),
+        &["Stage", "No. Layers", "No. Params", "Size in GB"],
+    );
+    // Group identical stages like the paper ("Stages 1-14").
+    let mut i = 0usize;
+    while i < plan.stages.len() {
+        let mut j = i;
+        while j + 1 < plan.stages.len() && plan.stages[j + 1].params == plan.stages[i].params {
+            j += 1;
+        }
+        let name = if i == j {
+            format!("Stage {i}")
+        } else {
+            format!("Stages {i}-{j}")
+        };
+        let s = &plan.stages[i];
+        t.row(vec![
+            name,
+            s.num_layers.to_string(),
+            fmt_count(s.params),
+            format!("{:.0}", gib(mm.stage_plan().stage_bytes(i, mm.dtypes.weight))),
+        ]);
+        i = j + 1;
+    }
+    t.row(vec![
+        "Sum".into(),
+        mm.model.num_hidden_layers.to_string(),
+        fmt_count(plan.total_params()),
+        format!("{:.0}", gib(plan.total_params() * mm.dtypes.weight.bytes() as u64)),
+    ]);
+    t
+}
+
+fn table5(cs: &CaseStudy) -> Table {
+    let p = &cs.parallel;
+    let mut t = Table::new(
+        "Table 5: Parallel configuration used in case study",
+        &["Notation", "Short For", "Value"],
+    );
+    for (n, s, v) in [
+        ("DP", "data parallelism", p.dp),
+        ("TP", "tensor parallelism", p.tp),
+        ("PP", "pipeline parallelism", p.pp),
+        ("EP", "expert parallelism", p.ep),
+        ("ETP", "expert tensor parallelism", p.etp),
+        ("EDP", "expert data parallelism", p.edp()),
+    ] {
+        t.row(vec![n.into(), s.into(), v.to_string()]);
+    }
+    t
+}
+
+fn table6(mm: &MemoryModel) -> Table {
+    let d = mm.device_static_params();
+    let mut t = Table::new(
+        "Table 6: Model Parameters Per Device: Summary",
+        &["Modules", "No. Params Per Device", "Bytes Per Device", "MB", "GB"],
+    );
+    let wb = mm.dtypes.weight.bytes() as u64;
+    let mut push = |name: &str, params: u64| {
+        t.row(vec![
+            name.into(),
+            group_digits(params),
+            group_digits(params * wb),
+            format!("{:.1}", mib(params * wb)),
+            format!("{:.2}", gib(params * wb)),
+        ]);
+    };
+    push("RMSNorm 1&2", d.norms);
+    push("MLA", d.mla);
+    if d.embedding > 0 {
+        push("Embedding", d.embedding);
+    }
+    if d.head > 0 {
+        push("Head", d.head);
+    }
+    if d.dense_ffn > 0 {
+        push("Dense FFN", d.dense_ffn);
+    }
+    push("Non-MoE Part", d.non_moe_params());
+    push("MoE", d.moe_params());
+    push("Total", d.total_params());
+    t
+}
+
+fn table7(cs: &CaseStudy) -> Table {
+    let d = &cs.dtypes;
+    let mut t = Table::new(
+        "Table 7: Data type used in the case study",
+        &["Data", "Type", "Bytes Per Param/Value"],
+    );
+    for (n, ty) in [
+        ("Weights", d.weight),
+        ("Activation", d.activation),
+        ("Gradients", d.gradient),
+        ("Optimizer - copy of parameters", d.master_copy),
+        ("Optimizer - momentum", d.momentum),
+        ("Optimizer - variance", d.variance),
+    ] {
+        t.row(vec![n.into(), ty.name().into(), ty.bytes().to_string()]);
+    }
+    t
+}
+
+fn table8(mm: &MemoryModel) -> Table {
+    let zr = mm.zero_report();
+    let mut t = Table::new(
+        "Table 8: Memory consumption with different ZeRO optimizations",
+        &["ZeRO", "Static Parameters", "Gradients", "Optimizer", "P+G+O"],
+    );
+    for row in &zr.rows {
+        t.row(vec![
+            row.strategy.name().into(),
+            format!("{:.2} GB", gib(row.params_bytes)),
+            format!("{:.2} GB", gib(row.gradient_bytes)),
+            format!("{:.2} GB", gib(row.optimizer_bytes)),
+            format!("{:.2} GB", gib(row.total_bytes())),
+        ]);
+    }
+    t
+}
+
+fn table9(cs: &CaseStudy) -> Table {
+    let a = &cs.activation;
+    let m = &cs.model;
+    let mut t = Table::new(
+        "Table 9: Configurations of activation analysis",
+        &["Notation", "Representation", "Value"],
+    );
+    t.row(vec!["b".into(), "micro batch size".into(), a.micro_batch.to_string()]);
+    t.row(vec!["s".into(), "sequence length".into(), a.seq_len.to_string()]);
+    t.row(vec!["N_r".into(), "routed experts per token".into(), m.num_experts_per_tok.to_string()]);
+    t.row(vec!["N".into(), "experts per MoE layer".into(), m.n_routed_experts.to_string()]);
+    t.row(vec![
+        "E_token".into(),
+        "avg tokens per expert".into(),
+        format!("bs*N_r/N = {}", a.tokens() * m.num_experts_per_tok / m.n_routed_experts),
+    ]);
+    t.row(vec!["SP".into(), "sequence parallelism".into(), a.sp.to_string()]);
+    t.row(vec!["CP".into(), "context parallelism".into(), a.cp.to_string()]);
+    t.row(vec!["AC".into(), "activation recomputation".into(), a.recompute.name().into()]);
+    t
+}
+
+fn table10(mm: &MemoryModel, base: &ActivationConfig) -> Table {
+    let mut t = Table::new(
+        "Table 10: Activation memory per device",
+        &["b", "Components", "AC None", "AC Full"],
+    );
+    for b in [1u64, 2, 4] {
+        let a = ActivationConfig { micro_batch: b, ..*base };
+        let rep = mm.activation_report(&a);
+        for (name, none, full) in [
+            (
+                "MLA",
+                rep.mla_stage_bytes(RecomputePolicy::None),
+                rep.mla_stage_bytes(RecomputePolicy::Full),
+            ),
+            (
+                "MoE",
+                rep.moe_stage_bytes(RecomputePolicy::None),
+                rep.moe_stage_bytes(RecomputePolicy::Full),
+            ),
+            (
+                "Total",
+                rep.total_stage_bytes(RecomputePolicy::None),
+                rep.total_stage_bytes(RecomputePolicy::Full),
+            ),
+        ] {
+            t.row(vec![b.to_string(), name.into(), fmt_bytes(none), fmt_bytes(full)]);
+        }
+    }
+    t
+}
+
+/// ZeRO strategies in table order (for external callers).
+pub fn zero_order() -> [ZeroStrategy; 4] {
+    ZeroStrategy::ALL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_render() {
+        let cs = CaseStudy::paper();
+        for n in 1..=10u8 {
+            let t = paper_table(&cs, n).unwrap();
+            let s = t.render();
+            assert!(s.contains("Table"), "table {n}");
+            assert!(!t.rows.is_empty(), "table {n} empty");
+        }
+        assert!(paper_table(&cs, 11).is_err());
+    }
+
+    #[test]
+    fn table3_contains_paper_numbers() {
+        let cs = CaseStudy::paper();
+        let s = paper_table(&cs, 3).unwrap().render();
+        assert!(s.contains("11,507,288,064"));
+        assert!(s.contains("671"));
+    }
+
+    #[test]
+    fn table6_contains_paper_numbers() {
+        let cs = CaseStudy::paper();
+        let s = paper_table(&cs, 6).unwrap().render();
+        assert!(s.contains("6,250,364,928"));
+        assert!(s.contains("12,500,729,856"));
+    }
+
+    #[test]
+    fn table8_contains_paper_numbers() {
+        let cs = CaseStudy::paper();
+        let s = paper_table(&cs, 8).unwrap().render();
+        assert!(s.contains("11.64 GB"));
+        assert!(s.contains("5.52 GB"));
+        assert!(s.contains("2.76 GB"));
+        assert!(s.contains("1.38 GB"));
+    }
+}

@@ -1,0 +1,174 @@
+//! PJRT execution: load HLO-text artifacts, compile once on the CPU client,
+//! execute with `xla::Literal` arguments. Adapts the pattern from
+//! `/opt/xla-example/load_hlo`.
+
+use super::manifest::{ArtifactManifest, BufDtype, ExecutableSpec, StageSpec};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A compiled executable plus its manifest spec.
+pub struct LoadedExecutable {
+    pub spec: ExecutableSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExecutable {
+    /// Execute with positional literal arguments (borrowed — no copies);
+    /// returns the flattened output tuple.
+    pub fn run(&self, args: &[&xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        if args.len() != self.spec.inputs.len() {
+            anyhow::bail!(
+                "{}: got {} args, expected {}",
+                self.spec.name,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("{}: execute: {e:?}", self.spec.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: to_literal: {e:?}", self.spec.name))?;
+        // aot.py lowers with return_tuple=True → always a tuple.
+        let outs = literal
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("{}: to_tuple: {e:?}", self.spec.name))?;
+        if outs.len() != self.spec.outputs.len() {
+            anyhow::bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// The per-stage executable triple (+ optional verbose fwd).
+pub struct StageExecutables {
+    pub stage: StageSpec,
+    pub fwd: Arc<LoadedExecutable>,
+    pub fwd_verbose: Option<Arc<LoadedExecutable>>,
+    pub bwd: Arc<LoadedExecutable>,
+    pub opt: Arc<LoadedExecutable>,
+}
+
+/// The runtime: a PJRT CPU client plus every compiled artifact.
+pub struct Runtime {
+    pub manifest: ArtifactManifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, Arc<LoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create the CPU client and compile every executable in the manifest.
+    pub fn load(manifest: ArtifactManifest) -> anyhow::Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let mut rt = Self { manifest, client, cache: HashMap::new() };
+        for spec in rt.manifest.executables.clone() {
+            rt.compile(&spec)?;
+        }
+        Ok(rt)
+    }
+
+    fn compile(&mut self, spec: &ExecutableSpec) -> anyhow::Result<()> {
+        let path = self.manifest.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("{}: parse HLO: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("{}: compile: {e:?}", spec.name))?;
+        self.cache
+            .insert(spec.name.clone(), Arc::new(LoadedExecutable { spec: spec.clone(), exe }));
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<Arc<LoadedExecutable>> {
+        self.cache
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("executable {name} not loaded"))
+    }
+
+    /// Assemble the executables of one pipeline stage.
+    pub fn stage(&self, stage: usize) -> anyhow::Result<StageExecutables> {
+        let spec = self.manifest.stages[stage].clone();
+        Ok(StageExecutables {
+            fwd: self.get(&spec.fwd)?,
+            fwd_verbose: match &spec.fwd_verbose {
+                Some(n) => Some(self.get(n)?),
+                None => None,
+            },
+            bwd: self.get(&spec.bwd)?,
+            opt: self.get(&spec.opt)?,
+            stage: spec,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Bytes held by a literal.
+pub fn literal_bytes(l: &xla::Literal) -> u64 {
+    l.size_bytes() as u64
+}
+
+/// Build an f32 literal of a given shape from a flat vec.
+pub fn f32_literal(data: &[f32], shape: &[u64]) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let numel: u64 = shape.iter().product();
+    if data.len() as u64 != numel {
+        anyhow::bail!("shape {shape:?} wants {numel} elems, got {}", data.len());
+    }
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of a given shape.
+pub fn i32_literal(data: &[i32], shape: &[u64]) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// A zero-filled literal matching a manifest buffer spec.
+pub fn zeros_like(spec: &super::manifest::BufferSpec) -> anyhow::Result<xla::Literal> {
+    match spec.dtype {
+        BufDtype::F32 => f32_literal(&vec![0f32; spec.numel() as usize], &spec.shape),
+        BufDtype::I32 => i32_literal(&vec![0i32; spec.numel() as usize], &spec.shape),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(literal_bytes(&l), 16);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let l = f32_literal(&[7.5], &[]).unwrap_or_else(|_| xla::Literal::scalar(7.5f32));
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+}

@@ -1,0 +1,446 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json` + `*.hlo.txt`) and the Rust runtime.
+//!
+//! Calling conventions (flat tuples, `return_tuple=True`):
+//!
+//! * `stage{i}_fwd`:  `params… , x [, labels]` → `y|loss , res…`
+//!   (`res` = per-layer block inputs; with `--verbose-acts` an additional
+//!   `stage{i}_fwd_verbose` returns `…, intermediates…` so the coordinator can
+//!   hold the full AC-None tape between fwd and bwd);
+//! * `stage{i}_bwd`:  `params… , res… , dy [, labels]` → `dx , dparams…`
+//!   (stage 0 omits `dx`; the last stage omits `dy` and seeds ∂loss = 1);
+//! * `stage{i}_opt`:  `params… , grads… , m… , v… , step` → `params'… , m'… , v'…`.
+
+use std::path::{Path, PathBuf};
+
+/// Dtype names as emitted by aot.py (numpy-style).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufDtype {
+    F32,
+    I32,
+}
+
+impl BufDtype {
+    pub fn bytes(self) -> u64 {
+        4
+    }
+}
+
+/// One input or output buffer of an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufferSpec {
+    pub name: String,
+    pub shape: Vec<u64>,
+    pub dtype: BufDtype,
+    /// Semantic role: `param`, `input`, `labels`, `residual`, `intermediate`,
+    /// `output`, `loss`, `grad`, `dx`, `dy`, `opt_m`, `opt_v`, `step`.
+    pub role: String,
+}
+
+impl BufferSpec {
+    pub fn numel(&self) -> u64 {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.numel() * self.dtype.bytes()
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Debug, Clone)]
+pub struct ExecutableSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub hlo: String,
+    pub inputs: Vec<BufferSpec>,
+    pub outputs: Vec<BufferSpec>,
+}
+
+impl ExecutableSpec {
+    pub fn input_bytes(&self) -> u64 {
+        self.inputs.iter().map(|b| b.bytes()).sum()
+    }
+
+    pub fn output_bytes(&self) -> u64 {
+        self.outputs.iter().map(|b| b.bytes()).sum()
+    }
+}
+
+/// Per-stage executable wiring.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub stage: u64,
+    /// Layer indices hosted by this stage.
+    pub first_layer: u64,
+    pub num_layers: u64,
+    /// Number of parameter tensors.
+    pub num_params: u64,
+    /// Number of residual tensors carried fwd→bwd.
+    pub num_residuals: u64,
+    /// Number of extra intermediates returned by the verbose fwd (0 if absent).
+    pub num_intermediates: u64,
+    pub fwd: String,
+    /// Verbose (AC-None) forward, if compiled.
+    pub fwd_verbose: Option<String>,
+    pub bwd: String,
+    pub opt: String,
+    /// Raw little-endian f32 files with the initial value of each param
+    /// tensor (relative to the manifest dir), in param order.
+    pub init_params: Vec<String>,
+    /// Whether this stage consumes token ids (stage 0) vs hidden states.
+    pub takes_tokens: bool,
+    /// Whether this stage computes the loss (last stage).
+    pub computes_loss: bool,
+}
+
+/// The whole artifact bundle.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    /// Model name (must match a `ModelConfig` preset, e.g. `deepseek-mini`).
+    pub model_name: String,
+    pub pp: u64,
+    pub micro_batch: u64,
+    pub seq_len: u64,
+    pub vocab_size: u64,
+    pub hidden_size: u64,
+    /// Total parameter count across stages (for validation).
+    pub total_params: u64,
+    pub executables: Vec<ExecutableSpec>,
+    pub stages: Vec<StageSpec>,
+    /// Directory the manifest was loaded from (not serialized).
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {} (run `make artifacts`?): {e}", path.display()))?;
+        let mut m = Self::from_json(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        m.dir = dir.to_path_buf();
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Parse the manifest from JSON text.
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        use crate::util::Json;
+        let v = Json::parse(text)?;
+
+        let buffer = |b: &Json| -> anyhow::Result<BufferSpec> {
+            Ok(BufferSpec {
+                name: b.get("name")?.as_str()?.to_string(),
+                shape: b
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_u64())
+                    .collect::<anyhow::Result<_>>()?,
+                dtype: match b.get("dtype")?.as_str()? {
+                    "f32" => BufDtype::F32,
+                    "i32" => BufDtype::I32,
+                    other => anyhow::bail!("unsupported dtype {other}"),
+                },
+                role: b.get("role")?.as_str()?.to_string(),
+            })
+        };
+
+        let mut executables = Vec::new();
+        for e in v.get("executables")?.as_arr()? {
+            executables.push(ExecutableSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                hlo: e.get("hlo")?.as_str()?.to_string(),
+                inputs: e
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(&buffer)
+                    .collect::<anyhow::Result<_>>()?,
+                outputs: e
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(&buffer)
+                    .collect::<anyhow::Result<_>>()?,
+            });
+        }
+
+        let mut stages = Vec::new();
+        for s in v.get("stages")?.as_arr()? {
+            stages.push(StageSpec {
+                stage: s.get("stage")?.as_u64()?,
+                first_layer: s.get("first_layer")?.as_u64()?,
+                num_layers: s.get("num_layers")?.as_u64()?,
+                num_params: s.get("num_params")?.as_u64()?,
+                num_residuals: s.get("num_residuals")?.as_u64()?,
+                num_intermediates: s.get("num_intermediates")?.as_u64()?,
+                fwd: s.get("fwd")?.as_str()?.to_string(),
+                fwd_verbose: match s.opt("fwd_verbose") {
+                    Some(j) => Some(j.as_str()?.to_string()),
+                    None => None,
+                },
+                bwd: s.get("bwd")?.as_str()?.to_string(),
+                opt: s.get("opt")?.as_str()?.to_string(),
+                init_params: s
+                    .get("init_params")?
+                    .as_arr()?
+                    .iter()
+                    .map(|f| Ok(f.as_str()?.to_string()))
+                    .collect::<anyhow::Result<_>>()?,
+                takes_tokens: s.get("takes_tokens")?.as_bool()?,
+                computes_loss: s.get("computes_loss")?.as_bool()?,
+            });
+        }
+
+        Ok(Self {
+            model_name: v.get("model_name")?.as_str()?.to_string(),
+            pp: v.get("pp")?.as_u64()?,
+            micro_batch: v.get("micro_batch")?.as_u64()?,
+            seq_len: v.get("seq_len")?.as_u64()?,
+            vocab_size: v.get("vocab_size")?.as_u64()?,
+            hidden_size: v.get("hidden_size")?.as_u64()?,
+            total_params: v.get("total_params")?.as_u64()?,
+            executables,
+            stages,
+            dir: PathBuf::new(),
+        })
+    }
+
+    pub fn executable(&self, name: &str) -> anyhow::Result<&ExecutableSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow::anyhow!("executable {name} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, exec: &ExecutableSpec) -> PathBuf {
+        self.dir.join(&exec.hlo)
+    }
+
+    /// Structural validation of the calling conventions.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.stages.len() != self.pp as usize {
+            anyhow::bail!("manifest has {} stages, pp={}", self.stages.len(), self.pp);
+        }
+        for st in &self.stages {
+            let fwd = self.executable(&st.fwd)?;
+            let bwd = self.executable(&st.bwd)?;
+            let opt = self.executable(&st.opt)?;
+            let p = st.num_params as usize;
+            let r = st.num_residuals as usize;
+
+            // fwd: params + x (+ labels) → y/loss + res.
+            let want_fwd_in = p + 1 + usize::from(st.computes_loss);
+            if fwd.inputs.len() != want_fwd_in {
+                anyhow::bail!("{}: {} inputs, want {want_fwd_in}", fwd.name, fwd.inputs.len());
+            }
+            if fwd.outputs.len() != 1 + r {
+                anyhow::bail!("{}: {} outputs, want {}", fwd.name, fwd.outputs.len(), 1 + r);
+            }
+            // bwd: params + res + dy (+ labels) → dx? + dparams.
+            let want_bwd_in =
+                p + r + usize::from(!st.computes_loss) + usize::from(st.computes_loss);
+            if bwd.inputs.len() != want_bwd_in {
+                anyhow::bail!("{}: {} inputs, want {want_bwd_in}", bwd.name, bwd.inputs.len());
+            }
+            let want_bwd_out = p + usize::from(st.stage != 0);
+            if bwd.outputs.len() != want_bwd_out {
+                anyhow::bail!("{}: {} outputs, want {want_bwd_out}", bwd.name, bwd.outputs.len());
+            }
+            // opt: params + grads + m + v + step → params' + m' + v'.
+            if opt.inputs.len() != 4 * p + 1 || opt.outputs.len() != 3 * p {
+                anyhow::bail!(
+                    "{}: {}→{} buffers, want {}→{}",
+                    opt.name,
+                    opt.inputs.len(),
+                    opt.outputs.len(),
+                    4 * p + 1,
+                    3 * p
+                );
+            }
+            if let Some(v) = &st.fwd_verbose {
+                let fv = self.executable(v)?;
+                if fv.outputs.len() != 1 + r + st.num_intermediates as usize {
+                    anyhow::bail!("{}: verbose outputs mismatch", fv.name);
+                }
+            }
+            if st.init_params.len() != p {
+                anyhow::bail!(
+                    "stage {}: {} init_params files, want {p}",
+                    st.stage,
+                    st.init_params.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Static parameter bytes of one stage (sum over param buffers).
+    pub fn stage_param_bytes(&self, stage: usize) -> anyhow::Result<u64> {
+        let st = &self.stages[stage];
+        let fwd = self.executable(&st.fwd)?;
+        Ok(fwd
+            .inputs
+            .iter()
+            .filter(|b| b.role == "param")
+            .map(|b| b.bytes())
+            .sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_manifest() -> ArtifactManifest {
+        let buf = |name: &str, shape: Vec<u64>, role: &str| BufferSpec {
+            name: name.into(),
+            shape,
+            dtype: BufDtype::F32,
+            role: role.into(),
+        };
+        ArtifactManifest {
+            model_name: "deepseek-mini".into(),
+            pp: 1,
+            micro_batch: 2,
+            seq_len: 8,
+            vocab_size: 16,
+            hidden_size: 4,
+            total_params: 8,
+            executables: vec![
+                ExecutableSpec {
+                    name: "stage0_fwd".into(),
+                    hlo: "stage0_fwd.hlo.txt".into(),
+                    inputs: vec![
+                        buf("w", vec![2, 4], "param"),
+                        buf("x", vec![2, 8], "input"),
+                        buf("labels", vec![2, 8], "labels"),
+                    ],
+                    outputs: vec![buf("loss", vec![], "loss"), buf("res0", vec![2, 8, 4], "residual")],
+                },
+                ExecutableSpec {
+                    name: "stage0_bwd".into(),
+                    hlo: "stage0_bwd.hlo.txt".into(),
+                    inputs: vec![
+                        buf("w", vec![2, 4], "param"),
+                        buf("res0", vec![2, 8, 4], "residual"),
+                        buf("labels", vec![2, 8], "labels"),
+                    ],
+                    outputs: vec![buf("dw", vec![2, 4], "grad")],
+                },
+                ExecutableSpec {
+                    name: "stage0_opt".into(),
+                    hlo: "stage0_opt.hlo.txt".into(),
+                    inputs: vec![
+                        buf("w", vec![2, 4], "param"),
+                        buf("dw", vec![2, 4], "grad"),
+                        buf("m", vec![2, 4], "opt_m"),
+                        buf("v", vec![2, 4], "opt_v"),
+                        buf("step", vec![], "step"),
+                    ],
+                    outputs: vec![
+                        buf("w2", vec![2, 4], "param"),
+                        buf("m2", vec![2, 4], "opt_m"),
+                        buf("v2", vec![2, 4], "opt_v"),
+                    ],
+                },
+            ],
+            stages: vec![StageSpec {
+                stage: 0,
+                first_layer: 0,
+                num_layers: 1,
+                num_params: 1,
+                num_residuals: 1,
+                num_intermediates: 0,
+                fwd: "stage0_fwd".into(),
+                fwd_verbose: None,
+                bwd: "stage0_bwd".into(),
+                opt: "stage0_opt".into(),
+                init_params: vec!["stage0_param0.bin".into()],
+                takes_tokens: true,
+                computes_loss: true,
+            }],
+            dir: PathBuf::new(),
+        }
+    }
+
+    #[test]
+    fn valid_manifest_passes() {
+        dummy_manifest().validate().unwrap();
+    }
+
+    #[test]
+    fn wrong_opt_arity_rejected() {
+        let mut m = dummy_manifest();
+        m.executables[2].inputs.pop();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn buffer_bytes() {
+        let b = BufferSpec {
+            name: "x".into(),
+            shape: vec![2, 8, 4],
+            dtype: BufDtype::F32,
+            role: "input".into(),
+        };
+        assert_eq!(b.numel(), 64);
+        assert_eq!(b.bytes(), 256);
+    }
+
+    #[test]
+    fn stage_param_bytes_counts_params_only() {
+        let m = dummy_manifest();
+        assert_eq!(m.stage_param_bytes(0).unwrap(), 2 * 4 * 4);
+    }
+
+    #[test]
+    fn json_parse_minimal_manifest() {
+        let text = r#"{
+          "model_name": "deepseek-mini", "pp": 1, "micro_batch": 2, "seq_len": 8,
+          "vocab_size": 16, "hidden_size": 4, "total_params": 8,
+          "executables": [
+            {"name": "stage0_fwd", "hlo": "stage0_fwd.hlo.txt",
+             "inputs": [
+               {"name": "w", "shape": [2,4], "dtype": "f32", "role": "param"},
+               {"name": "x", "shape": [2,8], "dtype": "i32", "role": "input"},
+               {"name": "labels", "shape": [2,8], "dtype": "i32", "role": "labels"}],
+             "outputs": [
+               {"name": "loss", "shape": [], "dtype": "f32", "role": "loss"},
+               {"name": "res0", "shape": [2,8,4], "dtype": "f32", "role": "residual"}]},
+            {"name": "stage0_bwd", "hlo": "stage0_bwd.hlo.txt",
+             "inputs": [
+               {"name": "w", "shape": [2,4], "dtype": "f32", "role": "param"},
+               {"name": "res0", "shape": [2,8,4], "dtype": "f32", "role": "residual"},
+               {"name": "labels", "shape": [2,8], "dtype": "i32", "role": "labels"}],
+             "outputs": [{"name": "dw", "shape": [2,4], "dtype": "f32", "role": "grad"}]},
+            {"name": "stage0_opt", "hlo": "stage0_opt.hlo.txt",
+             "inputs": [
+               {"name": "w", "shape": [2,4], "dtype": "f32", "role": "param"},
+               {"name": "dw", "shape": [2,4], "dtype": "f32", "role": "grad"},
+               {"name": "m", "shape": [2,4], "dtype": "f32", "role": "opt_m"},
+               {"name": "v", "shape": [2,4], "dtype": "f32", "role": "opt_v"},
+               {"name": "step", "shape": [], "dtype": "f32", "role": "step"}],
+             "outputs": [
+               {"name": "w2", "shape": [2,4], "dtype": "f32", "role": "param"},
+               {"name": "m2", "shape": [2,4], "dtype": "f32", "role": "opt_m"},
+               {"name": "v2", "shape": [2,4], "dtype": "f32", "role": "opt_v"}]}
+          ],
+          "stages": [
+            {"stage": 0, "first_layer": 0, "num_layers": 1, "num_params": 1,
+             "num_residuals": 1, "num_intermediates": 0,
+             "fwd": "stage0_fwd", "fwd_verbose": null, "bwd": "stage0_bwd",
+             "opt": "stage0_opt", "init_params": ["stage0_param0.bin"],
+             "takes_tokens": true, "computes_loss": true}
+          ]
+        }"#;
+        let m = ArtifactManifest::from_json(text).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.executables.len(), 3);
+        assert_eq!(m.stages[0].num_params, 1);
+        assert_eq!(m.executables[0].inputs[1].dtype, BufDtype::I32);
+    }
+}

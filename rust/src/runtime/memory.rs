@@ -1,0 +1,183 @@
+//! Tagged tracking of live runtime buffers — the measured counterpart of the
+//! analytical model. Every `xla::Literal` the coordinator holds is registered
+//! here with a [`MemTag`]; `peak()`/`current()` are compared against the
+//! paper's formulas in experiment E3.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Buffer classes (mirror of `sim::MemClass`, scoped to the live runtime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemTag {
+    Params,
+    Gradients,
+    OptimizerM,
+    OptimizerV,
+    /// Residuals carried fwd→bwd (the live "activation" class).
+    Residuals,
+    /// AC-None intermediates held alongside residuals.
+    Intermediates,
+    /// Microbatch inputs/labels and stage-boundary tensors.
+    IoBuffers,
+    /// Gradient-accumulation and all-reduce staging.
+    CommBuffers,
+}
+
+impl MemTag {
+    pub const ALL: [MemTag; 8] = [
+        MemTag::Params,
+        MemTag::Gradients,
+        MemTag::OptimizerM,
+        MemTag::OptimizerV,
+        MemTag::Residuals,
+        MemTag::Intermediates,
+        MemTag::IoBuffers,
+        MemTag::CommBuffers,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MemTag::Params => "params",
+            MemTag::Gradients => "gradients",
+            MemTag::OptimizerM => "optimizer_m",
+            MemTag::OptimizerV => "optimizer_v",
+            MemTag::Residuals => "residuals",
+            MemTag::Intermediates => "intermediates",
+            MemTag::IoBuffers => "io_buffers",
+            MemTag::CommBuffers => "comm_buffers",
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    current: HashMap<MemTag, u64>,
+    peak: HashMap<MemTag, u64>,
+    total_current: u64,
+    total_peak: u64,
+}
+
+/// Thread-safe tagged byte accounting for one virtual device.
+#[derive(Debug, Default)]
+pub struct TrackedMemory {
+    inner: Mutex<Inner>,
+}
+
+/// Snapshot of the tracker for reporting.
+#[derive(Debug, Clone)]
+pub struct MemorySnapshot {
+    pub current: Vec<(MemTag, u64)>,
+    pub peak: Vec<(MemTag, u64)>,
+    pub total_current: u64,
+    pub total_peak: u64,
+}
+
+impl MemorySnapshot {
+    pub fn peak_of(&self, tag: MemTag) -> u64 {
+        self.peak.iter().find(|(t, _)| *t == tag).map(|(_, b)| *b).unwrap_or(0)
+    }
+
+    pub fn current_of(&self, tag: MemTag) -> u64 {
+        self.current.iter().find(|(t, _)| *t == tag).map(|(_, b)| *b).unwrap_or(0)
+    }
+}
+
+impl TrackedMemory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&self, tag: MemTag, bytes: u64) {
+        let mut i = self.inner.lock().unwrap();
+        *i.current.entry(tag).or_insert(0) += bytes;
+        let cur = i.current[&tag];
+        let p = i.peak.entry(tag).or_insert(0);
+        *p = (*p).max(cur);
+        i.total_current += bytes;
+        i.total_peak = i.total_peak.max(i.total_current);
+    }
+
+    pub fn free(&self, tag: MemTag, bytes: u64) {
+        let mut i = self.inner.lock().unwrap();
+        let c = i.current.entry(tag).or_insert(0);
+        debug_assert!(*c >= bytes, "freeing {bytes} from {} holding {c}", tag.name());
+        *c = c.saturating_sub(bytes);
+        i.total_current = i.total_current.saturating_sub(bytes);
+    }
+
+    /// Move bytes between tags (e.g. IoBuffers → Residuals).
+    pub fn retag(&self, from: MemTag, to: MemTag, bytes: u64) {
+        self.free(from, bytes);
+        self.alloc(to, bytes);
+    }
+
+    pub fn snapshot(&self) -> MemorySnapshot {
+        let i = self.inner.lock().unwrap();
+        MemorySnapshot {
+            current: MemTag::ALL.iter().map(|&t| (t, i.current.get(&t).copied().unwrap_or(0))).collect(),
+            peak: MemTag::ALL.iter().map(|&t| (t, i.peak.get(&t).copied().unwrap_or(0))).collect(),
+            total_current: i.total_current,
+            total_peak: i.total_peak,
+        }
+    }
+}
+
+/// RAII guard: frees its bytes on drop.
+pub struct TrackedAlloc<'a> {
+    tracker: &'a TrackedMemory,
+    tag: MemTag,
+    bytes: u64,
+}
+
+impl<'a> TrackedAlloc<'a> {
+    pub fn new(tracker: &'a TrackedMemory, tag: MemTag, bytes: u64) -> Self {
+        tracker.alloc(tag, bytes);
+        Self { tracker, tag, bytes }
+    }
+}
+
+impl Drop for TrackedAlloc<'_> {
+    fn drop(&mut self) {
+        self.tracker.free(self.tag, self.bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_peak() {
+        let t = TrackedMemory::new();
+        t.alloc(MemTag::Params, 100);
+        t.alloc(MemTag::Residuals, 40);
+        t.free(MemTag::Residuals, 40);
+        t.alloc(MemTag::Gradients, 10);
+        let s = t.snapshot();
+        assert_eq!(s.total_peak, 140);
+        assert_eq!(s.total_current, 110);
+        assert_eq!(s.peak_of(MemTag::Residuals), 40);
+        assert_eq!(s.current_of(MemTag::Residuals), 0);
+    }
+
+    #[test]
+    fn raii_guard_frees() {
+        let t = TrackedMemory::new();
+        {
+            let _g = TrackedAlloc::new(&t, MemTag::CommBuffers, 64);
+            assert_eq!(t.snapshot().current_of(MemTag::CommBuffers), 64);
+        }
+        assert_eq!(t.snapshot().current_of(MemTag::CommBuffers), 0);
+        assert_eq!(t.snapshot().peak_of(MemTag::CommBuffers), 64);
+    }
+
+    #[test]
+    fn retag_moves_bytes() {
+        let t = TrackedMemory::new();
+        t.alloc(MemTag::IoBuffers, 32);
+        t.retag(MemTag::IoBuffers, MemTag::Residuals, 32);
+        let s = t.snapshot();
+        assert_eq!(s.current_of(MemTag::IoBuffers), 0);
+        assert_eq!(s.current_of(MemTag::Residuals), 32);
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client, with
+//! tagged memory accounting for every live buffer.
+
+pub mod executable;
+pub mod manifest;
+pub mod memory;
+
+pub use executable::{Runtime, StageExecutables};
+pub use manifest::{ArtifactManifest, BufferSpec, ExecutableSpec};
+pub use memory::{MemTag, TrackedMemory};

@@ -1,0 +1,221 @@
+//! Collective-communication buffer model — substrate for the paper's §6 claim
+//! that temporary communication buffers occupy 0.8–2 GB per device.
+//!
+//! For each collective of a training step we model the *transient* device
+//! buffers a NCCL-style ring implementation needs: staging copies of the
+//! message (bucketed for gradient all-reduce) plus gather/dispatch outputs.
+
+use crate::analysis::DeviceStaticParams;
+use crate::config::{ActivationConfig, DtypePolicy, ModelConfig, ParallelConfig};
+
+/// The collectives of one MoE training step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveKind {
+    /// DP gradient all-reduce (non-MoE grads), bucketed.
+    DpGradAllReduce,
+    /// EDP gradient all-reduce (expert grads), bucketed.
+    EdpGradAllReduce,
+    /// TP/SP activation all-gather (per layer).
+    SpAllGather,
+    /// TP/SP reduce-scatter (per layer).
+    SpReduceScatter,
+    /// EP token dispatch all-to-all (per MoE layer).
+    EpDispatchA2A,
+    /// EP token combine all-to-all (per MoE layer).
+    EpCombineA2A,
+    /// PP point-to-point activation send/recv.
+    PpSendRecv,
+}
+
+/// One collective with its per-device transient buffer requirement.
+#[derive(Debug, Clone)]
+pub struct CollectiveCall {
+    pub kind: CollectiveKind,
+    /// Devices participating.
+    pub group_size: u64,
+    /// Message bytes per device.
+    pub message_bytes: u64,
+    /// Transient buffer bytes per device while in flight.
+    pub buffer_bytes: u64,
+}
+
+/// Buffer plan for one training step on one device.
+#[derive(Debug, Clone)]
+pub struct CollectivePlan {
+    pub calls: Vec<CollectiveCall>,
+    /// Gradient all-reduce bucket size (DeepSpeed default 5e8 elements ≈ 500 MB
+    /// fp32; Megatron uses ~40 MB buckets — configurable).
+    pub bucket_bytes: u64,
+}
+
+impl CollectivePlan {
+    /// Build the plan for the heaviest stage of the case study.
+    pub fn build(
+        m: &ModelConfig,
+        p: &ParallelConfig,
+        a: &ActivationConfig,
+        dev: &DeviceStaticParams,
+        dt: DtypePolicy,
+        bucket_bytes: u64,
+    ) -> Self {
+        let ab = dt.activation.bytes() as u64;
+        let gb = dt.gradient.bytes() as u64;
+        let mut calls = Vec::new();
+
+        // Hidden-state message of one microbatch: b × s × h.
+        let hidden = a.micro_batch * a.seq_len * m.hidden_size * ab;
+
+        // DP all-reduce over non-MoE grads, chunked into buckets; the transient
+        // buffer is one bucket (double-buffered: send + recv staging).
+        let non_moe_grad = dev.non_moe_params() * gb;
+        calls.push(CollectiveCall {
+            kind: CollectiveKind::DpGradAllReduce,
+            group_size: p.dp,
+            message_bytes: non_moe_grad,
+            buffer_bytes: 2 * bucket_bytes.min(non_moe_grad),
+        });
+
+        // EDP all-reduce over expert grads.
+        let moe_grad = dev.moe_params() * gb;
+        calls.push(CollectiveCall {
+            kind: CollectiveKind::EdpGradAllReduce,
+            group_size: p.edp(),
+            message_bytes: moe_grad,
+            buffer_bytes: 2 * bucket_bytes.min(moe_grad),
+        });
+
+        // SP all-gather / reduce-scatter around each block: full hidden state
+        // gathered from s/sp shards; buffer = gathered output.
+        if a.sp > 1 {
+            calls.push(CollectiveCall {
+                kind: CollectiveKind::SpAllGather,
+                group_size: a.sp,
+                message_bytes: hidden / a.sp,
+                buffer_bytes: hidden,
+            });
+            calls.push(CollectiveCall {
+                kind: CollectiveKind::SpReduceScatter,
+                group_size: a.sp,
+                message_bytes: hidden,
+                buffer_bytes: hidden,
+            });
+        }
+
+        // EP all-to-all: each token is replicated to its N_r experts, so the
+        // dispatch payload is b·s·N_r/N per expert × local experts; per device
+        // the in-flight send+recv staging is ~2 × (b·s·N_r/EP) × h.
+        let dispatch_tokens = a.micro_batch * a.seq_len * m.num_experts_per_tok / p.ep;
+        let a2a = 2 * dispatch_tokens * m.hidden_size * ab;
+        calls.push(CollectiveCall {
+            kind: CollectiveKind::EpDispatchA2A,
+            group_size: p.ep,
+            message_bytes: a2a / 2,
+            buffer_bytes: a2a,
+        });
+        calls.push(CollectiveCall {
+            kind: CollectiveKind::EpCombineA2A,
+            group_size: p.ep,
+            message_bytes: a2a / 2,
+            buffer_bytes: a2a,
+        });
+
+        // PP send/recv: one hidden-state boundary tensor each way.
+        calls.push(CollectiveCall {
+            kind: CollectiveKind::PpSendRecv,
+            group_size: 2,
+            message_bytes: hidden / a.sp,
+            buffer_bytes: 2 * hidden / a.sp,
+        });
+
+        Self { calls, bucket_bytes }
+    }
+
+    /// Peak transient buffer: the largest single in-flight buffer (collectives
+    /// of one stream serialize; grad all-reduce overlaps with compute so the
+    /// two families can coexist → sum of the two maxima).
+    pub fn peak_buffer_bytes(&self) -> u64 {
+        let grad_max = self
+            .calls
+            .iter()
+            .filter(|c| matches!(c.kind, CollectiveKind::DpGradAllReduce | CollectiveKind::EdpGradAllReduce))
+            .map(|c| c.buffer_bytes)
+            .max()
+            .unwrap_or(0);
+        let act_max = self
+            .calls
+            .iter()
+            .filter(|c| !matches!(c.kind, CollectiveKind::DpGradAllReduce | CollectiveKind::EdpGradAllReduce))
+            .map(|c| c.buffer_bytes)
+            .max()
+            .unwrap_or(0);
+        grad_max + act_max
+    }
+
+    /// Total bytes moved per device per step (for bandwidth estimates).
+    pub fn total_message_bytes(&self) -> u64 {
+        self.calls.iter().map(|c| c.message_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{StagePlan, StageSplit};
+    use crate::config::{CaseStudy, Dtype};
+    use crate::model::CountMode;
+
+    fn plan(bucket: u64, b: u64) -> CollectivePlan {
+        let cs = CaseStudy::paper();
+        let sp = StagePlan::build(&cs.model, cs.parallel.pp, StageSplit::FrontLoaded, CountMode::PaperCompat);
+        let dev = DeviceStaticParams::for_stage(&cs.model, &cs.parallel, &sp, 1, Dtype::Bf16);
+        CollectivePlan::build(
+            &cs.model,
+            &cs.parallel,
+            &ActivationConfig::paper(b),
+            &dev,
+            cs.dtypes,
+            bucket,
+        )
+    }
+
+    #[test]
+    fn paper_band_08_to_2_gb() {
+        // With DeepSpeed-like 500 MB buckets, the peak transient buffer falls
+        // inside the paper's §6 band of 0.8–2 GB.
+        let p = plan(500 << 20, 1);
+        let gib = p.peak_buffer_bytes() as f64 / crate::GIB;
+        assert!((0.8..=2.0).contains(&gib), "peak buffer = {gib} GiB");
+    }
+
+    #[test]
+    fn small_buckets_shrink_buffers() {
+        let big = plan(500 << 20, 1).peak_buffer_bytes();
+        let small = plan(40 << 20, 1).peak_buffer_bytes();
+        assert!(small < big);
+    }
+
+    #[test]
+    fn has_all_expected_collectives() {
+        let p = plan(100 << 20, 1);
+        let kinds: Vec<_> = p.calls.iter().map(|c| c.kind).collect();
+        for k in [
+            CollectiveKind::DpGradAllReduce,
+            CollectiveKind::EdpGradAllReduce,
+            CollectiveKind::SpAllGather,
+            CollectiveKind::EpDispatchA2A,
+            CollectiveKind::PpSendRecv,
+        ] {
+            assert!(kinds.contains(&k), "{k:?} missing");
+        }
+    }
+
+    #[test]
+    fn messages_scale_with_microbatch() {
+        let p1 = plan(100 << 20, 1);
+        let p4 = plan(100 << 20, 4);
+        let a2a = |p: &CollectivePlan| {
+            p.calls.iter().find(|c| c.kind == CollectiveKind::EpDispatchA2A).unwrap().buffer_bytes
+        };
+        assert_eq!(a2a(&p4), 4 * a2a(&p1));
+    }
+}

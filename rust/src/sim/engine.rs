@@ -1,0 +1,319 @@
+//! Event-driven cluster memory engine: replays one training step on every
+//! pipeline stage of a device column and reports per-class peak memory —
+//! the simulated counterpart of the analytical model, and the machinery for
+//! extension experiment E2 (schedule-dependent activation peaks).
+//!
+//! The engine allocates the *same logical tensors* the paper counts:
+//! static params / grads / optimizer at setup (ZeRO-aware), one activation
+//! tape instance per in-flight microbatch, transient collective buffers
+//! around each op, and (optionally) pushes the whole trace through the
+//! caching-allocator simulator to estimate fragmentation.
+
+use super::allocator::{AllocStats, CachingAllocator};
+use super::collective::CollectivePlan;
+use super::schedule::{PipelineOp, Schedule, ScheduleKind};
+use super::tracker::{MemClass, MemoryTimeline};
+use crate::analysis::{DeviceStaticParams, MemoryModel, ZeroStrategy};
+use crate::config::ActivationConfig;
+
+/// Per-stage simulation output.
+#[derive(Debug, Clone)]
+pub struct StageSimResult {
+    pub stage: u64,
+    pub timeline: MemoryTimeline,
+    /// Peak in-flight activation sets observed.
+    pub peak_inflight: u64,
+    /// Caching-allocator stats if fragmentation simulation was enabled.
+    pub alloc_stats: Option<AllocStats>,
+}
+
+/// Whole-pipeline simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub schedule: String,
+    pub num_microbatches: u64,
+    pub stages: Vec<StageSimResult>,
+}
+
+impl SimResult {
+    /// The globally worst stage by total peak bytes.
+    pub fn peak_stage(&self) -> &StageSimResult {
+        self.stages.iter().max_by_key(|s| s.timeline.total_peak()).unwrap()
+    }
+}
+
+/// The simulation engine.
+pub struct SimEngine<'a> {
+    pub mm: &'a MemoryModel,
+    pub act: ActivationConfig,
+    pub zero: ZeroStrategy,
+    /// Simulate the caching allocator for fragmentation estimates (slower).
+    pub simulate_allocator: bool,
+    /// Record per-event timelines (needed for `sim::trace` export).
+    pub record_events: bool,
+    /// Gradient-bucket size for the collective plan.
+    pub bucket_bytes: u64,
+}
+
+impl<'a> SimEngine<'a> {
+    pub fn new(mm: &'a MemoryModel, act: ActivationConfig, zero: ZeroStrategy) -> Self {
+        Self {
+            mm,
+            act,
+            zero,
+            simulate_allocator: false,
+            record_events: false,
+            bucket_bytes: 500 << 20,
+        }
+    }
+
+    /// Replay `schedule` with `m` microbatches across all PP stages.
+    pub fn run(&self, kind: ScheduleKind, num_microbatches: u64) -> anyhow::Result<SimResult> {
+        let plan = self.mm.stage_plan();
+        let schedule = Schedule::build(kind, self.mm.parallel.pp, num_microbatches)?;
+        schedule.check_invariants()?;
+        let zr = self.mm.zero_report();
+        let zrow = *zr.row(self.zero);
+
+        let mut stages = Vec::with_capacity(plan.stages.len());
+        for sinfo in &plan.stages {
+            let s = sinfo.stage;
+            let dev = DeviceStaticParams::for_stage(
+                &self.mm.model,
+                &self.mm.parallel,
+                &plan,
+                s as usize,
+                self.mm.dtypes.weight,
+            );
+            // Static memory scales with this stage's share of the analysed
+            // stage's params (ZeRO shards identically on every stage).
+            let scale = |bytes: u64| -> u64 {
+                let base = zr.device_params.max(1);
+                (bytes as u128 * dev.total_params() as u128 / base as u128) as u64
+            };
+
+            let ar = crate::analysis::ActivationReport::build(
+                &self.mm.model,
+                &self.mm.parallel,
+                &self.act,
+                sinfo.num_layers,
+            );
+            // Dense stages have no MoE tape for their dense layers; we use the
+            // stage's MoE layer count for the MoE part and MLA for all layers.
+            // Under interleaving each Forward op is one *chunk* = 1/v of the
+            // stage's layers.
+            let chunk_div = match kind {
+                ScheduleKind::Interleaved1F1B { chunks } => chunks,
+                _ => 1,
+            };
+            let act_bytes_per_mb =
+                self.per_microbatch_bytes(&ar, sinfo.moe_layers, sinfo.num_layers) / chunk_div;
+
+            let cplan = CollectivePlan::build(
+                &self.mm.model,
+                &self.mm.parallel,
+                &self.act,
+                &dev,
+                self.mm.dtypes,
+                self.bucket_bytes,
+            );
+
+            let mut tl = MemoryTimeline::new();
+            tl.record_events = self.record_events;
+            let mut alloc = self.simulate_allocator.then(CachingAllocator::default);
+            let mut live_allocs: std::collections::HashMap<u64, Vec<u64>> = Default::default();
+
+            let mut t = 0u64;
+            // t0: static state.
+            tl.alloc(t, MemClass::Params, scale(zrow.params_bytes));
+            tl.alloc(t, MemClass::Gradients, scale(zrow.gradient_bytes));
+            tl.alloc(t, MemClass::Optimizer, scale(zrow.optimizer_bytes));
+            if let Some(a) = alloc.as_mut() {
+                a.alloc(scale(zrow.params_bytes));
+                a.alloc(scale(zrow.gradient_bytes));
+                a.alloc(scale(zrow.optimizer_bytes));
+            }
+
+            let mut inflight = 0u64;
+            let mut peak_inflight = 0u64;
+            for op in &schedule.ops[s as usize] {
+                t += 1;
+                match *op {
+                    PipelineOp::Forward { mb, .. } => {
+                        // Transient PP recv + SP gather buffers around the op.
+                        let buf = cplan.peak_buffer_bytes().min(2 * crate::GIB as u64);
+                        tl.alloc(t, MemClass::CommBuffers, buf);
+                        // The activation tape of this microbatch, itemized so
+                        // the allocator sees realistic block sizes.
+                        if let Some(a) = alloc.as_mut() {
+                            let ids = self.tape_allocs(a, &ar, sinfo.moe_layers, sinfo.num_layers);
+                            live_allocs.insert(mb, ids);
+                        }
+                        tl.alloc(t, MemClass::Activations, act_bytes_per_mb);
+                        tl.free(t, MemClass::CommBuffers, buf);
+                        inflight += 1;
+                        peak_inflight = peak_inflight.max(inflight);
+                    }
+                    PipelineOp::Backward { mb, .. } => {
+                        // Backward transient: dgrad workspace ≈ one layer's
+                        // activation + comm buffers.
+                        let buf = cplan.peak_buffer_bytes().min(2 * crate::GIB as u64);
+                        let wsp = act_bytes_per_mb / sinfo.num_layers.max(1);
+                        tl.alloc(t, MemClass::CommBuffers, buf);
+                        tl.alloc(t, MemClass::Other, wsp);
+                        tl.free(t, MemClass::Activations, act_bytes_per_mb);
+                        if let Some(a) = alloc.as_mut() {
+                            for id in live_allocs.remove(&mb).unwrap_or_default() {
+                                a.free(id);
+                            }
+                        }
+                        tl.free(t, MemClass::Other, wsp);
+                        tl.free(t, MemClass::CommBuffers, buf);
+                        inflight -= 1;
+                    }
+                }
+            }
+            // Optimizer step at the end of the step window: grads all-reduced
+            // (bucket buffers), then Adam update in place.
+            t += 1;
+            let buf = (2 * self.bucket_bytes).min(2 * crate::GIB as u64);
+            tl.alloc(t, MemClass::CommBuffers, buf);
+            tl.free(t + 1, MemClass::CommBuffers, buf);
+
+            stages.push(StageSimResult {
+                stage: s,
+                timeline: tl,
+                peak_inflight,
+                alloc_stats: alloc.map(|a| a.stats()),
+            });
+        }
+
+        Ok(SimResult {
+            schedule: kind.name(),
+            num_microbatches,
+            stages,
+        })
+    }
+
+    /// Activation bytes of one microbatch on a stage with the given layer mix.
+    fn per_microbatch_bytes(
+        &self,
+        ar: &crate::analysis::ActivationReport,
+        moe_layers: u64,
+        num_layers: u64,
+    ) -> u64 {
+        let pol = self.act.recompute;
+        let mla = ar.mla.device_bytes(pol) * num_layers;
+        let moe = ar.moe.device_bytes(pol) * moe_layers;
+        // Dense layers store roughly the dense-FFN tape; approximate with the
+        // shared-expert terms of the MoE tape scaled by h_F/h_E is overkill —
+        // the paper excludes dense stages from its analysis; we charge the
+        // MLA part only for them (conservative lower bound, documented).
+        mla + moe
+    }
+
+    /// Issue itemized tape allocations into the caching allocator.
+    fn tape_allocs(
+        &self,
+        a: &mut CachingAllocator,
+        ar: &crate::analysis::ActivationReport,
+        moe_layers: u64,
+        num_layers: u64,
+    ) -> Vec<u64> {
+        let pol = self.act.recompute;
+        let mut ids = Vec::new();
+        for _ in 0..num_layers {
+            for t in ar.mla.tensors.iter().filter(|t| t.retained(pol)) {
+                ids.push(a.alloc(t.device_bytes().max(1)));
+            }
+        }
+        for _ in 0..moe_layers {
+            for t in ar.moe.tensors.iter().filter(|t| t.retained(pol)) {
+                ids.push(a.alloc(t.device_bytes().max(1)));
+            }
+        }
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CaseStudy, RecomputePolicy};
+
+    fn mm() -> MemoryModel {
+        let cs = CaseStudy::paper();
+        MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes)
+    }
+
+    #[test]
+    fn one_f_one_b_peaks_match_analytic_inflight() {
+        let mm = mm();
+        let act = ActivationConfig::paper(1);
+        let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+        let res = eng.run(ScheduleKind::OneFOneB, 16).unwrap();
+        let sched = Schedule::build(ScheduleKind::OneFOneB, 16, 16).unwrap();
+        for st in &res.stages {
+            assert_eq!(st.peak_inflight, sched.analytic_inflight(st.stage), "stage {}", st.stage);
+        }
+    }
+
+    #[test]
+    fn gpipe_holds_more_than_1f1b() {
+        let mm = mm();
+        let act = ActivationConfig::paper(1);
+        let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+        let g = eng.run(ScheduleKind::GPipe, 16).unwrap();
+        let o = eng.run(ScheduleKind::OneFOneB, 16).unwrap();
+        // Stage 1 (heaviest): GPipe holds 16 sets, 1F1B holds 15.
+        let gp = g.stages[1].timeline.peak(MemClass::Activations);
+        let ob = o.stages[1].timeline.peak(MemClass::Activations);
+        assert!(gp > ob, "gpipe {gp} !> 1f1b {ob}");
+    }
+
+    #[test]
+    fn sim_activation_peak_equals_table10_times_inflight() {
+        // The simulated activation peak on stage i must equal the analytic
+        // per-microbatch activation × min(m, p−i) — the E2 bridge.
+        let mm = mm();
+        let act = ActivationConfig::paper(1);
+        let eng = SimEngine::new(&mm, act, ZeroStrategy::None);
+        let res = eng.run(ScheduleKind::OneFOneB, 16).unwrap();
+        let plan = mm.stage_plan();
+        let st = &res.stages[1];
+        let ar = crate::analysis::ActivationReport::build(
+            &mm.model,
+            &mm.parallel,
+            &act,
+            plan.stages[1].num_layers,
+        );
+        let per_mb = ar.total_stage_bytes(RecomputePolicy::None);
+        assert_eq!(st.timeline.peak(MemClass::Activations), per_mb * 15);
+    }
+
+    #[test]
+    fn full_recompute_shrinks_sim_peak() {
+        let mm = mm();
+        let eng_none = SimEngine::new(&mm, ActivationConfig::paper(1), ZeroStrategy::OsG);
+        let eng_full =
+            SimEngine::new(&mm, ActivationConfig::paper_full_recompute(1), ZeroStrategy::OsG);
+        let a = eng_none.run(ScheduleKind::OneFOneB, 16).unwrap();
+        let b = eng_full.run(ScheduleKind::OneFOneB, 16).unwrap();
+        assert!(
+            a.peak_stage().timeline.total_peak() > b.peak_stage().timeline.total_peak()
+        );
+    }
+
+    #[test]
+    fn allocator_sim_reports_fragmentation() {
+        let mm = mm();
+        let mut eng = SimEngine::new(&mm, ActivationConfig::paper(1), ZeroStrategy::OsG);
+        eng.simulate_allocator = true;
+        let res = eng.run(ScheduleKind::OneFOneB, 8).unwrap();
+        let stats = res.stages[1].alloc_stats.unwrap();
+        let frag = stats.fragmentation();
+        // §6 band (we assert the sane envelope; exact value depends on policy).
+        assert!((0.0..0.35).contains(&frag), "frag = {frag}");
+        assert!(stats.peak_allocated > 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Cluster memory simulator substrates: caching allocator (fragmentation, §6),
+//! pipeline schedules, collective-buffer model and the event-driven engine
+//! that replays a training step on every device of the grid.
+
+pub mod allocator;
+pub mod collective;
+pub mod engine;
+pub mod schedule;
+pub mod trace;
+pub mod tracker;
+
+pub use allocator::{AllocStats, CachingAllocator};
+pub use collective::{CollectiveKind, CollectivePlan};
+pub use engine::{SimEngine, SimResult};
+pub use schedule::{PipelineOp, Schedule, ScheduleKind};
+pub use tracker::{MemClass, MemoryTimeline};

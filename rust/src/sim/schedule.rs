@@ -1,0 +1,275 @@
+//! Pipeline-parallel microbatch schedules: GPipe, 1F1B and interleaved 1F1B.
+//!
+//! The paper's activation analysis is per-microbatch; which *multiple* of it a
+//! device actually holds depends on the schedule. This module generates the
+//! per-stage operation sequence and exposes the peak number of in-flight
+//! activation sets — the bridge between Table 10 and real peak memory
+//! (extension experiment E2).
+
+
+/// One pipeline operation on a stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineOp {
+    /// Forward of microbatch `mb` (for interleaved: on `chunk`).
+    Forward { mb: u64, chunk: u64 },
+    /// Backward of microbatch `mb`.
+    Backward { mb: u64, chunk: u64 },
+}
+
+/// Supported schedules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// All forwards then all backwards — peak in-flight = `m` microbatches.
+    GPipe,
+    /// Megatron 1F1B — peak in-flight on stage `i` = `min(m, p - i)`.
+    OneFOneB,
+    /// Interleaved 1F1B with `v` virtual chunks per stage.
+    Interleaved1F1B { chunks: u64 },
+}
+
+impl ScheduleKind {
+    pub fn name(self) -> String {
+        match self {
+            ScheduleKind::GPipe => "gpipe".into(),
+            ScheduleKind::OneFOneB => "1f1b".into(),
+            ScheduleKind::Interleaved1F1B { chunks } => format!("interleaved-1f1b(v={chunks})"),
+        }
+    }
+}
+
+/// A resolved schedule: per-stage operation sequences.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub kind: ScheduleKind,
+    pub num_stages: u64,
+    pub num_microbatches: u64,
+    /// `ops[stage]` = ordered operations executed by that stage.
+    pub ops: Vec<Vec<PipelineOp>>,
+}
+
+impl Schedule {
+    /// Build the operation sequence for every stage.
+    pub fn build(kind: ScheduleKind, num_stages: u64, num_microbatches: u64) -> anyhow::Result<Self> {
+        if num_stages == 0 || num_microbatches == 0 {
+            anyhow::bail!("stages and microbatches must be > 0");
+        }
+        let ops = match kind {
+            ScheduleKind::GPipe => (0..num_stages)
+                .map(|_| {
+                    let mut v: Vec<PipelineOp> = (0..num_microbatches)
+                        .map(|mb| PipelineOp::Forward { mb, chunk: 0 })
+                        .collect();
+                    v.extend((0..num_microbatches).map(|mb| PipelineOp::Backward { mb, chunk: 0 }));
+                    v
+                })
+                .collect(),
+            ScheduleKind::OneFOneB => (0..num_stages)
+                .map(|stage| one_f_one_b_stage(stage, num_stages, num_microbatches))
+                .collect(),
+            ScheduleKind::Interleaved1F1B { chunks } => {
+                if chunks == 0 {
+                    anyhow::bail!("chunks must be > 0");
+                }
+                // Megatron-style interleaving: each stage runs v model chunks,
+                // so v·m "units" flow through it. The deeper warmup (chunks of
+                // later microbatches start before earlier ones drain) holds up
+                // to v·min(m, p − stage) unit activations simultaneously.
+                (0..num_stages)
+                    .map(|stage| {
+                        let v = chunks;
+                        let m = num_microbatches;
+                        let units = v * m;
+                        // Megatron interleaved warmup: (p − s − 1)·2 + (v − 1)·p
+                        // forward units before the first backward — deeper than
+                        // plain 1F1B, which is why interleaving trades memory
+                        // for bubble.
+                        let warmup = ((num_stages - stage - 1) * 2
+                            + (v - 1) * num_stages)
+                            .min(units - 1);
+                        let unit_op = |u: u64| (u / v, u % v); // (mb, chunk)
+                        let mut ops = Vec::with_capacity(2 * units as usize);
+                        let mut next_fwd = 0u64;
+                        let mut next_bwd = 0u64;
+                        for _ in 0..warmup {
+                            let (mb, chunk) = unit_op(next_fwd);
+                            ops.push(PipelineOp::Forward { mb, chunk });
+                            next_fwd += 1;
+                        }
+                        while next_fwd < units {
+                            let (mb, chunk) = unit_op(next_fwd);
+                            ops.push(PipelineOp::Forward { mb, chunk });
+                            next_fwd += 1;
+                            let (mb, chunk) = unit_op(next_bwd);
+                            ops.push(PipelineOp::Backward { mb, chunk });
+                            next_bwd += 1;
+                        }
+                        while next_bwd < units {
+                            let (mb, chunk) = unit_op(next_bwd);
+                            ops.push(PipelineOp::Backward { mb, chunk });
+                            next_bwd += 1;
+                        }
+                        ops
+                    })
+                    .collect()
+            }
+        };
+        Ok(Self { kind, num_stages, num_microbatches, ops })
+    }
+
+    /// Peak number of simultaneously-live forward activation sets on `stage`,
+    /// derived by replaying the op sequence.
+    pub fn peak_inflight(&self, stage: u64) -> u64 {
+        let mut live: i64 = 0;
+        let mut peak: i64 = 0;
+        for op in &self.ops[stage as usize] {
+            match op {
+                PipelineOp::Forward { .. } => {
+                    live += 1;
+                    peak = peak.max(live);
+                }
+                PipelineOp::Backward { .. } => live -= 1,
+            }
+        }
+        peak as u64
+    }
+
+    /// The analytic bound for comparison: GPipe = m; 1F1B stage i = min(m, p−i);
+    /// interleaved = min(v·m, (p−i−1)·2 + (v−1)·p + 1) *units* (each unit is
+    /// one chunk = 1/v of the stage's layers).
+    pub fn analytic_inflight(&self, stage: u64) -> u64 {
+        let m = self.num_microbatches;
+        let p = self.num_stages;
+        match self.kind {
+            ScheduleKind::GPipe => m,
+            ScheduleKind::OneFOneB => m.min(p - stage),
+            ScheduleKind::Interleaved1F1B { chunks } => {
+                (chunks * m).min((p - stage - 1) * 2 + (chunks - 1) * p + 1)
+            }
+        }
+    }
+
+    /// Validate op-sequence invariants: every forward has exactly one matching
+    /// backward, and a stage never runs a backward before its forward.
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        for (s, ops) in self.ops.iter().enumerate() {
+            let mut fwd_seen = std::collections::HashSet::new();
+            let mut bwd_seen = std::collections::HashSet::new();
+            for op in ops {
+                match *op {
+                    PipelineOp::Forward { mb, chunk } => {
+                        if !fwd_seen.insert((mb, chunk)) {
+                            anyhow::bail!("stage {s}: duplicate forward mb={mb}");
+                        }
+                    }
+                    PipelineOp::Backward { mb, chunk } => {
+                        if !fwd_seen.contains(&(mb, chunk)) {
+                            anyhow::bail!("stage {s}: backward mb={mb} before forward");
+                        }
+                        if !bwd_seen.insert((mb, chunk)) {
+                            anyhow::bail!("stage {s}: duplicate backward mb={mb}");
+                        }
+                    }
+                }
+            }
+            if fwd_seen.len() != bwd_seen.len() {
+                anyhow::bail!("stage {s}: {} forwards vs {} backwards", fwd_seen.len(), bwd_seen.len());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The 1F1B op sequence for one stage: warmup forwards, steady 1F1B, cooldown
+/// backwards (Narayanan et al., the schedule Megatron-LM defaults to).
+fn one_f_one_b_stage(stage: u64, p: u64, m: u64) -> Vec<PipelineOp> {
+    let warmup = (p - stage - 1).min(m);
+    let mut ops = Vec::with_capacity(2 * m as usize);
+    let mut next_fwd = 0u64;
+    let mut next_bwd = 0u64;
+    for _ in 0..warmup {
+        ops.push(PipelineOp::Forward { mb: next_fwd, chunk: 0 });
+        next_fwd += 1;
+    }
+    // Steady state: 1F1B until forwards run out.
+    while next_fwd < m {
+        ops.push(PipelineOp::Forward { mb: next_fwd, chunk: 0 });
+        next_fwd += 1;
+        ops.push(PipelineOp::Backward { mb: next_bwd, chunk: 0 });
+        next_bwd += 1;
+    }
+    // Cooldown: drain remaining backwards.
+    while next_bwd < m {
+        ops.push(PipelineOp::Backward { mb: next_bwd, chunk: 0 });
+        next_bwd += 1;
+    }
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpipe_inflight_is_m() {
+        let s = Schedule::build(ScheduleKind::GPipe, 4, 8).unwrap();
+        s.check_invariants().unwrap();
+        for st in 0..4 {
+            assert_eq!(s.peak_inflight(st), 8);
+            assert_eq!(s.analytic_inflight(st), 8);
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_inflight_matches_analytic() {
+        for (p, m) in [(4u64, 8u64), (16, 16), (16, 32), (2, 4), (8, 8)] {
+            let s = Schedule::build(ScheduleKind::OneFOneB, p, m).unwrap();
+            s.check_invariants().unwrap();
+            for st in 0..p {
+                assert_eq!(
+                    s.peak_inflight(st),
+                    s.analytic_inflight(st),
+                    "p={p} m={m} stage={st}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn first_stage_holds_p_last_holds_1() {
+        let s = Schedule::build(ScheduleKind::OneFOneB, 16, 32).unwrap();
+        assert_eq!(s.peak_inflight(0), 16);
+        assert_eq!(s.peak_inflight(15), 1);
+    }
+
+    #[test]
+    fn interleaved_matches_megatron_warmup_bound() {
+        let s = Schedule::build(ScheduleKind::Interleaved1F1B { chunks: 2 }, 4, 8).unwrap();
+        s.check_invariants().unwrap();
+        // (p−1)·2 + (v−1)·p + 1 = 6 + 4 + 1 = 11 units on stage 0.
+        assert_eq!(s.analytic_inflight(0), 11);
+        for st in 0..4 {
+            assert_eq!(s.peak_inflight(st), s.analytic_inflight(st), "stage {st}");
+        }
+        // Per-stage *bytes* exceed plain 1F1B: 11 units / v=2 = 5.5 mb-equiv > 4.
+        let plain = Schedule::build(ScheduleKind::OneFOneB, 4, 8).unwrap();
+        assert!(s.analytic_inflight(0) > 2 * plain.analytic_inflight(0));
+    }
+
+    #[test]
+    fn every_stage_runs_2m_ops() {
+        let m = 12;
+        for kind in [ScheduleKind::GPipe, ScheduleKind::OneFOneB] {
+            let s = Schedule::build(kind, 6, m).unwrap();
+            for ops in &s.ops {
+                assert_eq!(ops.len() as u64, 2 * m);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_config_rejected() {
+        assert!(Schedule::build(ScheduleKind::GPipe, 0, 4).is_err());
+        assert!(Schedule::build(ScheduleKind::GPipe, 4, 0).is_err());
+        assert!(Schedule::build(ScheduleKind::Interleaved1F1B { chunks: 0 }, 4, 4).is_err());
+    }
+}

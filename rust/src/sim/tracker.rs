@@ -1,0 +1,171 @@
+//! Tagged memory timeline: the simulator's (and validator's) common currency.
+//!
+//! Every simulated allocation/free is recorded against a [`MemClass`]; the
+//! timeline tracks instantaneous and peak usage per class and overall —
+//! exactly the decomposition of the paper's tables (params / grads /
+//! optimizer / activations / buffers).
+
+use std::collections::HashMap;
+
+/// Memory classes matching the paper's accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemClass {
+    Params,
+    Gradients,
+    Optimizer,
+    Activations,
+    CommBuffers,
+    Other,
+}
+
+impl MemClass {
+    pub const ALL: [MemClass; 6] = [
+        MemClass::Params,
+        MemClass::Gradients,
+        MemClass::Optimizer,
+        MemClass::Activations,
+        MemClass::CommBuffers,
+        MemClass::Other,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MemClass::Params => "params",
+            MemClass::Gradients => "gradients",
+            MemClass::Optimizer => "optimizer",
+            MemClass::Activations => "activations",
+            MemClass::CommBuffers => "comm_buffers",
+            MemClass::Other => "other",
+        }
+    }
+}
+
+/// One recorded event (for trace export / debugging).
+#[derive(Debug, Clone, Copy)]
+pub struct MemEvent {
+    /// Logical time (event index or schedule tick).
+    pub time: u64,
+    pub class: MemClass,
+    /// Positive = alloc, negative = free.
+    pub delta: i64,
+}
+
+/// Per-device tagged memory timeline.
+#[derive(Debug, Clone, Default)]
+pub struct MemoryTimeline {
+    current: HashMap<MemClass, u64>,
+    peak: HashMap<MemClass, u64>,
+    total_current: u64,
+    total_peak: u64,
+    /// Time of the total peak.
+    total_peak_time: u64,
+    events: Vec<MemEvent>,
+    /// Record individual events (disable for large sweeps).
+    pub record_events: bool,
+}
+
+impl MemoryTimeline {
+    pub fn new() -> Self {
+        Self { record_events: true, ..Default::default() }
+    }
+
+    /// Allocate `bytes` of `class` at logical time `time`.
+    pub fn alloc(&mut self, time: u64, class: MemClass, bytes: u64) {
+        let c = self.current.entry(class).or_insert(0);
+        *c += bytes;
+        let cur = *c;
+        let p = self.peak.entry(class).or_insert(0);
+        *p = (*p).max(cur);
+        self.total_current += bytes;
+        if self.total_current > self.total_peak {
+            self.total_peak = self.total_current;
+            self.total_peak_time = time;
+        }
+        if self.record_events {
+            self.events.push(MemEvent { time, class, delta: bytes as i64 });
+        }
+    }
+
+    /// Free `bytes` of `class`. Panics (debug) on underflow — a sim bug.
+    pub fn free(&mut self, time: u64, class: MemClass, bytes: u64) {
+        let c = self.current.entry(class).or_insert(0);
+        debug_assert!(*c >= bytes, "freeing {bytes} from {} holding {}", class.name(), *c);
+        *c = c.saturating_sub(bytes);
+        self.total_current = self.total_current.saturating_sub(bytes);
+        if self.record_events {
+            self.events.push(MemEvent { time, class, delta: -(bytes as i64) });
+        }
+    }
+
+    pub fn current(&self, class: MemClass) -> u64 {
+        self.current.get(&class).copied().unwrap_or(0)
+    }
+
+    pub fn peak(&self, class: MemClass) -> u64 {
+        self.peak.get(&class).copied().unwrap_or(0)
+    }
+
+    pub fn total_current(&self) -> u64 {
+        self.total_current
+    }
+
+    /// Peak of the *sum* (not the sum of per-class peaks).
+    pub fn total_peak(&self) -> u64 {
+        self.total_peak
+    }
+
+    pub fn total_peak_time(&self) -> u64 {
+        self.total_peak_time
+    }
+
+    pub fn events(&self) -> &[MemEvent] {
+        &self.events
+    }
+
+    /// Per-class peak summary.
+    pub fn summary(&self) -> Vec<(MemClass, u64)> {
+        MemClass::ALL.iter().map(|&c| (c, self.peak(c))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_sum_not_per_class_sum() {
+        let mut t = MemoryTimeline::new();
+        t.alloc(0, MemClass::Params, 100);
+        t.alloc(1, MemClass::Activations, 50);
+        t.free(2, MemClass::Activations, 50);
+        t.alloc(3, MemClass::Gradients, 20);
+        // total peak was 150 at time 1; per-class peaks: 100 + 50 + 20 = 170.
+        assert_eq!(t.total_peak(), 150);
+        assert_eq!(t.total_peak_time(), 1);
+        assert_eq!(t.peak(MemClass::Params) + t.peak(MemClass::Activations) + t.peak(MemClass::Gradients), 170);
+        assert_eq!(t.total_current(), 120);
+    }
+
+    #[test]
+    fn free_then_alloc_cycles() {
+        let mut t = MemoryTimeline::new();
+        for i in 0..10 {
+            t.alloc(i, MemClass::Activations, 10);
+        }
+        for i in 10..20 {
+            t.free(i, MemClass::Activations, 10);
+        }
+        assert_eq!(t.current(MemClass::Activations), 0);
+        assert_eq!(t.peak(MemClass::Activations), 100);
+        assert_eq!(t.events().len(), 20);
+    }
+
+    #[test]
+    fn event_recording_optional() {
+        let mut t = MemoryTimeline::new();
+        t.record_events = false;
+        t.alloc(0, MemClass::Other, 5);
+        assert!(t.events().is_empty());
+        assert_eq!(t.total_peak(), 5);
+    }
+}

@@ -1,0 +1,83 @@
+//! End-to-end trainer: synthetic corpus generation, the training loop over the
+//! [`crate::coordinator::PipelineCoordinator`], loss logging and the
+//! measured-vs-analytical memory validation (experiment E3).
+
+pub mod data;
+pub mod validate;
+
+pub use data::SyntheticCorpus;
+pub use validate::MemoryValidation;
+
+use crate::config::{LiveSchedule, TrainingConfig};
+use crate::coordinator::PipelineCoordinator;
+use crate::runtime::{ArtifactManifest, Runtime};
+use crate::sim::{Schedule, ScheduleKind};
+use std::sync::Arc;
+
+/// Result of a completed training run.
+pub struct TrainingRun {
+    /// (step, loss) series.
+    pub losses: Vec<(u64, f32)>,
+    /// Final memory validation (E3).
+    pub validation: MemoryValidation,
+    /// Mean wall time per step (ms).
+    pub mean_step_ms: f64,
+}
+
+/// Run the full mini training loop and print progress. Returns the loss
+/// series and the E3 validation.
+pub fn run_training(manifest: ArtifactManifest, cfg: TrainingConfig) -> anyhow::Result<TrainingRun> {
+    let runtime = Arc::new(Runtime::load(manifest)?);
+    println!(
+        "loaded {} executables on {} (pp={}, b={}, s={})",
+        runtime.manifest.executables.len(),
+        runtime.platform(),
+        cfg.pp,
+        cfg.micro_batch,
+        cfg.seq_len
+    );
+    let vocab = runtime.manifest.vocab_size as u32;
+    let manifest = runtime.manifest.clone();
+    let mut coord = PipelineCoordinator::new(runtime, cfg.clone())?;
+    println!("model: {} params across {} stages", coord.total_params(), cfg.pp);
+
+    let mut corpus = SyntheticCorpus::new(vocab, 4, cfg.seed);
+    let tokens_per_mb = (cfg.micro_batch * cfg.seq_len) as usize;
+    let mut losses = Vec::with_capacity(cfg.steps as usize);
+    let mut total_ms = 0.0;
+    for step in 1..=cfg.steps {
+        let batch = corpus.step_batch(cfg.dp, cfg.num_microbatches, tokens_per_mb);
+        let stats = coord.step(&batch)?;
+        total_ms += stats.wall_ms;
+        losses.push((step, stats.loss));
+        if step == 1 || step % cfg.log_every == 0 || step == cfg.steps {
+            println!(
+                "step {:>5}  loss {:.4}  ({:.0} ms)",
+                step, stats.loss, stats.wall_ms
+            );
+        }
+    }
+
+    // E3 validation: measured peaks vs manifest-exact predictions.
+    let kind = match cfg.schedule {
+        LiveSchedule::GPipe => ScheduleKind::GPipe,
+        LiveSchedule::OneFOneB => ScheduleKind::OneFOneB,
+    };
+    let sched = Schedule::build(kind, cfg.pp, cfg.num_microbatches)?;
+    let inflight: Vec<u64> = (0..cfg.pp).map(|s| sched.analytic_inflight(s)).collect();
+    let opt_shard = if cfg.zero_os { cfg.dp } else { 1 };
+    let validation = MemoryValidation::build(
+        &manifest,
+        &coord.memory_snapshots(),
+        &inflight,
+        opt_shard,
+    )?;
+    println!("{}", validation.render());
+    println!("max relative error: {:.2}%", 100.0 * validation.max_error());
+
+    Ok(TrainingRun {
+        losses,
+        validation,
+        mean_step_ms: total_ms / cfg.steps.max(1) as f64,
+    })
+}

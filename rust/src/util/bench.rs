@@ -1,0 +1,113 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations, reports mean / p50 / p95 / throughput. Used by every
+//! `benches/*.rs` target (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+
+    /// Mean iterations per second.
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Benchmark `f`, auto-scaling the iteration count to ~`budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    let mut warm_iters = 0u64;
+    while t0.elapsed() < budget / 10 {
+        f();
+        warm_iters += 1;
+        if warm_iters >= 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = (t0.elapsed().as_nanos() as f64 / warm_iters as f64).max(1.0);
+    let target_iters = ((budget.as_nanos() as f64 / per_iter) as u64).clamp(5, 1_000_000);
+
+    // Timed samples (batch small ops to reduce timer noise).
+    let batch = (100.0 / per_iter).max(1.0) as u64;
+    let samples = (target_iters / batch).clamp(5, 10_000);
+    let mut times: Vec<f64> = Vec::with_capacity(samples as usize);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        times.push(t.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples * batch,
+        mean_ns: mean,
+        p50_ns: times[times.len() / 2],
+        p95_ns: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+        min_ns: times[0],
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box wrapper).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", Duration::from_millis(50), || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("µs"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities: a JSON parser (for the artifact manifest),
+//! a deterministic RNG (SplitMix64 / xoshiro256**), and a micro-benchmark
+//! harness — the repo builds fully offline with no external crates beyond
+//! `xla` and `anyhow`.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng64;

@@ -1,0 +1,161 @@
+//! Cross-module integration: the analytical model end-to-end — every paper
+//! number flows config → model → analysis → report, plus cross-checks the
+//! unit tests can't express (tables agreeing with each other).
+
+use dsmem::analysis::{MemoryModel, Overheads, StagePlan, StageSplit, ZeroStrategy};
+use dsmem::config::{ActivationConfig, CaseStudy, Dtype, ModelConfig, ParallelConfig, RecomputePolicy};
+use dsmem::model::CountMode;
+use dsmem::report::tables::paper_table;
+
+fn paper_mm() -> MemoryModel {
+    let cs = CaseStudy::paper();
+    MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes)
+}
+
+#[test]
+fn tables_3_and_4_agree_on_totals() {
+    let mm = paper_mm();
+    assert_eq!(mm.param_table().total_params(), mm.stage_plan().total_params());
+}
+
+#[test]
+fn table6_replication_overhead_vs_table4() {
+    // Sum of per-device params over one stage's (TP × EP-plane) devices must
+    // exceed the stage's logical total (norms, routers and shared experts
+    // are replicated) but only by the replicated fraction.
+    let cs = CaseStudy::paper();
+    let mm = paper_mm();
+    let plan = mm.stage_plan();
+    let dev = mm.device_static_params();
+    let devices = cs.parallel.devices_per_stage();
+    let summed = dev.non_moe_params() * devices
+        - dev.mla * devices // MLA is TP-split: count once per TP group
+        + dev.mla * devices
+        + dev.moe_params() * devices;
+    // Simpler invariant: per-device total × devices ≥ stage params.
+    assert!(summed >= plan.stages[1].params);
+    // And the TP-partitioned parts alone reassemble exactly:
+    // MLA split set × tp + replicated parts... asserted at module level; here
+    // just sanity-check the per-device total is less than the whole stage.
+    assert!(dev.total_params() < plan.stages[1].params);
+}
+
+#[test]
+fn zero_table_composes_with_activation_table() {
+    // DeviceMemoryReport must equal ZeroRow + activation bytes exactly when
+    // overheads are disabled.
+    let mm = paper_mm();
+    let act = ActivationConfig::paper(2);
+    for z in ZeroStrategy::ALL {
+        let rep = mm.device_memory(&act, z, Overheads::none());
+        let zr = mm.zero_report();
+        let row = zr.row(z);
+        let ar = mm.activation_report(&act);
+        assert_eq!(
+            rep.total_bytes(),
+            row.total_bytes() + ar.total_stage_bytes(act.recompute),
+            "{z:?}"
+        );
+    }
+}
+
+#[test]
+fn v3_against_known_hf_config_totals() {
+    // Cross-check our parameter algebra against the publicly known totals:
+    // DeepSeek-v3 = 671B total / ~37B activated. We verify total & per-token
+    // activated params (MLA + shared + top-8 routed + embeddings).
+    let m = ModelConfig::deepseek_v3();
+    let mm = paper_mm();
+    assert_eq!(mm.param_table().total_params(), 671_026_522_112);
+
+    let activated_moe_layer = dsmem::model::moe::router_params(&m)
+        + dsmem::model::moe::params_per_expert(&m)
+            * (m.num_experts_per_tok + m.n_shared_experts);
+    let activated = dsmem::model::embedding::embedding_params(&m)
+        + dsmem::model::embedding::head_params(&m)
+        + (dsmem::model::mla::params_per_layer(&m, CountMode::PaperCompat) + 16384)
+            * m.num_hidden_layers
+        + dsmem::model::dense::ffn_params_per_layer(&m) * m.first_k_dense
+        + activated_moe_layer * m.num_moe_layers();
+    let b = activated as f64 / 1e9;
+    assert!((36.0..39.0).contains(&b), "activated ≈ {b} B, expected ~37 B");
+}
+
+#[test]
+fn every_table_renders_for_v2_and_mini() {
+    for model in [ModelConfig::deepseek_v2(), ModelConfig::mini()] {
+        let mut cs = CaseStudy::paper();
+        // Pick parallelism valid for each model.
+        cs.parallel = if model.name == "deepseek-mini" {
+            ParallelConfig { dp: 1, tp: 1, pp: 2, ep: 1, etp: 1 }
+        } else {
+            ParallelConfig { dp: 16, tp: 2, pp: 10, ep: 8, etp: 1 }
+        };
+        if model.name == "deepseek-mini" {
+            cs.activation.sp = 1;
+            cs.activation.seq_len = 128;
+        }
+        cs.model = model;
+        cs.validate().unwrap();
+        for n in 1..=10u8 {
+            let t = paper_table(&cs, n).unwrap();
+            assert!(!t.rows.is_empty(), "table {n} empty for {}", cs.model.name);
+        }
+    }
+}
+
+#[test]
+fn recompute_orderings_hold_everywhere() {
+    // AC Full ≤ Selective ≤ None for every (model, b).
+    for model in [ModelConfig::deepseek_v3(), ModelConfig::deepseek_v2()] {
+        let cs = CaseStudy::paper();
+        let mut parallel = cs.parallel;
+        if StageSplit::FrontLoaded
+            .layer_counts(model.num_hidden_layers, parallel.pp)
+            .is_err()
+        {
+            // v2's 60 layers split front-loaded over 16 stages would leave an
+            // empty last stage; PP10 is its natural even split.
+            parallel.pp = 10;
+        }
+        let mm = MemoryModel::new(&model, &parallel, cs.dtypes);
+        for b in [1, 2, 4, 8] {
+            let rep = mm.activation_report(&ActivationConfig::paper(b));
+            let none = rep.total_stage_bytes(RecomputePolicy::None);
+            let sel = rep.mla_stage_bytes(RecomputePolicy::SelectiveAttention)
+                + rep.moe_stage_bytes(RecomputePolicy::SelectiveAttention);
+            let full = rep.total_stage_bytes(RecomputePolicy::Full);
+            assert!(full < sel && sel < none, "{} b={b}", model.name);
+        }
+    }
+}
+
+#[test]
+fn stage_plans_cover_all_layers_for_many_pp() {
+    let m = ModelConfig::deepseek_v3();
+    for pp in [1u64, 2, 4, 8, 16] {
+        for split in [StageSplit::FrontLoaded, StageSplit::Balanced] {
+            let plan = StagePlan::build(&m, pp, split, CountMode::PaperCompat);
+            assert_eq!(plan.total_params(), 671_026_522_112, "pp={pp}");
+            let layers: u64 = plan.stages.iter().map(|s| s.num_layers).sum();
+            assert_eq!(layers, 61);
+        }
+    }
+}
+
+#[test]
+fn paper_gb_columns_within_rounding() {
+    // Every GB the paper prints must match ours within 1 GiB (the paper
+    // rounds aggressively).
+    let mm = paper_mm();
+    let plan = mm.stage_plan();
+    let checks = [
+        (plan.stage_bytes(0, Dtype::Bf16), 26.0),
+        (plan.stage_bytes(1, Dtype::Bf16), 86.0),
+        (plan.stage_bytes(15, Dtype::Bf16), 23.0),
+    ];
+    for (bytes, paper_gb) in checks {
+        let gib = bytes as f64 / dsmem::GIB;
+        assert!((gib - paper_gb).abs() < 1.0, "{gib} vs paper {paper_gb}");
+    }
+}

@@ -1,0 +1,119 @@
+//! Integration: the cluster simulator against the analytical model (the E2
+//! bridge), across schedules, ZeRO strategies and recompute policies.
+
+use dsmem::analysis::{ActivationReport, MemoryModel, ZeroStrategy};
+use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
+use dsmem::sim::{MemClass, Schedule, ScheduleKind, SimEngine};
+
+fn mm() -> MemoryModel {
+    let cs = CaseStudy::paper();
+    MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes)
+}
+
+#[test]
+fn sim_activation_peak_equals_analytic_for_every_stage_and_schedule() {
+    let mm = mm();
+    let act = ActivationConfig::paper(1);
+    let plan = mm.stage_plan();
+    for kind in [ScheduleKind::GPipe, ScheduleKind::OneFOneB] {
+        let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+        let res = eng.run(kind, 16).unwrap();
+        let sched = Schedule::build(kind, 16, 16).unwrap();
+        for st in &res.stages {
+            let ar = ActivationReport::build(
+                &mm.model,
+                &mm.parallel,
+                &act,
+                plan.stages[st.stage as usize].num_layers,
+            );
+            // Dense stages charge MLA-only for dense layers (documented
+            // conservative choice) — recompute the engine's per-mb figure.
+            let per_mb = ar.mla.device_bytes(act.recompute)
+                * plan.stages[st.stage as usize].num_layers
+                + ar.moe.device_bytes(act.recompute)
+                    * plan.stages[st.stage as usize].moe_layers;
+            assert_eq!(
+                st.timeline.peak(MemClass::Activations),
+                per_mb * sched.analytic_inflight(st.stage),
+                "{kind:?} stage {}",
+                st.stage
+            );
+        }
+    }
+}
+
+#[test]
+fn static_classes_match_zero_rows_scaled() {
+    // Params/grads/optimizer in the sim must track the ZeRO table for the
+    // analysed (heaviest) stage.
+    let mm = mm();
+    let act = ActivationConfig::paper(1);
+    for z in ZeroStrategy::ALL {
+        let eng = SimEngine::new(&mm, act, z);
+        let res = eng.run(ScheduleKind::OneFOneB, 8).unwrap();
+        let zr = mm.zero_report();
+        let row = zr.row(z);
+        let st = &res.stages[1]; // stages 1..14 are the analysed archetype
+        assert_eq!(st.timeline.peak(MemClass::Params), row.params_bytes, "{z:?}");
+        assert_eq!(st.timeline.peak(MemClass::Gradients), row.gradient_bytes);
+        assert_eq!(st.timeline.peak(MemClass::Optimizer), row.optimizer_bytes);
+    }
+}
+
+#[test]
+fn full_recompute_beats_gpipe_none_by_orders_of_magnitude() {
+    let mm = mm();
+    let none = SimEngine::new(&mm, ActivationConfig::paper(1), ZeroStrategy::OsG)
+        .run(ScheduleKind::GPipe, 16)
+        .unwrap();
+    let full = SimEngine::new(&mm, ActivationConfig::paper_full_recompute(1), ZeroStrategy::OsG)
+        .run(ScheduleKind::GPipe, 16)
+        .unwrap();
+    let a = none.peak_stage().timeline.peak(MemClass::Activations);
+    let b = full.peak_stage().timeline.peak(MemClass::Activations);
+    assert!(a / b > 50, "AC none {a} vs full {b}");
+}
+
+#[test]
+fn interleaved_holds_more_than_plain_1f1b() {
+    // Megatron's interleaved schedule trades activation memory for bubble:
+    // with enough microbatches (m ≥ warmup bound), the first stage holds
+    // (p−1)·2 + (v−1)·p + 1 chunk-units vs 1F1B's p full microbatches.
+    let mm = mm();
+    let act = ActivationConfig::paper(1);
+    let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+    let plain = eng.run(ScheduleKind::OneFOneB, 32).unwrap();
+    let inter = eng.run(ScheduleKind::Interleaved1F1B { chunks: 2 }, 32).unwrap();
+    assert!(
+        inter.stages[0].timeline.peak(MemClass::Activations)
+            > plain.stages[0].timeline.peak(MemClass::Activations),
+        "inter {} vs plain {}",
+        inter.stages[0].timeline.peak(MemClass::Activations),
+        plain.stages[0].timeline.peak(MemClass::Activations),
+    );
+}
+
+#[test]
+fn comm_buffers_stay_in_paper_band() {
+    // §6: transient comm buffers 0.8–2 GB per device.
+    let mm = mm();
+    let act = ActivationConfig::paper(1);
+    let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+    let res = eng.run(ScheduleKind::OneFOneB, 8).unwrap();
+    for st in &res.stages {
+        let peak = st.timeline.peak(MemClass::CommBuffers) as f64 / dsmem::GIB;
+        assert!((0.1..=2.0).contains(&peak), "stage {} buffers {peak} GiB", st.stage);
+    }
+}
+
+#[test]
+fn fragmentation_replay_stays_in_paper_band() {
+    let mm = mm();
+    let mut eng = SimEngine::new(&mm, ActivationConfig::paper(1), ZeroStrategy::OsG);
+    eng.simulate_allocator = true;
+    let res = eng.run(ScheduleKind::OneFOneB, 8).unwrap();
+    for st in res.stages.iter().take(4) {
+        let f = st.alloc_stats.unwrap().fragmentation();
+        assert!((0.0..0.35).contains(&f), "stage {} frag {f}", st.stage);
+    }
+}

@@ -1,0 +1,175 @@
+//! Integration over the live runtime (requires `make artifacts`): loads the
+//! AOT bundle, runs real pipeline training steps on CPU-PJRT, and checks
+//! loss behaviour, determinism, schedule effects on residual residency, and
+//! the E3 measured-vs-analytical validation.
+//!
+//! Each test skips (with a notice) when artifacts are absent, so `cargo
+//! test` stays green on a fresh checkout.
+
+use dsmem::config::{LiveSchedule, TrainingConfig};
+use dsmem::coordinator::PipelineCoordinator;
+use dsmem::runtime::{ArtifactManifest, MemTag, Runtime};
+use dsmem::sim::{Schedule, ScheduleKind};
+use dsmem::trainer::{MemoryValidation, SyntheticCorpus};
+use std::path::Path;
+use std::sync::Arc;
+
+fn artifacts() -> Option<ArtifactManifest> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactManifest::load(dir).unwrap())
+}
+
+/// Load the runtime once *per test* (PjRtClient is Rc-based, so it cannot
+/// cross test threads); tests that need several coordinators share one load.
+fn load_runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::load(artifacts().unwrap()).unwrap())
+}
+
+fn mini_cfg(man: &ArtifactManifest) -> TrainingConfig {
+    let mut cfg = TrainingConfig::mini_default();
+    cfg.pp = man.pp;
+    cfg.micro_batch = man.micro_batch;
+    cfg.seq_len = man.seq_len;
+    cfg.num_microbatches = 2;
+    cfg.steps = 1;
+    cfg
+}
+
+#[test]
+fn manifest_total_params_matches_rust_mini_model() {
+    let Some(man) = artifacts() else { return };
+    // The manifest's parameter count must equal what the Rust-side shape
+    // algebra predicts for ModelConfig::mini() (strict counting + the q/kv
+    // LoRA norms live inside the per-layer tensors here).
+    let m = dsmem::config::ModelConfig::mini();
+    let census =
+        dsmem::model::ModelParams::build(&m, dsmem::model::CountMode::PaperCompat);
+    // PaperCompat double-counts the LoRA norms (they're real tensors once in
+    // the artifacts), so subtract one copy per layer; add the final norm.
+    let expected = census.total() - (m.q_lora_rank + m.kv_lora_rank) * m.num_hidden_layers
+        + m.hidden_size;
+    assert_eq!(man.total_params, expected);
+}
+
+#[test]
+fn one_step_trains_and_validates_memory() {
+    let Some(man) = artifacts() else { return };
+    let cfg = mini_cfg(&man);
+    let rt = load_runtime();
+    let man = rt.manifest.clone();
+    let mut coord = PipelineCoordinator::new(rt, cfg.clone()).unwrap();
+
+    let mut corpus = SyntheticCorpus::new(man.vocab_size as u32, 4, 1);
+    let data = corpus.step_batch(1, 2, (cfg.micro_batch * cfg.seq_len) as usize);
+    let stats = coord.step(&data).unwrap();
+    assert!(stats.loss.is_finite());
+    // Untrained loss ≈ ln(V) = 7.62 for V=2048.
+    assert!((6.5..9.0).contains(&stats.loss), "loss {}", stats.loss);
+
+    let sched = Schedule::build(ScheduleKind::OneFOneB, cfg.pp, cfg.num_microbatches).unwrap();
+    let inflight: Vec<u64> = (0..cfg.pp).map(|s| sched.analytic_inflight(s)).collect();
+    let val =
+        MemoryValidation::build(&man, &coord.memory_snapshots(), &inflight, 1).unwrap();
+    assert!(
+        val.max_error() < 0.01,
+        "measured vs analytical error {:.3}%\n{}",
+        100.0 * val.max_error(),
+        val.render()
+    );
+}
+
+#[test]
+fn loss_is_deterministic_for_fixed_seed() {
+    let Some(man) = artifacts() else { return };
+    let cfg = mini_cfg(&man);
+    let shared = load_runtime();
+    let run = |seed: u64| {
+        let rt = shared.clone();
+        let mut coord = PipelineCoordinator::new(rt, cfg.clone()).unwrap();
+        let mut corpus = SyntheticCorpus::new(man.vocab_size as u32, 4, seed);
+        let data = corpus.step_batch(1, 2, (cfg.micro_batch * cfg.seq_len) as usize);
+        coord.step(&data).unwrap().loss
+    };
+    assert_eq!(run(7), run(7));
+    assert_ne!(run(7), run(8));
+}
+
+#[test]
+fn gpipe_residual_peak_exceeds_1f1b() {
+    let Some(man) = artifacts() else { return };
+    let mut cfg = mini_cfg(&man);
+    cfg.num_microbatches = 4;
+
+    let shared = load_runtime();
+    let peak_res = |schedule: LiveSchedule| {
+        let rt = shared.clone();
+        let mut c = cfg.clone();
+        c.schedule = schedule;
+        let mut coord = PipelineCoordinator::new(rt, c).unwrap();
+        let mut corpus = SyntheticCorpus::new(man.vocab_size as u32, 4, 3);
+        let data = corpus.step_batch(1, 4, (cfg.micro_batch * cfg.seq_len) as usize);
+        coord.step(&data).unwrap();
+        coord.memory_snapshots()[0].peak_of(MemTag::Residuals)
+    };
+    let gpipe = peak_res(LiveSchedule::GPipe);
+    let one_f = peak_res(LiveSchedule::OneFOneB);
+    // Stage 0 under GPipe holds all 4 microbatches; under 1F1B only pp = 2.
+    assert!(gpipe > one_f, "gpipe {gpipe} vs 1f1b {one_f}");
+    assert_eq!(gpipe, 2 * one_f);
+}
+
+#[test]
+fn verbose_activations_hold_intermediates() {
+    let Some(man) = artifacts() else { return };
+    if man.stages.iter().any(|s| s.fwd_verbose.is_none()) {
+        eprintln!("skipping: artifacts built without verbose forwards");
+        return;
+    }
+    let mut cfg = mini_cfg(&man);
+    cfg.verbose_activations = true;
+    let rt = load_runtime();
+    let mut coord = PipelineCoordinator::new(rt, cfg.clone()).unwrap();
+    let mut corpus = SyntheticCorpus::new(man.vocab_size as u32, 4, 5);
+    let data = corpus.step_batch(1, 2, (cfg.micro_batch * cfg.seq_len) as usize);
+    coord.step(&data).unwrap();
+    let snaps = coord.memory_snapshots();
+    // AC-None residency: intermediates were live alongside residuals.
+    assert!(snaps[0].peak_of(MemTag::Intermediates) > snaps[0].peak_of(MemTag::Residuals));
+}
+
+#[test]
+fn dp2_replicas_agree_after_all_reduce() {
+    let Some(man) = artifacts() else { return };
+    let mut cfg = mini_cfg(&man);
+    cfg.dp = 2;
+    let rt = load_runtime();
+    let mut coord = PipelineCoordinator::new(rt, cfg.clone()).unwrap();
+    let mut corpus = SyntheticCorpus::new(man.vocab_size as u32, 4, 9);
+    let data = corpus.step_batch(2, 2, (cfg.micro_batch * cfg.seq_len) as usize);
+    let stats = coord.step(&data).unwrap();
+    assert!(stats.loss.is_finite());
+}
+
+#[test]
+fn zero_os_halves_owned_optimizer_state() {
+    let Some(man) = artifacts() else { return };
+    let mut cfg = mini_cfg(&man);
+    cfg.dp = 2;
+    cfg.zero_os = true;
+    let rt = load_runtime();
+    let coord = PipelineCoordinator::new(rt, cfg).unwrap();
+    let snaps = coord.memory_snapshots();
+    let man2 = artifacts().unwrap();
+    for (i, snap) in snaps.iter().enumerate() {
+        let params = man2.stage_param_bytes(i).unwrap();
+        let opt = snap.peak_of(MemTag::OptimizerM) + snap.peak_of(MemTag::OptimizerV);
+        // Round-robin sharding over 2 replicas ≈ half the state (tensor
+        // granularity → allow 60/40 skew).
+        let frac = opt as f64 / (2 * params) as f64;
+        assert!((0.3..0.7).contains(&frac), "stage {i}: {frac}");
+    }
+}

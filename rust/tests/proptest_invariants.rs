@@ -1,0 +1,220 @@
+//! Property tests (hand-rolled generator sweep — the offline build has no
+//! proptest crate): randomized (model, parallel, activation) configurations
+//! must uphold the analytical model's invariants.
+
+use dsmem::analysis::{MemoryModel, StagePlan, StageSplit, ZeroStrategy};
+use dsmem::config::{ActivationConfig, Dtype, DtypePolicy, ModelConfig, ParallelConfig, RecomputePolicy};
+use dsmem::model::CountMode;
+use dsmem::parallel::{build_groups, GroupKind, RankGrid};
+use dsmem::util::Rng64;
+
+const CASES: usize = 200;
+
+/// Random valid model config (DeepSeek-shaped, divisibility respected).
+fn random_model(rng: &mut Rng64) -> ModelConfig {
+    let nh = [4u64, 8, 16, 32, 64, 128][rng.below(6) as usize];
+    let l = rng.range(4, 80);
+    ModelConfig {
+        name: "random".into(),
+        hidden_size: 64 * rng.range(2, 120),
+        moe_intermediate_size: 64 * rng.range(1, 40),
+        intermediate_size: 64 * rng.range(4, 300),
+        qk_nope_head_dim: [32u64, 64, 128][rng.below(3) as usize],
+        num_attention_heads: nh,
+        q_lora_rank: 64 * rng.range(1, 30),
+        qk_rope_head_dim: [16u64, 32, 64][rng.below(3) as usize],
+        kv_lora_rank: 64 * rng.range(1, 10),
+        n_routed_experts: [8u64, 16, 32, 64, 128, 256][rng.below(6) as usize],
+        n_shared_experts: rng.range(1, 3),
+        num_experts_per_tok: rng.range(1, 8).min(8),
+        num_hidden_layers: l,
+        first_k_dense: rng.below(l.min(4)),
+        vocab_size: 1000 * rng.range(2, 150),
+        tie_word_embeddings: rng.below(2) == 0,
+    }
+}
+
+/// Random parallel config valid for `m` (EP | N, EDP integral, plan non-empty).
+fn random_parallel(rng: &mut Rng64, m: &ModelConfig) -> ParallelConfig {
+    loop {
+        let tp = [1u64, 2, 4, 8][rng.below(4) as usize];
+        let pp = [1u64, 2, 4, 8, 16][rng.below(5) as usize];
+        let dp = [1u64, 2, 4, 8, 16, 32][rng.below(6) as usize];
+        let ep_choices: Vec<u64> =
+            [1u64, 2, 4, 8, 16].iter().copied().filter(|e| m.n_routed_experts % e == 0).collect();
+        let ep = ep_choices[rng.below(ep_choices.len() as u64) as usize];
+        let p = ParallelConfig { dp, tp, pp, ep, etp: 1 };
+        if p.validate().is_ok()
+            && StageSplit::FrontLoaded.layer_counts(m.num_hidden_layers, pp).is_ok()
+            && m.attn_inner_dim() % tp == 0
+            && m.intermediate_size % tp == 0
+            && m.vocab_size % tp == 0
+        {
+            return p;
+        }
+    }
+}
+
+#[test]
+fn stage_plans_partition_layers_and_params() {
+    let mut rng = Rng64::new(0xA11CE);
+    for case in 0..CASES {
+        let m = random_model(&mut rng);
+        if m.validate().is_err() {
+            continue;
+        }
+        for split in [StageSplit::FrontLoaded, StageSplit::Balanced] {
+            for pp in [1u64, 2, 4, 8] {
+                if split.layer_counts(m.num_hidden_layers, pp).is_err() {
+                    continue;
+                }
+                let plan = StagePlan::build(&m, pp, split.clone(), CountMode::Strict);
+                let total: u64 = plan.stages.iter().map(|s| s.num_layers).sum();
+                assert_eq!(total, m.num_hidden_layers, "case {case}");
+                let strict = dsmem::model::ModelParams::build(&m, CountMode::Strict).total();
+                assert_eq!(plan.total_params(), strict, "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_strategies_never_increase_memory() {
+    let mut rng = Rng64::new(0xBEEF);
+    for case in 0..CASES {
+        let m = random_model(&mut rng);
+        if m.validate().is_err() {
+            continue;
+        }
+        let p = random_parallel(&mut rng, &m);
+        let mm = MemoryModel::new(&m, &p, DtypePolicy::paper_bf16());
+        let zr = mm.zero_report();
+        let totals: Vec<u64> = ZeroStrategy::ALL.iter().map(|&z| zr.row(z).total_bytes()).collect();
+        for w in totals.windows(2) {
+            assert!(w[0] >= w[1], "case {case}: {totals:?}");
+        }
+        // Sharded params never exceed unsharded.
+        assert!(zr.sharded_params <= zr.device_params, "case {case}");
+    }
+}
+
+#[test]
+fn device_partition_bounded_by_stage_total() {
+    // One device never stores more than the whole stage (strict counting),
+    // and TP/EP degrees only shrink its share.
+    let mut rng = Rng64::new(0xCAFE);
+    for case in 0..CASES {
+        let m = random_model(&mut rng);
+        if m.validate().is_err() {
+            continue;
+        }
+        let p = random_parallel(&mut rng, &m);
+        let mm = MemoryModel::new(&m, &p, DtypePolicy::paper_bf16()).with_mode(CountMode::Strict);
+        let plan = mm.stage_plan();
+        let dev = mm.device_static_params();
+        let stage_total = plan.stages[plan.heaviest_stage()].params
+            + dsmem::model::dense::final_norm_params(&m); // last stage may add it
+        assert!(
+            dev.total_params() <= stage_total + m.hidden_size,
+            "case {case}: dev {} > stage {stage_total}",
+            dev.total_params()
+        );
+    }
+}
+
+#[test]
+fn activation_tapes_scale_linearly_and_order_correctly() {
+    let mut rng = Rng64::new(0xD00D);
+    for case in 0..CASES {
+        let m = random_model(&mut rng);
+        if m.validate().is_err() {
+            continue;
+        }
+        let p = random_parallel(&mut rng, &m);
+        let s = 128 * rng.range(1, 8) * p.tp; // keep divisible by sp
+        let mk = |b: u64| ActivationConfig {
+            micro_batch: b,
+            seq_len: s,
+            sp: p.tp,
+            cp: 1,
+            recompute: RecomputePolicy::None,
+        };
+        let mm = MemoryModel::new(&m, &p, DtypePolicy::paper_bf16());
+        let r1 = mm.activation_report(&mk(1));
+        let r3 = mm.activation_report(&mk(3));
+        assert_eq!(
+            3 * r1.total_stage_bytes(RecomputePolicy::None),
+            r3.total_stage_bytes(RecomputePolicy::None),
+            "case {case}: not linear in b"
+        );
+        let none = r1.total_stage_bytes(RecomputePolicy::None);
+        let full = r1.total_stage_bytes(RecomputePolicy::Full);
+        assert!(full < none, "case {case}");
+    }
+}
+
+#[test]
+fn rank_grid_groups_always_partition() {
+    let mut rng = Rng64::new(0x51DE);
+    for case in 0..50 {
+        let m = random_model(&mut rng);
+        if m.validate().is_err() {
+            continue;
+        }
+        let p = random_parallel(&mut rng, &m);
+        let grid = RankGrid::new(p).unwrap();
+        for kind in [GroupKind::Dp, GroupKind::Tp, GroupKind::Pp, GroupKind::Ep, GroupKind::Edp] {
+            let groups = build_groups(&grid, kind);
+            let covered: u64 = groups.iter().map(|g| g.ranks.len() as u64).sum();
+            assert_eq!(covered, grid.world_size(), "case {case} {kind:?}");
+        }
+        // Round-trip every rank.
+        for r in 0..grid.world_size() {
+            assert_eq!(grid.rank(grid.coord(r)), r);
+        }
+    }
+}
+
+#[test]
+fn schedules_preserve_invariants_for_random_shapes() {
+    let mut rng = Rng64::new(0x7EA);
+    for _ in 0..100 {
+        let p = rng.range(1, 24);
+        let m = rng.range(p, p + 64); // m >= p keeps 1F1B well-formed
+        for kind in [
+            dsmem::sim::ScheduleKind::GPipe,
+            dsmem::sim::ScheduleKind::OneFOneB,
+            dsmem::sim::ScheduleKind::Interleaved1F1B { chunks: rng.range(1, 4) },
+        ] {
+            let s = dsmem::sim::Schedule::build(kind, p, m).unwrap();
+            s.check_invariants().unwrap();
+            for stage in 0..p {
+                if matches!(kind, dsmem::sim::ScheduleKind::GPipe | dsmem::sim::ScheduleKind::OneFOneB) {
+                    assert_eq!(s.peak_inflight(stage), s.analytic_inflight(stage));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn byte_model_scales_exactly_with_dtype_width() {
+    // The whole analysis is linear in bytes-per-element: fp32 weights must
+    // double every bf16 figure.
+    let mut rng = Rng64::new(0x900D);
+    for _ in 0..50 {
+        let m = random_model(&mut rng);
+        if m.validate().is_err() {
+            continue;
+        }
+        let p = random_parallel(&mut rng, &m);
+        let mm16 = MemoryModel::new(&m, &p, DtypePolicy::paper_bf16());
+        let mut d32 = DtypePolicy::paper_bf16();
+        d32.weight = Dtype::Fp32;
+        let mm32 = MemoryModel::new(&m, &p, d32);
+        assert_eq!(
+            2 * mm16.device_static_params().total_bytes(),
+            mm32.device_static_params().total_bytes()
+        );
+    }
+}
