@@ -1,9 +1,12 @@
 //! Bench E4: feasibility-sweep throughput — the library's "serving" hot path
 //! (a capacity planner evaluates thousands of configurations). Measures
-//! configs/second through the full analytical model.
+//! configs/second through the planner engine, and asserts that the
+//! `MemoryModel` facade's stage-plan/param-table memoization actually pays:
+//! a cached facade must beat rebuilding the census per query.
 
-use dsmem::analysis::{total::sweep, MemoryModel, Overheads};
-use dsmem::config::{ActivationConfig, CaseStudy, ParallelConfig};
+use dsmem::analysis::{MemoryModel, Overheads, ZeroStrategy};
+use dsmem::config::CaseStudy;
+use dsmem::planner::{plan, sweep_fixed, PlanQuery, SearchSpace};
 use dsmem::util::bench::{bench, black_box};
 use std::time::Duration;
 
@@ -11,52 +14,58 @@ fn main() {
     let cs = CaseStudy::paper();
     let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
 
-    // The packaged 36-point sweep.
+    // The packaged 36-point fixed-layout sweep (legacy shim path).
     let r = bench("sweep_36pt(b×AC×ZeRO)", Duration::from_secs(3), || {
-        black_box(sweep(&mm, &cs.activation, Overheads::paper_midpoint()));
+        black_box(sweep_fixed(&mm, &cs.activation, Overheads::paper_midpoint()));
     });
     r.report();
     println!("  → {:.0} configs/s\n", 36.0 * r.per_sec());
 
-    // A wide layout scan: every valid (tp, ep, pp) for a 1024-GPU fleet.
-    let r2 = bench("layout_scan_1024gpu", Duration::from_secs(3), || {
-        let mut best = u64::MAX;
-        for tp in [1u64, 2, 4, 8] {
-            for pp in [8u64, 16, 32] {
-                for ep in [4u64, 8, 16, 32] {
-                    let world = 1024;
-                    if world % (tp * pp) != 0 {
-                        continue;
-                    }
-                    let dp = world / (tp * pp);
-                    let p = ParallelConfig { dp, tp, pp, ep, etp: 1 };
-                    // Keep plans valid: the front-loaded split must not
-                    // produce an empty stage for this (l, pp).
-                    if p.validate().is_err()
-                        || dsmem::analysis::StageSplit::FrontLoaded.layer_counts(61, pp).is_err()
-                    {
-                        continue;
-                    }
-                    let mut act = ActivationConfig::paper(1);
-                    act.sp = tp;
-                    if act.validate().is_err() {
-                        continue;
-                    }
-                    let mm = MemoryModel::new(&cs.model, &p, cs.dtypes);
-                    let rep = mm.device_memory(
-                        &act,
-                        dsmem::analysis::ZeroStrategy::OsG,
-                        Overheads::paper_midpoint(),
-                    );
-                    best = best.min(rep.total_bytes());
-                }
-            }
-        }
-        black_box(best);
+    // The full planner query over the default 1024-GPU grid: enumerate,
+    // prune, evaluate in parallel, filter, frontier, rank.
+    let probe = plan(
+        &cs.model,
+        cs.dtypes,
+        &PlanQuery::new(SearchSpace::for_world(1024), 80 * dsmem::GIB as u64),
+    );
+    let valid = probe.evaluated.len();
+    let r2 = bench("planner_full_grid_world1024", Duration::from_secs(5), || {
+        let q = PlanQuery::new(SearchSpace::for_world(1024), 80 * dsmem::GIB as u64);
+        black_box(plan(&cs.model, cs.dtypes, &q));
     });
     r2.report();
+    println!(
+        "  → {} valid points ({} grid) → {:.0} configs/s, {} feasible, {} on frontier\n",
+        valid,
+        probe.full_grid,
+        valid as f64 * r2.per_sec(),
+        probe.feasible_count,
+        probe.frontier.len(),
+    );
 
-    // Single full device-memory evaluation.
+    // Facade memoization: repeated zero_report() on one MemoryModel reuses the
+    // cached StagePlan; the baseline constructs a fresh facade per query and
+    // re-walks the 61-layer parameter census every time.
+    mm.zero_report(); // warm the cache
+    let cached = bench("facade_zero_report_cached", Duration::from_secs(2), || {
+        black_box(mm.zero_report().row(ZeroStrategy::OsG).total_bytes());
+    });
+    cached.report();
+    let fresh = bench("facade_zero_report_fresh", Duration::from_secs(2), || {
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        black_box(mm.zero_report().row(ZeroStrategy::OsG).total_bytes());
+    });
+    fresh.report();
+    let speedup = fresh.mean_ns / cached.mean_ns;
+    println!("  → stage-plan cache speedup: {speedup:.1}×");
+    assert!(
+        cached.mean_ns < fresh.mean_ns,
+        "facade memoization regressed: cached {:.0} ns ≥ fresh {:.0} ns",
+        cached.mean_ns,
+        fresh.mean_ns,
+    );
+
+    // Single full device-memory evaluation through the cached facade.
     bench("device_memory_single", Duration::from_secs(2), || {
         black_box(mm.device_memory(
             &cs.activation,

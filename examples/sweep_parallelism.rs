@@ -2,12 +2,18 @@
 //! recompute) combinations fit DeepSeek-v3 training on an 80 GiB device —
 //! the decision the paper's analysis exists to inform.
 //!
+//! Both parts route through the `planner` subsystem: part 1 is the legacy
+//! fixed-layout (b × AC × ZeRO) sweep via `planner::sweep_fixed`, part 2 is
+//! a full grid query (`SearchSpace` → `plan`) replacing the hand-rolled
+//! nested loops this example used to carry.
+//!
 //! ```bash
 //! cargo run --release --example sweep_parallelism
 //! ```
 
-use dsmem::analysis::{total::sweep, MemoryModel, Overheads};
-use dsmem::config::{ActivationConfig, CaseStudy, ParallelConfig};
+use dsmem::analysis::{MemoryModel, Overheads, ZeroStrategy};
+use dsmem::config::{CaseStudy, RecomputePolicy};
+use dsmem::planner::{self, plan, PlanQuery, SearchSpace};
 use dsmem::report::{gib, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -21,7 +27,7 @@ fn main() -> anyhow::Result<()> {
         &["b", "recompute", "ZeRO", "total GiB", "fits"],
     );
     let mut fitting = 0;
-    let pts = sweep(&mm, &cs.activation, Overheads::paper_midpoint());
+    let pts = planner::sweep_fixed(&mm, &cs.activation, Overheads::paper_midpoint());
     for p in &pts {
         fitting += u32::from(p.fits_80g);
         t.row(vec![
@@ -35,45 +41,47 @@ fn main() -> anyhow::Result<()> {
     print!("{}", t.render());
     println!("{fitting}/{} combinations fit\n", pts.len());
 
-    // Part 2: vary TP and EP at fixed world size (DP adjusts), b=1, os+g.
+    // Part 2: the full layout grid at fixed world size (DP derived), b=1,
+    // os+g, no recompute — one planner query instead of nested loops.
+    let mut space = SearchSpace::for_world(1024);
+    space.pp = vec![16];
+    space.ep = vec![4, 8, 16, 32, 64]; // the EP axis the legacy loops swept
+    space.etp = vec![1];
+    space.sequence_parallel = vec![true]; // SP = TP as in Megatron
+    space.micro_batch = vec![1];
+    space.recompute = vec![RecomputePolicy::None];
+    space.zero = vec![ZeroStrategy::OsG];
+    let query = PlanQuery::new(space, hbm);
+    let res = plan(&cs.model, cs.dtypes, &query);
+
     let mut t2 = Table::new(
         "Layout sweep (world = 1024, PP16, b=1, os+g, AC none)",
         &["TP", "EP", "DP", "EDP", "static GiB", "P+G+O GiB", "act GiB", "total GiB", "fits"],
     );
-    for tp in [1u64, 2, 4, 8] {
-        for ep in [4u64, 8, 16, 32, 64] {
-            let dp = 1024 / (16 * tp);
-            let p = ParallelConfig { dp, tp, pp: 16, ep, etp: 1 };
-            if p.validate().is_err() || cs.model.n_routed_experts % ep != 0 {
-                continue;
-            }
-            let mut act = ActivationConfig::paper(1);
-            act.sp = tp; // SP tied to TP as in Megatron
-            if act.validate().is_err() {
-                continue;
-            }
-            let mm = MemoryModel::new(&cs.model, &p, cs.dtypes);
-            let rep = mm.device_memory(
-                &act,
-                dsmem::analysis::ZeroStrategy::OsG,
-                Overheads::paper_midpoint(),
-            );
-            t2.row(vec![
-                tp.to_string(),
-                ep.to_string(),
-                dp.to_string(),
-                p.edp().to_string(),
-                format!("{:.1}", gib(rep.params_bytes)),
-                format!(
-                    "{:.1}",
-                    gib(rep.params_bytes + rep.gradient_bytes + rep.optimizer_bytes)
-                ),
-                format!("{:.1}", gib(rep.activation_bytes)),
-                format!("{:.1}", gib(rep.total_bytes())),
-                if rep.total_bytes() <= hbm { "yes".into() } else { "-".into() },
-            ]);
-        }
+    for p in &res.evaluated {
+        t2.row(vec![
+            p.parallel.tp.to_string(),
+            p.parallel.ep.to_string(),
+            p.parallel.dp.to_string(),
+            p.parallel.edp().to_string(),
+            format!("{:.1}", gib(p.params_bytes)),
+            format!("{:.1}", gib(p.static_bytes())),
+            format!("{:.1}", gib(p.activation_bytes)),
+            format!("{:.1}", gib(p.total_bytes)),
+            if p.fits(hbm) { "yes".into() } else { "-".into() },
+        ]);
     }
     print!("{}", t2.render());
+
+    // Part 3 (new with the planner): the memory × bubble × params/dev Pareto
+    // frontier over the *whole* default grid — the "what should I run?" view.
+    let full = plan(&cs.model, cs.dtypes, &PlanQuery::new(SearchSpace::for_world(1024), hbm));
+    println!(
+        "\nfull grid: {} points → {} valid → {} feasible under 80 GiB",
+        full.full_grid,
+        full.evaluated.len(),
+        full.feasible_count
+    );
+    print!("{}", planner::report::frontier_table(&full).render());
     Ok(())
 }

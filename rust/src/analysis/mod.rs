@@ -9,7 +9,17 @@
 //! * [`total`]   — end-to-end per-device memory + §6 overheads, feasibility sweeps
 //!
 //! [`MemoryModel`] is the facade wiring a [`CaseStudy`]'s four config axes
-//! through all of the above.
+//! through all of the above. The facade memoizes the expensive sub-results —
+//! the [`StagePlan`] and [`ParamTable`], which walk every layer's parameter
+//! census — so repeated queries (`device_static_params`, `zero_report`,
+//! `activation_report`) reuse one census instead of rebuilding it per call.
+//!
+//! Configuration *search* lives in [`crate::planner`]: the historical ad-hoc
+//! sweeps (`total::sweep`, the hand-rolled loops in
+//! `examples/sweep_parallelism.rs`, the `sweep`/`bubble` CLI paths) are now
+//! thin shims over one grid-enumerating, validity-pruning, thread-parallel
+//! planning engine. `total::sweep` remains as the bit-identical compatibility
+//! entry point.
 
 pub mod activation;
 pub mod bubble;
@@ -27,10 +37,17 @@ pub use stages::{StagePlan, StageSplit};
 pub use total::{DeviceMemoryReport, Overheads};
 pub use zero::{ZeroReport, ZeroStrategy};
 
+use std::sync::OnceLock;
+
 use crate::config::{ActivationConfig, DtypePolicy, ModelConfig, ParallelConfig};
 use crate::model::CountMode;
 
 /// Facade over the full analytical model for one (model, parallel, dtype) triple.
+///
+/// The configuration fields are treated as frozen once the first query runs:
+/// the stage plan and parameter table are memoized behind [`OnceLock`]s keyed
+/// by construction (use [`MemoryModel::with_mode`] / [`MemoryModel::with_split`]
+/// to derive a variant — they reset the caches).
 #[derive(Debug, Clone)]
 pub struct MemoryModel {
     pub model: ModelConfig,
@@ -38,6 +55,12 @@ pub struct MemoryModel {
     pub dtypes: DtypePolicy,
     pub mode: CountMode,
     pub split: StageSplit,
+    /// Memoized `StagePlan::build` result (the per-layer parameter census
+    /// walk), stored with the model it was built for so debug builds can
+    /// detect post-query mutation of the config fields.
+    plan_cache: OnceLock<(ModelConfig, StagePlan)>,
+    /// Memoized `ParamTable::build` result, with its build-time model.
+    table_cache: OnceLock<(ModelConfig, ParamTable)>,
 }
 
 impl MemoryModel {
@@ -49,36 +72,90 @@ impl MemoryModel {
             dtypes,
             mode: CountMode::PaperCompat,
             split: StageSplit::FrontLoaded,
+            plan_cache: OnceLock::new(),
+            table_cache: OnceLock::new(),
         }
     }
 
     pub fn with_mode(mut self, mode: CountMode) -> Self {
         self.mode = mode;
+        self.invalidate();
         self
     }
 
     pub fn with_split(mut self, split: StageSplit) -> Self {
         self.split = split;
+        self.invalidate();
         self
     }
 
-    /// Layer-level parameter table (Table 3).
-    pub fn param_table(&self) -> ParamTable {
-        ParamTable::build(&self.model, self.mode, self.dtypes.weight)
+    /// Drop memoized sub-results after a config change.
+    fn invalidate(&mut self) {
+        self.plan_cache = OnceLock::new();
+        self.table_cache = OnceLock::new();
     }
 
-    /// Pipeline-stage plan and per-stage totals (Table 4).
+    /// Layer-level parameter table (Table 3), memoized. The first call builds
+    /// it; later calls (and [`MemoryModel::param_table`]) reuse it.
+    pub fn param_table_cached(&self) -> &ParamTable {
+        let (model, table) = self.table_cache.get_or_init(|| {
+            (self.model.clone(), ParamTable::build(&self.model, self.mode, self.dtypes.weight))
+        });
+        // Full cache key: ParamTable is a function of (model, mode, weight dtype).
+        debug_assert!(
+            *model == self.model
+                && table.census().mode == self.mode
+                && table.weight_dtype == self.dtypes.weight,
+            "MemoryModel config mutated after the first query; \
+             use with_mode/with_split or build a new facade"
+        );
+        table
+    }
+
+    /// Layer-level parameter table (Table 3). Clones out of the cache; use
+    /// [`MemoryModel::param_table_cached`] to borrow instead.
+    pub fn param_table(&self) -> ParamTable {
+        self.param_table_cached().clone()
+    }
+
+    /// Pipeline-stage plan and per-stage totals (Table 4), memoized.
+    pub fn stage_plan_cached(&self) -> &StagePlan {
+        let (model, plan) = self.plan_cache.get_or_init(|| {
+            (
+                self.model.clone(),
+                StagePlan::build(&self.model, self.parallel.pp, self.split.clone(), self.mode),
+            )
+        });
+        // Full cache key: StagePlan is a function of (model, pp, split, mode).
+        debug_assert!(
+            *model == self.model
+                && plan.mode == self.mode
+                && self
+                    .split
+                    .layer_counts(self.model.num_hidden_layers, self.parallel.pp)
+                    .map(|counts| {
+                        counts == plan.stages.iter().map(|s| s.num_layers).collect::<Vec<_>>()
+                    })
+                    .unwrap_or(false),
+            "MemoryModel config mutated after the first query; \
+             use with_mode/with_split or build a new facade"
+        );
+        plan
+    }
+
+    /// Pipeline-stage plan and per-stage totals (Table 4). Clones out of the
+    /// cache; use [`MemoryModel::stage_plan_cached`] to borrow instead.
     pub fn stage_plan(&self) -> StagePlan {
-        StagePlan::build(&self.model, self.parallel.pp, self.split.clone(), self.mode)
+        self.stage_plan_cached().clone()
     }
 
     /// Static parameters per device on the heaviest stage (Table 6).
     pub fn device_static_params(&self) -> DeviceStaticParams {
-        let plan = self.stage_plan();
+        let plan = self.stage_plan_cached();
         DeviceStaticParams::for_stage(
             &self.model,
             &self.parallel,
-            &plan,
+            plan,
             plan.heaviest_stage(),
             self.dtypes.weight,
         )
@@ -91,7 +168,7 @@ impl MemoryModel {
 
     /// Activation analysis for one microbatch config (Table 10; tapes = Figs 2–3).
     pub fn activation_report(&self, act: &ActivationConfig) -> ActivationReport {
-        let plan = self.stage_plan();
+        let plan = self.stage_plan_cached();
         ActivationReport::build(
             &self.model,
             &self.parallel,
@@ -117,5 +194,29 @@ mod tests {
         let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
         assert_eq!(mm.param_table().total_params(), 671_026_522_112);
         assert_eq!(mm.device_static_params().total_params(), 6_250_364_928);
+    }
+
+    #[test]
+    fn facade_memoizes_and_invalidates_on_rebuild() {
+        let cs = CaseStudy::paper();
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        // Repeated queries borrow the same memoized instances.
+        let p1: *const StagePlan = mm.stage_plan_cached();
+        let p2: *const StagePlan = mm.stage_plan_cached();
+        assert_eq!(p1, p2);
+        let t1: *const ParamTable = mm.param_table_cached();
+        let t2: *const ParamTable = mm.param_table_cached();
+        assert_eq!(t1, t2);
+        // Cached and uncached paths agree.
+        assert_eq!(mm.stage_plan().total_params(), mm.stage_plan_cached().total_params());
+        // with_mode resets the caches: strict counting drops the paper's
+        // double-counted LoRA norms, so the totals must differ.
+        let paper_total = mm.param_table_cached().total_params();
+        let strict = mm.clone().with_mode(CountMode::Strict);
+        assert_ne!(paper_total, strict.param_table_cached().total_params());
+        assert_eq!(
+            strict.stage_plan_cached().total_params(),
+            strict.param_table_cached().total_params()
+        );
     }
 }

@@ -1,8 +1,10 @@
 //! End-to-end per-device memory totals — stitches Tables 6, 8 and 10 together
 //! and adds the paper's §6 overheads (temporal comm buffers + fragmentation).
 //!
-//! Also provides the configuration-sweep used by `examples/sweep_parallelism.rs`
-//! and `benches/sweep.rs`: which (b, AC, ZeRO) combinations fit a device budget.
+//! The configuration sweep that used to live here as a hand-rolled triple
+//! loop is now a compatibility shim over the [`crate::planner`] subsystem
+//! ([`sweep`] → [`crate::planner::sweep_fixed`]); results are bit-identical
+//! to the historical implementation, in the historical iteration order.
 
 use super::activation::ActivationReport;
 use super::zero::{ZeroReport, ZeroStrategy};
@@ -103,25 +105,12 @@ pub struct SweepPoint {
 }
 
 /// Sweep (b × AC × ZeRO) for a memory model — extension experiment E4.
+///
+/// Compatibility shim: delegates to the planner's fixed-layout sweep, which
+/// evaluates the same grid through [`crate::planner::Evaluator`] and returns
+/// bit-identical points in the historical (b, AC, ZeRO) iteration order.
 pub fn sweep(mm: &MemoryModel, base: &ActivationConfig, ov: Overheads) -> Vec<SweepPoint> {
-    let hbm80 = 80 * crate::GIB as u64;
-    let mut out = Vec::new();
-    for b in [1u64, 2, 4] {
-        for rc in [RecomputePolicy::None, RecomputePolicy::SelectiveAttention, RecomputePolicy::Full] {
-            for z in ZeroStrategy::ALL {
-                let act = ActivationConfig { micro_batch: b, recompute: rc, ..*base };
-                let rep = DeviceMemoryReport::build(mm, &act, z, ov);
-                out.push(SweepPoint {
-                    micro_batch: b,
-                    recompute: rc,
-                    zero: z,
-                    total_bytes: rep.total_bytes(),
-                    fits_80g: rep.fits(hbm80),
-                });
-            }
-        }
-    }
-    out
+    crate::planner::sweep_fixed(mm, base, ov)
 }
 
 #[cfg(test)]

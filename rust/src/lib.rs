@@ -15,10 +15,19 @@
 //!    and collective-buffer accounting. It extends the paper's per-microbatch analysis
 //!    to schedule-dependent peak memory.
 //!
-//! 3. **Live mini-training runtime** ([`runtime`], [`coordinator`], [`trainer`]) — a real
-//!    pipeline-parallel training loop over AOT-compiled XLA executables (JAX + Pallas at
-//!    build time, PJRT + Rust at run time) whose *measured* tagged memory is validated
-//!    against the analytical model.
+//! 3. **Live mini-training runtime** (`runtime`, `coordinator`, `trainer`; feature
+//!    `live`) — a real pipeline-parallel training loop over AOT-compiled XLA
+//!    executables (JAX + Pallas at build time, PJRT + Rust at run time) whose
+//!    *measured* tagged memory is validated against the analytical model. Gated
+//!    behind the `live` cargo feature because it needs the `xla` PJRT bindings,
+//!    which the offline build does not ship.
+//!
+//! 4. **Configuration planner** ([`planner`]) — a query-driven search engine over
+//!    the full (DP, TP, PP, EP, ETP, micro-batch, recompute, ZeRO) grid: validity
+//!    pruning before evaluation, thread-parallel memoized evaluation, feasibility
+//!    filtering against an HBM budget and a Pareto frontier over
+//!    (peak memory, pipeline bubble, per-device parameters). Every "what fits?"
+//!    question — the old ad-hoc sweeps included — is one planner query.
 //!
 //! ## Quickstart
 //!
@@ -40,12 +49,16 @@
 
 pub mod analysis;
 pub mod config;
+#[cfg(feature = "live")]
 pub mod coordinator;
 pub mod model;
 pub mod parallel;
+pub mod planner;
 pub mod report;
+#[cfg(feature = "live")]
 pub mod runtime;
 pub mod sim;
+#[cfg(feature = "live")]
 pub mod trainer;
 pub mod util;
 

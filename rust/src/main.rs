@@ -3,12 +3,17 @@
 //! Subcommands (hand-rolled arg parsing; the build is fully offline):
 //! * `tables`    — regenerate the paper's tables (1..=10) from the model;
 //! * `analyze`   — architecture diagram, activation tapes, device breakdown;
+//! * `plan`      — search the full parallel-configuration grid for what fits;
 //! * `sweep`     — (b × AC × ZeRO) feasibility sweep against an HBM budget;
 //! * `simulate`  — run the cluster memory simulator over a schedule;
-//! * `train`     — run the live mini pipeline training loop (needs artifacts).
+//! * `train`     — run the live mini pipeline training loop (needs artifacts
+//!   and the `live` cargo feature).
+//!
+//! `plan`, `sweep` and `bubble` all route through [`dsmem::planner`].
 
 use dsmem::analysis::{MemoryModel, Overheads, ZeroStrategy};
-use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy, TrainingConfig};
+use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
+use dsmem::planner::{self, PlanQuery, SearchSpace};
 use dsmem::report::{fmt_bytes, gib, tables::paper_table};
 use dsmem::sim::{ScheduleKind, SimEngine};
 use std::collections::HashMap;
@@ -21,14 +26,17 @@ USAGE: dsmem <COMMAND> [OPTIONS]
 COMMANDS:
   tables     Print the paper's tables        [--table N] [--model M] [--format text|markdown|csv]
   analyze    Diagrams & tapes                [--arch] [--tape mla|moe] [--micro-batch B] [--model M]
+  plan       Rank parallel configurations    [--hbm-gib G] [--world W] [--top-k K] [--json]
+             that fit a device budget        [--microbatches M] [--model M] [--frontier-only]
   sweep      Feasibility sweep               [--hbm-gib G] [--model M]
   simulate   Cluster memory simulation       [--schedule gpipe|1f1b|interleaved] [--microbatches M]
              [--micro-batch B] [--zero none|os|os_g|os_g_params] [--recompute] [--frag]
              [--trace FILE.json] [--model M]
   kvcache    Inference KV-cache analysis     [--tokens N] [--model M]  (MLA vs MHA vs GQA)
-  bubble     Pipeline bubble-vs-memory sweep [--pp P]
+  bubble     Pipeline bubble-vs-memory sweep [--pp P] [--model M]
   train      Live mini pipeline training     [--artifacts DIR] [--steps N] [--dp D]
              [--zero-os] [--verbose-acts] [--schedule gpipe|1f1b] [--microbatches M]
+             (requires building with --features live)
   help       Show this message
 
 Model presets: deepseek-v3 (default) | deepseek-v2 | mini
@@ -185,13 +193,42 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
+        "plan" => {
+            let a = Args::parse(rest, &["json", "frontier-only"])?;
+            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let hbm_gib = a.get_f64("hbm-gib", 80.0)?;
+            let world = a.get_u64("world", cs.parallel.world_size())?;
+            let mut space = SearchSpace::for_world(world);
+            space.seq_len = cs.activation.seq_len;
+            space.cp = cs.activation.cp;
+            let mut query = PlanQuery::new(space, (hbm_gib * dsmem::GIB) as u64);
+            query.top_k = a.get_u64("top-k", 10)? as usize;
+            query.num_microbatches = a.get_u64("microbatches", 32)?;
+            let res = planner::plan(&cs.model, cs.dtypes, &query);
+            if a.has("json") {
+                println!("{}", planner::report::to_json(&res).dump());
+            } else {
+                println!(
+                    "{}: searched {} grid points → {} valid → {} fit {:.0} GiB",
+                    cs.model.name,
+                    res.full_grid,
+                    res.evaluated.len(),
+                    res.feasible_count,
+                    gib(res.hbm_bytes),
+                );
+                if !a.has("frontier-only") {
+                    print!("{}", planner::report::ranking_table(&res).render());
+                    println!();
+                }
+                print!("{}", planner::report::frontier_table(&res).render());
+            }
+        }
         "sweep" => {
             let a = Args::parse(rest, &[])?;
             let cs = case_study(&a.get("model", "deepseek-v3"))?;
             let hbm_gib = a.get_f64("hbm-gib", 80.0)?;
             let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
-            let pts =
-                dsmem::analysis::total::sweep(&mm, &cs.activation, Overheads::paper_midpoint());
+            let pts = planner::sweep_fixed(&mm, &cs.activation, Overheads::paper_midpoint());
             let budget = (hbm_gib * dsmem::GIB) as u64;
             let mut t = dsmem::report::Table::new(
                 format!("Feasibility sweep vs {hbm_gib} GiB"),
@@ -238,19 +275,9 @@ fn main() -> anyhow::Result<()> {
         }
         "bubble" => {
             let a = Args::parse(rest, &[])?;
+            let cs = case_study(&a.get("model", "deepseek-v3"))?;
             let pp = a.get_u64("pp", 16)?;
-            let mut t = dsmem::report::Table::new(
-                format!("Bubble vs activation frontier (p={pp})"),
-                &["schedule", "m", "bubble %", "inflight (mb-equiv, stage 0)"],
-            );
-            for pt in dsmem::analysis::bubble::frontier(pp, &[pp, 2 * pp, 4 * pp]) {
-                t.row(vec![
-                    pt.kind.name(),
-                    pt.microbatches.to_string(),
-                    format!("{:.1}", 100.0 * pt.bubble),
-                    format!("{:.1}", pt.inflight_mb_equiv),
-                ]);
-            }
+            let t = planner::report::bubble_table(&cs, pp, &[pp, 2 * pp, 4 * pp]);
             print!("{}", t.render());
         }
         "simulate" => {
@@ -297,12 +324,13 @@ fn main() -> anyhow::Result<()> {
             }
             print!("{}", t.render());
         }
+        #[cfg(feature = "live")]
         "train" => {
             let a = Args::parse(rest, &["zero-os", "verbose-acts"])?;
             let artifacts = a.get("artifacts", "artifacts");
             let manifest =
                 dsmem::runtime::ArtifactManifest::load(std::path::Path::new(&artifacts))?;
-            let mut cfg = TrainingConfig::mini_default();
+            let mut cfg = dsmem::config::TrainingConfig::mini_default();
             cfg.artifacts_dir = artifacts.into();
             cfg.steps = a.get_u64("steps", 50)?;
             cfg.dp = a.get_u64("dp", 1)?;
@@ -318,6 +346,13 @@ fn main() -> anyhow::Result<()> {
                 _ => dsmem::config::LiveSchedule::OneFOneB,
             };
             dsmem::trainer::run_training(manifest, cfg)?;
+        }
+        #[cfg(not(feature = "live"))]
+        "train" => {
+            anyhow::bail!(
+                "`dsmem train` needs the live PJRT runtime: rebuild with \
+                 `cargo build --features live` (requires the xla bindings)"
+            );
         }
         other => {
             eprint!("unknown command: {other}\n\n{USAGE}");

@@ -1,0 +1,288 @@
+//! Thread-parallel, memoized evaluation of grid points.
+//!
+//! An [`Evaluator`] fixes everything a [`super::space::Candidate`] does not
+//! vary — model, dtype policy, counting mode, stage split, §6 overheads and
+//! the microbatch count used for the bubble — and maps candidates to
+//! [`PlanPoint`] records through the analytical model.
+//!
+//! The expensive sub-results, [`StagePlan`]s (which walk every layer's
+//! parameter census), depend only on `(model, pp, split, mode)` — a tuple
+//! shared by thousands of grid points — so they are built once per distinct
+//! PP degree and shared behind an `Arc` across all worker threads.
+//!
+//! [`Evaluator::evaluate_all`] fans the grid out over `std::thread::scope`
+//! workers in contiguous chunks, so results come back in input order and the
+//! output is deterministic regardless of thread count.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::space::Candidate;
+use crate::analysis::activation::ActivationReport;
+use crate::analysis::bubble::bubble_fraction;
+use crate::analysis::device::DeviceStaticParams;
+use crate::analysis::stages::{StagePlan, StageSplit};
+use crate::analysis::total::{Overheads, SweepPoint};
+use crate::analysis::zero::{ZeroReport, ZeroStrategy};
+use crate::analysis::MemoryModel;
+use crate::config::{ActivationConfig, DtypePolicy, ModelConfig, ParallelConfig, RecomputePolicy};
+use crate::model::CountMode;
+use crate::sim::ScheduleKind;
+
+/// One evaluated configuration: the memory decomposition of
+/// [`crate::analysis::DeviceMemoryReport`] plus the layout, the per-device
+/// parameter count and the 1F1B pipeline-bubble fraction.
+#[derive(Debug, Clone)]
+pub struct PlanPoint {
+    pub parallel: ParallelConfig,
+    pub micro_batch: u64,
+    pub sp: u64,
+    pub recompute: RecomputePolicy,
+    pub zero: ZeroStrategy,
+    /// Static parameters held per device (heaviest stage, unsharded).
+    pub device_params: u64,
+    pub params_bytes: u64,
+    pub gradient_bytes: u64,
+    pub optimizer_bytes: u64,
+    pub activation_bytes: u64,
+    pub comm_buffer_bytes: u64,
+    pub fragmentation_bytes: u64,
+    /// Grand total bytes per device (same composition as `DeviceMemoryReport`).
+    pub total_bytes: u64,
+    /// 1F1B bubble fraction for the evaluator's microbatch count.
+    pub bubble: f64,
+}
+
+impl PlanPoint {
+    /// Static (P+G+O) bytes per device.
+    pub fn static_bytes(&self) -> u64 {
+        self.params_bytes + self.gradient_bytes + self.optimizer_bytes
+    }
+
+    /// Does this configuration fit a device with `hbm_bytes` of memory?
+    pub fn fits(&self, hbm_bytes: u64) -> bool {
+        self.total_bytes <= hbm_bytes
+    }
+}
+
+/// Memoized evaluator over one (model, dtypes, mode, split) quadruple.
+pub struct Evaluator<'a> {
+    pub model: &'a ModelConfig,
+    pub dtypes: DtypePolicy,
+    pub mode: CountMode,
+    pub split: StageSplit,
+    pub overheads: Overheads,
+    /// Microbatches per step, for the bubble fraction (paper: 32).
+    pub num_microbatches: u64,
+    /// `pp → StagePlan`, shared across all grid points and worker threads.
+    plans: Mutex<HashMap<u64, Arc<StagePlan>>>,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(
+        model: &'a ModelConfig,
+        dtypes: DtypePolicy,
+        mode: CountMode,
+        split: StageSplit,
+        overheads: Overheads,
+        num_microbatches: u64,
+    ) -> Self {
+        Self { model, dtypes, mode, split, overheads, num_microbatches, plans: Mutex::new(HashMap::new()) }
+    }
+
+    /// Evaluator matching an existing [`MemoryModel`] facade.
+    pub fn for_memory_model(mm: &'a MemoryModel, overheads: Overheads, num_microbatches: u64) -> Self {
+        Self::new(&mm.model, mm.dtypes, mm.mode, mm.split.clone(), overheads, num_microbatches)
+    }
+
+    /// The memoized stage plan for a PP degree. The split must be valid for
+    /// `(model.num_hidden_layers, pp)` — [`super::space::SearchSpace`] prunes
+    /// candidates that are not.
+    pub fn plan_for(&self, pp: u64) -> Arc<StagePlan> {
+        let mut guard = self.plans.lock().unwrap();
+        guard
+            .entry(pp)
+            .or_insert_with(|| {
+                Arc::new(StagePlan::build(self.model, pp, self.split.clone(), self.mode))
+            })
+            .clone()
+    }
+
+    /// Per-device activation bytes of the heaviest stage for one microbatch
+    /// (before in-flight scaling). Used by the bubble-vs-memory report.
+    pub fn stage_activation_bytes(&self, parallel: &ParallelConfig, act: &ActivationConfig) -> u64 {
+        let plan = self.plan_for(parallel.pp);
+        let heaviest = plan.heaviest_stage();
+        let ar = ActivationReport::build(self.model, parallel, act, plan.stages[heaviest].num_layers);
+        ar.total_stage_bytes(act.recompute)
+    }
+
+    /// Evaluate one candidate. Bit-identical to
+    /// `DeviceMemoryReport::build(...)` on an equivalent `MemoryModel`.
+    pub fn evaluate(&self, c: &Candidate) -> PlanPoint {
+        let plan = self.plan_for(c.parallel.pp);
+        let heaviest = plan.heaviest_stage();
+        let dev = DeviceStaticParams::for_stage(
+            self.model,
+            &c.parallel,
+            &plan,
+            heaviest,
+            self.dtypes.weight,
+        );
+        let zr = ZeroReport::build(&dev, &c.parallel, self.dtypes);
+        let row = *zr.row(c.zero);
+        let ar = ActivationReport::build(
+            self.model,
+            &c.parallel,
+            &c.act,
+            plan.stages[heaviest].num_layers,
+        );
+        let activation_bytes =
+            ar.total_stage_bytes(c.act.recompute) * self.overheads.inflight_microbatches;
+        let allocated =
+            row.params_bytes + row.gradient_bytes + row.optimizer_bytes + activation_bytes;
+        let fragmentation_bytes = (allocated as f64 * self.overheads.fragmentation) as u64;
+        PlanPoint {
+            parallel: c.parallel,
+            micro_batch: c.act.micro_batch,
+            sp: c.act.sp,
+            recompute: c.act.recompute,
+            zero: c.zero,
+            device_params: dev.total_params(),
+            params_bytes: row.params_bytes,
+            gradient_bytes: row.gradient_bytes,
+            optimizer_bytes: row.optimizer_bytes,
+            activation_bytes,
+            comm_buffer_bytes: self.overheads.comm_buffer_bytes,
+            fragmentation_bytes,
+            total_bytes: allocated + self.overheads.comm_buffer_bytes + fragmentation_bytes,
+            bubble: bubble_fraction(ScheduleKind::OneFOneB, c.parallel.pp, self.num_microbatches),
+        }
+    }
+
+    /// Evaluate a batch of candidates across all available cores.
+    ///
+    /// Contiguous chunks preserve input order, so the result is identical to
+    /// `cands.iter().map(|c| self.evaluate(c))` regardless of parallelism.
+    pub fn evaluate_all(&self, cands: &[Candidate]) -> Vec<PlanPoint> {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if threads <= 1 || cands.len() < 64 {
+            return cands.iter().map(|c| self.evaluate(c)).collect();
+        }
+        let chunk = cands.len().div_ceil(threads);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = cands
+                .chunks(chunk)
+                .map(|part| s.spawn(move || part.iter().map(|c| self.evaluate(c)).collect::<Vec<_>>()))
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("planner worker panicked"))
+                .collect()
+        })
+    }
+}
+
+/// The legacy `(b × AC × ZeRO)` sweep at a fixed parallel layout, in the
+/// historical iteration order. [`crate::analysis::total::sweep`] is a shim
+/// over this function; results are bit-identical to the old hand-rolled loop.
+pub fn sweep_fixed(mm: &MemoryModel, base: &ActivationConfig, ov: Overheads) -> Vec<SweepPoint> {
+    let hbm80 = 80 * crate::GIB as u64;
+    let ev = Evaluator::for_memory_model(mm, ov, 32);
+    let mut cands = Vec::with_capacity(36);
+    for b in [1u64, 2, 4] {
+        for rc in [RecomputePolicy::None, RecomputePolicy::SelectiveAttention, RecomputePolicy::Full] {
+            for z in ZeroStrategy::ALL {
+                let act = ActivationConfig { micro_batch: b, recompute: rc, ..*base };
+                cands.push(Candidate { parallel: mm.parallel, act, zero: z });
+            }
+        }
+    }
+    ev.evaluate_all(&cands)
+        .into_iter()
+        .map(|p| SweepPoint {
+            micro_batch: p.micro_batch,
+            recompute: p.recompute,
+            zero: p.zero,
+            total_bytes: p.total_bytes,
+            fits_80g: p.total_bytes <= hbm80,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::DeviceMemoryReport;
+    use crate::config::CaseStudy;
+
+    fn paper_eval(cs: &CaseStudy) -> Evaluator<'_> {
+        Evaluator::new(
+            &cs.model,
+            cs.dtypes,
+            CountMode::PaperCompat,
+            StageSplit::FrontLoaded,
+            Overheads::paper_midpoint(),
+            32,
+        )
+    }
+
+    #[test]
+    fn evaluate_matches_device_memory_report() {
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        for zero in ZeroStrategy::ALL {
+            for rc in [RecomputePolicy::None, RecomputePolicy::Full] {
+                let act = ActivationConfig { recompute: rc, ..cs.activation };
+                let c = Candidate { parallel: cs.parallel, act, zero };
+                let p = ev.evaluate(&c);
+                let rep = DeviceMemoryReport::build(&mm, &act, zero, Overheads::paper_midpoint());
+                assert_eq!(p.total_bytes, rep.total_bytes(), "{zero:?} {rc:?}");
+                assert_eq!(p.params_bytes, rep.params_bytes);
+                assert_eq!(p.gradient_bytes, rep.gradient_bytes);
+                assert_eq!(p.optimizer_bytes, rep.optimizer_bytes);
+                assert_eq!(p.activation_bytes, rep.activation_bytes);
+                assert_eq!(p.fragmentation_bytes, rep.fragmentation_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_bubble_value() {
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        let c = Candidate { parallel: cs.parallel, act: cs.activation, zero: ZeroStrategy::None };
+        let p = ev.evaluate(&c);
+        // p=16, m=32 → 15/47.
+        assert!((p.bubble - 15.0 / 47.0).abs() < 1e-12);
+        assert_eq!(p.device_params, 6_250_364_928);
+    }
+
+    #[test]
+    fn parallel_evaluation_is_deterministic() {
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        let space = super::super::space::SearchSpace::for_world(1024);
+        let cands: Vec<Candidate> =
+            space.enumerate(&cs.model).into_iter().take(300).collect();
+        let seq: Vec<PlanPoint> = cands.iter().map(|c| ev.evaluate(c)).collect();
+        let par = ev.evaluate_all(&cands);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.total_bytes, b.total_bytes);
+            assert_eq!(a.parallel, b.parallel);
+            assert_eq!(a.zero, b.zero);
+        }
+    }
+
+    #[test]
+    fn plan_cache_is_shared_per_pp() {
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        let a = ev.plan_for(16);
+        let b = ev.plan_for(16);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.total_params(), 671_026_522_112);
+    }
+}

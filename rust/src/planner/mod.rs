@@ -1,0 +1,162 @@
+//! Query-driven parallel-configuration search — the planner subsystem.
+//!
+//! The paper's whole point is answering *"which (parallelism × micro-batch ×
+//! recompute × ZeRO) configurations fit a device budget?"*. Historically this
+//! repo answered it three different ways: a hardcoded 3-axis grid in
+//! [`crate::analysis::total::sweep`], hand-rolled nested loops in
+//! `examples/sweep_parallelism.rs`, and per-command logic in the CLI. The
+//! planner replaces all of them with one engine:
+//!
+//! * [`space`] — [`SearchSpace`]: the full (DP, TP, PP, EP, ETP, SP, b, AC,
+//!   ZeRO) grid with validity pruning *before* evaluation;
+//! * [`eval`] — [`Evaluator`]: thread-parallel evaluation of valid points
+//!   into [`PlanPoint`] records, with [`crate::analysis::StagePlan`]s
+//!   memoized per PP degree (the sub-result shared by thousands of points);
+//! * [`pareto`] — feasibility filtering against an HBM budget, a Pareto
+//!   frontier over (peak memory, bubble fraction, per-device params) and
+//!   top-k ranking;
+//! * [`report`] — rendering through [`crate::report::Table`] and JSON via
+//!   [`crate::util::Json`].
+//!
+//! The legacy entry points survive as shims: `analysis::total::sweep` and the
+//! `sweep`/`bubble` CLI subcommands now route through the planner and return
+//! bit-identical results.
+//!
+//! ```
+//! use dsmem::config::CaseStudy;
+//! use dsmem::planner::{plan, PlanQuery, SearchSpace};
+//!
+//! let cs = CaseStudy::paper();
+//! let mut space = SearchSpace::for_world(1024);
+//! space.pp = vec![16];
+//! let query = PlanQuery::new(space, 80 * dsmem::GIB as u64);
+//! let result = plan(&cs.model, cs.dtypes, &query);
+//! assert!(!result.frontier.is_empty());
+//! ```
+
+pub mod eval;
+pub mod pareto;
+pub mod report;
+pub mod space;
+
+pub use eval::{sweep_fixed, Evaluator, PlanPoint};
+pub use space::{Candidate, SearchSpace};
+
+use crate::analysis::total::Overheads;
+use crate::config::{DtypePolicy, ModelConfig};
+use crate::model::CountMode;
+
+/// A full planning request: the grid plus the feasibility budget and the
+/// evaluation knobs shared by every point.
+#[derive(Debug, Clone)]
+pub struct PlanQuery {
+    pub space: SearchSpace,
+    /// Device memory budget in bytes (feasibility cut).
+    pub hbm_bytes: u64,
+    /// How many ranked configurations to keep.
+    pub top_k: usize,
+    /// §6 overheads applied to every point.
+    pub overheads: Overheads,
+    /// Microbatches per step, for the 1F1B bubble objective.
+    pub num_microbatches: u64,
+    pub mode: CountMode,
+}
+
+impl PlanQuery {
+    /// Paper-faithful defaults: §6 midpoint overheads, m=32, top-10.
+    pub fn new(space: SearchSpace, hbm_bytes: u64) -> Self {
+        Self {
+            space,
+            hbm_bytes,
+            top_k: 10,
+            overheads: Overheads::paper_midpoint(),
+            num_microbatches: 32,
+            mode: CountMode::PaperCompat,
+        }
+    }
+}
+
+/// Everything a plan query produces.
+#[derive(Debug, Clone)]
+pub struct PlanResult {
+    pub world: u64,
+    pub hbm_bytes: u64,
+    pub num_microbatches: u64,
+    /// Grid size before pruning.
+    pub full_grid: u64,
+    /// Every valid point, evaluated (in enumeration order).
+    pub evaluated: Vec<PlanPoint>,
+    /// How many evaluated points fit the budget.
+    pub feasible_count: usize,
+    /// Pareto frontier over the feasible points.
+    pub frontier: Vec<PlanPoint>,
+    /// Top-k feasible points by (memory, bubble, params/dev).
+    pub ranked: Vec<PlanPoint>,
+}
+
+/// Run a planning query: enumerate → prune → evaluate in parallel → filter →
+/// frontier → rank.
+pub fn plan(model: &ModelConfig, dtypes: DtypePolicy, query: &PlanQuery) -> PlanResult {
+    let candidates = query.space.enumerate(model);
+    let evaluator = Evaluator::new(
+        model,
+        dtypes,
+        query.mode,
+        query.space.split.clone(),
+        query.overheads,
+        query.num_microbatches,
+    );
+    let evaluated = evaluator.evaluate_all(&candidates);
+    let feasible = pareto::feasible(&evaluated, query.hbm_bytes);
+    let frontier = pareto::frontier(&feasible);
+    let ranked = pareto::rank(&feasible, query.top_k);
+    PlanResult {
+        world: query.space.world,
+        hbm_bytes: query.hbm_bytes,
+        num_microbatches: query.num_microbatches,
+        full_grid: query.space.full_size(),
+        evaluated,
+        feasible_count: feasible.len(),
+        frontier,
+        ranked,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CaseStudy;
+
+    #[test]
+    fn world1024_default_space_plans_nonempty_frontier() {
+        let cs = CaseStudy::paper();
+        let q = PlanQuery::new(SearchSpace::for_world(1024), 80 * crate::GIB as u64);
+        let res = plan(&cs.model, cs.dtypes, &q);
+        assert!(res.full_grid >= res.evaluated.len() as u64);
+        assert!(!res.evaluated.is_empty());
+        assert!(res.feasible_count > 0, "nothing fits 80 GiB");
+        assert!(!res.frontier.is_empty());
+        assert!(res.ranked.len() <= q.top_k);
+        assert!(res.ranked.iter().all(|p| p.fits(q.hbm_bytes)));
+        // Frontier points are feasible and mutually non-dominated.
+        for a in &res.frontier {
+            assert!(a.fits(q.hbm_bytes));
+            for b in &res.frontier {
+                assert!(!pareto::dominates(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn tighter_budget_never_grows_feasible_set() {
+        let cs = CaseStudy::paper();
+        let mut space = SearchSpace::for_world(1024);
+        space.pp = vec![8, 16];
+        space.etp = vec![1];
+        let q80 = PlanQuery::new(space.clone(), 80 * crate::GIB as u64);
+        let q40 = PlanQuery::new(space, 40 * crate::GIB as u64);
+        let r80 = plan(&cs.model, cs.dtypes, &q80);
+        let r40 = plan(&cs.model, cs.dtypes, &q40);
+        assert!(r40.feasible_count <= r80.feasible_count);
+    }
+}

@@ -1,0 +1,134 @@
+//! Feasibility filtering, Pareto frontier and top-k ranking over plan points.
+//!
+//! The planner's objectives, all minimized:
+//!
+//! 1. **peak memory** — `total_bytes` per device;
+//! 2. **pipeline bubble** — idle fraction of the 1F1B schedule;
+//! 3. **per-device parameters** — a proxy for the weight-traffic cost of
+//!    ZeRO-3 gathers and for how much compute each device amortizes.
+//!
+//! A point is on the frontier iff no other point is at least as good on every
+//! objective and strictly better on one.
+
+use super::eval::PlanPoint;
+
+/// Does `a` Pareto-dominate `b` (≤ on all objectives, < on at least one)?
+pub fn dominates(a: &PlanPoint, b: &PlanPoint) -> bool {
+    let no_worse = a.total_bytes <= b.total_bytes
+        && a.bubble <= b.bubble
+        && a.device_params <= b.device_params;
+    let better = a.total_bytes < b.total_bytes
+        || a.bubble < b.bubble
+        || a.device_params < b.device_params;
+    no_worse && better
+}
+
+/// Lexicographic objective order used for ranking and frontier scanning.
+fn objective_cmp(a: &PlanPoint, b: &PlanPoint) -> std::cmp::Ordering {
+    a.total_bytes
+        .cmp(&b.total_bytes)
+        .then(a.bubble.partial_cmp(&b.bubble).unwrap_or(std::cmp::Ordering::Equal))
+        .then(a.device_params.cmp(&b.device_params))
+}
+
+/// Points fitting an HBM budget.
+pub fn feasible(points: &[PlanPoint], hbm_bytes: u64) -> Vec<PlanPoint> {
+    points.iter().filter(|p| p.fits(hbm_bytes)).cloned().collect()
+}
+
+/// The Pareto frontier (non-dominated subset), sorted by total bytes.
+///
+/// Sorting lexicographically first means no later point can dominate an
+/// earlier one, so a single scan against the growing frontier suffices
+/// (`O(n·f)` instead of `O(n²)`).
+pub fn frontier(points: &[PlanPoint]) -> Vec<PlanPoint> {
+    let mut sorted: Vec<&PlanPoint> = points.iter().collect();
+    sorted.sort_by(|a, b| objective_cmp(a, b));
+    let mut front: Vec<PlanPoint> = Vec::new();
+    for p in sorted {
+        if !front.iter().any(|f| dominates(f, p)) {
+            front.push(p.clone());
+        }
+    }
+    front
+}
+
+/// Top-k points by (total bytes, bubble, per-device params), ascending.
+pub fn rank(points: &[PlanPoint], k: usize) -> Vec<PlanPoint> {
+    let mut sorted: Vec<PlanPoint> = points.to_vec();
+    sorted.sort_by(objective_cmp);
+    sorted.truncate(k);
+    sorted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::zero::ZeroStrategy;
+    use crate::config::{ParallelConfig, RecomputePolicy};
+
+    fn point(total: u64, bubble: f64, params: u64) -> PlanPoint {
+        PlanPoint {
+            parallel: ParallelConfig::single(),
+            micro_batch: 1,
+            sp: 1,
+            recompute: RecomputePolicy::None,
+            zero: ZeroStrategy::None,
+            device_params: params,
+            params_bytes: 0,
+            gradient_bytes: 0,
+            optimizer_bytes: 0,
+            activation_bytes: 0,
+            comm_buffer_bytes: 0,
+            fragmentation_bytes: 0,
+            total_bytes: total,
+            bubble,
+        }
+    }
+
+    #[test]
+    fn dominance_requires_strict_improvement() {
+        let a = point(10, 0.1, 100);
+        let b = point(10, 0.1, 100);
+        assert!(!dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        let c = point(10, 0.1, 99);
+        assert!(dominates(&c, &a));
+        assert!(!dominates(&a, &c));
+    }
+
+    #[test]
+    fn frontier_drops_dominated_points() {
+        let pts = vec![
+            point(10, 0.3, 100), // frontier: cheapest memory
+            point(20, 0.1, 100), // frontier: lowest bubble
+            point(20, 0.3, 100), // dominated by both
+            point(15, 0.2, 50),  // frontier: tradeoff + fewest params
+        ];
+        let f = frontier(&pts);
+        assert_eq!(f.len(), 3);
+        assert!(f.iter().all(|p| p.total_bytes != 20 || p.bubble < 0.3));
+        // No frontier point dominates another (dominance is irreflexive).
+        for a in &f {
+            for b in &f {
+                assert!(!dominates(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn rank_orders_by_memory_first() {
+        let pts = vec![point(30, 0.0, 1), point(10, 0.9, 9), point(20, 0.5, 5)];
+        let top = rank(&pts, 2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].total_bytes, 10);
+        assert_eq!(top[1].total_bytes, 20);
+    }
+
+    #[test]
+    fn feasible_filters_by_budget() {
+        let pts = vec![point(10, 0.0, 1), point(20, 0.0, 1)];
+        assert_eq!(feasible(&pts, 15).len(), 1);
+        assert_eq!(feasible(&pts, 5).len(), 0);
+    }
+}

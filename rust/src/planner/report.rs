@@ -1,0 +1,218 @@
+//! Rendering planner results: text tables via [`crate::report::Table`] and
+//! machine-readable JSON via [`crate::util::Json`].
+
+use std::collections::BTreeMap;
+
+use super::eval::{Evaluator, PlanPoint};
+use super::PlanResult;
+use crate::analysis::bubble::{frontier as bubble_frontier, FrontierPoint};
+use crate::analysis::stages::StageSplit;
+use crate::analysis::total::Overheads;
+use crate::config::CaseStudy;
+use crate::model::CountMode;
+use crate::report::{gib, Table};
+use crate::util::Json;
+
+fn point_row(idx: usize, p: &PlanPoint) -> Vec<String> {
+    vec![
+        idx.to_string(),
+        p.parallel.dp.to_string(),
+        p.parallel.tp.to_string(),
+        p.parallel.pp.to_string(),
+        p.parallel.ep.to_string(),
+        p.parallel.etp.to_string(),
+        p.sp.to_string(),
+        p.micro_batch.to_string(),
+        p.recompute.name().into(),
+        p.zero.name().into(),
+        format!("{:.1}", gib(p.total_bytes)),
+        format!("{:.1}", 100.0 * p.bubble),
+        format!("{:.2}B", p.device_params as f64 / 1e9),
+    ]
+}
+
+const POINT_HEADERS: [&str; 13] = [
+    "#", "DP", "TP", "PP", "EP", "ETP", "SP", "b", "recompute", "ZeRO", "total GiB", "bubble %",
+    "params/dev",
+];
+
+/// Ranked top-k table.
+pub fn ranking_table(res: &PlanResult) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Top-{} of {} feasible configurations vs {:.0} GiB HBM (world={}, 1F1B m={})",
+            res.ranked.len(),
+            res.feasible_count,
+            gib(res.hbm_bytes),
+            res.world,
+            res.num_microbatches,
+        ),
+        &POINT_HEADERS,
+    );
+    for (i, p) in res.ranked.iter().enumerate() {
+        t.row(point_row(i + 1, p));
+    }
+    t
+}
+
+/// Pareto-frontier table over (peak memory, bubble, per-device params).
+pub fn frontier_table(res: &PlanResult) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Pareto frontier: {} of {} feasible points (memory × bubble × params/dev)",
+            res.frontier.len(),
+            res.feasible_count,
+        ),
+        &POINT_HEADERS,
+    );
+    for (i, p) in res.frontier.iter().enumerate() {
+        t.row(point_row(i + 1, p));
+    }
+    t
+}
+
+fn point_json(p: &PlanPoint) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("dp".into(), Json::Num(p.parallel.dp as f64));
+    m.insert("tp".into(), Json::Num(p.parallel.tp as f64));
+    m.insert("pp".into(), Json::Num(p.parallel.pp as f64));
+    m.insert("ep".into(), Json::Num(p.parallel.ep as f64));
+    m.insert("etp".into(), Json::Num(p.parallel.etp as f64));
+    m.insert("sp".into(), Json::Num(p.sp as f64));
+    m.insert("micro_batch".into(), Json::Num(p.micro_batch as f64));
+    m.insert("recompute".into(), Json::Str(p.recompute.name().into()));
+    m.insert("zero".into(), Json::Str(p.zero.name().into()));
+    m.insert("device_params".into(), Json::Num(p.device_params as f64));
+    m.insert("params_bytes".into(), Json::Num(p.params_bytes as f64));
+    m.insert("gradient_bytes".into(), Json::Num(p.gradient_bytes as f64));
+    m.insert("optimizer_bytes".into(), Json::Num(p.optimizer_bytes as f64));
+    m.insert("activation_bytes".into(), Json::Num(p.activation_bytes as f64));
+    m.insert("comm_buffer_bytes".into(), Json::Num(p.comm_buffer_bytes as f64));
+    m.insert("fragmentation_bytes".into(), Json::Num(p.fragmentation_bytes as f64));
+    m.insert("total_bytes".into(), Json::Num(p.total_bytes as f64));
+    m.insert("bubble".into(), Json::Num(p.bubble));
+    Json::Obj(m)
+}
+
+/// Machine-readable export of a full plan result.
+pub fn to_json(res: &PlanResult) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("world".into(), Json::Num(res.world as f64));
+    m.insert("hbm_bytes".into(), Json::Num(res.hbm_bytes as f64));
+    m.insert("num_microbatches".into(), Json::Num(res.num_microbatches as f64));
+    m.insert("full_grid".into(), Json::Num(res.full_grid as f64));
+    m.insert("evaluated".into(), Json::Num(res.evaluated.len() as f64));
+    m.insert("feasible".into(), Json::Num(res.feasible_count as f64));
+    m.insert("frontier".into(), Json::Arr(res.frontier.iter().map(point_json).collect()));
+    m.insert("ranked".into(), Json::Arr(res.ranked.iter().map(point_json).collect()));
+    Json::Obj(m)
+}
+
+/// Bubble-vs-memory frontier table (the `dsmem bubble` subcommand): the
+/// schedule arithmetic of [`crate::analysis::bubble`], augmented with the
+/// planner's activation-memory estimate for the case study's model at that
+/// pipeline depth (`-` when the stage split or world size rules the depth out).
+pub fn bubble_table(cs: &CaseStudy, pp: u64, microbatch_counts: &[u64]) -> Table {
+    let ev = Evaluator::new(
+        &cs.model,
+        cs.dtypes,
+        CountMode::PaperCompat,
+        StageSplit::FrontLoaded,
+        Overheads::none(),
+        microbatch_counts.first().copied().unwrap_or(1),
+    );
+    // Per-microbatch stage activation bytes, when this depth is plannable.
+    let world = cs.parallel.world_size();
+    let per_mb: Option<u64> = if pp > 0
+        && world % (cs.parallel.tp * pp) == 0
+        && StageSplit::FrontLoaded.layer_counts(cs.model.num_hidden_layers, pp).is_ok()
+    {
+        let parallel = crate::config::ParallelConfig {
+            dp: world / (cs.parallel.tp * pp),
+            pp,
+            ..cs.parallel
+        };
+        parallel
+            .validate()
+            .ok()
+            .map(|_| ev.stage_activation_bytes(&parallel, &cs.activation))
+    } else {
+        None
+    };
+
+    let mut t = Table::new(
+        format!("Bubble vs activation frontier (p={pp}, {})", cs.model.name),
+        &["schedule", "m", "bubble %", "inflight (mb-equiv, stage 0)", "act GiB (stage 0)"],
+    );
+    for pt in bubble_frontier(pp, microbatch_counts) {
+        let FrontierPoint { kind, microbatches, bubble, inflight_mb_equiv } = pt;
+        t.row(vec![
+            kind.name(),
+            microbatches.to_string(),
+            format!("{:.1}", 100.0 * bubble),
+            format!("{inflight_mb_equiv:.1}"),
+            match per_mb {
+                Some(b) => format!("{:.1}", gib((b as f64 * inflight_mb_equiv) as u64)),
+                None => "-".into(),
+            },
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{plan, PlanQuery, SearchSpace};
+
+    fn small_result() -> PlanResult {
+        let cs = CaseStudy::paper();
+        let mut space = SearchSpace::for_world(1024);
+        space.tp = vec![2];
+        space.pp = vec![16];
+        space.ep = vec![8];
+        space.etp = vec![1];
+        space.sequence_parallel = vec![true];
+        let q = PlanQuery::new(space, 80 * crate::GIB as u64);
+        plan(&cs.model, cs.dtypes, &q)
+    }
+
+    #[test]
+    fn tables_render_with_matching_columns() {
+        let res = small_result();
+        let rt = ranking_table(&res);
+        assert_eq!(rt.headers.len(), POINT_HEADERS.len());
+        assert!(rt.render().contains("GiB"));
+        let ft = frontier_table(&res);
+        assert_eq!(ft.rows.len(), res.frontier.len());
+    }
+
+    #[test]
+    fn json_roundtrips_and_counts_match() {
+        let res = small_result();
+        let j = to_json(&res);
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(
+            back.get("frontier").unwrap().as_arr().unwrap().len(),
+            res.frontier.len()
+        );
+        assert_eq!(back.get("world").unwrap().as_u64().unwrap(), 1024);
+        let ranked = back.get("ranked").unwrap().as_arr().unwrap();
+        assert_eq!(ranked.len(), res.ranked.len());
+        if let Some(first) = ranked.first() {
+            assert!(first.get("total_bytes").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn bubble_table_has_memory_column_for_paper_depth() {
+        let cs = CaseStudy::paper();
+        let t = bubble_table(&cs, 16, &[16, 32, 64]);
+        assert_eq!(t.rows.len(), 9);
+        // pp=16 is plannable for v3 → the memory column is populated.
+        assert!(t.rows.iter().all(|r| r[4] != "-"));
+        // pp=32 breaks the front-loaded split for 61 layers → "-".
+        let t32 = bubble_table(&cs, 32, &[32]);
+        assert!(t32.rows.iter().all(|r| r[4] == "-"));
+    }
+}

@@ -1,0 +1,238 @@
+//! Search-space definition and enumeration with validity pruning.
+//!
+//! A [`SearchSpace`] describes the axes of the configuration grid the paper
+//! sweeps informally — (DP, TP, PP, EP, ETP, SP, micro-batch, recompute,
+//! ZeRO) — with DP derived from a fixed device budget (`world / (TP·PP)`),
+//! mirroring how a capacity planner actually works: the fleet size is given,
+//! the layout is the unknown.
+//!
+//! Enumeration prunes invalid points *before* any memory evaluation:
+//!
+//! * world-size divisibility — `TP·PP` must divide `world`;
+//! * [`ParallelConfig::validate`] — non-zero degrees, integral EDP;
+//! * expert divisibility — `EP` must divide `n_routed_experts`
+//!   (the `CaseStudy::validate` rule), `ETP` must divide the expert MLP width;
+//! * tensor-parallel divisibility — TP must divide the attention inner
+//!   dimension, the dense-FFN width and the vocabulary;
+//! * pipeline split validity — the stage split must leave no stage empty;
+//! * sequence-parallel legality — `SP ∈ {1, TP}` as in Megatron-LM, and
+//!   `seq_len` divisible by `SP·CP` ([`ActivationConfig::validate`]).
+
+use crate::analysis::stages::StageSplit;
+use crate::analysis::zero::ZeroStrategy;
+use crate::config::{ActivationConfig, ModelConfig, ParallelConfig, RecomputePolicy};
+
+/// One fully-specified grid point awaiting evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    pub parallel: ParallelConfig,
+    pub act: ActivationConfig,
+    pub zero: ZeroStrategy,
+}
+
+/// The full configuration grid for one device budget.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Total devices; DP is derived as `world / (TP·PP)` per layout.
+    pub world: u64,
+    pub tp: Vec<u64>,
+    pub pp: Vec<u64>,
+    pub ep: Vec<u64>,
+    pub etp: Vec<u64>,
+    /// Sequence-parallel axis: `false` → SP=1, `true` → SP=TP (Megatron SP).
+    pub sequence_parallel: Vec<bool>,
+    pub micro_batch: Vec<u64>,
+    pub recompute: Vec<RecomputePolicy>,
+    pub zero: Vec<ZeroStrategy>,
+    pub seq_len: u64,
+    pub cp: u64,
+    /// Pipeline split rule used to validate (and later evaluate) PP choices.
+    pub split: StageSplit,
+}
+
+impl SearchSpace {
+    /// Default axes for a fleet of `world` devices: powers of two on every
+    /// parallel degree, the paper's (b, AC, ZeRO) axes, s=4096.
+    pub fn for_world(world: u64) -> Self {
+        Self {
+            world,
+            tp: vec![1, 2, 4, 8],
+            pp: vec![1, 2, 4, 8, 16, 32],
+            ep: vec![1, 2, 4, 8, 16, 32, 64],
+            etp: vec![1, 2],
+            sequence_parallel: vec![false, true],
+            micro_batch: vec![1, 2, 4],
+            recompute: vec![
+                RecomputePolicy::None,
+                RecomputePolicy::SelectiveAttention,
+                RecomputePolicy::Full,
+            ],
+            zero: ZeroStrategy::ALL.to_vec(),
+            seq_len: 4096,
+            cp: 1,
+            split: StageSplit::FrontLoaded,
+        }
+    }
+
+    /// Grid size before pruning (product of all axis lengths).
+    pub fn full_size(&self) -> u64 {
+        (self.tp.len()
+            * self.pp.len()
+            * self.ep.len()
+            * self.etp.len()
+            * self.sequence_parallel.len()
+            * self.micro_batch.len()
+            * self.recompute.len()
+            * self.zero.len()) as u64
+    }
+
+    /// Is `(parallel, act)` a valid point of this space for `model`?
+    ///
+    /// This is the pruning predicate applied during [`SearchSpace::enumerate`];
+    /// it is public so property tests can assert pruned ⊆ valid.
+    pub fn is_valid(&self, model: &ModelConfig, parallel: &ParallelConfig, act: &ActivationConfig) -> bool {
+        if parallel.tp == 0 || parallel.pp == 0 {
+            return false;
+        }
+        if self.world % (parallel.tp * parallel.pp) != 0 {
+            return false;
+        }
+        if parallel.dp != self.world / (parallel.tp * parallel.pp) {
+            return false;
+        }
+        if parallel.validate().is_err() {
+            return false;
+        }
+        if model.n_routed_experts % parallel.ep != 0 {
+            return false;
+        }
+        if model.moe_intermediate_size % parallel.etp != 0 {
+            return false;
+        }
+        if model.attn_inner_dim() % parallel.tp != 0
+            || model.intermediate_size % parallel.tp != 0
+            || model.vocab_size % parallel.tp != 0
+        {
+            return false;
+        }
+        if self.split.layer_counts(model.num_hidden_layers, parallel.pp).is_err() {
+            return false;
+        }
+        if act.sp != 1 && act.sp != parallel.tp {
+            return false;
+        }
+        act.validate().is_ok()
+    }
+
+    /// Enumerate every valid grid point, pruning before evaluation.
+    ///
+    /// Order is deterministic: TP → PP → EP → ETP → SP → b → AC → ZeRO,
+    /// each axis in the order given.
+    pub fn enumerate(&self, model: &ModelConfig) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        for &tp in &self.tp {
+            for &pp in &self.pp {
+                if tp == 0 || pp == 0 || self.world % (tp * pp) != 0 {
+                    continue;
+                }
+                let dp = self.world / (tp * pp);
+                if dp == 0 {
+                    continue;
+                }
+                for &ep in &self.ep {
+                    for &etp in &self.etp {
+                        let parallel = ParallelConfig { dp, tp, pp, ep, etp };
+                        for &sp_on in &self.sequence_parallel {
+                            // SP=TP degenerates to SP=1 when TP=1; skip the
+                            // duplicate if the space also enumerates SP off.
+                            if sp_on && tp == 1 && self.sequence_parallel.contains(&false) {
+                                continue;
+                            }
+                            let sp = if sp_on { tp } else { 1 };
+                            for &b in &self.micro_batch {
+                                for &rc in &self.recompute {
+                                    let act = ActivationConfig {
+                                        micro_batch: b,
+                                        seq_len: self.seq_len,
+                                        sp,
+                                        cp: self.cp,
+                                        recompute: rc,
+                                    };
+                                    if !self.is_valid(model, &parallel, &act) {
+                                        continue;
+                                    }
+                                    for &zero in &self.zero {
+                                        out.push(Candidate { parallel, act, zero });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_layout_is_in_default_space() {
+        let m = ModelConfig::deepseek_v3();
+        let space = SearchSpace::for_world(1024);
+        let cands = space.enumerate(&m);
+        assert!(!cands.is_empty());
+        let paper = ParallelConfig::paper_case_study();
+        assert!(
+            cands.iter().any(|c| c.parallel == paper
+                && c.act.sp == 2
+                && c.act.micro_batch == 1
+                && c.act.recompute == RecomputePolicy::None
+                && c.zero == ZeroStrategy::None),
+            "paper case study missing from enumeration"
+        );
+    }
+
+    #[test]
+    fn pruned_grid_is_subset_of_full_grid() {
+        let m = ModelConfig::deepseek_v3();
+        let space = SearchSpace::for_world(1024);
+        let cands = space.enumerate(&m);
+        assert!((cands.len() as u64) <= space.full_size());
+    }
+
+    #[test]
+    fn every_candidate_passes_validity() {
+        let m = ModelConfig::deepseek_v3();
+        let space = SearchSpace::for_world(256);
+        for c in space.enumerate(&m) {
+            assert!(space.is_valid(&m, &c.parallel, &c.act), "{c:?}");
+            assert_eq!(c.parallel.world_size(), 256);
+            c.parallel.validate().unwrap();
+            c.act.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn pp32_pruned_for_61_layers() {
+        // FrontLoaded(61, 32) leaves empty stages, so no pp=32 point survives.
+        let m = ModelConfig::deepseek_v3();
+        let space = SearchSpace::for_world(1024);
+        assert!(space.enumerate(&m).iter().all(|c| c.parallel.pp != 32));
+    }
+
+    #[test]
+    fn world_divisibility_enforced() {
+        let m = ModelConfig::deepseek_v3();
+        let mut space = SearchSpace::for_world(96);
+        space.tp = vec![4];
+        space.pp = vec![8]; // 4·8 = 32 does not divide 96? 96/32 = 3 — it does.
+        let cands = space.enumerate(&m);
+        assert!(cands.iter().all(|c| c.parallel.dp == 3));
+        space.pp = vec![5]; // 20 does not divide 96.
+        assert!(space.enumerate(&m).is_empty());
+    }
+}

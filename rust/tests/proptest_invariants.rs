@@ -1,11 +1,17 @@
 //! Property tests (hand-rolled generator sweep — the offline build has no
 //! proptest crate): randomized (model, parallel, activation) configurations
-//! must uphold the analytical model's invariants.
+//! must uphold the analytical model's invariants, and the planner subsystem
+//! must uphold its search invariants (pruning, feasibility, Pareto
+//! non-domination, legacy-sweep equivalence).
 
-use dsmem::analysis::{MemoryModel, StagePlan, StageSplit, ZeroStrategy};
-use dsmem::config::{ActivationConfig, Dtype, DtypePolicy, ModelConfig, ParallelConfig, RecomputePolicy};
+use dsmem::analysis::total::DeviceMemoryReport;
+use dsmem::analysis::{MemoryModel, Overheads, StagePlan, StageSplit, ZeroStrategy};
+use dsmem::config::{
+    ActivationConfig, CaseStudy, Dtype, DtypePolicy, ModelConfig, ParallelConfig, RecomputePolicy,
+};
 use dsmem::model::CountMode;
 use dsmem::parallel::{build_groups, GroupKind, RankGrid};
+use dsmem::planner::{pareto, plan, PlanQuery, SearchSpace};
 use dsmem::util::Rng64;
 
 const CASES: usize = 200;
@@ -195,6 +201,160 @@ fn schedules_preserve_invariants_for_random_shapes() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Planner invariants
+// ---------------------------------------------------------------------------
+
+/// Random planner search space: a power-of-two world with random non-empty
+/// subsets of every axis.
+fn random_space(rng: &mut Rng64) -> SearchSpace {
+    fn pick(rng: &mut Rng64, options: &[u64]) -> Vec<u64> {
+        let keep: Vec<u64> = options.iter().copied().filter(|_| rng.below(2) == 0).collect();
+        if keep.is_empty() {
+            vec![options[rng.below(options.len() as u64) as usize]]
+        } else {
+            keep
+        }
+    }
+    let world = [64u64, 128, 256, 512, 1024][rng.below(5) as usize];
+    let mut space = SearchSpace::for_world(world);
+    space.tp = pick(rng, &[1, 2, 4, 8]);
+    space.pp = pick(rng, &[1, 2, 4, 8, 16]);
+    space.ep = pick(rng, &[1, 2, 4, 8, 16]);
+    space.etp = pick(rng, &[1, 2]);
+    space.micro_batch = pick(rng, &[1, 2, 4]);
+    space
+}
+
+fn planner_model(rng: &mut Rng64) -> ModelConfig {
+    if rng.below(2) == 0 {
+        ModelConfig::deepseek_v3()
+    } else {
+        ModelConfig::deepseek_v2()
+    }
+}
+
+#[test]
+fn planner_pruned_grid_is_valid_subset_of_full_grid() {
+    let mut rng = Rng64::new(0x9A5);
+    for case in 0..12 {
+        let m = planner_model(&mut rng);
+        let space = random_space(&mut rng);
+        let cands = space.enumerate(&m);
+        assert!(cands.len() as u64 <= space.full_size(), "case {case}");
+        for c in &cands {
+            assert!(space.is_valid(&m, &c.parallel, &c.act), "case {case}: {c:?}");
+            assert_eq!(c.parallel.world_size(), space.world, "case {case}");
+            c.parallel.validate().unwrap();
+            c.act.validate().unwrap();
+            assert_eq!(m.n_routed_experts % c.parallel.ep, 0, "case {case}");
+            StageSplit::FrontLoaded
+                .layer_counts(m.num_hidden_layers, c.parallel.pp)
+                .unwrap();
+        }
+    }
+}
+
+#[test]
+fn planner_frontier_is_feasible_and_mutually_nondominated() {
+    let cs = CaseStudy::paper();
+    let mut rng = Rng64::new(0xF407);
+    for case in 0..8 {
+        let m = planner_model(&mut rng);
+        let hbm = [40u64, 80, 160][rng.below(3) as usize] * dsmem::GIB as u64;
+        let query = PlanQuery::new(random_space(&mut rng), hbm);
+        let res = plan(&m, cs.dtypes, &query);
+        assert_eq!(
+            res.feasible_count,
+            res.evaluated.iter().filter(|p| p.fits(hbm)).count(),
+            "case {case}"
+        );
+        assert!(res.ranked.len() <= query.top_k, "case {case}");
+        for p in &res.frontier {
+            assert!(p.fits(hbm), "case {case}: infeasible frontier point");
+        }
+        for a in &res.frontier {
+            for b in &res.frontier {
+                assert!(!pareto::dominates(a, b), "case {case}: dominated frontier point");
+            }
+        }
+        // Completeness: every feasible point is on the frontier (same
+        // objective triple) or strictly dominated by a frontier point.
+        for p in res.evaluated.iter().filter(|p| p.fits(hbm)) {
+            let covered = res.frontier.iter().any(|f| {
+                pareto::dominates(f, p)
+                    || (f.total_bytes == p.total_bytes
+                        && f.bubble == p.bubble
+                        && f.device_params == p.device_params)
+            });
+            assert!(covered, "case {case}: feasible point escapes the frontier");
+        }
+    }
+}
+
+#[test]
+fn planner_shim_matches_legacy_sweep_bit_identically() {
+    // The acceptance bar for the sweep → planner migration: the shim must
+    // reproduce the historical hand-rolled loop (re-created here verbatim)
+    // point for point, byte for byte, in the historical iteration order.
+    let cs = CaseStudy::paper();
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+    for ov in [Overheads::none(), Overheads::paper_midpoint()] {
+        let hbm80 = 80 * dsmem::GIB as u64;
+        let mut legacy = Vec::new();
+        for b in [1u64, 2, 4] {
+            for rc in [
+                RecomputePolicy::None,
+                RecomputePolicy::SelectiveAttention,
+                RecomputePolicy::Full,
+            ] {
+                for z in ZeroStrategy::ALL {
+                    let act = ActivationConfig { micro_batch: b, recompute: rc, ..cs.activation };
+                    let rep = DeviceMemoryReport::build(&mm, &act, z, ov);
+                    legacy.push((b, rc, z, rep.total_bytes(), rep.fits(hbm80)));
+                }
+            }
+        }
+        let shim = dsmem::analysis::total::sweep(&mm, &cs.activation, ov);
+        assert_eq!(shim.len(), legacy.len());
+        for (s, (b, rc, z, total, fits)) in shim.iter().zip(&legacy) {
+            assert_eq!(s.micro_batch, *b);
+            assert_eq!(s.recompute, *rc);
+            assert_eq!(s.zero, *z);
+            assert_eq!(s.total_bytes, *total, "b={b} {rc:?} {z:?}");
+            assert_eq!(s.fits_80g, *fits);
+        }
+    }
+}
+
+#[test]
+fn planner_contains_paper_point_with_legacy_total() {
+    // The paper's exact configuration must appear in a default world-1024
+    // grid, carrying the same total the direct facade computes for it.
+    let cs = CaseStudy::paper();
+    let q = PlanQuery::new(SearchSpace::for_world(1024), 80 * dsmem::GIB as u64);
+    let res = plan(&cs.model, cs.dtypes, &q);
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+    let direct = DeviceMemoryReport::build(
+        &mm,
+        &cs.activation,
+        ZeroStrategy::OsG,
+        Overheads::paper_midpoint(),
+    );
+    let found = res
+        .evaluated
+        .iter()
+        .find(|p| {
+            p.parallel == cs.parallel
+                && p.micro_batch == 1
+                && p.sp == 2
+                && p.recompute == RecomputePolicy::None
+                && p.zero == ZeroStrategy::OsG
+        })
+        .expect("paper configuration missing from the default grid");
+    assert_eq!(found.total_bytes, direct.total_bytes());
 }
 
 #[test]

@@ -1,0 +1,118 @@
+//! Offline drop-in for the `anyhow` error crate — only the surface this
+//! workspace actually uses: [`Error`], [`Result`], `anyhow!`, `bail!` and
+//! `ensure!`. The container builds with no registry access, so the real
+//! crate cannot be fetched; this implementation is intentionally tiny
+//! (no backtraces, no context chains) but keeps the same types and macro
+//! semantics so the workspace compiles unchanged against either.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A boxed dynamic error, display-formatted like `anyhow::Error`.
+///
+/// Deliberately does *not* implement `std::error::Error` itself — exactly
+/// like the real crate — so the blanket `From<E: Error>` below does not
+/// collide with the reflexive `From<T> for T`.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Build from any standard error (what `?` conversions go through).
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Self { inner: Box::new(error) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `unwrap()` on a Result<_, Error> prints through here; show the
+        // message rather than the struct shape, as anyhow does.
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Message-only payload behind [`Error::msg`].
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// `anyhow::Result<T>` — a `Result` defaulting its error to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macro_and_question_mark_interop() {
+        fn parse(s: &str) -> crate::Result<u64> {
+            let n: u64 = s.parse()?; // std error converts via the blanket From
+            crate::ensure!(n > 0, "want positive, got {n}");
+            if n > 100 {
+                crate::bail!("too big: {n}");
+            }
+            Ok(n)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+        assert!(parse("0").unwrap_err().to_string().contains("positive"));
+        assert!(parse("101").unwrap_err().to_string().contains("too big"));
+        let e = crate::anyhow!("ctx {}", 42);
+        assert_eq!(format!("{e}"), "ctx 42");
+        assert_eq!(format!("{e:?}"), "ctx 42");
+    }
+}
