@@ -1,11 +1,18 @@
 //! Bench E2: schedule-dependent peak activation memory — extends the paper's
-//! per-microbatch Table 10 to whole-step peaks under GPipe / 1F1B /
-//! interleaved-1F1B, and times the cluster simulator.
+//! per-microbatch Table 10 to whole-step peaks under every registered
+//! schedule (GPipe / 1F1B / interleaved / DualPipe / ZB-H1), times the
+//! cluster simulator, and asserts that the planner Evaluator's memoized
+//! schedule-profile + stage-plan caches make repeated plan queries faster
+//! than cold evaluation.
 
-use dsmem::analysis::{MemoryModel, ZeroStrategy};
+use dsmem::analysis::stages::StageSplit;
+use dsmem::analysis::{MemoryModel, Overheads, ZeroStrategy};
 use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
+use dsmem::model::CountMode;
+use dsmem::planner::{Candidate, Evaluator, SearchSpace};
 use dsmem::report::gib;
-use dsmem::sim::{MemClass, ScheduleKind, SimEngine};
+use dsmem::schedule::{registry, ScheduleSpec};
+use dsmem::sim::{MemClass, SimEngine};
 use dsmem::util::bench::{bench, black_box};
 use std::time::Duration;
 
@@ -13,21 +20,19 @@ fn main() {
     let cs = CaseStudy::paper();
     let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
 
-    println!("worst-stage activation peak, b=1, m=16 (Table 10 is per-microbatch):\n");
-    for (name, kind) in [
-        ("gpipe", ScheduleKind::GPipe),
-        ("1f1b", ScheduleKind::OneFOneB),
-        ("interleaved-v2", ScheduleKind::Interleaved1F1B { chunks: 2 }),
-    ] {
+    // m=32 admits every registered schedule at p=16 (DualPipe needs m ≥ 2p).
+    let m = 32;
+    println!("worst-stage activation peak, b=1, m={m} (Table 10 is per-microbatch):\n");
+    for spec in registry() {
         for rc in [RecomputePolicy::None, RecomputePolicy::Full] {
             let mut act = ActivationConfig::paper(1);
             act.recompute = rc;
             let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
-            let res = eng.run(kind, 16).unwrap();
+            let res = eng.run(spec, m).unwrap();
             let worst = res.peak_stage();
             println!(
-                "  {:<16} AC {:<5} peak act {:>7.1} GiB  total {:>7.1} GiB  (stage {}, {} inflight)",
-                name,
+                "  {:<22} AC {:<5} peak act {:>7.1} GiB  total {:>7.1} GiB  (stage {}, {} inflight)",
+                spec.name(),
                 rc.name(),
                 gib(worst.timeline.peak(MemClass::Activations)),
                 gib(worst.timeline.total_peak()),
@@ -41,18 +46,74 @@ fn main() {
     let act = ActivationConfig::paper(1);
     let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
     bench("sim_step_1f1b_m16_pp16", Duration::from_secs(3), || {
-        black_box(eng.run(ScheduleKind::OneFOneB, 16).unwrap());
+        black_box(eng.run(ScheduleSpec::OneFOneB, 16).unwrap());
+    })
+    .report();
+    bench("sim_step_dualpipe_m32_pp16", Duration::from_secs(3), || {
+        black_box(eng.run(ScheduleSpec::DualPipe, 32).unwrap());
+    })
+    .report();
+    bench("sim_step_zb_h1_m32_pp16", Duration::from_secs(3), || {
+        black_box(eng.run(ScheduleSpec::ZbH1, 32).unwrap());
     })
     .report();
     bench("sim_step_gpipe_m64_pp16", Duration::from_secs(3), || {
-        black_box(eng.run(ScheduleKind::GPipe, 64).unwrap());
+        black_box(eng.run(ScheduleSpec::GPipe, 64).unwrap());
     })
     .report();
 
     let mut eng_frag = SimEngine::new(&mm, act, ZeroStrategy::OsG);
     eng_frag.simulate_allocator = true;
     bench("sim_step_with_allocator", Duration::from_secs(3), || {
-        black_box(eng_frag.run(ScheduleKind::OneFOneB, 8).unwrap());
+        black_box(eng_frag.run(ScheduleSpec::OneFOneB, 8).unwrap());
     })
     .report();
+    println!();
+
+    // Evaluator memoization: a schedule-heavy candidate batch evaluated
+    // through one warm Evaluator (stage plans + schedule profiles cached
+    // after the first pass) vs a cold Evaluator per query (rebuilding the
+    // 61-layer census and every (schedule, pp, m) profile each time).
+    let mut space = SearchSpace::for_world(1024);
+    space.tp = vec![2];
+    space.ep = vec![8];
+    space.etp = vec![1];
+    space.sequence_parallel = vec![true];
+    let cands: Vec<Candidate> = space
+        .enumerate(&cs.model)
+        .into_iter()
+        .filter(|c| c.schedule.resolve().validate(c.parallel.pp, m).is_ok())
+        .collect();
+    let new_eval = || {
+        Evaluator::new(
+            &cs.model,
+            cs.dtypes,
+            CountMode::PaperCompat,
+            StageSplit::FrontLoaded,
+            Overheads::paper_midpoint(),
+            m,
+        )
+    };
+    let warm_eval = new_eval();
+    warm_eval.evaluate_all(&cands); // populate both caches
+    let warm = bench("plan_eval_warm_caches", Duration::from_secs(3), || {
+        black_box(warm_eval.evaluate_all(&cands));
+    });
+    warm.report();
+    let cold = bench("plan_eval_cold_caches", Duration::from_secs(3), || {
+        let ev = new_eval();
+        black_box(ev.evaluate_all(&cands));
+    });
+    cold.report();
+    println!(
+        "  → {} candidates; memoized schedule-profile/stage-plan speedup: {:.1}×",
+        cands.len(),
+        cold.mean_ns / warm.mean_ns
+    );
+    assert!(
+        warm.mean_ns < cold.mean_ns,
+        "evaluator memoization regressed: warm {:.0} ns ≥ cold {:.0} ns",
+        warm.mean_ns,
+        cold.mean_ns,
+    );
 }

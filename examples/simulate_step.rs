@@ -9,7 +9,7 @@
 use dsmem::analysis::{MemoryModel, ZeroStrategy};
 use dsmem::config::{ActivationConfig, CaseStudy};
 use dsmem::report::{gib, Table};
-use dsmem::sim::{MemClass, ScheduleKind, SimEngine};
+use dsmem::sim::{MemClass, ScheduleSpec, SimEngine};
 
 fn main() -> anyhow::Result<()> {
     let cs = CaseStudy::paper();
@@ -22,8 +22,8 @@ fn main() -> anyhow::Result<()> {
         &["stage", "1F1B inflight", "1F1B act GiB", "1F1B total GiB", "GPipe act GiB", "GPipe total GiB"],
     );
     let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
-    let r1 = eng.run(ScheduleKind::OneFOneB, m)?;
-    let rg = eng.run(ScheduleKind::GPipe, m)?;
+    let r1 = eng.run(ScheduleSpec::OneFOneB, m)?;
+    let rg = eng.run(ScheduleSpec::GPipe, m)?;
     for (a, b) in r1.stages.iter().zip(&rg.stages) {
         t.row(vec![
             a.stage.to_string(),
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     // allocator with itemized tape allocations.
     let mut eng2 = SimEngine::new(&mm, act, ZeroStrategy::OsG);
     eng2.simulate_allocator = true;
-    let rf = eng2.run(ScheduleKind::OneFOneB, 8)?;
+    let rf = eng2.run(ScheduleSpec::OneFOneB, 8)?;
     let stats = rf.stages[1].alloc_stats.unwrap();
     println!(
         "caching-allocator replay (stage 1): reserved {:.1} GiB, allocated {:.1} GiB, fragmentation {:.1}% (paper §6: 5-30%)",

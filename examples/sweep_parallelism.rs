@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
     space.micro_batch = vec![1];
     space.recompute = vec![RecomputePolicy::None];
     space.zero = vec![ZeroStrategy::OsG];
+    space.schedule = vec![dsmem::schedule::ScheduleSpec::OneFOneB]; // layout axis only here
     let query = PlanQuery::new(space, hbm);
     let res = plan(&cs.model, cs.dtypes, &query);
 

@@ -3,59 +3,53 @@
 //! schedules, which is *why* the paper's per-microbatch activation numbers
 //! must be scaled by schedule-dependent in-flight counts (see `sim`).
 //!
-//! Classic results (Narayanan et al., Megatron-LM):
-//!   * GPipe / 1F1B bubble fraction = (p − 1) / (m + p − 1)
-//!   * interleaved-1F1B with v chunks = (p − 1) / (v·(m + p − 1) − (v−1)·m)
-//!     ≈ (p − 1) / (v·m + p − 1) for m ≫ p — v× smaller.
-//!
-//! Combined with `Schedule::analytic_inflight`, this exposes the
+//! Both quantities are defined by the schedule implementations behind
+//! [`crate::schedule::PipelineSchedule`] — this module is a thin analytical
+//! view: [`bubble_fraction`] delegates to the trait, and [`frontier`] sweeps
+//! every registered schedule ([`crate::schedule::registry`]) to expose the
 //! bubble-vs-activation frontier the paper's configuration sits on.
+//!
+//! Classic anchors (Narayanan et al., Megatron-LM; Qi et al., zero bubble;
+//! DeepSeek-V3 Technical Report):
+//!   * GPipe / 1F1B bubble fraction = (p − 1) / (m + p − 1)
+//!   * interleaved-1F1B with v chunks ≈ v× smaller
+//!   * ZB-H1 ≈ 3× smaller at 1F1B's memory
+//!   * DualPipe smaller still, at 2× parameters and p+1 in-flight tapes
 
-use crate::sim::ScheduleKind;
+use crate::schedule::{registry, ScheduleSpec};
 
 /// Bubble fraction of a schedule: idle device-time ÷ total device-time.
-pub fn bubble_fraction(kind: ScheduleKind, p: u64, m: u64) -> f64 {
-    let p = p as f64;
-    let m = m as f64;
-    match kind {
-        // GPipe and 1F1B have identical bubble; 1F1B only reduces memory.
-        ScheduleKind::GPipe | ScheduleKind::OneFOneB => (p - 1.0) / (m + p - 1.0),
-        ScheduleKind::Interleaved1F1B { chunks } => {
-            let v = chunks as f64;
-            (p - 1.0) / (v * m + p - 1.0)
-        }
-    }
+/// Delegates to [`crate::schedule::PipelineSchedule::bubble_fraction`].
+pub fn bubble_fraction(spec: ScheduleSpec, p: u64, m: u64) -> f64 {
+    spec.resolve().bubble_fraction(p, m)
 }
 
 /// One point on the bubble-vs-activation frontier.
 #[derive(Debug, Clone)]
 pub struct FrontierPoint {
-    pub kind: ScheduleKind,
+    pub spec: ScheduleSpec,
     pub microbatches: u64,
     pub bubble: f64,
     /// Worst-stage in-flight activation sets (microbatch-equivalents).
     pub inflight_mb_equiv: f64,
 }
 
-/// Sweep the frontier for a pipeline of depth `p` over microbatch counts.
+/// Sweep the frontier for a pipeline of depth `p` over microbatch counts,
+/// covering every registered schedule that admits the `(p, m)` shape.
 pub fn frontier(p: u64, microbatch_counts: &[u64]) -> Vec<FrontierPoint> {
     let mut out = Vec::new();
     for &m in microbatch_counts {
-        for kind in [
-            ScheduleKind::GPipe,
-            ScheduleKind::OneFOneB,
-            ScheduleKind::Interleaved1F1B { chunks: 2 },
-        ] {
-            let sched = crate::sim::Schedule::build(kind, p, m).expect("valid");
-            let units = sched.analytic_inflight(0);
-            let mb_equiv = match kind {
-                ScheduleKind::Interleaved1F1B { chunks } => units as f64 / chunks as f64,
-                _ => units as f64,
-            };
+        for spec in registry() {
+            let sched = spec.resolve();
+            if sched.validate(p, m).is_err() {
+                continue;
+            }
+            let units = sched.analytic_inflight(0, p, m);
+            let mb_equiv = units as f64 / sched.units_per_microbatch() as f64;
             out.push(FrontierPoint {
-                kind,
+                spec,
                 microbatches: m,
-                bubble: bubble_fraction(kind, p, m),
+                bubble: sched.bubble_fraction(p, m),
                 inflight_mb_equiv: mb_equiv,
             });
         }
@@ -70,49 +64,70 @@ mod tests {
     #[test]
     fn paper_config_bubble() {
         // p=16, m=32: bubble = 15/47 ≈ 31.9%.
-        let b = bubble_fraction(ScheduleKind::OneFOneB, 16, 32);
+        let b = bubble_fraction(ScheduleSpec::OneFOneB, 16, 32);
         assert!((b - 15.0 / 47.0).abs() < 1e-12);
     }
 
     #[test]
     fn more_microbatches_shrink_bubble() {
-        let b1 = bubble_fraction(ScheduleKind::OneFOneB, 16, 16);
-        let b2 = bubble_fraction(ScheduleKind::OneFOneB, 16, 64);
-        assert!(b2 < b1);
+        for spec in registry() {
+            let b1 = bubble_fraction(spec, 16, 32);
+            let b2 = bubble_fraction(spec, 16, 64);
+            assert!(b2 < b1, "{}", spec.name());
+        }
     }
 
     #[test]
     fn interleaving_cuts_bubble_but_costs_memory() {
         let p = 16;
         let m = 32;
-        let plain = bubble_fraction(ScheduleKind::OneFOneB, p, m);
-        let inter = bubble_fraction(ScheduleKind::Interleaved1F1B { chunks: 2 }, p, m);
+        let plain = bubble_fraction(ScheduleSpec::OneFOneB, p, m);
+        let inter = bubble_fraction(ScheduleSpec::Interleaved1F1B { chunks: 2 }, p, m);
         assert!(inter < plain);
 
         // ...and the memory side from the frontier: interleaved stage-0
         // holds more microbatch-equivalents than plain 1F1B.
         let pts = frontier(p, &[m]);
-        let get = |k: ScheduleKind| {
-            pts.iter().find(|x| x.kind == k && x.microbatches == m).unwrap().inflight_mb_equiv
+        let get = |k: ScheduleSpec| {
+            pts.iter().find(|x| x.spec == k && x.microbatches == m).unwrap().inflight_mb_equiv
         };
         assert!(
-            get(ScheduleKind::Interleaved1F1B { chunks: 2 }) > get(ScheduleKind::OneFOneB)
+            get(ScheduleSpec::Interleaved1F1B { chunks: 2 }) > get(ScheduleSpec::OneFOneB)
         );
     }
 
     #[test]
     fn gpipe_and_1f1b_same_bubble_different_memory() {
         let pts = frontier(8, &[32]);
-        let g = pts.iter().find(|x| x.kind == ScheduleKind::GPipe).unwrap();
-        let o = pts.iter().find(|x| x.kind == ScheduleKind::OneFOneB).unwrap();
+        let g = pts.iter().find(|x| x.spec == ScheduleSpec::GPipe).unwrap();
+        let o = pts.iter().find(|x| x.spec == ScheduleSpec::OneFOneB).unwrap();
         assert_eq!(g.bubble, o.bubble);
         assert!(g.inflight_mb_equiv > o.inflight_mb_equiv);
     }
 
     #[test]
-    fn frontier_is_exhaustive() {
+    fn dualpipe_and_zb_h1_extend_the_frontier() {
+        // p=16, m=32 admits every registered schedule (m = 2p).
+        let pts = frontier(16, &[32]);
+        assert_eq!(pts.len(), 5);
+        let dp = pts.iter().find(|x| x.spec == ScheduleSpec::DualPipe).unwrap();
+        let zb = pts.iter().find(|x| x.spec == ScheduleSpec::ZbH1).unwrap();
+        let fb = pts.iter().find(|x| x.spec == ScheduleSpec::OneFOneB).unwrap();
+        assert!(dp.bubble < zb.bubble && zb.bubble < fb.bubble);
+        // DualPipe holds p+1 = 17 tapes, 1F1B holds p = 16.
+        assert!((dp.inflight_mb_equiv - 17.0).abs() < 1e-12);
+        assert!((fb.inflight_mb_equiv - 16.0).abs() < 1e-12);
+        assert_eq!(zb.inflight_mb_equiv, fb.inflight_mb_equiv);
+    }
+
+    #[test]
+    fn frontier_covers_valid_schedules_only() {
+        // m=4 < 2p rules DualPipe out; the other four remain.
         let pts = frontier(4, &[4, 8, 16]);
-        assert_eq!(pts.len(), 9);
+        assert_eq!(pts.len(), 4 + 5 + 5);
         assert!(pts.iter().all(|x| (0.0..1.0).contains(&x.bubble)));
+        assert!(!pts
+            .iter()
+            .any(|x| x.spec == ScheduleSpec::DualPipe && x.microbatches == 4));
     }
 }

@@ -103,14 +103,19 @@ impl StagePlan {
         Self { stages, mode }
     }
 
-    /// Index of the stage with the most parameters (the paper analyses this one).
+    /// Index of the stage with the most parameters (the paper analyses this
+    /// one). Ties break toward the *earliest* stage: the paper's archetype is
+    /// stage 1, and under depth-decreasing schedules like 1F1B the earliest
+    /// parameter-maximal stage also holds the most in-flight activation
+    /// tapes, so it is the analysed worst case for schedule-aware totals.
     pub fn heaviest_stage(&self) -> usize {
-        self.stages
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, s)| s.params)
-            .map(|(i, _)| i)
-            .unwrap()
+        let mut best = 0usize;
+        for (i, s) in self.stages.iter().enumerate() {
+            if s.params > self.stages[best].params {
+                best = i;
+            }
+        }
+        best
     }
 
     /// Sum over all stages (must equal the model total).
@@ -169,11 +174,14 @@ mod tests {
     }
 
     #[test]
-    fn heaviest_stage_is_a_middle_stage() {
+    fn heaviest_stage_is_the_paper_archetype() {
+        // Stages 1..=14 tie on params (4 MoE layers each); the earliest —
+        // the paper's analysed stage 1 — wins the tie.
         let p = plan();
         let h = p.heaviest_stage();
-        assert!((1..15).contains(&h), "heaviest = {h}");
+        assert_eq!(h, 1, "heaviest = {h}");
         assert_eq!(p.stages[h].moe_layers, 4);
+        assert_eq!(p.stages[1].params, p.stages[14].params);
     }
 
     #[test]

@@ -12,31 +12,29 @@ use super::MemoryModel;
 use crate::config::{ActivationConfig, RecomputePolicy};
 
 /// §6 overheads. The paper gives ranges; defaults sit mid-range.
+///
+/// Schedule-dependent activation *multiples* are deliberately not an
+/// overhead: the paper's tables are per-microbatch (one in-flight tape),
+/// and the in-flight count is a property of the pipeline schedule — derived
+/// per stage from [`crate::schedule::PipelineSchedule`] by the planner
+/// ([`crate::planner::Evaluator`]) and the simulator, never a fixed scalar.
 #[derive(Debug, Clone, Copy)]
 pub struct Overheads {
     /// Temporary communication buffers per device, bytes (paper: 0.8–2 GB).
     pub comm_buffer_bytes: u64,
     /// Fragmentation as a fraction of allocated memory (paper: 0.05–0.30).
     pub fragmentation: f64,
-    /// Microbatches whose activations are simultaneously live. The paper's
-    /// per-microbatch analysis corresponds to 1; 1F1B on stage `i` of `p`
-    /// stages holds up to `p - i` (see `sim::schedule`).
-    pub inflight_microbatches: u64,
 }
 
 impl Overheads {
-    /// Paper §6 midpoints, single in-flight microbatch (the paper's implicit setting).
+    /// Paper §6 midpoints.
     pub fn paper_midpoint() -> Self {
-        Self {
-            comm_buffer_bytes: (1.4 * crate::GIB) as u64,
-            fragmentation: 0.15,
-            inflight_microbatches: 1,
-        }
+        Self { comm_buffer_bytes: (1.4 * crate::GIB) as u64, fragmentation: 0.15 }
     }
 
     /// No overheads (pure Table-6/8/10 arithmetic).
     pub fn none() -> Self {
-        Self { comm_buffer_bytes: 0, fragmentation: 0.0, inflight_microbatches: 1 }
+        Self { comm_buffer_bytes: 0, fragmentation: 0.0 }
     }
 }
 
@@ -63,7 +61,8 @@ impl DeviceMemoryReport {
         let zr: ZeroReport = mm.zero_report();
         let row = *zr.row(zero);
         let ar: ActivationReport = mm.activation_report(act);
-        let act_bytes = ar.total_stage_bytes(act.recompute) * ov.inflight_microbatches;
+        // Per-microbatch, as in the paper's tables: one in-flight tape.
+        let act_bytes = ar.total_stage_bytes(act.recompute);
         let allocated =
             row.params_bytes + row.gradient_bytes + row.optimizer_bytes + act_bytes;
         Self {
@@ -143,7 +142,7 @@ mod tests {
     fn fragmentation_and_buffers_add_up() {
         let mm = mm();
         let act = ActivationConfig::paper(1);
-        let ov = Overheads { comm_buffer_bytes: crate::GIB as u64, fragmentation: 0.10, inflight_microbatches: 1 };
+        let ov = Overheads { comm_buffer_bytes: crate::GIB as u64, fragmentation: 0.10 };
         let with = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::OsG, ov);
         let without = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::OsG, Overheads::none());
         let alloc = without.total_bytes();
@@ -188,13 +187,13 @@ mod tests {
     }
 
     #[test]
-    fn inflight_microbatches_scale_activations() {
+    fn report_counts_one_inflight_microbatch() {
+        // The paper-table report is per-microbatch by definition; schedule
+        // multiples are the planner's job (Evaluator::schedule_profile).
         let mm = mm();
         let act = ActivationConfig::paper(1);
-        let ov1 = Overheads { inflight_microbatches: 1, ..Overheads::none() };
-        let ov4 = Overheads { inflight_microbatches: 4, ..Overheads::none() };
-        let r1 = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::None, ov1);
-        let r4 = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::None, ov4);
-        assert_eq!(r4.activation_bytes, 4 * r1.activation_bytes);
+        let rep = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::None, Overheads::none());
+        let ar = mm.activation_report(&act);
+        assert_eq!(rep.activation_bytes, ar.total_stage_bytes(act.recompute));
     }
 }

@@ -13,7 +13,7 @@ use crate::config::{LiveSchedule, TrainingConfig};
 use crate::runtime::executable::{f32_literal, i32_literal, literal_bytes};
 use crate::runtime::memory::MemorySnapshot;
 use crate::runtime::{MemTag, Runtime, StageExecutables, TrackedMemory};
-use crate::sim::{Schedule, ScheduleKind};
+use crate::schedule::{Schedule, ScheduleSpec};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -163,11 +163,11 @@ impl PipelineCoordinator {
             anyhow::bail!("data for {} replicas, dp={}", data.len(), self.cfg.dp);
         }
         let m = self.cfg.num_microbatches;
-        let kind = match self.cfg.schedule {
-            LiveSchedule::GPipe => ScheduleKind::GPipe,
-            LiveSchedule::OneFOneB => ScheduleKind::OneFOneB,
+        let spec = match self.cfg.schedule {
+            LiveSchedule::GPipe => ScheduleSpec::GPipe,
+            LiveSchedule::OneFOneB => ScheduleSpec::OneFOneB,
         };
-        let schedule = Schedule::build(kind, self.cfg.pp, m)?;
+        let schedule = Schedule::build(spec, self.cfg.pp, m)?;
 
         // Zero gradient accumulators.
         for stages in &mut self.replicas {
@@ -418,6 +418,16 @@ impl PipelineCoordinator {
                         // dx consumed by stage s-1's backward later; account
                         // its release there.
                         bwd_done[s][mb] = true;
+                        next_op[s] += 1;
+                        done_ops += 1;
+                        progressed = true;
+                    }
+                    crate::sim::PipelineOp::WeightGrad { .. } => {
+                        // Zero-bubble schedules split the backward; the live
+                        // executables fuse dgrad and wgrad, so the weight
+                        // gradients were already accumulated by the Backward
+                        // arm — nothing to run here. (The live coordinator
+                        // only builds GPipe/1F1B today.)
                         next_op[s] += 1;
                         done_ops += 1;
                         progressed = true;

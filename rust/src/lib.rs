@@ -11,9 +11,10 @@
 //!
 //! 2. **Cluster memory simulator** ([`sim`]) — an event-driven substrate that replays a
 //!    training step on every device of the parallel grid: a caching-allocator model
-//!    (fragmentation, §6 of the paper), pipeline schedules (GPipe / 1F1B / interleaved)
-//!    and collective-buffer accounting. It extends the paper's per-microbatch analysis
-//!    to schedule-dependent peak memory.
+//!    (fragmentation, §6 of the paper), pipeline-schedule replay and collective-buffer
+//!    accounting. It extends the paper's per-microbatch analysis to schedule-dependent
+//!    peak memory. The schedules themselves (GPipe / 1F1B / interleaved / DualPipe /
+//!    ZB-H1) live in the trait-based [`schedule`] registry shared with the planner.
 //!
 //! 3. **Live mini-training runtime** (`runtime`, `coordinator`, `trainer`; feature
 //!    `live`) — a real pipeline-parallel training loop over AOT-compiled XLA
@@ -23,11 +24,12 @@
 //!    which the offline build does not ship.
 //!
 //! 4. **Configuration planner** ([`planner`]) — a query-driven search engine over
-//!    the full (DP, TP, PP, EP, ETP, micro-batch, recompute, ZeRO) grid: validity
-//!    pruning before evaluation, thread-parallel memoized evaluation, feasibility
-//!    filtering against an HBM budget and a Pareto frontier over
+//!    the full (DP, TP, PP, EP, ETP, micro-batch, recompute, ZeRO, **schedule**)
+//!    grid: validity pruning before evaluation, thread-parallel memoized evaluation
+//!    (stage plans per PP degree, schedule profiles per `(schedule, pp, m)`),
+//!    feasibility filtering against an HBM budget and a Pareto frontier over
 //!    (peak memory, pipeline bubble, per-device parameters). Every "what fits?"
-//!    question — the old ad-hoc sweeps included — is one planner query.
+//!    question — *which schedule* included — is one planner query.
 //!
 //! ## Quickstart
 //!
@@ -57,6 +59,7 @@ pub mod planner;
 pub mod report;
 #[cfg(feature = "live")]
 pub mod runtime;
+pub mod schedule;
 pub mod sim;
 #[cfg(feature = "live")]
 pub mod trainer;

@@ -15,7 +15,8 @@ use dsmem::analysis::{MemoryModel, Overheads, ZeroStrategy};
 use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
 use dsmem::planner::{self, PlanQuery, SearchSpace};
 use dsmem::report::{fmt_bytes, gib, tables::paper_table};
-use dsmem::sim::{ScheduleKind, SimEngine};
+use dsmem::schedule::ScheduleSpec;
+use dsmem::sim::SimEngine;
 use std::collections::HashMap;
 
 const USAGE: &str = "\
@@ -27,11 +28,13 @@ COMMANDS:
   tables     Print the paper's tables        [--table N] [--model M] [--format text|markdown|csv]
   analyze    Diagrams & tapes                [--arch] [--tape mla|moe] [--micro-batch B] [--model M]
   plan       Rank parallel configurations    [--hbm-gib G] [--world W] [--top-k K] [--json]
-             that fit a device budget        [--microbatches M] [--model M] [--frontier-only]
+             and pipeline schedules that     [--microbatches M] [--model M] [--frontier-only]
+             fit a device budget             [--schedule all|gpipe|1f1b|interleaved[:v]|dualpipe|zb-h1]
+                                             [--pp P]
   sweep      Feasibility sweep               [--hbm-gib G] [--model M]
-  simulate   Cluster memory simulation       [--schedule gpipe|1f1b|interleaved] [--microbatches M]
-             [--micro-batch B] [--zero none|os|os_g|os_g_params] [--recompute] [--frag]
-             [--trace FILE.json] [--model M]
+  simulate   Cluster memory simulation       [--schedule gpipe|1f1b|interleaved|dualpipe|zb-h1]
+             [--microbatches M] [--micro-batch B] [--chunks V] [--recompute] [--frag]
+             [--zero none|os|os_g|os_g_params] [--trace FILE.json] [--model M]
   kvcache    Inference KV-cache analysis     [--tokens N] [--model M]  (MLA vs MHA vs GQA)
   bubble     Pipeline bubble-vs-memory sweep [--pp P] [--model M]
   train      Live mini pipeline training     [--artifacts DIR] [--steps N] [--dp D]
@@ -124,12 +127,17 @@ fn zero_of(s: &str) -> anyhow::Result<ZeroStrategy> {
     })
 }
 
-fn schedule_of(s: &str) -> anyhow::Result<ScheduleKind> {
-    Ok(match s {
-        "gpipe" => ScheduleKind::GPipe,
-        "1f1b" => ScheduleKind::OneFOneB,
-        "interleaved" => ScheduleKind::Interleaved1F1B { chunks: 2 },
-        other => anyhow::bail!("unknown schedule: {other}"),
+/// Parse a schedule name, overriding the interleaved chunk count when the
+/// CLI passed an explicit `--chunks` value. `--chunks` with a chunk-less
+/// schedule is an error rather than silently ignored.
+fn schedule_of(s: &str, chunks: Option<u64>) -> anyhow::Result<ScheduleSpec> {
+    let spec = ScheduleSpec::parse(s)?;
+    Ok(match (spec, chunks) {
+        (ScheduleSpec::Interleaved1F1B { .. }, Some(v)) => {
+            ScheduleSpec::Interleaved1F1B { chunks: v }
+        }
+        (_, Some(_)) => anyhow::bail!("--chunks only applies to --schedule interleaved"),
+        (_, None) => spec,
     })
 }
 
@@ -201,9 +209,31 @@ fn main() -> anyhow::Result<()> {
             let mut space = SearchSpace::for_world(world);
             space.seq_len = cs.activation.seq_len;
             space.cp = cs.activation.cp;
+            if a.has("pp") {
+                space.pp = vec![a.get_u64("pp", 16)?];
+            }
+            let m_step = a.get_u64("microbatches", 32)?;
+            // Schedule axis: all registered schedules by default; a named
+            // schedule restricts the search to it. A named schedule no PP in
+            // the space admits is an error, not a silently empty table.
+            match a.opt("schedule") {
+                None | Some("all") => {}
+                Some(s) => {
+                    let spec = ScheduleSpec::parse(s)?;
+                    let sched = spec.resolve();
+                    if !space.pp.iter().any(|&pp| sched.validate(pp, m_step).is_ok()) {
+                        anyhow::bail!(
+                            "schedule {} cannot run at any PP in the search space with \
+                             --microbatches {m_step} (dualpipe needs an even PP and m >= 2*PP)",
+                            sched.name()
+                        );
+                    }
+                    space.schedule = vec![spec];
+                }
+            }
             let mut query = PlanQuery::new(space, (hbm_gib * dsmem::GIB) as u64);
             query.top_k = a.get_u64("top-k", 10)? as usize;
-            query.num_microbatches = a.get_u64("microbatches", 32)?;
+            query.num_microbatches = m_step;
             let res = planner::plan(&cs.model, cs.dtypes, &query);
             if a.has("json") {
                 println!("{}", planner::report::to_json(&res).dump());
@@ -294,8 +324,9 @@ fn main() -> anyhow::Result<()> {
             let mut eng = SimEngine::new(&mm, act, zero_of(&a.get("zero", "os_g"))?);
             eng.simulate_allocator = a.has("frag");
             eng.record_events = a.opt("trace").is_some();
+            let chunks = a.opt("chunks").map(str::parse::<u64>).transpose()?;
             let res = eng.run(
-                schedule_of(&a.get("schedule", "1f1b"))?,
+                schedule_of(&a.get("schedule", "1f1b"), chunks)?,
                 a.get_u64("microbatches", 16)?,
             )?;
             if let Some(path) = a.opt("trace") {
@@ -305,7 +336,7 @@ fn main() -> anyhow::Result<()> {
                 println!("wrote chrome trace to {path} (open in chrome://tracing)");
             }
             let mut t = dsmem::report::Table::new(
-                format!("Simulated step: {} m={}", res.schedule, res.num_microbatches),
+                format!("Simulated step: {} m={}", res.spec.name(), res.num_microbatches),
                 &["stage", "inflight", "peak total", "peak act", "frag"],
             );
             for st in &res.stages {

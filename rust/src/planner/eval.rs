@@ -2,13 +2,21 @@
 //!
 //! An [`Evaluator`] fixes everything a [`super::space::Candidate`] does not
 //! vary — model, dtype policy, counting mode, stage split, §6 overheads and
-//! the microbatch count used for the bubble — and maps candidates to
-//! [`PlanPoint`] records through the analytical model.
+//! the step microbatch count — and maps candidates to [`PlanPoint`] records
+//! through the analytical model.
 //!
-//! The expensive sub-results, [`StagePlan`]s (which walk every layer's
-//! parameter census), depend only on `(model, pp, split, mode)` — a tuple
-//! shared by thousands of grid points — so they are built once per distinct
-//! PP degree and shared behind an `Arc` across all worker threads.
+//! Two expensive sub-results are memoized and shared behind `Arc`s across
+//! all worker threads:
+//!
+//! * [`StagePlan`]s (which walk every layer's parameter census) depend only
+//!   on `(model, pp, split, mode)` — one per distinct PP degree;
+//! * [`ScheduleProfile`]s — the schedule-derived per-stage in-flight counts,
+//!   bubble fraction and parameter multiplier, keyed by
+//!   `(schedule, pp, m)`. These replace the fixed `inflight_microbatches`
+//!   scalar the planner used to apply: the activation multiple now comes
+//!   from [`crate::schedule::PipelineSchedule::analytic_inflight`] at the
+//!   analysed stage, so `plan --microbatches` and the activation multiplier
+//!   agree even when `m < p`.
 //!
 //! [`Evaluator::evaluate_all`] fans the grid out over `std::thread::scope`
 //! workers in contiguous chunks, so results come back in input order and the
@@ -19,19 +27,19 @@ use std::sync::{Arc, Mutex};
 
 use super::space::Candidate;
 use crate::analysis::activation::ActivationReport;
-use crate::analysis::bubble::bubble_fraction;
 use crate::analysis::device::DeviceStaticParams;
 use crate::analysis::stages::{StagePlan, StageSplit};
-use crate::analysis::total::{Overheads, SweepPoint};
+use crate::analysis::total::{DeviceMemoryReport, Overheads, SweepPoint};
 use crate::analysis::zero::{ZeroReport, ZeroStrategy};
 use crate::analysis::MemoryModel;
 use crate::config::{ActivationConfig, DtypePolicy, ModelConfig, ParallelConfig, RecomputePolicy};
 use crate::model::CountMode;
-use crate::sim::ScheduleKind;
+use crate::schedule::ScheduleSpec;
 
 /// One evaluated configuration: the memory decomposition of
-/// [`crate::analysis::DeviceMemoryReport`] plus the layout, the per-device
-/// parameter count and the 1F1B pipeline-bubble fraction.
+/// [`crate::analysis::DeviceMemoryReport`] scaled by the schedule's in-flight
+/// counts, plus the layout, the per-device parameter count and the
+/// schedule's pipeline-bubble fraction.
 #[derive(Debug, Clone)]
 pub struct PlanPoint {
     pub parallel: ParallelConfig,
@@ -39,17 +47,22 @@ pub struct PlanPoint {
     pub sp: u64,
     pub recompute: RecomputePolicy,
     pub zero: ZeroStrategy,
-    /// Static parameters held per device (heaviest stage, unsharded).
+    pub schedule: ScheduleSpec,
+    /// Static parameters held per device (heaviest stage, unsharded, times
+    /// the schedule's replica multiplier).
     pub device_params: u64,
     pub params_bytes: u64,
     pub gradient_bytes: u64,
     pub optimizer_bytes: u64,
+    /// Activation bytes at the analysed stage's schedule-derived peak:
+    /// per-unit tape × analytic in-flight units.
     pub activation_bytes: u64,
     pub comm_buffer_bytes: u64,
     pub fragmentation_bytes: u64,
     /// Grand total bytes per device (same composition as `DeviceMemoryReport`).
     pub total_bytes: u64,
-    /// 1F1B bubble fraction for the evaluator's microbatch count.
+    /// Bubble fraction of this point's schedule at the evaluator's
+    /// microbatch count.
     pub bubble: f64,
 }
 
@@ -65,6 +78,23 @@ impl PlanPoint {
     }
 }
 
+/// Schedule-derived evaluation inputs for one `(schedule, pp, m)` triple:
+/// the per-stage analytic in-flight units, the unit size divisor, the
+/// parameter-replica multiplier and the bubble fraction. Memoized by
+/// [`Evaluator::schedule_profile`] because thousands of grid points share
+/// each triple.
+#[derive(Debug, Clone)]
+pub struct ScheduleProfile {
+    /// `inflight_units[stage]` = analytic peak in-flight activation units.
+    pub inflight_units: Vec<u64>,
+    /// Units one microbatch's stage tape divides into.
+    pub units_per_microbatch: u64,
+    /// Resident copies of the stage parameters.
+    pub param_multiplier: u64,
+    /// Bubble fraction at the profile's `(p, m)`.
+    pub bubble: f64,
+}
+
 /// Memoized evaluator over one (model, dtypes, mode, split) quadruple.
 pub struct Evaluator<'a> {
     pub model: &'a ModelConfig,
@@ -72,10 +102,13 @@ pub struct Evaluator<'a> {
     pub mode: CountMode,
     pub split: StageSplit,
     pub overheads: Overheads,
-    /// Microbatches per step, for the bubble fraction (paper: 32).
+    /// Microbatches per step: sets both the bubble fraction and the
+    /// schedule's in-flight activation counts (paper: 32).
     pub num_microbatches: u64,
     /// `pp → StagePlan`, shared across all grid points and worker threads.
     plans: Mutex<HashMap<u64, Arc<StagePlan>>>,
+    /// `(schedule, pp, m) → ScheduleProfile`, likewise shared.
+    profiles: Mutex<HashMap<(ScheduleSpec, u64, u64), Arc<ScheduleProfile>>>,
 }
 
 impl<'a> Evaluator<'a> {
@@ -87,12 +120,16 @@ impl<'a> Evaluator<'a> {
         overheads: Overheads,
         num_microbatches: u64,
     ) -> Self {
-        Self { model, dtypes, mode, split, overheads, num_microbatches, plans: Mutex::new(HashMap::new()) }
-    }
-
-    /// Evaluator matching an existing [`MemoryModel`] facade.
-    pub fn for_memory_model(mm: &'a MemoryModel, overheads: Overheads, num_microbatches: u64) -> Self {
-        Self::new(&mm.model, mm.dtypes, mm.mode, mm.split.clone(), overheads, num_microbatches)
+        Self {
+            model,
+            dtypes,
+            mode,
+            split,
+            overheads,
+            num_microbatches,
+            plans: Mutex::new(HashMap::new()),
+            profiles: Mutex::new(HashMap::new()),
+        }
     }
 
     /// The memoized stage plan for a PP degree. The split must be valid for
@@ -108,6 +145,34 @@ impl<'a> Evaluator<'a> {
             .clone()
     }
 
+    /// The memoized schedule profile for `(spec, pp)` at the evaluator's
+    /// microbatch count. The schedule must admit `(pp, m)` —
+    /// [`crate::planner::plan`] filters candidates that do not.
+    pub fn schedule_profile(&self, spec: ScheduleSpec, pp: u64) -> Arc<ScheduleProfile> {
+        let m = self.num_microbatches;
+        let mut guard = self.profiles.lock().unwrap();
+        guard
+            .entry((spec, pp, m))
+            .or_insert_with(|| {
+                let sched = spec.resolve();
+                // Hard assert (memoized, so effectively free): silently
+                // profiling a shape the schedule cannot run would make the
+                // planner disagree with the sim engine, which errors on it.
+                assert!(
+                    sched.validate(pp, m).is_ok(),
+                    "unfiltered invalid schedule shape: {} pp={pp} m={m}",
+                    spec.name()
+                );
+                Arc::new(ScheduleProfile {
+                    inflight_units: (0..pp).map(|s| sched.analytic_inflight(s, pp, m)).collect(),
+                    units_per_microbatch: sched.units_per_microbatch().max(1),
+                    param_multiplier: sched.param_multiplier(),
+                    bubble: sched.bubble_fraction(pp, m),
+                })
+            })
+            .clone()
+    }
+
     /// Per-device activation bytes of the heaviest stage for one microbatch
     /// (before in-flight scaling). Used by the bubble-vs-memory report.
     pub fn stage_activation_bytes(&self, parallel: &ParallelConfig, act: &ActivationConfig) -> u64 {
@@ -117,10 +182,15 @@ impl<'a> Evaluator<'a> {
         ar.total_stage_bytes(act.recompute)
     }
 
-    /// Evaluate one candidate. Bit-identical to
-    /// `DeviceMemoryReport::build(...)` on an equivalent `MemoryModel`.
+    /// Evaluate one candidate. Static classes match
+    /// `DeviceMemoryReport::build(...)` on an equivalent `MemoryModel`
+    /// (params scaled by the schedule's replica multiplier); activations are
+    /// the per-unit tape times the schedule's analytic in-flight count at
+    /// the analysed (heaviest-parameter) stage — the same arithmetic the sim
+    /// engine replays op by op (the E2 bridge, asserted by integration test).
     pub fn evaluate(&self, c: &Candidate) -> PlanPoint {
         let plan = self.plan_for(c.parallel.pp);
+        let prof = self.schedule_profile(c.schedule, c.parallel.pp);
         let heaviest = plan.heaviest_stage();
         let dev = DeviceStaticParams::for_stage(
             self.model,
@@ -137,10 +207,13 @@ impl<'a> Evaluator<'a> {
             &c.act,
             plan.stages[heaviest].num_layers,
         );
-        let activation_bytes =
-            ar.total_stage_bytes(c.act.recompute) * self.overheads.inflight_microbatches;
+        let params_bytes = prof.param_multiplier * row.params_bytes;
+        let inflight_units = prof.inflight_units[heaviest];
+        let activation_bytes = (ar.total_stage_bytes(c.act.recompute)
+            / prof.units_per_microbatch)
+            * inflight_units;
         let allocated =
-            row.params_bytes + row.gradient_bytes + row.optimizer_bytes + activation_bytes;
+            params_bytes + row.gradient_bytes + row.optimizer_bytes + activation_bytes;
         let fragmentation_bytes = (allocated as f64 * self.overheads.fragmentation) as u64;
         PlanPoint {
             parallel: c.parallel,
@@ -148,15 +221,16 @@ impl<'a> Evaluator<'a> {
             sp: c.act.sp,
             recompute: c.act.recompute,
             zero: c.zero,
-            device_params: dev.total_params(),
-            params_bytes: row.params_bytes,
+            schedule: c.schedule,
+            device_params: prof.param_multiplier * dev.total_params(),
+            params_bytes,
             gradient_bytes: row.gradient_bytes,
             optimizer_bytes: row.optimizer_bytes,
             activation_bytes,
             comm_buffer_bytes: self.overheads.comm_buffer_bytes,
             fragmentation_bytes,
             total_bytes: allocated + self.overheads.comm_buffer_bytes + fragmentation_bytes,
-            bubble: bubble_fraction(ScheduleKind::OneFOneB, c.parallel.pp, self.num_microbatches),
+            bubble: prof.bubble,
         }
     }
 
@@ -184,30 +258,30 @@ impl<'a> Evaluator<'a> {
 }
 
 /// The legacy `(b × AC × ZeRO)` sweep at a fixed parallel layout, in the
-/// historical iteration order. [`crate::analysis::total::sweep`] is a shim
-/// over this function; results are bit-identical to the old hand-rolled loop.
+/// historical iteration order — the paper's per-microbatch feasibility table
+/// (extension experiment E4). Deliberately *not* schedule-scaled: it reports
+/// one in-flight tape per point, exactly as the paper's tables do, so the
+/// output is bit-identical to the historical implementation. Schedule-aware
+/// totals are the planner's [`Evaluator`].
 pub fn sweep_fixed(mm: &MemoryModel, base: &ActivationConfig, ov: Overheads) -> Vec<SweepPoint> {
     let hbm80 = 80 * crate::GIB as u64;
-    let ev = Evaluator::for_memory_model(mm, ov, 32);
-    let mut cands = Vec::with_capacity(36);
+    let mut out = Vec::with_capacity(36);
     for b in [1u64, 2, 4] {
         for rc in [RecomputePolicy::None, RecomputePolicy::SelectiveAttention, RecomputePolicy::Full] {
             for z in ZeroStrategy::ALL {
                 let act = ActivationConfig { micro_batch: b, recompute: rc, ..*base };
-                cands.push(Candidate { parallel: mm.parallel, act, zero: z });
+                let rep = DeviceMemoryReport::build(mm, &act, z, ov);
+                out.push(SweepPoint {
+                    micro_batch: b,
+                    recompute: rc,
+                    zero: z,
+                    total_bytes: rep.total_bytes(),
+                    fits_80g: rep.fits(hbm80),
+                });
             }
         }
     }
-    ev.evaluate_all(&cands)
-        .into_iter()
-        .map(|p| SweepPoint {
-            micro_batch: p.micro_batch,
-            recompute: p.recompute,
-            zero: p.zero,
-            total_bytes: p.total_bytes,
-            fits_80g: p.total_bytes <= hbm80,
-        })
-        .collect()
+    out
 }
 
 #[cfg(test)]
@@ -227,32 +301,75 @@ mod tests {
         )
     }
 
+    fn paper_candidate(cs: &CaseStudy, zero: ZeroStrategy, rc: RecomputePolicy) -> Candidate {
+        let act = ActivationConfig { recompute: rc, ..cs.activation };
+        Candidate { parallel: cs.parallel, act, zero, schedule: ScheduleSpec::OneFOneB }
+    }
+
     #[test]
-    fn evaluate_matches_device_memory_report() {
+    fn evaluate_scales_device_memory_report_by_schedule_inflight() {
+        // Static classes must match the facade report exactly; activations
+        // must be the per-microbatch figure times the 1F1B in-flight count
+        // at the analysed stage.
         let cs = CaseStudy::paper();
         let ev = paper_eval(&cs);
         let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        let plan = mm.stage_plan();
+        let heaviest = plan.heaviest_stage() as u64;
+        let inflight = 32u64.min(cs.parallel.pp - heaviest);
         for zero in ZeroStrategy::ALL {
             for rc in [RecomputePolicy::None, RecomputePolicy::Full] {
-                let act = ActivationConfig { recompute: rc, ..cs.activation };
-                let c = Candidate { parallel: cs.parallel, act, zero };
+                let c = paper_candidate(&cs, zero, rc);
                 let p = ev.evaluate(&c);
-                let rep = DeviceMemoryReport::build(&mm, &act, zero, Overheads::paper_midpoint());
-                assert_eq!(p.total_bytes, rep.total_bytes(), "{zero:?} {rc:?}");
-                assert_eq!(p.params_bytes, rep.params_bytes);
+                let rep =
+                    DeviceMemoryReport::build(&mm, &c.act, zero, Overheads::paper_midpoint());
+                assert_eq!(p.params_bytes, rep.params_bytes, "{zero:?} {rc:?}");
                 assert_eq!(p.gradient_bytes, rep.gradient_bytes);
                 assert_eq!(p.optimizer_bytes, rep.optimizer_bytes);
-                assert_eq!(p.activation_bytes, rep.activation_bytes);
-                assert_eq!(p.fragmentation_bytes, rep.fragmentation_bytes);
+                assert_eq!(p.activation_bytes, rep.activation_bytes * inflight);
+                assert_eq!(
+                    p.total_bytes,
+                    p.static_bytes()
+                        + p.activation_bytes
+                        + p.comm_buffer_bytes
+                        + p.fragmentation_bytes
+                );
             }
         }
+    }
+
+    #[test]
+    fn schedule_changes_only_schedule_derived_fields() {
+        // Same layout under ZB-H1 vs 1F1B: identical memory, smaller bubble.
+        // DualPipe: doubled params, p+1 in-flight tapes, smallest bubble.
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        let mk = |schedule| Candidate {
+            parallel: cs.parallel,
+            act: cs.activation,
+            zero: ZeroStrategy::OsG,
+            schedule,
+        };
+        let fb = ev.evaluate(&mk(ScheduleSpec::OneFOneB));
+        let zb = ev.evaluate(&mk(ScheduleSpec::ZbH1));
+        let dp = ev.evaluate(&mk(ScheduleSpec::DualPipe));
+        assert_eq!(zb.total_bytes, fb.total_bytes);
+        assert!(zb.bubble < fb.bubble);
+        assert_eq!(dp.params_bytes, 2 * fb.params_bytes);
+        assert_eq!(dp.device_params, 2 * fb.device_params);
+        assert!(dp.bubble < zb.bubble);
+        // 1F1B analysed stage holds p−1 = 15 tapes; DualPipe p+1 = 17.
+        assert_eq!(
+            dp.activation_bytes / (fb.activation_bytes / 15),
+            17,
+        );
     }
 
     #[test]
     fn paper_bubble_value() {
         let cs = CaseStudy::paper();
         let ev = paper_eval(&cs);
-        let c = Candidate { parallel: cs.parallel, act: cs.activation, zero: ZeroStrategy::None };
+        let c = paper_candidate(&cs, ZeroStrategy::None, RecomputePolicy::None);
         let p = ev.evaluate(&c);
         // p=16, m=32 → 15/47.
         assert!((p.bubble - 15.0 / 47.0).abs() < 1e-12);
@@ -264,8 +381,12 @@ mod tests {
         let cs = CaseStudy::paper();
         let ev = paper_eval(&cs);
         let space = super::super::space::SearchSpace::for_world(1024);
-        let cands: Vec<Candidate> =
-            space.enumerate(&cs.model).into_iter().take(300).collect();
+        let cands: Vec<Candidate> = space
+            .enumerate(&cs.model)
+            .into_iter()
+            .filter(|c| c.schedule.resolve().validate(c.parallel.pp, 32).is_ok())
+            .take(300)
+            .collect();
         let seq: Vec<PlanPoint> = cands.iter().map(|c| ev.evaluate(c)).collect();
         let par = ev.evaluate_all(&cands);
         assert_eq!(seq.len(), par.len());
@@ -273,6 +394,7 @@ mod tests {
             assert_eq!(a.total_bytes, b.total_bytes);
             assert_eq!(a.parallel, b.parallel);
             assert_eq!(a.zero, b.zero);
+            assert_eq!(a.schedule, b.schedule);
         }
     }
 
@@ -284,5 +406,37 @@ mod tests {
         let b = ev.plan_for(16);
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(a.total_params(), 671_026_522_112);
+    }
+
+    #[test]
+    fn schedule_profile_cache_is_shared_per_triple() {
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        let a = ev.schedule_profile(ScheduleSpec::DualPipe, 16);
+        let b = ev.schedule_profile(ScheduleSpec::DualPipe, 16);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.inflight_units, vec![17u64; 16]);
+        assert_eq!(a.param_multiplier, 2);
+        let other = ev.schedule_profile(ScheduleSpec::OneFOneB, 16);
+        assert!(!Arc::ptr_eq(&a, &other));
+        assert_eq!(other.inflight_units[0], 16);
+        assert_eq!(other.inflight_units[15], 1);
+    }
+
+    #[test]
+    fn sweep_fixed_is_per_microbatch() {
+        // The legacy sweep reports the paper's per-microbatch totals —
+        // bit-identical to DeviceMemoryReport, no schedule scaling.
+        let cs = CaseStudy::paper();
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        let pts = sweep_fixed(&mm, &cs.activation, Overheads::paper_midpoint());
+        assert_eq!(pts.len(), 36);
+        let rep = DeviceMemoryReport::build(
+            &mm,
+            &cs.activation,
+            ZeroStrategy::None,
+            Overheads::paper_midpoint(),
+        );
+        assert_eq!(pts[0].total_bytes, rep.total_bytes());
     }
 }

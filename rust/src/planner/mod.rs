@@ -8,10 +8,12 @@
 //! planner replaces all of them with one engine:
 //!
 //! * [`space`] — [`SearchSpace`]: the full (DP, TP, PP, EP, ETP, SP, b, AC,
-//!   ZeRO) grid with validity pruning *before* evaluation;
+//!   ZeRO, pipeline schedule) grid with validity pruning *before* evaluation;
 //! * [`eval`] — [`Evaluator`]: thread-parallel evaluation of valid points
 //!   into [`PlanPoint`] records, with [`crate::analysis::StagePlan`]s
-//!   memoized per PP degree (the sub-result shared by thousands of points);
+//!   memoized per PP degree and schedule-derived in-flight/bubble profiles
+//!   memoized per `(schedule, pp, m)` (the sub-results shared by thousands
+//!   of points);
 //! * [`pareto`] — feasibility filtering against an HBM budget, a Pareto
 //!   frontier over (peak memory, bubble fraction, per-device params) and
 //!   top-k ranking;
@@ -39,7 +41,7 @@ pub mod pareto;
 pub mod report;
 pub mod space;
 
-pub use eval::{sweep_fixed, Evaluator, PlanPoint};
+pub use eval::{sweep_fixed, Evaluator, PlanPoint, ScheduleProfile};
 pub use space::{Candidate, SearchSpace};
 
 use crate::analysis::total::Overheads;
@@ -57,7 +59,9 @@ pub struct PlanQuery {
     pub top_k: usize,
     /// §6 overheads applied to every point.
     pub overheads: Overheads,
-    /// Microbatches per step, for the 1F1B bubble objective.
+    /// Microbatches per step: sets each schedule's bubble fraction *and* its
+    /// in-flight activation counts, and gates schedule validity (DualPipe
+    /// needs `m ≥ 2·PP`).
     pub num_microbatches: u64,
     pub mode: CountMode,
 }
@@ -96,8 +100,16 @@ pub struct PlanResult {
 
 /// Run a planning query: enumerate → prune → evaluate in parallel → filter →
 /// frontier → rank.
+///
+/// Pruning happens in two passes: [`SearchSpace::enumerate`] applies every
+/// microbatch-independent rule, then the `(schedule, pp, m)` shapes a
+/// schedule cannot run (e.g. DualPipe with `m < 2·PP`) are dropped here,
+/// where the step microbatch count is known.
 pub fn plan(model: &ModelConfig, dtypes: DtypePolicy, query: &PlanQuery) -> PlanResult {
-    let candidates = query.space.enumerate(model);
+    let mut candidates = query.space.enumerate(model);
+    candidates.retain(|c| {
+        c.schedule.resolve().validate(c.parallel.pp, query.num_microbatches).is_ok()
+    });
     let evaluator = Evaluator::new(
         model,
         dtypes,
@@ -145,6 +157,44 @@ mod tests {
                 assert!(!pareto::dominates(a, b));
             }
         }
+    }
+
+    #[test]
+    fn dualpipe_and_zb_h1_reach_the_frontier_at_paper_depth() {
+        // At the case-study depth (pp=16, m=32) DualPipe has the strictly
+        // smallest bubble and ZB-H1 matches 1F1B's memory at a third of its
+        // bubble — both must survive to the frontier, and plain 1F1B must
+        // not (its ZB-H1 twin dominates it point for point).
+        let cs = CaseStudy::paper();
+        let mut space = SearchSpace::for_world(1024);
+        space.pp = vec![16];
+        let q = PlanQuery::new(space, 80 * crate::GIB as u64);
+        let res = plan(&cs.model, cs.dtypes, &q);
+        use crate::schedule::ScheduleSpec;
+        let on_frontier =
+            |s: ScheduleSpec| res.frontier.iter().any(|p| p.schedule == s);
+        assert!(on_frontier(ScheduleSpec::DualPipe), "dualpipe missing from frontier");
+        assert!(on_frontier(ScheduleSpec::ZbH1), "zb-h1 missing from frontier");
+        assert!(!on_frontier(ScheduleSpec::OneFOneB), "1f1b should be dominated by zb-h1");
+        // All five registered schedules were enumerated and evaluated.
+        let names: std::collections::HashSet<String> =
+            res.evaluated.iter().map(|p| p.schedule.name()).collect();
+        assert_eq!(names.len(), 5);
+    }
+
+    #[test]
+    fn schedule_shapes_are_filtered_by_step_microbatches() {
+        // m=8 < 2·pp rules DualPipe out at pp=8 but keeps the others.
+        let cs = CaseStudy::paper();
+        let mut space = SearchSpace::for_world(1024);
+        space.pp = vec![8];
+        let mut q = PlanQuery::new(space, 80 * crate::GIB as u64);
+        q.num_microbatches = 8;
+        let res = plan(&cs.model, cs.dtypes, &q);
+        use crate::schedule::ScheduleSpec;
+        assert!(!res.evaluated.is_empty());
+        assert!(!res.evaluated.iter().any(|p| p.schedule == ScheduleSpec::DualPipe));
+        assert!(res.evaluated.iter().any(|p| p.schedule == ScheduleSpec::ZbH1));
     }
 
     #[test]

@@ -66,6 +66,7 @@ mod tests {
     use super::*;
     use crate::analysis::zero::ZeroStrategy;
     use crate::config::{ParallelConfig, RecomputePolicy};
+    use crate::schedule::ScheduleSpec;
 
     fn point(total: u64, bubble: f64, params: u64) -> PlanPoint {
         PlanPoint {
@@ -74,6 +75,7 @@ mod tests {
             sp: 1,
             recompute: RecomputePolicy::None,
             zero: ZeroStrategy::None,
+            schedule: ScheduleSpec::OneFOneB,
             device_params: params,
             params_bytes: 0,
             gradient_bytes: 0,

@@ -25,22 +25,23 @@ fn point_row(idx: usize, p: &PlanPoint) -> Vec<String> {
         p.micro_batch.to_string(),
         p.recompute.name().into(),
         p.zero.name().into(),
+        p.schedule.name(),
         format!("{:.1}", gib(p.total_bytes)),
         format!("{:.1}", 100.0 * p.bubble),
         format!("{:.2}B", p.device_params as f64 / 1e9),
     ]
 }
 
-const POINT_HEADERS: [&str; 13] = [
-    "#", "DP", "TP", "PP", "EP", "ETP", "SP", "b", "recompute", "ZeRO", "total GiB", "bubble %",
-    "params/dev",
+const POINT_HEADERS: [&str; 14] = [
+    "#", "DP", "TP", "PP", "EP", "ETP", "SP", "b", "recompute", "ZeRO", "schedule", "total GiB",
+    "bubble %", "params/dev",
 ];
 
 /// Ranked top-k table.
 pub fn ranking_table(res: &PlanResult) -> Table {
     let mut t = Table::new(
         format!(
-            "Top-{} of {} feasible configurations vs {:.0} GiB HBM (world={}, 1F1B m={})",
+            "Top-{} of {} feasible configurations vs {:.0} GiB HBM (world={}, m={})",
             res.ranked.len(),
             res.feasible_count,
             gib(res.hbm_bytes),
@@ -82,6 +83,7 @@ fn point_json(p: &PlanPoint) -> Json {
     m.insert("micro_batch".into(), Json::Num(p.micro_batch as f64));
     m.insert("recompute".into(), Json::Str(p.recompute.name().into()));
     m.insert("zero".into(), Json::Str(p.zero.name().into()));
+    m.insert("schedule".into(), Json::Str(p.schedule.name()));
     m.insert("device_params".into(), Json::Num(p.device_params as f64));
     m.insert("params_bytes".into(), Json::Num(p.params_bytes as f64));
     m.insert("gradient_bytes".into(), Json::Num(p.gradient_bytes as f64));
@@ -109,9 +111,10 @@ pub fn to_json(res: &PlanResult) -> Json {
 }
 
 /// Bubble-vs-memory frontier table (the `dsmem bubble` subcommand): the
-/// schedule arithmetic of [`crate::analysis::bubble`], augmented with the
-/// planner's activation-memory estimate for the case study's model at that
-/// pipeline depth (`-` when the stage split or world size rules the depth out).
+/// schedule arithmetic of [`crate::analysis::bubble`] over every registered
+/// schedule, augmented with the planner's activation-memory estimate for the
+/// case study's model at that pipeline depth (`-` when the stage split or
+/// world size rules the depth out).
 pub fn bubble_table(cs: &CaseStudy, pp: u64, microbatch_counts: &[u64]) -> Table {
     let ev = Evaluator::new(
         &cs.model,
@@ -145,9 +148,9 @@ pub fn bubble_table(cs: &CaseStudy, pp: u64, microbatch_counts: &[u64]) -> Table
         &["schedule", "m", "bubble %", "inflight (mb-equiv, stage 0)", "act GiB (stage 0)"],
     );
     for pt in bubble_frontier(pp, microbatch_counts) {
-        let FrontierPoint { kind, microbatches, bubble, inflight_mb_equiv } = pt;
+        let FrontierPoint { spec, microbatches, bubble, inflight_mb_equiv } = pt;
         t.row(vec![
-            kind.name(),
+            spec.name(),
             microbatches.to_string(),
             format!("{:.1}", 100.0 * bubble),
             format!("{inflight_mb_equiv:.1}"),
@@ -208,7 +211,10 @@ mod tests {
     fn bubble_table_has_memory_column_for_paper_depth() {
         let cs = CaseStudy::paper();
         let t = bubble_table(&cs, 16, &[16, 32, 64]);
-        assert_eq!(t.rows.len(), 9);
+        // m=16 < 2·pp rules DualPipe out; m=32 and m=64 admit all five.
+        assert_eq!(t.rows.len(), 4 + 5 + 5);
+        assert!(t.rows.iter().any(|r| r[0] == "dualpipe"));
+        assert!(t.rows.iter().any(|r| r[0] == "zb-h1"));
         // pp=16 is plannable for v3 → the memory column is populated.
         assert!(t.rows.iter().all(|r| r[4] != "-"));
         // pp=32 breaks the front-loaded split for 61 layers → "-".

@@ -2,9 +2,9 @@
 //!
 //! A [`SearchSpace`] describes the axes of the configuration grid the paper
 //! sweeps informally — (DP, TP, PP, EP, ETP, SP, micro-batch, recompute,
-//! ZeRO) — with DP derived from a fixed device budget (`world / (TP·PP)`),
-//! mirroring how a capacity planner actually works: the fleet size is given,
-//! the layout is the unknown.
+//! ZeRO, pipeline schedule) — with DP derived from a fixed device budget
+//! (`world / (TP·PP)`), mirroring how a capacity planner actually works: the
+//! fleet size is given, the layout is the unknown.
 //!
 //! Enumeration prunes invalid points *before* any memory evaluation:
 //!
@@ -17,10 +17,16 @@
 //! * pipeline split validity — the stage split must leave no stage empty;
 //! * sequence-parallel legality — `SP ∈ {1, TP}` as in Megatron-LM, and
 //!   `seq_len` divisible by `SP·CP` ([`ActivationConfig::validate`]).
+//!
+//! Schedule legality additionally depends on the *step* microbatch count
+//! (e.g. DualPipe needs `m ≥ 2·PP`), which lives on the
+//! [`crate::planner::PlanQuery`] — [`crate::planner::plan`] applies that
+//! final `(schedule, pp, m)` filter after enumeration.
 
 use crate::analysis::stages::StageSplit;
 use crate::analysis::zero::ZeroStrategy;
 use crate::config::{ActivationConfig, ModelConfig, ParallelConfig, RecomputePolicy};
+use crate::schedule::ScheduleSpec;
 
 /// One fully-specified grid point awaiting evaluation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,6 +34,7 @@ pub struct Candidate {
     pub parallel: ParallelConfig,
     pub act: ActivationConfig,
     pub zero: ZeroStrategy,
+    pub schedule: ScheduleSpec,
 }
 
 /// The full configuration grid for one device budget.
@@ -44,6 +51,8 @@ pub struct SearchSpace {
     pub micro_batch: Vec<u64>,
     pub recompute: Vec<RecomputePolicy>,
     pub zero: Vec<ZeroStrategy>,
+    /// Pipeline-schedule axis (default: every registered schedule).
+    pub schedule: Vec<ScheduleSpec>,
     pub seq_len: u64,
     pub cp: u64,
     /// Pipeline split rule used to validate (and later evaluate) PP choices.
@@ -68,6 +77,7 @@ impl SearchSpace {
                 RecomputePolicy::Full,
             ],
             zero: ZeroStrategy::ALL.to_vec(),
+            schedule: crate::schedule::registry(),
             seq_len: 4096,
             cp: 1,
             split: StageSplit::FrontLoaded,
@@ -83,7 +93,8 @@ impl SearchSpace {
             * self.sequence_parallel.len()
             * self.micro_batch.len()
             * self.recompute.len()
-            * self.zero.len()) as u64
+            * self.zero.len()
+            * self.schedule.len()) as u64
     }
 
     /// Is `(parallel, act)` a valid point of this space for `model`?
@@ -126,8 +137,9 @@ impl SearchSpace {
 
     /// Enumerate every valid grid point, pruning before evaluation.
     ///
-    /// Order is deterministic: TP → PP → EP → ETP → SP → b → AC → ZeRO,
-    /// each axis in the order given.
+    /// Order is deterministic: TP → PP → EP → ETP → SP → b → AC → ZeRO →
+    /// schedule, each axis in the order given. Schedule validity against the
+    /// step microbatch count is the caller's final filter (see module docs).
     pub fn enumerate(&self, model: &ModelConfig) -> Vec<Candidate> {
         let mut out = Vec::new();
         for &tp in &self.tp {
@@ -162,7 +174,9 @@ impl SearchSpace {
                                         continue;
                                     }
                                     for &zero in &self.zero {
-                                        out.push(Candidate { parallel, act, zero });
+                                        for &schedule in &self.schedule {
+                                            out.push(Candidate { parallel, act, zero, schedule });
+                                        }
                                     }
                                 }
                             }
@@ -191,9 +205,24 @@ mod tests {
                 && c.act.sp == 2
                 && c.act.micro_batch == 1
                 && c.act.recompute == RecomputePolicy::None
-                && c.zero == ZeroStrategy::None),
+                && c.zero == ZeroStrategy::None
+                && c.schedule == ScheduleSpec::OneFOneB),
             "paper case study missing from enumeration"
         );
+    }
+
+    #[test]
+    fn default_space_enumerates_every_registered_schedule() {
+        let m = ModelConfig::deepseek_v3();
+        let space = SearchSpace::for_world(1024);
+        let cands = space.enumerate(&m);
+        for spec in crate::schedule::registry() {
+            assert!(
+                cands.iter().any(|c| c.schedule == spec),
+                "{} missing from enumeration",
+                spec.name()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,160 @@
+//! DualPipe (DeepSeek-V3 Technical Report): the bidirectional pipeline
+//! schedule DeepSeek-V3 actually trains with.
+//!
+//! Two replicas of the model run through the same `p` devices in opposite
+//! directions (Chimera-style): device `i` hosts stage `i` of the *down*
+//! pipeline and stage `p−1−i` of the *up* pipeline, and each half of the
+//! microbatches is injected from one end. Forward and backward of the two
+//! directions overlap, which (with zero-bubble backward splitting and
+//! compute/comm overlap in the real system) collapses most of the bubble.
+//!
+//! Memory consequences, per the DeepSeek-V3 report's comparison table:
+//!
+//! * **parameters ×2** — both replicas' stage shards are resident
+//!   ([`PipelineSchedule::param_multiplier`]); gradients and optimizer states
+//!   are assumed reduced/sharded across the mirrored pair (ZeRO-1 over the
+//!   implicit 2-way replication), so only weights double;
+//! * **activations ×(p+1)** — device `i` is depth `i` in the down pipeline
+//!   and depth `p−1−i` in the up pipeline, so at full overlap it holds
+//!   `(p − i) + (i + 1) = p + 1` microbatch tapes — one more than 1F1B's
+//!   worst stage, uniformly on every device.
+//!
+//! Each unit is a full per-microbatch stage tape (the two stage shards a
+//! device hosts have symmetric layer counts in the middle of the pipeline;
+//! we charge the device's own stage tape for both directions).
+
+use super::one_f_one_b::one_f_one_b_ops;
+use super::{validate_nonzero, PipelineOp, PipelineSchedule, ScheduleSpec};
+
+/// DeepSeek-V3's bidirectional schedule: two 1F1B streams in opposite
+/// directions, interleaved by alternation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DualPipe;
+
+impl PipelineSchedule for DualPipe {
+    fn spec(&self) -> ScheduleSpec {
+        ScheduleSpec::DualPipe
+    }
+
+    fn name(&self) -> String {
+        "dualpipe".into()
+    }
+
+    /// DualPipe needs an even device count (the two directions pair stages
+    /// `i` and `p−1−i`), an even microbatch count (half per direction) and
+    /// `m ≥ 2p` (each direction must at least fill its pipeline — DeepSeek-V3
+    /// uses m/p well above 2).
+    fn validate(&self, p: u64, m: u64) -> anyhow::Result<()> {
+        validate_nonzero(p, m)?;
+        if p < 2 || p % 2 != 0 {
+            anyhow::bail!("dualpipe needs an even number of stages >= 2, got p={p}");
+        }
+        if m % 2 != 0 {
+            anyhow::bail!("dualpipe needs an even microbatch count, got m={m}");
+        }
+        if m < 2 * p {
+            anyhow::bail!("dualpipe needs m >= 2p to fill both directions, got m={m} p={p}");
+        }
+        Ok(())
+    }
+
+    /// Device `stage` merges two 1F1B streams by alternation: direction 0
+    /// (microbatches `0..m/2`, `chunk = 0`) at depth `stage`, direction 1
+    /// (microbatches `m/2..m`, `chunk = 1`) at depth `p−1−stage`. Alternation
+    /// lets both streams reach their steady-state peaks simultaneously, so
+    /// the replayed peak meets the analytic `p + 1` bound exactly
+    /// (property-tested for every valid `(p, m)` shape class).
+    fn stage_ops(&self, stage: u64, p: u64, m: u64) -> Vec<PipelineOp> {
+        let half = m / 2;
+        let down = one_f_one_b_ops(stage, p, half, 0, 0);
+        let up = one_f_one_b_ops(p - 1 - stage, p, half, half, 1);
+        let mut ops = Vec::with_capacity(down.len() + up.len());
+        let mut i = 0usize;
+        let mut j = 0usize;
+        while i < down.len() || j < up.len() {
+            if i < down.len() {
+                ops.push(down[i]);
+                i += 1;
+            }
+            if j < up.len() {
+                ops.push(up[j]);
+                j += 1;
+            }
+        }
+        ops
+    }
+
+    /// `min(m/2, p−i) + min(m/2, i+1)` — with `m ≥ 2p` this is `p + 1` on
+    /// every device, the DeepSeek-V3 table's activation multiple.
+    fn analytic_inflight(&self, stage: u64, p: u64, m: u64) -> u64 {
+        let half = m / 2;
+        half.min(p - stage) + half.min(stage + 1)
+    }
+
+    /// Both replicas' stage weights are resident.
+    fn param_multiplier(&self) -> u64 {
+        2
+    }
+
+    /// DeepSeek-V3 table: bubble time `(p/2 − 1)(F&B + B − 3W)`. In the
+    /// `F = W = 1, B = 2, F&B = 3` time-unit model this is `2(p/2 − 1) =
+    /// p − 2` over `3m` units of work per device:
+    /// `(p − 2) / (3m + p − 2)` — under half of ZB-H1's, and zero at `p = 2`.
+    fn bubble_fraction(&self, p: u64, m: u64) -> f64 {
+        let (p, m) = (p as f64, m as f64);
+        (p - 2.0) / (3.0 * m + p - 2.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+
+    #[test]
+    fn holds_p_plus_one_tapes_uniformly() {
+        for (p, m) in [(2u64, 4u64), (4, 8), (8, 16), (8, 40), (16, 32), (16, 64)] {
+            let s = Schedule::build(ScheduleSpec::DualPipe, p, m).unwrap();
+            s.check_invariants().unwrap();
+            for st in 0..p {
+                assert_eq!(s.analytic_inflight(st), p + 1, "p={p} m={m} stage={st}");
+                assert_eq!(s.peak_inflight(st), p + 1, "p={p} m={m} stage={st}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_odd_or_underfilled_shapes() {
+        assert!(DualPipe.validate(3, 12).is_err()); // odd p
+        assert!(DualPipe.validate(4, 7).is_err()); // odd m
+        assert!(DualPipe.validate(8, 8).is_err()); // m < 2p
+        assert!(DualPipe.validate(8, 16).is_ok());
+    }
+
+    #[test]
+    fn every_stage_runs_both_directions() {
+        let s = Schedule::build(ScheduleSpec::DualPipe, 4, 8).unwrap();
+        for ops in &s.ops {
+            assert_eq!(ops.len(), 16); // 2m ops: m/2 F+B per direction
+            let down = ops
+                .iter()
+                .filter(|o| matches!(o, PipelineOp::Forward { chunk: 0, .. }))
+                .count();
+            let up = ops
+                .iter()
+                .filter(|o| matches!(o, PipelineOp::Forward { chunk: 1, .. }))
+                .count();
+            assert_eq!(down, 4);
+            assert_eq!(up, 4);
+        }
+    }
+
+    #[test]
+    fn params_double_and_bubble_beats_zb_h1() {
+        assert_eq!(DualPipe.param_multiplier(), 2);
+        let dp = DualPipe.bubble_fraction(16, 64);
+        let zb = crate::schedule::ZbH1.bubble_fraction(16, 64);
+        let fb = crate::schedule::OneFOneB.bubble_fraction(16, 64);
+        assert!(dp < zb && zb < fb, "dualpipe {dp} zb-h1 {zb} 1f1b {fb}");
+    }
+}

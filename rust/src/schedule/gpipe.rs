@@ -1,0 +1,66 @@
+//! GPipe (Huang et al.): all forwards, then all backwards.
+//!
+//! The simplest schedule and the memory worst case — every stage holds all
+//! `m` microbatch tapes at the forward/backward turnaround. Bubble is
+//! identical to 1F1B; 1F1B only improves memory.
+
+use super::{validate_nonzero, PipelineOp, PipelineSchedule, ScheduleSpec};
+
+/// All forwards then all backwards — peak in-flight = `m` microbatches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GPipe;
+
+impl PipelineSchedule for GPipe {
+    fn spec(&self) -> ScheduleSpec {
+        ScheduleSpec::GPipe
+    }
+
+    fn name(&self) -> String {
+        "gpipe".into()
+    }
+
+    fn validate(&self, num_stages: u64, num_microbatches: u64) -> anyhow::Result<()> {
+        validate_nonzero(num_stages, num_microbatches)
+    }
+
+    fn stage_ops(&self, _stage: u64, _num_stages: u64, m: u64) -> Vec<PipelineOp> {
+        let mut ops: Vec<PipelineOp> =
+            (0..m).map(|mb| PipelineOp::Forward { mb, chunk: 0 }).collect();
+        ops.extend((0..m).map(|mb| PipelineOp::Backward { mb, chunk: 0 }));
+        ops
+    }
+
+    fn analytic_inflight(&self, _stage: u64, _num_stages: u64, m: u64) -> u64 {
+        m
+    }
+
+    /// Classic result (Narayanan et al.): `(p − 1) / (m + p − 1)`.
+    fn bubble_fraction(&self, p: u64, m: u64) -> f64 {
+        let (p, m) = (p as f64, m as f64);
+        (p - 1.0) / (m + p - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+
+    #[test]
+    fn inflight_is_m_on_every_stage() {
+        let s = Schedule::build(ScheduleSpec::GPipe, 4, 8).unwrap();
+        s.check_invariants().unwrap();
+        for st in 0..4 {
+            assert_eq!(s.peak_inflight(st), 8);
+            assert_eq!(s.analytic_inflight(st), 8);
+        }
+    }
+
+    #[test]
+    fn every_stage_runs_2m_ops() {
+        let s = Schedule::build(ScheduleSpec::GPipe, 6, 12).unwrap();
+        for ops in &s.ops {
+            assert_eq!(ops.len(), 24);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Interleaved 1F1B (Narayanan et al., Megatron-LM): each stage runs `v`
+//! virtual model chunks, so `v·m` chunk-units flow through it.
+//!
+//! Interleaving divides the bubble by ≈`v` but deepens the warmup — chunks of
+//! later microbatches start before earlier ones drain — so per-stage *bytes*
+//! exceed plain 1F1B. Each unit here is one chunk = `1/v` of the stage's
+//! layers ([`PipelineSchedule::units_per_microbatch`]).
+
+use super::{validate_nonzero, PipelineOp, PipelineSchedule, ScheduleSpec};
+
+/// Interleaved 1F1B with `chunks` virtual chunks per stage.
+#[derive(Debug, Clone, Copy)]
+pub struct Interleaved {
+    pub chunks: u64,
+}
+
+impl PipelineSchedule for Interleaved {
+    fn spec(&self) -> ScheduleSpec {
+        ScheduleSpec::Interleaved1F1B { chunks: self.chunks }
+    }
+
+    fn name(&self) -> String {
+        format!("interleaved-1f1b(v={})", self.chunks)
+    }
+
+    fn validate(&self, num_stages: u64, num_microbatches: u64) -> anyhow::Result<()> {
+        validate_nonzero(num_stages, num_microbatches)?;
+        if self.chunks == 0 {
+            anyhow::bail!("chunks must be > 0");
+        }
+        Ok(())
+    }
+
+    fn stage_ops(&self, stage: u64, p: u64, m: u64) -> Vec<PipelineOp> {
+        let v = self.chunks;
+        let units = v * m;
+        // Megatron interleaved warmup: (p − s − 1)·2 + (v − 1)·p forward
+        // units before the first backward — deeper than plain 1F1B, which is
+        // why interleaving trades memory for bubble.
+        let warmup = ((p - stage - 1) * 2 + (v - 1) * p).min(units - 1);
+        let unit_op = |u: u64| (u / v, u % v); // (mb, chunk)
+        let mut ops = Vec::with_capacity(2 * units as usize);
+        let mut next_fwd = 0u64;
+        let mut next_bwd = 0u64;
+        for _ in 0..warmup {
+            let (mb, chunk) = unit_op(next_fwd);
+            ops.push(PipelineOp::Forward { mb, chunk });
+            next_fwd += 1;
+        }
+        while next_fwd < units {
+            let (mb, chunk) = unit_op(next_fwd);
+            ops.push(PipelineOp::Forward { mb, chunk });
+            next_fwd += 1;
+            let (mb, chunk) = unit_op(next_bwd);
+            ops.push(PipelineOp::Backward { mb, chunk });
+            next_bwd += 1;
+        }
+        while next_bwd < units {
+            let (mb, chunk) = unit_op(next_bwd);
+            ops.push(PipelineOp::Backward { mb, chunk });
+            next_bwd += 1;
+        }
+        ops
+    }
+
+    /// `min(v·m, (p−i−1)·2 + (v−1)·p + 1)` *units* (each = `1/v` of the
+    /// stage's layers).
+    fn analytic_inflight(&self, stage: u64, p: u64, m: u64) -> u64 {
+        let v = self.chunks;
+        (v * m).min((p - stage - 1) * 2 + (v - 1) * p + 1)
+    }
+
+    fn units_per_microbatch(&self) -> u64 {
+        self.chunks
+    }
+
+    /// `(p − 1) / (v·m + p − 1)` — ≈ `v`× smaller than plain 1F1B for m ≫ p.
+    fn bubble_fraction(&self, p: u64, m: u64) -> f64 {
+        let v = self.chunks as f64;
+        let (p, m) = (p as f64, m as f64);
+        (p - 1.0) / (v * m + p - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+
+    #[test]
+    fn matches_megatron_warmup_bound() {
+        let spec = ScheduleSpec::Interleaved1F1B { chunks: 2 };
+        let s = Schedule::build(spec, 4, 8).unwrap();
+        s.check_invariants().unwrap();
+        // (p−1)·2 + (v−1)·p + 1 = 6 + 4 + 1 = 11 units on stage 0.
+        assert_eq!(s.analytic_inflight(0), 11);
+        for st in 0..4 {
+            assert_eq!(s.peak_inflight(st), s.analytic_inflight(st), "stage {st}");
+        }
+        // Per-stage *bytes* exceed plain 1F1B: 11 units / v=2 = 5.5 mb-equiv > 4.
+        let plain = Schedule::build(ScheduleSpec::OneFOneB, 4, 8).unwrap();
+        assert!(s.analytic_inflight(0) > 2 * plain.analytic_inflight(0));
+    }
+
+    #[test]
+    fn replay_matches_analytic_across_chunk_counts() {
+        for v in 1..=4u64 {
+            let spec = ScheduleSpec::Interleaved1F1B { chunks: v };
+            for (p, m) in [(2u64, 3u64), (4, 8), (8, 8), (8, 24)] {
+                let s = Schedule::build(spec, p, m).unwrap();
+                s.check_invariants().unwrap();
+                for st in 0..p {
+                    assert_eq!(
+                        s.peak_inflight(st),
+                        s.analytic_inflight(st),
+                        "v={v} p={p} m={m} stage={st}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! Pipeline-parallel microbatch schedules as a first-class, trait-based
+//! subsystem.
+//!
+//! The paper's activation analysis is per-microbatch; which *multiple* of it
+//! a device actually holds is set by the pipeline schedule, and so is the
+//! pipeline bubble. Both quantities are exposed here behind one trait,
+//! [`PipelineSchedule`], so the simulator ([`crate::sim`]), the analytical
+//! bubble model ([`crate::analysis::bubble`]) and the configuration planner
+//! ([`crate::planner`]) all consume the same definitions instead of
+//! special-casing an enum per layer.
+//!
+//! Registered schedules ([`registry`]):
+//!
+//! * [`GPipe`] — all forwards then all backwards; peak in-flight = `m`;
+//! * [`OneFOneB`] — Megatron 1F1B; peak in-flight on stage `i` = `min(m, p−i)`;
+//! * [`Interleaved`] — interleaved 1F1B with `v` virtual chunks per stage;
+//! * [`DualPipe`] — DeepSeek-V3's bidirectional schedule (two model replicas,
+//!   microbatches injected from both pipeline ends);
+//! * [`ZbH1`] — the ZB-H1 zero-bubble schedule (backward split into
+//!   input-gradient and deferred weight-gradient passes).
+//!
+//! Every schedule's analytic in-flight bound is validated against an
+//! op-sequence replay by unit and property tests ([`Schedule::peak_inflight`]
+//! vs [`Schedule::analytic_inflight`]) — the bridge between the paper's
+//! Table 10 and real peak memory (extension experiment E2).
+
+pub mod dualpipe;
+pub mod gpipe;
+pub mod interleaved;
+pub mod one_f_one_b;
+pub mod zero_bubble;
+
+pub use dualpipe::DualPipe;
+pub use gpipe::GPipe;
+pub use interleaved::Interleaved;
+pub use one_f_one_b::OneFOneB;
+pub use zero_bubble::ZbH1;
+
+/// One pipeline operation on a stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineOp {
+    /// Forward of microbatch `mb` (for interleaved schedules: on `chunk`;
+    /// for bidirectional schedules `chunk` encodes the direction).
+    Forward { mb: u64, chunk: u64 },
+    /// Backward of microbatch `mb`. For zero-bubble schedules this is the
+    /// input-gradient pass only — it still releases the activation tape.
+    Backward { mb: u64, chunk: u64 },
+    /// Deferred weight-gradient pass of microbatch `mb` (zero-bubble
+    /// schedules). Touches no activation tape; transient workspace only.
+    WeightGrad { mb: u64, chunk: u64 },
+}
+
+/// Identifier of a registered schedule: cheap to copy, hash and compare, so
+/// it can key memoization caches and ride inside planner candidates. All
+/// *behavior* lives behind [`PipelineSchedule`]; [`ScheduleSpec::resolve`] is
+/// the single constructor mapping ids to implementations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ScheduleSpec {
+    GPipe,
+    OneFOneB,
+    Interleaved1F1B { chunks: u64 },
+    DualPipe,
+    ZbH1,
+}
+
+impl ScheduleSpec {
+    /// Resolve the id to its schedule implementation.
+    pub fn resolve(self) -> Box<dyn PipelineSchedule> {
+        match self {
+            ScheduleSpec::GPipe => Box::new(GPipe),
+            ScheduleSpec::OneFOneB => Box::new(OneFOneB),
+            ScheduleSpec::Interleaved1F1B { chunks } => Box::new(Interleaved { chunks }),
+            ScheduleSpec::DualPipe => Box::new(DualPipe),
+            ScheduleSpec::ZbH1 => Box::new(ZbH1),
+        }
+    }
+
+    /// Canonical display name (delegates to the implementation).
+    pub fn name(self) -> String {
+        self.resolve().name()
+    }
+
+    /// Parse a CLI spelling: `gpipe`, `1f1b`, `interleaved`,
+    /// `interleaved:<v>`, `dualpipe`, `zb-h1`.
+    pub fn parse(s: &str) -> anyhow::Result<ScheduleSpec> {
+        Ok(match s {
+            "gpipe" => ScheduleSpec::GPipe,
+            "1f1b" => ScheduleSpec::OneFOneB,
+            "interleaved" => ScheduleSpec::Interleaved1F1B { chunks: 2 },
+            "dualpipe" => ScheduleSpec::DualPipe,
+            "zb-h1" | "zbh1" => ScheduleSpec::ZbH1,
+            other => match other.strip_prefix("interleaved:") {
+                Some(v) => ScheduleSpec::Interleaved1F1B { chunks: v.parse()? },
+                None => anyhow::bail!(
+                    "unknown schedule: {other} (expected gpipe|1f1b|interleaved[:v]|dualpipe|zb-h1)"
+                ),
+            },
+        })
+    }
+}
+
+/// Every registered schedule, with default parameters — the searchable
+/// schedule axis of the planner and the sweep set of `analysis::bubble`.
+pub fn registry() -> Vec<ScheduleSpec> {
+    vec![
+        ScheduleSpec::GPipe,
+        ScheduleSpec::OneFOneB,
+        ScheduleSpec::Interleaved1F1B { chunks: 2 },
+        ScheduleSpec::DualPipe,
+        ScheduleSpec::ZbH1,
+    ]
+}
+
+/// A pipeline schedule: op-sequence generation plus the closed-form memory
+/// and bubble characteristics every consumer layer needs.
+///
+/// The unit of accounting is one *activation unit*: `1 / units_per_microbatch`
+/// of a stage's per-microbatch activation tape. Plain schedules have one unit
+/// per microbatch; interleaved-1F1B has `v` (one per virtual chunk).
+pub trait PipelineSchedule: Send + Sync {
+    /// The id this implementation answers to.
+    fn spec(&self) -> ScheduleSpec;
+
+    /// Canonical display name, e.g. `"dualpipe"` or `"interleaved-1f1b(v=2)"`.
+    fn name(&self) -> String;
+
+    /// Reject `(p, m)` shapes the schedule cannot run (e.g. DualPipe needs an
+    /// even `p` and `m ≥ 2p`).
+    fn validate(&self, num_stages: u64, num_microbatches: u64) -> anyhow::Result<()>;
+
+    /// Ordered operations executed by `stage` (0-indexed of `num_stages`).
+    fn stage_ops(&self, stage: u64, num_stages: u64, num_microbatches: u64) -> Vec<PipelineOp>;
+
+    /// Analytic peak of simultaneously-live forward activation units on
+    /// `stage` — must equal the replayed peak of [`PipelineSchedule::stage_ops`]
+    /// for every valid `(p, m)` (property-tested).
+    fn analytic_inflight(&self, stage: u64, num_stages: u64, num_microbatches: u64) -> u64;
+
+    /// How many activation units one microbatch's stage tape divides into.
+    fn units_per_microbatch(&self) -> u64 {
+        1
+    }
+
+    /// Resident copies of the stage parameters this schedule requires
+    /// (bidirectional schedules hold two model replicas per device).
+    fn param_multiplier(&self) -> u64 {
+        1
+    }
+
+    /// Pipeline bubble: idle device-time ÷ total device-time, in `[0, 1)`,
+    /// non-increasing in `m`.
+    fn bubble_fraction(&self, num_stages: u64, num_microbatches: u64) -> f64;
+}
+
+/// Shared base validation: both pipeline dimensions must be non-zero.
+pub(crate) fn validate_nonzero(num_stages: u64, num_microbatches: u64) -> anyhow::Result<()> {
+    if num_stages == 0 || num_microbatches == 0 {
+        anyhow::bail!("stages and microbatches must be > 0");
+    }
+    Ok(())
+}
+
+/// A resolved schedule: the per-stage operation sequences of one
+/// `(spec, p, m)` instantiation, ready for replay.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub spec: ScheduleSpec,
+    pub num_stages: u64,
+    pub num_microbatches: u64,
+    /// `ops[stage]` = ordered operations executed by that stage.
+    pub ops: Vec<Vec<PipelineOp>>,
+}
+
+impl Schedule {
+    /// Build the operation sequence for every stage (validates `(p, m)`).
+    pub fn build(spec: ScheduleSpec, num_stages: u64, num_microbatches: u64) -> anyhow::Result<Self> {
+        let sched = spec.resolve();
+        sched.validate(num_stages, num_microbatches)?;
+        let ops = (0..num_stages)
+            .map(|s| sched.stage_ops(s, num_stages, num_microbatches))
+            .collect();
+        Ok(Self { spec, num_stages, num_microbatches, ops })
+    }
+
+    /// Peak number of simultaneously-live forward activation units on `stage`,
+    /// derived by replaying the op sequence (weight-gradient ops hold no
+    /// activations).
+    pub fn peak_inflight(&self, stage: u64) -> u64 {
+        let mut live: i64 = 0;
+        let mut peak: i64 = 0;
+        for op in &self.ops[stage as usize] {
+            match op {
+                PipelineOp::Forward { .. } => {
+                    live += 1;
+                    peak = peak.max(live);
+                }
+                PipelineOp::Backward { .. } => live -= 1,
+                PipelineOp::WeightGrad { .. } => {}
+            }
+        }
+        peak as u64
+    }
+
+    /// The analytic in-flight bound for comparison with
+    /// [`Schedule::peak_inflight`] (delegates to the schedule impl).
+    pub fn analytic_inflight(&self, stage: u64) -> u64 {
+        self.spec.resolve().analytic_inflight(stage, self.num_stages, self.num_microbatches)
+    }
+
+    /// Validate op-sequence invariants on every stage: each `(mb, chunk)` runs
+    /// forward exactly once, backward exactly once after its forward, and
+    /// weight-gradient (if the schedule emits any) exactly once after its
+    /// backward — with all-or-none weight-gradient coverage.
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        for (s, ops) in self.ops.iter().enumerate() {
+            let mut fwd_seen = std::collections::HashSet::new();
+            let mut bwd_seen = std::collections::HashSet::new();
+            let mut wgt_seen = std::collections::HashSet::new();
+            for op in ops {
+                match *op {
+                    PipelineOp::Forward { mb, chunk } => {
+                        if !fwd_seen.insert((mb, chunk)) {
+                            anyhow::bail!("stage {s}: duplicate forward mb={mb}");
+                        }
+                    }
+                    PipelineOp::Backward { mb, chunk } => {
+                        if !fwd_seen.contains(&(mb, chunk)) {
+                            anyhow::bail!("stage {s}: backward mb={mb} before forward");
+                        }
+                        if !bwd_seen.insert((mb, chunk)) {
+                            anyhow::bail!("stage {s}: duplicate backward mb={mb}");
+                        }
+                    }
+                    PipelineOp::WeightGrad { mb, chunk } => {
+                        if !bwd_seen.contains(&(mb, chunk)) {
+                            anyhow::bail!("stage {s}: weight-grad mb={mb} before backward");
+                        }
+                        if !wgt_seen.insert((mb, chunk)) {
+                            anyhow::bail!("stage {s}: duplicate weight-grad mb={mb}");
+                        }
+                    }
+                }
+            }
+            if fwd_seen.len() != bwd_seen.len() {
+                anyhow::bail!(
+                    "stage {s}: {} forwards vs {} backwards",
+                    fwd_seen.len(),
+                    bwd_seen.len()
+                );
+            }
+            if !wgt_seen.is_empty() && wgt_seen.len() != bwd_seen.len() {
+                anyhow::bail!(
+                    "stage {s}: partial weight-grad coverage ({} of {})",
+                    wgt_seen.len(),
+                    bwd_seen.len()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_five_distinct_schedules() {
+        let specs = registry();
+        assert_eq!(specs.len(), 5);
+        let names: std::collections::HashSet<String> =
+            specs.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), 5);
+    }
+
+    #[test]
+    fn parse_roundtrips_cli_spellings() {
+        assert_eq!(ScheduleSpec::parse("gpipe").unwrap(), ScheduleSpec::GPipe);
+        assert_eq!(ScheduleSpec::parse("1f1b").unwrap(), ScheduleSpec::OneFOneB);
+        assert_eq!(
+            ScheduleSpec::parse("interleaved").unwrap(),
+            ScheduleSpec::Interleaved1F1B { chunks: 2 }
+        );
+        assert_eq!(
+            ScheduleSpec::parse("interleaved:4").unwrap(),
+            ScheduleSpec::Interleaved1F1B { chunks: 4 }
+        );
+        assert_eq!(ScheduleSpec::parse("dualpipe").unwrap(), ScheduleSpec::DualPipe);
+        assert_eq!(ScheduleSpec::parse("zb-h1").unwrap(), ScheduleSpec::ZbH1);
+        assert!(ScheduleSpec::parse("chimera").is_err());
+    }
+
+    #[test]
+    fn every_registered_schedule_replay_matches_analytic() {
+        // The E2 cornerstone, exhaustively on a small grid; the proptest
+        // suite widens the (p, m) coverage with random shapes.
+        for spec in registry() {
+            let sched = spec.resolve();
+            for p in 1..=8u64 {
+                for m in 1..=24u64 {
+                    if sched.validate(p, m).is_err() {
+                        continue;
+                    }
+                    let s = Schedule::build(spec, p, m).unwrap();
+                    s.check_invariants().unwrap();
+                    for stage in 0..p {
+                        assert_eq!(
+                            s.peak_inflight(stage),
+                            s.analytic_inflight(stage),
+                            "{} p={p} m={m} stage={stage}",
+                            spec.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_config_rejected_for_every_schedule() {
+        for spec in registry() {
+            assert!(Schedule::build(spec, 0, 4).is_err(), "{}", spec.name());
+            assert!(Schedule::build(spec, 4, 0).is_err(), "{}", spec.name());
+        }
+        assert!(Schedule::build(ScheduleSpec::Interleaved1F1B { chunks: 0 }, 4, 4).is_err());
+    }
+
+    #[test]
+    fn bubble_fractions_bounded_and_monotone() {
+        for spec in registry() {
+            let sched = spec.resolve();
+            let p = 8;
+            let mut last = 1.0f64;
+            for m in [16u64, 32, 64, 128] {
+                if sched.validate(p, m).is_err() {
+                    continue;
+                }
+                let b = sched.bubble_fraction(p, m);
+                assert!((0.0..1.0).contains(&b), "{} m={m}: {b}", spec.name());
+                assert!(b <= last, "{} bubble not monotone", spec.name());
+                last = b;
+            }
+        }
+    }
+}

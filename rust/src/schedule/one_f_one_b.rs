@@ -1,0 +1,108 @@
+//! 1F1B (Narayanan et al., the schedule Megatron-LM defaults to): warmup
+//! forwards, steady one-forward-one-backward, cooldown backwards.
+//!
+//! Peak in-flight on stage `i` of `p` is `min(m, p − i)` — the first stage
+//! holds `p` tapes, the last holds one. Bubble matches GPipe; only memory
+//! improves.
+
+use super::{validate_nonzero, PipelineOp, PipelineSchedule, ScheduleSpec};
+
+/// Megatron 1F1B — peak in-flight on stage `i` = `min(m, p - i)`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OneFOneB;
+
+/// The 1F1B op sequence for one pipeline position: `depth` hops from the
+/// microbatch source, `m` microbatches labelled from `mb_base` on `chunk`.
+///
+/// Shared with [`super::DualPipe`], which runs one 1F1B stream per direction
+/// (`depth` ≠ stage for its reverse stream), and mirrored by
+/// [`super::ZbH1`]'s forward/backward skeleton.
+pub(crate) fn one_f_one_b_ops(
+    depth: u64,
+    p: u64,
+    m: u64,
+    mb_base: u64,
+    chunk: u64,
+) -> Vec<PipelineOp> {
+    let warmup = (p - depth - 1).min(m);
+    let mut ops = Vec::with_capacity(2 * m as usize);
+    let mut next_fwd = 0u64;
+    let mut next_bwd = 0u64;
+    for _ in 0..warmup {
+        ops.push(PipelineOp::Forward { mb: mb_base + next_fwd, chunk });
+        next_fwd += 1;
+    }
+    // Steady state: 1F1B until forwards run out.
+    while next_fwd < m {
+        ops.push(PipelineOp::Forward { mb: mb_base + next_fwd, chunk });
+        next_fwd += 1;
+        ops.push(PipelineOp::Backward { mb: mb_base + next_bwd, chunk });
+        next_bwd += 1;
+    }
+    // Cooldown: drain remaining backwards.
+    while next_bwd < m {
+        ops.push(PipelineOp::Backward { mb: mb_base + next_bwd, chunk });
+        next_bwd += 1;
+    }
+    ops
+}
+
+impl PipelineSchedule for OneFOneB {
+    fn spec(&self) -> ScheduleSpec {
+        ScheduleSpec::OneFOneB
+    }
+
+    fn name(&self) -> String {
+        "1f1b".into()
+    }
+
+    fn validate(&self, num_stages: u64, num_microbatches: u64) -> anyhow::Result<()> {
+        validate_nonzero(num_stages, num_microbatches)
+    }
+
+    fn stage_ops(&self, stage: u64, p: u64, m: u64) -> Vec<PipelineOp> {
+        one_f_one_b_ops(stage, p, m, 0, 0)
+    }
+
+    fn analytic_inflight(&self, stage: u64, p: u64, m: u64) -> u64 {
+        m.min(p - stage)
+    }
+
+    /// Identical to GPipe: `(p − 1) / (m + p − 1)`.
+    fn bubble_fraction(&self, p: u64, m: u64) -> f64 {
+        let (p, m) = (p as f64, m as f64);
+        (p - 1.0) / (m + p - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+
+    #[test]
+    fn inflight_matches_analytic() {
+        for (p, m) in [(4u64, 8u64), (16, 16), (16, 32), (2, 4), (8, 8)] {
+            let s = Schedule::build(ScheduleSpec::OneFOneB, p, m).unwrap();
+            s.check_invariants().unwrap();
+            for st in 0..p {
+                assert_eq!(s.peak_inflight(st), s.analytic_inflight(st), "p={p} m={m} stage={st}");
+            }
+        }
+    }
+
+    #[test]
+    fn first_stage_holds_p_last_holds_1() {
+        let s = Schedule::build(ScheduleSpec::OneFOneB, 16, 32).unwrap();
+        assert_eq!(s.peak_inflight(0), 16);
+        assert_eq!(s.peak_inflight(15), 1);
+    }
+
+    #[test]
+    fn every_stage_runs_2m_ops() {
+        let s = Schedule::build(ScheduleSpec::OneFOneB, 6, 12).unwrap();
+        for ops in &s.ops {
+            assert_eq!(ops.len(), 24);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! ZB-H1 (Qi et al., "Zero Bubble Pipeline Parallelism"): the backward pass
+//! is split into an input-gradient pass `B` (needs and releases the
+//! activation tape) and a weight-gradient pass `W` (needs only the layer
+//! inputs already folded into `B`'s workspace here), and the `W`s are
+//! deferred into the cooldown bubbles.
+//!
+//! ZB-H1 is the memory-neutral family member: its forward/backward positions
+//! — and therefore its activation in-flight profile — are exactly 1F1B's
+//! (`min(m, p − i)`), while the deferred `W`s shrink the bubble to roughly a
+//! third. (ZB-H2 trades more memory for zero bubble; not modelled.)
+
+use super::one_f_one_b::one_f_one_b_ops;
+use super::{validate_nonzero, PipelineOp, PipelineSchedule, ScheduleSpec};
+
+/// ZB-H1 zero-bubble schedule: 1F1B's memory, ~1/3 of its bubble.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ZbH1;
+
+impl PipelineSchedule for ZbH1 {
+    fn spec(&self) -> ScheduleSpec {
+        ScheduleSpec::ZbH1
+    }
+
+    fn name(&self) -> String {
+        "zb-h1".into()
+    }
+
+    fn validate(&self, num_stages: u64, num_microbatches: u64) -> anyhow::Result<()> {
+        validate_nonzero(num_stages, num_microbatches)
+    }
+
+    /// 1F1B's F/B skeleton with the weight-gradient passes deferred: none in
+    /// the steady state, interleaved `B, W` through the cooldown, remaining
+    /// `W`s flushed at the end (where 1F1B would sit idle).
+    fn stage_ops(&self, stage: u64, p: u64, m: u64) -> Vec<PipelineOp> {
+        let skeleton = one_f_one_b_ops(stage, p, m, 0, 0);
+        let mut ops = Vec::with_capacity(3 * m as usize);
+        let mut backwards_done = 0u64;
+        let mut next_wgt = 0u64;
+        let warmup = (p - stage - 1).min(m);
+        for op in skeleton {
+            ops.push(op);
+            if let PipelineOp::Backward { .. } = op {
+                backwards_done += 1;
+                // Cooldown begins once all m forwards have issued: steady
+                // state emitted `m − warmup` backwards by then.
+                if backwards_done > m - warmup {
+                    ops.push(PipelineOp::WeightGrad { mb: next_wgt, chunk: 0 });
+                    next_wgt += 1;
+                }
+            }
+        }
+        while next_wgt < m {
+            ops.push(PipelineOp::WeightGrad { mb: next_wgt, chunk: 0 });
+            next_wgt += 1;
+        }
+        ops
+    }
+
+    /// Same as 1F1B — the schedule's defining property.
+    fn analytic_inflight(&self, stage: u64, p: u64, m: u64) -> u64 {
+        m.min(p - stage)
+    }
+
+    /// With `F = 1`, `B` (input grad) `= 1`, `W = 1` time units (a full
+    /// backward `= B + W = 2F`), the per-stage bubble shrinks from 1F1B's
+    /// `(p−1)(F+B+W)` to `(p−1)(F+B−W) = (p−1)·F`, over `3m` units of work:
+    /// `(p − 1) / (3m + p − 1)` — one third of 1F1B's fraction for m ≫ p.
+    fn bubble_fraction(&self, p: u64, m: u64) -> f64 {
+        let (p, m) = (p as f64, m as f64);
+        (p - 1.0) / (3.0 * m + p - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+
+    #[test]
+    fn memory_profile_is_exactly_1f1b() {
+        for (p, m) in [(4u64, 8u64), (16, 32), (8, 8), (2, 4)] {
+            let zb = Schedule::build(ScheduleSpec::ZbH1, p, m).unwrap();
+            zb.check_invariants().unwrap();
+            let fb = Schedule::build(ScheduleSpec::OneFOneB, p, m).unwrap();
+            for st in 0..p {
+                assert_eq!(zb.peak_inflight(st), fb.peak_inflight(st), "p={p} m={m} stage={st}");
+                assert_eq!(zb.peak_inflight(st), zb.analytic_inflight(st));
+            }
+        }
+    }
+
+    #[test]
+    fn emits_one_weight_grad_per_microbatch() {
+        let s = Schedule::build(ScheduleSpec::ZbH1, 4, 8).unwrap();
+        for ops in &s.ops {
+            let w = ops
+                .iter()
+                .filter(|o| matches!(o, PipelineOp::WeightGrad { .. }))
+                .count();
+            assert_eq!(w, 8);
+            assert_eq!(ops.len(), 24); // 3m
+        }
+    }
+
+    #[test]
+    fn bubble_is_a_third_of_1f1b_asymptotically() {
+        let zb = ZbH1.bubble_fraction(8, 512);
+        let fb = crate::schedule::OneFOneB.bubble_fraction(8, 512);
+        assert!(zb < fb / 2.9 && zb > fb / 3.1, "zb {zb} vs 1f1b {fb}");
+    }
+}

@@ -4,24 +4,38 @@
 //! extension experiment E2 (schedule-dependent activation peaks).
 //!
 //! The engine allocates the *same logical tensors* the paper counts:
-//! static params / grads / optimizer at setup (ZeRO-aware), one activation
-//! tape instance per in-flight microbatch, transient collective buffers
-//! around each op, and (optionally) pushes the whole trace through the
-//! caching-allocator simulator to estimate fragmentation.
+//! static params / grads / optimizer at setup (ZeRO-aware, with the
+//! schedule's parameter multiplier — DualPipe holds two replicas), one
+//! activation-unit tape instance per in-flight unit, transient collective
+//! buffers around each op, and (optionally) pushes the whole trace through
+//! the caching-allocator simulator to estimate fragmentation.
+//!
+//! The schedule is consumed through the [`crate::schedule::PipelineSchedule`]
+//! trait: op replay, per-unit tape sizing (`units_per_microbatch`) and the
+//! parameter multiplier all come from the schedule implementation — the
+//! engine has no per-schedule special cases.
 
 use super::allocator::{AllocStats, CachingAllocator};
 use super::collective::CollectivePlan;
-use super::schedule::{PipelineOp, Schedule, ScheduleKind};
 use super::tracker::{MemClass, MemoryTimeline};
 use crate::analysis::{DeviceStaticParams, MemoryModel, ZeroStrategy};
 use crate::config::ActivationConfig;
+use crate::schedule::{PipelineOp, Schedule, ScheduleSpec};
+
+/// Cap on transient communication buffers per stage, in bytes. §6 of the
+/// paper bounds temporal comm buffers to 0.8–2 GB per device: collectives
+/// are bucketed, so buffer footprint saturates at the bucket working set
+/// rather than scaling with message size. We clamp every transient comm
+/// allocation to the top of that band.
+pub const COMM_BUFFER_CAP_BYTES: u64 = 2 * (1u64 << 30);
 
 /// Per-stage simulation output.
 #[derive(Debug, Clone)]
 pub struct StageSimResult {
     pub stage: u64,
     pub timeline: MemoryTimeline,
-    /// Peak in-flight activation sets observed.
+    /// Peak in-flight activation units observed (units = microbatch tapes,
+    /// or chunk tapes for interleaved schedules).
     pub peak_inflight: u64,
     /// Caching-allocator stats if fragmentation simulation was enabled.
     pub alloc_stats: Option<AllocStats>,
@@ -30,7 +44,7 @@ pub struct StageSimResult {
 /// Whole-pipeline simulation output.
 #[derive(Debug, Clone)]
 pub struct SimResult {
-    pub schedule: String,
+    pub spec: ScheduleSpec,
     pub num_microbatches: u64,
     pub stages: Vec<StageSimResult>,
 }
@@ -67,11 +81,14 @@ impl<'a> SimEngine<'a> {
         }
     }
 
-    /// Replay `schedule` with `m` microbatches across all PP stages.
-    pub fn run(&self, kind: ScheduleKind, num_microbatches: u64) -> anyhow::Result<SimResult> {
+    /// Replay `spec` with `m` microbatches across all PP stages.
+    pub fn run(&self, spec: ScheduleSpec, num_microbatches: u64) -> anyhow::Result<SimResult> {
         let plan = self.mm.stage_plan();
-        let schedule = Schedule::build(kind, self.mm.parallel.pp, num_microbatches)?;
+        let schedule = Schedule::build(spec, self.mm.parallel.pp, num_microbatches)?;
         schedule.check_invariants()?;
+        let sched = spec.resolve();
+        let unit_div = sched.units_per_microbatch().max(1);
+        let param_mult = sched.param_multiplier();
         let zr = self.mm.zero_report();
         let zrow = *zr.row(self.zero);
 
@@ -100,14 +117,11 @@ impl<'a> SimEngine<'a> {
             );
             // Dense stages have no MoE tape for their dense layers; we use the
             // stage's MoE layer count for the MoE part and MLA for all layers.
-            // Under interleaving each Forward op is one *chunk* = 1/v of the
-            // stage's layers.
-            let chunk_div = match kind {
-                ScheduleKind::Interleaved1F1B { chunks } => chunks,
-                _ => 1,
-            };
-            let act_bytes_per_mb =
-                self.per_microbatch_bytes(&ar, sinfo.moe_layers, sinfo.num_layers) / chunk_div;
+            // Each Forward op is one *unit* = 1/units_per_microbatch of the
+            // stage tape (chunks for interleaved, a direction's pass for
+            // bidirectional schedules).
+            let act_bytes_per_unit =
+                self.per_microbatch_bytes(&ar, sinfo.moe_layers, sinfo.num_layers) / unit_div;
 
             let cplan = CollectivePlan::build(
                 &self.mm.model,
@@ -121,15 +135,19 @@ impl<'a> SimEngine<'a> {
             let mut tl = MemoryTimeline::new();
             tl.record_events = self.record_events;
             let mut alloc = self.simulate_allocator.then(CachingAllocator::default);
-            let mut live_allocs: std::collections::HashMap<u64, Vec<u64>> = Default::default();
+            let mut live_allocs: std::collections::HashMap<(u64, u64), Vec<u64>> =
+                Default::default();
 
             let mut t = 0u64;
-            // t0: static state.
-            tl.alloc(t, MemClass::Params, scale(zrow.params_bytes));
+            // t0: static state. Weights carry the schedule's replica
+            // multiplier (DualPipe keeps both directions' stage shards
+            // resident); gradients and optimizer states are assumed
+            // reduced/sharded across the mirrored pair.
+            tl.alloc(t, MemClass::Params, param_mult * scale(zrow.params_bytes));
             tl.alloc(t, MemClass::Gradients, scale(zrow.gradient_bytes));
             tl.alloc(t, MemClass::Optimizer, scale(zrow.optimizer_bytes));
             if let Some(a) = alloc.as_mut() {
-                a.alloc(scale(zrow.params_bytes));
+                a.alloc(param_mult * scale(zrow.params_bytes));
                 a.alloc(scale(zrow.gradient_bytes));
                 a.alloc(scale(zrow.optimizer_bytes));
             }
@@ -139,31 +157,38 @@ impl<'a> SimEngine<'a> {
             for op in &schedule.ops[s as usize] {
                 t += 1;
                 match *op {
-                    PipelineOp::Forward { mb, .. } => {
+                    PipelineOp::Forward { mb, chunk } => {
                         // Transient PP recv + SP gather buffers around the op.
-                        let buf = cplan.peak_buffer_bytes().min(2 * crate::GIB as u64);
+                        let buf = cplan.peak_buffer_bytes().min(COMM_BUFFER_CAP_BYTES);
                         tl.alloc(t, MemClass::CommBuffers, buf);
-                        // The activation tape of this microbatch, itemized so
-                        // the allocator sees realistic block sizes.
+                        // The activation tape of this unit, itemized so the
+                        // allocator sees realistic block sizes. A unit covers
+                        // 1/unit_div of the stage's layers, so the allocator
+                        // replay charges the same share the timeline does.
                         if let Some(a) = alloc.as_mut() {
-                            let ids = self.tape_allocs(a, &ar, sinfo.moe_layers, sinfo.num_layers);
-                            live_allocs.insert(mb, ids);
+                            let ids = self.tape_allocs(
+                                a,
+                                &ar,
+                                sinfo.moe_layers / unit_div,
+                                sinfo.num_layers / unit_div,
+                            );
+                            live_allocs.insert((mb, chunk), ids);
                         }
-                        tl.alloc(t, MemClass::Activations, act_bytes_per_mb);
+                        tl.alloc(t, MemClass::Activations, act_bytes_per_unit);
                         tl.free(t, MemClass::CommBuffers, buf);
                         inflight += 1;
                         peak_inflight = peak_inflight.max(inflight);
                     }
-                    PipelineOp::Backward { mb, .. } => {
+                    PipelineOp::Backward { mb, chunk } => {
                         // Backward transient: dgrad workspace ≈ one layer's
                         // activation + comm buffers.
-                        let buf = cplan.peak_buffer_bytes().min(2 * crate::GIB as u64);
-                        let wsp = act_bytes_per_mb / sinfo.num_layers.max(1);
+                        let buf = cplan.peak_buffer_bytes().min(COMM_BUFFER_CAP_BYTES);
+                        let wsp = act_bytes_per_unit / sinfo.num_layers.max(1);
                         tl.alloc(t, MemClass::CommBuffers, buf);
                         tl.alloc(t, MemClass::Other, wsp);
-                        tl.free(t, MemClass::Activations, act_bytes_per_mb);
+                        tl.free(t, MemClass::Activations, act_bytes_per_unit);
                         if let Some(a) = alloc.as_mut() {
-                            for id in live_allocs.remove(&mb).unwrap_or_default() {
+                            for id in live_allocs.remove(&(mb, chunk)).unwrap_or_default() {
                                 a.free(id);
                             }
                         }
@@ -171,12 +196,21 @@ impl<'a> SimEngine<'a> {
                         tl.free(t, MemClass::CommBuffers, buf);
                         inflight -= 1;
                     }
+                    PipelineOp::WeightGrad { .. } => {
+                        // Zero-bubble weight-gradient pass: the activation
+                        // tape is already released by the input-gradient
+                        // pass; only a one-layer workspace is transiently
+                        // alive.
+                        let wsp = act_bytes_per_unit / sinfo.num_layers.max(1);
+                        tl.alloc(t, MemClass::Other, wsp);
+                        tl.free(t, MemClass::Other, wsp);
+                    }
                 }
             }
             // Optimizer step at the end of the step window: grads all-reduced
             // (bucket buffers), then Adam update in place.
             t += 1;
-            let buf = (2 * self.bucket_bytes).min(2 * crate::GIB as u64);
+            let buf = (2 * self.bucket_bytes).min(COMM_BUFFER_CAP_BYTES);
             tl.alloc(t, MemClass::CommBuffers, buf);
             tl.free(t + 1, MemClass::CommBuffers, buf);
 
@@ -188,11 +222,7 @@ impl<'a> SimEngine<'a> {
             });
         }
 
-        Ok(SimResult {
-            schedule: kind.name(),
-            num_microbatches,
-            stages,
-        })
+        Ok(SimResult { spec, num_microbatches, stages })
     }
 
     /// Activation bytes of one microbatch on a stage with the given layer mix.
@@ -251,8 +281,8 @@ mod tests {
         let mm = mm();
         let act = ActivationConfig::paper(1);
         let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
-        let res = eng.run(ScheduleKind::OneFOneB, 16).unwrap();
-        let sched = Schedule::build(ScheduleKind::OneFOneB, 16, 16).unwrap();
+        let res = eng.run(ScheduleSpec::OneFOneB, 16).unwrap();
+        let sched = Schedule::build(ScheduleSpec::OneFOneB, 16, 16).unwrap();
         for st in &res.stages {
             assert_eq!(st.peak_inflight, sched.analytic_inflight(st.stage), "stage {}", st.stage);
         }
@@ -263,8 +293,8 @@ mod tests {
         let mm = mm();
         let act = ActivationConfig::paper(1);
         let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
-        let g = eng.run(ScheduleKind::GPipe, 16).unwrap();
-        let o = eng.run(ScheduleKind::OneFOneB, 16).unwrap();
+        let g = eng.run(ScheduleSpec::GPipe, 16).unwrap();
+        let o = eng.run(ScheduleSpec::OneFOneB, 16).unwrap();
         // Stage 1 (heaviest): GPipe holds 16 sets, 1F1B holds 15.
         let gp = g.stages[1].timeline.peak(MemClass::Activations);
         let ob = o.stages[1].timeline.peak(MemClass::Activations);
@@ -278,7 +308,7 @@ mod tests {
         let mm = mm();
         let act = ActivationConfig::paper(1);
         let eng = SimEngine::new(&mm, act, ZeroStrategy::None);
-        let res = eng.run(ScheduleKind::OneFOneB, 16).unwrap();
+        let res = eng.run(ScheduleSpec::OneFOneB, 16).unwrap();
         let plan = mm.stage_plan();
         let st = &res.stages[1];
         let ar = crate::analysis::ActivationReport::build(
@@ -292,13 +322,45 @@ mod tests {
     }
 
     #[test]
+    fn dualpipe_doubles_params_and_holds_p_plus_one() {
+        let mm = mm();
+        let act = ActivationConfig::paper(1);
+        let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+        let res = eng.run(ScheduleSpec::DualPipe, 32).unwrap();
+        let zr = mm.zero_report();
+        let row = zr.row(ZeroStrategy::OsG);
+        // Stage 1 is the analysed archetype: params double, grads/opt do not.
+        let st = &res.stages[1];
+        assert_eq!(st.timeline.peak(MemClass::Params), 2 * row.params_bytes);
+        assert_eq!(st.timeline.peak(MemClass::Gradients), row.gradient_bytes);
+        assert_eq!(st.peak_inflight, 17); // p + 1
+    }
+
+    #[test]
+    fn zb_h1_matches_1f1b_memory() {
+        let mm = mm();
+        let act = ActivationConfig::paper(1);
+        let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+        let zb = eng.run(ScheduleSpec::ZbH1, 16).unwrap();
+        let fb = eng.run(ScheduleSpec::OneFOneB, 16).unwrap();
+        for (a, b) in zb.stages.iter().zip(&fb.stages) {
+            assert_eq!(
+                a.timeline.peak(MemClass::Activations),
+                b.timeline.peak(MemClass::Activations),
+                "stage {}",
+                a.stage
+            );
+        }
+    }
+
+    #[test]
     fn full_recompute_shrinks_sim_peak() {
         let mm = mm();
         let eng_none = SimEngine::new(&mm, ActivationConfig::paper(1), ZeroStrategy::OsG);
         let eng_full =
             SimEngine::new(&mm, ActivationConfig::paper_full_recompute(1), ZeroStrategy::OsG);
-        let a = eng_none.run(ScheduleKind::OneFOneB, 16).unwrap();
-        let b = eng_full.run(ScheduleKind::OneFOneB, 16).unwrap();
+        let a = eng_none.run(ScheduleSpec::OneFOneB, 16).unwrap();
+        let b = eng_full.run(ScheduleSpec::OneFOneB, 16).unwrap();
         assert!(
             a.peak_stage().timeline.total_peak() > b.peak_stage().timeline.total_peak()
         );
@@ -309,7 +371,7 @@ mod tests {
         let mm = mm();
         let mut eng = SimEngine::new(&mm, ActivationConfig::paper(1), ZeroStrategy::OsG);
         eng.simulate_allocator = true;
-        let res = eng.run(ScheduleKind::OneFOneB, 8).unwrap();
+        let res = eng.run(ScheduleSpec::OneFOneB, 8).unwrap();
         let stats = res.stages[1].alloc_stats.unwrap();
         let frag = stats.fragmentation();
         // §6 band (we assert the sane envelope; exact value depends on policy).

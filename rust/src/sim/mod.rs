@@ -1,16 +1,20 @@
 //! Cluster memory simulator substrates: caching allocator (fragmentation, §6),
-//! pipeline schedules, collective-buffer model and the event-driven engine
-//! that replays a training step on every device of the grid.
+//! collective-buffer model and the event-driven engine that replays a
+//! training step on every device of the grid.
+//!
+//! Pipeline schedules themselves live in [`crate::schedule`] — a trait-based
+//! registry shared with `analysis::bubble` and the planner; the engine
+//! consumes [`crate::schedule::PipelineSchedule`] instead of special-casing
+//! schedule kinds. The core types are re-exported here for convenience.
 
 pub mod allocator;
 pub mod collective;
 pub mod engine;
-pub mod schedule;
 pub mod trace;
 pub mod tracker;
 
+pub use crate::schedule::{PipelineOp, Schedule, ScheduleSpec};
 pub use allocator::{AllocStats, CachingAllocator};
 pub use collective::{CollectiveKind, CollectivePlan};
-pub use engine::{SimEngine, SimResult};
-pub use schedule::{PipelineOp, Schedule, ScheduleKind};
+pub use engine::{SimEngine, SimResult, COMM_BUFFER_CAP_BYTES};
 pub use tracker::{MemClass, MemoryTimeline};

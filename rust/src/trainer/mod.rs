@@ -11,7 +11,7 @@ pub use validate::MemoryValidation;
 use crate::config::{LiveSchedule, TrainingConfig};
 use crate::coordinator::PipelineCoordinator;
 use crate::runtime::{ArtifactManifest, Runtime};
-use crate::sim::{Schedule, ScheduleKind};
+use crate::schedule::{Schedule, ScheduleSpec};
 use std::sync::Arc;
 
 /// Result of a completed training run.
@@ -59,11 +59,11 @@ pub fn run_training(manifest: ArtifactManifest, cfg: TrainingConfig) -> anyhow::
     }
 
     // E3 validation: measured peaks vs manifest-exact predictions.
-    let kind = match cfg.schedule {
-        LiveSchedule::GPipe => ScheduleKind::GPipe,
-        LiveSchedule::OneFOneB => ScheduleKind::OneFOneB,
+    let spec = match cfg.schedule {
+        LiveSchedule::GPipe => ScheduleSpec::GPipe,
+        LiveSchedule::OneFOneB => ScheduleSpec::OneFOneB,
     };
-    let sched = Schedule::build(kind, cfg.pp, cfg.num_microbatches)?;
+    let sched = Schedule::build(spec, cfg.pp, cfg.num_microbatches)?;
     let inflight: Vec<u64> = (0..cfg.pp).map(|s| sched.analytic_inflight(s)).collect();
     let opt_shard = if cfg.zero_os { cfg.dp } else { 1 };
     let validation = MemoryValidation::build(

@@ -1,44 +1,103 @@
 //! Integration: the cluster simulator against the analytical model (the E2
-//! bridge), across schedules, ZeRO strategies and recompute policies.
+//! bridge), across every registered schedule, ZeRO strategies and recompute
+//! policies.
 
+use dsmem::analysis::stages::StageSplit;
+use dsmem::analysis::total::Overheads;
 use dsmem::analysis::{ActivationReport, MemoryModel, ZeroStrategy};
 use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
-use dsmem::sim::{MemClass, Schedule, ScheduleKind, SimEngine};
+use dsmem::model::CountMode;
+use dsmem::planner::{Candidate, Evaluator};
+use dsmem::schedule::{registry, Schedule, ScheduleSpec};
+use dsmem::sim::{MemClass, SimEngine};
 
 fn mm() -> MemoryModel {
     let cs = CaseStudy::paper();
     MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes)
 }
 
+/// The engine's per-microbatch byte model for one stage: MLA for every
+/// layer, MoE for the stage's MoE layers (dense stages charge MLA only —
+/// documented conservative choice).
+fn stage_per_mb(mm: &MemoryModel, act: &ActivationConfig, stage: usize) -> u64 {
+    let plan = mm.stage_plan();
+    let ar = ActivationReport::build(
+        &mm.model,
+        &mm.parallel,
+        act,
+        plan.stages[stage].num_layers,
+    );
+    ar.mla.device_bytes(act.recompute) * plan.stages[stage].num_layers
+        + ar.moe.device_bytes(act.recompute) * plan.stages[stage].moe_layers
+}
+
 #[test]
 fn sim_activation_peak_equals_analytic_for_every_stage_and_schedule() {
+    // The E2 bridge, per stage, for EVERY registered schedule: the replayed
+    // activation peak must equal the per-unit tape times the schedule's
+    // analytic in-flight bound, and the replayed in-flight count must equal
+    // the analytic one.
     let mm = mm();
     let act = ActivationConfig::paper(1);
-    let plan = mm.stage_plan();
-    for kind in [ScheduleKind::GPipe, ScheduleKind::OneFOneB] {
+    let m = 32; // admits every registered schedule at p=16 (dualpipe: m = 2p)
+    let mut covered = 0;
+    for spec in registry() {
+        let sched = spec.resolve();
+        assert!(sched.validate(16, m).is_ok(), "{} rejects the paper shape", spec.name());
         let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
-        let res = eng.run(kind, 16).unwrap();
-        let sched = Schedule::build(kind, 16, 16).unwrap();
+        let res = eng.run(spec, m).unwrap();
+        let schedule = Schedule::build(spec, 16, m).unwrap();
+        let unit_div = sched.units_per_microbatch().max(1);
         for st in &res.stages {
-            let ar = ActivationReport::build(
-                &mm.model,
-                &mm.parallel,
-                &act,
-                plan.stages[st.stage as usize].num_layers,
-            );
-            // Dense stages charge MLA-only for dense layers (documented
-            // conservative choice) — recompute the engine's per-mb figure.
-            let per_mb = ar.mla.device_bytes(act.recompute)
-                * plan.stages[st.stage as usize].num_layers
-                + ar.moe.device_bytes(act.recompute)
-                    * plan.stages[st.stage as usize].moe_layers;
+            let per_unit = stage_per_mb(&mm, &act, st.stage as usize) / unit_div;
+            let units = schedule.analytic_inflight(st.stage);
+            assert_eq!(st.peak_inflight, units, "{} stage {}", spec.name(), st.stage);
             assert_eq!(
                 st.timeline.peak(MemClass::Activations),
-                per_mb * sched.analytic_inflight(st.stage),
-                "{kind:?} stage {}",
+                per_unit * units,
+                "{} stage {}",
+                spec.name(),
                 st.stage
             );
         }
+        covered += 1;
+    }
+    assert_eq!(covered, 5);
+}
+
+#[test]
+fn sim_peak_equals_planner_prediction_for_every_schedule() {
+    // The planner side of the E2 bridge: for every registered schedule, the
+    // sim-engine's replayed activation peak at the analysed stage must equal
+    // the Evaluator's analytic activation_bytes for the same candidate.
+    let cs = CaseStudy::paper();
+    let mm = mm();
+    let act = ActivationConfig::paper(1);
+    let m = 32;
+    let ev = Evaluator::new(
+        &cs.model,
+        cs.dtypes,
+        CountMode::PaperCompat,
+        StageSplit::FrontLoaded,
+        Overheads::none(),
+        m,
+    );
+    let heaviest = mm.stage_plan().heaviest_stage();
+    for spec in registry() {
+        let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+        let res = eng.run(spec, m).unwrap();
+        let point = ev.evaluate(&Candidate {
+            parallel: cs.parallel,
+            act,
+            zero: ZeroStrategy::OsG,
+            schedule: spec,
+        });
+        assert_eq!(
+            res.stages[heaviest].timeline.peak(MemClass::Activations),
+            point.activation_bytes,
+            "{}",
+            spec.name()
+        );
     }
 }
 
@@ -50,7 +109,7 @@ fn static_classes_match_zero_rows_scaled() {
     let act = ActivationConfig::paper(1);
     for z in ZeroStrategy::ALL {
         let eng = SimEngine::new(&mm, act, z);
-        let res = eng.run(ScheduleKind::OneFOneB, 8).unwrap();
+        let res = eng.run(ScheduleSpec::OneFOneB, 8).unwrap();
         let zr = mm.zero_report();
         let row = zr.row(z);
         let st = &res.stages[1]; // stages 1..14 are the analysed archetype
@@ -61,13 +120,30 @@ fn static_classes_match_zero_rows_scaled() {
 }
 
 #[test]
+fn dualpipe_params_double_but_shards_do_not() {
+    // DualPipe keeps both replicas' stage weights resident (params ×2);
+    // gradient and optimizer shards stay single (reduced/sharded across the
+    // mirrored pair).
+    let mm = mm();
+    let act = ActivationConfig::paper(1);
+    let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+    let res = eng.run(ScheduleSpec::DualPipe, 32).unwrap();
+    let zr = mm.zero_report();
+    let row = zr.row(ZeroStrategy::OsG);
+    let st = &res.stages[1];
+    assert_eq!(st.timeline.peak(MemClass::Params), 2 * row.params_bytes);
+    assert_eq!(st.timeline.peak(MemClass::Gradients), row.gradient_bytes);
+    assert_eq!(st.timeline.peak(MemClass::Optimizer), row.optimizer_bytes);
+}
+
+#[test]
 fn full_recompute_beats_gpipe_none_by_orders_of_magnitude() {
     let mm = mm();
     let none = SimEngine::new(&mm, ActivationConfig::paper(1), ZeroStrategy::OsG)
-        .run(ScheduleKind::GPipe, 16)
+        .run(ScheduleSpec::GPipe, 16)
         .unwrap();
     let full = SimEngine::new(&mm, ActivationConfig::paper_full_recompute(1), ZeroStrategy::OsG)
-        .run(ScheduleKind::GPipe, 16)
+        .run(ScheduleSpec::GPipe, 16)
         .unwrap();
     let a = none.peak_stage().timeline.peak(MemClass::Activations);
     let b = full.peak_stage().timeline.peak(MemClass::Activations);
@@ -82,8 +158,8 @@ fn interleaved_holds_more_than_plain_1f1b() {
     let mm = mm();
     let act = ActivationConfig::paper(1);
     let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
-    let plain = eng.run(ScheduleKind::OneFOneB, 32).unwrap();
-    let inter = eng.run(ScheduleKind::Interleaved1F1B { chunks: 2 }, 32).unwrap();
+    let plain = eng.run(ScheduleSpec::OneFOneB, 32).unwrap();
+    let inter = eng.run(ScheduleSpec::Interleaved1F1B { chunks: 2 }, 32).unwrap();
     assert!(
         inter.stages[0].timeline.peak(MemClass::Activations)
             > plain.stages[0].timeline.peak(MemClass::Activations),
@@ -95,14 +171,18 @@ fn interleaved_holds_more_than_plain_1f1b() {
 
 #[test]
 fn comm_buffers_stay_in_paper_band() {
-    // §6: transient comm buffers 0.8–2 GB per device.
+    // §6: transient comm buffers 0.8–2 GB per device (the engine clamps at
+    // sim::COMM_BUFFER_CAP_BYTES = the top of the band).
     let mm = mm();
     let act = ActivationConfig::paper(1);
     let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
-    let res = eng.run(ScheduleKind::OneFOneB, 8).unwrap();
+    let res = eng.run(ScheduleSpec::OneFOneB, 8).unwrap();
     for st in &res.stages {
         let peak = st.timeline.peak(MemClass::CommBuffers) as f64 / dsmem::GIB;
         assert!((0.1..=2.0).contains(&peak), "stage {} buffers {peak} GiB", st.stage);
+        assert!(
+            st.timeline.peak(MemClass::CommBuffers) <= dsmem::sim::COMM_BUFFER_CAP_BYTES
+        );
     }
 }
 
@@ -111,7 +191,7 @@ fn fragmentation_replay_stays_in_paper_band() {
     let mm = mm();
     let mut eng = SimEngine::new(&mm, ActivationConfig::paper(1), ZeroStrategy::OsG);
     eng.simulate_allocator = true;
-    let res = eng.run(ScheduleKind::OneFOneB, 8).unwrap();
+    let res = eng.run(ScheduleSpec::OneFOneB, 8).unwrap();
     for st in res.stages.iter().take(4) {
         let f = st.alloc_stats.unwrap().fragmentation();
         assert!((0.0..0.35).contains(&f), "stage {} frag {f}", st.stage);

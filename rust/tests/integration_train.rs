@@ -14,7 +14,7 @@
 use dsmem::config::{LiveSchedule, TrainingConfig};
 use dsmem::coordinator::PipelineCoordinator;
 use dsmem::runtime::{ArtifactManifest, MemTag, Runtime};
-use dsmem::sim::{Schedule, ScheduleKind};
+use dsmem::schedule::{Schedule, ScheduleSpec};
 use dsmem::trainer::{MemoryValidation, SyntheticCorpus};
 use std::path::Path;
 use std::sync::Arc;
@@ -75,7 +75,7 @@ fn one_step_trains_and_validates_memory() {
     // Untrained loss ≈ ln(V) = 7.62 for V=2048.
     assert!((6.5..9.0).contains(&stats.loss), "loss {}", stats.loss);
 
-    let sched = Schedule::build(ScheduleKind::OneFOneB, cfg.pp, cfg.num_microbatches).unwrap();
+    let sched = Schedule::build(ScheduleSpec::OneFOneB, cfg.pp, cfg.num_microbatches).unwrap();
     let inflight: Vec<u64> = (0..cfg.pp).map(|s| sched.analytic_inflight(s)).collect();
     let val =
         MemoryValidation::build(&man, &coord.memory_snapshots(), &inflight, 1).unwrap();

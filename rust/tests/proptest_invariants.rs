@@ -12,6 +12,7 @@ use dsmem::config::{
 use dsmem::model::CountMode;
 use dsmem::parallel::{build_groups, GroupKind, RankGrid};
 use dsmem::planner::{pareto, plan, PlanQuery, SearchSpace};
+use dsmem::schedule::{registry, Schedule, ScheduleSpec};
 use dsmem::util::Rng64;
 
 const CASES: usize = 200;
@@ -182,23 +183,57 @@ fn rank_grid_groups_always_partition() {
 }
 
 #[test]
-fn schedules_preserve_invariants_for_random_shapes() {
+fn every_registered_schedule_upholds_replay_and_bubble_invariants() {
+    // For every registered schedule (plus random interleaved chunk counts)
+    // and random (p, m): the replayed peak_inflight equals the schedule's
+    // analytic bound on every stage, the op invariants hold, and the bubble
+    // fraction is in [0, 1) and non-increasing in m.
     let mut rng = Rng64::new(0x7EA);
     for _ in 0..100 {
         let p = rng.range(1, 24);
         let m = rng.range(p, p + 64); // m >= p keeps 1F1B well-formed
-        for kind in [
-            dsmem::sim::ScheduleKind::GPipe,
-            dsmem::sim::ScheduleKind::OneFOneB,
-            dsmem::sim::ScheduleKind::Interleaved1F1B { chunks: rng.range(1, 4) },
-        ] {
-            let s = dsmem::sim::Schedule::build(kind, p, m).unwrap();
+        let mut specs = registry();
+        specs.push(ScheduleSpec::Interleaved1F1B { chunks: rng.range(1, 5) });
+        for spec in specs {
+            let sched = spec.resolve();
+            if sched.validate(p, m).is_err() {
+                continue; // e.g. DualPipe with odd p/m — covered below
+            }
+            let s = Schedule::build(spec, p, m).unwrap();
             s.check_invariants().unwrap();
             for stage in 0..p {
-                if matches!(kind, dsmem::sim::ScheduleKind::GPipe | dsmem::sim::ScheduleKind::OneFOneB) {
-                    assert_eq!(s.peak_inflight(stage), s.analytic_inflight(stage));
-                }
+                assert_eq!(
+                    s.peak_inflight(stage),
+                    s.analytic_inflight(stage),
+                    "{} p={p} m={m} stage={stage}",
+                    spec.name()
+                );
             }
+            let b = sched.bubble_fraction(p, m);
+            assert!((0.0..1.0).contains(&b), "{} p={p} m={m}: bubble {b}", spec.name());
+            if sched.validate(p, m + 2).is_ok() {
+                assert!(
+                    sched.bubble_fraction(p, m + 2) <= b,
+                    "{} bubble not monotone in m",
+                    spec.name()
+                );
+            }
+        }
+    }
+    // DualPipe needs even p, even m ≥ 2p — dedicated random coverage so the
+    // generic loop's skips don't leave it untested.
+    for _ in 0..60 {
+        let p = 2 * rng.range(1, 13);
+        let m = 2 * p + 2 * rng.range(0, 33);
+        let s = Schedule::build(ScheduleSpec::DualPipe, p, m).unwrap();
+        s.check_invariants().unwrap();
+        for stage in 0..p {
+            assert_eq!(
+                s.peak_inflight(stage),
+                s.analytic_inflight(stage),
+                "dualpipe p={p} m={m} stage={stage}"
+            );
+            assert_eq!(s.peak_inflight(stage), p + 1, "dualpipe holds p+1 uniformly");
         }
     }
 }
@@ -330,9 +365,12 @@ fn planner_shim_matches_legacy_sweep_bit_identically() {
 }
 
 #[test]
-fn planner_contains_paper_point_with_legacy_total() {
+fn planner_contains_paper_point_with_schedule_scaled_total() {
     // The paper's exact configuration must appear in a default world-1024
-    // grid, carrying the same total the direct facade computes for it.
+    // grid under every registered schedule. Static classes must match the
+    // direct facade report; activations must be the facade's per-microbatch
+    // figure scaled by the schedule's analytic in-flight count at the
+    // analysed stage (1F1B at stage 1 of p=16 with m=32: 15 tapes).
     let cs = CaseStudy::paper();
     let q = PlanQuery::new(SearchSpace::for_world(1024), 80 * dsmem::GIB as u64);
     let res = plan(&cs.model, cs.dtypes, &q);
@@ -343,18 +381,42 @@ fn planner_contains_paper_point_with_legacy_total() {
         ZeroStrategy::OsG,
         Overheads::paper_midpoint(),
     );
-    let found = res
-        .evaluated
-        .iter()
-        .find(|p| {
-            p.parallel == cs.parallel
-                && p.micro_batch == 1
-                && p.sp == 2
-                && p.recompute == RecomputePolicy::None
-                && p.zero == ZeroStrategy::OsG
-        })
-        .expect("paper configuration missing from the default grid");
-    assert_eq!(found.total_bytes, direct.total_bytes());
+    let heaviest = mm.stage_plan().heaviest_stage() as u64;
+    for spec in registry() {
+        let sched = spec.resolve();
+        if sched.validate(cs.parallel.pp, q.num_microbatches).is_err() {
+            continue;
+        }
+        let found = res
+            .evaluated
+            .iter()
+            .find(|p| {
+                p.parallel == cs.parallel
+                    && p.micro_batch == 1
+                    && p.sp == 2
+                    && p.recompute == RecomputePolicy::None
+                    && p.zero == ZeroStrategy::OsG
+                    && p.schedule == spec
+            })
+            .unwrap_or_else(|| panic!("paper configuration missing for {}", spec.name()));
+        let inflight =
+            sched.analytic_inflight(heaviest, cs.parallel.pp, q.num_microbatches);
+        let units = sched.units_per_microbatch().max(1);
+        assert_eq!(
+            found.params_bytes,
+            sched.param_multiplier() * direct.params_bytes,
+            "{}",
+            spec.name()
+        );
+        assert_eq!(found.gradient_bytes, direct.gradient_bytes);
+        assert_eq!(found.optimizer_bytes, direct.optimizer_bytes);
+        assert_eq!(
+            found.activation_bytes,
+            (direct.activation_bytes / units) * inflight,
+            "{}",
+            spec.name()
+        );
+    }
 }
 
 #[test]
