@@ -12,7 +12,7 @@ use dsmem::model::CountMode;
 use dsmem::planner::{Candidate, Evaluator, SearchSpace};
 use dsmem::report::gib;
 use dsmem::schedule::{registry, ScheduleSpec};
-use dsmem::sim::{MemClass, SimEngine};
+use dsmem::sim::{ComponentGroup, SimEngine};
 use dsmem::util::bench::{bench, black_box};
 use std::time::Duration;
 
@@ -34,7 +34,7 @@ fn main() {
                 "  {:<22} AC {:<5} peak act {:>7.1} GiB  total {:>7.1} GiB  (stage {}, {} inflight)",
                 spec.name(),
                 rc.name(),
-                gib(worst.timeline.peak(MemClass::Activations)),
+                gib(worst.timeline.group_peak(ComponentGroup::Activation)),
                 gib(worst.timeline.total_peak()),
                 worst.stage,
                 worst.peak_inflight

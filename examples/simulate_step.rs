@@ -9,7 +9,7 @@
 use dsmem::analysis::{MemoryModel, ZeroStrategy};
 use dsmem::config::{ActivationConfig, CaseStudy};
 use dsmem::report::{gib, Table};
-use dsmem::sim::{MemClass, ScheduleSpec, SimEngine};
+use dsmem::sim::{ComponentGroup, ScheduleSpec, SimEngine};
 
 fn main() -> anyhow::Result<()> {
     let cs = CaseStudy::paper();
@@ -28,9 +28,9 @@ fn main() -> anyhow::Result<()> {
         t.row(vec![
             a.stage.to_string(),
             a.peak_inflight.to_string(),
-            format!("{:.1}", gib(a.timeline.peak(MemClass::Activations))),
+            format!("{:.1}", gib(a.timeline.group_peak(ComponentGroup::Activation))),
             format!("{:.1}", gib(a.timeline.total_peak())),
-            format!("{:.1}", gib(b.timeline.peak(MemClass::Activations))),
+            format!("{:.1}", gib(b.timeline.group_peak(ComponentGroup::Activation))),
             format!("{:.1}", gib(b.timeline.total_peak())),
         ]);
     }

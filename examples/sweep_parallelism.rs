@@ -65,10 +65,10 @@ fn main() -> anyhow::Result<()> {
             p.parallel.ep.to_string(),
             p.parallel.dp.to_string(),
             p.parallel.edp().to_string(),
-            format!("{:.1}", gib(p.params_bytes)),
+            format!("{:.1}", gib(p.params_bytes())),
             format!("{:.1}", gib(p.static_bytes())),
-            format!("{:.1}", gib(p.activation_bytes)),
-            format!("{:.1}", gib(p.total_bytes)),
+            format!("{:.1}", gib(p.activation_bytes())),
+            format!("{:.1}", gib(p.total_bytes())),
             if p.fits(hbm) { "yes".into() } else { "-".into() },
         ]);
     }

@@ -11,10 +11,15 @@
 //! "patterns" of Figures 2–3.
 
 use crate::config::{ActivationConfig, ModelConfig, ParallelConfig, RecomputePolicy};
+use crate::ledger::Component as MemComponent;
+use crate::ledger::MemoryLedger;
 
-/// Which block a tensor belongs to.
+/// Which transformer block a tape (or tensor) belongs to — the Figure-2/3
+/// split. Distinct from the memory-ledger taxonomy
+/// ([`crate::ledger::Component`]), which tags where the *bytes* are
+/// attributed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Component {
+pub enum TapeBlock {
     Mla,
     Moe,
 }
@@ -36,7 +41,11 @@ pub enum Retain {
 #[derive(Debug, Clone)]
 pub struct ActTensor {
     pub name: &'static str,
-    pub component: Component,
+    /// The transformer block this tensor lives in (Figure 2 vs Figure 3).
+    pub block: TapeBlock,
+    /// Memory-ledger component this tensor's bytes are attributed to
+    /// (attention / MoE-MLP / router — the ledger's activation taxonomy).
+    pub class: MemComponent,
     /// Human-readable logical shape, e.g. `[b, s, h]`.
     pub shape: String,
     /// Bytes of the full (unparallelized) tensor.
@@ -66,10 +75,10 @@ impl ActTensor {
     }
 }
 
-/// A full per-layer activation tape for one component.
+/// A full per-layer activation tape for one transformer block.
 #[derive(Debug, Clone)]
 pub struct ActivationTape {
-    pub component: Component,
+    pub block: TapeBlock,
     pub tensors: Vec<ActTensor>,
 }
 
@@ -85,12 +94,24 @@ impl ActivationTape {
         self.tensors.iter().map(|t| t.full_bytes).sum()
     }
 
+    /// Per-device bytes of this tape under `policy`, attributed to the
+    /// ledger's activation components (one layer, one microbatch). The grand
+    /// total equals [`ActivationTape::device_bytes`] exactly — regrouping the
+    /// same `u64` terms never changes the sum.
+    pub fn ledger(&self, policy: RecomputePolicy) -> MemoryLedger {
+        let mut l = MemoryLedger::new();
+        for t in self.tensors.iter().filter(|t| t.retained(policy)) {
+            l.add(t.class, t.device_bytes());
+        }
+        l
+    }
+
     /// Render the tape (Figure 2 / Figure 3).
     pub fn render(&self, policy: RecomputePolicy) -> String {
         let mut out = String::new();
-        let title = match self.component {
-            Component::Mla => "MLA activation pattern (Figure 2)",
-            Component::Moe => "MoE activation pattern (Figure 3)",
+        let title = match self.block {
+            TapeBlock::Mla => "MLA activation pattern (Figure 2)",
+            TapeBlock::Moe => "MoE activation pattern (Figure 3)",
         };
         out.push_str(&format!("{title} — policy {}\n", policy.name()));
         out.push_str(&format!(
@@ -135,39 +156,45 @@ pub fn mla_tape(m: &ModelConfig, a: &ActivationConfig) -> ActivationTape {
     let sp = a.sp;
     let tp = a.sp.max(1); // heads split across TP; paper uses TP = SP = 2.
 
-    let t = |name, component, shape: String, full_bytes, divisor, retain| ActTensor {
+    let t = |name, shape: String, full_bytes, divisor, retain| ActTensor {
         name,
-        component,
+        block: TapeBlock::Mla,
+        class: MemComponent::ActivationAttention,
         shape,
         full_bytes,
         divisor,
         retain,
     };
 
-    ActivationTape {
-        component: Component::Mla,
-        tensors: vec![
-            // 4bsh term: block input + RMSNorm output, both [b,s,h] bf16, SP-sharded.
-            t("ln1_input", Component::Mla, format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::BlockInput),
-            t("ln1_output", Component::Mla, format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::Intermediate),
-            // 2bs(dcq+dc): compressed latents, replicated (weights unsplit).
-            t("c_Q (W^DQ out)", Component::Mla, format!("[{b},{s},{dcq}]"), 2 * b * s * dcq, 1, Retain::Intermediate),
-            t("c_KV (W^DKV out)", Component::Mla, format!("[{b},{s},{dc}]"), 2 * b * s * dc, 1, Retain::Intermediate),
-            // 4bs(dh+dhr)nh: q = [q_nope; q_rope] and k = [k_nope; k_rope], head-sharded.
-            t("q (nope+rope)", Component::Mla, format!("[{b},{s},{nh},{}]", dh + dhr), 2 * b * s * (dh + dhr) * nh, tp, Retain::Intermediate),
-            t("k (nope+rope)", Component::Mla, format!("[{b},{s},{nh},{}]", dh + dhr), 2 * b * s * (dh + dhr) * nh, tp, Retain::Intermediate),
-            // 2bs·dh·nh: v, head-sharded.
-            t("v (W^UV out)", Component::Mla, format!("[{b},{s},{nh},{dh}]"), 2 * b * s * dh * nh, tp, Retain::Intermediate),
-            // 5b·nh·s²: scores (2) + softmax probs (2) + dropout mask (1), head-sharded.
-            t("attn_scores QK^T", Component::Mla, format!("[{b},{nh},{s},{s}]"), 2 * b * nh * s * s, tp, Retain::AttentionScore),
-            t("attn_probs softmax", Component::Mla, format!("[{b},{nh},{s},{s}]"), 2 * b * nh * s * s, tp, Retain::AttentionScore),
-            t("attn_dropout_mask", Component::Mla, format!("[{b},{nh},{s},{s}]"), b * nh * s * s, tp, Retain::AttentionScore),
-            // 2bs·dh·nh: attention context (input to W^O), head-sharded.
-            t("attn_context", Component::Mla, format!("[{b},{s},{nh},{dh}]"), 2 * b * s * dh * nh, tp, Retain::Intermediate),
-            // bsh: output dropout mask, 1 B/elem, SP-sharded.
-            t("out_dropout_mask", Component::Mla, format!("[{b},{s},{h}]"), b * s * h, sp, Retain::Intermediate),
-        ],
+    let mut tensors = vec![
+        // 4bsh term: block input + RMSNorm output, both [b,s,h] bf16, SP-sharded.
+        t("ln1_input", format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::BlockInput),
+        t("ln1_output", format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::Intermediate),
+        // 2bs(dcq+dc): compressed latents, replicated (weights unsplit).
+        t("c_Q (W^DQ out)", format!("[{b},{s},{dcq}]"), 2 * b * s * dcq, 1, Retain::Intermediate),
+        t("c_KV (W^DKV out)", format!("[{b},{s},{dc}]"), 2 * b * s * dc, 1, Retain::Intermediate),
+        // 4bs(dh+dhr)nh: q = [q_nope; q_rope] and k = [k_nope; k_rope], head-sharded.
+        t("q (nope+rope)", format!("[{b},{s},{nh},{}]", dh + dhr), 2 * b * s * (dh + dhr) * nh, tp, Retain::Intermediate),
+        t("k (nope+rope)", format!("[{b},{s},{nh},{}]", dh + dhr), 2 * b * s * (dh + dhr) * nh, tp, Retain::Intermediate),
+        // 2bs·dh·nh: v, head-sharded.
+        t("v (W^UV out)", format!("[{b},{s},{nh},{dh}]"), 2 * b * s * dh * nh, tp, Retain::Intermediate),
+        // 5b·nh·s²: scores (2) + softmax probs (2) + dropout mask (1), head-sharded.
+        t("attn_scores QK^T", format!("[{b},{nh},{s},{s}]"), 2 * b * nh * s * s, tp, Retain::AttentionScore),
+        t("attn_probs softmax", format!("[{b},{nh},{s},{s}]"), 2 * b * nh * s * s, tp, Retain::AttentionScore),
+        t("attn_dropout_mask", format!("[{b},{nh},{s},{s}]"), b * nh * s * s, tp, Retain::AttentionScore),
+        // 2bs·dh·nh: attention context (input to W^O), head-sharded.
+        t("attn_context", format!("[{b},{s},{nh},{dh}]"), 2 * b * s * dh * nh, tp, Retain::Intermediate),
+        // bsh: output dropout mask, 1 B/elem, SP-sharded.
+        t("out_dropout_mask", format!("[{b},{s},{h}]"), b * s * h, sp, Retain::Intermediate),
+    ];
+    // Compression-free models (q_lora_rank = 0, e.g. V2-Lite) have no c_Q
+    // latent at all — mirror model/mla.rs's direct-W^Q branch instead of
+    // rendering a phantom zero-byte tensor.
+    if dcq == 0 {
+        tensors.retain(|x| x.name != "c_Q (W^DQ out)");
     }
+
+    ActivationTape { block: TapeBlock::Mla, tensors }
 }
 
 /// Build the MoE tape (paper §5.2, Figure 3) for one layer and one microbatch,
@@ -188,30 +215,34 @@ pub fn moe_tape(m: &ModelConfig, p: &ParallelConfig, a: &ActivationConfig) -> Ac
     // expert the same with E → b·s.
     let e_tok = |mult: u64| b * s * nr * mult / n; // E_token × mult (integer-safe for our configs)
 
-    let t = |name, shape: String, full_bytes, divisor, retain| ActTensor {
+    let t = |name, class, shape: String, full_bytes, divisor, retain| ActTensor {
         name,
-        component: Component::Moe,
+        block: TapeBlock::Moe,
+        class,
         shape,
         full_bytes,
         divisor,
         retain,
     };
+    let mlp = MemComponent::ActivationMoeMlp;
+    let router = MemComponent::ActivationRouter;
 
     ActivationTape {
-        component: Component::Moe,
+        block: TapeBlock::Moe,
         tensors: vec![
             // 4bsh/2: LN2 input + output, SP-sharded.
-            t("ln2_input", format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::BlockInput),
-            t("ln2_output", format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::Intermediate),
+            t("ln2_input", mlp, format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::BlockInput),
+            t("ln2_output", mlp, format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::Intermediate),
             // 4bsN: router logits + softmax probs (bf16), undivided (post-gather).
-            t("router_logits", format!("[{b},{s},{n}]"), 2 * b * s * n, 1, Retain::Intermediate),
-            t("router_probs", format!("[{b},{s},{n}]"), 2 * b * s * n, 1, Retain::Intermediate),
+            t("router_logits", router, format!("[{b},{s},{n}]"), 2 * b * s * n, 1, Retain::Intermediate),
+            t("router_probs", router, format!("[{b},{s},{n}]"), 2 * b * s * n, 1, Retain::Intermediate),
             // 2bsN_r: selected top-k routing weights, kept under full recompute.
-            t("topk_weights", format!("[{b},{s},{nr}]"), 2 * b * s * nr, 1, Retain::RouterOutput),
+            t("topk_weights", router, format!("[{b},{s},{nr}]"), 2 * b * s * nr, 1, Retain::RouterOutput),
             // Routed experts on this rank: 3·E·h (input 2B + combine mask 1B)
             // + 8·E·h_E (gate, up, silu, gated product — all 2B).
             t(
                 "routed_expert_inputs",
+                mlp,
                 format!("{routed_per_rank}x[E_tok,{h}]"),
                 routed_per_rank * e_tok(3 * h),
                 1,
@@ -219,6 +250,7 @@ pub fn moe_tape(m: &ModelConfig, p: &ParallelConfig, a: &ActivationConfig) -> Ac
             ),
             t(
                 "routed_expert_hidden",
+                mlp,
                 format!("{routed_per_rank}x[E_tok,{he}]x4"),
                 routed_per_rank * e_tok(8 * he),
                 1,
@@ -227,6 +259,7 @@ pub fn moe_tape(m: &ModelConfig, p: &ParallelConfig, a: &ActivationConfig) -> Ac
             // Shared expert(s) process every token: 3bsh + 8bsh_E each.
             t(
                 "shared_expert_input",
+                mlp,
                 format!("{ns}x[{b},{s},{h}]"),
                 ns * 3 * b * s * h,
                 1,
@@ -234,6 +267,7 @@ pub fn moe_tape(m: &ModelConfig, p: &ParallelConfig, a: &ActivationConfig) -> Ac
             ),
             t(
                 "shared_expert_hidden",
+                mlp,
                 format!("{ns}x[{b},{s},{he}]x4"),
                 ns * 8 * b * s * he,
                 1,
@@ -280,6 +314,17 @@ impl ActivationReport {
     /// Table 10 "Total" row.
     pub fn total_stage_bytes(&self, policy: RecomputePolicy) -> u64 {
         self.mla_stage_bytes(policy) + self.moe_stage_bytes(policy)
+    }
+
+    /// The whole-stage activation ledger under `policy`: the per-layer MLA
+    /// and MoE tape ledgers scaled by the stage layer count. The grand total
+    /// is bit-identical to [`ActivationReport::total_stage_bytes`] (same
+    /// `u64` terms, regrouped by ledger component).
+    pub fn stage_ledger(&self, policy: RecomputePolicy) -> MemoryLedger {
+        self.mla
+            .ledger(policy)
+            .merged(&self.moe.ledger(policy))
+            .scale(self.layers_per_stage)
     }
 }
 
@@ -420,6 +465,44 @@ mod tests {
             r4.total_stage_bytes(RecomputePolicy::None),
             4 * r1.total_stage_bytes(RecomputePolicy::None)
         );
+    }
+
+    #[test]
+    fn stage_ledger_total_is_bit_identical_to_flat_sum() {
+        // Regrouping the tape into tagged components must never change the
+        // grand total — the ledger refactor's core invariant.
+        for b in [1, 2, 4] {
+            let (m, p, a) = setup(b);
+            let rep = ActivationReport::build(&m, &p, &a, 4);
+            for pol in [
+                RecomputePolicy::None,
+                RecomputePolicy::SelectiveAttention,
+                RecomputePolicy::Full,
+            ] {
+                let l = rep.stage_ledger(pol);
+                assert_eq!(l.total(), rep.total_stage_bytes(pol), "b={b} {pol:?}");
+                assert_eq!(
+                    l.get(MemComponent::ActivationAttention),
+                    rep.mla_stage_bytes(pol)
+                );
+                assert_eq!(
+                    l.get(MemComponent::ActivationMoeMlp) + l.get(MemComponent::ActivationRouter),
+                    rep.moe_stage_bytes(pol)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn router_tensors_survive_full_recompute_in_the_ledger() {
+        // §5.2: the top-k routing weights are kept even under full recompute;
+        // they are the only router bytes left in that ledger.
+        let (m, p, a) = setup(1);
+        let tape = moe_tape(&m, &p, &a);
+        let l = tape.ledger(RecomputePolicy::Full);
+        assert_eq!(l.get(MemComponent::ActivationRouter), 2 * a.micro_batch * a.seq_len * m.num_experts_per_tok);
+        let l_none = tape.ledger(RecomputePolicy::None);
+        assert!(l_none.get(MemComponent::ActivationRouter) > l.get(MemComponent::ActivationRouter));
     }
 
     #[test]

@@ -93,6 +93,20 @@ impl DeviceStaticParams {
     pub fn total_bytes(&self) -> u64 {
         self.total_params() * self.weight_dtype.bytes() as u64
     }
+
+    /// The per-device static-parameter ledger: the paper's "Non-MoE Part" as
+    /// [`Component::ParamsDense`], the "MoE part" as
+    /// [`Component::ParamsMoe`], at the weight dtype. Grand total equals
+    /// [`DeviceStaticParams::total_bytes`] exactly.
+    ///
+    /// [`Component::ParamsDense`]: crate::ledger::Component::ParamsDense
+    /// [`Component::ParamsMoe`]: crate::ledger::Component::ParamsMoe
+    pub fn ledger(&self) -> crate::ledger::MemoryLedger {
+        let wb = self.weight_dtype.bytes() as u64;
+        crate::ledger::MemoryLedger::new()
+            .with(crate::ledger::Component::ParamsDense, self.non_moe_params() * wb)
+            .with(crate::ledger::Component::ParamsMoe, self.moe_params() * wb)
+    }
 }
 
 #[cfg(test)]

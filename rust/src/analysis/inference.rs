@@ -83,14 +83,16 @@ pub fn mla_vs_mha_ratio(m: &ModelConfig) -> f64 {
         / CacheKind::Mha.elems_per_token_layer(m) as f64
 }
 
-/// Total serving memory per device: weights (TP/EP-partitioned, from the
-/// training-side device analysis, minus optimizer/grads) + KV cache.
-pub fn serving_device_bytes(
+/// Component-tagged serving ledger per device: the TP/EP-partitioned weights
+/// (dense + MoE, from the training-side device analysis, minus
+/// optimizer/grads) plus the KV cache under
+/// [`crate::ledger::Component::KvCache`].
+pub fn serving_ledger(
     m: &ModelConfig,
     p: &ParallelConfig,
     weight_dtype: Dtype,
     cache: &KvCacheReport,
-) -> u64 {
+) -> crate::ledger::MemoryLedger {
     let plan = super::stages::StagePlan::build(
         m,
         p.pp,
@@ -104,7 +106,19 @@ pub fn serving_device_bytes(
         plan.heaviest_stage(),
         weight_dtype,
     );
-    dev.total_bytes() + cache.device_bytes
+    dev.ledger().with(crate::ledger::Component::KvCache, cache.device_bytes)
+}
+
+/// Total serving memory per device: weights (TP/EP-partitioned, from the
+/// training-side device analysis, minus optimizer/grads) + KV cache.
+/// Grand total of [`serving_ledger`].
+pub fn serving_device_bytes(
+    m: &ModelConfig,
+    p: &ParallelConfig,
+    weight_dtype: Dtype,
+    cache: &KvCacheReport,
+) -> u64 {
+    serving_ledger(m, p, weight_dtype, cache).total()
 }
 
 #[cfg(test)]
@@ -174,5 +188,12 @@ mod tests {
         // Weights dominate at this concurrency: ~11.6 GiB weights vs ~8.6 GiB cache.
         let gib = total as f64 / crate::GIB;
         assert!((15.0..30.0).contains(&gib), "{gib}");
+        // The ledger decomposition sums to the same total and tags the cache.
+        use crate::ledger::Component;
+        let l = serving_ledger(&m, &p, Dtype::Bf16, &cache);
+        assert_eq!(l.total(), total);
+        assert_eq!(l.get(Component::KvCache), cache.device_bytes);
+        assert!(l.get(Component::ParamsDense) > 0);
+        assert!(l.get(Component::ParamsMoe) > l.get(Component::ParamsDense));
     }
 }

@@ -30,7 +30,7 @@ pub mod stages;
 pub mod total;
 pub mod zero;
 
-pub use activation::{ActTensor, ActivationReport, ActivationTape, Component};
+pub use activation::{ActTensor, ActivationReport, ActivationTape, TapeBlock};
 pub use device::DeviceStaticParams;
 pub use params::ParamTable;
 pub use stages::{StagePlan, StageSplit};

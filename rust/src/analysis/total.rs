@@ -10,6 +10,7 @@ use super::activation::ActivationReport;
 use super::zero::{ZeroReport, ZeroStrategy};
 use super::MemoryModel;
 use crate::config::{ActivationConfig, RecomputePolicy};
+use crate::ledger::{Component, ComponentGroup, MemoryLedger};
 
 /// §6 overheads. The paper gives ranges; defaults sit mid-range.
 ///
@@ -18,6 +19,20 @@ use crate::config::{ActivationConfig, RecomputePolicy};
 /// and the in-flight count is a property of the pipeline schedule — derived
 /// per stage from [`crate::schedule::PipelineSchedule`] by the planner
 /// ([`crate::planner::Evaluator`]) and the simulator, never a fixed scalar.
+///
+/// # Fragmentation base convention
+///
+/// §6 gives fragmentation as a fraction of *allocated* memory without
+/// pinning the base. This crate applies the fraction to the bytes the
+/// framework's caching allocator actually serves — parameters, gradients,
+/// optimizer states and activations — and **excludes** the temporal
+/// communication buffers: the paper bounds those separately as an absolute
+/// 0.8–2 GB band (they live in the communication library's own pools, not
+/// the framework allocator, so including them would double-count §6's two
+/// overheads against each other). The fragmentation bytes themselves are
+/// likewise not part of the base. [`Overheads::fragmentation_bytes`] is the
+/// single implementation of this rule, shared by
+/// [`DeviceMemoryReport::build`] and [`crate::planner::Evaluator`].
 #[derive(Debug, Clone, Copy)]
 pub struct Overheads {
     /// Temporary communication buffers per device, bytes (paper: 0.8–2 GB).
@@ -36,19 +51,25 @@ impl Overheads {
     pub fn none() -> Self {
         Self { comm_buffer_bytes: 0, fragmentation: 0.0 }
     }
+
+    /// Fragmentation bytes for a device holding `allocated_bytes` of
+    /// allocator-served memory (P+G+O+activations — see the type-level
+    /// convention note; comm buffers are *not* part of the base).
+    pub fn fragmentation_bytes(&self, allocated_bytes: u64) -> u64 {
+        (allocated_bytes as f64 * self.fragmentation) as u64
+    }
 }
 
-/// Complete per-device memory report.
+/// Complete per-device memory report — a thin view over one component-tagged
+/// [`MemoryLedger`]. The flat byte fields of the pre-ledger struct survive
+/// as accessor methods with identical values (the golden regression tests
+/// pin them against the paper).
 #[derive(Debug, Clone)]
 pub struct DeviceMemoryReport {
     pub zero: ZeroStrategy,
     pub recompute: RecomputePolicy,
-    pub params_bytes: u64,
-    pub gradient_bytes: u64,
-    pub optimizer_bytes: u64,
-    pub activation_bytes: u64,
-    pub comm_buffer_bytes: u64,
-    pub fragmentation_bytes: u64,
+    /// The component-tagged decomposition; `total_bytes()` is its grand total.
+    pub ledger: MemoryLedger,
 }
 
 impl DeviceMemoryReport {
@@ -62,29 +83,48 @@ impl DeviceMemoryReport {
         let row = *zr.row(zero);
         let ar: ActivationReport = mm.activation_report(act);
         // Per-microbatch, as in the paper's tables: one in-flight tape.
-        let act_bytes = ar.total_stage_bytes(act.recompute);
-        let allocated =
-            row.params_bytes + row.gradient_bytes + row.optimizer_bytes + act_bytes;
-        Self {
-            zero,
-            recompute: act.recompute,
-            params_bytes: row.params_bytes,
-            gradient_bytes: row.gradient_bytes,
-            optimizer_bytes: row.optimizer_bytes,
-            activation_bytes: act_bytes,
-            comm_buffer_bytes: ov.comm_buffer_bytes,
-            fragmentation_bytes: (allocated as f64 * ov.fragmentation) as u64,
-        }
+        let mut ledger = row.ledger().merged(&ar.stage_ledger(act.recompute));
+        // At this point the ledger holds exactly the allocator-served bytes
+        // (P+G+O+act) — the fragmentation base per the Overheads convention.
+        let allocated = ledger.total();
+        ledger.set(Component::CommBuffer, ov.comm_buffer_bytes);
+        ledger.set(Component::Fragmentation, ov.fragmentation_bytes(allocated));
+        Self { zero, recompute: act.recompute, ledger }
+    }
+
+    /// Parameter bytes (dense + MoE partitions).
+    pub fn params_bytes(&self) -> u64 {
+        self.ledger.group_total(ComponentGroup::Params)
+    }
+
+    /// Gradient bytes.
+    pub fn gradient_bytes(&self) -> u64 {
+        self.ledger.get(Component::Gradients)
+    }
+
+    /// Optimizer-state bytes.
+    pub fn optimizer_bytes(&self) -> u64 {
+        self.ledger.get(Component::OptimizerStates)
+    }
+
+    /// Activation bytes (all activation components).
+    pub fn activation_bytes(&self) -> u64 {
+        self.ledger.group_total(ComponentGroup::Activation)
+    }
+
+    /// Communication-buffer bytes.
+    pub fn comm_buffer_bytes(&self) -> u64 {
+        self.ledger.get(Component::CommBuffer)
+    }
+
+    /// Fragmentation bytes.
+    pub fn fragmentation_bytes(&self) -> u64 {
+        self.ledger.get(Component::Fragmentation)
     }
 
     /// Grand total bytes per device.
     pub fn total_bytes(&self) -> u64 {
-        self.params_bytes
-            + self.gradient_bytes
-            + self.optimizer_bytes
-            + self.activation_bytes
-            + self.comm_buffer_bytes
-            + self.fragmentation_bytes
+        self.ledger.total()
     }
 
     /// Does this configuration fit a device with `hbm_bytes` of memory?
@@ -101,6 +141,9 @@ pub struct SweepPoint {
     pub zero: ZeroStrategy,
     pub total_bytes: u64,
     pub fits_80g: bool,
+    /// Component-tagged decomposition of `total_bytes` (the `--breakdown`
+    /// columns of the `sweep` CLI; `total_bytes` is its exact grand total).
+    pub ledger: MemoryLedger,
 }
 
 /// Sweep (b × AC × ZeRO) for a memory model — extension experiment E4.
@@ -129,12 +172,21 @@ mod tests {
         let mm = mm();
         let act = ActivationConfig::paper(1);
         let rep = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::None, Overheads::none());
-        let pgo = (rep.params_bytes + rep.gradient_bytes + rep.optimizer_bytes) as f64 / crate::GIB;
+        let pgo =
+            (rep.params_bytes() + rep.gradient_bytes() + rep.optimizer_bytes()) as f64 / crate::GIB;
         assert!((pgo - 81.5).abs() < 0.1, "{pgo}");
-        assert!(rep.activation_bytes > 0);
+        assert!(rep.activation_bytes() > 0);
         assert_eq!(
             rep.total_bytes(),
-            rep.params_bytes + rep.gradient_bytes + rep.optimizer_bytes + rep.activation_bytes
+            rep.params_bytes()
+                + rep.gradient_bytes()
+                + rep.optimizer_bytes()
+                + rep.activation_bytes()
+        );
+        assert_eq!(rep.total_bytes(), rep.ledger.total());
+        assert_eq!(
+            rep.ledger.static_bytes(),
+            rep.params_bytes() + rep.gradient_bytes() + rep.optimizer_bytes()
         );
     }
 
@@ -147,6 +199,24 @@ mod tests {
         let without = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::OsG, Overheads::none());
         let alloc = without.total_bytes();
         assert_eq!(with.total_bytes(), alloc + crate::GIB as u64 + (alloc as f64 * 0.10) as u64);
+    }
+
+    #[test]
+    fn fragmentation_base_excludes_comm_buffers() {
+        // The documented Overheads convention: the §6 fraction applies to the
+        // allocator-served bytes (P+G+O+act) only — growing the comm-buffer
+        // band must not change the fragmentation bytes.
+        let mm = mm();
+        let act = ActivationConfig::paper(1);
+        let small = Overheads { comm_buffer_bytes: 0, fragmentation: 0.15 };
+        let large = Overheads { comm_buffer_bytes: 2 * crate::GIB as u64, fragmentation: 0.15 };
+        let a = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::OsG, small);
+        let b = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::OsG, large);
+        assert_eq!(a.fragmentation_bytes(), b.fragmentation_bytes());
+        // And the helper is the single source of truth for the base.
+        let base = a.params_bytes() + a.gradient_bytes() + a.optimizer_bytes() + a.activation_bytes();
+        assert_eq!(a.fragmentation_bytes(), small.fragmentation_bytes(base));
+        assert_eq!(b.total_bytes() - a.total_bytes(), 2 * crate::GIB as u64);
     }
 
     #[test]
@@ -194,6 +264,6 @@ mod tests {
         let act = ActivationConfig::paper(1);
         let rep = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::None, Overheads::none());
         let ar = mm.activation_report(&act);
-        assert_eq!(rep.activation_bytes, ar.total_stage_bytes(act.recompute));
+        assert_eq!(rep.activation_bytes(), ar.total_stage_bytes(act.recompute));
     }
 }

@@ -14,6 +14,7 @@
 
 use super::device::DeviceStaticParams;
 use crate::config::{DtypePolicy, ParallelConfig};
+use crate::ledger::{Component, MemoryLedger};
 
 /// ZeRO strategy (paper Table 8 rows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -51,10 +52,18 @@ impl ZeroStrategy {
 }
 
 /// Memory of one ZeRO strategy, in bytes per device.
+///
+/// `params_bytes` is always exactly `params_dense_bytes + params_moe_bytes`:
+/// the dense (non-MoE, ÷DP) and MoE (÷EDP) partitions shard with different
+/// divisors, and the ledger tracks them separately.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ZeroRow {
     pub strategy: ZeroStrategy,
     pub params_bytes: u64,
+    /// Non-MoE ("dense-plane") share of `params_bytes`.
+    pub params_dense_bytes: u64,
+    /// MoE share of `params_bytes`.
+    pub params_moe_bytes: u64,
     pub gradient_bytes: u64,
     pub optimizer_bytes: u64,
 }
@@ -63,6 +72,16 @@ impl ZeroRow {
     /// The P+G+O column of Table 8.
     pub fn total_bytes(&self) -> u64 {
         self.params_bytes + self.gradient_bytes + self.optimizer_bytes
+    }
+
+    /// This row as a component-tagged ledger. Grand total equals
+    /// [`ZeroRow::total_bytes`] exactly.
+    pub fn ledger(&self) -> MemoryLedger {
+        MemoryLedger::new()
+            .with(Component::ParamsDense, self.params_dense_bytes)
+            .with(Component::ParamsMoe, self.params_moe_bytes)
+            .with(Component::Gradients, self.gradient_bytes)
+            .with(Component::OptimizerStates, self.optimizer_bytes)
     }
 }
 
@@ -79,18 +98,28 @@ pub struct ZeroReport {
 impl ZeroReport {
     pub fn build(dev: &DeviceStaticParams, p: &ParallelConfig, dt: DtypePolicy) -> Self {
         let full = dev.total_params();
-        let sharded = dev.non_moe_params() / p.dp + dev.moe_params() / p.edp();
+        let (dense, moe) = (dev.non_moe_params(), dev.moe_params());
+        let (dense_sh, moe_sh) = (dense / p.dp, moe / p.edp());
+        let sharded = dense_sh + moe_sh;
         let wb = dt.weight.bytes() as u64;
         let gb = dt.gradient.bytes() as u64;
         let ob = dt.optimizer_bytes_per_param() as u64;
 
         let rows = ZeroStrategy::ALL
             .iter()
-            .map(|&s| ZeroRow {
-                strategy: s,
-                params_bytes: if s.shards_params() { sharded * wb } else { full * wb },
-                gradient_bytes: if s.shards_gradients() { sharded * gb } else { full * gb },
-                optimizer_bytes: if s.shards_optimizer() { sharded * ob } else { full * ob },
+            .map(|&s| {
+                let (pd, pm) =
+                    if s.shards_params() { (dense_sh, moe_sh) } else { (dense, moe) };
+                ZeroRow {
+                    strategy: s,
+                    // pd + pm == full (or sharded): multiplication by the
+                    // byte width distributes, so the dense/moe split is exact.
+                    params_bytes: (pd + pm) * wb,
+                    params_dense_bytes: pd * wb,
+                    params_moe_bytes: pm * wb,
+                    gradient_bytes: if s.shards_gradients() { sharded * gb } else { full * gb },
+                    optimizer_bytes: if s.shards_optimizer() { sharded * ob } else { full * ob },
+                }
             })
             .collect();
         Self { rows, device_params: full, sharded_params: sharded }
@@ -159,6 +188,29 @@ mod tests {
         let row = r.row(ZeroStrategy::OsGParams);
         assert!((gib(row.params_bytes) - 1.38).abs() < 0.01);
         assert!((gib(row.total_bytes()) - 9.66).abs() < 0.05);
+    }
+
+    #[test]
+    fn dense_moe_split_is_exact_and_ledger_total_matches() {
+        let r = report();
+        for row in &r.rows {
+            assert_eq!(
+                row.params_bytes,
+                row.params_dense_bytes + row.params_moe_bytes,
+                "{:?}",
+                row.strategy
+            );
+            let l = row.ledger();
+            assert_eq!(l.total(), row.total_bytes(), "{:?}", row.strategy);
+            assert_eq!(l.get(Component::ParamsDense), row.params_dense_bytes);
+            assert_eq!(l.get(Component::ParamsMoe), row.params_moe_bytes);
+            assert_eq!(l.get(Component::Gradients), row.gradient_bytes);
+            assert_eq!(l.get(Component::OptimizerStates), row.optimizer_bytes);
+        }
+        // Paper numbers: sharded dense = 429,719,552/32; sharded moe = 5,820,645,376/8.
+        let z3 = r.row(ZeroStrategy::OsGParams);
+        assert_eq!(z3.params_dense_bytes, 2 * (429_719_552 / 32));
+        assert_eq!(z3.params_moe_bytes, 2 * (5_820_645_376 / 8));
     }
 
     #[test]

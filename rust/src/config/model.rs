@@ -90,6 +90,33 @@ impl ModelConfig {
         }
     }
 
+    /// DeepSeek-V2-Lite (15.7B total / 2.4B activated) — the small public
+    /// sibling of v2, from its published `config.json`. Notable differences
+    /// from v2/v3: **no query compression** (`q_lora_rank = null`, modeled
+    /// here as 0 — the MLA query path becomes one direct column-parallel
+    /// projection), 16 attention heads, 64 routed + 2 shared experts, top-6
+    /// routing, 27 layers.
+    pub fn deepseek_v2_lite() -> Self {
+        Self {
+            name: "deepseek-v2-lite".into(),
+            hidden_size: 2048,
+            moe_intermediate_size: 1408,
+            intermediate_size: 10944,
+            qk_nope_head_dim: 128,
+            num_attention_heads: 16,
+            q_lora_rank: 0, // null in the HF config: direct q projection
+            qk_rope_head_dim: 64,
+            kv_lora_rank: 512,
+            n_routed_experts: 64,
+            n_shared_experts: 2,
+            num_experts_per_tok: 6,
+            num_hidden_layers: 27,
+            first_k_dense: 1,
+            vocab_size: 102400,
+            tie_word_embeddings: false,
+        }
+    }
+
     /// The runnable mini-DeepSeek used by the live training path (`examples/
     /// train_pipeline.rs`). Same topology as v3 (MLA + shared/routed MoE, hybrid
     /// dense-first layers), scaled so a CPU-PJRT pipeline trains in minutes.
@@ -186,6 +213,18 @@ mod tests {
     fn v2_and_mini_are_valid() {
         ModelConfig::deepseek_v2().validate().unwrap();
         ModelConfig::mini().validate().unwrap();
+    }
+
+    #[test]
+    fn v2_lite_matches_published_config() {
+        let m = ModelConfig::deepseek_v2_lite();
+        m.validate().unwrap();
+        assert_eq!(m.hidden_size, 2048);
+        assert_eq!(m.q_lora_rank, 0); // no query compression
+        assert_eq!(m.num_attention_heads, 16);
+        assert_eq!(m.n_routed_experts, 64);
+        assert_eq!(m.num_moe_layers(), 26);
+        assert_eq!(m.attn_inner_dim(), 2048);
     }
 
     #[test]

@@ -1,0 +1,484 @@
+//! Component-tagged memory ledger — the common currency of the analytical
+//! model, the planner, the simulator and the reporting layer.
+//!
+//! The paper's contribution is *attribution*: explaining which component
+//! (parameters, gradients, optimizer states, activations, communication
+//! buffers, fragmentation) dominates device memory under each configuration
+//! (Tables 6/8/10, §6). Before this module, every consumer summed its own
+//! loose `u64` fields and the breakdowns could not be compared, diffed or
+//! reported uniformly. A [`MemoryLedger`] is one exact-byte vector keyed by
+//! the [`Component`] taxonomy; producers
+//! ([`crate::analysis::DeviceMemoryReport`], [`crate::planner::PlanPoint`],
+//! [`crate::sim::MemoryTimeline`]) all emit the same algebra, and
+//! [`crate::report::ledger`] renders it.
+//!
+//! All arithmetic is exact `u64` byte counts: `add`/`scale`/`merge`
+//! distribute over the component sum, so regrouping a flat total into tagged
+//! components never changes the grand total (asserted by the golden
+//! regression tests).
+
+/// Number of [`Component`] variants (array backing size of a ledger).
+pub const NUM_COMPONENTS: usize = 13;
+
+/// Number of [`ComponentGroup`] variants.
+pub const NUM_GROUPS: usize = 8;
+
+/// The memory-component taxonomy: every byte a device holds is attributed to
+/// exactly one of these.
+///
+/// The activation sub-taxonomy follows the paper's tape structure (§5):
+/// attention (MLA) tensors, MoE expert-MLP tensors and router tensors are
+/// tracked separately; dense-MLP and embedding activations are reserved tags
+/// (the paper's analysed stages are pure-MoE, and dense stages charge the
+/// attention tape only — the documented conservative convention of
+/// [`crate::sim::SimEngine`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Component {
+    /// Non-MoE ("dense-plane") weights: norms + MLA + dense FFN + embedding
+    /// + head, sharded across plain DP under ZeRO (paper Table 6 "Non-MoE").
+    ParamsDense,
+    /// MoE weights: router + experts, sharded across EDP under ZeRO
+    /// (paper Table 6 "MoE").
+    ParamsMoe,
+    /// Gradient buffers (paper Table 8 "Gradients").
+    Gradients,
+    /// Optimizer states: master copy + Adam moments (paper Table 8).
+    OptimizerStates,
+    /// MLA/attention activation tape (paper §5.1, Figure 2).
+    ActivationAttention,
+    /// Dense-MLP activation tape (reserved: dense stages are outside the
+    /// paper's analysed archetype; see the engine's documented convention).
+    ActivationDenseMlp,
+    /// MoE expert-MLP activation tape: LN2, expert and shared-expert
+    /// tensors (paper §5.2, Figure 3).
+    ActivationMoeMlp,
+    /// Router activations: logits, probabilities, top-k weights (§5.2).
+    ActivationRouter,
+    /// Embedding-layer activations (reserved, 0 in the paper's tables).
+    ActivationEmbedding,
+    /// Temporal communication buffers (paper §6: 0.8–2 GB per device).
+    CommBuffer,
+    /// Transient compute workspace (backward dgrad/wgrad scratch in the sim).
+    Workspace,
+    /// Allocator fragmentation (paper §6: 5–30% of allocated memory).
+    Fragmentation,
+    /// Inference KV cache (the serving-side extension of §1).
+    KvCache,
+}
+
+/// Coarse grouping of [`Component`]s — the paper's table-level classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ComponentGroup {
+    /// Both parameter components.
+    Params,
+    /// Gradient buffers.
+    Gradients,
+    /// Optimizer states.
+    Optimizer,
+    /// Every activation component.
+    Activation,
+    /// Communication buffers.
+    CommBuffer,
+    /// Transient workspace.
+    Workspace,
+    /// Fragmentation.
+    Fragmentation,
+    /// KV cache.
+    KvCache,
+}
+
+impl Component {
+    /// Every component, in canonical (reporting) order.
+    pub const ALL: [Component; NUM_COMPONENTS] = [
+        Component::ParamsDense,
+        Component::ParamsMoe,
+        Component::Gradients,
+        Component::OptimizerStates,
+        Component::ActivationAttention,
+        Component::ActivationDenseMlp,
+        Component::ActivationMoeMlp,
+        Component::ActivationRouter,
+        Component::ActivationEmbedding,
+        Component::CommBuffer,
+        Component::Workspace,
+        Component::Fragmentation,
+        Component::KvCache,
+    ];
+
+    /// Stable array index of this component.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Component::ParamsDense => 0,
+            Component::ParamsMoe => 1,
+            Component::Gradients => 2,
+            Component::OptimizerStates => 3,
+            Component::ActivationAttention => 4,
+            Component::ActivationDenseMlp => 5,
+            Component::ActivationMoeMlp => 6,
+            Component::ActivationRouter => 7,
+            Component::ActivationEmbedding => 8,
+            Component::CommBuffer => 9,
+            Component::Workspace => 10,
+            Component::Fragmentation => 11,
+            Component::KvCache => 12,
+        }
+    }
+
+    /// Canonical snake_case name (stable across JSON/tables/traces).
+    pub fn name(self) -> &'static str {
+        match self {
+            Component::ParamsDense => "params_dense",
+            Component::ParamsMoe => "params_moe",
+            Component::Gradients => "gradients",
+            Component::OptimizerStates => "optimizer_states",
+            Component::ActivationAttention => "activation_attention",
+            Component::ActivationDenseMlp => "activation_dense_mlp",
+            Component::ActivationMoeMlp => "activation_moe_mlp",
+            Component::ActivationRouter => "activation_router",
+            Component::ActivationEmbedding => "activation_embedding",
+            Component::CommBuffer => "comm_buffer",
+            Component::Workspace => "workspace",
+            Component::Fragmentation => "fragmentation",
+            Component::KvCache => "kv_cache",
+        }
+    }
+
+    /// The coarse group this component reports under.
+    pub fn group(self) -> ComponentGroup {
+        match self {
+            Component::ParamsDense | Component::ParamsMoe => ComponentGroup::Params,
+            Component::Gradients => ComponentGroup::Gradients,
+            Component::OptimizerStates => ComponentGroup::Optimizer,
+            Component::ActivationAttention
+            | Component::ActivationDenseMlp
+            | Component::ActivationMoeMlp
+            | Component::ActivationRouter
+            | Component::ActivationEmbedding => ComponentGroup::Activation,
+            Component::CommBuffer => ComponentGroup::CommBuffer,
+            Component::Workspace => ComponentGroup::Workspace,
+            Component::Fragmentation => ComponentGroup::Fragmentation,
+            Component::KvCache => ComponentGroup::KvCache,
+        }
+    }
+}
+
+impl ComponentGroup {
+    /// Every group, in canonical (reporting) order.
+    pub const ALL: [ComponentGroup; NUM_GROUPS] = [
+        ComponentGroup::Params,
+        ComponentGroup::Gradients,
+        ComponentGroup::Optimizer,
+        ComponentGroup::Activation,
+        ComponentGroup::CommBuffer,
+        ComponentGroup::Workspace,
+        ComponentGroup::Fragmentation,
+        ComponentGroup::KvCache,
+    ];
+
+    /// Stable array index of this group.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            ComponentGroup::Params => 0,
+            ComponentGroup::Gradients => 1,
+            ComponentGroup::Optimizer => 2,
+            ComponentGroup::Activation => 3,
+            ComponentGroup::CommBuffer => 4,
+            ComponentGroup::Workspace => 5,
+            ComponentGroup::Fragmentation => 6,
+            ComponentGroup::KvCache => 7,
+        }
+    }
+
+    /// Canonical snake_case name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ComponentGroup::Params => "params",
+            ComponentGroup::Gradients => "gradients",
+            ComponentGroup::Optimizer => "optimizer",
+            ComponentGroup::Activation => "activations",
+            ComponentGroup::CommBuffer => "comm_buffers",
+            ComponentGroup::Workspace => "workspace",
+            ComponentGroup::Fragmentation => "fragmentation",
+            ComponentGroup::KvCache => "kv_cache",
+        }
+    }
+}
+
+/// Exact per-component byte accounting for one device.
+///
+/// A plain value type (13 `u64`s, `Copy`): cheap to snapshot, compare and
+/// thread through the planner's parallel evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MemoryLedger {
+    bytes: [u64; NUM_COMPONENTS],
+}
+
+impl MemoryLedger {
+    /// The empty ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes attributed to `c`.
+    #[inline]
+    pub fn get(&self, c: Component) -> u64 {
+        self.bytes[c.index()]
+    }
+
+    /// Overwrite the bytes attributed to `c`.
+    #[inline]
+    pub fn set(&mut self, c: Component, bytes: u64) {
+        self.bytes[c.index()] = bytes;
+    }
+
+    /// Add bytes to `c`.
+    #[inline]
+    pub fn add(&mut self, c: Component, bytes: u64) {
+        self.bytes[c.index()] += bytes;
+    }
+
+    /// Subtract bytes from `c` (debug-asserts no underflow — an accounting bug).
+    #[inline]
+    pub fn sub(&mut self, c: Component, bytes: u64) {
+        let cur = self.bytes[c.index()];
+        debug_assert!(cur >= bytes, "ledger underflow: {} - {bytes} on {}", cur, c.name());
+        self.bytes[c.index()] = cur.saturating_sub(bytes);
+    }
+
+    /// Builder-style `set`.
+    pub fn with(mut self, c: Component, bytes: u64) -> Self {
+        self.set(c, bytes);
+        self
+    }
+
+    /// Component-wise addition of another ledger into this one.
+    pub fn merge(&mut self, other: &MemoryLedger) {
+        for i in 0..NUM_COMPONENTS {
+            self.bytes[i] += other.bytes[i];
+        }
+    }
+
+    /// Component-wise sum, by value.
+    pub fn merged(mut self, other: &MemoryLedger) -> Self {
+        self.merge(other);
+        self
+    }
+
+    /// Every component multiplied by `k` (exact; `scale(L)` of a per-layer
+    /// tape is the stage tape).
+    pub fn scale(&self, k: u64) -> Self {
+        let mut out = *self;
+        for b in &mut out.bytes {
+            *b *= k;
+        }
+        out
+    }
+
+    /// Every component integer-divided by `k` (the per-unit tape of a
+    /// schedule with `k` units per microbatch). `k` must be non-zero.
+    pub fn div(&self, k: u64) -> Self {
+        let mut out = *self;
+        for b in &mut out.bytes {
+            *b /= k;
+        }
+        out
+    }
+
+    /// Grand total bytes across all components.
+    pub fn total(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    /// Total bytes of one coarse group.
+    pub fn group_total(&self, g: ComponentGroup) -> u64 {
+        Component::ALL
+            .iter()
+            .filter(|c| c.group() == g)
+            .map(|&c| self.get(c))
+            .sum()
+    }
+
+    /// Static (params + gradients + optimizer) bytes — the paper's "P+G+O".
+    pub fn static_bytes(&self) -> u64 {
+        self.group_total(ComponentGroup::Params)
+            + self.group_total(ComponentGroup::Gradients)
+            + self.group_total(ComponentGroup::Optimizer)
+    }
+
+    /// True if every component is zero.
+    pub fn is_empty(&self) -> bool {
+        self.bytes.iter().all(|&b| b == 0)
+    }
+
+    /// Iterate `(component, bytes)` in canonical order (zeros included).
+    pub fn iter(&self) -> impl Iterator<Item = (Component, u64)> + '_ {
+        Component::ALL.iter().map(move |&c| (c, self.get(c)))
+    }
+
+    /// The non-zero entries, in canonical order.
+    pub fn nonzero(&self) -> Vec<(Component, u64)> {
+        self.iter().filter(|&(_, b)| b > 0).collect()
+    }
+
+    /// Component-wise signed difference `self − other`.
+    pub fn diff(&self, other: &MemoryLedger) -> LedgerDiff {
+        let mut deltas = [0i128; NUM_COMPONENTS];
+        for i in 0..NUM_COMPONENTS {
+            deltas[i] = self.bytes[i] as i128 - other.bytes[i] as i128;
+        }
+        LedgerDiff { deltas }
+    }
+}
+
+/// Component-wise signed difference between two ledgers — the "what changed
+/// between these two configurations?" primitive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LedgerDiff {
+    deltas: [i128; NUM_COMPONENTS],
+}
+
+impl LedgerDiff {
+    /// Signed byte delta of `c`.
+    pub fn get(&self, c: Component) -> i128 {
+        self.deltas[c.index()]
+    }
+
+    /// Signed grand-total delta.
+    pub fn total(&self) -> i128 {
+        self.deltas.iter().sum()
+    }
+
+    /// True if no component changed.
+    pub fn is_zero(&self) -> bool {
+        self.deltas.iter().all(|&d| d == 0)
+    }
+
+    /// The non-zero entries, in canonical order.
+    pub fn nonzero(&self) -> Vec<(Component, i128)> {
+        Component::ALL
+            .iter()
+            .map(|&c| (c, self.get(c)))
+            .filter(|&(_, d)| d != 0)
+            .collect()
+    }
+
+    /// One-line human rendering, e.g. `params_dense +1024 B, gradients -512 B`.
+    pub fn render(&self) -> String {
+        if self.is_zero() {
+            return "(no change)".into();
+        }
+        self.nonzero()
+            .iter()
+            .map(|(c, d)| format!("{} {}{} B", c.name(), if *d >= 0 { "+" } else { "" }, d))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taxonomy_is_consistent() {
+        assert_eq!(Component::ALL.len(), NUM_COMPONENTS);
+        assert_eq!(ComponentGroup::ALL.len(), NUM_GROUPS);
+        // Indices are a bijection onto 0..N in ALL order.
+        for (i, c) in Component::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+        }
+        for (i, g) in ComponentGroup::ALL.iter().enumerate() {
+            assert_eq!(g.index(), i);
+        }
+        // Names are unique.
+        let names: std::collections::HashSet<&str> =
+            Component::ALL.iter().map(|c| c.name()).collect();
+        assert_eq!(names.len(), NUM_COMPONENTS);
+    }
+
+    #[test]
+    fn add_scale_merge_are_exact() {
+        let mut a = MemoryLedger::new();
+        a.add(Component::ParamsDense, 100);
+        a.add(Component::ParamsDense, 23);
+        a.set(Component::Gradients, 7);
+        assert_eq!(a.get(Component::ParamsDense), 123);
+        assert_eq!(a.total(), 130);
+
+        let b = a.scale(4);
+        assert_eq!(b.get(Component::ParamsDense), 492);
+        assert_eq!(b.total(), 4 * a.total());
+
+        let c = a.merged(&b);
+        assert_eq!(c.total(), 5 * a.total());
+        assert_eq!(c.get(Component::Gradients), 35);
+    }
+
+    #[test]
+    fn div_is_component_wise() {
+        let a = MemoryLedger::new()
+            .with(Component::ActivationAttention, 10)
+            .with(Component::ActivationRouter, 3);
+        let d = a.div(2);
+        assert_eq!(d.get(Component::ActivationAttention), 5);
+        assert_eq!(d.get(Component::ActivationRouter), 1);
+        // Component-wise division can round below total-then-divide: that is
+        // the sim/planner's shared convention for unit tapes.
+        assert_eq!(d.total(), 6);
+        assert_eq!(a.total() / 2, 6);
+    }
+
+    #[test]
+    fn group_totals_partition_the_ledger() {
+        let mut l = MemoryLedger::new();
+        for (i, c) in Component::ALL.iter().enumerate() {
+            l.set(*c, (i as u64 + 1) * 10);
+        }
+        let by_groups: u64 = ComponentGroup::ALL.iter().map(|&g| l.group_total(g)).sum();
+        assert_eq!(by_groups, l.total());
+        assert_eq!(
+            l.group_total(ComponentGroup::Params),
+            l.get(Component::ParamsDense) + l.get(Component::ParamsMoe)
+        );
+        assert_eq!(
+            l.static_bytes(),
+            l.group_total(ComponentGroup::Params)
+                + l.get(Component::Gradients)
+                + l.get(Component::OptimizerStates)
+        );
+    }
+
+    #[test]
+    fn diff_reports_signed_deltas() {
+        let a = MemoryLedger::new().with(Component::ParamsDense, 100).with(Component::KvCache, 5);
+        let b = MemoryLedger::new().with(Component::ParamsDense, 80).with(Component::Gradients, 9);
+        let d = a.diff(&b);
+        assert_eq!(d.get(Component::ParamsDense), 20);
+        assert_eq!(d.get(Component::Gradients), -9);
+        assert_eq!(d.get(Component::KvCache), 5);
+        assert_eq!(d.total(), 16);
+        assert!(!d.is_zero());
+        assert!(a.diff(&a).is_zero());
+        assert_eq!(a.diff(&a).render(), "(no change)");
+        assert!(d.render().contains("params_dense +20"));
+        assert!(d.render().contains("gradients -9"));
+    }
+
+    #[test]
+    fn nonzero_skips_empty_components() {
+        let l = MemoryLedger::new().with(Component::CommBuffer, 1);
+        assert_eq!(l.nonzero(), vec![(Component::CommBuffer, 1)]);
+        assert!(MemoryLedger::new().is_empty());
+        assert!(!l.is_empty());
+    }
+
+    #[test]
+    fn sub_mirrors_add() {
+        let mut l = MemoryLedger::new();
+        l.add(Component::Workspace, 64);
+        l.sub(Component::Workspace, 24);
+        assert_eq!(l.get(Component::Workspace), 40);
+    }
+}

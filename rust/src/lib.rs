@@ -31,6 +31,12 @@
 //!    (peak memory, pipeline bubble, per-device parameters). Every "what fits?"
 //!    question — *which schedule* included — is one planner query.
 //!
+//! All three memory-producing pillars speak one algebra: the component-tagged
+//! [`ledger::MemoryLedger`] (params dense/MoE, gradients, optimizer states,
+//! per-block activations, comm buffers, fragmentation, KV cache), rendered by
+//! [`report::ledger`] and asserted consistent between the analytic and
+//! simulated sides per component by the integration tests.
+//!
 //! ## Quickstart
 //!
 //! (`no_run`: doctest binaries don't inherit the `-Wl,-rpath` pointing at
@@ -53,6 +59,7 @@ pub mod analysis;
 pub mod config;
 #[cfg(feature = "live")]
 pub mod coordinator;
+pub mod ledger;
 pub mod model;
 pub mod parallel;
 pub mod planner;

@@ -3,20 +3,22 @@
 //! Subcommands (hand-rolled arg parsing; the build is fully offline):
 //! * `tables`    — regenerate the paper's tables (1..=10) from the model;
 //! * `analyze`   — architecture diagram, activation tapes, device breakdown;
+//! * `report`    — the per-device memory ledger (component breakdown);
 //! * `plan`      — search the full parallel-configuration grid for what fits;
 //! * `sweep`     — (b × AC × ZeRO) feasibility sweep against an HBM budget;
 //! * `simulate`  — run the cluster memory simulator over a schedule;
 //! * `train`     — run the live mini pipeline training loop (needs artifacts
 //!   and the `live` cargo feature).
 //!
-//! `plan`, `sweep` and `bubble` all route through [`dsmem::planner`].
+//! `plan`, `sweep` and `bubble` all route through [`dsmem::planner`];
+//! `report` and the `--breakdown` flags render [`dsmem::ledger`] ledgers.
 
-use dsmem::analysis::{MemoryModel, Overheads, ZeroStrategy};
-use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
+use dsmem::analysis::{MemoryModel, Overheads, StageSplit, ZeroStrategy};
+use dsmem::config::{ActivationConfig, CaseStudy, ParallelConfig, RecomputePolicy};
 use dsmem::planner::{self, PlanQuery, SearchSpace};
-use dsmem::report::{fmt_bytes, gib, tables::paper_table};
+use dsmem::report::{fmt_bytes, gib, ledger_table, tables::paper_table};
 use dsmem::schedule::ScheduleSpec;
-use dsmem::sim::SimEngine;
+use dsmem::sim::{ComponentGroup, SimEngine};
 use std::collections::HashMap;
 
 const USAGE: &str = "\
@@ -27,14 +29,18 @@ USAGE: dsmem <COMMAND> [OPTIONS]
 COMMANDS:
   tables     Print the paper's tables        [--table N] [--model M] [--format text|markdown|csv]
   analyze    Diagrams & tapes                [--arch] [--tape mla|moe] [--micro-batch B] [--model M]
+  report     Per-device memory ledger        [--zero Z] [--recompute none|selective|full]
+             (component breakdown)           [--micro-batch B] [--model M] [--breakdown]
+                                             [--no-overheads] [--json]
   plan       Rank parallel configurations    [--hbm-gib G] [--world W] [--top-k K] [--json]
              and pipeline schedules that     [--microbatches M] [--model M] [--frontier-only]
              fit a device budget             [--schedule all|gpipe|1f1b|interleaved[:v]|dualpipe|zb-h1]
-                                             [--pp P]
-  sweep      Feasibility sweep               [--hbm-gib G] [--model M]
+                                             [--pp P] [--split front|balanced|N,N,...] [--breakdown]
+  sweep      Feasibility sweep               [--hbm-gib G] [--model M] [--breakdown]
+                                             [--split front|balanced|N,N,...]
   simulate   Cluster memory simulation       [--schedule gpipe|1f1b|interleaved|dualpipe|zb-h1]
              [--microbatches M] [--micro-batch B] [--chunks V] [--recompute] [--frag]
-             [--zero none|os|os_g|os_g_params] [--trace FILE.json] [--model M]
+             [--zero none|os|os_g|os_g_params] [--trace FILE.json] [--model M] [--breakdown]
   kvcache    Inference KV-cache analysis     [--tokens N] [--model M]  (MLA vs MHA vs GQA)
   bubble     Pipeline bubble-vs-memory sweep [--pp P] [--model M]
   train      Live mini pipeline training     [--artifacts DIR] [--steps N] [--dp D]
@@ -42,7 +48,7 @@ COMMANDS:
              (requires building with --features live)
   help       Show this message
 
-Model presets: deepseek-v3 (default) | deepseek-v2 | mini
+Model presets: deepseek-v3|v3 (default) | deepseek-v2|v2 | deepseek-v2-lite|v2-lite | mini
 ";
 
 /// Tiny flag parser: `--key value` and boolean `--key`.
@@ -103,11 +109,21 @@ impl Args {
 fn case_study(model: &str) -> anyhow::Result<CaseStudy> {
     let mut cs = CaseStudy::paper();
     match model {
-        "deepseek-v3" => {}
-        "deepseek-v2" => cs.model = dsmem::config::ModelConfig::deepseek_v2(),
+        "deepseek-v3" | "v3" => {}
+        "deepseek-v2" | "v2" => {
+            cs.model = dsmem::config::ModelConfig::deepseek_v2();
+            // 60 layers front-loaded over PP16 would leave stage 15 empty;
+            // PP10 (6 layers per stage) is v2's natural even split.
+            cs.parallel = ParallelConfig { dp: 16, tp: 2, pp: 10, ep: 8, etp: 1 };
+        }
+        "deepseek-v2-lite" | "v2-lite" => {
+            cs.model = dsmem::config::ModelConfig::deepseek_v2_lite();
+            // 27 layers → PP9 (3 per stage); EP8 divides the 64 experts.
+            cs.parallel = ParallelConfig { dp: 8, tp: 2, pp: 9, ep: 8, etp: 1 };
+        }
         "mini" => {
             cs.model = dsmem::config::ModelConfig::mini();
-            cs.parallel = dsmem::config::ParallelConfig { dp: 1, tp: 1, pp: 2, ep: 1, etp: 1 };
+            cs.parallel = ParallelConfig { dp: 1, tp: 1, pp: 2, ep: 1, etp: 1 };
             cs.activation.sp = 1;
             cs.activation.seq_len = 128;
         }
@@ -124,6 +140,35 @@ fn zero_of(s: &str) -> anyhow::Result<ZeroStrategy> {
         "os_g" => ZeroStrategy::OsG,
         "os_g_params" => ZeroStrategy::OsGParams,
         other => anyhow::bail!("unknown zero strategy: {other}"),
+    })
+}
+
+fn recompute_of(s: &str) -> anyhow::Result<RecomputePolicy> {
+    Ok(match s {
+        "none" => RecomputePolicy::None,
+        "selective" => RecomputePolicy::SelectiveAttention,
+        "full" => RecomputePolicy::Full,
+        other => anyhow::bail!("recompute must be none|selective|full, got {other}"),
+    })
+}
+
+/// Parse a `--split` spelling: `front`, `balanced`, or explicit per-stage
+/// layer counts `N,N,...`.
+fn split_of(s: &str) -> anyhow::Result<StageSplit> {
+    Ok(match s {
+        "front" | "front-loaded" => StageSplit::FrontLoaded,
+        "balanced" => StageSplit::Balanced,
+        spec => {
+            let counts: Vec<u64> = spec
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<u64>()
+                        .map_err(|e| anyhow::anyhow!("bad --split entry {x:?}: {e}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+            StageSplit::Custom(counts)
+        }
     })
 }
 
@@ -202,7 +247,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "plan" => {
-            let a = Args::parse(rest, &["json", "frontier-only"])?;
+            let a = Args::parse(rest, &["json", "frontier-only", "breakdown"])?;
             let cs = case_study(&a.get("model", "deepseek-v3"))?;
             let hbm_gib = a.get_f64("hbm-gib", 80.0)?;
             let world = a.get_u64("world", cs.parallel.world_size())?;
@@ -211,6 +256,26 @@ fn main() -> anyhow::Result<()> {
             space.cp = cs.activation.cp;
             if a.has("pp") {
                 space.pp = vec![a.get_u64("pp", 16)?];
+            }
+            if let Some(s) = a.opt("split") {
+                // PP degrees the split cannot serve are pruned by the space's
+                // validity predicate; a Custom split pins PP to its length.
+                // A split no PP in the space can serve would silently produce
+                // an empty table — reject it with a readable error instead.
+                let split = split_of(s)?;
+                if !space
+                    .pp
+                    .iter()
+                    .any(|&pp| split.layer_counts(cs.model.num_hidden_layers, pp).is_ok())
+                {
+                    anyhow::bail!(
+                        "--split {s} cannot serve any PP degree in the search space \
+                         for {} layers (custom splits must sum to the layer count \
+                         and match a PP in the space)",
+                        cs.model.num_hidden_layers
+                    );
+                }
+                space.split = split;
             }
             let m_step = a.get_u64("microbatches", 32)?;
             // Schedule axis: all registered schedules by default; a named
@@ -246,34 +311,86 @@ fn main() -> anyhow::Result<()> {
                     res.feasible_count,
                     gib(res.hbm_bytes),
                 );
+                let breakdown = a.has("breakdown");
                 if !a.has("frontier-only") {
-                    print!("{}", planner::report::ranking_table(&res).render());
+                    print!("{}", planner::report::ranking_table_opts(&res, breakdown).render());
                     println!();
                 }
-                print!("{}", planner::report::frontier_table(&res).render());
+                print!("{}", planner::report::frontier_table_opts(&res, breakdown).render());
             }
         }
         "sweep" => {
-            let a = Args::parse(rest, &[])?;
+            let a = Args::parse(rest, &["breakdown"])?;
             let cs = case_study(&a.get("model", "deepseek-v3"))?;
             let hbm_gib = a.get_f64("hbm-gib", 80.0)?;
-            let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+            let mut mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+            if let Some(s) = a.opt("split") {
+                let split = split_of(s)?;
+                // Reject invalid splits here with a readable error instead of
+                // panicking inside the stage-plan builder.
+                split.layer_counts(cs.model.num_hidden_layers, cs.parallel.pp)?;
+                mm = mm.with_split(split);
+            }
             let pts = planner::sweep_fixed(&mm, &cs.activation, Overheads::paper_midpoint());
             let budget = (hbm_gib * dsmem::GIB) as u64;
+            // Default columns are bit-identical to the historical sweep
+            // output; --breakdown appends per-component GiB columns.
+            let breakdown = a.has("breakdown");
+            let mut headers = vec!["b", "recompute", "ZeRO", "total", "fits"];
+            if breakdown {
+                headers.extend(dsmem::report::ledger::BREAKDOWN_HEADERS);
+            }
             let mut t = dsmem::report::Table::new(
                 format!("Feasibility sweep vs {hbm_gib} GiB"),
-                &["b", "recompute", "ZeRO", "total", "fits"],
+                &headers,
             );
             for p in pts {
-                t.row(vec![
+                let mut row = vec![
                     p.micro_batch.to_string(),
                     p.recompute.name().into(),
                     p.zero.name().into(),
                     fmt_bytes(p.total_bytes),
                     if p.total_bytes <= budget { "yes".into() } else { "NO".into() },
-                ]);
+                ];
+                if breakdown {
+                    row.extend(dsmem::report::ledger::breakdown_cells(&p.ledger));
+                }
+                t.row(row);
             }
             print!("{}", t.render());
+        }
+        "report" => {
+            let a = Args::parse(rest, &["json", "breakdown", "no-overheads"])?;
+            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+            let act = ActivationConfig {
+                micro_batch: a.get_u64("micro-batch", 1)?,
+                recompute: recompute_of(&a.get("recompute", "none"))?,
+                ..cs.activation
+            };
+            let zero = zero_of(&a.get("zero", "none"))?;
+            let ov = if a.has("no-overheads") {
+                Overheads::none()
+            } else {
+                Overheads::paper_midpoint()
+            };
+            let rep = mm.device_memory(&act, zero, ov);
+            if a.has("json") {
+                println!("{}", dsmem::report::ledger_json(&rep.ledger).dump());
+            } else {
+                let t = ledger_table(
+                    format!(
+                        "Per-device memory ledger: {} (ZeRO {}, AC {}, b={})",
+                        cs.model.name,
+                        zero.name(),
+                        act.recompute.name(),
+                        act.micro_batch,
+                    ),
+                    &rep.ledger,
+                    a.has("breakdown"),
+                );
+                print!("{}", t.render());
+            }
         }
         "kvcache" => {
             let a = Args::parse(rest, &[])?;
@@ -311,7 +428,7 @@ fn main() -> anyhow::Result<()> {
             print!("{}", t.render());
         }
         "simulate" => {
-            let a = Args::parse(rest, &["recompute", "frag"])?;
+            let a = Args::parse(rest, &["recompute", "frag", "breakdown"])?;
             let cs = case_study(&a.get("model", "deepseek-v3"))?;
             let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
             let mut act = ActivationConfig {
@@ -346,7 +463,7 @@ fn main() -> anyhow::Result<()> {
                     format!("{:.2} GiB", gib(st.timeline.total_peak())),
                     format!(
                         "{:.2} GiB",
-                        gib(st.timeline.peak(dsmem::sim::MemClass::Activations))
+                        gib(st.timeline.group_peak(ComponentGroup::Activation))
                     ),
                     st.alloc_stats
                         .map(|x| format!("{:.1}%", 100.0 * x.fragmentation()))
@@ -354,6 +471,25 @@ fn main() -> anyhow::Result<()> {
                 ]);
             }
             print!("{}", t.render());
+            if a.has("breakdown") {
+                // The snapshot AT the total peak: its total row equals the
+                // "peak total" column above exactly (per-component maxima
+                // would over-count transients that are never co-resident).
+                let worst = res.peak_stage();
+                println!();
+                print!(
+                    "{}",
+                    ledger_table(
+                        format!(
+                            "Peak-stage component breakdown (stage {}, at the replayed total peak)",
+                            worst.stage
+                        ),
+                        &worst.timeline.ledger_at_total_peak(),
+                        true,
+                    )
+                    .render()
+                );
+            }
         }
         #[cfg(feature = "live")]
         "train" => {

@@ -10,6 +10,11 @@ use super::{CountMode, ParamMatrix, TpSplit};
 use crate::config::ModelConfig;
 
 /// All MLA weight matrices for one layer, in paper order (Table 2).
+///
+/// Models without query compression (`q_lora_rank = 0`, e.g.
+/// DeepSeek-V2-Lite) replace the three-query-matrix LoRA path with one
+/// direct column-parallel projection `W^Q: [(d_h + d_hr)·n_h, h]`, exactly
+/// as the HF implementation does when `q_lora_rank` is null.
 pub fn matrices(m: &ModelConfig) -> Vec<ParamMatrix> {
     let h = m.hidden_size;
     let dh_nh = m.attn_inner_dim();
@@ -17,11 +22,18 @@ pub fn matrices(m: &ModelConfig) -> Vec<ParamMatrix> {
     let dhr = m.qk_rope_head_dim;
     let dc = m.kv_lora_rank;
     let nh = m.num_attention_heads;
-    vec![
+    let mut mats = Vec::with_capacity(8);
+    if dcq > 0 {
         // Query path: h --DQ--> d_cq --UQ/QR--> heads.
-        ParamMatrix::new("W^DQ", vec![dcq, h], TpSplit::Replicated),
-        ParamMatrix::new("W^UQ", vec![dh_nh, dcq], TpSplit::Column),
-        ParamMatrix::new("W^QR", vec![dhr * nh, dcq], TpSplit::Column),
+        mats.push(ParamMatrix::new("W^DQ", vec![dcq, h], TpSplit::Replicated));
+        mats.push(ParamMatrix::new("W^UQ", vec![dh_nh, dcq], TpSplit::Column));
+        mats.push(ParamMatrix::new("W^QR", vec![dhr * nh, dcq], TpSplit::Column));
+    } else {
+        // No query compression: one direct head-sharded projection covering
+        // both the nope and rope halves of q.
+        mats.push(ParamMatrix::new("W^Q", vec![(m.qk_nope_head_dim + dhr) * nh, h], TpSplit::Column));
+    }
+    mats.extend([
         // KV path: h --DKV--> d_c --UK/UV--> heads; rope-k straight from h.
         ParamMatrix::new("W^DKV", vec![dc, h], TpSplit::Replicated),
         ParamMatrix::new("W^UK", vec![dh_nh, dc], TpSplit::Column),
@@ -29,7 +41,8 @@ pub fn matrices(m: &ModelConfig) -> Vec<ParamMatrix> {
         ParamMatrix::new("W^UV", vec![dh_nh, dc], TpSplit::Column),
         // Output projection.
         ParamMatrix::new("W^O", vec![h, dh_nh], TpSplit::Row),
-    ]
+    ]);
+    mats
 }
 
 /// Parameters of the q/kv LoRA layernorms (`q_lora_rank + kv_lora_rank`),
@@ -62,8 +75,9 @@ pub fn params_per_tp_rank(m: &ModelConfig, tp: u64) -> u64 {
     matrices(m)
         .iter()
         .map(|mat| match mat.name {
-            // Paper §3.2 split set: W^UQ, W^UK, W^UV, W^O.
-            "W^UQ" | "W^UK" | "W^UV" | "W^O" => mat.numel() / tp,
+            // Paper §3.2 split set: W^UQ, W^UK, W^UV, W^O (plus the direct
+            // W^Q of compression-free models, which is column-parallel).
+            "W^Q" | "W^UQ" | "W^UK" | "W^UV" | "W^O" => mat.numel() / tp,
             _ => mat.numel(),
         })
         .sum()
@@ -113,5 +127,31 @@ mod tests {
     fn tp1_equals_strict_total() {
         let m = ModelConfig::deepseek_v3();
         assert_eq!(params_per_tp_rank(&m, 1), params_per_layer(&m, CountMode::Strict));
+    }
+
+    #[test]
+    fn v2_lite_direct_q_projection() {
+        // q_lora_rank = 0 → one W^Q [(d_h + d_hr)·n_h, h], no LoRA query path.
+        let m = ModelConfig::deepseek_v2_lite();
+        let mats = matrices(&m);
+        assert_eq!(mats.len(), 6);
+        assert!(mats.iter().all(|x| x.name != "W^DQ" && x.name != "W^UQ" && x.name != "W^QR"));
+        let q = mats.iter().find(|x| x.name == "W^Q").unwrap();
+        assert_eq!(q.shape, vec![(128 + 64) * 16, 2048]);
+        // Per-layer strict total: W^Q + DKV + UK + KR + UV + O.
+        let expected = (128 + 64) * 16 * 2048 // W^Q
+            + 512 * 2048                      // W^DKV
+            + 2048 * 512                      // W^UK
+            + 64 * 2048                       // W^KR
+            + 2048 * 512                      // W^UV
+            + 2048 * 2048; // W^O
+        assert_eq!(params_per_layer(&m, CountMode::Strict), expected);
+        // Only the kv LoRA norm exists (no q norm when d_cq = 0).
+        assert_eq!(lora_norm_params(&m), 512);
+        // W^Q splits across TP like the other projections.
+        assert_eq!(
+            params_per_tp_rank(&m, 2),
+            expected - (q.numel() + 2048 * 512 * 2 + 2048 * 2048) / 2
+        );
     }
 }

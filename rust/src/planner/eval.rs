@@ -33,13 +33,15 @@ use crate::analysis::total::{DeviceMemoryReport, Overheads, SweepPoint};
 use crate::analysis::zero::{ZeroReport, ZeroStrategy};
 use crate::analysis::MemoryModel;
 use crate::config::{ActivationConfig, DtypePolicy, ModelConfig, ParallelConfig, RecomputePolicy};
+use crate::ledger::{Component, ComponentGroup, MemoryLedger};
 use crate::model::CountMode;
 use crate::schedule::ScheduleSpec;
 
-/// One evaluated configuration: the memory decomposition of
+/// One evaluated configuration: the component-tagged memory ledger of
 /// [`crate::analysis::DeviceMemoryReport`] scaled by the schedule's in-flight
 /// counts, plus the layout, the per-device parameter count and the
-/// schedule's pipeline-bubble fraction.
+/// schedule's pipeline-bubble fraction. The flat byte fields of the
+/// pre-ledger struct survive as accessor methods with identical semantics.
 #[derive(Debug, Clone)]
 pub struct PlanPoint {
     pub parallel: ParallelConfig,
@@ -51,30 +53,61 @@ pub struct PlanPoint {
     /// Static parameters held per device (heaviest stage, unsharded, times
     /// the schedule's replica multiplier).
     pub device_params: u64,
-    pub params_bytes: u64,
-    pub gradient_bytes: u64,
-    pub optimizer_bytes: u64,
-    /// Activation bytes at the analysed stage's schedule-derived peak:
-    /// per-unit tape × analytic in-flight units.
-    pub activation_bytes: u64,
-    pub comm_buffer_bytes: u64,
-    pub fragmentation_bytes: u64,
-    /// Grand total bytes per device (same composition as `DeviceMemoryReport`).
-    pub total_bytes: u64,
+    /// Component-tagged memory decomposition; `total_bytes()` is its grand
+    /// total. Activation components carry the schedule-derived peak:
+    /// per-unit tape × analytic in-flight units, component-wise — the same
+    /// arithmetic the sim engine replays (asserted per component by
+    /// `integration_sim.rs`).
+    pub ledger: MemoryLedger,
     /// Bubble fraction of this point's schedule at the evaluator's
     /// microbatch count.
     pub bubble: f64,
 }
 
 impl PlanPoint {
+    /// Parameter bytes (dense + MoE, times the schedule's replica multiplier).
+    pub fn params_bytes(&self) -> u64 {
+        self.ledger.group_total(ComponentGroup::Params)
+    }
+
+    /// Gradient bytes.
+    pub fn gradient_bytes(&self) -> u64 {
+        self.ledger.get(Component::Gradients)
+    }
+
+    /// Optimizer-state bytes.
+    pub fn optimizer_bytes(&self) -> u64 {
+        self.ledger.get(Component::OptimizerStates)
+    }
+
+    /// Activation bytes at the schedule-derived peak (all components).
+    pub fn activation_bytes(&self) -> u64 {
+        self.ledger.group_total(ComponentGroup::Activation)
+    }
+
+    /// Communication-buffer bytes.
+    pub fn comm_buffer_bytes(&self) -> u64 {
+        self.ledger.get(Component::CommBuffer)
+    }
+
+    /// Fragmentation bytes.
+    pub fn fragmentation_bytes(&self) -> u64 {
+        self.ledger.get(Component::Fragmentation)
+    }
+
+    /// Grand total bytes per device (same composition as `DeviceMemoryReport`).
+    pub fn total_bytes(&self) -> u64 {
+        self.ledger.total()
+    }
+
     /// Static (P+G+O) bytes per device.
     pub fn static_bytes(&self) -> u64 {
-        self.params_bytes + self.gradient_bytes + self.optimizer_bytes
+        self.ledger.static_bytes()
     }
 
     /// Does this configuration fit a device with `hbm_bytes` of memory?
     pub fn fits(&self, hbm_bytes: u64) -> bool {
-        self.total_bytes <= hbm_bytes
+        self.total_bytes() <= hbm_bytes
     }
 }
 
@@ -186,8 +219,9 @@ impl<'a> Evaluator<'a> {
     /// `DeviceMemoryReport::build(...)` on an equivalent `MemoryModel`
     /// (params scaled by the schedule's replica multiplier); activations are
     /// the per-unit tape times the schedule's analytic in-flight count at
-    /// the analysed (heaviest-parameter) stage — the same arithmetic the sim
-    /// engine replays op by op (the E2 bridge, asserted by integration test).
+    /// the analysed (heaviest-parameter) stage, computed *component-wise* —
+    /// the same arithmetic the sim engine replays op by op (the E2 bridge,
+    /// asserted per ledger component by the integration tests).
     pub fn evaluate(&self, c: &Candidate) -> PlanPoint {
         let plan = self.plan_for(c.parallel.pp);
         let prof = self.schedule_profile(c.schedule, c.parallel.pp);
@@ -207,14 +241,25 @@ impl<'a> Evaluator<'a> {
             &c.act,
             plan.stages[heaviest].num_layers,
         );
-        let params_bytes = prof.param_multiplier * row.params_bytes;
         let inflight_units = prof.inflight_units[heaviest];
-        let activation_bytes = (ar.total_stage_bytes(c.act.recompute)
-            / prof.units_per_microbatch)
-            * inflight_units;
-        let allocated =
-            params_bytes + row.gradient_bytes + row.optimizer_bytes + activation_bytes;
-        let fragmentation_bytes = (allocated as f64 * self.overheads.fragmentation) as u64;
+        // Params carry the schedule's replica multiplier (exact: the dense
+        // and MoE shares scale independently and re-sum to mult × total).
+        let mut ledger = MemoryLedger::new()
+            .with(Component::ParamsDense, prof.param_multiplier * row.params_dense_bytes)
+            .with(Component::ParamsMoe, prof.param_multiplier * row.params_moe_bytes)
+            .with(Component::Gradients, row.gradient_bytes)
+            .with(Component::OptimizerStates, row.optimizer_bytes);
+        // Activation peak, component-wise: each component's stage tape is
+        // divided into the schedule's units and multiplied by the analytic
+        // in-flight count — mirroring the sim engine's per-unit allocations.
+        ledger.merge(
+            &ar.stage_ledger(c.act.recompute)
+                .div(prof.units_per_microbatch)
+                .scale(inflight_units),
+        );
+        let allocated = ledger.total();
+        ledger.set(Component::CommBuffer, self.overheads.comm_buffer_bytes);
+        ledger.set(Component::Fragmentation, self.overheads.fragmentation_bytes(allocated));
         PlanPoint {
             parallel: c.parallel,
             micro_batch: c.act.micro_batch,
@@ -223,13 +268,7 @@ impl<'a> Evaluator<'a> {
             zero: c.zero,
             schedule: c.schedule,
             device_params: prof.param_multiplier * dev.total_params(),
-            params_bytes,
-            gradient_bytes: row.gradient_bytes,
-            optimizer_bytes: row.optimizer_bytes,
-            activation_bytes,
-            comm_buffer_bytes: self.overheads.comm_buffer_bytes,
-            fragmentation_bytes,
-            total_bytes: allocated + self.overheads.comm_buffer_bytes + fragmentation_bytes,
+            ledger,
             bubble: prof.bubble,
         }
     }
@@ -277,6 +316,7 @@ pub fn sweep_fixed(mm: &MemoryModel, base: &ActivationConfig, ov: Overheads) -> 
                     zero: z,
                     total_bytes: rep.total_bytes(),
                     fits_80g: rep.fits(hbm80),
+                    ledger: rep.ledger,
                 });
             }
         }
@@ -323,16 +363,28 @@ mod tests {
                 let p = ev.evaluate(&c);
                 let rep =
                     DeviceMemoryReport::build(&mm, &c.act, zero, Overheads::paper_midpoint());
-                assert_eq!(p.params_bytes, rep.params_bytes, "{zero:?} {rc:?}");
-                assert_eq!(p.gradient_bytes, rep.gradient_bytes);
-                assert_eq!(p.optimizer_bytes, rep.optimizer_bytes);
-                assert_eq!(p.activation_bytes, rep.activation_bytes * inflight);
+                assert_eq!(p.params_bytes(), rep.params_bytes(), "{zero:?} {rc:?}");
+                assert_eq!(p.gradient_bytes(), rep.gradient_bytes());
+                assert_eq!(p.optimizer_bytes(), rep.optimizer_bytes());
+                assert_eq!(p.activation_bytes(), rep.activation_bytes() * inflight);
+                // Component-wise: the planner's activation components are the
+                // facade's scaled by the in-flight count (1F1B: one unit per
+                // microbatch, so the scaling is exact per component).
+                for comp in crate::ledger::Component::ALL {
+                    if comp.group() == ComponentGroup::Activation {
+                        assert_eq!(
+                            p.ledger.get(comp),
+                            rep.ledger.get(comp) * inflight,
+                            "{comp:?}"
+                        );
+                    }
+                }
                 assert_eq!(
-                    p.total_bytes,
+                    p.total_bytes(),
                     p.static_bytes()
-                        + p.activation_bytes
-                        + p.comm_buffer_bytes
-                        + p.fragmentation_bytes
+                        + p.activation_bytes()
+                        + p.comm_buffer_bytes()
+                        + p.fragmentation_bytes()
                 );
             }
         }
@@ -353,14 +405,15 @@ mod tests {
         let fb = ev.evaluate(&mk(ScheduleSpec::OneFOneB));
         let zb = ev.evaluate(&mk(ScheduleSpec::ZbH1));
         let dp = ev.evaluate(&mk(ScheduleSpec::DualPipe));
-        assert_eq!(zb.total_bytes, fb.total_bytes);
+        assert_eq!(zb.total_bytes(), fb.total_bytes());
+        assert_eq!(zb.ledger, fb.ledger);
         assert!(zb.bubble < fb.bubble);
-        assert_eq!(dp.params_bytes, 2 * fb.params_bytes);
+        assert_eq!(dp.params_bytes(), 2 * fb.params_bytes());
         assert_eq!(dp.device_params, 2 * fb.device_params);
         assert!(dp.bubble < zb.bubble);
         // 1F1B analysed stage holds p−1 = 15 tapes; DualPipe p+1 = 17.
         assert_eq!(
-            dp.activation_bytes / (fb.activation_bytes / 15),
+            dp.activation_bytes() / (fb.activation_bytes() / 15),
             17,
         );
     }
@@ -391,7 +444,7 @@ mod tests {
         let par = ev.evaluate_all(&cands);
         assert_eq!(seq.len(), par.len());
         for (a, b) in seq.iter().zip(&par) {
-            assert_eq!(a.total_bytes, b.total_bytes);
+            assert_eq!(a.ledger, b.ledger);
             assert_eq!(a.parallel, b.parallel);
             assert_eq!(a.zero, b.zero);
             assert_eq!(a.schedule, b.schedule);
@@ -438,5 +491,10 @@ mod tests {
             Overheads::paper_midpoint(),
         );
         assert_eq!(pts[0].total_bytes, rep.total_bytes());
+        // The legacy-stable `total_bytes` field and the attached ledger must
+        // never diverge (the `--breakdown` columns are read from the ledger).
+        for p in &pts {
+            assert_eq!(p.total_bytes, p.ledger.total());
+        }
     }
 }

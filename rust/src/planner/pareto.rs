@@ -14,19 +14,17 @@ use super::eval::PlanPoint;
 
 /// Does `a` Pareto-dominate `b` (≤ on all objectives, < on at least one)?
 pub fn dominates(a: &PlanPoint, b: &PlanPoint) -> bool {
-    let no_worse = a.total_bytes <= b.total_bytes
-        && a.bubble <= b.bubble
-        && a.device_params <= b.device_params;
-    let better = a.total_bytes < b.total_bytes
-        || a.bubble < b.bubble
-        || a.device_params < b.device_params;
+    let (at, bt) = (a.total_bytes(), b.total_bytes());
+    let no_worse =
+        at <= bt && a.bubble <= b.bubble && a.device_params <= b.device_params;
+    let better = at < bt || a.bubble < b.bubble || a.device_params < b.device_params;
     no_worse && better
 }
 
 /// Lexicographic objective order used for ranking and frontier scanning.
 fn objective_cmp(a: &PlanPoint, b: &PlanPoint) -> std::cmp::Ordering {
-    a.total_bytes
-        .cmp(&b.total_bytes)
+    a.total_bytes()
+        .cmp(&b.total_bytes())
         .then(a.bubble.partial_cmp(&b.bubble).unwrap_or(std::cmp::Ordering::Equal))
         .then(a.device_params.cmp(&b.device_params))
 }
@@ -69,6 +67,7 @@ mod tests {
     use crate::schedule::ScheduleSpec;
 
     fn point(total: u64, bubble: f64, params: u64) -> PlanPoint {
+        use crate::ledger::{Component, MemoryLedger};
         PlanPoint {
             parallel: ParallelConfig::single(),
             micro_batch: 1,
@@ -77,13 +76,7 @@ mod tests {
             zero: ZeroStrategy::None,
             schedule: ScheduleSpec::OneFOneB,
             device_params: params,
-            params_bytes: 0,
-            gradient_bytes: 0,
-            optimizer_bytes: 0,
-            activation_bytes: 0,
-            comm_buffer_bytes: 0,
-            fragmentation_bytes: 0,
-            total_bytes: total,
+            ledger: MemoryLedger::new().with(Component::ParamsDense, total),
             bubble,
         }
     }
@@ -109,7 +102,7 @@ mod tests {
         ];
         let f = frontier(&pts);
         assert_eq!(f.len(), 3);
-        assert!(f.iter().all(|p| p.total_bytes != 20 || p.bubble < 0.3));
+        assert!(f.iter().all(|p| p.total_bytes() != 20 || p.bubble < 0.3));
         // No frontier point dominates another (dominance is irreflexive).
         for a in &f {
             for b in &f {
@@ -123,8 +116,8 @@ mod tests {
         let pts = vec![point(30, 0.0, 1), point(10, 0.9, 9), point(20, 0.5, 5)];
         let top = rank(&pts, 2);
         assert_eq!(top.len(), 2);
-        assert_eq!(top[0].total_bytes, 10);
-        assert_eq!(top[1].total_bytes, 20);
+        assert_eq!(top[0].total_bytes(), 10);
+        assert_eq!(top[1].total_bytes(), 20);
     }
 
     #[test]

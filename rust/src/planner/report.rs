@@ -10,11 +10,12 @@ use crate::analysis::stages::StageSplit;
 use crate::analysis::total::Overheads;
 use crate::config::CaseStudy;
 use crate::model::CountMode;
+use crate::report::ledger::BREAKDOWN_HEADERS;
 use crate::report::{gib, Table};
 use crate::util::Json;
 
-fn point_row(idx: usize, p: &PlanPoint) -> Vec<String> {
-    vec![
+fn point_row(idx: usize, p: &PlanPoint, breakdown: bool) -> Vec<String> {
+    let mut row = vec![
         idx.to_string(),
         p.parallel.dp.to_string(),
         p.parallel.tp.to_string(),
@@ -26,10 +27,14 @@ fn point_row(idx: usize, p: &PlanPoint) -> Vec<String> {
         p.recompute.name().into(),
         p.zero.name().into(),
         p.schedule.name(),
-        format!("{:.1}", gib(p.total_bytes)),
+        format!("{:.1}", gib(p.total_bytes())),
         format!("{:.1}", 100.0 * p.bubble),
         format!("{:.2}B", p.device_params as f64 / 1e9),
-    ]
+    ];
+    if breakdown {
+        row.extend(crate::report::ledger::breakdown_cells(&p.ledger));
+    }
+    row
 }
 
 const POINT_HEADERS: [&str; 14] = [
@@ -37,8 +42,16 @@ const POINT_HEADERS: [&str; 14] = [
     "bubble %", "params/dev",
 ];
 
-/// Ranked top-k table.
-pub fn ranking_table(res: &PlanResult) -> Table {
+fn point_headers(breakdown: bool) -> Vec<&'static str> {
+    let mut h = POINT_HEADERS.to_vec();
+    if breakdown {
+        h.extend(BREAKDOWN_HEADERS);
+    }
+    h
+}
+
+/// Ranked top-k table. `breakdown` appends per-component GiB columns.
+pub fn ranking_table_opts(res: &PlanResult, breakdown: bool) -> Table {
     let mut t = Table::new(
         format!(
             "Top-{} of {} feasible configurations vs {:.0} GiB HBM (world={}, m={})",
@@ -48,28 +61,39 @@ pub fn ranking_table(res: &PlanResult) -> Table {
             res.world,
             res.num_microbatches,
         ),
-        &POINT_HEADERS,
+        &point_headers(breakdown),
     );
     for (i, p) in res.ranked.iter().enumerate() {
-        t.row(point_row(i + 1, p));
+        t.row(point_row(i + 1, p, breakdown));
     }
     t
 }
 
+/// Ranked top-k table (no breakdown columns).
+pub fn ranking_table(res: &PlanResult) -> Table {
+    ranking_table_opts(res, false)
+}
+
 /// Pareto-frontier table over (peak memory, bubble, per-device params).
-pub fn frontier_table(res: &PlanResult) -> Table {
+/// `breakdown` appends per-component GiB columns.
+pub fn frontier_table_opts(res: &PlanResult, breakdown: bool) -> Table {
     let mut t = Table::new(
         format!(
             "Pareto frontier: {} of {} feasible points (memory × bubble × params/dev)",
             res.frontier.len(),
             res.feasible_count,
         ),
-        &POINT_HEADERS,
+        &point_headers(breakdown),
     );
     for (i, p) in res.frontier.iter().enumerate() {
-        t.row(point_row(i + 1, p));
+        t.row(point_row(i + 1, p, breakdown));
     }
     t
+}
+
+/// Pareto-frontier table (no breakdown columns).
+pub fn frontier_table(res: &PlanResult) -> Table {
+    frontier_table_opts(res, false)
 }
 
 fn point_json(p: &PlanPoint) -> Json {
@@ -85,13 +109,17 @@ fn point_json(p: &PlanPoint) -> Json {
     m.insert("zero".into(), Json::Str(p.zero.name().into()));
     m.insert("schedule".into(), Json::Str(p.schedule.name()));
     m.insert("device_params".into(), Json::Num(p.device_params as f64));
-    m.insert("params_bytes".into(), Json::Num(p.params_bytes as f64));
-    m.insert("gradient_bytes".into(), Json::Num(p.gradient_bytes as f64));
-    m.insert("optimizer_bytes".into(), Json::Num(p.optimizer_bytes as f64));
-    m.insert("activation_bytes".into(), Json::Num(p.activation_bytes as f64));
-    m.insert("comm_buffer_bytes".into(), Json::Num(p.comm_buffer_bytes as f64));
-    m.insert("fragmentation_bytes".into(), Json::Num(p.fragmentation_bytes as f64));
-    m.insert("total_bytes".into(), Json::Num(p.total_bytes as f64));
+    m.insert("params_bytes".into(), Json::Num(p.params_bytes() as f64));
+    m.insert("gradient_bytes".into(), Json::Num(p.gradient_bytes() as f64));
+    m.insert("optimizer_bytes".into(), Json::Num(p.optimizer_bytes() as f64));
+    m.insert("activation_bytes".into(), Json::Num(p.activation_bytes() as f64));
+    m.insert("comm_buffer_bytes".into(), Json::Num(p.comm_buffer_bytes() as f64));
+    m.insert("fragmentation_bytes".into(), Json::Num(p.fragmentation_bytes() as f64));
+    m.insert("total_bytes".into(), Json::Num(p.total_bytes() as f64));
+    m.insert(
+        "components".into(),
+        crate::report::ledger::ledger_components_json(&p.ledger),
+    );
     m.insert("bubble".into(), Json::Num(p.bubble));
     Json::Obj(m)
 }
@@ -191,6 +219,20 @@ mod tests {
     }
 
     #[test]
+    fn breakdown_tables_append_component_columns() {
+        let res = small_result();
+        let rt = ranking_table_opts(&res, true);
+        assert_eq!(rt.headers.len(), POINT_HEADERS.len() + BREAKDOWN_HEADERS.len());
+        for row in &rt.rows {
+            assert_eq!(row.len(), rt.headers.len());
+        }
+        let ft = frontier_table_opts(&res, true);
+        assert_eq!(ft.headers.len(), POINT_HEADERS.len() + BREAKDOWN_HEADERS.len());
+        // Non-breakdown stays column-identical to the legacy shape.
+        assert_eq!(ranking_table(&res).headers.len(), POINT_HEADERS.len());
+    }
+
+    #[test]
     fn json_roundtrips_and_counts_match() {
         let res = small_result();
         let j = to_json(&res);
@@ -204,6 +246,14 @@ mod tests {
         assert_eq!(ranked.len(), res.ranked.len());
         if let Some(first) = ranked.first() {
             assert!(first.get("total_bytes").unwrap().as_f64().unwrap() > 0.0);
+            // The component map sums back to the total exactly.
+            let comps = first.get("components").unwrap();
+            if let Json::Obj(m) = comps {
+                let sum: f64 = m.values().map(|v| v.as_f64().unwrap()).sum();
+                assert_eq!(sum, first.get("total_bytes").unwrap().as_f64().unwrap());
+            } else {
+                panic!("components is not an object");
+            }
         }
     }
 

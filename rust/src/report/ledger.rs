@@ -1,0 +1,153 @@
+//! Rendering [`MemoryLedger`]s: aligned text tables (GiB + share columns)
+//! and machine-readable JSON — the reporting side of the ledger subsystem.
+
+use super::{fmt_bytes, gib, Table};
+use crate::ledger::{Component, ComponentGroup, MemoryLedger};
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+fn share(bytes: u64, total: u64) -> String {
+    if total == 0 {
+        "-".into()
+    } else {
+        format!("{:.1}%", 100.0 * bytes as f64 / total as f64)
+    }
+}
+
+/// Render a ledger as a table: one row per non-zero component when
+/// `breakdown` is true, one row per non-zero [`ComponentGroup`] otherwise,
+/// plus a grand-total row.
+pub fn ledger_table(title: impl Into<String>, ledger: &MemoryLedger, breakdown: bool) -> Table {
+    let total = ledger.total();
+    let mut t = Table::new(title, &["component", "bytes", "GiB", "share"]);
+    if breakdown {
+        for (c, b) in ledger.nonzero() {
+            t.row(vec![
+                c.name().into(),
+                fmt_bytes(b),
+                format!("{:.2}", gib(b)),
+                share(b, total),
+            ]);
+        }
+    } else {
+        for g in ComponentGroup::ALL {
+            let b = ledger.group_total(g);
+            if b == 0 {
+                continue;
+            }
+            t.row(vec![
+                g.name().into(),
+                fmt_bytes(b),
+                format!("{:.2}", gib(b)),
+                share(b, total),
+            ]);
+        }
+    }
+    t.row(vec!["total".into(), fmt_bytes(total), format!("{:.2}", gib(total)), share(total, total)]);
+    t
+}
+
+/// Headers of the six per-component GiB columns the CLI `--breakdown` flags
+/// append (params, gradients, optimizer, activations, comm buffers,
+/// fragmentation) — paired with [`breakdown_cells`].
+pub const BREAKDOWN_HEADERS: [&str; 6] = ["P", "G", "O", "act", "comm", "frag"];
+
+/// The [`BREAKDOWN_HEADERS`] cells for one ledger, each formatted as GiB.
+pub fn breakdown_cells(ledger: &MemoryLedger) -> [String; 6] {
+    [
+        format!("{:.1}", gib(ledger.group_total(ComponentGroup::Params))),
+        format!("{:.1}", gib(ledger.get(Component::Gradients))),
+        format!("{:.1}", gib(ledger.get(Component::OptimizerStates))),
+        format!("{:.1}", gib(ledger.group_total(ComponentGroup::Activation))),
+        format!("{:.1}", gib(ledger.get(Component::CommBuffer))),
+        format!("{:.1}", gib(ledger.get(Component::Fragmentation))),
+    ]
+}
+
+/// The non-zero components of a ledger as a JSON object
+/// (`{component_name: bytes}`).
+pub fn ledger_components_json(ledger: &MemoryLedger) -> Json {
+    let mut m = BTreeMap::new();
+    for (c, b) in ledger.nonzero() {
+        m.insert(c.name().to_string(), Json::Num(b as f64));
+    }
+    Json::Obj(m)
+}
+
+/// Full JSON export of a ledger: per-component bytes, per-group bytes and
+/// the grand total.
+pub fn ledger_json(ledger: &MemoryLedger) -> Json {
+    let mut groups = BTreeMap::new();
+    for g in ComponentGroup::ALL {
+        let b = ledger.group_total(g);
+        if b > 0 {
+            groups.insert(g.name().to_string(), Json::Num(b as f64));
+        }
+    }
+    let mut m = BTreeMap::new();
+    m.insert("components".into(), ledger_components_json(ledger));
+    m.insert("groups".into(), Json::Obj(groups));
+    m.insert("total_bytes".into(), Json::Num(ledger.total() as f64));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MemoryLedger {
+        MemoryLedger::new()
+            .with(Component::ParamsDense, 3 << 30)
+            .with(Component::ParamsMoe, 1 << 30)
+            .with(Component::Gradients, 2 << 30)
+            .with(Component::ActivationAttention, 4 << 30)
+            .with(Component::ActivationRouter, 1 << 20)
+    }
+
+    #[test]
+    fn grouped_table_merges_params_and_activations() {
+        let t = ledger_table("demo", &sample(), false);
+        // params, gradients, activations, total.
+        assert_eq!(t.rows.len(), 4);
+        let s = t.render();
+        assert!(s.contains("params"));
+        assert!(s.contains("activations"));
+        assert!(!s.contains("params_dense"));
+    }
+
+    #[test]
+    fn breakdown_table_lists_components() {
+        let t = ledger_table("demo", &sample(), true);
+        // 5 non-zero components + total.
+        assert_eq!(t.rows.len(), 6);
+        let s = t.render();
+        assert!(s.contains("params_dense"));
+        assert!(s.contains("activation_router"));
+        // Total row carries the grand total.
+        assert!(s.contains("100.0%"));
+    }
+
+    #[test]
+    fn json_roundtrips_with_exact_totals() {
+        let l = sample();
+        let j = ledger_json(&l);
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back.get("total_bytes").unwrap().as_u64().unwrap(), l.total());
+        let comps = back.get("components").unwrap();
+        assert_eq!(
+            comps.get("params_dense").unwrap().as_u64().unwrap(),
+            l.get(Component::ParamsDense)
+        );
+        let groups = back.get("groups").unwrap();
+        assert_eq!(
+            groups.get("params").unwrap().as_u64().unwrap(),
+            l.group_total(ComponentGroup::Params)
+        );
+    }
+
+    #[test]
+    fn empty_ledger_renders_total_only() {
+        let t = ledger_table("empty", &MemoryLedger::new(), false);
+        assert_eq!(t.rows.len(), 1);
+    }
+}

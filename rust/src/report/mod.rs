@@ -2,8 +2,10 @@
 //! markdown. Used by the `dsmem tables` CLI and the benches.
 
 mod bytes;
+pub mod ledger;
 mod table;
 pub mod tables;
 
 pub use bytes::{fmt_bytes, fmt_count, gib, mib};
+pub use ledger::{ledger_json, ledger_table};
 pub use table::Table;

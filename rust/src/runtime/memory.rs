@@ -6,7 +6,8 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-/// Buffer classes (mirror of `sim::MemClass`, scoped to the live runtime).
+/// Buffer classes (a coarse live-runtime mirror of the ledger taxonomy in
+/// `crate::ledger::Component`, scoped to what the coordinator can measure).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MemTag {
     Params,

@@ -17,9 +17,10 @@
 
 use super::allocator::{AllocStats, CachingAllocator};
 use super::collective::CollectivePlan;
-use super::tracker::{MemClass, MemoryTimeline};
+use super::tracker::MemoryTimeline;
 use crate::analysis::{DeviceStaticParams, MemoryModel, ZeroStrategy};
 use crate::config::ActivationConfig;
+use crate::ledger::{Component, MemoryLedger};
 use crate::schedule::{PipelineOp, Schedule, ScheduleSpec};
 
 /// Cap on transient communication buffers per stage, in bytes. §6 of the
@@ -39,6 +40,23 @@ pub struct StageSimResult {
     pub peak_inflight: u64,
     /// Caching-allocator stats if fragmentation simulation was enabled.
     pub alloc_stats: Option<AllocStats>,
+}
+
+impl StageSimResult {
+    /// The replayed peak decomposed into the ledger taxonomy: component-wise
+    /// peaks of the timeline, plus — when the allocator replay ran — the
+    /// estimated fragmentation (reserved − allocated at the reserved peak)
+    /// under [`Component::Fragmentation`].
+    pub fn peak_ledger(&self) -> MemoryLedger {
+        let mut l = self.timeline.peak_ledger();
+        if let Some(stats) = self.alloc_stats {
+            l.set(
+                Component::Fragmentation,
+                stats.peak_reserved.saturating_sub(stats.peak_allocated),
+            );
+        }
+        l
+    }
 }
 
 /// Whole-pipeline simulation output.
@@ -119,9 +137,13 @@ impl<'a> SimEngine<'a> {
             // stage's MoE layer count for the MoE part and MLA for all layers.
             // Each Forward op is one *unit* = 1/units_per_microbatch of the
             // stage tape (chunks for interleaved, a direction's pass for
-            // bidirectional schedules).
-            let act_bytes_per_unit =
-                self.per_microbatch_bytes(&ar, sinfo.moe_layers, sinfo.num_layers) / unit_div;
+            // bidirectional schedules). The unit tape is kept component-wise
+            // (divided per component, exactly as the planner's Evaluator
+            // divides it) so the replayed peak decomposes into the same
+            // taxonomy the analytic side predicts.
+            let act_unit: MemoryLedger =
+                self.per_microbatch_ledger(&ar, sinfo.moe_layers, sinfo.num_layers).div(unit_div);
+            let act_bytes_per_unit = act_unit.total();
 
             let cplan = CollectivePlan::build(
                 &self.mm.model,
@@ -142,12 +164,22 @@ impl<'a> SimEngine<'a> {
             // t0: static state. Weights carry the schedule's replica
             // multiplier (DualPipe keeps both directions' stage shards
             // resident); gradients and optimizer states are assumed
-            // reduced/sharded across the mirrored pair.
-            tl.alloc(t, MemClass::Params, param_mult * scale(zrow.params_bytes));
-            tl.alloc(t, MemClass::Gradients, scale(zrow.gradient_bytes));
-            tl.alloc(t, MemClass::Optimizer, scale(zrow.optimizer_bytes));
+            // reduced/sharded across the mirrored pair. The dense/MoE
+            // parameter partitions are tagged separately, matching the
+            // ZeroRow ledger the planner consumes; the MoE share is derived
+            // by subtraction so the tagged parts re-sum to the pre-ledger
+            // scale(params_bytes) exactly (scale() floors, so scaling the
+            // partitions independently could lose a byte on stages whose
+            // param ratio to the archetype is fractional).
+            let params_dense = scale(zrow.params_dense_bytes);
+            let params_moe = scale(zrow.params_bytes) - params_dense;
+            tl.alloc(t, Component::ParamsDense, param_mult * params_dense);
+            tl.alloc(t, Component::ParamsMoe, param_mult * params_moe);
+            tl.alloc(t, Component::Gradients, scale(zrow.gradient_bytes));
+            tl.alloc(t, Component::OptimizerStates, scale(zrow.optimizer_bytes));
             if let Some(a) = alloc.as_mut() {
-                a.alloc(param_mult * scale(zrow.params_bytes));
+                a.alloc(param_mult * params_dense);
+                a.alloc(param_mult * params_moe);
                 a.alloc(scale(zrow.gradient_bytes));
                 a.alloc(scale(zrow.optimizer_bytes));
             }
@@ -160,7 +192,7 @@ impl<'a> SimEngine<'a> {
                     PipelineOp::Forward { mb, chunk } => {
                         // Transient PP recv + SP gather buffers around the op.
                         let buf = cplan.peak_buffer_bytes().min(COMM_BUFFER_CAP_BYTES);
-                        tl.alloc(t, MemClass::CommBuffers, buf);
+                        tl.alloc(t, Component::CommBuffer, buf);
                         // The activation tape of this unit, itemized so the
                         // allocator sees realistic block sizes. A unit covers
                         // 1/unit_div of the stage's layers, so the allocator
@@ -174,8 +206,14 @@ impl<'a> SimEngine<'a> {
                             );
                             live_allocs.insert((mb, chunk), ids);
                         }
-                        tl.alloc(t, MemClass::Activations, act_bytes_per_unit);
-                        tl.free(t, MemClass::CommBuffers, buf);
+                        // One timeline allocation per tagged component: the
+                        // peak decomposes into the ledger taxonomy.
+                        for (c, bytes) in act_unit.iter() {
+                            if bytes > 0 {
+                                tl.alloc(t, c, bytes);
+                            }
+                        }
+                        tl.free(t, Component::CommBuffer, buf);
                         inflight += 1;
                         peak_inflight = peak_inflight.max(inflight);
                     }
@@ -184,16 +222,20 @@ impl<'a> SimEngine<'a> {
                         // activation + comm buffers.
                         let buf = cplan.peak_buffer_bytes().min(COMM_BUFFER_CAP_BYTES);
                         let wsp = act_bytes_per_unit / sinfo.num_layers.max(1);
-                        tl.alloc(t, MemClass::CommBuffers, buf);
-                        tl.alloc(t, MemClass::Other, wsp);
-                        tl.free(t, MemClass::Activations, act_bytes_per_unit);
+                        tl.alloc(t, Component::CommBuffer, buf);
+                        tl.alloc(t, Component::Workspace, wsp);
+                        for (c, bytes) in act_unit.iter() {
+                            if bytes > 0 {
+                                tl.free(t, c, bytes);
+                            }
+                        }
                         if let Some(a) = alloc.as_mut() {
                             for id in live_allocs.remove(&(mb, chunk)).unwrap_or_default() {
                                 a.free(id);
                             }
                         }
-                        tl.free(t, MemClass::Other, wsp);
-                        tl.free(t, MemClass::CommBuffers, buf);
+                        tl.free(t, Component::Workspace, wsp);
+                        tl.free(t, Component::CommBuffer, buf);
                         inflight -= 1;
                     }
                     PipelineOp::WeightGrad { .. } => {
@@ -202,8 +244,8 @@ impl<'a> SimEngine<'a> {
                         // pass; only a one-layer workspace is transiently
                         // alive.
                         let wsp = act_bytes_per_unit / sinfo.num_layers.max(1);
-                        tl.alloc(t, MemClass::Other, wsp);
-                        tl.free(t, MemClass::Other, wsp);
+                        tl.alloc(t, Component::Workspace, wsp);
+                        tl.free(t, Component::Workspace, wsp);
                     }
                 }
             }
@@ -211,8 +253,8 @@ impl<'a> SimEngine<'a> {
             // (bucket buffers), then Adam update in place.
             t += 1;
             let buf = (2 * self.bucket_bytes).min(COMM_BUFFER_CAP_BYTES);
-            tl.alloc(t, MemClass::CommBuffers, buf);
-            tl.free(t + 1, MemClass::CommBuffers, buf);
+            tl.alloc(t, Component::CommBuffer, buf);
+            tl.free(t + 1, Component::CommBuffer, buf);
 
             stages.push(StageSimResult {
                 stage: s,
@@ -225,21 +267,26 @@ impl<'a> SimEngine<'a> {
         Ok(SimResult { spec, num_microbatches, stages })
     }
 
-    /// Activation bytes of one microbatch on a stage with the given layer mix.
-    fn per_microbatch_bytes(
+    /// Component-tagged activation ledger of one microbatch on a stage with
+    /// the given layer mix: the MLA tape for every layer, the MoE tape for
+    /// the stage's MoE layers.
+    ///
+    /// Dense layers store roughly the dense-FFN tape; approximating it with
+    /// shared-expert terms scaled by `h_F/h_E` is overkill — the paper
+    /// excludes dense stages from its analysis; we charge the MLA part only
+    /// for them (conservative lower bound, documented). The reserved
+    /// [`Component::ActivationDenseMlp`] tag stays 0 accordingly.
+    fn per_microbatch_ledger(
         &self,
         ar: &crate::analysis::ActivationReport,
         moe_layers: u64,
         num_layers: u64,
-    ) -> u64 {
+    ) -> MemoryLedger {
         let pol = self.act.recompute;
-        let mla = ar.mla.device_bytes(pol) * num_layers;
-        let moe = ar.moe.device_bytes(pol) * moe_layers;
-        // Dense layers store roughly the dense-FFN tape; approximate with the
-        // shared-expert terms of the MoE tape scaled by h_F/h_E is overkill —
-        // the paper excludes dense stages from its analysis; we charge the
-        // MLA part only for them (conservative lower bound, documented).
-        mla + moe
+        ar.mla
+            .ledger(pol)
+            .scale(num_layers)
+            .merged(&ar.moe.ledger(pol).scale(moe_layers))
     }
 
     /// Issue itemized tape allocations into the caching allocator.
@@ -270,6 +317,7 @@ impl<'a> SimEngine<'a> {
 mod tests {
     use super::*;
     use crate::config::{CaseStudy, RecomputePolicy};
+    use crate::ledger::ComponentGroup;
 
     fn mm() -> MemoryModel {
         let cs = CaseStudy::paper();
@@ -296,15 +344,16 @@ mod tests {
         let g = eng.run(ScheduleSpec::GPipe, 16).unwrap();
         let o = eng.run(ScheduleSpec::OneFOneB, 16).unwrap();
         // Stage 1 (heaviest): GPipe holds 16 sets, 1F1B holds 15.
-        let gp = g.stages[1].timeline.peak(MemClass::Activations);
-        let ob = o.stages[1].timeline.peak(MemClass::Activations);
+        let gp = g.stages[1].timeline.group_peak(ComponentGroup::Activation);
+        let ob = o.stages[1].timeline.group_peak(ComponentGroup::Activation);
         assert!(gp > ob, "gpipe {gp} !> 1f1b {ob}");
     }
 
     #[test]
     fn sim_activation_peak_equals_table10_times_inflight() {
         // The simulated activation peak on stage i must equal the analytic
-        // per-microbatch activation × min(m, p−i) — the E2 bridge.
+        // per-microbatch activation × min(m, p−i) — the E2 bridge — and
+        // decompose component-wise into the analytic stage ledger.
         let mm = mm();
         let act = ActivationConfig::paper(1);
         let eng = SimEngine::new(&mm, act, ZeroStrategy::None);
@@ -318,7 +367,13 @@ mod tests {
             plan.stages[1].num_layers,
         );
         let per_mb = ar.total_stage_bytes(RecomputePolicy::None);
-        assert_eq!(st.timeline.peak(MemClass::Activations), per_mb * 15);
+        assert_eq!(st.timeline.group_peak(ComponentGroup::Activation), per_mb * 15);
+        let stage_ledger = ar.stage_ledger(RecomputePolicy::None);
+        for (c, bytes) in stage_ledger.iter() {
+            if bytes > 0 {
+                assert_eq!(st.timeline.peak(c), bytes * 15, "{c:?}");
+            }
+        }
     }
 
     #[test]
@@ -331,8 +386,10 @@ mod tests {
         let row = zr.row(ZeroStrategy::OsG);
         // Stage 1 is the analysed archetype: params double, grads/opt do not.
         let st = &res.stages[1];
-        assert_eq!(st.timeline.peak(MemClass::Params), 2 * row.params_bytes);
-        assert_eq!(st.timeline.peak(MemClass::Gradients), row.gradient_bytes);
+        assert_eq!(st.timeline.group_peak(ComponentGroup::Params), 2 * row.params_bytes);
+        assert_eq!(st.timeline.peak(Component::ParamsDense), 2 * row.params_dense_bytes);
+        assert_eq!(st.timeline.peak(Component::ParamsMoe), 2 * row.params_moe_bytes);
+        assert_eq!(st.timeline.peak(Component::Gradients), row.gradient_bytes);
         assert_eq!(st.peak_inflight, 17); // p + 1
     }
 
@@ -345,8 +402,8 @@ mod tests {
         let fb = eng.run(ScheduleSpec::OneFOneB, 16).unwrap();
         for (a, b) in zb.stages.iter().zip(&fb.stages) {
             assert_eq!(
-                a.timeline.peak(MemClass::Activations),
-                b.timeline.peak(MemClass::Activations),
+                a.timeline.group_peak(ComponentGroup::Activation),
+                b.timeline.group_peak(ComponentGroup::Activation),
                 "stage {}",
                 a.stage
             );
@@ -363,6 +420,31 @@ mod tests {
         let b = eng_full.run(ScheduleSpec::OneFOneB, 16).unwrap();
         assert!(
             a.peak_stage().timeline.total_peak() > b.peak_stage().timeline.total_peak()
+        );
+    }
+
+    #[test]
+    fn peak_ledger_decomposes_the_replayed_peak() {
+        // The per-stage peak ledger carries the taxonomy: params split into
+        // dense/moe, activations into attention/moe-mlp/router, transients
+        // under comm-buffer/workspace — and the snapshot at the total peak
+        // sums to the total peak exactly.
+        let mm = mm();
+        let act = ActivationConfig::paper(1);
+        let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+        let res = eng.run(ScheduleSpec::OneFOneB, 16).unwrap();
+        let st = &res.stages[1];
+        let l = st.peak_ledger();
+        assert!(l.get(Component::ParamsDense) > 0);
+        assert!(l.get(Component::ParamsMoe) > 0);
+        assert!(l.get(Component::ActivationAttention) > 0);
+        assert!(l.get(Component::ActivationMoeMlp) > 0);
+        assert!(l.get(Component::ActivationRouter) > 0);
+        assert!(l.get(Component::CommBuffer) > 0);
+        assert_eq!(l.get(Component::Fragmentation), 0); // allocator replay off
+        assert_eq!(
+            st.timeline.ledger_at_total_peak().total(),
+            st.timeline.total_peak()
         );
     }
 

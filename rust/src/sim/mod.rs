@@ -5,7 +5,10 @@
 //! Pipeline schedules themselves live in [`crate::schedule`] — a trait-based
 //! registry shared with `analysis::bubble` and the planner; the engine
 //! consumes [`crate::schedule::PipelineSchedule`] instead of special-casing
-//! schedule kinds. The core types are re-exported here for convenience.
+//! schedule kinds. Allocations are tagged with the ledger's [`Component`]
+//! taxonomy ([`crate::ledger`]), so a replayed peak decomposes into exactly
+//! the classes the analytical model and the planner emit. The core types are
+//! re-exported here for convenience.
 
 pub mod allocator;
 pub mod collective;
@@ -13,8 +16,9 @@ pub mod engine;
 pub mod trace;
 pub mod tracker;
 
+pub use crate::ledger::{Component, ComponentGroup};
 pub use crate::schedule::{PipelineOp, Schedule, ScheduleSpec};
 pub use allocator::{AllocStats, CachingAllocator};
 pub use collective::{CollectiveKind, CollectivePlan};
 pub use engine::{SimEngine, SimResult, COMM_BUFFER_CAP_BYTES};
-pub use tracker::{MemClass, MemoryTimeline};
+pub use tracker::{MemEvent, MemoryTimeline};

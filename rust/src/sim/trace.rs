@@ -1,8 +1,9 @@
 //! Chrome-trace export: render a [`MemoryTimeline`]'s event tape as a
-//! `chrome://tracing` / Perfetto counter track, one counter per
-//! [`MemClass`] — the visualization story for the simulator.
+//! `chrome://tracing` / Perfetto counter track, one counter per ledger
+//! [`Component`] — the visualization story for the simulator.
 
-use super::tracker::{MemClass, MemoryTimeline};
+use super::tracker::MemoryTimeline;
+use crate::ledger::Component;
 use std::collections::HashMap;
 
 /// Export one device's timeline as Chrome-trace JSON (counter events).
@@ -12,7 +13,7 @@ use std::collections::HashMap;
 pub fn to_chrome_trace(timelines: &[(u64, &MemoryTimeline)]) -> String {
     let mut events = Vec::new();
     for (pid, tl) in timelines {
-        let mut current: HashMap<MemClass, i64> = HashMap::new();
+        let mut current: HashMap<Component, i64> = HashMap::new();
         for ev in tl.events() {
             let c = current.entry(ev.class).or_insert(0);
             *c += ev.delta;
@@ -36,25 +37,26 @@ mod tests {
     #[test]
     fn trace_is_valid_json_with_counters() {
         let mut tl = MemoryTimeline::new();
-        tl.alloc(0, MemClass::Params, 1024 * 1024);
-        tl.alloc(1, MemClass::Activations, 2 * 1024 * 1024);
-        tl.free(2, MemClass::Activations, 2 * 1024 * 1024);
+        tl.alloc(0, Component::ParamsDense, 1024 * 1024);
+        tl.alloc(1, Component::ActivationAttention, 2 * 1024 * 1024);
+        tl.free(2, Component::ActivationAttention, 2 * 1024 * 1024);
         let s = to_chrome_trace(&[(0, &tl)]);
         let v = Json::parse(&s).unwrap();
         let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
         assert_eq!(evs.len(), 3);
         assert_eq!(evs[0].get("ph").unwrap().as_str().unwrap(), "C");
+        assert_eq!(evs[0].get("name").unwrap().as_str().unwrap(), "params_dense");
         assert_eq!(evs[1].get("args").unwrap().get("MiB").unwrap().as_f64().unwrap(), 2.0);
-        // The free brings the activations counter back to 0.
+        // The free brings the activation counter back to 0.
         assert_eq!(evs[2].get("args").unwrap().get("MiB").unwrap().as_f64().unwrap(), 0.0);
     }
 
     #[test]
     fn multiple_devices_use_distinct_pids() {
         let mut a = MemoryTimeline::new();
-        a.alloc(0, MemClass::Params, 1);
+        a.alloc(0, Component::ParamsDense, 1);
         let mut b = MemoryTimeline::new();
-        b.alloc(0, MemClass::Params, 2);
+        b.alloc(0, Component::ParamsDense, 2);
         let s = to_chrome_trace(&[(0, &a), (1, &b)]);
         let v = Json::parse(&s).unwrap();
         let evs = v.get("traceEvents").unwrap().as_arr().unwrap();

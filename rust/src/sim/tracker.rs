@@ -1,51 +1,19 @@
 //! Tagged memory timeline: the simulator's (and validator's) common currency.
 //!
-//! Every simulated allocation/free is recorded against a [`MemClass`]; the
-//! timeline tracks instantaneous and peak usage per class and overall —
-//! exactly the decomposition of the paper's tables (params / grads /
-//! optimizer / activations / buffers).
+//! Every simulated allocation/free is recorded against a ledger
+//! [`Component`]; the timeline tracks instantaneous and peak usage per
+//! component, per [`ComponentGroup`] (the paper's table-level classes) and
+//! overall — so a replayed peak decomposes into exactly the taxonomy the
+//! analytical model and the planner emit ([`crate::ledger::MemoryLedger`]).
 
-use std::collections::HashMap;
-
-/// Memory classes matching the paper's accounting.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum MemClass {
-    Params,
-    Gradients,
-    Optimizer,
-    Activations,
-    CommBuffers,
-    Other,
-}
-
-impl MemClass {
-    pub const ALL: [MemClass; 6] = [
-        MemClass::Params,
-        MemClass::Gradients,
-        MemClass::Optimizer,
-        MemClass::Activations,
-        MemClass::CommBuffers,
-        MemClass::Other,
-    ];
-
-    pub fn name(self) -> &'static str {
-        match self {
-            MemClass::Params => "params",
-            MemClass::Gradients => "gradients",
-            MemClass::Optimizer => "optimizer",
-            MemClass::Activations => "activations",
-            MemClass::CommBuffers => "comm_buffers",
-            MemClass::Other => "other",
-        }
-    }
-}
+use crate::ledger::{Component, ComponentGroup, MemoryLedger, NUM_GROUPS};
 
 /// One recorded event (for trace export / debugging).
 #[derive(Debug, Clone, Copy)]
 pub struct MemEvent {
     /// Logical time (event index or schedule tick).
     pub time: u64,
-    pub class: MemClass,
+    pub class: Component,
     /// Positive = alloc, negative = free.
     pub delta: i64,
 }
@@ -53,12 +21,16 @@ pub struct MemEvent {
 /// Per-device tagged memory timeline.
 #[derive(Debug, Clone, Default)]
 pub struct MemoryTimeline {
-    current: HashMap<MemClass, u64>,
-    peak: HashMap<MemClass, u64>,
+    current: MemoryLedger,
+    peak: MemoryLedger,
+    group_current: [u64; NUM_GROUPS],
+    group_peak: [u64; NUM_GROUPS],
     total_current: u64,
     total_peak: u64,
     /// Time of the total peak.
     total_peak_time: u64,
+    /// Ledger snapshot at the moment of the total peak.
+    at_total_peak: MemoryLedger,
     events: Vec<MemEvent>,
     /// Record individual events (disable for large sweeps).
     pub record_events: bool,
@@ -70,16 +42,20 @@ impl MemoryTimeline {
     }
 
     /// Allocate `bytes` of `class` at logical time `time`.
-    pub fn alloc(&mut self, time: u64, class: MemClass, bytes: u64) {
-        let c = self.current.entry(class).or_insert(0);
-        *c += bytes;
-        let cur = *c;
-        let p = self.peak.entry(class).or_insert(0);
-        *p = (*p).max(cur);
+    pub fn alloc(&mut self, time: u64, class: Component, bytes: u64) {
+        self.current.add(class, bytes);
+        let cur = self.current.get(class);
+        if cur > self.peak.get(class) {
+            self.peak.set(class, cur);
+        }
+        let g = class.group().index();
+        self.group_current[g] += bytes;
+        self.group_peak[g] = self.group_peak[g].max(self.group_current[g]);
         self.total_current += bytes;
         if self.total_current > self.total_peak {
             self.total_peak = self.total_current;
             self.total_peak_time = time;
+            self.at_total_peak = self.current;
         }
         if self.record_events {
             self.events.push(MemEvent { time, class, delta: bytes as i64 });
@@ -87,22 +63,33 @@ impl MemoryTimeline {
     }
 
     /// Free `bytes` of `class`. Panics (debug) on underflow — a sim bug.
-    pub fn free(&mut self, time: u64, class: MemClass, bytes: u64) {
-        let c = self.current.entry(class).or_insert(0);
-        debug_assert!(*c >= bytes, "freeing {bytes} from {} holding {}", class.name(), *c);
-        *c = c.saturating_sub(bytes);
+    pub fn free(&mut self, time: u64, class: Component, bytes: u64) {
+        self.current.sub(class, bytes);
+        self.group_current[class.group().index()] =
+            self.group_current[class.group().index()].saturating_sub(bytes);
         self.total_current = self.total_current.saturating_sub(bytes);
         if self.record_events {
             self.events.push(MemEvent { time, class, delta: -(bytes as i64) });
         }
     }
 
-    pub fn current(&self, class: MemClass) -> u64 {
-        self.current.get(&class).copied().unwrap_or(0)
+    pub fn current(&self, class: Component) -> u64 {
+        self.current.get(class)
     }
 
-    pub fn peak(&self, class: MemClass) -> u64 {
-        self.peak.get(&class).copied().unwrap_or(0)
+    /// Peak of one component over time.
+    pub fn peak(&self, class: Component) -> u64 {
+        self.peak.get(class)
+    }
+
+    /// Instantaneous bytes of one group.
+    pub fn group_current(&self, g: ComponentGroup) -> u64 {
+        self.group_current[g.index()]
+    }
+
+    /// Peak of a group's *sum* over time (not the sum of component peaks).
+    pub fn group_peak(&self, g: ComponentGroup) -> u64 {
+        self.group_peak[g.index()]
     }
 
     pub fn total_current(&self) -> u64 {
@@ -118,13 +105,25 @@ impl MemoryTimeline {
         self.total_peak_time
     }
 
+    /// Component-wise peaks as a ledger (each component's own maximum —
+    /// upper-bounds any simultaneous snapshot).
+    pub fn peak_ledger(&self) -> MemoryLedger {
+        self.peak
+    }
+
+    /// The ledger snapshot at the moment the grand total peaked — a
+    /// decomposition that sums exactly to [`MemoryTimeline::total_peak`].
+    pub fn ledger_at_total_peak(&self) -> MemoryLedger {
+        self.at_total_peak
+    }
+
     pub fn events(&self) -> &[MemEvent] {
         &self.events
     }
 
-    /// Per-class peak summary.
-    pub fn summary(&self) -> Vec<(MemClass, u64)> {
-        MemClass::ALL.iter().map(|&c| (c, self.peak(c))).collect()
+    /// Per-component peak summary.
+    pub fn summary(&self) -> Vec<(Component, u64)> {
+        Component::ALL.iter().map(|&c| (c, self.peak(c))).collect()
     }
 }
 
@@ -135,28 +134,50 @@ mod tests {
     #[test]
     fn peak_tracks_sum_not_per_class_sum() {
         let mut t = MemoryTimeline::new();
-        t.alloc(0, MemClass::Params, 100);
-        t.alloc(1, MemClass::Activations, 50);
-        t.free(2, MemClass::Activations, 50);
-        t.alloc(3, MemClass::Gradients, 20);
+        t.alloc(0, Component::ParamsDense, 100);
+        t.alloc(1, Component::ActivationAttention, 50);
+        t.free(2, Component::ActivationAttention, 50);
+        t.alloc(3, Component::Gradients, 20);
         // total peak was 150 at time 1; per-class peaks: 100 + 50 + 20 = 170.
         assert_eq!(t.total_peak(), 150);
         assert_eq!(t.total_peak_time(), 1);
-        assert_eq!(t.peak(MemClass::Params) + t.peak(MemClass::Activations) + t.peak(MemClass::Gradients), 170);
+        assert_eq!(
+            t.peak(Component::ParamsDense)
+                + t.peak(Component::ActivationAttention)
+                + t.peak(Component::Gradients),
+            170
+        );
         assert_eq!(t.total_current(), 120);
+        // The snapshot at the total peak sums to the total peak exactly.
+        assert_eq!(t.ledger_at_total_peak().total(), 150);
+        assert_eq!(t.ledger_at_total_peak().get(Component::Gradients), 0);
+    }
+
+    #[test]
+    fn group_peak_is_peak_of_group_sum() {
+        // Two activation components rising and falling together: the group
+        // peak must be the peak of their sum, not the sum of their peaks.
+        let mut t = MemoryTimeline::new();
+        t.alloc(0, Component::ActivationAttention, 30);
+        t.alloc(1, Component::ActivationMoeMlp, 20);
+        t.free(2, Component::ActivationAttention, 30);
+        t.alloc(3, Component::ActivationRouter, 5);
+        assert_eq!(t.group_peak(ComponentGroup::Activation), 50);
+        assert_eq!(t.group_current(ComponentGroup::Activation), 25);
+        assert_eq!(t.peak(Component::ActivationRouter), 5);
     }
 
     #[test]
     fn free_then_alloc_cycles() {
         let mut t = MemoryTimeline::new();
         for i in 0..10 {
-            t.alloc(i, MemClass::Activations, 10);
+            t.alloc(i, Component::ActivationAttention, 10);
         }
         for i in 10..20 {
-            t.free(i, MemClass::Activations, 10);
+            t.free(i, Component::ActivationAttention, 10);
         }
-        assert_eq!(t.current(MemClass::Activations), 0);
-        assert_eq!(t.peak(MemClass::Activations), 100);
+        assert_eq!(t.current(Component::ActivationAttention), 0);
+        assert_eq!(t.peak(Component::ActivationAttention), 100);
         assert_eq!(t.events().len(), 20);
     }
 
@@ -164,8 +185,9 @@ mod tests {
     fn event_recording_optional() {
         let mut t = MemoryTimeline::new();
         t.record_events = false;
-        t.alloc(0, MemClass::Other, 5);
+        t.alloc(0, Component::Workspace, 5);
         assert!(t.events().is_empty());
         assert_eq!(t.total_peak(), 5);
+        assert_eq!(t.peak_ledger().get(Component::Workspace), 5);
     }
 }

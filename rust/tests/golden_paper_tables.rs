@@ -1,0 +1,119 @@
+//! Golden regression tests pinning the paper's Table 6 / Table 8 (and the
+//! §5 activation formulas) **per-component byte values** through the ledger
+//! subsystem. These literals were derived from the paper's closed forms
+//! before the ledger refactor; any silent drift in the component algebra
+//! fails here with the exact byte delta.
+
+use dsmem::analysis::{DeviceMemoryReport, MemoryModel, Overheads, ZeroStrategy};
+use dsmem::config::{ActivationConfig, CaseStudy};
+use dsmem::ledger::{Component, ComponentGroup};
+
+fn mm() -> MemoryModel {
+    let cs = CaseStudy::paper();
+    MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes)
+}
+
+// Table 6 parameter counts (BF16 → ×2 bytes).
+const T6_DENSE_PARAMS: u64 = 429_719_552; // "Non-MoE Part"
+const T6_MOE_PARAMS: u64 = 5_820_645_376; // "MoE"
+const T6_TOTAL_PARAMS: u64 = 6_250_364_928; // "Total"
+
+// Table 8 sharded parameter count: dense/DP32 + moe/EDP8.
+const T8_SHARDED_DENSE: u64 = T6_DENSE_PARAMS / 32; // 13,428,736
+const T8_SHARDED_MOE: u64 = T6_MOE_PARAMS / 8; // 727,580,672
+
+#[test]
+fn golden_table6_component_bytes() {
+    let dev = mm().device_static_params();
+    let l = dev.ledger();
+    assert_eq!(l.get(Component::ParamsDense), 2 * T6_DENSE_PARAMS); // 859,439,104
+    assert_eq!(l.get(Component::ParamsMoe), 2 * T6_MOE_PARAMS); // 11,641,290,752
+    assert_eq!(l.total(), 2 * T6_TOTAL_PARAMS); // 12,500,729,856
+    assert_eq!(l.total(), dev.total_bytes());
+}
+
+#[test]
+fn golden_table8_per_component_bytes() {
+    // Every Table 8 row, exact bytes per ledger component:
+    //   params: BF16 (2 B);  grads: FP32 (4 B);  optimizer: 8 B/param.
+    let zr = mm().zero_report();
+    assert_eq!(zr.sharded_params, T8_SHARDED_DENSE + T8_SHARDED_MOE); // 741,009,408
+
+    let full_g = 4 * T6_TOTAL_PARAMS; // 25,001,459,712
+    let full_o = 8 * T6_TOTAL_PARAMS; // 50,002,919,424
+    let sh = T8_SHARDED_DENSE + T8_SHARDED_MOE;
+
+    let expect = [
+        // (strategy, dense, moe, grads, optimizer)
+        (ZeroStrategy::None, 2 * T6_DENSE_PARAMS, 2 * T6_MOE_PARAMS, full_g, full_o),
+        (ZeroStrategy::Os, 2 * T6_DENSE_PARAMS, 2 * T6_MOE_PARAMS, full_g, 8 * sh),
+        (ZeroStrategy::OsG, 2 * T6_DENSE_PARAMS, 2 * T6_MOE_PARAMS, 4 * sh, 8 * sh),
+        (ZeroStrategy::OsGParams, 2 * T8_SHARDED_DENSE, 2 * T8_SHARDED_MOE, 4 * sh, 8 * sh),
+    ];
+    for (z, dense, moe, g, o) in expect {
+        let l = zr.row(z).ledger();
+        assert_eq!(l.get(Component::ParamsDense), dense, "{z:?} dense");
+        assert_eq!(l.get(Component::ParamsMoe), moe, "{z:?} moe");
+        assert_eq!(l.get(Component::Gradients), g, "{z:?} grads");
+        assert_eq!(l.get(Component::OptimizerStates), o, "{z:?} optimizer");
+        assert_eq!(l.total(), zr.row(z).total_bytes(), "{z:?} total");
+    }
+    // Headline totals (paper: 81.54 / 40.46 / 19.92 / 9.66 GB):
+    // None = 14 B/param × 6,250,364,928; os+g+params = 14 B × 741,009,408.
+    assert_eq!(zr.row(ZeroStrategy::None).total_bytes(), 14 * T6_TOTAL_PARAMS);
+    assert_eq!(zr.row(ZeroStrategy::OsGParams).total_bytes(), 14 * sh);
+}
+
+#[test]
+fn golden_activation_component_bytes_b1() {
+    // §5 closed forms at b=1, s=4096, SP=TP=2, AC None, 4-layer stage:
+    //   attention = 10bsh + 8bs(dcq+dc) + 16bs·dh·nh + 8bs·dhr·nh + 10b·nh·s²
+    //   router    = 16bsN + 8bsN_r
+    //   moe-mlp   = the remaining MoE-tape terms.
+    let mm = mm();
+    let act = ActivationConfig::paper(1);
+    let rep = mm.activation_report(&act);
+    let l = rep.stage_ledger(act.recompute);
+    assert_eq!(l.get(Component::ActivationAttention), 23_177_723_904);
+    assert_eq!(l.get(Component::ActivationRouter), 17_039_360);
+    assert_eq!(l.get(Component::ActivationMoeMlp), 1_476_395_008);
+    assert_eq!(l.get(Component::ActivationDenseMlp), 0);
+    assert_eq!(l.get(Component::ActivationEmbedding), 0);
+    assert_eq!(l.total(), 24_671_158_272);
+    assert_eq!(l.total(), rep.total_stage_bytes(act.recompute));
+}
+
+#[test]
+fn golden_end_to_end_report_is_bit_identical_to_flat_sums() {
+    // The full per-device report at the paper midpoint overheads, ZeRO None:
+    // allocated = P+G+O (Table 8 row 1) + activations (Table 10, b=1), then
+    // comm buffers (1.4 GiB) and fragmentation (15% of allocated).
+    let mm = mm();
+    let act = ActivationConfig::paper(1);
+    let ov = Overheads::paper_midpoint();
+    let rep = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::None, ov);
+    let allocated: u64 = 87_505_108_992 + 24_671_158_272; // = 112,176,267,264
+    assert_eq!(
+        rep.ledger.group_total(ComponentGroup::Params)
+            + rep.ledger.get(Component::Gradients)
+            + rep.ledger.get(Component::OptimizerStates)
+            + rep.ledger.group_total(ComponentGroup::Activation),
+        allocated
+    );
+    assert_eq!(rep.comm_buffer_bytes(), (1.4 * dsmem::GIB) as u64);
+    assert_eq!(rep.fragmentation_bytes(), ov.fragmentation_bytes(allocated));
+    assert_eq!(
+        rep.total_bytes(),
+        allocated + (1.4 * dsmem::GIB) as u64 + ov.fragmentation_bytes(allocated)
+    );
+}
+
+#[test]
+fn golden_v2_lite_total_params_in_published_range() {
+    // DeepSeek-V2-Lite advertises 15.7B total parameters; our census (with
+    // the direct-W^Q query path) must land on it.
+    let m = dsmem::config::ModelConfig::deepseek_v2_lite();
+    let census = dsmem::model::ModelParams::build(&m, dsmem::model::CountMode::Strict);
+    let total = census.total() as f64 / 1e9;
+    assert!((15.2..16.2).contains(&total), "v2-lite total = {total} B");
+}

@@ -1,25 +1,26 @@
 //! Integration: the cluster simulator against the analytical model (the E2
 //! bridge), across every registered schedule, ZeRO strategies and recompute
-//! policies.
+//! policies — asserted **per ledger component**, not just in total.
 
 use dsmem::analysis::stages::StageSplit;
 use dsmem::analysis::total::Overheads;
 use dsmem::analysis::{ActivationReport, MemoryModel, ZeroStrategy};
-use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
+use dsmem::config::{ActivationConfig, CaseStudy};
+use dsmem::ledger::{Component, ComponentGroup, MemoryLedger};
 use dsmem::model::CountMode;
 use dsmem::planner::{Candidate, Evaluator};
 use dsmem::schedule::{registry, Schedule, ScheduleSpec};
-use dsmem::sim::{MemClass, SimEngine};
+use dsmem::sim::SimEngine;
 
 fn mm() -> MemoryModel {
     let cs = CaseStudy::paper();
     MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes)
 }
 
-/// The engine's per-microbatch byte model for one stage: MLA for every
+/// The engine's per-microbatch component ledger for one stage: MLA for every
 /// layer, MoE for the stage's MoE layers (dense stages charge MLA only —
 /// documented conservative choice).
-fn stage_per_mb(mm: &MemoryModel, act: &ActivationConfig, stage: usize) -> u64 {
+fn stage_mb_ledger(mm: &MemoryModel, act: &ActivationConfig, stage: usize) -> MemoryLedger {
     let plan = mm.stage_plan();
     let ar = ActivationReport::build(
         &mm.model,
@@ -27,16 +28,19 @@ fn stage_per_mb(mm: &MemoryModel, act: &ActivationConfig, stage: usize) -> u64 {
         act,
         plan.stages[stage].num_layers,
     );
-    ar.mla.device_bytes(act.recompute) * plan.stages[stage].num_layers
-        + ar.moe.device_bytes(act.recompute) * plan.stages[stage].moe_layers
+    ar.mla
+        .ledger(act.recompute)
+        .scale(plan.stages[stage].num_layers)
+        .merged(&ar.moe.ledger(act.recompute).scale(plan.stages[stage].moe_layers))
 }
 
 #[test]
 fn sim_activation_peak_equals_analytic_for_every_stage_and_schedule() {
-    // The E2 bridge, per stage, for EVERY registered schedule: the replayed
-    // activation peak must equal the per-unit tape times the schedule's
-    // analytic in-flight bound, and the replayed in-flight count must equal
-    // the analytic one.
+    // The E2 bridge, per stage and per ledger component, for EVERY
+    // registered schedule: the replayed peak of each activation component
+    // must equal the per-unit component tape times the schedule's analytic
+    // in-flight bound, and the replayed in-flight count must equal the
+    // analytic one.
     let mm = mm();
     let act = ActivationConfig::paper(1);
     let m = 32; // admits every registered schedule at p=16 (dualpipe: m = 2p)
@@ -49,12 +53,27 @@ fn sim_activation_peak_equals_analytic_for_every_stage_and_schedule() {
         let schedule = Schedule::build(spec, 16, m).unwrap();
         let unit_div = sched.units_per_microbatch().max(1);
         for st in &res.stages {
-            let per_unit = stage_per_mb(&mm, &act, st.stage as usize) / unit_div;
+            let per_unit = stage_mb_ledger(&mm, &act, st.stage as usize).div(unit_div);
             let units = schedule.analytic_inflight(st.stage);
             assert_eq!(st.peak_inflight, units, "{} stage {}", spec.name(), st.stage);
+            for (c, bytes) in per_unit.iter() {
+                if c.group() != ComponentGroup::Activation {
+                    continue;
+                }
+                assert_eq!(
+                    st.timeline.peak(c),
+                    bytes * units,
+                    "{} stage {} component {}",
+                    spec.name(),
+                    st.stage,
+                    c.name()
+                );
+            }
+            // The group peak is the component sum at the peak (they rise and
+            // fall together), so the total-wise bridge follows.
             assert_eq!(
-                st.timeline.peak(MemClass::Activations),
-                per_unit * units,
+                st.timeline.group_peak(ComponentGroup::Activation),
+                per_unit.group_total(ComponentGroup::Activation) * units,
                 "{} stage {}",
                 spec.name(),
                 st.stage
@@ -66,10 +85,14 @@ fn sim_activation_peak_equals_analytic_for_every_stage_and_schedule() {
 }
 
 #[test]
-fn sim_peak_equals_planner_prediction_for_every_schedule() {
-    // The planner side of the E2 bridge: for every registered schedule, the
-    // sim-engine's replayed activation peak at the analysed stage must equal
-    // the Evaluator's analytic activation_bytes for the same candidate.
+fn sim_ledger_equals_planner_ledger_per_component_for_every_schedule() {
+    // The planner side of the E2 bridge, component-wise: for every
+    // registered schedule, the sim-replayed peak ledger at the analysed
+    // stage must equal the Evaluator's analytic ledger for the same
+    // candidate on every non-transient component — params (dense & MoE,
+    // including DualPipe's ×2), gradients, optimizer states and every
+    // activation component. (Comm buffers and workspace are transient sim
+    // artifacts; fragmentation/KV-cache are zero on both sides here.)
     let cs = CaseStudy::paper();
     let mm = mm();
     let act = ActivationConfig::paper(1);
@@ -92,9 +115,23 @@ fn sim_peak_equals_planner_prediction_for_every_schedule() {
             zero: ZeroStrategy::OsG,
             schedule: spec,
         });
+        let sim = res.stages[heaviest].peak_ledger();
+        for c in Component::ALL {
+            if matches!(c.group(), ComponentGroup::CommBuffer | ComponentGroup::Workspace) {
+                continue;
+            }
+            assert_eq!(
+                sim.get(c),
+                point.ledger.get(c),
+                "{} component {}",
+                spec.name(),
+                c.name()
+            );
+        }
+        // Totals follow from the component equality.
         assert_eq!(
-            res.stages[heaviest].timeline.peak(MemClass::Activations),
-            point.activation_bytes,
+            res.stages[heaviest].timeline.group_peak(ComponentGroup::Activation),
+            point.activation_bytes(),
             "{}",
             spec.name()
         );
@@ -103,8 +140,8 @@ fn sim_peak_equals_planner_prediction_for_every_schedule() {
 
 #[test]
 fn static_classes_match_zero_rows_scaled() {
-    // Params/grads/optimizer in the sim must track the ZeRO table for the
-    // analysed (heaviest) stage.
+    // Params (dense + MoE) / grads / optimizer in the sim must track the
+    // ZeRO table for the analysed (heaviest) stage, component for component.
     let mm = mm();
     let act = ActivationConfig::paper(1);
     for z in ZeroStrategy::ALL {
@@ -113,17 +150,19 @@ fn static_classes_match_zero_rows_scaled() {
         let zr = mm.zero_report();
         let row = zr.row(z);
         let st = &res.stages[1]; // stages 1..14 are the analysed archetype
-        assert_eq!(st.timeline.peak(MemClass::Params), row.params_bytes, "{z:?}");
-        assert_eq!(st.timeline.peak(MemClass::Gradients), row.gradient_bytes);
-        assert_eq!(st.timeline.peak(MemClass::Optimizer), row.optimizer_bytes);
+        assert_eq!(st.timeline.peak(Component::ParamsDense), row.params_dense_bytes, "{z:?}");
+        assert_eq!(st.timeline.peak(Component::ParamsMoe), row.params_moe_bytes, "{z:?}");
+        assert_eq!(st.timeline.group_peak(ComponentGroup::Params), row.params_bytes, "{z:?}");
+        assert_eq!(st.timeline.peak(Component::Gradients), row.gradient_bytes);
+        assert_eq!(st.timeline.peak(Component::OptimizerStates), row.optimizer_bytes);
     }
 }
 
 #[test]
 fn dualpipe_params_double_but_shards_do_not() {
-    // DualPipe keeps both replicas' stage weights resident (params ×2);
-    // gradient and optimizer shards stay single (reduced/sharded across the
-    // mirrored pair).
+    // DualPipe keeps both replicas' stage weights resident (params ×2, in
+    // both partitions); gradient and optimizer shards stay single
+    // (reduced/sharded across the mirrored pair).
     let mm = mm();
     let act = ActivationConfig::paper(1);
     let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
@@ -131,9 +170,10 @@ fn dualpipe_params_double_but_shards_do_not() {
     let zr = mm.zero_report();
     let row = zr.row(ZeroStrategy::OsG);
     let st = &res.stages[1];
-    assert_eq!(st.timeline.peak(MemClass::Params), 2 * row.params_bytes);
-    assert_eq!(st.timeline.peak(MemClass::Gradients), row.gradient_bytes);
-    assert_eq!(st.timeline.peak(MemClass::Optimizer), row.optimizer_bytes);
+    assert_eq!(st.timeline.peak(Component::ParamsDense), 2 * row.params_dense_bytes);
+    assert_eq!(st.timeline.peak(Component::ParamsMoe), 2 * row.params_moe_bytes);
+    assert_eq!(st.timeline.peak(Component::Gradients), row.gradient_bytes);
+    assert_eq!(st.timeline.peak(Component::OptimizerStates), row.optimizer_bytes);
 }
 
 #[test]
@@ -145,8 +185,8 @@ fn full_recompute_beats_gpipe_none_by_orders_of_magnitude() {
     let full = SimEngine::new(&mm, ActivationConfig::paper_full_recompute(1), ZeroStrategy::OsG)
         .run(ScheduleSpec::GPipe, 16)
         .unwrap();
-    let a = none.peak_stage().timeline.peak(MemClass::Activations);
-    let b = full.peak_stage().timeline.peak(MemClass::Activations);
+    let a = none.peak_stage().timeline.group_peak(ComponentGroup::Activation);
+    let b = full.peak_stage().timeline.group_peak(ComponentGroup::Activation);
     assert!(a / b > 50, "AC none {a} vs full {b}");
 }
 
@@ -161,11 +201,11 @@ fn interleaved_holds_more_than_plain_1f1b() {
     let plain = eng.run(ScheduleSpec::OneFOneB, 32).unwrap();
     let inter = eng.run(ScheduleSpec::Interleaved1F1B { chunks: 2 }, 32).unwrap();
     assert!(
-        inter.stages[0].timeline.peak(MemClass::Activations)
-            > plain.stages[0].timeline.peak(MemClass::Activations),
+        inter.stages[0].timeline.group_peak(ComponentGroup::Activation)
+            > plain.stages[0].timeline.group_peak(ComponentGroup::Activation),
         "inter {} vs plain {}",
-        inter.stages[0].timeline.peak(MemClass::Activations),
-        plain.stages[0].timeline.peak(MemClass::Activations),
+        inter.stages[0].timeline.group_peak(ComponentGroup::Activation),
+        plain.stages[0].timeline.group_peak(ComponentGroup::Activation),
     );
 }
 
@@ -178,10 +218,10 @@ fn comm_buffers_stay_in_paper_band() {
     let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
     let res = eng.run(ScheduleSpec::OneFOneB, 8).unwrap();
     for st in &res.stages {
-        let peak = st.timeline.peak(MemClass::CommBuffers) as f64 / dsmem::GIB;
+        let peak = st.timeline.peak(Component::CommBuffer) as f64 / dsmem::GIB;
         assert!((0.1..=2.0).contains(&peak), "stage {} buffers {peak} GiB", st.stage);
         assert!(
-            st.timeline.peak(MemClass::CommBuffers) <= dsmem::sim::COMM_BUFFER_CAP_BYTES
+            st.timeline.peak(Component::CommBuffer) <= dsmem::sim::COMM_BUFFER_CAP_BYTES
         );
     }
 }
@@ -195,5 +235,13 @@ fn fragmentation_replay_stays_in_paper_band() {
     for st in res.stages.iter().take(4) {
         let f = st.alloc_stats.unwrap().fragmentation();
         assert!((0.0..0.35).contains(&f), "stage {} frag {f}", st.stage);
+        // The peak ledger surfaces the same estimate in bytes.
+        let stats = st.alloc_stats.unwrap();
+        assert_eq!(
+            st.peak_ledger().get(Component::Fragmentation),
+            stats.peak_reserved - stats.peak_allocated,
+            "stage {}",
+            st.stage
+        );
     }
 }

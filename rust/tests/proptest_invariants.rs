@@ -320,7 +320,7 @@ fn planner_frontier_is_feasible_and_mutually_nondominated() {
         for p in res.evaluated.iter().filter(|p| p.fits(hbm)) {
             let covered = res.frontier.iter().any(|f| {
                 pareto::dominates(f, p)
-                    || (f.total_bytes == p.total_bytes
+                    || (f.total_bytes() == p.total_bytes()
                         && f.bubble == p.bubble
                         && f.device_params == p.device_params)
             });
@@ -365,6 +365,47 @@ fn planner_shim_matches_legacy_sweep_bit_identically() {
 }
 
 #[test]
+fn ledger_totals_match_flat_arithmetic_for_random_configs() {
+    // The ledger refactor's acceptance bar, randomized: a report's grand
+    // total must equal the pre-refactor flat arithmetic (ZeroRow + stage
+    // activations + comm buffers + fragmentation-of-allocated) bit for bit,
+    // and the component groups must re-sum to their flat counterparts.
+    let mut rng = Rng64::new(0x1ED6E2);
+    let ov = Overheads::paper_midpoint();
+    for case in 0..60 {
+        let m = random_model(&mut rng);
+        if m.validate().is_err() {
+            continue;
+        }
+        let p = random_parallel(&mut rng, &m);
+        let mm = MemoryModel::new(&m, &p, DtypePolicy::paper_bf16());
+        let act = ActivationConfig {
+            micro_batch: rng.range(1, 4),
+            seq_len: 128 * rng.range(1, 8) * p.tp,
+            sp: p.tp,
+            cp: 1,
+            recompute: RecomputePolicy::None,
+        };
+        for z in ZeroStrategy::ALL {
+            let rep = DeviceMemoryReport::build(&mm, &act, z, ov);
+            let zr = mm.zero_report();
+            let row = zr.row(z);
+            let ar = mm.activation_report(&act);
+            let allocated = row.total_bytes() + ar.total_stage_bytes(act.recompute);
+            let expected =
+                allocated + ov.comm_buffer_bytes + ov.fragmentation_bytes(allocated);
+            assert_eq!(rep.total_bytes(), expected, "case {case} {z:?}");
+            assert_eq!(rep.params_bytes(), row.params_bytes, "case {case} {z:?}");
+            assert_eq!(
+                rep.activation_bytes(),
+                ar.total_stage_bytes(act.recompute),
+                "case {case} {z:?}"
+            );
+        }
+    }
+}
+
+#[test]
 fn planner_contains_paper_point_with_schedule_scaled_total() {
     // The paper's exact configuration must appear in a default world-1024
     // grid under every registered schedule. Static classes must match the
@@ -403,19 +444,27 @@ fn planner_contains_paper_point_with_schedule_scaled_total() {
             sched.analytic_inflight(heaviest, cs.parallel.pp, q.num_microbatches);
         let units = sched.units_per_microbatch().max(1);
         assert_eq!(
-            found.params_bytes,
-            sched.param_multiplier() * direct.params_bytes,
+            found.params_bytes(),
+            sched.param_multiplier() * direct.params_bytes(),
             "{}",
             spec.name()
         );
-        assert_eq!(found.gradient_bytes, direct.gradient_bytes);
-        assert_eq!(found.optimizer_bytes, direct.optimizer_bytes);
-        assert_eq!(
-            found.activation_bytes,
-            (direct.activation_bytes / units) * inflight,
-            "{}",
-            spec.name()
-        );
+        assert_eq!(found.gradient_bytes(), direct.gradient_bytes());
+        assert_eq!(found.optimizer_bytes(), direct.optimizer_bytes());
+        // Activation scaling is component-wise (each component's tape divided
+        // into schedule units, times the in-flight count) — the same
+        // arithmetic the sim engine replays.
+        for c in dsmem::ledger::Component::ALL {
+            if c.group() == dsmem::ledger::ComponentGroup::Activation {
+                assert_eq!(
+                    found.ledger.get(c),
+                    (direct.ledger.get(c) / units) * inflight,
+                    "{} {}",
+                    spec.name(),
+                    c.name()
+                );
+            }
+        }
     }
 }
 
