@@ -1,0 +1,39 @@
+//! Scenario-suite benches: spec parsing, one cheap end-to-end scenario run,
+//! and the thread-parallel whole-suite runner over the checked-in
+//! `scenarios/` directory (the latency CI pays per `suite run`).
+
+use std::path::Path;
+use std::time::Duration;
+
+use dsmem::scenario::{self, ScenarioSpec};
+use dsmem::util::bench::{bench, black_box};
+
+const MINI_SWEEP: &str = "model = \"mini\"\naction = \"sweep\"\nhbm_gib = 8\n";
+
+fn main() {
+    let budget = Duration::from_millis(300);
+
+    bench("scenario: parse mini sweep spec", budget, || {
+        black_box(ScenarioSpec::from_toml(MINI_SWEEP, "bench").unwrap());
+    })
+    .report();
+
+    let spec = ScenarioSpec::from_toml(MINI_SWEEP, "bench").unwrap();
+    bench("scenario: run mini sweep (36 pts)", budget, || {
+        black_box(scenario::run_scenario(&spec).unwrap().pretty());
+    })
+    .report();
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios");
+    let scens = scenario::load_dir(&dir).unwrap();
+    println!("whole suite: {} scenarios (single timed pass)", scens.len());
+    let t = std::time::Instant::now();
+    let outcomes = scenario::run_all(&scens).unwrap();
+    let bytes: usize = outcomes.iter().map(|o| o.snapshot.len()).sum();
+    println!(
+        "suite run: {} scenarios -> {} KiB of snapshots in {:.2?}",
+        outcomes.len(),
+        bytes / 1024,
+        t.elapsed()
+    );
+}

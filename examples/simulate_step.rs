@@ -19,7 +19,14 @@ fn main() -> anyhow::Result<()> {
 
     let mut t = Table::new(
         format!("Per-stage peak memory, one step (b=1, m={m}, os+g)"),
-        &["stage", "1F1B inflight", "1F1B act GiB", "1F1B total GiB", "GPipe act GiB", "GPipe total GiB"],
+        &[
+            "stage",
+            "1F1B inflight",
+            "1F1B act GiB",
+            "1F1B total GiB",
+            "GPipe act GiB",
+            "GPipe total GiB",
+        ],
     );
     let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
     let r1 = eng.run(ScheduleSpec::OneFOneB, m)?;

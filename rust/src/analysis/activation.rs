@@ -174,16 +174,58 @@ pub fn mla_tape(m: &ModelConfig, a: &ActivationConfig) -> ActivationTape {
         t("c_Q (W^DQ out)", format!("[{b},{s},{dcq}]"), 2 * b * s * dcq, 1, Retain::Intermediate),
         t("c_KV (W^DKV out)", format!("[{b},{s},{dc}]"), 2 * b * s * dc, 1, Retain::Intermediate),
         // 4bs(dh+dhr)nh: q = [q_nope; q_rope] and k = [k_nope; k_rope], head-sharded.
-        t("q (nope+rope)", format!("[{b},{s},{nh},{}]", dh + dhr), 2 * b * s * (dh + dhr) * nh, tp, Retain::Intermediate),
-        t("k (nope+rope)", format!("[{b},{s},{nh},{}]", dh + dhr), 2 * b * s * (dh + dhr) * nh, tp, Retain::Intermediate),
+        t(
+            "q (nope+rope)",
+            format!("[{b},{s},{nh},{}]", dh + dhr),
+            2 * b * s * (dh + dhr) * nh,
+            tp,
+            Retain::Intermediate,
+        ),
+        t(
+            "k (nope+rope)",
+            format!("[{b},{s},{nh},{}]", dh + dhr),
+            2 * b * s * (dh + dhr) * nh,
+            tp,
+            Retain::Intermediate,
+        ),
         // 2bs·dh·nh: v, head-sharded.
-        t("v (W^UV out)", format!("[{b},{s},{nh},{dh}]"), 2 * b * s * dh * nh, tp, Retain::Intermediate),
+        t(
+            "v (W^UV out)",
+            format!("[{b},{s},{nh},{dh}]"),
+            2 * b * s * dh * nh,
+            tp,
+            Retain::Intermediate,
+        ),
         // 5b·nh·s²: scores (2) + softmax probs (2) + dropout mask (1), head-sharded.
-        t("attn_scores QK^T", format!("[{b},{nh},{s},{s}]"), 2 * b * nh * s * s, tp, Retain::AttentionScore),
-        t("attn_probs softmax", format!("[{b},{nh},{s},{s}]"), 2 * b * nh * s * s, tp, Retain::AttentionScore),
-        t("attn_dropout_mask", format!("[{b},{nh},{s},{s}]"), b * nh * s * s, tp, Retain::AttentionScore),
+        t(
+            "attn_scores QK^T",
+            format!("[{b},{nh},{s},{s}]"),
+            2 * b * nh * s * s,
+            tp,
+            Retain::AttentionScore,
+        ),
+        t(
+            "attn_probs softmax",
+            format!("[{b},{nh},{s},{s}]"),
+            2 * b * nh * s * s,
+            tp,
+            Retain::AttentionScore,
+        ),
+        t(
+            "attn_dropout_mask",
+            format!("[{b},{nh},{s},{s}]"),
+            b * nh * s * s,
+            tp,
+            Retain::AttentionScore,
+        ),
         // 2bs·dh·nh: attention context (input to W^O), head-sharded.
-        t("attn_context", format!("[{b},{s},{nh},{dh}]"), 2 * b * s * dh * nh, tp, Retain::Intermediate),
+        t(
+            "attn_context",
+            format!("[{b},{s},{nh},{dh}]"),
+            2 * b * s * dh * nh,
+            tp,
+            Retain::Intermediate,
+        ),
         // bsh: output dropout mask, 1 B/elem, SP-sharded.
         t("out_dropout_mask", format!("[{b},{s},{h}]"), b * s * h, sp, Retain::Intermediate),
     ];
@@ -234,10 +276,31 @@ pub fn moe_tape(m: &ModelConfig, p: &ParallelConfig, a: &ActivationConfig) -> Ac
             t("ln2_input", mlp, format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::BlockInput),
             t("ln2_output", mlp, format!("[{b},{s},{h}]"), 2 * b * s * h, sp, Retain::Intermediate),
             // 4bsN: router logits + softmax probs (bf16), undivided (post-gather).
-            t("router_logits", router, format!("[{b},{s},{n}]"), 2 * b * s * n, 1, Retain::Intermediate),
-            t("router_probs", router, format!("[{b},{s},{n}]"), 2 * b * s * n, 1, Retain::Intermediate),
+            t(
+                "router_logits",
+                router,
+                format!("[{b},{s},{n}]"),
+                2 * b * s * n,
+                1,
+                Retain::Intermediate,
+            ),
+            t(
+                "router_probs",
+                router,
+                format!("[{b},{s},{n}]"),
+                2 * b * s * n,
+                1,
+                Retain::Intermediate,
+            ),
             // 2bsN_r: selected top-k routing weights, kept under full recompute.
-            t("topk_weights", router, format!("[{b},{s},{nr}]"), 2 * b * s * nr, 1, Retain::RouterOutput),
+            t(
+                "topk_weights",
+                router,
+                format!("[{b},{s},{nr}]"),
+                2 * b * s * nr,
+                1,
+                Retain::RouterOutput,
+            ),
             // Routed experts on this rank: 3·E·h (input 2B + combine mask 1B)
             // + 8·E·h_E (gate, up, silu, gated product — all 2B).
             t(
@@ -500,7 +563,10 @@ mod tests {
         let (m, p, a) = setup(1);
         let tape = moe_tape(&m, &p, &a);
         let l = tape.ledger(RecomputePolicy::Full);
-        assert_eq!(l.get(MemComponent::ActivationRouter), 2 * a.micro_batch * a.seq_len * m.num_experts_per_tok);
+        assert_eq!(
+            l.get(MemComponent::ActivationRouter),
+            2 * a.micro_batch * a.seq_len * m.num_experts_per_tok
+        );
         let l_none = tape.ledger(RecomputePolicy::None);
         assert!(l_none.get(MemComponent::ActivationRouter) > l.get(MemComponent::ActivationRouter));
     }

@@ -178,7 +178,12 @@ impl MemoryModel {
     }
 
     /// Full per-device memory report (params+grads+opt+act+overheads).
-    pub fn device_memory(&self, act: &ActivationConfig, zero: ZeroStrategy, ov: Overheads) -> DeviceMemoryReport {
+    pub fn device_memory(
+        &self,
+        act: &ActivationConfig,
+        zero: ZeroStrategy,
+        ov: Overheads,
+    ) -> DeviceMemoryReport {
         DeviceMemoryReport::build(self, act, zero, ov)
     }
 }

@@ -20,6 +20,26 @@ pub enum StageSplit {
 }
 
 impl StageSplit {
+    /// Parse the CLI / scenario-suite spelling: `front`, `balanced`, or
+    /// explicit per-stage layer counts `N,N,...`.
+    pub fn parse(s: &str) -> anyhow::Result<StageSplit> {
+        Ok(match s {
+            "front" | "front-loaded" => StageSplit::FrontLoaded,
+            "balanced" => StageSplit::Balanced,
+            spec => {
+                let counts: Vec<u64> = spec
+                    .split(',')
+                    .map(|x| {
+                        x.trim()
+                            .parse::<u64>()
+                            .map_err(|e| anyhow::anyhow!("bad split entry {x:?}: {e}"))
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+                StageSplit::Custom(counts)
+            }
+        })
+    }
+
     /// Resolve to per-stage layer counts.
     pub fn layer_counts(&self, l: u64, pp: u64) -> anyhow::Result<Vec<u64>> {
         let counts = match self {
@@ -135,7 +155,12 @@ mod tests {
     use crate::config::ModelConfig;
 
     fn plan() -> StagePlan {
-        StagePlan::build(&ModelConfig::deepseek_v3(), 16, StageSplit::FrontLoaded, CountMode::PaperCompat)
+        StagePlan::build(
+            &ModelConfig::deepseek_v3(),
+            16,
+            StageSplit::FrontLoaded,
+            CountMode::PaperCompat,
+        )
     }
 
     #[test]

@@ -214,7 +214,8 @@ mod tests {
         let b = DeviceMemoryReport::build(&mm, &act, ZeroStrategy::OsG, large);
         assert_eq!(a.fragmentation_bytes(), b.fragmentation_bytes());
         // And the helper is the single source of truth for the base.
-        let base = a.params_bytes() + a.gradient_bytes() + a.optimizer_bytes() + a.activation_bytes();
+        let base =
+            a.params_bytes() + a.gradient_bytes() + a.optimizer_bytes() + a.activation_bytes();
         assert_eq!(a.fragmentation_bytes(), small.fragmentation_bytes(base));
         assert_eq!(b.total_bytes() - a.total_bytes(), 2 * crate::GIB as u64);
     }

@@ -29,6 +29,17 @@ impl ZeroStrategy {
     pub const ALL: [ZeroStrategy; 4] =
         [ZeroStrategy::None, ZeroStrategy::Os, ZeroStrategy::OsG, ZeroStrategy::OsGParams];
 
+    /// Parse the CLI / scenario-suite spelling: `none|os|os_g|os_g_params`.
+    pub fn parse(s: &str) -> anyhow::Result<ZeroStrategy> {
+        Ok(match s {
+            "none" => ZeroStrategy::None,
+            "os" => ZeroStrategy::Os,
+            "os_g" => ZeroStrategy::OsG,
+            "os_g_params" => ZeroStrategy::OsGParams,
+            other => anyhow::bail!("unknown zero strategy: {other}"),
+        })
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             ZeroStrategy::None => "None",

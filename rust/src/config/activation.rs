@@ -17,6 +17,16 @@ pub enum RecomputePolicy {
 }
 
 impl RecomputePolicy {
+    /// Parse the CLI / scenario-suite spelling: `none|selective|full`.
+    pub fn parse(s: &str) -> anyhow::Result<RecomputePolicy> {
+        Ok(match s {
+            "none" => RecomputePolicy::None,
+            "selective" => RecomputePolicy::SelectiveAttention,
+            "full" => RecomputePolicy::Full,
+            other => anyhow::bail!("recompute must be none|selective|full, got {other}"),
+        })
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             RecomputePolicy::None => "None",

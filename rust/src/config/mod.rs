@@ -38,6 +38,36 @@ impl CaseStudy {
         }
     }
 
+    /// Resolve a named model preset to a validated case study with that
+    /// model's natural parallel layout — the single spelling shared by the
+    /// CLI's `--model` flag and the scenario suite's `model` key.
+    pub fn preset(model: &str) -> anyhow::Result<Self> {
+        let mut cs = CaseStudy::paper();
+        match model {
+            "deepseek-v3" | "v3" => {}
+            "deepseek-v2" | "v2" => {
+                cs.model = ModelConfig::deepseek_v2();
+                // 60 layers front-loaded over PP16 would leave stage 15 empty;
+                // PP10 (6 layers per stage) is v2's natural even split.
+                cs.parallel = ParallelConfig { dp: 16, tp: 2, pp: 10, ep: 8, etp: 1 };
+            }
+            "deepseek-v2-lite" | "v2-lite" => {
+                cs.model = ModelConfig::deepseek_v2_lite();
+                // 27 layers → PP9 (3 per stage); EP8 divides the 64 experts.
+                cs.parallel = ParallelConfig { dp: 8, tp: 2, pp: 9, ep: 8, etp: 1 };
+            }
+            "mini" => {
+                cs.model = ModelConfig::mini();
+                cs.parallel = ParallelConfig { dp: 1, tp: 1, pp: 2, ep: 1, etp: 1 };
+                cs.activation.sp = 1;
+                cs.activation.seq_len = 128;
+            }
+            other => anyhow::bail!("unknown model preset: {other}"),
+        }
+        cs.validate()?;
+        Ok(cs)
+    }
+
     /// Validate cross-config consistency (e.g. EP divides expert count, PP divides
     /// layers, SP implies TP match).
     pub fn validate(&self) -> anyhow::Result<()> {

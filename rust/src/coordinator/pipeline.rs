@@ -337,7 +337,8 @@ impl PipelineCoordinator {
                         residuals.insert((s, mb), (held, res_bytes, inter_bytes));
 
                         if is_last {
-                            losses[mb] = y.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?[0];
+                            losses[mb] =
+                                y.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?[0];
                         } else {
                             st.tracker.alloc(MemTag::IoBuffers, literal_bytes(&y));
                             fwd_out.insert((s, mb), y);

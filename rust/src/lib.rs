@@ -31,6 +31,13 @@
 //!    (peak memory, pipeline bubble, per-device parameters). Every "what fits?"
 //!    question — *which schedule* included — is one planner query.
 //!
+//! 5. **Declarative scenario suite** ([`scenario`]) — checked-in TOML-subset
+//!    case studies (model preset + overrides + budget + one of
+//!    `plan`/`sweep`/`simulate`/`kvcache`) executed thread-parallel through
+//!    the pillars above and rendered to canonical JSON snapshots, byte-compared
+//!    against golden files in CI and `cargo test` — one regression surface
+//!    over every subsystem.
+//!
 //! All three memory-producing pillars speak one algebra: the component-tagged
 //! [`ledger::MemoryLedger`] (params dense/MoE, gradients, optimizer states,
 //! per-block activations, comm buffers, fragmentation, KV cache), rendered by
@@ -66,6 +73,7 @@ pub mod planner;
 pub mod report;
 #[cfg(feature = "live")]
 pub mod runtime;
+pub mod scenario;
 pub mod schedule;
 pub mod sim;
 #[cfg(feature = "live")]

@@ -7,19 +7,24 @@
 //! * `plan`      — search the full parallel-configuration grid for what fits;
 //! * `sweep`     — (b × AC × ZeRO) feasibility sweep against an HBM budget;
 //! * `simulate`  — run the cluster memory simulator over a schedule;
+//! * `suite`     — run the declarative scenario suite against its golden
+//!   snapshots (`run|list|diff`, `--bless` to regenerate);
 //! * `train`     — run the live mini pipeline training loop (needs artifacts
 //!   and the `live` cargo feature).
 //!
 //! `plan`, `sweep` and `bubble` all route through [`dsmem::planner`];
-//! `report` and the `--breakdown` flags render [`dsmem::ledger`] ledgers.
+//! `report` and the `--breakdown` flags render [`dsmem::ledger`] ledgers;
+//! `suite` routes through [`dsmem::scenario`].
 
 use dsmem::analysis::{MemoryModel, Overheads, StageSplit, ZeroStrategy};
-use dsmem::config::{ActivationConfig, CaseStudy, ParallelConfig, RecomputePolicy};
-use dsmem::planner::{self, PlanQuery, SearchSpace};
+use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
+use dsmem::planner;
 use dsmem::report::{fmt_bytes, gib, ledger_table, tables::paper_table};
+use dsmem::scenario::{self, SnapshotStatus};
 use dsmem::schedule::ScheduleSpec;
 use dsmem::sim::{ComponentGroup, SimEngine};
 use std::collections::HashMap;
+use std::path::PathBuf;
 
 const USAGE: &str = "\
 dsmem — memory analysis of DeepSeek-style MoE training (Zhang & Su 2025 reproduction)
@@ -39,8 +44,11 @@ COMMANDS:
   sweep      Feasibility sweep               [--hbm-gib G] [--model M] [--breakdown]
                                              [--split front|balanced|N,N,...]
   simulate   Cluster memory simulation       [--schedule gpipe|1f1b|interleaved|dualpipe|zb-h1]
-             [--microbatches M] [--micro-batch B] [--chunks V] [--recompute] [--frag]
-             [--zero none|os|os_g|os_g_params] [--trace FILE.json] [--model M] [--breakdown]
+             [--microbatches M] [--micro-batch B] [--chunks V] [--frag]
+             [--recompute none|selective|full] [--zero none|os|os_g|os_g_params]
+             [--trace FILE.json] [--model M] [--breakdown]
+  suite      Declarative scenario suite      run|list|diff [DIR] [--golden DIR] [--bless]
+             vs golden snapshots             [--report FILE]   (DSMEM_BLESS=1 also blesses)
   kvcache    Inference KV-cache analysis     [--tokens N] [--model M]  (MLA vs MHA vs GQA)
   bubble     Pipeline bubble-vs-memory sweep [--pp P] [--model M]
   train      Live mini pipeline training     [--artifacts DIR] [--steps N] [--dp D]
@@ -106,70 +114,10 @@ impl Args {
     }
 }
 
+/// Resolve `--model` through the shared preset table
+/// ([`CaseStudy::preset`] — the same spelling the scenario suite uses).
 fn case_study(model: &str) -> anyhow::Result<CaseStudy> {
-    let mut cs = CaseStudy::paper();
-    match model {
-        "deepseek-v3" | "v3" => {}
-        "deepseek-v2" | "v2" => {
-            cs.model = dsmem::config::ModelConfig::deepseek_v2();
-            // 60 layers front-loaded over PP16 would leave stage 15 empty;
-            // PP10 (6 layers per stage) is v2's natural even split.
-            cs.parallel = ParallelConfig { dp: 16, tp: 2, pp: 10, ep: 8, etp: 1 };
-        }
-        "deepseek-v2-lite" | "v2-lite" => {
-            cs.model = dsmem::config::ModelConfig::deepseek_v2_lite();
-            // 27 layers → PP9 (3 per stage); EP8 divides the 64 experts.
-            cs.parallel = ParallelConfig { dp: 8, tp: 2, pp: 9, ep: 8, etp: 1 };
-        }
-        "mini" => {
-            cs.model = dsmem::config::ModelConfig::mini();
-            cs.parallel = ParallelConfig { dp: 1, tp: 1, pp: 2, ep: 1, etp: 1 };
-            cs.activation.sp = 1;
-            cs.activation.seq_len = 128;
-        }
-        other => anyhow::bail!("unknown model preset: {other}"),
-    }
-    cs.validate()?;
-    Ok(cs)
-}
-
-fn zero_of(s: &str) -> anyhow::Result<ZeroStrategy> {
-    Ok(match s {
-        "none" => ZeroStrategy::None,
-        "os" => ZeroStrategy::Os,
-        "os_g" => ZeroStrategy::OsG,
-        "os_g_params" => ZeroStrategy::OsGParams,
-        other => anyhow::bail!("unknown zero strategy: {other}"),
-    })
-}
-
-fn recompute_of(s: &str) -> anyhow::Result<RecomputePolicy> {
-    Ok(match s {
-        "none" => RecomputePolicy::None,
-        "selective" => RecomputePolicy::SelectiveAttention,
-        "full" => RecomputePolicy::Full,
-        other => anyhow::bail!("recompute must be none|selective|full, got {other}"),
-    })
-}
-
-/// Parse a `--split` spelling: `front`, `balanced`, or explicit per-stage
-/// layer counts `N,N,...`.
-fn split_of(s: &str) -> anyhow::Result<StageSplit> {
-    Ok(match s {
-        "front" | "front-loaded" => StageSplit::FrontLoaded,
-        "balanced" => StageSplit::Balanced,
-        spec => {
-            let counts: Vec<u64> = spec
-                .split(',')
-                .map(|x| {
-                    x.trim()
-                        .parse::<u64>()
-                        .map_err(|e| anyhow::anyhow!("bad --split entry {x:?}: {e}"))
-                })
-                .collect::<anyhow::Result<_>>()?;
-            StageSplit::Custom(counts)
-        }
-    })
+    CaseStudy::preset(model)
 }
 
 /// Parse a schedule name, overriding the interleaved chunk count when the
@@ -248,57 +196,35 @@ fn main() -> anyhow::Result<()> {
         }
         "plan" => {
             let a = Args::parse(rest, &["json", "frontier-only", "breakdown"])?;
-            let cs = case_study(&a.get("model", "deepseek-v3"))?;
-            let hbm_gib = a.get_f64("hbm-gib", 80.0)?;
-            let world = a.get_u64("world", cs.parallel.world_size())?;
-            let mut space = SearchSpace::for_world(world);
-            space.seq_len = cs.activation.seq_len;
-            space.cp = cs.activation.cp;
-            if a.has("pp") {
-                space.pp = vec![a.get_u64("pp", 16)?];
-            }
-            if let Some(s) = a.opt("split") {
-                // PP degrees the split cannot serve are pruned by the space's
-                // validity predicate; a Custom split pins PP to its length.
-                // A split no PP in the space can serve would silently produce
-                // an empty table — reject it with a readable error instead.
-                let split = split_of(s)?;
-                if !space
-                    .pp
-                    .iter()
-                    .any(|&pp| split.layer_counts(cs.model.num_hidden_layers, pp).is_ok())
-                {
-                    anyhow::bail!(
-                        "--split {s} cannot serve any PP degree in the search space \
-                         for {} layers (custom splits must sum to the layer count \
-                         and match a PP in the space)",
-                        cs.model.num_hidden_layers
-                    );
-                }
-                space.split = split;
-            }
-            let m_step = a.get_u64("microbatches", 32)?;
-            // Schedule axis: all registered schedules by default; a named
-            // schedule restricts the search to it. A named schedule no PP in
-            // the space admits is an error, not a silently empty table.
-            match a.opt("schedule") {
-                None | Some("all") => {}
-                Some(s) => {
-                    let spec = ScheduleSpec::parse(s)?;
-                    let sched = spec.resolve();
-                    if !space.pp.iter().any(|&pp| sched.validate(pp, m_step).is_ok()) {
-                        anyhow::bail!(
-                            "schedule {} cannot run at any PP in the search space with \
-                             --microbatches {m_step} (dualpipe needs an even PP and m >= 2*PP)",
-                            sched.name()
-                        );
-                    }
-                    space.schedule = vec![spec];
-                }
-            }
-            let mut query = PlanQuery::new(space, (hbm_gib * dsmem::GIB) as u64);
-            query.top_k = a.get_u64("top-k", 10)? as usize;
-            query.num_microbatches = m_step;
+            let model = a.get("model", "deepseek-v3");
+            let cs = case_study(&model)?;
+            // One query builder for the CLI and the scenario suite: the flags
+            // resolve into a plan ScenarioSpec and route through
+            // scenario::runner::build_plan_query (which also rejects
+            // unserviceable --split / --schedule choices with readable
+            // errors), so `dsmem plan` output and golden `plan` snapshots can
+            // never disagree on query assembly.
+            let schedule = match a.opt("schedule") {
+                None | Some("all") => None,
+                Some(s) => Some(ScheduleSpec::parse(s)?),
+            };
+            let spec = scenario::ScenarioSpec {
+                name: "cli-plan".into(),
+                model,
+                hbm_gib: a.get_f64("hbm-gib", 80.0)?,
+                overheads: Overheads::paper_midpoint(),
+                action: scenario::Action::Plan {
+                    world: a.get_u64("world", cs.parallel.world_size())?,
+                    microbatches: a.get_u64("microbatches", 32)?,
+                    top_k: a.get_u64("top-k", 10)?,
+                    schedule,
+                    pp: if a.has("pp") { Some(vec![a.get_u64("pp", 16)?]) } else { None },
+                    split: a.opt("split").map(StageSplit::parse).transpose()?,
+                },
+                case: cs,
+            };
+            let query = scenario::runner::build_plan_query(&spec)?;
+            let cs = &spec.case;
             let res = planner::plan(&cs.model, cs.dtypes, &query);
             if a.has("json") {
                 println!("{}", planner::report::to_json(&res).dump());
@@ -325,7 +251,7 @@ fn main() -> anyhow::Result<()> {
             let hbm_gib = a.get_f64("hbm-gib", 80.0)?;
             let mut mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
             if let Some(s) = a.opt("split") {
-                let split = split_of(s)?;
+                let split = StageSplit::parse(s)?;
                 // Reject invalid splits here with a readable error instead of
                 // panicking inside the stage-plan builder.
                 split.layer_counts(cs.model.num_hidden_layers, cs.parallel.pp)?;
@@ -365,10 +291,10 @@ fn main() -> anyhow::Result<()> {
             let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
             let act = ActivationConfig {
                 micro_batch: a.get_u64("micro-batch", 1)?,
-                recompute: recompute_of(&a.get("recompute", "none"))?,
+                recompute: RecomputePolicy::parse(&a.get("recompute", "none"))?,
                 ..cs.activation
             };
-            let zero = zero_of(&a.get("zero", "none"))?;
+            let zero = ZeroStrategy::parse(&a.get("zero", "none"))?;
             let ov = if a.has("no-overheads") {
                 Overheads::none()
             } else {
@@ -428,17 +354,18 @@ fn main() -> anyhow::Result<()> {
             print!("{}", t.render());
         }
         "simulate" => {
-            let a = Args::parse(rest, &["recompute", "frag", "breakdown"])?;
+            let a = Args::parse(rest, &["frag", "breakdown"])?;
             let cs = case_study(&a.get("model", "deepseek-v3"))?;
             let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
-            let mut act = ActivationConfig {
+            // `--recompute` takes a policy value, exactly like `report`.
+            // (It used to be a boolean flag that silently forced Full no
+            // matter what value followed it.)
+            let act = ActivationConfig {
                 micro_batch: a.get_u64("micro-batch", 1)?,
+                recompute: RecomputePolicy::parse(&a.get("recompute", "none"))?,
                 ..cs.activation
             };
-            if a.has("recompute") {
-                act.recompute = RecomputePolicy::Full;
-            }
-            let mut eng = SimEngine::new(&mm, act, zero_of(&a.get("zero", "os_g"))?);
+            let mut eng = SimEngine::new(&mm, act, ZeroStrategy::parse(&a.get("zero", "os_g"))?);
             eng.simulate_allocator = a.has("frag");
             eng.record_events = a.opt("trace").is_some();
             let chunks = a.opt("chunks").map(str::parse::<u64>).transpose()?;
@@ -490,6 +417,126 @@ fn main() -> anyhow::Result<()> {
                     .render()
                 );
             }
+        }
+        "suite" => {
+            let Some(verb) = rest.first().map(|s| s.as_str()) else {
+                anyhow::bail!("suite needs a verb: run|list|diff (see `dsmem help`)");
+            };
+            if !matches!(verb, "run" | "list" | "diff") {
+                anyhow::bail!("suite verb must be run|list|diff, got {verb}");
+            }
+            let (dir, flag_args) = match rest.get(1) {
+                Some(d) if !d.starts_with("--") => (PathBuf::from(d), &rest[2..]),
+                _ => (PathBuf::from("scenarios"), &rest[1..]),
+            };
+            let a = Args::parse(flag_args, &["bless"])?;
+            // An explicit --bless outside `run` is a usage error — caught
+            // before anything (possibly expensive) executes. The DSMEM_BLESS
+            // env var is simply ignored off the run path, so a globally-set
+            // variable doesn't break read-only verbs.
+            if a.has("bless") && verb != "run" {
+                anyhow::bail!("blessing goldens is `suite run --bless`, not `suite {verb}`");
+            }
+            if verb == "list" {
+                for flag in ["report", "golden"] {
+                    if a.has(flag) {
+                        anyhow::bail!("--{flag} does not apply to `suite list`");
+                    }
+                }
+            }
+            let golden = a.opt("golden").map(PathBuf::from).unwrap_or_else(|| dir.join("golden"));
+            let scens = scenario::load_dir(&dir)?;
+            if verb == "list" {
+                let mut t = dsmem::report::Table::new(
+                    format!("Scenario suite: {} ({} scenarios)", dir.display(), scens.len()),
+                    &["name", "file", "model", "action"],
+                );
+                for s in &scens {
+                    t.row(vec![
+                        s.spec.name.clone(),
+                        s.file.clone(),
+                        s.spec.model.clone(),
+                        s.spec.action.name().to_string(),
+                    ]);
+                }
+                print!("{}", t.render());
+                return Ok(());
+            }
+            let bless = verb == "run" && (a.has("bless") || scenario::bless_requested());
+            // `--report FILE` must produce a file on every exit path — CI
+            // uploads it as an artifact and an absent file reads as "no
+            // news" when the real story is "nothing was compared".
+            let write_report = |summary: &str| -> anyhow::Result<()> {
+                if let Some(path) = a.opt("report") {
+                    std::fs::write(path, format!("{summary}\n"))?;
+                }
+                Ok(())
+            };
+            let outcomes = match scenario::run_all(&scens) {
+                Ok(o) => o,
+                Err(e) => {
+                    write_report(&format!("scenario suite failed to run: {e}"))?;
+                    return Err(e);
+                }
+            };
+            if bless {
+                let (written, removed) = scenario::bless(&golden, &outcomes)?;
+                let msg = format!(
+                    "blessed {written} golden snapshots into {} ({removed} stale removed)",
+                    golden.display()
+                );
+                println!("{msg}");
+                write_report(&msg)?;
+                return Ok(());
+            }
+            if verb == "run" && !scenario::has_goldens(&golden) {
+                // Bootstrap (run only — diff stays read-only): a fresh
+                // checkout has nothing to regress against (the offline dev
+                // image cannot pre-generate snapshots), so the first run
+                // writes the goldens instead of failing. CI fails the build
+                // when this path creates files (see .github/workflows/ci.yml)
+                // so uncommitted goldens can't silently disarm the gate.
+                let (written, _) = scenario::bless(&golden, &outcomes)?;
+                let msg = format!(
+                    "NOTE: no golden snapshots found — bootstrapped {written} into {}; \
+                     commit them to pin the suite (nothing was compared)",
+                    golden.display()
+                );
+                println!("{msg}");
+                write_report(&msg)?;
+                return Ok(());
+            }
+            let report = scenario::compare(&golden, &outcomes)?;
+            let mut t = dsmem::report::Table::new(
+                format!("Scenario suite vs {}", golden.display()),
+                &["scenario", "status"],
+            );
+            for (name, status) in &report.entries {
+                t.row(vec![name.clone(), status.label().to_string()]);
+            }
+            print!("{}", t.render());
+            let mut full_diff = String::new();
+            for (name, status) in &report.entries {
+                if let SnapshotStatus::Mismatch { diff } = status {
+                    full_diff.push_str(&format!("=== {name} ===\n{diff}\n"));
+                }
+            }
+            if verb == "diff" && !full_diff.is_empty() {
+                print!("{full_diff}");
+            }
+            if let Some(path) = a.opt("report") {
+                std::fs::write(path, format!("{}\n\n{full_diff}", report.summary()))?;
+                println!("wrote diff report to {path}");
+            }
+            if !report.is_clean() {
+                anyhow::bail!(
+                    "scenario suite failed: {} (re-bless with `dsmem suite run {} --bless` \
+                     after an intended change)",
+                    report.summary(),
+                    dir.display()
+                );
+            }
+            println!("scenario suite: {}", report.summary());
         }
         #[cfg(feature = "live")]
         "train" => {

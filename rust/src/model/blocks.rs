@@ -93,12 +93,20 @@ impl ModelParams {
         let (dense, moe_n) = self.census();
         let mut s = String::new();
         s.push_str(&format!("DeepSeek architecture: {}\n", m.name));
-        s.push_str(&format!("  {} layers = {} dense-FFN + {} MoE\n", self.layers.len(), dense, moe_n));
+        s.push_str(&format!(
+            "  {} layers = {} dense-FFN + {} MoE\n",
+            self.layers.len(),
+            dense,
+            moe_n
+        ));
         s.push_str("  ┌───────────────────────────────────┐\n");
         s.push_str(&format!("  │ Embedding [{} x {}]        │\n", m.vocab_size, m.hidden_size));
         s.push_str("  ├───────────────────────────────────┤  ┐\n");
         s.push_str("  │ RMSNorm → MLA → (+) residual      │  │\n");
-        s.push_str(&format!("  │ RMSNorm → dense FFN (h_F={}) │  │ × {}\n", m.intermediate_size, dense));
+        s.push_str(&format!(
+            "  │ RMSNorm → dense FFN (h_F={}) │  │ × {}\n",
+            m.intermediate_size, dense
+        ));
         s.push_str("  ├───────────────────────────────────┤  ┘\n");
         s.push_str("  │ RMSNorm → MLA → (+) residual      │  ┐\n");
         s.push_str(&format!(

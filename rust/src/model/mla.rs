@@ -31,7 +31,11 @@ pub fn matrices(m: &ModelConfig) -> Vec<ParamMatrix> {
     } else {
         // No query compression: one direct head-sharded projection covering
         // both the nope and rope halves of q.
-        mats.push(ParamMatrix::new("W^Q", vec![(m.qk_nope_head_dim + dhr) * nh, h], TpSplit::Column));
+        mats.push(ParamMatrix::new(
+            "W^Q",
+            vec![(m.qk_nope_head_dim + dhr) * nh, h],
+            TpSplit::Column,
+        ));
     }
     mats.extend([
         // KV path: h --DKV--> d_c --UK/UV--> heads; rope-k straight from h.

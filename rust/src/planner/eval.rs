@@ -211,7 +211,8 @@ impl<'a> Evaluator<'a> {
     pub fn stage_activation_bytes(&self, parallel: &ParallelConfig, act: &ActivationConfig) -> u64 {
         let plan = self.plan_for(parallel.pp);
         let heaviest = plan.heaviest_stage();
-        let ar = ActivationReport::build(self.model, parallel, act, plan.stages[heaviest].num_layers);
+        let ar =
+            ActivationReport::build(self.model, parallel, act, plan.stages[heaviest].num_layers);
         ar.total_stage_bytes(act.recompute)
     }
 
@@ -286,7 +287,9 @@ impl<'a> Evaluator<'a> {
         std::thread::scope(|s| {
             let handles: Vec<_> = cands
                 .chunks(chunk)
-                .map(|part| s.spawn(move || part.iter().map(|c| self.evaluate(c)).collect::<Vec<_>>()))
+                .map(|part| {
+                    s.spawn(move || part.iter().map(|c| self.evaluate(c)).collect::<Vec<_>>())
+                })
                 .collect();
             handles
                 .into_iter()
@@ -306,7 +309,11 @@ pub fn sweep_fixed(mm: &MemoryModel, base: &ActivationConfig, ov: Overheads) -> 
     let hbm80 = 80 * crate::GIB as u64;
     let mut out = Vec::with_capacity(36);
     for b in [1u64, 2, 4] {
-        for rc in [RecomputePolicy::None, RecomputePolicy::SelectiveAttention, RecomputePolicy::Full] {
+        for rc in [
+            RecomputePolicy::None,
+            RecomputePolicy::SelectiveAttention,
+            RecomputePolicy::Full,
+        ] {
             for z in ZeroStrategy::ALL {
                 let act = ActivationConfig { micro_batch: b, recompute: rc, ..*base };
                 let rep = DeviceMemoryReport::build(mm, &act, z, ov);

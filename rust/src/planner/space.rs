@@ -101,7 +101,12 @@ impl SearchSpace {
     ///
     /// This is the pruning predicate applied during [`SearchSpace::enumerate`];
     /// it is public so property tests can assert pruned ⊆ valid.
-    pub fn is_valid(&self, model: &ModelConfig, parallel: &ParallelConfig, act: &ActivationConfig) -> bool {
+    pub fn is_valid(
+        &self,
+        model: &ModelConfig,
+        parallel: &ParallelConfig,
+        act: &ActivationConfig,
+    ) -> bool {
         if parallel.tp == 0 || parallel.pp == 0 {
             return false;
         }

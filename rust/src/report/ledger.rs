@@ -43,7 +43,12 @@ pub fn ledger_table(title: impl Into<String>, ledger: &MemoryLedger, breakdown: 
             ]);
         }
     }
-    t.row(vec!["total".into(), fmt_bytes(total), format!("{:.2}", gib(total)), share(total, total)]);
+    t.row(vec![
+        "total".into(),
+        fmt_bytes(total),
+        format!("{:.2}", gib(total)),
+        share(total, total),
+    ]);
     t
 }
 

@@ -116,8 +116,9 @@ impl ArtifactManifest {
     /// Load `dir/manifest.json`.
     pub fn load(dir: &Path) -> anyhow::Result<Self> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("reading {} (run `make artifacts`?): {e}", path.display()))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("reading {} (run `make artifacts`?): {e}", path.display())
+        })?;
         let mut m = Self::from_json(&text)
             .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
         m.dir = dir.to_path_buf();
@@ -319,7 +320,10 @@ mod tests {
                         buf("x", vec![2, 8], "input"),
                         buf("labels", vec![2, 8], "labels"),
                     ],
-                    outputs: vec![buf("loss", vec![], "loss"), buf("res0", vec![2, 8, 4], "residual")],
+                    outputs: vec![
+                        buf("loss", vec![], "loss"),
+                        buf("res0", vec![2, 8, 4], "residual"),
+                    ],
                 },
                 ExecutableSpec {
                     name: "stage0_bwd".into(),

@@ -115,7 +115,10 @@ impl TrackedMemory {
     pub fn snapshot(&self) -> MemorySnapshot {
         let i = self.inner.lock().unwrap();
         MemorySnapshot {
-            current: MemTag::ALL.iter().map(|&t| (t, i.current.get(&t).copied().unwrap_or(0))).collect(),
+            current: MemTag::ALL
+                .iter()
+                .map(|&t| (t, i.current.get(&t).copied().unwrap_or(0)))
+                .collect(),
             peak: MemTag::ALL.iter().map(|&t| (t, i.peak.get(&t).copied().unwrap_or(0))).collect(),
             total_current: i.total_current,
             total_peak: i.total_peak,

@@ -1,0 +1,32 @@
+//! Declarative scenario suite — checked-in, diffable memory case studies.
+//!
+//! The paper's contribution is a *family* of per-device memory analyses
+//! (micro-batch × recomputation × ZeRO × 3D-parallel × schedule); a single
+//! CLI invocation can only pin one of them. A **scenario** is a small
+//! TOML-subset file naming a model preset, layout/activation overrides, an
+//! HBM budget, overheads and one action (`plan`, `sweep`, `simulate`,
+//! `kvcache`); the **runner** executes a whole directory of them
+//! thread-parallel through the existing [`crate::planner`] /
+//! [`crate::sim`] / [`crate::analysis::inference`] entry points and renders
+//! each result into a canonical, deterministically-ordered JSON snapshot.
+//!
+//! Snapshots are byte-compared against golden files under
+//! `scenarios/golden/` — one regression surface covering the analysis,
+//! planner, schedule, ledger and sim subsystems at once, wired into CI as a
+//! hard gate (`dsmem suite run scenarios/`) and into `cargo test` via
+//! `rust/tests/scenario_suite.rs`. Re-blessing after an intentional change:
+//! `dsmem suite run scenarios/ --bless` (or `DSMEM_BLESS=1 cargo test`).
+//!
+//! The runner is a pure orchestration layer: it builds the same queries the
+//! CLI builds and re-uses the report/ledger JSON renderers — property tests
+//! assert byte-equality between suite output and direct entry-point calls,
+//! so the suite can never fork into a second code path.
+
+pub mod runner;
+pub mod spec;
+
+pub use runner::{
+    bless, bless_requested, compare, has_goldens, line_diff, load_dir, run_all, run_dir,
+    run_scenario, Scenario, SnapshotStatus, SuiteOutcome, SuiteReport,
+};
+pub use spec::{Action, ScenarioSpec, TomlDoc, TomlValue};

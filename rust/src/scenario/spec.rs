@@ -1,0 +1,764 @@
+//! Declarative scenario specifications: a minimal TOML-subset parser and the
+//! [`ScenarioSpec`] it resolves into.
+//!
+//! The on-disk format is a deliberate TOML *subset* — flat `key = value`
+//! pairs under optional `[section]` headers, with string / number / boolean /
+//! flat-array values and `#` comments — parsed by a hand-rolled scanner in
+//! the style of [`crate::util::Json`] (the build is fully offline; there is
+//! no toml crate to lean on). Unknown keys and sections are *errors*, not
+//! warnings: a typo in a checked-in scenario must fail the suite loudly, not
+//! silently drop an axis from the regression surface.
+//!
+//! A scenario names a model preset, optional layout/activation overrides, an
+//! HBM budget, an overhead policy and exactly one action:
+//!
+//! ```toml
+//! # DualPipe-vs-ZB-H1 ranking at the paper's pipeline depth.
+//! model = "v3"
+//! action = "plan"
+//! hbm_gib = 80
+//!
+//! [plan]
+//! world = 1024
+//! microbatches = 32
+//! pp = [16]
+//! ```
+//!
+//! Resolution happens at parse time: [`ScenarioSpec::from_toml`] applies the
+//! overrides to [`CaseStudy::preset`] and validates the result, so a spec
+//! that parses is a spec that can run.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::stages::StageSplit;
+use crate::analysis::total::Overheads;
+use crate::analysis::zero::ZeroStrategy;
+use crate::config::{CaseStudy, RecomputePolicy};
+use crate::schedule::ScheduleSpec;
+
+// ---------------------------------------------------------------------------
+// TOML-subset values and documents
+// ---------------------------------------------------------------------------
+
+/// A scalar or flat-array value of the TOML subset.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> anyhow::Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => anyhow::bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> anyhow::Result<u64> {
+        // Values ride through f64, so only integers below 2^53 are exact;
+        // anything larger would silently round (or saturate through the
+        // cast) into a plausible-looking wrong snapshot.
+        const EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self {
+            TomlValue::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < EXACT => Ok(*n as u64),
+            TomlValue::Num(n) if *n >= EXACT => {
+                anyhow::bail!("integer {n} exceeds the exactly-representable range (< 2^53)")
+            }
+            other => anyhow::bail!("expected unsigned integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> anyhow::Result<f64> {
+        match self {
+            TomlValue::Num(n) => Ok(*n),
+            other => anyhow::bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> anyhow::Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => anyhow::bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_u64_array(&self) -> anyhow::Result<Vec<u64>> {
+        match self {
+            TomlValue::Arr(a) => a.iter().map(|v| v.as_u64()).collect(),
+            other => anyhow::bail!("expected array of unsigned integers, got {other:?}"),
+        }
+    }
+}
+
+/// A parsed scenario document: flat `key = value` maps per `[section]`, with
+/// the pre-section (root) keys under the empty section name.
+#[derive(Debug, Clone)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Parse a document. Errors carry the 1-based line number.
+    pub fn parse(text: &str) -> anyhow::Result<TomlDoc> {
+        let mut sections: BTreeMap<String, BTreeMap<String, TomlValue>> = BTreeMap::new();
+        sections.insert(String::new(), BTreeMap::new());
+        let mut current = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let n = idx + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(close) = rest.find(']') else {
+                    anyhow::bail!("line {n}: unterminated section header");
+                };
+                let name = rest[..close].trim();
+                let tail = rest[close + 1..].trim();
+                if !tail.is_empty() && !tail.starts_with('#') {
+                    anyhow::bail!("line {n}: trailing characters after section header");
+                }
+                check_bare_key(name).map_err(|e| anyhow::anyhow!("line {n}: {e}"))?;
+                if sections.contains_key(name) {
+                    anyhow::bail!("line {n}: duplicate section [{name}]");
+                }
+                sections.insert(name.to_string(), BTreeMap::new());
+                current = name.to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                anyhow::bail!("line {n}: expected `key = value` or `[section]`, got {line:?}");
+            };
+            let key = k.trim();
+            check_bare_key(key).map_err(|e| anyhow::anyhow!("line {n}: {e}"))?;
+            let value = parse_value(v).map_err(|e| anyhow::anyhow!("line {n}: {e}"))?;
+            let sec = sections.get_mut(&current).expect("current section exists");
+            if sec.insert(key.to_string(), value).is_some() {
+                anyhow::bail!("line {n}: duplicate key {key:?}");
+            }
+        }
+        Ok(TomlDoc { sections })
+    }
+
+    /// The pre-section (root) key map.
+    pub fn root(&self) -> &BTreeMap<String, TomlValue> {
+        self.sections.get("").expect("root section exists")
+    }
+
+    /// A named section's key map, if the section was declared.
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, TomlValue>> {
+        if name.is_empty() {
+            return None;
+        }
+        self.sections.get(name)
+    }
+
+    /// Declared section names (root excluded), in sorted order.
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str()).filter(|s| !s.is_empty())
+    }
+}
+
+/// Bare keys and section names: `[A-Za-z0-9_-]+`.
+fn check_bare_key(s: &str) -> anyhow::Result<()> {
+    if s.is_empty() {
+        anyhow::bail!("empty key");
+    }
+    if !s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+        anyhow::bail!("invalid key {s:?} (bare keys are [A-Za-z0-9_-]+)");
+    }
+    Ok(())
+}
+
+/// Parse one value (the right-hand side of `key = ...`), tolerating a
+/// trailing `# comment`.
+fn parse_value(src: &str) -> anyhow::Result<TomlValue> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut c = Cursor { s: &chars, i: 0 };
+    let v = c.value()?;
+    c.expect_end()?;
+    Ok(v)
+}
+
+struct Cursor<'a> {
+    s: &'a [char],
+    i: usize,
+}
+
+impl Cursor<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.s.get(self.i).copied()
+    }
+
+    fn value(&mut self) -> anyhow::Result<TomlValue> {
+        self.skip_ws();
+        match self.peek() {
+            Some('"') => Ok(TomlValue::Str(self.string()?)),
+            Some('[') => self.array(),
+            Some('t') | Some('f') => self.boolean(),
+            Some(c) if c == '-' || c == '+' || c.is_ascii_digit() => self.number(),
+            Some(c) => anyhow::bail!("unexpected character {c:?} in value"),
+            None => anyhow::bail!("missing value"),
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.i += 1; // opening quote
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => anyhow::bail!("unterminated string"),
+                Some('"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some('\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some('"') => out.push('"'),
+                        Some('\\') => out.push('\\'),
+                        Some('n') => out.push('\n'),
+                        Some('t') => out.push('\t'),
+                        Some(e) => anyhow::bail!("unsupported escape '\\{e}'"),
+                        None => anyhow::bail!("unterminated escape"),
+                    }
+                    self.i += 1;
+                }
+                Some(c) => {
+                    out.push(c);
+                    self.i += 1;
+                }
+            }
+        }
+    }
+
+    fn boolean(&mut self) -> anyhow::Result<TomlValue> {
+        for (word, val) in [("true", true), ("false", false)] {
+            let w: Vec<char> = word.chars().collect();
+            if self.s[self.i..].starts_with(&w[..]) {
+                self.i += w.len();
+                return Ok(TomlValue::Bool(val));
+            }
+        }
+        anyhow::bail!("invalid literal (expected true or false)")
+    }
+
+    fn number(&mut self) -> anyhow::Result<TomlValue> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E' | '_') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let text: String = self.s[start..self.i].iter().filter(|&&c| c != '_').collect();
+        let n: f64 = text.parse().map_err(|e| anyhow::anyhow!("invalid number {text:?}: {e}"))?;
+        Ok(TomlValue::Num(n))
+    }
+
+    fn array(&mut self) -> anyhow::Result<TomlValue> {
+        self.i += 1; // opening bracket
+        let mut out = Vec::new();
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(']') => {
+                    self.i += 1;
+                    return Ok(TomlValue::Arr(out));
+                }
+                Some('[') => anyhow::bail!("nested arrays are not supported"),
+                None => anyhow::bail!("unterminated array"),
+                _ => {}
+            }
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(',') => self.i += 1,
+                Some(']') => {}
+                Some(c) => anyhow::bail!("expected ',' or ']' in array, got {c:?}"),
+                None => anyhow::bail!("unterminated array"),
+            }
+        }
+    }
+
+    fn expect_end(&mut self) -> anyhow::Result<()> {
+        self.skip_ws();
+        match self.peek() {
+            None | Some('#') => Ok(()),
+            Some(c) => anyhow::bail!("trailing characters after value (at {c:?})"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario specifications
+// ---------------------------------------------------------------------------
+
+/// What a scenario executes. Each variant maps onto exactly one existing
+/// entry point — the suite is an orchestration layer, never a second code
+/// path (asserted by the orchestration-equivalence property tests).
+#[derive(Debug, Clone)]
+pub enum Action {
+    /// A full planner query over a device fleet ([`crate::planner::plan`]).
+    Plan {
+        world: u64,
+        microbatches: u64,
+        top_k: u64,
+        /// `None` → every registered schedule (the CLI's `--schedule all`).
+        schedule: Option<ScheduleSpec>,
+        /// `None` → the search space's default PP axis.
+        pp: Option<Vec<u64>>,
+        /// `None` → front-loaded, the paper's rule.
+        split: Option<StageSplit>,
+    },
+    /// The fixed-layout `(b × AC × ZeRO)` feasibility sweep
+    /// ([`crate::planner::sweep_fixed`]).
+    Sweep,
+    /// Schedule replay on every pipeline stage ([`crate::sim::SimEngine`]).
+    Simulate { schedule: ScheduleSpec, microbatches: u64, zero: ZeroStrategy, frag: bool },
+    /// Inference KV-cache analysis ([`crate::analysis::inference`]).
+    KvCache { tokens: u64, gqa_groups: u64 },
+}
+
+impl Action {
+    /// The action keyword (also the section name carrying its knobs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Action::Plan { .. } => "plan",
+            Action::Sweep => "sweep",
+            Action::Simulate { .. } => "simulate",
+            Action::KvCache { .. } => "kvcache",
+        }
+    }
+}
+
+/// One fully-resolved scenario: the case study (preset + overrides,
+/// validated), the budget/overhead context and the action to run.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Suite-unique name; doubles as the golden-snapshot file stem.
+    pub name: String,
+    /// The model preset the case study was resolved from.
+    pub model: String,
+    /// Resolved and validated case study.
+    pub case: CaseStudy,
+    /// Device memory budget in GiB (feasibility cuts).
+    pub hbm_gib: f64,
+    /// §6 overheads applied by `plan` and `sweep`.
+    pub overheads: Overheads,
+    pub action: Action,
+}
+
+impl ScenarioSpec {
+    /// Parse and resolve a scenario document. `default_name` (usually the
+    /// file stem) is used when the document carries no `name` key.
+    pub fn from_toml(text: &str, default_name: &str) -> anyhow::Result<ScenarioSpec> {
+        let doc = TomlDoc::parse(text)?;
+        check_keys(doc.root(), "scenario", &["name", "model", "action", "hbm_gib", "overheads"])?;
+
+        let name = match doc.root().get("name") {
+            Some(v) => v.as_str()?.to_string(),
+            None => default_name.to_string(),
+        };
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.'))
+        {
+            anyhow::bail!("scenario name {name:?} must be non-empty [A-Za-z0-9._-]+");
+        }
+
+        let model = match doc.root().get("model") {
+            Some(v) => v.as_str()?.to_string(),
+            None => "v3".to_string(),
+        };
+        let mut case = CaseStudy::preset(&model)?;
+
+        let action_str = doc
+            .root()
+            .get("action")
+            .ok_or_else(|| anyhow::anyhow!("scenario {name}: missing `action` key"))?
+            .as_str()?
+            .to_string();
+        for sec in doc.section_names() {
+            let allowed = sec == "parallel"
+                || sec == "activation"
+                || (sec == action_str && matches!(sec, "plan" | "simulate" | "kvcache"));
+            if !allowed {
+                anyhow::bail!(
+                    "scenario {name}: unexpected section [{sec}] for action {action_str:?}"
+                );
+            }
+        }
+        // Keys an action cannot consume are errors, not silence — an inert
+        // pin would bless a snapshot of a different study than the author
+        // wrote (the loud-failure guarantee in the module docs).
+        if matches!(action_str.as_str(), "simulate" | "kvcache") {
+            for k in ["hbm_gib", "overheads"] {
+                if doc.root().contains_key(k) {
+                    anyhow::bail!(
+                        "scenario {name}: `{k}` has no effect on action {action_str:?} — remove it"
+                    );
+                }
+            }
+        }
+        if action_str == "plan" {
+            if doc.section("parallel").is_some() {
+                anyhow::bail!(
+                    "scenario {name}: [parallel] has no effect on `plan` (the planner searches \
+                     the layout grid) — pin axes via [plan] world/pp/schedule/split instead"
+                );
+            }
+            if let Some(sec) = doc.section("activation") {
+                for k in ["micro_batch", "sp", "recompute"] {
+                    if sec.contains_key(k) {
+                        anyhow::bail!(
+                            "scenario {name}: the planner sweeps `{k}` as a search axis — \
+                             it cannot be pinned via [activation]"
+                        );
+                    }
+                }
+            }
+        }
+        if action_str == "kvcache" && doc.section("activation").is_some() {
+            anyhow::bail!(
+                "scenario {name}: [activation] has no effect on `kvcache` — remove it"
+            );
+        }
+
+        if let Some(sec) = doc.section("parallel") {
+            check_keys(sec, "parallel", &["dp", "tp", "pp", "ep", "etp"])?;
+            let p = &mut case.parallel;
+            for (key, field) in [
+                ("dp", &mut p.dp),
+                ("tp", &mut p.tp),
+                ("pp", &mut p.pp),
+                ("ep", &mut p.ep),
+                ("etp", &mut p.etp),
+            ] {
+                if let Some(v) = sec.get(key) {
+                    *field = v.as_u64()?;
+                }
+            }
+        }
+
+        if let Some(sec) = doc.section("activation") {
+            check_keys(sec, "activation", &["micro_batch", "seq_len", "sp", "recompute"])?;
+            if let Some(v) = sec.get("micro_batch") {
+                case.activation.micro_batch = v.as_u64()?;
+            }
+            if let Some(v) = sec.get("seq_len") {
+                case.activation.seq_len = v.as_u64()?;
+            }
+            if let Some(v) = sec.get("sp") {
+                case.activation.sp = v.as_u64()?;
+            }
+            if let Some(v) = sec.get("recompute") {
+                case.activation.recompute = RecomputePolicy::parse(v.as_str()?)?;
+            }
+        }
+        case.validate().map_err(|e| anyhow::anyhow!("scenario {name}: {e}"))?;
+
+        let hbm_gib = match doc.root().get("hbm_gib") {
+            Some(v) => v.as_f64()?,
+            None => 80.0,
+        };
+        if !(hbm_gib > 0.0) {
+            anyhow::bail!("scenario {name}: hbm_gib must be > 0, got {hbm_gib}");
+        }
+        let overheads = match doc.root().get("overheads") {
+            Some(v) => match v.as_str()? {
+                "paper" => Overheads::paper_midpoint(),
+                "none" => Overheads::none(),
+                other => {
+                    anyhow::bail!("scenario {name}: overheads must be paper|none, got {other}")
+                }
+            },
+            None => Overheads::paper_midpoint(),
+        };
+
+        let action = match action_str.as_str() {
+            "plan" => {
+                let empty = BTreeMap::new();
+                let sec = doc.section("plan").unwrap_or(&empty);
+                check_keys(
+                    sec,
+                    "plan",
+                    &["world", "microbatches", "top_k", "schedule", "pp", "split"],
+                )?;
+                let world = match sec.get("world") {
+                    Some(v) => v.as_u64()?,
+                    None => case.parallel.world_size(),
+                };
+                let schedule = match sec.get("schedule") {
+                    None => None,
+                    Some(v) => match v.as_str()? {
+                        "all" => None,
+                        s => Some(ScheduleSpec::parse(s)?),
+                    },
+                };
+                let pp = match sec.get("pp") {
+                    Some(v) => {
+                        let axis = v.as_u64_array()?;
+                        if axis.is_empty() {
+                            anyhow::bail!("scenario {name}: [plan] pp axis must be non-empty");
+                        }
+                        Some(axis)
+                    }
+                    None => None,
+                };
+                let split = match sec.get("split") {
+                    Some(v) => Some(StageSplit::parse(v.as_str()?)?),
+                    None => None,
+                };
+                let microbatches = get_u64_or(sec, "microbatches", 32)?;
+                // Parse-time serviceability, matching the simulate branch's
+                // schedule validation: a split or schedule no PP in the
+                // effective axis can serve must fail at load, not abort the
+                // whole suite mid-run. (build_plan_query re-checks for
+                // callers constructing Actions directly, e.g. the CLI.)
+                let pp_axis = match &pp {
+                    Some(axis) => axis.clone(),
+                    None => crate::planner::SearchSpace::for_world(world).pp,
+                };
+                if let Some(split) = &split {
+                    let l = case.model.num_hidden_layers;
+                    if !pp_axis.iter().any(|&d| split.layer_counts(l, d).is_ok()) {
+                        anyhow::bail!(
+                            "scenario {name}: split cannot serve any PP degree in the \
+                             search space for {l} layers"
+                        );
+                    }
+                }
+                if let Some(spec) = &schedule {
+                    let sched = spec.resolve();
+                    if !pp_axis.iter().any(|&d| sched.validate(d, microbatches).is_ok()) {
+                        anyhow::bail!(
+                            "scenario {name}: schedule {} cannot run at any PP in the \
+                             search space with microbatches = {microbatches}",
+                            sched.name()
+                        );
+                    }
+                }
+                Action::Plan {
+                    world,
+                    microbatches,
+                    top_k: get_u64_or(sec, "top_k", 10)?,
+                    schedule,
+                    pp,
+                    split,
+                }
+            }
+            "sweep" => Action::Sweep,
+            "simulate" => {
+                let empty = BTreeMap::new();
+                let sec = doc.section("simulate").unwrap_or(&empty);
+                check_keys(sec, "simulate", &["schedule", "microbatches", "zero", "frag"])?;
+                let schedule = match sec.get("schedule") {
+                    Some(v) => ScheduleSpec::parse(v.as_str()?)?,
+                    None => ScheduleSpec::OneFOneB,
+                };
+                let microbatches = get_u64_or(sec, "microbatches", 16)?;
+                schedule
+                    .resolve()
+                    .validate(case.parallel.pp, microbatches)
+                    .map_err(|e| anyhow::anyhow!("scenario {name}: {e}"))?;
+                let zero = match sec.get("zero") {
+                    Some(v) => ZeroStrategy::parse(v.as_str()?)?,
+                    None => ZeroStrategy::OsG,
+                };
+                let frag = match sec.get("frag") {
+                    Some(v) => v.as_bool()?,
+                    None => false,
+                };
+                Action::Simulate { schedule, microbatches, zero, frag }
+            }
+            "kvcache" => {
+                let empty = BTreeMap::new();
+                let sec = doc.section("kvcache").unwrap_or(&empty);
+                check_keys(sec, "kvcache", &["tokens", "gqa_groups"])?;
+                let tokens = get_u64_or(sec, "tokens", 128 * 1024)?;
+                let gqa_groups = get_u64_or(sec, "gqa_groups", 8)?;
+                if tokens == 0 || gqa_groups == 0 {
+                    anyhow::bail!("scenario {name}: tokens and gqa_groups must be > 0");
+                }
+                Action::KvCache { tokens, gqa_groups }
+            }
+            other => {
+                anyhow::bail!(
+                    "scenario {name}: action must be plan|sweep|simulate|kvcache, got {other:?}"
+                )
+            }
+        };
+
+        Ok(ScenarioSpec { name, model, case, hbm_gib, overheads, action })
+    }
+
+    /// The feasibility budget in bytes.
+    pub fn hbm_bytes(&self) -> u64 {
+        (self.hbm_gib * crate::GIB) as u64
+    }
+}
+
+fn check_keys(
+    sec: &BTreeMap<String, TomlValue>,
+    what: &str,
+    allowed: &[&str],
+) -> anyhow::Result<()> {
+    for k in sec.keys() {
+        if !allowed.contains(&k.as_str()) {
+            anyhow::bail!("unknown {what} key {k:?} (allowed: {})", allowed.join(", "));
+        }
+    }
+    Ok(())
+}
+
+fn get_u64_or(sec: &BTreeMap<String, TomlValue>, key: &str, default: u64) -> anyhow::Result<u64> {
+    match sec.get(key) {
+        Some(v) => v.as_u64(),
+        None => Ok(default),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_scalars_and_comments() {
+        let text = "# header\nname = \"x\"\nhbm_gib = 80.5  # budget\nflag = true\nn = 1_024\n";
+        let doc = TomlDoc::parse(text).unwrap();
+        assert_eq!(doc.root().get("name").unwrap().as_str().unwrap(), "x");
+        assert_eq!(doc.root().get("hbm_gib").unwrap().as_f64().unwrap(), 80.5);
+        assert!(doc.root().get("flag").unwrap().as_bool().unwrap());
+        assert_eq!(doc.root().get("n").unwrap().as_u64().unwrap(), 1024);
+    }
+
+    #[test]
+    fn toml_sections_and_arrays() {
+        let text = "model = \"v3\"\n\n[plan]  # knobs\npp = [8, 16]\nworld = 1024\n";
+        let doc = TomlDoc::parse(text).unwrap();
+        let plan = doc.section("plan").unwrap();
+        assert_eq!(plan.get("pp").unwrap().as_u64_array().unwrap(), vec![8, 16]);
+        assert_eq!(plan.get("world").unwrap().as_u64().unwrap(), 1024);
+        assert_eq!(doc.section_names().collect::<Vec<_>>(), vec!["plan"]);
+        assert!(doc.section("missing").is_none());
+    }
+
+    #[test]
+    fn toml_string_escapes() {
+        let doc = TomlDoc::parse("s = \"a\\\"b\\\\c\\nd\"\n").unwrap();
+        assert_eq!(doc.root().get("s").unwrap().as_str().unwrap(), "a\"b\\c\nd");
+    }
+
+    #[test]
+    fn toml_rejects_malformed_lines() {
+        assert!(TomlDoc::parse("just words\n").is_err());
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("k = \n").is_err());
+        assert!(TomlDoc::parse("k = 1 2\n").is_err());
+        assert!(TomlDoc::parse("k = \"open\n").is_err());
+        assert!(TomlDoc::parse("k = [[1]]\n").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2\n").is_err());
+        assert!(TomlDoc::parse("[s]\n[s]\n").is_err());
+        assert!(TomlDoc::parse("bad key = 1\n").is_err());
+    }
+
+    #[test]
+    fn minimal_sweep_spec_resolves_paper_case() {
+        let s = ScenarioSpec::from_toml("action = \"sweep\"\n", "stem").unwrap();
+        assert_eq!(s.name, "stem");
+        assert_eq!(s.model, "v3");
+        assert_eq!(s.case.parallel.pp, 16);
+        assert_eq!(s.hbm_gib, 80.0);
+        assert!(matches!(s.action, Action::Sweep));
+        assert_eq!(s.hbm_bytes(), 80 * crate::GIB as u64);
+    }
+
+    #[test]
+    fn overrides_apply_and_validate() {
+        let text = "model = \"mini\"\naction = \"simulate\"\n\n[activation]\nmicro_batch = 2\n\n\
+                    [simulate]\nschedule = \"gpipe\"\nmicrobatches = 4\nzero = \"os\"\nfrag = true\n";
+        let s = ScenarioSpec::from_toml(text, "sim").unwrap();
+        assert_eq!(s.case.activation.micro_batch, 2);
+        match s.action {
+            Action::Simulate { schedule, microbatches, zero, frag } => {
+                assert_eq!(schedule, ScheduleSpec::GPipe);
+                assert_eq!(microbatches, 4);
+                assert_eq!(zero, ZeroStrategy::Os);
+                assert!(frag);
+            }
+            other => panic!("wrong action: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plan_defaults_follow_the_preset_world() {
+        let s = ScenarioSpec::from_toml("action = \"plan\"\n", "p").unwrap();
+        match &s.action {
+            Action::Plan { world, microbatches, top_k, schedule, pp, split } => {
+                assert_eq!(*world, 1024);
+                assert_eq!(*microbatches, 32);
+                assert_eq!(*top_k, 10);
+                assert!(schedule.is_none() && pp.is_none() && split.is_none());
+            }
+            other => panic!("wrong action: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_keys_sections_and_actions_are_rejected() {
+        assert!(ScenarioSpec::from_toml("action = \"sweep\"\nbogus = 1\n", "x").is_err());
+        assert!(ScenarioSpec::from_toml("action = \"sweep\"\n\n[sweep]\n", "x").is_err());
+        assert!(ScenarioSpec::from_toml("action = \"sweep\"\n\n[plan]\n", "x").is_err());
+        assert!(ScenarioSpec::from_toml("action = \"fly\"\n", "x").is_err());
+        assert!(ScenarioSpec::from_toml("", "x").is_err()); // no action
+        assert!(ScenarioSpec::from_toml("action = \"plan\"\n\n[plan]\nwarp = 9\n", "x").is_err());
+    }
+
+    #[test]
+    fn invalid_override_combinations_fail_validation() {
+        // EP=7 does not divide v3's 256 experts.
+        let text = "action = \"sweep\"\n\n[parallel]\nep = 7\n";
+        assert!(ScenarioSpec::from_toml(text, "x").is_err());
+        // DualPipe needs m >= 2p: pp=16 with m=8 must be rejected at parse.
+        let text = "action = \"simulate\"\n\n[simulate]\nschedule = \"dualpipe\"\n\
+                    microbatches = 8\n";
+        assert!(ScenarioSpec::from_toml(text, "x").is_err());
+    }
+
+    #[test]
+    fn inert_keys_are_rejected_per_action() {
+        // hbm_gib / overheads feed plan+sweep only.
+        let t = "action = \"simulate\"\nhbm_gib = 80\n";
+        assert!(ScenarioSpec::from_toml(t, "x").is_err());
+        let t = "action = \"kvcache\"\noverheads = \"none\"\n";
+        assert!(ScenarioSpec::from_toml(t, "x").is_err());
+        // plan searches the layout; a pinned [parallel] or a pinned search
+        // axis would be silently inert.
+        let t = "action = \"plan\"\n\n[parallel]\ntp = 8\n";
+        assert!(ScenarioSpec::from_toml(t, "x").is_err());
+        let t = "action = \"plan\"\n\n[activation]\nmicro_batch = 2\n";
+        assert!(ScenarioSpec::from_toml(t, "x").is_err());
+        // ... but seq_len genuinely feeds the plan search space.
+        let t = "action = \"plan\"\n\n[activation]\nseq_len = 8192\n";
+        assert!(ScenarioSpec::from_toml(t, "x").is_ok());
+        // kvcache ignores [activation] entirely.
+        let t = "action = \"kvcache\"\n\n[activation]\nseq_len = 8192\n";
+        assert!(ScenarioSpec::from_toml(t, "x").is_err());
+    }
+
+    #[test]
+    fn bad_scenario_names_are_rejected() {
+        assert!(ScenarioSpec::from_toml("name = \"a b\"\naction = \"sweep\"\n", "x").is_err());
+        assert!(ScenarioSpec::from_toml("name = \"\"\naction = \"sweep\"\n", "x").is_err());
+    }
+}

@@ -173,7 +173,11 @@ pub struct Schedule {
 
 impl Schedule {
     /// Build the operation sequence for every stage (validates `(p, m)`).
-    pub fn build(spec: ScheduleSpec, num_stages: u64, num_microbatches: u64) -> anyhow::Result<Self> {
+    pub fn build(
+        spec: ScheduleSpec,
+        num_stages: u64,
+        num_microbatches: u64,
+    ) -> anyhow::Result<Self> {
         let sched = spec.resolve();
         sched.validate(num_stages, num_microbatches)?;
         let ops = (0..num_stages)

@@ -137,14 +137,21 @@ impl CollectivePlan {
         let grad_max = self
             .calls
             .iter()
-            .filter(|c| matches!(c.kind, CollectiveKind::DpGradAllReduce | CollectiveKind::EdpGradAllReduce))
+            .filter(|c| {
+                matches!(c.kind, CollectiveKind::DpGradAllReduce | CollectiveKind::EdpGradAllReduce)
+            })
             .map(|c| c.buffer_bytes)
             .max()
             .unwrap_or(0);
         let act_max = self
             .calls
             .iter()
-            .filter(|c| !matches!(c.kind, CollectiveKind::DpGradAllReduce | CollectiveKind::EdpGradAllReduce))
+            .filter(|c| {
+                !matches!(
+                    c.kind,
+                    CollectiveKind::DpGradAllReduce | CollectiveKind::EdpGradAllReduce
+                )
+            })
             .map(|c| c.buffer_bytes)
             .max()
             .unwrap_or(0);
@@ -166,7 +173,12 @@ mod tests {
 
     fn plan(bucket: u64, b: u64) -> CollectivePlan {
         let cs = CaseStudy::paper();
-        let sp = StagePlan::build(&cs.model, cs.parallel.pp, StageSplit::FrontLoaded, CountMode::PaperCompat);
+        let sp = StagePlan::build(
+            &cs.model,
+            cs.parallel.pp,
+            StageSplit::FrontLoaded,
+            CountMode::PaperCompat,
+        );
         let dev = DeviceStaticParams::for_stage(&cs.model, &cs.parallel, &sp, 1, Dtype::Bf16);
         CollectivePlan::build(
             &cs.model,

@@ -26,7 +26,10 @@ pub struct TrainingRun {
 
 /// Run the full mini training loop and print progress. Returns the loss
 /// series and the E3 validation.
-pub fn run_training(manifest: ArtifactManifest, cfg: TrainingConfig) -> anyhow::Result<TrainingRun> {
+pub fn run_training(
+    manifest: ArtifactManifest,
+    cfg: TrainingConfig,
+) -> anyhow::Result<TrainingRun> {
     let runtime = Arc::new(Runtime::load(manifest)?);
     println!(
         "loaded {} executables on {} (pp={}, b={}, s={})",

@@ -79,6 +79,44 @@ impl Json {
         }
     }
 
+    /// Serialize to indented, line-diffable JSON: 2-space indent, one array
+    /// element / object member per line, keys in `BTreeMap` order. This is
+    /// the canonical golden-snapshot encoding of the scenario suite —
+    /// deterministic byte-for-byte for equal values.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, depth: usize) {
+        match self {
+            Json::Arr(a) if !a.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in a.iter().enumerate() {
+                    push_indent(out, depth + 1);
+                    v.pretty_into(out, depth + 1);
+                    out.push_str(if i + 1 < a.len() { ",\n" } else { "\n" });
+                }
+                push_indent(out, depth);
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    push_indent(out, depth + 1);
+                    out.push_str(&escape(k));
+                    out.push_str(": ");
+                    v.pretty_into(out, depth + 1);
+                    out.push_str(if i + 1 < m.len() { ",\n" } else { "\n" });
+                }
+                push_indent(out, depth);
+                out.push('}');
+            }
+            other => out.push_str(&other.dump()),
+        }
+    }
+
     /// Serialize back to compact JSON (used by tests and report export).
     pub fn dump(&self) -> String {
         match self {
@@ -103,6 +141,12 @@ impl Json {
                     .join(",")
             ),
         }
+    }
+}
+
+fn push_indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
     }
 }
 
@@ -145,7 +189,12 @@ impl<'a> Parser<'a> {
 
     fn expect(&mut self, c: u8) -> anyhow::Result<()> {
         if self.peek()? != c {
-            anyhow::bail!("expected '{}' at byte {}, got '{}'", c as char, self.i, self.peek()? as char);
+            anyhow::bail!(
+                "expected '{}' at byte {}, got '{}'",
+                c as char,
+                self.i,
+                self.peek()? as char
+            );
         }
         self.i += 1;
         Ok(())
@@ -330,6 +379,19 @@ mod tests {
     fn unicode_passthrough() {
         let v = Json::parse(r#""héllo→""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "héllo→");
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_indents() {
+        let src = r#"{"arr":[1,2.5,"x"],"b":false,"empty":[],"n":null,"o":{"k":3}}"#;
+        let v = Json::parse(src).unwrap();
+        let pretty = v.pretty();
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+        assert!(pretty.starts_with("{\n  \"arr\": [\n    1,\n"));
+        assert!(pretty.contains("\"empty\": []"));
+        assert!(pretty.ends_with('}'));
+        // Scalars stay compact.
+        assert_eq!(Json::Num(4.0).pretty(), "4");
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! unit tests can't express (tables agreeing with each other).
 
 use dsmem::analysis::{MemoryModel, Overheads, StagePlan, StageSplit, ZeroStrategy};
-use dsmem::config::{ActivationConfig, CaseStudy, Dtype, ModelConfig, ParallelConfig, RecomputePolicy};
+use dsmem::config::{
+    ActivationConfig, CaseStudy, Dtype, ModelConfig, ParallelConfig, RecomputePolicy,
+};
 use dsmem::model::CountMode;
 use dsmem::report::tables::paper_table;
 

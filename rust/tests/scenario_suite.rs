@@ -1,0 +1,225 @@
+//! Scenario-suite regression harness: runs every checked-in scenario under
+//! `scenarios/` and byte-compares the canonical snapshots against the golden
+//! files under `scenarios/golden/`.
+//!
+//! * `DSMEM_BLESS=1 cargo test -q scenario_suite` regenerates the goldens
+//!   after an intended behavior change (same as `dsmem suite run --bless`).
+//! * On a checkout with no goldens at all, the harness *bootstraps* them
+//!   (writes and reports instead of failing) — the offline dev image cannot
+//!   pre-generate snapshots; commit the bootstrapped files to arm the gate.
+//!
+//! The orchestration-equivalence property tests pin the suite to the
+//! underlying entry points: for randomized valid specs, `run_scenario`
+//! output must be byte-identical to calling `planner::plan` /
+//! `planner::sweep_fixed` / `SimEngine::run` / `analysis::inference`
+//! directly — the runner is a pure orchestration layer, never a second
+//! code path.
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use dsmem::analysis::total::Overheads;
+use dsmem::analysis::{MemoryModel, ZeroStrategy};
+use dsmem::config::{CaseStudy, RecomputePolicy};
+use dsmem::planner::{self, PlanQuery, SearchSpace};
+use dsmem::scenario::{self, ScenarioSpec, SnapshotStatus};
+use dsmem::schedule::ScheduleSpec;
+use dsmem::sim::SimEngine;
+use dsmem::util::Rng64;
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+/// One shared full-suite run: the whole suite (including the 100k-device
+/// planner stress case) is expensive in the debug profile, so the golden
+/// compare and the determinism test split two runs between them instead of
+/// paying for three.
+fn first_run() -> &'static [scenario::SuiteOutcome] {
+    static FIRST: OnceLock<Vec<scenario::SuiteOutcome>> = OnceLock::new();
+    FIRST.get_or_init(|| scenario::run_dir(&scenarios_dir()).expect("suite runs"))
+}
+
+#[test]
+fn suite_matches_checked_in_goldens() {
+    let dir = scenarios_dir();
+    let scens = scenario::load_dir(&dir).expect("scenario dir loads");
+    assert!(scens.len() >= 10, "ship at least 10 scenarios, found {}", scens.len());
+    let outcomes = first_run();
+    let golden = dir.join("golden");
+    if scenario::bless_requested() || !scenario::has_goldens(&golden) {
+        let (written, removed) = scenario::bless(&golden, outcomes).expect("bless writes");
+        eprintln!(
+            "scenario_suite: blessed {written} snapshots into {} ({removed} stale removed); \
+             commit them to pin the suite",
+            golden.display()
+        );
+        return;
+    }
+    let report = scenario::compare(&golden, outcomes).expect("goldens readable");
+    if !report.is_clean() {
+        for (name, status) in &report.entries {
+            match status {
+                SnapshotStatus::Match => {}
+                SnapshotStatus::Mismatch { diff } => eprintln!("=== {name}: MISMATCH ===\n{diff}"),
+                other => eprintln!("=== {name}: {} ===", other.label()),
+            }
+        }
+        panic!(
+            "golden snapshots diverged: {} (DSMEM_BLESS=1 to re-bless after an intended change)",
+            report.summary()
+        );
+    }
+}
+
+#[test]
+fn two_consecutive_suite_runs_are_byte_identical() {
+    let a = first_run();
+    let b = scenario::run_dir(&scenarios_dir()).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.snapshot, y.snapshot, "scenario {} is nondeterministic", x.name);
+    }
+}
+
+#[test]
+fn suite_covers_every_action_and_model_preset() {
+    let scens = scenario::load_dir(&scenarios_dir()).unwrap();
+    for action in ["plan", "sweep", "simulate", "kvcache"] {
+        assert!(scens.iter().any(|s| s.spec.action.name() == action), "no {action} scenario");
+    }
+    for model in ["v3", "v2", "v2-lite", "mini"] {
+        assert!(scens.iter().any(|s| s.spec.model == model), "no {model} scenario");
+    }
+}
+
+#[test]
+fn runner_equals_direct_sweep_entry_point() {
+    let mut rng = Rng64::new(0x5CE4A);
+    for _ in 0..12 {
+        let model = ["mini", "v2-lite"][rng.below(2) as usize];
+        let b = [1u64, 2, 4][rng.below(3) as usize];
+        let rc = ["none", "selective", "full"][rng.below(3) as usize];
+        let hbm = [8u64, 40, 80][rng.below(3) as usize];
+        let ov = ["paper", "none"][rng.below(2) as usize];
+        let toml = format!(
+            "model = \"{model}\"\naction = \"sweep\"\nhbm_gib = {hbm}\noverheads = \"{ov}\"\n\n\
+             [activation]\nmicro_batch = {b}\nrecompute = \"{rc}\"\n"
+        );
+        let spec = ScenarioSpec::from_toml(&toml, "prop-sweep").unwrap();
+        let via_runner = scenario::run_scenario(&spec).unwrap();
+
+        let mut cs = CaseStudy::preset(model).unwrap();
+        cs.activation.micro_batch = b;
+        cs.activation.recompute = RecomputePolicy::parse(rc).unwrap();
+        let ovh = if ov == "paper" { Overheads::paper_midpoint() } else { Overheads::none() };
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        let pts = planner::sweep_fixed(&mm, &cs.activation, ovh);
+        let direct = scenario::runner::sweep_json(&pts, (hbm as f64 * dsmem::GIB) as u64);
+        assert_eq!(
+            via_runner.get("result").unwrap().dump(),
+            direct.dump(),
+            "runner diverged from sweep_fixed for:\n{toml}"
+        );
+    }
+}
+
+#[test]
+fn runner_equals_direct_plan_entry_point() {
+    let mut rng = Rng64::new(0x71A9);
+    for _ in 0..6 {
+        let m = [4u64, 8][rng.below(2) as usize];
+        let world = [2u64, 4][rng.below(2) as usize];
+        let sched = ["all", "1f1b", "gpipe"][rng.below(3) as usize];
+        let top_k = rng.range(1, 6);
+        let toml = format!(
+            "model = \"mini\"\naction = \"plan\"\nhbm_gib = 16\n\n[plan]\nworld = {world}\n\
+             microbatches = {m}\ntop_k = {top_k}\nschedule = \"{sched}\"\n"
+        );
+        let spec = ScenarioSpec::from_toml(&toml, "prop-plan").unwrap();
+        let via_runner = scenario::run_scenario(&spec).unwrap();
+
+        let cs = CaseStudy::preset("mini").unwrap();
+        let mut space = SearchSpace::for_world(world);
+        space.seq_len = cs.activation.seq_len;
+        space.cp = cs.activation.cp;
+        if sched != "all" {
+            space.schedule = vec![ScheduleSpec::parse(sched).unwrap()];
+        }
+        let mut query = PlanQuery::new(space, (16.0 * dsmem::GIB) as u64);
+        query.top_k = top_k as usize;
+        query.num_microbatches = m;
+        let res = planner::plan(&cs.model, cs.dtypes, &query);
+        let direct = planner::report::to_json(&res);
+        assert_eq!(
+            via_runner.get("result").unwrap().dump(),
+            direct.dump(),
+            "runner diverged from planner::plan for:\n{toml}"
+        );
+    }
+}
+
+#[test]
+fn runner_equals_direct_sim_entry_point() {
+    let mut rng = Rng64::new(0xD00D);
+    for _ in 0..8 {
+        let scheds = ["gpipe", "1f1b", "zb-h1", "interleaved:3", "dualpipe"];
+        let sched = scheds[rng.below(5) as usize];
+        // DualPipe on the mini preset (p=2) needs an even m >= 4.
+        let m = if sched == "dualpipe" { 4 } else { rng.range(2, 8) };
+        let zero = ["none", "os", "os_g", "os_g_params"][rng.below(4) as usize];
+        let frag = rng.below(2) == 1;
+        let toml = format!(
+            "model = \"mini\"\naction = \"simulate\"\n\n[simulate]\nschedule = \"{sched}\"\n\
+             microbatches = {m}\nzero = \"{zero}\"\nfrag = {frag}\n"
+        );
+        let spec = ScenarioSpec::from_toml(&toml, "prop-sim").unwrap();
+        let via_runner = scenario::run_scenario(&spec).unwrap();
+
+        let cs = CaseStudy::preset("mini").unwrap();
+        let zs = ZeroStrategy::parse(zero).unwrap();
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        let mut eng = SimEngine::new(&mm, cs.activation, zs);
+        eng.simulate_allocator = frag;
+        let res = eng.run(ScheduleSpec::parse(sched).unwrap(), m).unwrap();
+        let direct = scenario::runner::simulate_json(&res, zs);
+        assert_eq!(
+            via_runner.get("result").unwrap().dump(),
+            direct.dump(),
+            "runner diverged from SimEngine::run for:\n{toml}"
+        );
+    }
+}
+
+#[test]
+fn runner_equals_direct_kvcache_analysis() {
+    use dsmem::analysis::inference::{kv_cache, CacheKind};
+    let mut rng = Rng64::new(0xCAFE);
+    for _ in 0..8 {
+        let model = ["v3", "v2", "v2-lite", "mini"][rng.below(4) as usize];
+        let tokens = 1024 * rng.range(1, 64);
+        let groups = [4u64, 8][rng.below(2) as usize];
+        let toml = format!(
+            "model = \"{model}\"\naction = \"kvcache\"\n\n[kvcache]\ntokens = {tokens}\n\
+             gqa_groups = {groups}\n"
+        );
+        let spec = ScenarioSpec::from_toml(&toml, "prop-kv").unwrap();
+        let via_runner = scenario::run_scenario(&spec).unwrap();
+        let result = via_runner.get("result").unwrap();
+
+        let cs = CaseStudy::preset(model).unwrap();
+        let rows = result.get("rows").unwrap().as_arr().unwrap();
+        let kinds = [CacheKind::Mha, CacheKind::Gqa { groups }, CacheKind::Mla];
+        for (i, kind) in kinds.into_iter().enumerate() {
+            let rep = kv_cache(&cs.model, kind, tokens, cs.dtypes.weight, cs.parallel.tp);
+            let bpt = rows[i].get("bytes_per_token").unwrap().as_u64().unwrap();
+            assert_eq!(bpt, rep.bytes_per_token, "{model} {i}");
+            let dev = rows[i].get("device_bytes").unwrap().as_u64().unwrap();
+            assert_eq!(dev, rep.device_bytes, "{model} {i}");
+        }
+        let ratio = result.get("mla_vs_mha_ratio").unwrap().as_f64().unwrap();
+        let expect = dsmem::analysis::inference::mla_vs_mha_ratio(&cs.model);
+        assert_eq!(ratio, expect, "{model}");
+    }
+}
