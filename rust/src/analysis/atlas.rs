@@ -1,0 +1,466 @@
+//! Cluster memory atlas — per-stage device memory for a whole pipeline.
+//!
+//! The paper's device-level tables are computed for one archetype stage (the
+//! heaviest-*parameter* stage), but under 1F1B-like schedules the analytic
+//! in-flight activation count is largest at the *front* stages while
+//! parameters are heaviest elsewhere — so the stage that binds HBM
+//! feasibility (max **total** bytes) is in general not the analysed one. The
+//! atlas retires that approximation: for one configuration it produces a
+//! component-tagged [`MemoryLedger`] for **every** pipeline stage — that
+//! stage's exact layer census through [`DeviceStaticParams`] and
+//! [`ZeroReport`] (ZeRO divisors per plane), the activation tape scaled by
+//! that stage's schedule-analytic in-flight count — with the binding stage,
+//! max/min/mean totals and per-stage HBM headroom as first-class results.
+//!
+//! Stage arithmetic is shared: [`assemble_stage_ledger`] is the single
+//! implementation consumed by [`ClusterMemoryAtlas::build`] and by the
+//! planner's incremental per-stage evaluation
+//! ([`crate::planner::Evaluator::evaluate`]), and the sim engine replays the
+//! same quantities op by op — asserted equal per component for every
+//! registered schedule and every stage by `rust/tests/integration_sim.rs`.
+//!
+//! Stage semantics match the simulator's documented convention: the MLA tape
+//! is charged for every layer of the stage, the MoE tape for the stage's MoE
+//! layers only (dense stages charge the attention tape — the conservative
+//! convention of [`crate::sim::SimEngine`]). On a pure-MoE stage — the
+//! paper's analysed shape — this is bit-identical to the legacy
+//! [`crate::analysis::DeviceMemoryReport`] arithmetic.
+
+use super::activation::{mla_tape, moe_tape};
+use super::device::DeviceStaticParams;
+use super::total::Overheads;
+use super::zero::{ZeroReport, ZeroRow, ZeroStrategy};
+use super::MemoryModel;
+use crate::config::ActivationConfig;
+use crate::ledger::{Component, MemoryLedger};
+use crate::schedule::ScheduleSpec;
+
+/// Per-stage in-flight profile: how many activation units each stage holds at
+/// its peak, how many units one microbatch's tape divides into, and how many
+/// resident copies of the stage parameters the schedule keeps.
+///
+/// Two constructors cover the two analysis modes: [`StageInflight::per_microbatch`]
+/// (one tape everywhere — the paper's table convention, the `sweep` view) and
+/// [`StageInflight::for_schedule`] (the schedule's analytic per-stage bound —
+/// the planner/sim view).
+#[derive(Debug, Clone)]
+pub struct StageInflight {
+    /// `inflight_units[stage]` = peak simultaneously-live activation units.
+    pub inflight_units: Vec<u64>,
+    /// Units one microbatch's stage tape divides into (≥ 1).
+    pub units_per_microbatch: u64,
+    /// Resident copies of the stage parameters (DualPipe: 2).
+    pub param_multiplier: u64,
+    /// Display label: `"per-microbatch"` or the schedule name.
+    pub label: String,
+}
+
+impl StageInflight {
+    /// One in-flight tape on every stage — the paper's per-microbatch tables,
+    /// generalized per stage.
+    pub fn per_microbatch(pp: u64) -> Self {
+        Self {
+            inflight_units: vec![1; pp as usize],
+            units_per_microbatch: 1,
+            param_multiplier: 1,
+            label: "per-microbatch".to_string(),
+        }
+    }
+
+    /// The schedule's analytic per-stage in-flight bounds at `(pp, m)`
+    /// (validates the shape first, like the planner and the sim do).
+    pub fn for_schedule(spec: ScheduleSpec, pp: u64, m: u64) -> anyhow::Result<Self> {
+        let sched = spec.resolve();
+        sched.validate(pp, m)?;
+        Ok(Self {
+            inflight_units: (0..pp).map(|s| sched.analytic_inflight(s, pp, m)).collect(),
+            units_per_microbatch: sched.units_per_microbatch().max(1),
+            param_multiplier: sched.param_multiplier(),
+            label: sched.name(),
+        })
+    }
+}
+
+/// Assemble one stage's component-tagged ledger from its ZeRO row, the
+/// per-layer activation tape ledgers and the stage's in-flight profile — the
+/// single implementation of the per-stage arithmetic, shared by the atlas
+/// and the planner's evaluator (and replayed op by op by the sim engine):
+///
+/// * params carry the schedule's replica multiplier (dense and MoE partitions
+///   scale independently and re-sum exactly);
+/// * the activation peak is the stage tape (MLA × all layers + MoE × MoE
+///   layers), divided into the schedule's units and multiplied by the
+///   stage's analytic in-flight count — component-wise, mirroring the sim's
+///   per-unit allocations;
+/// * §6 overheads close the ledger: comm buffers as an absolute band,
+///   fragmentation as a fraction of the allocator-served (P+G+O+act) bytes.
+#[allow(clippy::too_many_arguments)]
+pub fn assemble_stage_ledger(
+    row: &ZeroRow,
+    mla_layer: &MemoryLedger,
+    moe_layer: &MemoryLedger,
+    num_layers: u64,
+    moe_layers: u64,
+    units_per_microbatch: u64,
+    inflight_units: u64,
+    param_multiplier: u64,
+    ov: Overheads,
+) -> MemoryLedger {
+    let mut ledger = MemoryLedger::new()
+        .with(Component::ParamsDense, param_multiplier * row.params_dense_bytes)
+        .with(Component::ParamsMoe, param_multiplier * row.params_moe_bytes)
+        .with(Component::Gradients, row.gradient_bytes)
+        .with(Component::OptimizerStates, row.optimizer_bytes);
+    ledger.merge(
+        &mla_layer
+            .scale(num_layers)
+            .merged(&moe_layer.scale(moe_layers))
+            .div(units_per_microbatch)
+            .scale(inflight_units),
+    );
+    let allocated = ledger.total();
+    ledger.set(Component::CommBuffer, ov.comm_buffer_bytes);
+    ledger.set(Component::Fragmentation, ov.fragmentation_bytes(allocated));
+    ledger
+}
+
+/// One stage of the atlas: its layer census, in-flight count and full
+/// component-tagged ledger.
+#[derive(Debug, Clone)]
+pub struct StageAtlasEntry {
+    pub stage: u64,
+    pub num_layers: u64,
+    pub moe_layers: u64,
+    /// Unsharded static parameters per device of this stage, times the
+    /// schedule's replica multiplier.
+    pub device_params: u64,
+    /// Peak in-flight activation units on this stage.
+    pub inflight_units: u64,
+    /// The stage's component-tagged memory decomposition.
+    pub ledger: MemoryLedger,
+}
+
+impl StageAtlasEntry {
+    /// Grand total bytes per device of this stage.
+    pub fn total_bytes(&self) -> u64 {
+        self.ledger.total()
+    }
+
+    /// Signed HBM headroom: `hbm_bytes − total` (negative = over budget).
+    pub fn headroom_bytes(&self, hbm_bytes: u64) -> i128 {
+        hbm_bytes as i128 - self.total_bytes() as i128
+    }
+
+    /// Does this stage fit a device with `hbm_bytes` of memory?
+    pub fn fits(&self, hbm_bytes: u64) -> bool {
+        self.total_bytes() <= hbm_bytes
+    }
+}
+
+/// The per-stage memory atlas of one configuration: one
+/// [`StageAtlasEntry`] per pipeline stage, with the binding stage and the
+/// max/min/mean totals as first-class results.
+#[derive(Debug, Clone)]
+pub struct ClusterMemoryAtlas {
+    pub zero: ZeroStrategy,
+    /// The in-flight profile's label (`"per-microbatch"` or a schedule name).
+    pub schedule_label: String,
+    /// One entry per pipeline stage, in stage order.
+    pub entries: Vec<StageAtlasEntry>,
+    /// Devices per stage (`DP·TP`) — every device of a stage is identical
+    /// under this model, so the atlas covers the whole cluster.
+    pub devices_per_stage: u64,
+}
+
+impl ClusterMemoryAtlas {
+    /// Build the atlas for `mm`'s configuration. `inflight` must cover
+    /// exactly `mm.parallel.pp` stages
+    /// (see [`StageInflight::per_microbatch`] / [`StageInflight::for_schedule`]).
+    pub fn build(
+        mm: &MemoryModel,
+        act: &ActivationConfig,
+        zero: ZeroStrategy,
+        ov: Overheads,
+        inflight: &StageInflight,
+    ) -> anyhow::Result<Self> {
+        let plan = mm.stage_plan_cached();
+        if inflight.inflight_units.len() != plan.stages.len() {
+            anyhow::bail!(
+                "in-flight profile covers {} stages, plan has {}",
+                inflight.inflight_units.len(),
+                plan.stages.len()
+            );
+        }
+        let pol = act.recompute;
+        let mla_layer = mla_tape(&mm.model, act).ledger(pol);
+        let moe_layer = moe_tape(&mm.model, &mm.parallel, act).ledger(pol);
+        let entries = plan
+            .stages
+            .iter()
+            .map(|info| {
+                let s = info.stage as usize;
+                let dev = DeviceStaticParams::for_stage(
+                    &mm.model,
+                    &mm.parallel,
+                    plan,
+                    s,
+                    mm.dtypes.weight,
+                );
+                let zr = ZeroReport::build(&dev, &mm.parallel, mm.dtypes);
+                let ledger = assemble_stage_ledger(
+                    zr.row(zero),
+                    &mla_layer,
+                    &moe_layer,
+                    info.num_layers,
+                    info.moe_layers,
+                    inflight.units_per_microbatch,
+                    inflight.inflight_units[s],
+                    inflight.param_multiplier,
+                    ov,
+                );
+                StageAtlasEntry {
+                    stage: info.stage,
+                    num_layers: info.num_layers,
+                    moe_layers: info.moe_layers,
+                    device_params: inflight.param_multiplier * dev.total_params(),
+                    inflight_units: inflight.inflight_units[s],
+                    ledger,
+                }
+            })
+            .collect();
+        Ok(Self {
+            zero,
+            schedule_label: inflight.label.clone(),
+            entries,
+            devices_per_stage: mm.parallel.devices_per_stage(),
+        })
+    }
+
+    /// Index of the binding stage: maximum total bytes, ties broken toward
+    /// the earliest stage. This is the stage that decides HBM feasibility —
+    /// in general *not* the heaviest-parameter archetype
+    /// ([`crate::analysis::StagePlan::paper_archetype_stage`]).
+    pub fn binding_stage(&self) -> usize {
+        let mut best = 0usize;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.total_bytes() > self.entries[best].total_bytes() {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// The binding stage's entry.
+    pub fn binding(&self) -> &StageAtlasEntry {
+        &self.entries[self.binding_stage()]
+    }
+
+    /// Maximum per-stage total — the cluster's true feasibility requirement.
+    pub fn max_total_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.total_bytes()).max().unwrap_or(0)
+    }
+
+    /// Minimum per-stage total (the imbalance floor).
+    pub fn min_total_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.total_bytes()).min().unwrap_or(0)
+    }
+
+    /// Mean per-stage total (integer division; exact sum ÷ stage count).
+    pub fn mean_total_bytes(&self) -> u64 {
+        if self.entries.is_empty() {
+            return 0;
+        }
+        let sum: u128 = self.entries.iter().map(|e| e.total_bytes() as u128).sum();
+        (sum / self.entries.len() as u128) as u64
+    }
+
+    /// Does *every* stage fit a device with `hbm_bytes` of memory? (The true
+    /// feasibility cut — equivalent to `max_total_bytes() <= hbm_bytes`.)
+    pub fn fits(&self, hbm_bytes: u64) -> bool {
+        self.max_total_bytes() <= hbm_bytes
+    }
+
+    /// Total bytes across the whole cluster's pipeline column set: sum over
+    /// stages of `total × devices_per_stage`.
+    pub fn cluster_total_bytes(&self) -> u128 {
+        self.entries
+            .iter()
+            .map(|e| e.total_bytes() as u128 * self.devices_per_stage as u128)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::total::DeviceMemoryReport;
+    use crate::analysis::StageSplit;
+    use crate::config::CaseStudy;
+    use crate::ledger::ComponentGroup;
+
+    fn mm() -> MemoryModel {
+        let cs = CaseStudy::paper();
+        MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes)
+    }
+
+    #[test]
+    fn per_microbatch_atlas_archetype_entry_matches_legacy_report() {
+        // On the paper's pure-MoE archetype stage, the atlas entry must be
+        // bit-identical to the legacy single-stage DeviceMemoryReport — the
+        // "old output preserved as the archetype-stage view" guarantee.
+        let mm = mm();
+        let cs = CaseStudy::paper();
+        let inflight = StageInflight::per_microbatch(cs.parallel.pp);
+        for zero in ZeroStrategy::ALL {
+            for ov in [Overheads::none(), Overheads::paper_midpoint()] {
+                let atlas =
+                    ClusterMemoryAtlas::build(&mm, &cs.activation, zero, ov, &inflight).unwrap();
+                let rep = DeviceMemoryReport::build(&mm, &cs.activation, zero, ov);
+                let archetype = mm.stage_plan_cached().paper_archetype_stage();
+                assert_eq!(atlas.entries[archetype].ledger, rep.ledger, "{zero:?}");
+                // And the binding stage can only be at least as heavy.
+                assert!(atlas.max_total_bytes() >= rep.total_bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn binding_stage_under_1f1b_is_not_the_front_stage() {
+        // Paper config, 1F1B at m=32: stage 0 holds the most tapes (16) but
+        // stage 1 has both more parameters and a bigger tape — it binds.
+        let mm = mm();
+        let cs = CaseStudy::paper();
+        let inflight = StageInflight::for_schedule(ScheduleSpec::OneFOneB, 16, 32).unwrap();
+        let atlas = ClusterMemoryAtlas::build(
+            &mm,
+            &cs.activation,
+            ZeroStrategy::OsG,
+            Overheads::none(),
+            &inflight,
+        )
+        .unwrap();
+        assert_eq!(atlas.entries.len(), 16);
+        assert_eq!(atlas.entries[0].inflight_units, 16);
+        assert_eq!(atlas.entries[15].inflight_units, 1);
+        assert_eq!(atlas.binding_stage(), 1);
+        assert_eq!(atlas.binding().stage, 1);
+        assert!(atlas.max_total_bytes() > atlas.min_total_bytes());
+        assert!(atlas.mean_total_bytes() <= atlas.max_total_bytes());
+        assert!(atlas.mean_total_bytes() >= atlas.min_total_bytes());
+    }
+
+    #[test]
+    fn binding_stage_differs_from_archetype_on_a_back_loaded_split() {
+        // The regression the atlas fixes (satellite): a PP16 1F1B config
+        // whose binding stage (max total bytes) is NOT the
+        // heaviest-parameter stage. With layers loaded toward the back, the
+        // parameter archetype sits deep in the pipeline where only a few
+        // tapes are in flight, while a front stage drowns in activations.
+        let cs = CaseStudy::paper();
+        let split = StageSplit::Custom(vec![1, 1, 2, 2, 3, 3, 4, 4, 4, 4, 5, 5, 5, 6, 6, 6]);
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes).with_split(split);
+        let plan = mm.stage_plan_cached();
+        let archetype = plan.paper_archetype_stage();
+        // The heaviest-parameter stage is deep in the pipeline...
+        assert!(archetype >= 13, "archetype = {archetype}");
+        let inflight = StageInflight::for_schedule(ScheduleSpec::OneFOneB, 16, 32).unwrap();
+        let atlas = ClusterMemoryAtlas::build(
+            &mm,
+            &cs.activation,
+            ZeroStrategy::None,
+            Overheads::none(),
+            &inflight,
+        )
+        .unwrap();
+        let binding = atlas.binding_stage();
+        // ...but the memory-binding stage is not: the legacy archetype-only
+        // analysis under-reports the cluster's real HBM requirement.
+        assert_ne!(binding, archetype, "binding == archetype == {binding}");
+        assert!(
+            atlas.entries[binding].total_bytes() > atlas.entries[archetype].total_bytes(),
+            "binding {} ({} B) should exceed archetype {} ({} B)",
+            binding,
+            atlas.entries[binding].total_bytes(),
+            archetype,
+            atlas.entries[archetype].total_bytes(),
+        );
+    }
+
+    #[test]
+    fn headroom_and_fits_are_consistent() {
+        let mm = mm();
+        let cs = CaseStudy::paper();
+        let inflight = StageInflight::for_schedule(ScheduleSpec::OneFOneB, 16, 32).unwrap();
+        let atlas = ClusterMemoryAtlas::build(
+            &mm,
+            &cs.activation,
+            ZeroStrategy::OsGParams,
+            Overheads::paper_midpoint(),
+            &inflight,
+        )
+        .unwrap();
+        let hbm = 80 * crate::GIB as u64;
+        for e in &atlas.entries {
+            assert_eq!(e.fits(hbm), e.headroom_bytes(hbm) >= 0, "stage {}", e.stage);
+        }
+        assert_eq!(atlas.fits(hbm), atlas.entries.iter().all(|e| e.fits(hbm)));
+        assert_eq!(
+            atlas.cluster_total_bytes(),
+            atlas
+                .entries
+                .iter()
+                .map(|e| e.total_bytes() as u128 * 64)
+                .sum::<u128>()
+        );
+    }
+
+    #[test]
+    fn dualpipe_atlas_doubles_params_on_every_stage() {
+        let mm = mm();
+        let cs = CaseStudy::paper();
+        let dp = StageInflight::for_schedule(ScheduleSpec::DualPipe, 16, 32).unwrap();
+        let fb = StageInflight::for_schedule(ScheduleSpec::OneFOneB, 16, 32).unwrap();
+        let a_dp = ClusterMemoryAtlas::build(
+            &mm,
+            &cs.activation,
+            ZeroStrategy::OsG,
+            Overheads::none(),
+            &dp,
+        )
+        .unwrap();
+        let a_fb = ClusterMemoryAtlas::build(
+            &mm,
+            &cs.activation,
+            ZeroStrategy::OsG,
+            Overheads::none(),
+            &fb,
+        )
+        .unwrap();
+        for (x, y) in a_dp.entries.iter().zip(&a_fb.entries) {
+            assert_eq!(
+                x.ledger.group_total(ComponentGroup::Params),
+                2 * y.ledger.group_total(ComponentGroup::Params),
+                "stage {}",
+                x.stage
+            );
+            assert_eq!(x.device_params, 2 * y.device_params);
+            assert_eq!(x.inflight_units, 17); // p + 1, uniform
+        }
+    }
+
+    #[test]
+    fn profile_length_mismatch_rejected() {
+        let mm = mm();
+        let cs = CaseStudy::paper();
+        let short = StageInflight::per_microbatch(4);
+        assert!(ClusterMemoryAtlas::build(
+            &mm,
+            &cs.activation,
+            ZeroStrategy::None,
+            Overheads::none(),
+            &short,
+        )
+        .is_err());
+        assert!(StageInflight::for_schedule(ScheduleSpec::DualPipe, 16, 8).is_err());
+    }
+}

@@ -103,7 +103,7 @@ pub fn serving_ledger(
         m,
         p,
         &plan,
-        plan.heaviest_stage(),
+        plan.paper_archetype_stage(),
         weight_dtype,
     );
     dev.ledger().with(crate::ledger::Component::KvCache, cache.device_bytes)

@@ -7,6 +7,9 @@
 //! * [`zero`]    — DeepSpeed-ZeRO sharding across DP/EDP      (paper Table 8)
 //! * [`activation`] — activation tapes + recomputation        (paper §5, Table 10, Figs 2–3)
 //! * [`total`]   — end-to-end per-device memory + §6 overheads, feasibility sweeps
+//! * [`atlas`]   — per-stage cluster memory atlas: every stage's ledger, the
+//!   binding stage and per-stage HBM headroom (retires the single-stage
+//!   archetype approximation)
 //!
 //! [`MemoryModel`] is the facade wiring a [`CaseStudy`]'s four config axes
 //! through all of the above. The facade memoizes the expensive sub-results —
@@ -22,6 +25,7 @@
 //! entry point.
 
 pub mod activation;
+pub mod atlas;
 pub mod bubble;
 pub mod device;
 pub mod inference;
@@ -31,6 +35,7 @@ pub mod total;
 pub mod zero;
 
 pub use activation::{ActTensor, ActivationReport, ActivationTape, TapeBlock};
+pub use atlas::{ClusterMemoryAtlas, StageAtlasEntry, StageInflight};
 pub use device::DeviceStaticParams;
 pub use params::ParamTable;
 pub use stages::{StagePlan, StageSplit};
@@ -149,14 +154,16 @@ impl MemoryModel {
         self.stage_plan_cached().clone()
     }
 
-    /// Static parameters per device on the heaviest stage (Table 6).
+    /// Static parameters per device on the paper's archetype (heaviest-
+    /// parameter) stage (Table 6). Per-stage views live on
+    /// [`MemoryModel::memory_atlas`].
     pub fn device_static_params(&self) -> DeviceStaticParams {
         let plan = self.stage_plan_cached();
         DeviceStaticParams::for_stage(
             &self.model,
             &self.parallel,
             plan,
-            plan.heaviest_stage(),
+            plan.paper_archetype_stage(),
             self.dtypes.weight,
         )
     }
@@ -173,7 +180,7 @@ impl MemoryModel {
             &self.model,
             &self.parallel,
             act,
-            plan.stages[plan.heaviest_stage()].num_layers,
+            plan.stages[plan.paper_archetype_stage()].num_layers,
         )
     }
 
@@ -185,6 +192,19 @@ impl MemoryModel {
         ov: Overheads,
     ) -> DeviceMemoryReport {
         DeviceMemoryReport::build(self, act, zero, ov)
+    }
+
+    /// Per-stage cluster memory atlas: one component-tagged ledger for every
+    /// pipeline stage, with the binding stage and per-stage HBM headroom
+    /// (see [`atlas::ClusterMemoryAtlas`]).
+    pub fn memory_atlas(
+        &self,
+        act: &ActivationConfig,
+        zero: ZeroStrategy,
+        ov: Overheads,
+        inflight: &StageInflight,
+    ) -> anyhow::Result<ClusterMemoryAtlas> {
+        ClusterMemoryAtlas::build(self, act, zero, ov, inflight)
     }
 }
 

@@ -123,12 +123,17 @@ impl StagePlan {
         Self { stages, mode }
     }
 
-    /// Index of the stage with the most parameters (the paper analyses this
-    /// one). Ties break toward the *earliest* stage: the paper's archetype is
-    /// stage 1, and under depth-decreasing schedules like 1F1B the earliest
-    /// parameter-maximal stage also holds the most in-flight activation
-    /// tapes, so it is the analysed worst case for schedule-aware totals.
-    pub fn heaviest_stage(&self) -> usize {
+    /// Index of the stage the paper's tables analyse: the stage with the most
+    /// *parameters*, ties broken toward the earliest (the paper's archetype is
+    /// stage 1 of the PP16 front-loaded plan).
+    ///
+    /// This is an *archetype* choice, not a feasibility bound: under 1F1B-like
+    /// schedules the analytic in-flight count is largest at the front stages
+    /// while parameters may be heaviest elsewhere, so the stage that actually
+    /// binds HBM feasibility (max *total* bytes) is in general a different
+    /// one. Use [`crate::analysis::atlas::ClusterMemoryAtlas::binding_stage`]
+    /// for the true binding stage.
+    pub fn paper_archetype_stage(&self) -> usize {
         let mut best = 0usize;
         for (i, s) in self.stages.iter().enumerate() {
             if s.params > self.stages[best].params {
@@ -136,6 +141,16 @@ impl StagePlan {
             }
         }
         best
+    }
+
+    /// Deprecated alias of [`StagePlan::paper_archetype_stage`]. The old name
+    /// suggested this stage bounds device memory; it only maximizes
+    /// *parameters* — the memory-binding stage is the atlas's
+    /// `binding_stage()`.
+    #[deprecated(since = "0.2.0", note = "renamed to `paper_archetype_stage`; for the \
+                 memory-binding stage use `ClusterMemoryAtlas::binding_stage`")]
+    pub fn heaviest_stage(&self) -> usize {
+        self.paper_archetype_stage()
     }
 
     /// Sum over all stages (must equal the model total).
@@ -199,14 +214,21 @@ mod tests {
     }
 
     #[test]
-    fn heaviest_stage_is_the_paper_archetype() {
+    fn archetype_stage_is_the_papers_stage_1() {
         // Stages 1..=14 tie on params (4 MoE layers each); the earliest —
         // the paper's analysed stage 1 — wins the tie.
         let p = plan();
-        let h = p.heaviest_stage();
-        assert_eq!(h, 1, "heaviest = {h}");
+        let h = p.paper_archetype_stage();
+        assert_eq!(h, 1, "archetype = {h}");
         assert_eq!(p.stages[h].moe_layers, 4);
         assert_eq!(p.stages[1].params, p.stages[14].params);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn heaviest_stage_alias_survives() {
+        let p = plan();
+        assert_eq!(p.heaviest_stage(), p.paper_archetype_stage());
     }
 
     #[test]

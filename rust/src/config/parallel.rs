@@ -12,7 +12,7 @@
 
 
 /// 3D(+expert) parallel layout.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ParallelConfig {
     /// Data parallelism degree (DP).
     pub dp: u64,

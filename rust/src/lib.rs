@@ -25,15 +25,18 @@
 //!
 //! 4. **Configuration planner** ([`planner`]) — a query-driven search engine over
 //!    the full (DP, TP, PP, EP, ETP, micro-batch, recompute, ZeRO, **schedule**)
-//!    grid: validity pruning before evaluation, thread-parallel memoized evaluation
-//!    (stage plans per PP degree, schedule profiles per `(schedule, pp, m)`),
-//!    feasibility filtering against an HBM budget and a Pareto frontier over
-//!    (peak memory, pipeline bubble, per-device parameters). Every "what fits?"
-//!    question — *which schedule* included — is one planner query.
+//!    grid: validity pruning on a streaming enumerator, thread-parallel memoized
+//!    evaluation (stage plans per PP degree, per-stage ZeRO reports per layout,
+//!    schedule profiles per `(schedule, pp, m)`), feasibility as the true
+//!    **max over pipeline stages** (the [`analysis::atlas`] arithmetic; each
+//!    point records its *binding* stage) against an HBM budget, and a Pareto
+//!    frontier over (peak memory, pipeline bubble, per-device parameters).
+//!    Every "what fits?" question — *which schedule* included — is one
+//!    planner query.
 //!
 //! 5. **Declarative scenario suite** ([`scenario`]) — checked-in TOML-subset
 //!    case studies (model preset + overrides + budget + one of
-//!    `plan`/`sweep`/`simulate`/`kvcache`) executed thread-parallel through
+//!    `plan`/`sweep`/`simulate`/`kvcache`/`atlas`) executed thread-parallel through
 //!    the pillars above and rendered to canonical JSON snapshots, byte-compared
 //!    against golden files in CI and `cargo test` — one regression surface
 //!    over every subsystem.

@@ -16,7 +16,7 @@
 //! `report` and the `--breakdown` flags render [`dsmem::ledger`] ledgers;
 //! `suite` routes through [`dsmem::scenario`].
 
-use dsmem::analysis::{MemoryModel, Overheads, StageSplit, ZeroStrategy};
+use dsmem::analysis::{MemoryModel, Overheads, StageInflight, StageSplit, ZeroStrategy};
 use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
 use dsmem::planner;
 use dsmem::report::{fmt_bytes, gib, ledger_table, tables::paper_table};
@@ -36,13 +36,15 @@ COMMANDS:
   analyze    Diagrams & tapes                [--arch] [--tape mla|moe] [--micro-batch B] [--model M]
   report     Per-device memory ledger        [--zero Z] [--recompute none|selective|full]
              (component breakdown)           [--micro-batch B] [--model M] [--breakdown]
-                                             [--no-overheads] [--json]
+                                             [--no-overheads] [--json] [--per-stage]
+                                             [--schedule S] [--microbatches M] [--hbm-gib G]
   plan       Rank parallel configurations    [--hbm-gib G] [--world W] [--top-k K] [--json]
              and pipeline schedules that     [--microbatches M] [--model M] [--frontier-only]
              fit a device budget             [--schedule all|gpipe|1f1b|interleaved[:v]|dualpipe|zb-h1]
                                              [--pp P] [--split front|balanced|N,N,...] [--breakdown]
+                                             [--per-stage]  (atlas of the top-ranked point)
   sweep      Feasibility sweep               [--hbm-gib G] [--model M] [--breakdown]
-                                             [--split front|balanced|N,N,...]
+                                             [--split front|balanced|N,N,...] [--per-stage]
   simulate   Cluster memory simulation       [--schedule gpipe|1f1b|interleaved|dualpipe|zb-h1]
              [--microbatches M] [--micro-batch B] [--chunks V] [--frag]
              [--recompute none|selective|full] [--zero none|os|os_g|os_g_params]
@@ -195,7 +197,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "plan" => {
-            let a = Args::parse(rest, &["json", "frontier-only", "breakdown"])?;
+            let a = Args::parse(rest, &["json", "frontier-only", "breakdown", "per-stage"])?;
             let model = a.get("model", "deepseek-v3");
             let cs = case_study(&model)?;
             // One query builder for the CLI and the scenario suite: the flags
@@ -227,7 +229,22 @@ fn main() -> anyhow::Result<()> {
             let cs = &spec.case;
             let res = planner::plan(&cs.model, cs.dtypes, &query);
             if a.has("json") {
-                println!("{}", planner::report::to_json(&res).dump());
+                let mut json = planner::report::to_json(&res);
+                // --per-stage in JSON mode: attach the top-ranked point's
+                // full atlas instead of silently dropping the flag.
+                if a.has("per-stage") {
+                    if let dsmem::util::Json::Obj(obj) = &mut json {
+                        if let Some(p) = res.ranked.first().or_else(|| res.frontier.first()) {
+                            let atlas =
+                                planner::report::point_atlas(&cs.model, cs.dtypes, &query, p)?;
+                            obj.insert(
+                                "per_stage_atlas".into(),
+                                dsmem::scenario::runner::atlas_json(&atlas, query.hbm_bytes),
+                            );
+                        }
+                    }
+                }
+                println!("{}", json.dump());
             } else {
                 println!(
                     "{}: searched {} grid points → {} valid → {} fit {:.0} GiB",
@@ -243,10 +260,37 @@ fn main() -> anyhow::Result<()> {
                     println!();
                 }
                 print!("{}", planner::report::frontier_table_opts(&res, breakdown).render());
+                if a.has("per-stage") {
+                    // Drill into the winner: the full per-stage atlas of the
+                    // top-ranked (or, lacking one, first frontier) point.
+                    match res.ranked.first().or_else(|| res.frontier.first()) {
+                        Some(p) => {
+                            let atlas =
+                                planner::report::point_atlas(&cs.model, cs.dtypes, &query, p)?;
+                            println!();
+                            print!(
+                                "{}",
+                                dsmem::report::atlas_table(
+                                    format!(
+                                        "Per-stage atlas of the top-ranked point \
+                                         ({}, ZeRO {}, binding stage {})",
+                                        p.schedule.name(),
+                                        p.zero.name(),
+                                        p.binding_stage,
+                                    ),
+                                    &atlas,
+                                    query.hbm_bytes,
+                                )
+                                .render()
+                            );
+                        }
+                        None => println!("(no feasible point to expand per stage)"),
+                    }
+                }
             }
         }
         "sweep" => {
-            let a = Args::parse(rest, &["breakdown"])?;
+            let a = Args::parse(rest, &["breakdown", "per-stage"])?;
             let cs = case_study(&a.get("model", "deepseek-v3"))?;
             let hbm_gib = a.get_f64("hbm-gib", 80.0)?;
             let mut mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
@@ -260,12 +304,22 @@ fn main() -> anyhow::Result<()> {
             let pts = planner::sweep_fixed(&mm, &cs.activation, Overheads::paper_midpoint());
             let budget = (hbm_gib * dsmem::GIB) as u64;
             // Default columns are bit-identical to the historical sweep
-            // output; --breakdown appends per-component GiB columns.
+            // output; --breakdown appends per-component GiB columns,
+            // --per-stage the per-microbatch atlas's binding stage and its
+            // (max-over-stages) total — where the legacy archetype column
+            // under-reports, the two totals diverge.
             let breakdown = a.has("breakdown");
+            let per_stage = a.has("per-stage");
             let mut headers = vec!["b", "recompute", "ZeRO", "total", "fits"];
             if breakdown {
                 headers.extend(dsmem::report::ledger::BREAKDOWN_HEADERS);
             }
+            if per_stage {
+                headers.extend(["bind", "max GiB"]);
+            }
+            // Built once: the per-microbatch profile is row-invariant.
+            let per_mb_inflight =
+                per_stage.then(|| StageInflight::per_microbatch(cs.parallel.pp));
             let mut t = dsmem::report::Table::new(
                 format!("Feasibility sweep vs {hbm_gib} GiB"),
                 &headers,
@@ -281,12 +335,23 @@ fn main() -> anyhow::Result<()> {
                 if breakdown {
                     row.extend(dsmem::report::ledger::breakdown_cells(&p.ledger));
                 }
+                if let Some(inflight) = &per_mb_inflight {
+                    let act = ActivationConfig {
+                        micro_batch: p.micro_batch,
+                        recompute: p.recompute,
+                        ..cs.activation
+                    };
+                    let atlas =
+                        mm.memory_atlas(&act, p.zero, Overheads::paper_midpoint(), inflight)?;
+                    row.push(atlas.binding_stage().to_string());
+                    row.push(format!("{:.1}", gib(atlas.max_total_bytes())));
+                }
                 t.row(row);
             }
             print!("{}", t.render());
         }
         "report" => {
-            let a = Args::parse(rest, &["json", "breakdown", "no-overheads"])?;
+            let a = Args::parse(rest, &["json", "breakdown", "no-overheads", "per-stage"])?;
             let cs = case_study(&a.get("model", "deepseek-v3"))?;
             let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
             let act = ActivationConfig {
@@ -301,8 +366,31 @@ fn main() -> anyhow::Result<()> {
                 Overheads::paper_midpoint()
             };
             let rep = mm.device_memory(&act, zero, ov);
+            // --per-stage: the whole pipeline's atlas instead of the single
+            // archetype-stage ledger. Default profile is the paper's
+            // per-microbatch view; --schedule S [--microbatches M] scales
+            // each stage by that schedule's analytic in-flight count.
+            let atlas = if a.has("per-stage") {
+                let inflight = match a.opt("schedule") {
+                    Some(s) => StageInflight::for_schedule(
+                        ScheduleSpec::parse(s)?,
+                        cs.parallel.pp,
+                        a.get_u64("microbatches", 32)?,
+                    )?,
+                    None => StageInflight::per_microbatch(cs.parallel.pp),
+                };
+                Some(mm.memory_atlas(&act, zero, ov, &inflight)?)
+            } else {
+                None
+            };
+            let hbm_bytes = (a.get_f64("hbm-gib", 80.0)? * dsmem::GIB) as u64;
             if a.has("json") {
-                println!("{}", dsmem::report::ledger_json(&rep.ledger).dump());
+                match &atlas {
+                    Some(at) => {
+                        println!("{}", dsmem::scenario::runner::atlas_json(at, hbm_bytes).dump())
+                    }
+                    None => println!("{}", dsmem::report::ledger_json(&rep.ledger).dump()),
+                }
             } else {
                 let t = ledger_table(
                     format!(
@@ -316,6 +404,23 @@ fn main() -> anyhow::Result<()> {
                     a.has("breakdown"),
                 );
                 print!("{}", t.render());
+                if let Some(at) = &atlas {
+                    println!();
+                    print!(
+                        "{}",
+                        dsmem::report::atlas_table(
+                            format!(
+                                "Per-stage atlas ({}, ZeRO {}, binding stage {})",
+                                at.schedule_label,
+                                zero.name(),
+                                at.binding_stage(),
+                            ),
+                            at,
+                            hbm_bytes,
+                        )
+                        .render()
+                    );
+                }
             }
         }
         "kvcache" => {

@@ -5,18 +5,31 @@
 //! the step microbatch count — and maps candidates to [`PlanPoint`] records
 //! through the analytical model.
 //!
-//! Two expensive sub-results are memoized and shared behind `Arc`s across
+//! Feasibility is the true **max over pipeline stages**: every candidate is
+//! evaluated on every stage (the per-stage arithmetic of
+//! [`crate::analysis::atlas`]), and the [`PlanPoint`] carries the *binding*
+//! stage's ledger — not the heaviest-parameter archetype the paper's tables
+//! analyse, which under 1F1B-like schedules is in general not the stage that
+//! binds HBM. The per-stage pass is incremental: everything stage-invariant
+//! is computed once and shared, so only cheap per-stage ledger deltas remain
+//! (the `planner_atlas` bench guards an ≤2× cost vs the retired
+//! single-stage evaluation at PP16).
+//!
+//! Three expensive sub-results are memoized and shared behind `Arc`s across
 //! all worker threads:
 //!
 //! * [`StagePlan`]s (which walk every layer's parameter census) depend only
 //!   on `(model, pp, split, mode)` — one per distinct PP degree;
+//! * per-stage [`ZeroReport`]s, keyed by the parallel layout — thousands of
+//!   `(b, AC, ZeRO, schedule)` points share each layout's static
+//!   partitioning;
 //! * [`ScheduleProfile`]s — the schedule-derived per-stage in-flight counts,
 //!   bubble fraction and parameter multiplier, keyed by
 //!   `(schedule, pp, m)`. These replace the fixed `inflight_microbatches`
-//!   scalar the planner used to apply: the activation multiple now comes
-//!   from [`crate::schedule::PipelineSchedule::analytic_inflight`] at the
-//!   analysed stage, so `plan --microbatches` and the activation multiplier
-//!   agree even when `m < p`.
+//!   scalar the planner used to apply: the activation multiple comes from
+//!   [`crate::schedule::PipelineSchedule::analytic_inflight`] per stage, so
+//!   `plan --microbatches` and the activation multiplier agree even when
+//!   `m < p`.
 //!
 //! [`Evaluator::evaluate_all`] fans the grid out over `std::thread::scope`
 //! workers in contiguous chunks, so results come back in input order and the
@@ -26,7 +39,8 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use super::space::Candidate;
-use crate::analysis::activation::ActivationReport;
+use crate::analysis::activation::{mla_tape, moe_tape, ActivationReport};
+use crate::analysis::atlas::{assemble_stage_ledger, StageInflight};
 use crate::analysis::device::DeviceStaticParams;
 use crate::analysis::stages::{StagePlan, StageSplit};
 use crate::analysis::total::{DeviceMemoryReport, Overheads, SweepPoint};
@@ -37,11 +51,12 @@ use crate::ledger::{Component, ComponentGroup, MemoryLedger};
 use crate::model::CountMode;
 use crate::schedule::ScheduleSpec;
 
-/// One evaluated configuration: the component-tagged memory ledger of
-/// [`crate::analysis::DeviceMemoryReport`] scaled by the schedule's in-flight
-/// counts, plus the layout, the per-device parameter count and the
-/// schedule's pipeline-bubble fraction. The flat byte fields of the
-/// pre-ledger struct survive as accessor methods with identical semantics.
+/// One evaluated configuration: the **binding** (memory-maximal) stage's
+/// component-tagged ledger, plus the layout, the per-device parameter count
+/// and the schedule's pipeline-bubble fraction. The flat byte fields of the
+/// pre-ledger struct survive as accessor methods with identical semantics —
+/// now reporting the stage that actually decides HBM feasibility rather
+/// than the paper's heaviest-parameter archetype.
 #[derive(Debug, Clone)]
 pub struct PlanPoint {
     pub parallel: ParallelConfig,
@@ -50,13 +65,19 @@ pub struct PlanPoint {
     pub recompute: RecomputePolicy,
     pub zero: ZeroStrategy,
     pub schedule: ScheduleSpec,
-    /// Static parameters held per device (heaviest stage, unsharded, times
-    /// the schedule's replica multiplier).
+    /// The binding stage: the pipeline stage with the largest total bytes
+    /// under this point's schedule (earliest on ties). `ledger` is this
+    /// stage's decomposition.
+    pub binding_stage: u64,
+    /// Static parameters held per device of the binding stage (unsharded,
+    /// times the schedule's replica multiplier).
     pub device_params: u64,
-    /// Component-tagged memory decomposition; `total_bytes()` is its grand
-    /// total. Activation components carry the schedule-derived peak:
-    /// per-unit tape × analytic in-flight units, component-wise — the same
-    /// arithmetic the sim engine replays (asserted per component by
+    /// Component-tagged memory decomposition of the binding stage;
+    /// `total_bytes()` is its grand total — `max` over all stages, the true
+    /// feasibility requirement. Activation components carry the
+    /// schedule-derived peak: per-unit tape × the binding stage's analytic
+    /// in-flight units, component-wise — the same arithmetic the sim engine
+    /// replays (asserted per component and per stage by
     /// `integration_sim.rs`).
     pub ledger: MemoryLedger,
     /// Bubble fraction of this point's schedule at the evaluator's
@@ -142,6 +163,11 @@ pub struct Evaluator<'a> {
     plans: Mutex<HashMap<u64, Arc<StagePlan>>>,
     /// `(schedule, pp, m) → ScheduleProfile`, likewise shared.
     profiles: Mutex<HashMap<(ScheduleSpec, u64, u64), Arc<ScheduleProfile>>>,
+    /// `parallel layout → per-stage ZeroReports`, likewise shared — the
+    /// stage-invariant static partitioning behind the incremental per-stage
+    /// evaluation (every `(b, AC, ZeRO, schedule)` point of a layout reuses
+    /// it).
+    statics: Mutex<HashMap<ParallelConfig, Arc<Vec<ZeroReport>>>>,
 }
 
 impl<'a> Evaluator<'a> {
@@ -162,6 +188,7 @@ impl<'a> Evaluator<'a> {
             num_microbatches,
             plans: Mutex::new(HashMap::new()),
             profiles: Mutex::new(HashMap::new()),
+            statics: Mutex::new(HashMap::new()),
         }
     }
 
@@ -187,80 +214,104 @@ impl<'a> Evaluator<'a> {
         guard
             .entry((spec, pp, m))
             .or_insert_with(|| {
-                let sched = spec.resolve();
-                // Hard assert (memoized, so effectively free): silently
-                // profiling a shape the schedule cannot run would make the
-                // planner disagree with the sim engine, which errors on it.
-                assert!(
-                    sched.validate(pp, m).is_ok(),
-                    "unfiltered invalid schedule shape: {} pp={pp} m={m}",
-                    spec.name()
-                );
+                // Single source for the schedule-derived per-stage
+                // quantities: the atlas's StageInflight (which validates the
+                // shape — silently profiling one the schedule cannot run
+                // would make the planner disagree with the sim engine, which
+                // errors on it; the panic is effectively free, memoized).
+                let inflight = StageInflight::for_schedule(spec, pp, m).unwrap_or_else(|e| {
+                    panic!("unfiltered invalid schedule shape: {} pp={pp} m={m}: {e}", spec.name())
+                });
                 Arc::new(ScheduleProfile {
-                    inflight_units: (0..pp).map(|s| sched.analytic_inflight(s, pp, m)).collect(),
-                    units_per_microbatch: sched.units_per_microbatch().max(1),
-                    param_multiplier: sched.param_multiplier(),
-                    bubble: sched.bubble_fraction(pp, m),
+                    inflight_units: inflight.inflight_units,
+                    units_per_microbatch: inflight.units_per_microbatch,
+                    param_multiplier: inflight.param_multiplier,
+                    bubble: spec.resolve().bubble_fraction(pp, m),
                 })
             })
             .clone()
     }
 
-    /// Per-device activation bytes of the heaviest stage for one microbatch
-    /// (before in-flight scaling). Used by the bubble-vs-memory report.
+    /// The memoized per-stage static partitioning of one parallel layout:
+    /// `reports[stage]` is that stage's [`ZeroReport`] (its exact layer
+    /// census through [`DeviceStaticParams`], ZeRO divisors per plane). The
+    /// layout must be valid for the evaluator's split —
+    /// [`super::space::SearchSpace`] prunes candidates that are not.
+    pub fn statics_for(&self, parallel: &ParallelConfig) -> Arc<Vec<ZeroReport>> {
+        let mut guard = self.statics.lock().unwrap();
+        guard
+            .entry(*parallel)
+            .or_insert_with(|| {
+                let plan = self.plan_for(parallel.pp);
+                Arc::new(
+                    (0..plan.stages.len())
+                        .map(|s| {
+                            let dev = DeviceStaticParams::for_stage(
+                                self.model,
+                                parallel,
+                                &plan,
+                                s,
+                                self.dtypes.weight,
+                            );
+                            ZeroReport::build(&dev, parallel, self.dtypes)
+                        })
+                        .collect(),
+                )
+            })
+            .clone()
+    }
+
+    /// Per-device activation bytes of the paper's archetype stage for one
+    /// microbatch (before in-flight scaling). Used by the bubble-vs-memory
+    /// report.
     pub fn stage_activation_bytes(&self, parallel: &ParallelConfig, act: &ActivationConfig) -> u64 {
         let plan = self.plan_for(parallel.pp);
-        let heaviest = plan.heaviest_stage();
+        let archetype = plan.paper_archetype_stage();
         let ar =
-            ActivationReport::build(self.model, parallel, act, plan.stages[heaviest].num_layers);
+            ActivationReport::build(self.model, parallel, act, plan.stages[archetype].num_layers);
         ar.total_stage_bytes(act.recompute)
     }
 
-    /// Evaluate one candidate. Static classes match
-    /// `DeviceMemoryReport::build(...)` on an equivalent `MemoryModel`
-    /// (params scaled by the schedule's replica multiplier); activations are
-    /// the per-unit tape times the schedule's analytic in-flight count at
-    /// the analysed (heaviest-parameter) stage, computed *component-wise* —
-    /// the same arithmetic the sim engine replays op by op (the E2 bridge,
-    /// asserted per ledger component by the integration tests).
+    /// Evaluate one candidate on **every** pipeline stage and return the
+    /// binding (memory-maximal) stage's point — the per-stage arithmetic of
+    /// [`crate::analysis::atlas::assemble_stage_ledger`], the same the sim
+    /// engine replays op by op (asserted per ledger component and per stage
+    /// by the integration tests).
+    ///
+    /// The pass is incremental: the stage plan, the per-stage ZeRO reports
+    /// (per layout) and the schedule profile (per `(schedule, pp, m)`) are
+    /// memoized, and the activation tapes are built once per candidate —
+    /// each stage then costs only a ledger scale/merge.
     pub fn evaluate(&self, c: &Candidate) -> PlanPoint {
         let plan = self.plan_for(c.parallel.pp);
         let prof = self.schedule_profile(c.schedule, c.parallel.pp);
-        let heaviest = plan.heaviest_stage();
-        let dev = DeviceStaticParams::for_stage(
-            self.model,
-            &c.parallel,
-            &plan,
-            heaviest,
-            self.dtypes.weight,
-        );
-        let zr = ZeroReport::build(&dev, &c.parallel, self.dtypes);
-        let row = *zr.row(c.zero);
-        let ar = ActivationReport::build(
-            self.model,
-            &c.parallel,
-            &c.act,
-            plan.stages[heaviest].num_layers,
-        );
-        let inflight_units = prof.inflight_units[heaviest];
-        // Params carry the schedule's replica multiplier (exact: the dense
-        // and MoE shares scale independently and re-sum to mult × total).
-        let mut ledger = MemoryLedger::new()
-            .with(Component::ParamsDense, prof.param_multiplier * row.params_dense_bytes)
-            .with(Component::ParamsMoe, prof.param_multiplier * row.params_moe_bytes)
-            .with(Component::Gradients, row.gradient_bytes)
-            .with(Component::OptimizerStates, row.optimizer_bytes);
-        // Activation peak, component-wise: each component's stage tape is
-        // divided into the schedule's units and multiplied by the analytic
-        // in-flight count — mirroring the sim engine's per-unit allocations.
-        ledger.merge(
-            &ar.stage_ledger(c.act.recompute)
-                .div(prof.units_per_microbatch)
-                .scale(inflight_units),
-        );
-        let allocated = ledger.total();
-        ledger.set(Component::CommBuffer, self.overheads.comm_buffer_bytes);
-        ledger.set(Component::Fragmentation, self.overheads.fragmentation_bytes(allocated));
+        let statics = self.statics_for(&c.parallel);
+        let pol = c.act.recompute;
+        let mla_layer = mla_tape(self.model, &c.act).ledger(pol);
+        let moe_layer = moe_tape(self.model, &c.parallel, &c.act).ledger(pol);
+        let mut binding = 0usize;
+        let mut binding_ledger = MemoryLedger::new();
+        let mut binding_total = 0u64;
+        for (s, info) in plan.stages.iter().enumerate() {
+            let ledger = assemble_stage_ledger(
+                statics[s].row(c.zero),
+                &mla_layer,
+                &moe_layer,
+                info.num_layers,
+                info.moe_layers,
+                prof.units_per_microbatch,
+                prof.inflight_units[s],
+                prof.param_multiplier,
+                self.overheads,
+            );
+            let total = ledger.total();
+            // Strict `>` keeps the earliest stage on ties.
+            if s == 0 || total > binding_total {
+                binding = s;
+                binding_ledger = ledger;
+                binding_total = total;
+            }
+        }
         PlanPoint {
             parallel: c.parallel,
             micro_batch: c.act.micro_batch,
@@ -268,8 +319,9 @@ impl<'a> Evaluator<'a> {
             recompute: c.act.recompute,
             zero: c.zero,
             schedule: c.schedule,
-            device_params: prof.param_multiplier * dev.total_params(),
-            ledger,
+            binding_stage: binding as u64,
+            device_params: prof.param_multiplier * statics[binding].device_params,
+            ledger: binding_ledger,
             bubble: prof.bubble,
         }
     }
@@ -355,21 +407,23 @@ mod tests {
 
     #[test]
     fn evaluate_scales_device_memory_report_by_schedule_inflight() {
-        // Static classes must match the facade report exactly; activations
+        // For the paper config the binding stage IS the archetype (stage 1):
+        // static classes must match the facade report exactly; activations
         // must be the per-microbatch figure times the 1F1B in-flight count
-        // at the analysed stage.
+        // at that stage.
         let cs = CaseStudy::paper();
         let ev = paper_eval(&cs);
         let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
         let plan = mm.stage_plan();
-        let heaviest = plan.heaviest_stage() as u64;
-        let inflight = 32u64.min(cs.parallel.pp - heaviest);
+        let archetype = plan.paper_archetype_stage() as u64;
+        let inflight = 32u64.min(cs.parallel.pp - archetype);
         for zero in ZeroStrategy::ALL {
             for rc in [RecomputePolicy::None, RecomputePolicy::Full] {
                 let c = paper_candidate(&cs, zero, rc);
                 let p = ev.evaluate(&c);
                 let rep =
                     DeviceMemoryReport::build(&mm, &c.act, zero, Overheads::paper_midpoint());
+                assert_eq!(p.binding_stage, archetype, "{zero:?} {rc:?}");
                 assert_eq!(p.params_bytes(), rep.params_bytes(), "{zero:?} {rc:?}");
                 assert_eq!(p.gradient_bytes(), rep.gradient_bytes());
                 assert_eq!(p.optimizer_bytes(), rep.optimizer_bytes());
@@ -455,7 +509,61 @@ mod tests {
             assert_eq!(a.parallel, b.parallel);
             assert_eq!(a.zero, b.zero);
             assert_eq!(a.schedule, b.schedule);
+            assert_eq!(a.binding_stage, b.binding_stage);
+            assert_eq!(a.device_params, b.device_params);
         }
+    }
+
+    #[test]
+    fn evaluate_agrees_with_the_cluster_atlas() {
+        // The evaluator's incremental per-stage pass and the standalone
+        // atlas are the same arithmetic: the point's ledger must equal the
+        // atlas's binding-stage entry, component for component, for every
+        // registered schedule.
+        use crate::analysis::{ClusterMemoryAtlas, StageInflight};
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        for spec in crate::schedule::registry() {
+            let c = Candidate {
+                parallel: cs.parallel,
+                act: cs.activation,
+                zero: ZeroStrategy::OsG,
+                schedule: spec,
+            };
+            let p = ev.evaluate(&c);
+            let inflight = StageInflight::for_schedule(spec, cs.parallel.pp, 32).unwrap();
+            let atlas = ClusterMemoryAtlas::build(
+                &mm,
+                &cs.activation,
+                ZeroStrategy::OsG,
+                Overheads::paper_midpoint(),
+                &inflight,
+            )
+            .unwrap();
+            assert_eq!(p.binding_stage as usize, atlas.binding_stage(), "{}", spec.name());
+            assert_eq!(p.ledger, atlas.binding().ledger, "{}", spec.name());
+            assert_eq!(p.total_bytes(), atlas.max_total_bytes(), "{}", spec.name());
+            assert_eq!(p.device_params, atlas.binding().device_params, "{}", spec.name());
+        }
+    }
+
+    #[test]
+    fn statics_cache_is_shared_per_layout() {
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        let a = ev.statics_for(&cs.parallel);
+        let b = ev.statics_for(&cs.parallel);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.len(), 16);
+        // Stage 1 is the paper archetype: its report matches the facade's.
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        let zr = mm.zero_report();
+        assert_eq!(a[1].device_params, zr.device_params);
+        assert_eq!(
+            a[1].row(ZeroStrategy::OsG).total_bytes(),
+            zr.row(ZeroStrategy::OsG).total_bytes()
+        );
     }
 
     #[test]

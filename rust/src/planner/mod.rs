@@ -42,7 +42,7 @@ pub mod report;
 pub mod space;
 
 pub use eval::{sweep_fixed, Evaluator, PlanPoint, ScheduleProfile};
-pub use space::{Candidate, SearchSpace};
+pub use space::{Candidate, Candidates, SearchSpace};
 
 use crate::analysis::total::Overheads;
 use crate::config::{DtypePolicy, ModelConfig};
@@ -98,18 +98,19 @@ pub struct PlanResult {
     pub ranked: Vec<PlanPoint>,
 }
 
-/// Run a planning query: enumerate → prune → evaluate in parallel → filter →
-/// frontier → rank.
+/// Run a planning query: stream the grid → prune → evaluate in parallel →
+/// filter → frontier → rank.
 ///
-/// Pruning happens in two passes: [`SearchSpace::enumerate`] applies every
-/// microbatch-independent rule, then the `(schedule, pp, m)` shapes a
-/// schedule cannot run (e.g. DualPipe with `m < 2·PP`) are dropped here,
-/// where the step microbatch count is known.
+/// Pruning happens in two passes: [`SearchSpace::candidates`] applies every
+/// microbatch-independent rule as it streams, then the `(schedule, pp, m)`
+/// shapes a schedule cannot run (e.g. DualPipe with `m < 2·PP`) are dropped
+/// here, where the step microbatch count is known. Candidates are evaluated
+/// in bounded chunks, so the *candidate* grid is never materialized up front
+/// (the 100k-device stress scenario holds one 4096-candidate buffer at a
+/// time; the evaluated `PlanPoint`s still accumulate — folding those online
+/// is a ROADMAP item).
 pub fn plan(model: &ModelConfig, dtypes: DtypePolicy, query: &PlanQuery) -> PlanResult {
-    let mut candidates = query.space.enumerate(model);
-    candidates.retain(|c| {
-        c.schedule.resolve().validate(c.parallel.pp, query.num_microbatches).is_ok()
-    });
+    const CHUNK: usize = 4096;
     let evaluator = Evaluator::new(
         model,
         dtypes,
@@ -118,7 +119,21 @@ pub fn plan(model: &ModelConfig, dtypes: DtypePolicy, query: &PlanQuery) -> Plan
         query.overheads,
         query.num_microbatches,
     );
-    let evaluated = evaluator.evaluate_all(&candidates);
+    let mut evaluated = Vec::new();
+    let mut buf: Vec<Candidate> = Vec::with_capacity(CHUNK);
+    for c in query.space.candidates(model) {
+        if c.schedule.resolve().validate(c.parallel.pp, query.num_microbatches).is_err() {
+            continue;
+        }
+        buf.push(c);
+        if buf.len() == CHUNK {
+            evaluated.extend(evaluator.evaluate_all(&buf));
+            buf.clear();
+        }
+    }
+    if !buf.is_empty() {
+        evaluated.extend(evaluator.evaluate_all(&buf));
+    }
     let feasible = pareto::feasible(&evaluated, query.hbm_bytes);
     let frontier = pareto::frontier(&feasible);
     let ranked = pareto::rank(&feasible, query.top_k);

@@ -4,11 +4,13 @@
 use std::collections::BTreeMap;
 
 use super::eval::{Evaluator, PlanPoint};
-use super::PlanResult;
+use super::{PlanQuery, PlanResult};
+use crate::analysis::atlas::{ClusterMemoryAtlas, StageInflight};
 use crate::analysis::bubble::{frontier as bubble_frontier, FrontierPoint};
 use crate::analysis::stages::StageSplit;
 use crate::analysis::total::Overheads;
-use crate::config::CaseStudy;
+use crate::analysis::MemoryModel;
+use crate::config::{ActivationConfig, CaseStudy, DtypePolicy, ModelConfig};
 use crate::model::CountMode;
 use crate::report::ledger::BREAKDOWN_HEADERS;
 use crate::report::{gib, Table};
@@ -27,6 +29,7 @@ fn point_row(idx: usize, p: &PlanPoint, breakdown: bool) -> Vec<String> {
         p.recompute.name().into(),
         p.zero.name().into(),
         p.schedule.name(),
+        p.binding_stage.to_string(),
         format!("{:.1}", gib(p.total_bytes())),
         format!("{:.1}", 100.0 * p.bubble),
         format!("{:.2}B", p.device_params as f64 / 1e9),
@@ -37,9 +40,9 @@ fn point_row(idx: usize, p: &PlanPoint, breakdown: bool) -> Vec<String> {
     row
 }
 
-const POINT_HEADERS: [&str; 14] = [
-    "#", "DP", "TP", "PP", "EP", "ETP", "SP", "b", "recompute", "ZeRO", "schedule", "total GiB",
-    "bubble %", "params/dev",
+const POINT_HEADERS: [&str; 15] = [
+    "#", "DP", "TP", "PP", "EP", "ETP", "SP", "b", "recompute", "ZeRO", "schedule", "bind",
+    "total GiB", "bubble %", "params/dev",
 ];
 
 fn point_headers(breakdown: bool) -> Vec<&'static str> {
@@ -108,6 +111,7 @@ fn point_json(p: &PlanPoint) -> Json {
     m.insert("recompute".into(), Json::Str(p.recompute.name().into()));
     m.insert("zero".into(), Json::Str(p.zero.name().into()));
     m.insert("schedule".into(), Json::Str(p.schedule.name()));
+    m.insert("binding_stage".into(), Json::Num(p.binding_stage as f64));
     m.insert("device_params".into(), Json::Num(p.device_params as f64));
     m.insert("params_bytes".into(), Json::Num(p.params_bytes() as f64));
     m.insert("gradient_bytes".into(), Json::Num(p.gradient_bytes() as f64));
@@ -122,6 +126,32 @@ fn point_json(p: &PlanPoint) -> Json {
     );
     m.insert("bubble".into(), Json::Num(p.bubble));
     Json::Obj(m)
+}
+
+/// The full per-stage cluster atlas of one evaluated plan point, under the
+/// query's evaluation knobs (split, counting mode, overheads, microbatch
+/// count) — the `plan --per-stage` drill-down. The atlas's binding stage and
+/// ledger are by construction identical to the point's own (the evaluator
+/// runs the same per-stage arithmetic; asserted by the planner tests).
+pub fn point_atlas(
+    model: &ModelConfig,
+    dtypes: DtypePolicy,
+    query: &PlanQuery,
+    p: &PlanPoint,
+) -> anyhow::Result<ClusterMemoryAtlas> {
+    let mm = MemoryModel::new(model, &p.parallel, dtypes)
+        .with_mode(query.mode)
+        .with_split(query.space.split.clone());
+    let act = ActivationConfig {
+        micro_batch: p.micro_batch,
+        seq_len: query.space.seq_len,
+        sp: p.sp,
+        cp: query.space.cp,
+        recompute: p.recompute,
+    };
+    let inflight =
+        StageInflight::for_schedule(p.schedule, p.parallel.pp, query.num_microbatches)?;
+    ClusterMemoryAtlas::build(&mm, &act, p.zero, query.overheads, &inflight)
 }
 
 /// Machine-readable export of a full plan result.
@@ -230,6 +260,26 @@ mod tests {
         assert_eq!(ft.headers.len(), POINT_HEADERS.len() + BREAKDOWN_HEADERS.len());
         // Non-breakdown stays column-identical to the legacy shape.
         assert_eq!(ranking_table(&res).headers.len(), POINT_HEADERS.len());
+    }
+
+    #[test]
+    fn point_atlas_reproduces_the_points_binding_ledger() {
+        let cs = CaseStudy::paper();
+        let mut space = SearchSpace::for_world(1024);
+        space.tp = vec![2];
+        space.pp = vec![16];
+        space.ep = vec![8];
+        space.etp = vec![1];
+        space.sequence_parallel = vec![true];
+        let q = PlanQuery::new(space, 80 * crate::GIB as u64);
+        let res = plan(&cs.model, cs.dtypes, &q);
+        for p in res.ranked.iter().take(3) {
+            let atlas = point_atlas(&cs.model, cs.dtypes, &q, p).unwrap();
+            assert_eq!(atlas.entries.len(), 16);
+            assert_eq!(atlas.binding_stage() as u64, p.binding_stage);
+            assert_eq!(atlas.binding().ledger, p.ledger);
+            assert_eq!(atlas.max_total_bytes(), p.total_bytes());
+        }
     }
 
     #[test]

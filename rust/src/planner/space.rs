@@ -145,52 +145,120 @@ impl SearchSpace {
     /// Order is deterministic: TP → PP → EP → ETP → SP → b → AC → ZeRO →
     /// schedule, each axis in the order given. Schedule validity against the
     /// step microbatch count is the caller's final filter (see module docs).
+    ///
+    /// Materializes the whole grid — [`SearchSpace::candidates`] yields the
+    /// same points lazily; prefer it for large fleets (the planner streams
+    /// it in chunks so the 100k-device stress case never holds the full
+    /// candidate vector).
     pub fn enumerate(&self, model: &ModelConfig) -> Vec<Candidate> {
-        let mut out = Vec::new();
-        for &tp in &self.tp {
-            for &pp in &self.pp {
-                if tp == 0 || pp == 0 || self.world % (tp * pp) != 0 {
-                    continue;
+        self.candidates(model).collect()
+    }
+
+    /// Lazily yield every valid grid point, in exactly the order (and with
+    /// exactly the pruning) of [`SearchSpace::enumerate`], without
+    /// materializing the grid.
+    pub fn candidates<'a>(&'a self, model: &'a ModelConfig) -> Candidates<'a> {
+        let base_count = self.tp.len()
+            * self.pp.len()
+            * self.ep.len()
+            * self.etp.len()
+            * self.sequence_parallel.len()
+            * self.micro_batch.len()
+            * self.recompute.len();
+        Candidates { space: self, model, next_base: 0, base_count, pending: None, zs: 0 }
+    }
+
+    /// Decode flat base index `i` — the odometer over the seven
+    /// layout/activation axes, recompute fastest, TP slowest (mirroring the
+    /// loop nesting of the historical `enumerate`) — into a validated
+    /// `(parallel, act)` base point, or `None` if pruning rejects it.
+    fn base_at(&self, model: &ModelConfig, i: usize) -> Option<(ParallelConfig, ActivationConfig)> {
+        let mut rem = i;
+        let rc = self.recompute[rem % self.recompute.len()];
+        rem /= self.recompute.len();
+        let b = self.micro_batch[rem % self.micro_batch.len()];
+        rem /= self.micro_batch.len();
+        let sp_on = self.sequence_parallel[rem % self.sequence_parallel.len()];
+        rem /= self.sequence_parallel.len();
+        let etp = self.etp[rem % self.etp.len()];
+        rem /= self.etp.len();
+        let ep = self.ep[rem % self.ep.len()];
+        rem /= self.ep.len();
+        let pp = self.pp[rem % self.pp.len()];
+        rem /= self.pp.len();
+        let tp = self.tp[rem % self.tp.len()];
+        if tp == 0 || pp == 0 || self.world % (tp * pp) != 0 {
+            return None;
+        }
+        let dp = self.world / (tp * pp);
+        if dp == 0 {
+            return None;
+        }
+        // SP=TP degenerates to SP=1 when TP=1; skip the duplicate if the
+        // space also enumerates SP off.
+        if sp_on && tp == 1 && self.sequence_parallel.contains(&false) {
+            return None;
+        }
+        let sp = if sp_on { tp } else { 1 };
+        let parallel = ParallelConfig { dp, tp, pp, ep, etp };
+        let act = ActivationConfig {
+            micro_batch: b,
+            seq_len: self.seq_len,
+            sp,
+            cp: self.cp,
+            recompute: rc,
+        };
+        if !self.is_valid(model, &parallel, &act) {
+            return None;
+        }
+        Some((parallel, act))
+    }
+}
+
+/// Streaming grid iterator (see [`SearchSpace::candidates`]): walks the
+/// layout/activation odometer, pruning invalid base points, and fans each
+/// surviving base out over the ZeRO × schedule axes — O(1) memory instead of
+/// the full candidate vector.
+pub struct Candidates<'a> {
+    space: &'a SearchSpace,
+    model: &'a ModelConfig,
+    /// Next flat index into the seven-axis base odometer.
+    next_base: usize,
+    base_count: usize,
+    /// The current valid base point being fanned out, if any.
+    pending: Option<(ParallelConfig, ActivationConfig)>,
+    /// Flat index into the ZeRO × schedule fan-out of `pending`.
+    zs: usize,
+}
+
+impl Iterator for Candidates<'_> {
+    type Item = Candidate;
+
+    fn next(&mut self) -> Option<Candidate> {
+        loop {
+            if let Some((parallel, act)) = self.pending {
+                let ns = self.space.schedule.len();
+                if self.zs < self.space.zero.len() * ns {
+                    let zero = self.space.zero[self.zs / ns];
+                    let schedule = self.space.schedule[self.zs % ns];
+                    self.zs += 1;
+                    return Some(Candidate { parallel, act, zero, schedule });
                 }
-                let dp = self.world / (tp * pp);
-                if dp == 0 {
-                    continue;
+                self.pending = None;
+            }
+            loop {
+                if self.next_base >= self.base_count {
+                    return None;
                 }
-                for &ep in &self.ep {
-                    for &etp in &self.etp {
-                        let parallel = ParallelConfig { dp, tp, pp, ep, etp };
-                        for &sp_on in &self.sequence_parallel {
-                            // SP=TP degenerates to SP=1 when TP=1; skip the
-                            // duplicate if the space also enumerates SP off.
-                            if sp_on && tp == 1 && self.sequence_parallel.contains(&false) {
-                                continue;
-                            }
-                            let sp = if sp_on { tp } else { 1 };
-                            for &b in &self.micro_batch {
-                                for &rc in &self.recompute {
-                                    let act = ActivationConfig {
-                                        micro_batch: b,
-                                        seq_len: self.seq_len,
-                                        sp,
-                                        cp: self.cp,
-                                        recompute: rc,
-                                    };
-                                    if !self.is_valid(model, &parallel, &act) {
-                                        continue;
-                                    }
-                                    for &zero in &self.zero {
-                                        for &schedule in &self.schedule {
-                                            out.push(Candidate { parallel, act, zero, schedule });
-                                        }
-                                    }
-                                }
-                            }
-                        }
-                    }
+                let i = self.next_base;
+                self.next_base += 1;
+                if let Some(base) = self.space.base_at(self.model, i) {
+                    self.pending = Some(base);
+                    self.zs = 0;
+                    break;
                 }
             }
         }
-        out
     }
 }
 
@@ -227,6 +295,32 @@ mod tests {
                 "{} missing from enumeration",
                 spec.name()
             );
+        }
+    }
+
+    #[test]
+    fn streaming_candidates_match_enumerate_exactly() {
+        // The lazy iterator is the single source of truth for `enumerate`;
+        // pin it to the historical order and content anyway, including on a
+        // narrowed space and a non-power-of-two world.
+        let m = ModelConfig::deepseek_v3();
+        for world in [256u64, 1024] {
+            let mut space = SearchSpace::for_world(world);
+            if world == 256 {
+                space.tp = vec![1, 2];
+                space.etp = vec![1];
+            }
+            let eager = space.enumerate(&m);
+            let lazy: Vec<Candidate> = space.candidates(&m).collect();
+            assert_eq!(eager.len(), lazy.len());
+            assert_eq!(eager, lazy);
+            // The iterator is resumable mid-stream: interleaving two pulls
+            // yields the same sequence.
+            let mut it = space.candidates(&m);
+            for (i, want) in eager.iter().enumerate() {
+                assert_eq!(it.next().as_ref(), Some(want), "position {i}");
+            }
+            assert!(it.next().is_none());
         }
     }
 

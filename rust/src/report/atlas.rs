@@ -1,0 +1,98 @@
+//! Rendering the per-stage cluster memory atlas
+//! ([`crate::analysis::atlas::ClusterMemoryAtlas`]): one row per pipeline
+//! stage with the per-component GiB columns, the stage's HBM headroom and a
+//! marker on the binding stage, plus a max/min/mean summary row.
+
+use super::{gib, Table};
+use crate::analysis::atlas::ClusterMemoryAtlas;
+use crate::report::ledger::breakdown_cells;
+
+/// Signed GiB rendering for headroom columns (`+12.3` / `-4.5`).
+fn signed_gib(bytes: i128) -> String {
+    let g = bytes as f64 / crate::GIB;
+    format!("{g:+.1}")
+}
+
+/// Render an atlas as a table: stage, layer mix, in-flight units, the six
+/// per-component GiB columns, total, headroom vs `hbm_bytes`, and a `◀ bind`
+/// marker on the binding stage.
+pub fn atlas_table(title: impl Into<String>, atlas: &ClusterMemoryAtlas, hbm_bytes: u64) -> Table {
+    let binding = atlas.binding_stage();
+    let mut t = Table::new(
+        title,
+        &[
+            "stage", "layers", "moe", "inflight", "P", "G", "O", "act", "comm", "frag",
+            "total GiB", "headroom", "",
+        ],
+    );
+    for (i, e) in atlas.entries.iter().enumerate() {
+        let mut row = vec![
+            e.stage.to_string(),
+            e.num_layers.to_string(),
+            e.moe_layers.to_string(),
+            e.inflight_units.to_string(),
+        ];
+        row.extend(breakdown_cells(&e.ledger));
+        row.push(format!("{:.1}", gib(e.total_bytes())));
+        row.push(signed_gib(e.headroom_bytes(hbm_bytes)));
+        row.push(if i == binding { "◀ bind".to_string() } else { String::new() });
+        t.row(row);
+    }
+    t.row(vec![
+        "max/min/mean".to_string(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        format!(
+            "{:.1}/{:.1}/{:.1}",
+            gib(atlas.max_total_bytes()),
+            gib(atlas.min_total_bytes()),
+            gib(atlas.mean_total_bytes()),
+        ),
+        signed_gib(hbm_bytes as i128 - atlas.max_total_bytes() as i128),
+        if atlas.fits(hbm_bytes) { "fits".to_string() } else { "OVER".to_string() },
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::total::Overheads;
+    use crate::analysis::zero::ZeroStrategy;
+    use crate::analysis::{MemoryModel, StageInflight};
+    use crate::config::CaseStudy;
+    use crate::schedule::ScheduleSpec;
+
+    #[test]
+    fn atlas_table_marks_the_binding_stage() {
+        let cs = CaseStudy::paper();
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        let inflight = StageInflight::for_schedule(ScheduleSpec::OneFOneB, 16, 32).unwrap();
+        let atlas = mm
+            .memory_atlas(&cs.activation, ZeroStrategy::OsG, Overheads::paper_midpoint(), &inflight)
+            .unwrap();
+        let t = atlas_table("atlas", &atlas, 80 * crate::GIB as u64);
+        // 16 stage rows + the summary row.
+        assert_eq!(t.rows.len(), 17);
+        for row in &t.rows {
+            assert_eq!(row.len(), t.headers.len());
+        }
+        let rendered = t.render();
+        assert!(rendered.contains("◀ bind"));
+        assert_eq!(rendered.matches("◀ bind").count(), 1);
+        assert!(rendered.contains("max/min/mean"));
+    }
+
+    #[test]
+    fn signed_headroom_formats_both_signs() {
+        assert!(signed_gib(2 * crate::GIB as i128).starts_with('+'));
+        assert!(signed_gib(-(2 * crate::GIB as i128)).starts_with('-'));
+    }
+}

@@ -1,11 +1,13 @@
 //! Table rendering: regenerates the paper's tables as formatted text / CSV /
 //! markdown. Used by the `dsmem tables` CLI and the benches.
 
+pub mod atlas;
 mod bytes;
 pub mod ledger;
 mod table;
 pub mod tables;
 
+pub use atlas::atlas_table;
 pub use bytes::{fmt_bytes, fmt_count, gib, mib};
 pub use ledger::{ledger_json, ledger_table};
 pub use table::Table;

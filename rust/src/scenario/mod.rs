@@ -5,7 +5,7 @@
 //! CLI invocation can only pin one of them. A **scenario** is a small
 //! TOML-subset file naming a model preset, layout/activation overrides, an
 //! HBM budget, overheads and one action (`plan`, `sweep`, `simulate`,
-//! `kvcache`); the **runner** executes a whole directory of them
+//! `kvcache`, `atlas`); the **runner** executes a whole directory of them
 //! thread-parallel through the existing [`crate::planner`] /
 //! [`crate::sim`] / [`crate::analysis::inference`] entry points and renders
 //! each result into a canonical, deterministically-ordered JSON snapshot.

@@ -22,6 +22,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use super::spec::{Action, ScenarioSpec};
+use crate::analysis::atlas::{ClusterMemoryAtlas, StageInflight};
 use crate::analysis::inference::{kv_cache, mla_vs_mha_ratio, serving_ledger, CacheKind};
 use crate::analysis::total::SweepPoint;
 use crate::analysis::zero::ZeroStrategy;
@@ -107,18 +108,28 @@ pub fn run_scenario(spec: &ScenarioSpec) -> anyhow::Result<Json> {
             simulate_json(&res, *zero)
         }
         Action::KvCache { tokens, gqa_groups } => kvcache_json(cs, *tokens, *gqa_groups),
+        Action::Atlas { schedule, microbatches, zero } => {
+            let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+            let inflight = match schedule {
+                Some(sched) => StageInflight::for_schedule(*sched, cs.parallel.pp, *microbatches)?,
+                None => StageInflight::per_microbatch(cs.parallel.pp),
+            };
+            let atlas =
+                ClusterMemoryAtlas::build(&mm, &cs.activation, *zero, spec.overheads, &inflight)?;
+            atlas_json(&atlas, spec.hbm_bytes())
+        }
     };
     Ok(envelope(spec, result))
 }
 
 /// Wrap an action result in the suite's snapshot envelope. `hbm_gib` only
-/// appears for the actions that consume a budget (`plan`/`sweep`) — the spec
-/// parser rejects the key as inert elsewhere, so the snapshot must not
-/// assert a value the format forbids authors from stating.
+/// appears for the actions that consume a budget (`plan`/`sweep`/`atlas`) —
+/// the spec parser rejects the key as inert elsewhere, so the snapshot must
+/// not assert a value the format forbids authors from stating.
 pub fn envelope(spec: &ScenarioSpec, result: Json) -> Json {
     let mut m = BTreeMap::new();
     m.insert("action".into(), Json::Str(spec.action.name().into()));
-    if matches!(spec.action, Action::Plan { .. } | Action::Sweep) {
+    if matches!(spec.action, Action::Plan { .. } | Action::Sweep | Action::Atlas { .. }) {
         m.insert("hbm_gib".into(), Json::Num(spec.hbm_gib));
     }
     m.insert("model".into(), Json::Str(spec.case.model.name.clone()));
@@ -221,6 +232,40 @@ pub fn simulate_json(res: &SimResult, zero: ZeroStrategy) -> Json {
     m.insert("schedule".into(), Json::Str(res.spec.name()));
     m.insert("stages".into(), Json::Arr(stages));
     m.insert("zero".into(), Json::Str(zero.name().into()));
+    Json::Obj(m)
+}
+
+/// Canonical `atlas` snapshot: every pipeline stage's component
+/// decomposition, in-flight units and signed headroom against the budget,
+/// plus the binding stage and the max/min/mean totals.
+pub fn atlas_json(atlas: &ClusterMemoryAtlas, budget_bytes: u64) -> Json {
+    let stages: Vec<Json> = atlas
+        .entries
+        .iter()
+        .map(|e| {
+            let mut m = BTreeMap::new();
+            m.insert("components".into(), ledger_components_json(&e.ledger));
+            m.insert("device_params".into(), Json::Num(e.device_params as f64));
+            m.insert("headroom_bytes".into(), Json::Num(e.headroom_bytes(budget_bytes) as f64));
+            m.insert("inflight_units".into(), Json::Num(e.inflight_units as f64));
+            m.insert("layers".into(), Json::Num(e.num_layers as f64));
+            m.insert("moe_layers".into(), Json::Num(e.moe_layers as f64));
+            m.insert("stage".into(), Json::Num(e.stage as f64));
+            m.insert("total_bytes".into(), Json::Num(e.total_bytes() as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut m = BTreeMap::new();
+    m.insert("binding_stage".into(), Json::Num(atlas.binding_stage() as f64));
+    m.insert("budget_bytes".into(), Json::Num(budget_bytes as f64));
+    m.insert("devices_per_stage".into(), Json::Num(atlas.devices_per_stage as f64));
+    m.insert("fits".into(), Json::Bool(atlas.fits(budget_bytes)));
+    m.insert("max_total_bytes".into(), Json::Num(atlas.max_total_bytes() as f64));
+    m.insert("mean_total_bytes".into(), Json::Num(atlas.mean_total_bytes() as f64));
+    m.insert("min_total_bytes".into(), Json::Num(atlas.min_total_bytes() as f64));
+    m.insert("schedule".into(), Json::Str(atlas.schedule_label.clone()));
+    m.insert("stages".into(), Json::Arr(stages));
+    m.insert("zero".into(), Json::Str(atlas.zero.name().into()));
     Json::Obj(m)
 }
 

@@ -328,6 +328,11 @@ pub enum Action {
     Simulate { schedule: ScheduleSpec, microbatches: u64, zero: ZeroStrategy, frag: bool },
     /// Inference KV-cache analysis ([`crate::analysis::inference`]).
     KvCache { tokens: u64, gqa_groups: u64 },
+    /// Per-stage cluster memory atlas ([`crate::analysis::atlas`]): every
+    /// stage's ledger, the binding stage and per-stage headroom against the
+    /// scenario's HBM budget. `schedule = None` is the per-microbatch view
+    /// (one in-flight tape per stage, the paper's table convention).
+    Atlas { schedule: Option<ScheduleSpec>, microbatches: u64, zero: ZeroStrategy },
 }
 
 impl Action {
@@ -338,6 +343,7 @@ impl Action {
             Action::Sweep => "sweep",
             Action::Simulate { .. } => "simulate",
             Action::KvCache { .. } => "kvcache",
+            Action::Atlas { .. } => "atlas",
         }
     }
 }
@@ -391,7 +397,7 @@ impl ScenarioSpec {
         for sec in doc.section_names() {
             let allowed = sec == "parallel"
                 || sec == "activation"
-                || (sec == action_str && matches!(sec, "plan" | "simulate" | "kvcache"));
+                || (sec == action_str && matches!(sec, "plan" | "simulate" | "kvcache" | "atlas"));
             if !allowed {
                 anyhow::bail!(
                     "scenario {name}: unexpected section [{sec}] for action {action_str:?}"
@@ -558,6 +564,41 @@ impl ScenarioSpec {
                 }
             }
             "sweep" => Action::Sweep,
+            "atlas" => {
+                let empty = BTreeMap::new();
+                let sec = doc.section("atlas").unwrap_or(&empty);
+                check_keys(sec, "atlas", &["schedule", "microbatches", "zero"])?;
+                let schedule = match sec.get("schedule") {
+                    // "none" = the per-microbatch view (one tape per stage).
+                    Some(v) => match v.as_str()? {
+                        "none" => None,
+                        s => Some(ScheduleSpec::parse(s)?),
+                    },
+                    None => Some(ScheduleSpec::OneFOneB),
+                };
+                // The per-microbatch profile holds one tape per stage and
+                // consumes no microbatch count — a pinned-but-inert key
+                // would bless a snapshot of a different study than the
+                // author wrote (the loud-failure guarantee above).
+                if schedule.is_none() && sec.contains_key("microbatches") {
+                    anyhow::bail!(
+                        "scenario {name}: `microbatches` has no effect with \
+                         schedule = \"none\" — remove it"
+                    );
+                }
+                let microbatches = get_u64_or(sec, "microbatches", 32)?;
+                if let Some(sched_spec) = &schedule {
+                    sched_spec
+                        .resolve()
+                        .validate(case.parallel.pp, microbatches)
+                        .map_err(|e| anyhow::anyhow!("scenario {name}: {e}"))?;
+                }
+                let zero = match sec.get("zero") {
+                    Some(v) => ZeroStrategy::parse(v.as_str()?)?,
+                    None => ZeroStrategy::None,
+                };
+                Action::Atlas { schedule, microbatches, zero }
+            }
             "simulate" => {
                 let empty = BTreeMap::new();
                 let sec = doc.section("simulate").unwrap_or(&empty);
@@ -594,7 +635,8 @@ impl ScenarioSpec {
             }
             other => {
                 anyhow::bail!(
-                    "scenario {name}: action must be plan|sweep|simulate|kvcache, got {other:?}"
+                    "scenario {name}: action must be plan|sweep|simulate|kvcache|atlas, \
+                     got {other:?}"
                 )
             }
         };
@@ -712,6 +754,50 @@ mod tests {
             }
             other => panic!("wrong action: {other:?}"),
         }
+    }
+
+    #[test]
+    fn atlas_action_parses_with_defaults_and_overrides() {
+        let s = ScenarioSpec::from_toml("action = \"atlas\"\n", "a").unwrap();
+        match &s.action {
+            Action::Atlas { schedule, microbatches, zero } => {
+                assert_eq!(*schedule, Some(ScheduleSpec::OneFOneB));
+                assert_eq!(*microbatches, 32);
+                assert_eq!(*zero, ZeroStrategy::None);
+            }
+            other => panic!("wrong action: {other:?}"),
+        }
+        let text = "action = \"atlas\"\nhbm_gib = 64\n\n[atlas]\nschedule = \"dualpipe\"\n\
+                    microbatches = 32\nzero = \"os_g\"\n";
+        let s = ScenarioSpec::from_toml(text, "a").unwrap();
+        match &s.action {
+            Action::Atlas { schedule, microbatches, zero } => {
+                assert_eq!(*schedule, Some(ScheduleSpec::DualPipe));
+                assert_eq!(*microbatches, 32);
+                assert_eq!(*zero, ZeroStrategy::OsG);
+            }
+            other => panic!("wrong action: {other:?}"),
+        }
+        // "none" selects the per-microbatch profile.
+        let s = ScenarioSpec::from_toml(
+            "action = \"atlas\"\n\n[atlas]\nschedule = \"none\"\n",
+            "a",
+        )
+        .unwrap();
+        match &s.action {
+            Action::Atlas { schedule, .. } => assert!(schedule.is_none()),
+            other => panic!("wrong action: {other:?}"),
+        }
+        // Shapes the schedule cannot run fail at parse, like `simulate`.
+        let bad = "action = \"atlas\"\n\n[atlas]\nschedule = \"dualpipe\"\nmicrobatches = 8\n";
+        assert!(ScenarioSpec::from_toml(bad, "a").is_err());
+        // `microbatches` is inert under the per-microbatch profile — loud.
+        let bad = "action = \"atlas\"\n\n[atlas]\nschedule = \"none\"\nmicrobatches = 32\n";
+        assert!(ScenarioSpec::from_toml(bad, "a").is_err());
+        // Unknown [atlas] keys are loud.
+        assert!(
+            ScenarioSpec::from_toml("action = \"atlas\"\n\n[atlas]\nwarp = 9\n", "a").is_err()
+        );
     }
 
     #[test]

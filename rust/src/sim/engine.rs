@@ -18,7 +18,7 @@
 use super::allocator::{AllocStats, CachingAllocator};
 use super::collective::CollectivePlan;
 use super::tracker::MemoryTimeline;
-use crate::analysis::{DeviceStaticParams, MemoryModel, ZeroStrategy};
+use crate::analysis::{DeviceStaticParams, MemoryModel, ZeroReport, ZeroStrategy};
 use crate::config::ActivationConfig;
 use crate::ledger::{Component, MemoryLedger};
 use crate::schedule::{PipelineOp, Schedule, ScheduleSpec};
@@ -107,8 +107,6 @@ impl<'a> SimEngine<'a> {
         let sched = spec.resolve();
         let unit_div = sched.units_per_microbatch().max(1);
         let param_mult = sched.param_multiplier();
-        let zr = self.mm.zero_report();
-        let zrow = *zr.row(self.zero);
 
         let mut stages = Vec::with_capacity(plan.stages.len());
         for sinfo in &plan.stages {
@@ -120,12 +118,12 @@ impl<'a> SimEngine<'a> {
                 s as usize,
                 self.mm.dtypes.weight,
             );
-            // Static memory scales with this stage's share of the analysed
-            // stage's params (ZeRO shards identically on every stage).
-            let scale = |bytes: u64| -> u64 {
-                let base = zr.device_params.max(1);
-                (bytes as u128 * dev.total_params() as u128 / base as u128) as u64
-            };
+            // Exact per-stage statics: this stage's own layer census through
+            // its ZeRO report (the cluster-atlas convention). Replaces the
+            // retired approximation that ratio-scaled the archetype stage's
+            // rows by the parameter share.
+            let zr = ZeroReport::build(&dev, &self.mm.parallel, self.mm.dtypes);
+            let zrow = *zr.row(self.zero);
 
             let ar = crate::analysis::ActivationReport::build(
                 &self.mm.model,
@@ -165,23 +163,18 @@ impl<'a> SimEngine<'a> {
             // multiplier (DualPipe keeps both directions' stage shards
             // resident); gradients and optimizer states are assumed
             // reduced/sharded across the mirrored pair. The dense/MoE
-            // parameter partitions are tagged separately, matching the
-            // ZeroRow ledger the planner consumes; the MoE share is derived
-            // by subtraction so the tagged parts re-sum to the pre-ledger
-            // scale(params_bytes) exactly (scale() floors, so scaling the
-            // partitions independently could lose a byte on stages whose
-            // param ratio to the archetype is fractional).
-            let params_dense = scale(zrow.params_dense_bytes);
-            let params_moe = scale(zrow.params_bytes) - params_dense;
-            tl.alloc(t, Component::ParamsDense, param_mult * params_dense);
-            tl.alloc(t, Component::ParamsMoe, param_mult * params_moe);
-            tl.alloc(t, Component::Gradients, scale(zrow.gradient_bytes));
-            tl.alloc(t, Component::OptimizerStates, scale(zrow.optimizer_bytes));
+            // parameter partitions are tagged separately, straight from this
+            // stage's own ZeroRow — the same values the planner's per-stage
+            // evaluation and the cluster atlas emit.
+            tl.alloc(t, Component::ParamsDense, param_mult * zrow.params_dense_bytes);
+            tl.alloc(t, Component::ParamsMoe, param_mult * zrow.params_moe_bytes);
+            tl.alloc(t, Component::Gradients, zrow.gradient_bytes);
+            tl.alloc(t, Component::OptimizerStates, zrow.optimizer_bytes);
             if let Some(a) = alloc.as_mut() {
-                a.alloc(param_mult * params_dense);
-                a.alloc(param_mult * params_moe);
-                a.alloc(scale(zrow.gradient_bytes));
-                a.alloc(scale(zrow.optimizer_bytes));
+                a.alloc(param_mult * zrow.params_dense_bytes);
+                a.alloc(param_mult * zrow.params_moe_bytes);
+                a.alloc(zrow.gradient_bytes);
+                a.alloc(zrow.optimizer_bytes);
             }
 
             let mut inflight = 0u64;

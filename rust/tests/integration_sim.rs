@@ -4,7 +4,9 @@
 
 use dsmem::analysis::stages::StageSplit;
 use dsmem::analysis::total::Overheads;
-use dsmem::analysis::{ActivationReport, MemoryModel, ZeroStrategy};
+use dsmem::analysis::{
+    ActivationReport, ClusterMemoryAtlas, MemoryModel, StageInflight, ZeroStrategy,
+};
 use dsmem::config::{ActivationConfig, CaseStudy};
 use dsmem::ledger::{Component, ComponentGroup, MemoryLedger};
 use dsmem::model::CountMode;
@@ -87,12 +89,13 @@ fn sim_activation_peak_equals_analytic_for_every_stage_and_schedule() {
 #[test]
 fn sim_ledger_equals_planner_ledger_per_component_for_every_schedule() {
     // The planner side of the E2 bridge, component-wise: for every
-    // registered schedule, the sim-replayed peak ledger at the analysed
-    // stage must equal the Evaluator's analytic ledger for the same
-    // candidate on every non-transient component — params (dense & MoE,
-    // including DualPipe's ×2), gradients, optimizer states and every
-    // activation component. (Comm buffers and workspace are transient sim
-    // artifacts; fragmentation/KV-cache are zero on both sides here.)
+    // registered schedule, the sim-replayed peak ledger at the *binding*
+    // stage (the stage the planner now reports) must equal the Evaluator's
+    // analytic ledger for the same candidate on every non-transient
+    // component — params (dense & MoE, including DualPipe's ×2), gradients,
+    // optimizer states and every activation component. (Comm buffers and
+    // workspace are transient sim artifacts; fragmentation/KV-cache are
+    // zero on both sides here.)
     let cs = CaseStudy::paper();
     let mm = mm();
     let act = ActivationConfig::paper(1);
@@ -105,7 +108,6 @@ fn sim_ledger_equals_planner_ledger_per_component_for_every_schedule() {
         Overheads::none(),
         m,
     );
-    let heaviest = mm.stage_plan().heaviest_stage();
     for spec in registry() {
         let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
         let res = eng.run(spec, m).unwrap();
@@ -115,7 +117,7 @@ fn sim_ledger_equals_planner_ledger_per_component_for_every_schedule() {
             zero: ZeroStrategy::OsG,
             schedule: spec,
         });
-        let sim = res.stages[heaviest].peak_ledger();
+        let sim = res.stages[point.binding_stage as usize].peak_ledger();
         for c in Component::ALL {
             if matches!(c.group(), ComponentGroup::CommBuffer | ComponentGroup::Workspace) {
                 continue;
@@ -130,11 +132,101 @@ fn sim_ledger_equals_planner_ledger_per_component_for_every_schedule() {
         }
         // Totals follow from the component equality.
         assert_eq!(
-            res.stages[heaviest].timeline.group_peak(ComponentGroup::Activation),
+            res.stages[point.binding_stage as usize]
+                .timeline
+                .group_peak(ComponentGroup::Activation),
             point.activation_bytes(),
             "{}",
             spec.name()
         );
+    }
+}
+
+#[test]
+fn sim_peak_ledger_equals_atlas_on_every_stage_for_every_schedule() {
+    // The tentpole bridge: for EVERY registered schedule and EVERY pipeline
+    // stage, the sim-replayed peak ledger must equal the cluster atlas's
+    // entry per non-transient component — statics from that stage's own
+    // ZeRO report, activations from that stage's tape times its analytic
+    // in-flight count.
+    let mm = mm();
+    let act = ActivationConfig::paper(1);
+    let m = 32;
+    let mut covered = 0;
+    for spec in registry() {
+        let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+        let res = eng.run(spec, m).unwrap();
+        let inflight = StageInflight::for_schedule(spec, 16, m).unwrap();
+        let atlas = ClusterMemoryAtlas::build(
+            &mm,
+            &act,
+            ZeroStrategy::OsG,
+            Overheads::none(),
+            &inflight,
+        )
+        .unwrap();
+        assert_eq!(atlas.entries.len(), res.stages.len());
+        for st in &res.stages {
+            let entry = &atlas.entries[st.stage as usize];
+            assert_eq!(st.peak_inflight, entry.inflight_units, "{} stage {}", spec.name(), st.stage);
+            let sim = st.peak_ledger();
+            for c in Component::ALL {
+                if matches!(c.group(), ComponentGroup::CommBuffer | ComponentGroup::Workspace) {
+                    continue;
+                }
+                assert_eq!(
+                    sim.get(c),
+                    entry.ledger.get(c),
+                    "{} stage {} component {}",
+                    spec.name(),
+                    st.stage,
+                    c.name()
+                );
+            }
+        }
+        covered += 1;
+    }
+    assert_eq!(covered, 5);
+}
+
+#[test]
+fn sim_statics_are_exact_per_stage_zero_reports() {
+    // Every stage's static classes come from that stage's own layer census
+    // through its own ZeRO report — the retired approximation ratio-scaled
+    // the archetype stage's rows instead.
+    use dsmem::analysis::device::DeviceStaticParams;
+    use dsmem::analysis::ZeroReport;
+    let mm = mm();
+    let act = ActivationConfig::paper(1);
+    let plan = mm.stage_plan();
+    for z in ZeroStrategy::ALL {
+        let eng = SimEngine::new(&mm, act, z);
+        let res = eng.run(ScheduleSpec::OneFOneB, 8).unwrap();
+        for st in &res.stages {
+            let dev = DeviceStaticParams::for_stage(
+                &mm.model,
+                &mm.parallel,
+                &plan,
+                st.stage as usize,
+                mm.dtypes.weight,
+            );
+            let zr = ZeroReport::build(&dev, &mm.parallel, mm.dtypes);
+            let row = zr.row(z);
+            assert_eq!(
+                st.timeline.peak(Component::ParamsDense),
+                row.params_dense_bytes,
+                "{z:?} stage {}",
+                st.stage
+            );
+            assert_eq!(
+                st.timeline.peak(Component::ParamsMoe),
+                row.params_moe_bytes,
+                "{z:?} stage {}",
+                st.stage
+            );
+            assert_eq!(st.timeline.peak(Component::Gradients), row.gradient_bytes);
+            assert_eq!(st.timeline.peak(Component::OptimizerStates), row.optimizer_bytes);
+        }
     }
 }
 

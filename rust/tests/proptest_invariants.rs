@@ -5,7 +5,9 @@
 //! non-domination, legacy-sweep equivalence).
 
 use dsmem::analysis::total::DeviceMemoryReport;
-use dsmem::analysis::{MemoryModel, Overheads, StagePlan, StageSplit, ZeroStrategy};
+use dsmem::analysis::{
+    ClusterMemoryAtlas, MemoryModel, Overheads, StageInflight, StagePlan, StageSplit, ZeroStrategy,
+};
 use dsmem::config::{
     ActivationConfig, CaseStudy, Dtype, DtypePolicy, ModelConfig, ParallelConfig, RecomputePolicy,
 };
@@ -119,7 +121,7 @@ fn device_partition_bounded_by_stage_total() {
         let mm = MemoryModel::new(&m, &p, DtypePolicy::paper_bf16()).with_mode(CountMode::Strict);
         let plan = mm.stage_plan();
         let dev = mm.device_static_params();
-        let stage_total = plan.stages[plan.heaviest_stage()].params
+        let stage_total = plan.stages[plan.paper_archetype_stage()].params
             + dsmem::model::dense::final_norm_params(&m); // last stage may add it
         assert!(
             dev.total_params() <= stage_total + m.hidden_size,
@@ -422,7 +424,7 @@ fn planner_contains_paper_point_with_schedule_scaled_total() {
         ZeroStrategy::OsG,
         Overheads::paper_midpoint(),
     );
-    let heaviest = mm.stage_plan().heaviest_stage() as u64;
+    let archetype = mm.stage_plan().paper_archetype_stage() as u64;
     for spec in registry() {
         let sched = spec.resolve();
         if sched.validate(cs.parallel.pp, q.num_microbatches).is_err() {
@@ -440,8 +442,13 @@ fn planner_contains_paper_point_with_schedule_scaled_total() {
                     && p.schedule == spec
             })
             .unwrap_or_else(|| panic!("paper configuration missing for {}", spec.name()));
+        // For the paper's front-loaded PP16 plan the binding stage IS the
+        // archetype under every registered schedule (stage 1 carries both
+        // the heaviest params and the biggest tape), so the legacy scaling
+        // law still pins the point's ledger exactly.
+        assert_eq!(found.binding_stage, archetype, "{}", spec.name());
         let inflight =
-            sched.analytic_inflight(heaviest, cs.parallel.pp, q.num_microbatches);
+            sched.analytic_inflight(archetype, cs.parallel.pp, q.num_microbatches);
         let units = sched.units_per_microbatch().max(1);
         assert_eq!(
             found.params_bytes(),
@@ -466,6 +473,163 @@ fn planner_contains_paper_point_with_schedule_scaled_total() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Cluster-atlas invariants
+// ---------------------------------------------------------------------------
+
+/// Random valid per-stage layer counts for `(l, pp)`: one layer each, the
+/// remainder scattered uniformly.
+fn random_custom_split(rng: &mut Rng64, l: u64, pp: u64) -> StageSplit {
+    let mut counts = vec![1u64; pp as usize];
+    for _ in 0..(l - pp) {
+        counts[rng.below(pp) as usize] += 1;
+    }
+    StageSplit::Custom(counts)
+}
+
+#[test]
+fn atlas_stage_params_partition_model_total_for_every_split() {
+    // The atlas's per-stage census must partition the model exactly under
+    // front-loaded, balanced AND arbitrary custom splits: layer counts sum
+    // to L, per-stage params sum to the strict model total.
+    let mut rng = Rng64::new(0xA71A5);
+    for case in 0..CASES {
+        let m = random_model(&mut rng);
+        if m.validate().is_err() {
+            continue;
+        }
+        let strict = dsmem::model::ModelParams::build(&m, CountMode::Strict).total();
+        for pp in [1u64, 2, 4, 8] {
+            if pp > m.num_hidden_layers {
+                continue;
+            }
+            let mut splits = vec![random_custom_split(&mut rng, m.num_hidden_layers, pp)];
+            if StageSplit::FrontLoaded.layer_counts(m.num_hidden_layers, pp).is_ok() {
+                splits.push(StageSplit::FrontLoaded);
+            }
+            splits.push(StageSplit::Balanced);
+            for split in splits {
+                let plan = StagePlan::build(&m, pp, split, CountMode::Strict);
+                let layers: u64 = plan.stages.iter().map(|s| s.num_layers).sum();
+                assert_eq!(layers, m.num_hidden_layers, "case {case} pp={pp}");
+                assert_eq!(plan.total_params(), strict, "case {case} pp={pp}");
+            }
+        }
+    }
+}
+
+#[test]
+fn atlas_max_total_dominates_the_legacy_archetype_total() {
+    // The issue's headline invariant: the per-stage totals' max is at least
+    // the legacy archetype-stage total — feasibility can only get stricter,
+    // never looser, when every stage is analysed. On pure-MoE archetype
+    // stages (the paper's analysed shape) the archetype entry itself must be
+    // bit-identical to the legacy report.
+    let mut rng = Rng64::new(0xA71A6);
+    let ov = Overheads::paper_midpoint();
+    for case in 0..60 {
+        let m = random_model(&mut rng);
+        if m.validate().is_err() {
+            continue;
+        }
+        let p = random_parallel(&mut rng, &m);
+        let mm = MemoryModel::new(&m, &p, DtypePolicy::paper_bf16());
+        let act = ActivationConfig {
+            micro_batch: rng.range(1, 4),
+            seq_len: 128 * rng.range(1, 8) * p.tp,
+            sp: p.tp,
+            cp: 1,
+            recompute: RecomputePolicy::None,
+        };
+        let plan = mm.stage_plan();
+        let archetype = plan.paper_archetype_stage();
+        let pure_moe =
+            plan.stages[archetype].moe_layers == plan.stages[archetype].num_layers;
+        if !pure_moe {
+            // Dense-bearing archetypes use a different (exact) activation
+            // convention than the legacy all-MoE approximation; the
+            // domination claim is only meaningful on the paper's shape.
+            continue;
+        }
+        let inflight = StageInflight::per_microbatch(p.pp);
+        for z in ZeroStrategy::ALL {
+            let atlas = ClusterMemoryAtlas::build(&mm, &act, z, ov, &inflight).unwrap();
+            let legacy = DeviceMemoryReport::build(&mm, &act, z, ov);
+            assert!(
+                atlas.max_total_bytes() >= legacy.total_bytes(),
+                "case {case} {z:?}: max {} < legacy {}",
+                atlas.max_total_bytes(),
+                legacy.total_bytes()
+            );
+            assert_eq!(atlas.entries[archetype].ledger, legacy.ledger, "case {case} {z:?}");
+            let binding = atlas.binding_stage();
+            assert!(
+                atlas.entries[binding].total_bytes() >= atlas.entries[archetype].total_bytes()
+            );
+        }
+    }
+}
+
+#[test]
+fn atlas_output_is_byte_stable_across_thread_counts() {
+    // The atlas rides through the planner's thread-parallel evaluation and
+    // the suite's thread-parallel runner: sequential and parallel paths must
+    // produce byte-identical results, and two atlas builds must serialize
+    // to identical JSON.
+    use dsmem::planner::{Candidate, Evaluator, PlanPoint};
+    let cs = CaseStudy::paper();
+    let mut space = SearchSpace::for_world(1024);
+    space.pp = vec![16];
+    space.etp = vec![1];
+    let cands: Vec<Candidate> = space
+        .candidates(&cs.model)
+        .filter(|c| c.schedule.resolve().validate(c.parallel.pp, 32).is_ok())
+        .take(200)
+        .collect();
+    let ev = Evaluator::new(
+        &cs.model,
+        cs.dtypes,
+        CountMode::PaperCompat,
+        StageSplit::FrontLoaded,
+        Overheads::paper_midpoint(),
+        32,
+    );
+    let seq: Vec<PlanPoint> = cands.iter().map(|c| ev.evaluate(c)).collect();
+    let par = ev.evaluate_all(&cands);
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.binding_stage, b.binding_stage);
+        assert_eq!(a.ledger, b.ledger);
+        assert_eq!(a.device_params, b.device_params);
+    }
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+    let inflight = StageInflight::for_schedule(ScheduleSpec::OneFOneB, 16, 32).unwrap();
+    let j1 = dsmem::scenario::runner::atlas_json(
+        &ClusterMemoryAtlas::build(
+            &mm,
+            &cs.activation,
+            ZeroStrategy::OsG,
+            Overheads::paper_midpoint(),
+            &inflight,
+        )
+        .unwrap(),
+        80 * dsmem::GIB as u64,
+    );
+    let j2 = dsmem::scenario::runner::atlas_json(
+        &ClusterMemoryAtlas::build(
+            &mm,
+            &cs.activation,
+            ZeroStrategy::OsG,
+            Overheads::paper_midpoint(),
+            &inflight,
+        )
+        .unwrap(),
+        80 * dsmem::GIB as u64,
+    );
+    assert_eq!(j1.pretty(), j2.pretty());
+    assert!(!j1.pretty().is_empty());
 }
 
 #[test]

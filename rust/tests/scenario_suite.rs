@@ -86,7 +86,7 @@ fn two_consecutive_suite_runs_are_byte_identical() {
 #[test]
 fn suite_covers_every_action_and_model_preset() {
     let scens = scenario::load_dir(&scenarios_dir()).unwrap();
-    for action in ["plan", "sweep", "simulate", "kvcache"] {
+    for action in ["plan", "sweep", "simulate", "kvcache", "atlas"] {
         assert!(scens.iter().any(|s| s.spec.action.name() == action), "no {action} scenario");
     }
     for model in ["v3", "v2", "v2-lite", "mini"] {
@@ -189,6 +189,56 @@ fn runner_equals_direct_sim_entry_point() {
             direct.dump(),
             "runner diverged from SimEngine::run for:\n{toml}"
         );
+    }
+}
+
+#[test]
+fn runner_equals_direct_atlas_entry_point() {
+    use dsmem::analysis::{ClusterMemoryAtlas, StageInflight, ZeroStrategy as Zs};
+    let mut rng = Rng64::new(0xA71A5);
+    for _ in 0..10 {
+        let model = ["v3", "v2", "v2-lite", "mini"][rng.below(4) as usize];
+        let sched = ["1f1b", "gpipe", "zb-h1", "none"][rng.below(4) as usize];
+        let m = rng.range(16, 48);
+        let zero = ["none", "os", "os_g", "os_g_params"][rng.below(4) as usize];
+        let hbm = [40u64, 80][rng.below(2) as usize];
+        let ov = ["paper", "none"][rng.below(2) as usize];
+        let toml = format!(
+            "model = \"{model}\"\naction = \"atlas\"\nhbm_gib = {hbm}\noverheads = \"{ov}\"\n\n\
+             [atlas]\nschedule = \"{sched}\"\nmicrobatches = {m}\nzero = \"{zero}\"\n"
+        );
+        let spec = ScenarioSpec::from_toml(&toml, "prop-atlas").unwrap();
+        let via_runner = scenario::run_scenario(&spec).unwrap();
+
+        let cs = CaseStudy::preset(model).unwrap();
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        let inflight = if sched == "none" {
+            StageInflight::per_microbatch(cs.parallel.pp)
+        } else {
+            StageInflight::for_schedule(
+                ScheduleSpec::parse(sched).unwrap(),
+                cs.parallel.pp,
+                m,
+            )
+            .unwrap()
+        };
+        let ovh = if ov == "paper" { Overheads::paper_midpoint() } else { Overheads::none() };
+        let atlas = ClusterMemoryAtlas::build(
+            &mm,
+            &cs.activation,
+            Zs::parse(zero).unwrap(),
+            ovh,
+            &inflight,
+        )
+        .unwrap();
+        let direct = scenario::runner::atlas_json(&atlas, hbm * dsmem::GIB as u64);
+        assert_eq!(
+            via_runner.get("result").unwrap().dump(),
+            direct.dump(),
+            "runner diverged from the atlas for:\n{toml}"
+        );
+        // Envelope carries the budget for atlas scenarios.
+        assert_eq!(via_runner.get("hbm_gib").unwrap().as_u64().unwrap(), hbm);
     }
 }
 
