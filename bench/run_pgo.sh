@@ -1,0 +1,68 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization build of the planner hot path, measured with
+# the planner_throughput bench (see perf.md).
+#
+#   bench/run_pgo.sh [--quick]
+#
+# Phases:
+#   0. plain release run      → target/pgo/BENCH_planner.base.json
+#   1. instrumented run       → target/pgo/profraw/*.profraw
+#      (merged with llvm-profdata into target/pgo/merged.profdata)
+#   2. profile-use run        → target/pgo/BENCH_planner.pgo.json
+#
+# The regression gate is disarmed for every phase (DSMEM_BENCH_BASELINE
+# points at /dev/null, which the bench treats as "unparseable → skip"):
+# the instrumented build is expected to be slower, and the point of this
+# script is the base-vs-PGO comparison it prints at the end, not the
+# checked-in CI baseline.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+QUICK=""
+if [[ "${1:-}" == "--quick" ]]; then
+  QUICK=1
+fi
+
+PGO_DIR="$PWD/target/pgo"
+mkdir -p "$PGO_DIR"
+
+# llvm-profdata ships with the rustc toolchain (llvm-tools component), not
+# necessarily on PATH.
+SYSROOT="$(rustc --print sysroot)"
+PROFDATA="$(find "$SYSROOT" -name llvm-profdata -type f 2>/dev/null | head -n 1 || true)"
+if [[ -z "$PROFDATA" ]]; then
+  PROFDATA="$(command -v llvm-profdata || true)"
+fi
+if [[ -z "$PROFDATA" ]]; then
+  echo "error: llvm-profdata not found; install it with:" >&2
+  echo "  rustup component add llvm-tools-preview" >&2
+  exit 1
+fi
+
+run_bench() { # $1 = output json path
+  DSMEM_BENCH_QUICK="${QUICK}" \
+  DSMEM_BENCH_BASELINE=/dev/null \
+  DSMEM_BENCH_OUT="$1" \
+    cargo bench --bench planner_throughput
+}
+
+echo "== phase 0: plain release baseline =="
+run_bench "$PGO_DIR/BENCH_planner.base.json"
+
+echo "== phase 1: instrumented run =="
+rm -rf "$PGO_DIR/profraw"
+RUSTFLAGS="-Cprofile-generate=$PGO_DIR/profraw" \
+  run_bench "$PGO_DIR/BENCH_planner.instrumented.json"
+"$PROFDATA" merge -o "$PGO_DIR/merged.profdata" "$PGO_DIR/profraw"
+
+echo "== phase 2: profile-guided run =="
+RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata" \
+  run_bench "$PGO_DIR/BENCH_planner.pgo.json"
+
+echo "== base vs PGO (points_per_sec per shape) =="
+echo "-- base --"
+grep -o '"name": *"[^"]*"\|"points_per_sec": *[0-9.e+-]*' \
+  "$PGO_DIR/BENCH_planner.base.json" | paste - -
+echo "-- pgo --"
+grep -o '"name": *"[^"]*"\|"points_per_sec": *[0-9.e+-]*' \
+  "$PGO_DIR/BENCH_planner.pgo.json" | paste - -

@@ -1,0 +1,211 @@
+//! Bench: planner throughput trajectory — emits `BENCH_planner.json`.
+//!
+//! Measures points/sec of the streaming region-sharded planner at four
+//! shapes (PP16, world-1024, stress-100k, stress-1M), with the peak
+//! resident-`PlanPoint` proxy and memo-cache hit rates attached, plus the
+//! un-sharded offline baseline (`plan_offline`, collect-then-chunk) at the
+//! stress-100k shape for the sharded-vs-unsharded ratio the acceptance
+//! criterion tracks (target ≥ 2×; the hard guard here is ≥ 1×, re-measured
+//! once before failing — shared CI runners are noisy).
+//!
+//! Environment:
+//! * `DSMEM_BENCH_QUICK=1` — one timed iteration per shape (CI smoke mode);
+//! * `DSMEM_BENCH_OUT` — output path (default `BENCH_planner.json`);
+//! * `DSMEM_BENCH_BASELINE` — checked-in baseline to gate against (default
+//!   `bench/BENCH_planner.baseline.json`; missing file → gate unarmed,
+//!   unparseable file → gate skipped, e.g. `/dev/null` during PGO phases).
+//!   The gate fails on a >25% points/sec regression at stress-100k.
+//!
+//! See `perf.md` for the methodology and how to read the output.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use dsmem::config::{CaseStudy, DtypePolicy, ModelConfig};
+use dsmem::planner::{self, plan_offline, plan_with_threads, PlanQuery, PlanResult, SearchSpace};
+use dsmem::util::bench::black_box;
+use dsmem::util::Json;
+
+/// One measured shape: best-of-`iters` wall clock (minimum, the standard
+/// noise-robust estimator for a deterministic workload) plus the result.
+fn time_plan(iters: u32, run: impl Fn() -> PlanResult) -> (PlanResult, f64) {
+    let mut best = f64::INFINITY;
+    let mut res = None;
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        let r = black_box(run());
+        best = best.min(t.elapsed().as_secs_f64());
+        res = Some(r);
+    }
+    (res.expect("at least one iteration"), best)
+}
+
+fn shape_json(name: &str, res: &PlanResult, wall_s: f64) -> (f64, Json) {
+    let pps = res.evaluated_count() as f64 / wall_s.max(1e-9);
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Json::Str(name.into()));
+    m.insert("world".into(), Json::Num(res.world as f64));
+    m.insert("microbatches".into(), Json::Num(res.num_microbatches as f64));
+    m.insert("evaluated".into(), Json::Num(res.evaluated_count() as f64));
+    m.insert("feasible".into(), Json::Num(res.feasible_count as f64));
+    m.insert("frontier".into(), Json::Num(res.frontier.len() as f64));
+    m.insert("wall_s".into(), Json::Num(wall_s));
+    m.insert("points_per_sec".into(), Json::Num(pps));
+    m.insert("peak_resident_points".into(), Json::Num(res.peak_resident_points as f64));
+    m.insert(
+        "resident_bytes".into(),
+        Json::Num((res.peak_resident_points * std::mem::size_of::<planner::PlanPoint>()) as f64),
+    );
+    m.insert("cache".into(), planner::report::cache_stats_json(&res.cache_stats));
+    (pps, Json::Obj(m))
+}
+
+fn stress_100k_query() -> PlanQuery {
+    let mut q = PlanQuery::new(SearchSpace::for_world(102_400), 80 * dsmem::GIB as u64);
+    q.num_microbatches = 64;
+    q.top_k = 5;
+    q
+}
+
+fn main() {
+    let quick = matches!(std::env::var("DSMEM_BENCH_QUICK"), Ok(v) if !v.is_empty() && v != "0");
+    let iters: u32 = if quick { 1 } else { 3 };
+    let cs = CaseStudy::paper();
+    let model: &ModelConfig = &cs.model;
+    let dtypes: DtypePolicy = cs.dtypes;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let mut shapes: Vec<Json> = Vec::new();
+    let mut by_name: BTreeMap<String, f64> = BTreeMap::new();
+
+    // The four tracked shapes, all through the streaming sharded path.
+    let queries: Vec<(&str, PlanQuery)> = vec![
+        ("pp16", {
+            let mut space = SearchSpace::for_world(1024);
+            space.pp = vec![16];
+            PlanQuery::new(space, 80 * dsmem::GIB as u64)
+        }),
+        ("world1024", PlanQuery::new(SearchSpace::for_world(1024), 80 * dsmem::GIB as u64)),
+        ("stress100k", stress_100k_query()),
+        ("stress1m", {
+            let mut q = PlanQuery::new(SearchSpace::for_world(1 << 20), 80 * dsmem::GIB as u64);
+            q.num_microbatches = 64;
+            q.top_k = 0; // frontier-only, like the 1M golden scenario
+            q
+        }),
+    ];
+    for (name, q) in &queries {
+        let (res, wall) = time_plan(iters, || plan_with_threads(model, dtypes, q, threads));
+        let (pps, j) = shape_json(name, &res, wall);
+        println!(
+            "{name:<12} world {:>8}  {:>7} pts in {wall:.3}s → {pps:>12.0} pts/s  \
+             resident {} pts",
+            res.world,
+            res.evaluated_count(),
+            res.peak_resident_points,
+        );
+        by_name.insert((*name).into(), pps);
+        shapes.push(j);
+    }
+
+    // Un-sharded baseline at stress-100k: the pre-change pipeline
+    // (materialize every point, offline filter→frontier→rank).
+    let q100k = stress_100k_query();
+    let measure_ratio = |iters: u32| -> (f64, f64, f64, PlanResult) {
+        let (sres, swall) = time_plan(iters, || plan_with_threads(model, dtypes, &q100k, threads));
+        let (ores, owall) = time_plan(iters, || plan_offline(model, dtypes, &q100k));
+        let spps = sres.evaluated_count() as f64 / swall.max(1e-9);
+        let opps = ores.evaluated_count() as f64 / owall.max(1e-9);
+        (spps, opps, spps / opps.max(1e-9), ores)
+    };
+    let (mut spps, mut opps, mut ratio, offline_res) = measure_ratio(iters);
+    if ratio < 1.0 {
+        // Noisy-runner discipline (same as planner_atlas): re-measure once
+        // with a doubled budget before declaring a regression.
+        let (s2, o2, r2, _) = measure_ratio(iters * 2);
+        if r2 > ratio {
+            (spps, opps, ratio) = (s2, o2, r2);
+        }
+    }
+    println!(
+        "stress100k sharded {spps:.0} pts/s vs un-sharded {opps:.0} pts/s → {ratio:.2}× \
+         (target ≥ 2×, guard ≥ 1×)"
+    );
+    let mut baseline = BTreeMap::new();
+    baseline.insert("name".into(), Json::Str("stress100k_unsharded".into()));
+    baseline.insert("points_per_sec".into(), Json::Num(opps));
+    baseline.insert(
+        "resident_bytes".into(),
+        Json::Num(
+            (offline_res.peak_resident_points * std::mem::size_of::<planner::PlanPoint>()) as f64,
+        ),
+    );
+    baseline.insert(
+        "peak_resident_points".into(),
+        Json::Num(offline_res.peak_resident_points as f64),
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("planner_throughput".into()));
+    root.insert("quick".into(), Json::Bool(quick));
+    root.insert("threads".into(), Json::Num(threads as f64));
+    root.insert("shapes".into(), Json::Arr(shapes));
+    root.insert("unsharded_baseline".into(), Json::Obj(baseline));
+    root.insert("sharded_vs_unsharded_points_per_sec".into(), Json::Num(ratio));
+    let doc = Json::Obj(root);
+
+    let out = std::env::var("DSMEM_BENCH_OUT").unwrap_or_else(|_| "BENCH_planner.json".into());
+    std::fs::write(&out, format!("{}\n", doc.pretty())).expect("writing bench output");
+    println!("wrote {out}");
+
+    // Regression gate vs the checked-in baseline (satellite: fail CI on a
+    // >25% points/sec regression at stress-100k).
+    let baseline_path = std::env::var("DSMEM_BENCH_BASELINE")
+        .unwrap_or_else(|_| "bench/BENCH_planner.baseline.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Err(_) => println!(
+            "regression gate unarmed: no baseline at {baseline_path} \
+             (commit a CI BENCH_planner.json there to arm it)"
+        ),
+        Ok(text) => match Json::parse(&text).and_then(|j| Ok(j.get("shapes")?.as_arr()?.to_vec()))
+        {
+            Err(e) => println!("regression gate skipped: unparseable baseline: {e}"),
+            Ok(arr) => {
+                let mut old = None;
+                for s in &arr {
+                    let name = s.get("name").ok().and_then(|n| n.as_str().ok().map(String::from));
+                    if name.as_deref() == Some("stress100k") {
+                        old = s.get("points_per_sec").ok().and_then(|v| v.as_f64().ok());
+                    }
+                }
+                match old {
+                    None => println!("regression gate skipped: baseline has no stress100k shape"),
+                    Some(old_pps) => {
+                        let mut new_pps = by_name["stress100k"];
+                        if new_pps < 0.75 * old_pps {
+                            // One doubled-budget retry before failing.
+                            let (r, w) = time_plan(iters * 2, || {
+                                plan_with_threads(model, dtypes, &q100k, threads)
+                            });
+                            new_pps = new_pps.max(r.evaluated_count() as f64 / w.max(1e-9));
+                        }
+                        println!(
+                            "regression gate: stress100k {new_pps:.0} pts/s vs baseline \
+                             {old_pps:.0} pts/s"
+                        );
+                        assert!(
+                            new_pps >= 0.75 * old_pps,
+                            "planner throughput regressed >25% at stress-100k: \
+                             {new_pps:.0} pts/s vs baseline {old_pps:.0} pts/s"
+                        );
+                    }
+                }
+            }
+        },
+    }
+
+    assert!(
+        ratio >= 1.0,
+        "region-sharded streaming planner slower than the un-sharded baseline: {ratio:.2}×"
+    );
+}

@@ -28,7 +28,7 @@ fn main() {
         cs.dtypes,
         &PlanQuery::new(SearchSpace::for_world(1024), 80 * dsmem::GIB as u64),
     );
-    let valid = probe.evaluated.len();
+    let valid = probe.evaluated_count() as usize;
     let r2 = bench("planner_full_grid_world1024", Duration::from_secs(5), || {
         let q = PlanQuery::new(SearchSpace::for_world(1024), 80 * dsmem::GIB as u64);
         black_box(plan(&cs.model, cs.dtypes, &q));

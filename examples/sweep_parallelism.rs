@@ -52,7 +52,10 @@ fn main() -> anyhow::Result<()> {
     space.recompute = vec![RecomputePolicy::None];
     space.zero = vec![ZeroStrategy::OsG];
     space.schedule = vec![dsmem::schedule::ScheduleSpec::OneFOneB]; // layout axis only here
-    let query = PlanQuery::new(space, hbm);
+    let mut query = PlanQuery::new(space, hbm);
+    // This table walks every evaluated point, so opt out of the planner's
+    // streaming default (which keeps only frontier + top-k).
+    query.keep_evaluated = true;
     let res = plan(&cs.model, cs.dtypes, &query);
 
     let mut t2 = Table::new(
@@ -80,7 +83,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nfull grid: {} points → {} valid → {} feasible under 80 GiB",
         full.full_grid,
-        full.evaluated.len(),
+        full.evaluated_count(),
         full.feasible_count
     );
     print!("{}", planner::report::frontier_table(&full).render());

@@ -230,6 +230,15 @@ fn main() -> anyhow::Result<()> {
             let res = planner::plan(&cs.model, cs.dtypes, &query);
             if a.has("json") {
                 let mut json = planner::report::to_json(&res);
+                // Memo-cache telemetry lives only in the CLI export: its
+                // counts vary with thread interleaving, so the deterministic
+                // scenario snapshots exclude it (see cache_stats_json docs).
+                if let dsmem::util::Json::Obj(obj) = &mut json {
+                    obj.insert(
+                        "cache_stats".into(),
+                        planner::report::cache_stats_json(&res.cache_stats),
+                    );
+                }
                 // --per-stage in JSON mode: attach the top-ranked point's
                 // full atlas instead of silently dropping the flag.
                 if a.has("per-stage") {
@@ -250,7 +259,7 @@ fn main() -> anyhow::Result<()> {
                     "{}: searched {} grid points → {} valid → {} fit {:.0} GiB",
                     cs.model.name,
                     res.full_grid,
-                    res.evaluated.len(),
+                    res.evaluated_count(),
                     res.feasible_count,
                     gib(res.hbm_bytes),
                 );

@@ -16,7 +16,11 @@
 //! single-stage evaluation at PP16).
 //!
 //! Three expensive sub-results are memoized and shared behind `Arc`s across
-//! all worker threads:
+//! all worker threads. Each memo cache is **bounded** (wholesale clear at a
+//! fixed capacity, far above any realistic working set, so a long-lived
+//! evaluator cannot grow without limit) and **instrumented** — hit/miss/
+//! eviction counters snapshot as [`CacheStats`], surfaced by
+//! [`Evaluator::cache_stats`] in `plan --json` and the throughput bench:
 //!
 //! * [`StagePlan`]s (which walk every layer's parameter census) depend only
 //!   on `(model, pp, split, mode)` — one per distinct PP degree;
@@ -33,9 +37,13 @@
 //!
 //! [`Evaluator::evaluate_all`] fans the grid out over `std::thread::scope`
 //! workers in contiguous chunks, so results come back in input order and the
-//! output is deterministic regardless of thread count.
+//! output is deterministic regardless of thread count. The planner's
+//! streaming driver ([`crate::planner::plan_with_threads`]) instead builds
+//! one evaluator *per worker* and shards by grid region, so each worker's
+//! caches stay hot and uncontended within its regions.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::space::Candidate;
@@ -57,7 +65,7 @@ use crate::schedule::ScheduleSpec;
 /// pre-ledger struct survive as accessor methods with identical semantics —
 /// now reporting the stage that actually decides HBM feasibility rather
 /// than the paper's heaviest-parameter archetype.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PlanPoint {
     pub parallel: ParallelConfig,
     pub micro_batch: u64,
@@ -149,6 +157,113 @@ pub struct ScheduleProfile {
     pub bubble: f64,
 }
 
+/// Capacity of the `pp → StagePlan` memo (distinct PP degrees).
+const STAGE_PLAN_CACHE_CAP: usize = 64;
+/// Capacity of the `(schedule, pp, m) → ScheduleProfile` memo.
+const SCHEDULE_PROFILE_CACHE_CAP: usize = 512;
+/// Capacity of the `layout → per-stage ZeroReports` memo (the largest
+/// working set: one entry per distinct parallel layout).
+const LAYOUT_STATICS_CACHE_CAP: usize = 1024;
+
+/// Hit/miss/eviction counters of one memo cache. `evictions` counts
+/// *entries dropped* (the bounded caches clear wholesale at capacity).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Total lookups.
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hits per lookup, `0.0` when never queried.
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.lookups();
+        if n == 0 {
+            0.0
+        } else {
+            self.hits as f64 / n as f64
+        }
+    }
+
+    /// Accumulate another snapshot (e.g. across per-worker evaluators).
+    pub fn add(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+    }
+}
+
+/// Per-cache [`CacheStats`] snapshot of one [`Evaluator`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EvalCacheStats {
+    pub stage_plans: CacheStats,
+    pub schedule_profiles: CacheStats,
+    pub layout_statics: CacheStats,
+}
+
+impl EvalCacheStats {
+    /// Accumulate another snapshot, cache by cache.
+    pub fn add(&mut self, other: &EvalCacheStats) {
+        self.stage_plans.add(&other.stage_plans);
+        self.schedule_profiles.add(&other.schedule_profiles);
+        self.layout_statics.add(&other.layout_statics);
+    }
+}
+
+/// A bounded, instrumented memo: `HashMap` behind a mutex, cleared wholesale
+/// when it reaches `cap` (values are pure functions of their key, so a clear
+/// only costs recomputation), with lock-free stat counters.
+struct MemoCache<K, V> {
+    map: Mutex<HashMap<K, Arc<V>>>,
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<K: std::hash::Hash + Eq, V> MemoCache<K, V> {
+    fn new(cap: usize) -> Self {
+        Self {
+            map: Mutex::new(HashMap::new()),
+            cap: cap.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The value for `key`, building it under the lock on a miss (so
+    /// concurrent readers of the same key build it once).
+    fn get_or_build(&self, key: K, build: impl FnOnce() -> V) -> Arc<V> {
+        let mut map = self.map.lock().unwrap();
+        if let Some(v) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return v.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if map.len() >= self.cap {
+            self.evictions.fetch_add(map.len() as u64, Ordering::Relaxed);
+            map.clear();
+        }
+        let v = Arc::new(build());
+        map.insert(key, v.clone());
+        v
+    }
+
+    fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Memoized evaluator over one (model, dtypes, mode, split) quadruple.
 pub struct Evaluator<'a> {
     pub model: &'a ModelConfig,
@@ -160,14 +275,14 @@ pub struct Evaluator<'a> {
     /// schedule's in-flight activation counts (paper: 32).
     pub num_microbatches: u64,
     /// `pp → StagePlan`, shared across all grid points and worker threads.
-    plans: Mutex<HashMap<u64, Arc<StagePlan>>>,
+    plans: MemoCache<u64, StagePlan>,
     /// `(schedule, pp, m) → ScheduleProfile`, likewise shared.
-    profiles: Mutex<HashMap<(ScheduleSpec, u64, u64), Arc<ScheduleProfile>>>,
+    profiles: MemoCache<(ScheduleSpec, u64, u64), ScheduleProfile>,
     /// `parallel layout → per-stage ZeroReports`, likewise shared — the
     /// stage-invariant static partitioning behind the incremental per-stage
     /// evaluation (every `(b, AC, ZeRO, schedule)` point of a layout reuses
     /// it).
-    statics: Mutex<HashMap<ParallelConfig, Arc<Vec<ZeroReport>>>>,
+    statics: MemoCache<ParallelConfig, Vec<ZeroReport>>,
 }
 
 impl<'a> Evaluator<'a> {
@@ -186,9 +301,9 @@ impl<'a> Evaluator<'a> {
             split,
             overheads,
             num_microbatches,
-            plans: Mutex::new(HashMap::new()),
-            profiles: Mutex::new(HashMap::new()),
-            statics: Mutex::new(HashMap::new()),
+            plans: MemoCache::new(STAGE_PLAN_CACHE_CAP),
+            profiles: MemoCache::new(SCHEDULE_PROFILE_CACHE_CAP),
+            statics: MemoCache::new(LAYOUT_STATICS_CACHE_CAP),
         }
     }
 
@@ -196,13 +311,8 @@ impl<'a> Evaluator<'a> {
     /// `(model.num_hidden_layers, pp)` — [`super::space::SearchSpace`] prunes
     /// candidates that are not.
     pub fn plan_for(&self, pp: u64) -> Arc<StagePlan> {
-        let mut guard = self.plans.lock().unwrap();
-        guard
-            .entry(pp)
-            .or_insert_with(|| {
-                Arc::new(StagePlan::build(self.model, pp, self.split.clone(), self.mode))
-            })
-            .clone()
+        self.plans
+            .get_or_build(pp, || StagePlan::build(self.model, pp, self.split.clone(), self.mode))
     }
 
     /// The memoized schedule profile for `(spec, pp)` at the evaluator's
@@ -210,26 +320,22 @@ impl<'a> Evaluator<'a> {
     /// [`crate::planner::plan`] filters candidates that do not.
     pub fn schedule_profile(&self, spec: ScheduleSpec, pp: u64) -> Arc<ScheduleProfile> {
         let m = self.num_microbatches;
-        let mut guard = self.profiles.lock().unwrap();
-        guard
-            .entry((spec, pp, m))
-            .or_insert_with(|| {
-                // Single source for the schedule-derived per-stage
-                // quantities: the atlas's StageInflight (which validates the
-                // shape — silently profiling one the schedule cannot run
-                // would make the planner disagree with the sim engine, which
-                // errors on it; the panic is effectively free, memoized).
-                let inflight = StageInflight::for_schedule(spec, pp, m).unwrap_or_else(|e| {
-                    panic!("unfiltered invalid schedule shape: {} pp={pp} m={m}: {e}", spec.name())
-                });
-                Arc::new(ScheduleProfile {
-                    inflight_units: inflight.inflight_units,
-                    units_per_microbatch: inflight.units_per_microbatch,
-                    param_multiplier: inflight.param_multiplier,
-                    bubble: spec.resolve().bubble_fraction(pp, m),
-                })
-            })
-            .clone()
+        self.profiles.get_or_build((spec, pp, m), || {
+            // Single source for the schedule-derived per-stage
+            // quantities: the atlas's StageInflight (which validates the
+            // shape — silently profiling one the schedule cannot run
+            // would make the planner disagree with the sim engine, which
+            // errors on it; the panic is effectively free, memoized).
+            let inflight = StageInflight::for_schedule(spec, pp, m).unwrap_or_else(|e| {
+                panic!("unfiltered invalid schedule shape: {} pp={pp} m={m}: {e}", spec.name())
+            });
+            ScheduleProfile {
+                inflight_units: inflight.inflight_units,
+                units_per_microbatch: inflight.units_per_microbatch,
+                param_multiplier: inflight.param_multiplier,
+                bubble: spec.resolve().bubble_fraction(pp, m),
+            }
+        })
     }
 
     /// The memoized per-stage static partitioning of one parallel layout:
@@ -238,27 +344,30 @@ impl<'a> Evaluator<'a> {
     /// layout must be valid for the evaluator's split —
     /// [`super::space::SearchSpace`] prunes candidates that are not.
     pub fn statics_for(&self, parallel: &ParallelConfig) -> Arc<Vec<ZeroReport>> {
-        let mut guard = self.statics.lock().unwrap();
-        guard
-            .entry(*parallel)
-            .or_insert_with(|| {
-                let plan = self.plan_for(parallel.pp);
-                Arc::new(
-                    (0..plan.stages.len())
-                        .map(|s| {
-                            let dev = DeviceStaticParams::for_stage(
-                                self.model,
-                                parallel,
-                                &plan,
-                                s,
-                                self.dtypes.weight,
-                            );
-                            ZeroReport::build(&dev, parallel, self.dtypes)
-                        })
-                        .collect(),
-                )
-            })
-            .clone()
+        self.statics.get_or_build(*parallel, || {
+            let plan = self.plan_for(parallel.pp);
+            (0..plan.stages.len())
+                .map(|s| {
+                    let dev = DeviceStaticParams::for_stage(
+                        self.model,
+                        parallel,
+                        &plan,
+                        s,
+                        self.dtypes.weight,
+                    );
+                    ZeroReport::build(&dev, parallel, self.dtypes)
+                })
+                .collect()
+        })
+    }
+
+    /// Snapshot the hit/miss/eviction counters of every memo cache.
+    pub fn cache_stats(&self) -> EvalCacheStats {
+        EvalCacheStats {
+            stage_plans: self.plans.stats(),
+            schedule_profiles: self.profiles.stats(),
+            layout_statics: self.statics.stats(),
+        }
     }
 
     /// Per-device activation bytes of the paper's archetype stage for one
@@ -589,6 +698,39 @@ mod tests {
         assert!(!Arc::ptr_eq(&a, &other));
         assert_eq!(other.inflight_units[0], 16);
         assert_eq!(other.inflight_units[15], 1);
+    }
+
+    #[test]
+    fn cache_stats_count_hits_and_misses() {
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        ev.plan_for(16);
+        ev.plan_for(16);
+        let stats = ev.cache_stats();
+        assert_eq!(stats.stage_plans.misses, 1);
+        assert_eq!(stats.stage_plans.hits, 1);
+        assert_eq!(stats.stage_plans.evictions, 0);
+        assert!(stats.stage_plans.hit_rate() > 0.49);
+        assert_eq!(stats.schedule_profiles, CacheStats::default());
+        assert_eq!(stats.schedule_profiles.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn memo_cache_bounds_and_counts() {
+        // Cap 2, keys 0..5: every insert at len 2 clears first. Trace:
+        // insert 0 (len 0→1), 1 (1→2), 2 (clear 2, →1), 3 (1→2),
+        // 4 (clear 2, →1) — 5 misses, 4 evicted entries, map = {4}.
+        let cache: MemoCache<u64, u64> = MemoCache::new(2);
+        for k in 0..5u64 {
+            assert_eq!(*cache.get_or_build(k, || k * 10), k * 10);
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 5);
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.evictions, 4);
+        // Key 4 survived the last clear: a pure hit, builder untouched.
+        assert_eq!(*cache.get_or_build(4, || unreachable!()), 40);
+        assert_eq!(cache.stats().hits, 1);
     }
 
     #[test]

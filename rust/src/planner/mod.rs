@@ -9,14 +9,15 @@
 //!
 //! * [`space`] — [`SearchSpace`]: the full (DP, TP, PP, EP, ETP, SP, b, AC,
 //!   ZeRO, pipeline schedule) grid with validity pruning *before* evaluation;
-//! * [`eval`] — [`Evaluator`]: thread-parallel evaluation of valid points
-//!   into [`PlanPoint`] records, with [`crate::analysis::StagePlan`]s
-//!   memoized per PP degree and schedule-derived in-flight/bubble profiles
-//!   memoized per `(schedule, pp, m)` (the sub-results shared by thousands
-//!   of points);
+//! * [`eval`] — [`Evaluator`]: memoized evaluation of valid points into
+//!   [`PlanPoint`] records, with [`crate::analysis::StagePlan`]s memoized
+//!   per PP degree and schedule-derived in-flight/bubble profiles memoized
+//!   per `(schedule, pp, m)` (the sub-results shared by thousands of
+//!   points) — caches bounded and hit-rate-instrumented ([`CacheStats`]);
 //! * [`pareto`] — feasibility filtering against an HBM budget, a Pareto
 //!   frontier over (peak memory, bubble fraction, per-device params) and
-//!   top-k ranking;
+//!   top-k ranking — both as an offline pipeline over a slice and as the
+//!   streaming [`FrontierFold`] the planner's hot path runs on;
 //! * [`report`] — rendering through [`crate::report::Table`] and JSON via
 //!   [`crate::util::Json`].
 //!
@@ -41,8 +42,12 @@ pub mod pareto;
 pub mod report;
 pub mod space;
 
-pub use eval::{sweep_fixed, Evaluator, PlanPoint, ScheduleProfile};
+pub use eval::{sweep_fixed, CacheStats, EvalCacheStats, Evaluator, PlanPoint, ScheduleProfile};
+pub use pareto::{FoldCounters, FrontierFold};
 pub use space::{Candidate, Candidates, SearchSpace};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::analysis::total::Overheads;
 use crate::config::{DtypePolicy, ModelConfig};
@@ -55,7 +60,7 @@ pub struct PlanQuery {
     pub space: SearchSpace,
     /// Device memory budget in bytes (feasibility cut).
     pub hbm_bytes: u64,
-    /// How many ranked configurations to keep.
+    /// How many ranked configurations to keep (`0` → frontier-only).
     pub top_k: usize,
     /// §6 overheads applied to every point.
     pub overheads: Overheads,
@@ -64,10 +69,17 @@ pub struct PlanQuery {
     /// needs `m ≥ 2·PP`).
     pub num_microbatches: u64,
     pub mode: CountMode,
+    /// Accumulate every evaluated [`PlanPoint`] in
+    /// [`PlanResult::evaluated`]. Off by default: the streaming fold keeps
+    /// only frontier + top-k resident, which is what makes ≥1M-device grids
+    /// plannable. Legacy sweep shims and tests that inspect the full grid
+    /// opt in explicitly.
+    pub keep_evaluated: bool,
 }
 
 impl PlanQuery {
-    /// Paper-faithful defaults: §6 midpoint overheads, m=32, top-10.
+    /// Paper-faithful defaults: §6 midpoint overheads, m=32, top-10,
+    /// streaming (no evaluated-vec accumulation).
     pub fn new(space: SearchSpace, hbm_bytes: u64) -> Self {
         Self {
             space,
@@ -76,11 +88,18 @@ impl PlanQuery {
             overheads: Overheads::paper_midpoint(),
             num_microbatches: 32,
             mode: CountMode::PaperCompat,
+            keep_evaluated: false,
         }
     }
 }
 
 /// Everything a plan query produces.
+///
+/// **Memory contract**: only `frontier`, `ranked` and the counters are
+/// retained by default — `evaluated` stays empty unless the query set
+/// [`PlanQuery::keep_evaluated`], so a result's footprint is bounded by
+/// frontier + top-k regardless of grid size ([`Self::peak_resident_points`]
+/// is the observed high-water mark).
 #[derive(Debug, Clone)]
 pub struct PlanResult {
     pub world: u64,
@@ -88,37 +107,134 @@ pub struct PlanResult {
     pub num_microbatches: u64,
     /// Grid size before pruning.
     pub full_grid: u64,
-    /// Every valid point, evaluated (in enumeration order).
+    /// Every valid point, evaluated (in enumeration order) — **empty unless
+    /// the query set `keep_evaluated`**; use [`Self::evaluated_count`] for
+    /// the stream length.
     pub evaluated: Vec<PlanPoint>,
     /// How many evaluated points fit the budget.
     pub feasible_count: usize,
+    /// Stream counters: evaluated/feasible totals and the feasible count
+    /// per binding pipeline stage.
+    pub counters: FoldCounters,
     /// Pareto frontier over the feasible points.
     pub frontier: Vec<PlanPoint>,
     /// Top-k feasible points by (memory, bubble, params/dev).
     pub ranked: Vec<PlanPoint>,
+    /// High-water mark of resident `PlanPoint`s across the fold(s) —
+    /// bounded by frontier + top-k per worker (plus `evaluated` when
+    /// `keep_evaluated` is on, which is excluded from this figure).
+    pub peak_resident_points: usize,
+    /// Memo-cache hit/miss/eviction counters summed over all workers.
+    pub cache_stats: EvalCacheStats,
 }
 
-/// Run a planning query: stream the grid → prune → evaluate in parallel →
-/// filter → frontier → rank.
+impl PlanResult {
+    /// How many grid points were evaluated (available even when the
+    /// `evaluated` vec was not kept).
+    pub fn evaluated_count(&self) -> u64 {
+        self.counters.evaluated
+    }
+}
+
+/// Run a planning query: stream the grid → prune → evaluate across
+/// region-sharded workers → fold online into frontier + top-k + counters.
 ///
 /// Pruning happens in two passes: [`SearchSpace::candidates`] applies every
 /// microbatch-independent rule as it streams, then the `(schedule, pp, m)`
 /// shapes a schedule cannot run (e.g. DualPipe with `m < 2·PP`) are dropped
-/// here, where the step microbatch count is known. Candidates are evaluated
-/// in bounded chunks, so the *candidate* grid is never materialized up front
-/// (the 100k-device stress scenario holds one 4096-candidate buffer at a
-/// time; the evaluated `PlanPoint`s still accumulate — folding those online
-/// is a ROADMAP item).
+/// here, where the step microbatch count is known. Neither the candidate
+/// grid nor the evaluated points are materialized: each worker folds its
+/// regions' points into a [`FrontierFold`] as they are produced, and the
+/// per-region folds merge deterministically in region order — the output is
+/// byte-identical to the offline pipeline ([`plan_offline`]) at any thread
+/// count.
 pub fn plan(model: &ModelConfig, dtypes: DtypePolicy, query: &PlanQuery) -> PlanResult {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    plan_with_threads(model, dtypes, query, threads)
+}
+
+/// [`plan`] with an explicit worker count (1 → fold inline on the caller's
+/// thread). Any count produces identical output; it only sets parallelism.
+pub fn plan_with_threads(
+    model: &ModelConfig,
+    dtypes: DtypePolicy,
+    query: &PlanQuery,
+    threads: usize,
+) -> PlanResult {
+    let regions = region_bounds(query.space.base_len(), threads);
+    let mut fold = FrontierFold::new(query.hbm_bytes, query.top_k);
+    let mut evaluated: Vec<PlanPoint> = Vec::new();
+    let mut slot_resident = 0usize;
+    let cache_stats;
+    if threads <= 1 || regions.len() <= 1 {
+        let ev = new_evaluator(model, dtypes, query);
+        let (part, kept) = fold_region(query, &ev, 0, query.space.base_len());
+        slot_resident = part.resident_points();
+        fold.merge(part);
+        evaluated = kept;
+        cache_stats = ev.cache_stats();
+    } else {
+        // Workers pull regions off a shared cursor; each region's fold lands
+        // in its slot so the merge below runs in region (= enumeration)
+        // order regardless of which worker finished it.
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<(FrontierFold, Vec<PlanPoint>)>>> =
+            regions.iter().map(|_| Mutex::new(None)).collect();
+        let stats = Mutex::new(EvalCacheStats::default());
+        std::thread::scope(|s| {
+            for _ in 0..threads.min(regions.len()) {
+                s.spawn(|| {
+                    // One evaluator per worker: caches stay hot across the
+                    // worker's regions and never contend with other workers.
+                    let ev = new_evaluator(model, dtypes, query);
+                    loop {
+                        let r = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(&(lo, hi)) = regions.get(r) else { break };
+                        let part = fold_region(query, &ev, lo, hi);
+                        *slots[r].lock().unwrap() = Some(part);
+                    }
+                    stats.lock().unwrap().add(&ev.cache_stats());
+                });
+            }
+        });
+        for slot in slots {
+            let (part, kept) = slot
+                .into_inner()
+                .unwrap()
+                .expect("planner worker panicked before filling its region slot");
+            // Completed per-region folds coexist until merged here; count
+            // them all toward the process-wide high-water mark.
+            slot_resident += part.resident_points();
+            fold.merge(part);
+            evaluated.extend(kept);
+        }
+        cache_stats = stats.into_inner().unwrap();
+    }
+    let peak_resident_points = fold.peak_resident().max(slot_resident);
+    let (frontier, ranked, counters) = fold.finish();
+    PlanResult {
+        world: query.space.world,
+        hbm_bytes: query.hbm_bytes,
+        num_microbatches: query.num_microbatches,
+        full_grid: query.space.full_size(),
+        evaluated,
+        feasible_count: counters.feasible as usize,
+        counters,
+        frontier,
+        ranked,
+        peak_resident_points,
+        cache_stats,
+    }
+}
+
+/// The pre-streaming pipeline: materialize every evaluated point, then
+/// offline `feasible` → `frontier` → `rank`. Kept as the throughput bench's
+/// un-sharded baseline and as the equivalence oracle the streaming path is
+/// proptest-compared against; `peak_resident_points` here is the whole
+/// evaluated grid.
+pub fn plan_offline(model: &ModelConfig, dtypes: DtypePolicy, query: &PlanQuery) -> PlanResult {
     const CHUNK: usize = 4096;
-    let evaluator = Evaluator::new(
-        model,
-        dtypes,
-        query.mode,
-        query.space.split.clone(),
-        query.overheads,
-        query.num_microbatches,
-    );
+    let evaluator = new_evaluator(model, dtypes, query);
     let mut evaluated = Vec::new();
     let mut buf: Vec<Candidate> = Vec::with_capacity(CHUNK);
     for c in query.space.candidates(model) {
@@ -137,16 +253,82 @@ pub fn plan(model: &ModelConfig, dtypes: DtypePolicy, query: &PlanQuery) -> Plan
     let feasible = pareto::feasible(&evaluated, query.hbm_bytes);
     let frontier = pareto::frontier(&feasible);
     let ranked = pareto::rank(&feasible, query.top_k);
+    let mut counters = FoldCounters {
+        evaluated: evaluated.len() as u64,
+        feasible: feasible.len() as u64,
+        ..FoldCounters::default()
+    };
+    for p in &feasible {
+        *counters.by_binding_stage.entry(p.binding_stage).or_insert(0) += 1;
+    }
+    let peak_resident_points = evaluated.len();
     PlanResult {
         world: query.space.world,
         hbm_bytes: query.hbm_bytes,
         num_microbatches: query.num_microbatches,
         full_grid: query.space.full_size(),
-        evaluated,
+        evaluated: if query.keep_evaluated { evaluated } else { Vec::new() },
         feasible_count: feasible.len(),
+        counters,
         frontier,
         ranked,
+        peak_resident_points,
+        cache_stats: evaluator.cache_stats(),
     }
+}
+
+/// Fold the candidates of one grid region (base-odometer range `lo..hi`)
+/// through `ev`, returning the region's fold and (when the query keeps
+/// them) its evaluated points in enumeration order.
+fn fold_region(
+    query: &PlanQuery,
+    ev: &Evaluator<'_>,
+    lo: usize,
+    hi: usize,
+) -> (FrontierFold, Vec<PlanPoint>) {
+    let mut fold = FrontierFold::new(query.hbm_bytes, query.top_k);
+    let mut kept = Vec::new();
+    for c in query.space.candidates_range(ev.model, lo, hi) {
+        if c.schedule.resolve().validate(c.parallel.pp, query.num_microbatches).is_err() {
+            continue;
+        }
+        let p = ev.evaluate(&c);
+        if query.keep_evaluated {
+            kept.push(p.clone());
+        }
+        fold.push(p);
+    }
+    (fold, kept)
+}
+
+/// Split `0..base_len` into contiguous regions — a few per worker, so the
+/// shared-cursor scheduler can balance regions whose pruned candidate
+/// counts differ.
+fn region_bounds(base_len: usize, threads: usize) -> Vec<(usize, usize)> {
+    if base_len == 0 {
+        return Vec::new();
+    }
+    let n = (threads.max(1) * 4).min(base_len);
+    let size = base_len.div_ceil(n);
+    (0..n)
+        .map(|i| (i * size, ((i + 1) * size).min(base_len)))
+        .filter(|&(lo, hi)| lo < hi)
+        .collect()
+}
+
+fn new_evaluator<'a>(
+    model: &'a ModelConfig,
+    dtypes: DtypePolicy,
+    query: &PlanQuery,
+) -> Evaluator<'a> {
+    Evaluator::new(
+        model,
+        dtypes,
+        query.mode,
+        query.space.split.clone(),
+        query.overheads,
+        query.num_microbatches,
+    )
 }
 
 #[cfg(test)]
@@ -157,10 +339,12 @@ mod tests {
     #[test]
     fn world1024_default_space_plans_nonempty_frontier() {
         let cs = CaseStudy::paper();
-        let q = PlanQuery::new(SearchSpace::for_world(1024), 80 * crate::GIB as u64);
+        let mut q = PlanQuery::new(SearchSpace::for_world(1024), 80 * crate::GIB as u64);
+        q.keep_evaluated = true;
         let res = plan(&cs.model, cs.dtypes, &q);
         assert!(res.full_grid >= res.evaluated.len() as u64);
         assert!(!res.evaluated.is_empty());
+        assert_eq!(res.evaluated_count(), res.evaluated.len() as u64);
         assert!(res.feasible_count > 0, "nothing fits 80 GiB");
         assert!(!res.frontier.is_empty());
         assert!(res.ranked.len() <= q.top_k);
@@ -172,6 +356,75 @@ mod tests {
                 assert!(!pareto::dominates(a, b));
             }
         }
+        // The binding-stage histogram covers exactly the feasible points.
+        let by_stage: u64 = res.counters.by_binding_stage.values().sum();
+        assert_eq!(by_stage, res.feasible_count as u64);
+    }
+
+    #[test]
+    fn streaming_matches_offline_pipeline_on_world1024() {
+        let cs = CaseStudy::paper();
+        let mut q = PlanQuery::new(SearchSpace::for_world(1024), 80 * crate::GIB as u64);
+        q.keep_evaluated = true;
+        let offline = plan_offline(&cs.model, cs.dtypes, &q);
+        for threads in [1usize, 2, 5] {
+            let streaming = plan_with_threads(&cs.model, cs.dtypes, &q, threads);
+            assert_eq!(streaming.evaluated, offline.evaluated, "threads={threads}");
+            assert_eq!(streaming.feasible_count, offline.feasible_count);
+            assert_eq!(streaming.frontier, offline.frontier, "threads={threads}");
+            assert_eq!(streaming.ranked, offline.ranked, "threads={threads}");
+            // The rendered JSON (the golden-snapshot surface) is
+            // byte-identical too.
+            assert_eq!(
+                report::to_json(&streaming).dump(),
+                report::to_json(&offline).dump(),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn million_device_plan_streams_with_bounded_resident_points() {
+        // The acceptance criterion: a ≥1M-device world plans with peak
+        // resident PlanPoint storage bounded by frontier + top-k per fold,
+        // never the evaluated grid.
+        let cs = CaseStudy::paper();
+        let q = PlanQuery::new(SearchSpace::for_world(1 << 20), 80 * crate::GIB as u64);
+        let res = plan(&cs.model, cs.dtypes, &q);
+        assert!(res.evaluated.is_empty(), "streaming default must not keep the grid");
+        assert!(res.evaluated_count() > 10_000, "grid unexpectedly small");
+        assert!(res.feasible_count > 0);
+        assert!(!res.frontier.is_empty());
+        assert!(
+            res.peak_resident_points <= 10_000,
+            "peak resident {} not bounded",
+            res.peak_resident_points
+        );
+        assert!(
+            (res.peak_resident_points as u64) < res.evaluated_count() / 8,
+            "peak resident {} vs evaluated {}",
+            res.peak_resident_points,
+            res.evaluated_count()
+        );
+    }
+
+    #[test]
+    fn top_k_edge_cases_zero_and_oversized() {
+        let cs = CaseStudy::paper();
+        let mut space = SearchSpace::for_world(1024);
+        space.tp = vec![2];
+        space.pp = vec![16];
+        space.ep = vec![8];
+        space.etp = vec![1];
+        let mut q = PlanQuery::new(space, 80 * crate::GIB as u64);
+        q.top_k = 0;
+        let frontier_only = plan(&cs.model, cs.dtypes, &q);
+        assert!(frontier_only.ranked.is_empty());
+        assert!(!frontier_only.frontier.is_empty());
+        q.top_k = usize::MAX;
+        let all = plan(&cs.model, cs.dtypes, &q);
+        assert_eq!(all.ranked.len(), all.feasible_count);
+        assert!(all.ranked.windows(2).all(|w| w[0].total_bytes() <= w[1].total_bytes()));
     }
 
     #[test]
@@ -183,7 +436,8 @@ mod tests {
         let cs = CaseStudy::paper();
         let mut space = SearchSpace::for_world(1024);
         space.pp = vec![16];
-        let q = PlanQuery::new(space, 80 * crate::GIB as u64);
+        let mut q = PlanQuery::new(space, 80 * crate::GIB as u64);
+        q.keep_evaluated = true;
         let res = plan(&cs.model, cs.dtypes, &q);
         use crate::schedule::ScheduleSpec;
         let on_frontier =
@@ -205,6 +459,7 @@ mod tests {
         space.pp = vec![8];
         let mut q = PlanQuery::new(space, 80 * crate::GIB as u64);
         q.num_microbatches = 8;
+        q.keep_evaluated = true;
         let res = plan(&cs.model, cs.dtypes, &q);
         use crate::schedule::ScheduleSpec;
         assert!(!res.evaluated.is_empty());
@@ -223,5 +478,20 @@ mod tests {
         let r80 = plan(&cs.model, cs.dtypes, &q80);
         let r40 = plan(&cs.model, cs.dtypes, &q40);
         assert!(r40.feasible_count <= r80.feasible_count);
+    }
+
+    #[test]
+    fn region_bounds_partition_the_odometer() {
+        assert!(region_bounds(0, 4).is_empty());
+        for (len, threads) in [(1usize, 1usize), (5, 4), (9, 4), (4410, 8), (100, 200)] {
+            let regions = region_bounds(len, threads);
+            assert!(!regions.is_empty());
+            assert_eq!(regions[0].0, 0);
+            assert_eq!(regions.last().unwrap().1, len);
+            for w in regions.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "regions must tile contiguously");
+            }
+            assert!(regions.iter().all(|&(lo, hi)| lo < hi));
+        }
     }
 }

@@ -9,6 +9,21 @@
 //!
 //! A point is on the frontier iff no other point is at least as good on every
 //! objective and strictly better on one.
+//!
+//! Two equivalent pipelines are provided:
+//!
+//! * the **offline** trio [`feasible`] → [`frontier`] → [`rank`], operating
+//!   on a materialized slice (the historical path, kept as the bench
+//!   baseline and equivalence oracle); and
+//! * the **online** [`FrontierFold`], which folds a stream of points into
+//!   the frontier, a bounded top-k list and feasibility counters without
+//!   ever holding the full set — the memory contract that makes ≥1M-device
+//!   grids plannable. Per-shard folds [`FrontierFold::merge`] into the same
+//!   result as one sequential fold (proptest-asserted bit-identical to the
+//!   offline pipeline across random spaces, thread counts and shardings).
+
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
 
 use super::eval::PlanPoint;
 
@@ -22,10 +37,10 @@ pub fn dominates(a: &PlanPoint, b: &PlanPoint) -> bool {
 }
 
 /// Lexicographic objective order used for ranking and frontier scanning.
-fn objective_cmp(a: &PlanPoint, b: &PlanPoint) -> std::cmp::Ordering {
+fn objective_cmp(a: &PlanPoint, b: &PlanPoint) -> Ordering {
     a.total_bytes()
         .cmp(&b.total_bytes())
-        .then(a.bubble.partial_cmp(&b.bubble).unwrap_or(std::cmp::Ordering::Equal))
+        .then(a.bubble.partial_cmp(&b.bubble).unwrap_or(Ordering::Equal))
         .then(a.device_params.cmp(&b.device_params))
 }
 
@@ -52,11 +67,172 @@ pub fn frontier(points: &[PlanPoint]) -> Vec<PlanPoint> {
 }
 
 /// Top-k points by (total bytes, bubble, per-device params), ascending.
+///
+/// `k == 0` yields an empty ranking (frontier-only queries); `k` larger than
+/// the input returns every point, sorted.
 pub fn rank(points: &[PlanPoint], k: usize) -> Vec<PlanPoint> {
+    if k == 0 {
+        return Vec::new();
+    }
     let mut sorted: Vec<PlanPoint> = points.to_vec();
     sorted.sort_by(objective_cmp);
     sorted.truncate(k);
     sorted
+}
+
+/// Stream statistics accumulated by a [`FrontierFold`]: how many points were
+/// pushed, how many fit the budget, and the feasible count per binding
+/// pipeline stage (which stage decided HBM feasibility).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FoldCounters {
+    /// Points pushed into the fold (the whole evaluated grid).
+    pub evaluated: u64,
+    /// Points that fit the HBM budget.
+    pub feasible: u64,
+    /// Feasible points per binding stage index.
+    pub by_binding_stage: BTreeMap<u64, u64>,
+}
+
+impl FoldCounters {
+    fn absorb(&mut self, other: &FoldCounters) {
+        self.evaluated += other.evaluated;
+        self.feasible += other.feasible;
+        for (stage, n) in &other.by_binding_stage {
+            *self.by_binding_stage.entry(*stage).or_insert(0) += n;
+        }
+    }
+}
+
+/// Online replacement for `feasible` → `frontier` → `rank`: folds a stream
+/// of evaluated points into the Pareto frontier, a bounded top-k list and
+/// [`FoldCounters`], holding only frontier + top-k resident — never the
+/// evaluated vec.
+///
+/// **Equivalence contract** (the planner's byte-identity guarantee): pushing
+/// the points of `SearchSpace::candidates()` in enumeration order produces
+/// exactly `frontier(&feasible(..))` and `rank(&feasible(..), k)`. Ties in
+/// the lexicographic objective keep enumeration order because insertion is
+/// at the *upper bound* of the equal run — the same order a stable sort
+/// yields — and a tied newcomer never evicts a resident top-k entry (it
+/// would sort after it). Merging per-region folds in region order
+/// ([`FrontierFold::merge`]) commutes with concatenating the streams:
+/// dominance is transitive, so a point locally dropped is dominated by a
+/// local survivor, and local top-k lists are supersets of each region's
+/// contribution to the global top-k.
+#[derive(Debug, Clone)]
+pub struct FrontierFold {
+    hbm_bytes: u64,
+    top_k: usize,
+    frontier: Vec<PlanPoint>,
+    ranked: Vec<PlanPoint>,
+    counters: FoldCounters,
+    peak_resident: usize,
+}
+
+impl FrontierFold {
+    /// A fold filtering at `hbm_bytes` and keeping at most `top_k` ranked
+    /// points (`top_k == 0` keeps none: frontier-only).
+    pub fn new(hbm_bytes: u64, top_k: usize) -> Self {
+        Self {
+            hbm_bytes,
+            top_k,
+            frontier: Vec::new(),
+            ranked: Vec::new(),
+            counters: FoldCounters::default(),
+            peak_resident: 0,
+        }
+    }
+
+    /// Fold one evaluated point. Infeasible points only bump `evaluated`.
+    pub fn push(&mut self, p: PlanPoint) {
+        self.counters.evaluated += 1;
+        if !p.fits(self.hbm_bytes) {
+            return;
+        }
+        self.counters.feasible += 1;
+        *self.counters.by_binding_stage.entry(p.binding_stage).or_insert(0) += 1;
+        self.fold_ranked(p.clone());
+        self.fold_frontier(p);
+        self.note_resident();
+    }
+
+    /// Merge a fold built from a *later* region of the stream into this one.
+    /// Order matters for tie-breaking: `self` must cover the earlier
+    /// enumeration indices.
+    pub fn merge(&mut self, later: FrontierFold) {
+        self.counters.absorb(&later.counters);
+        self.peak_resident = self.peak_resident.max(later.peak_resident);
+        for p in later.ranked {
+            self.fold_ranked(p);
+        }
+        for p in later.frontier {
+            self.fold_frontier(p);
+        }
+        self.note_resident();
+    }
+
+    fn fold_frontier(&mut self, p: PlanPoint) {
+        if self.frontier.iter().any(|f| dominates(f, &p)) {
+            return;
+        }
+        self.frontier.retain(|f| !dominates(&p, f));
+        // Upper bound of the equal run: a tied newcomer lands after the
+        // resident ties, reproducing stable-sort enumeration order.
+        let pos = self.frontier.partition_point(|f| objective_cmp(f, &p) != Ordering::Greater);
+        self.frontier.insert(pos, p);
+    }
+
+    fn fold_ranked(&mut self, p: PlanPoint) {
+        if self.top_k == 0 {
+            return;
+        }
+        if self.ranked.len() == self.top_k {
+            // A newcomer tying the current k-th sorts after it (later
+            // enumeration index), so only a strict improvement displaces.
+            if objective_cmp(&p, self.ranked.last().unwrap()) != Ordering::Less {
+                return;
+            }
+            self.ranked.pop();
+        }
+        let pos = self.ranked.partition_point(|r| objective_cmp(r, &p) != Ordering::Greater);
+        self.ranked.insert(pos, p);
+    }
+
+    fn note_resident(&mut self) {
+        self.peak_resident = self.peak_resident.max(self.resident_points());
+    }
+
+    /// Stream counters so far.
+    pub fn counters(&self) -> &FoldCounters {
+        &self.counters
+    }
+
+    /// The frontier so far, sorted by the lexicographic objective.
+    pub fn frontier(&self) -> &[PlanPoint] {
+        &self.frontier
+    }
+
+    /// The top-k so far, sorted by the lexicographic objective.
+    pub fn ranked(&self) -> &[PlanPoint] {
+        &self.ranked
+    }
+
+    /// `PlanPoint`s currently resident in the fold (frontier + top-k).
+    pub fn resident_points(&self) -> usize {
+        self.frontier.len() + self.ranked.len()
+    }
+
+    /// High-water mark of [`Self::resident_points`] over the fold's life
+    /// (merges take the max across both folds) — the planner's peak-RSS
+    /// proxy for `PlanPoint` storage.
+    pub fn peak_resident(&self) -> usize {
+        self.peak_resident
+    }
+
+    /// Consume the fold: `(frontier, ranked, counters)`.
+    pub fn finish(self) -> (Vec<PlanPoint>, Vec<PlanPoint>, FoldCounters) {
+        (self.frontier, self.ranked, self.counters)
+    }
 }
 
 #[cfg(test)]
@@ -65,6 +241,7 @@ mod tests {
     use crate::analysis::zero::ZeroStrategy;
     use crate::config::{ParallelConfig, RecomputePolicy};
     use crate::schedule::ScheduleSpec;
+    use crate::util::Rng64;
 
     fn point(total: u64, bubble: f64, params: u64) -> PlanPoint {
         use crate::ledger::{Component, MemoryLedger};
@@ -75,6 +252,7 @@ mod tests {
             recompute: RecomputePolicy::None,
             zero: ZeroStrategy::None,
             schedule: ScheduleSpec::OneFOneB,
+            binding_stage: total % 3,
             device_params: params,
             ledger: MemoryLedger::new().with(Component::ParamsDense, total),
             bubble,
@@ -125,5 +303,104 @@ mod tests {
         let pts = vec![point(10, 0.0, 1), point(20, 0.0, 1)];
         assert_eq!(feasible(&pts, 15).len(), 1);
         assert_eq!(feasible(&pts, 5).len(), 0);
+    }
+
+    #[test]
+    fn rank_top_k_zero_and_oversized() {
+        let pts = vec![point(30, 0.0, 1), point(10, 0.9, 9), point(20, 0.5, 5)];
+        assert!(rank(&pts, 0).is_empty());
+        let all = rank(&pts, 99);
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[0].total_bytes(), 10);
+        assert_eq!(all[2].total_bytes(), 30);
+        assert!(rank(&[], 5).is_empty());
+        // Exact objective ties keep input order (stable sort).
+        let tied = vec![point(10, 0.5, 7), point(10, 0.5, 7)];
+        let r = rank(&tied, 1);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].total_bytes(), 10);
+    }
+
+    #[test]
+    fn fold_matches_offline_pipeline_and_merge_is_sharding_independent() {
+        // Synthetic points on coarse grids force exact objective ties; the
+        // fold must agree with the offline pipeline bit-for-bit anyway.
+        let mut rng = Rng64::new(0xF01D);
+        for case in 0..20u64 {
+            let n = 5 + rng.below(60) as usize;
+            let pts: Vec<PlanPoint> = (0..n)
+                .map(|_| {
+                    point(
+                        10 + rng.below(8) * 10,
+                        f64::from(rng.below(4) as u32) * 0.25,
+                        1 + rng.below(3),
+                    )
+                })
+                .collect();
+            let hbm = 10 + rng.below(8) * 10;
+            for k in [0usize, 1, 3, 100] {
+                let feas = feasible(&pts, hbm);
+                let want_front = frontier(&feas);
+                let want_rank = rank(&feas, k);
+
+                // Sequential fold over the full stream.
+                let mut fold = FrontierFold::new(hbm, k);
+                for p in &pts {
+                    fold.push(p.clone());
+                }
+                check_fold(&fold, &pts, &feas, &want_front, &want_rank, case, k);
+
+                // Sharded: fold contiguous chunks separately, merge in order.
+                let shards = 1 + rng.below(5) as usize;
+                let size = n.div_ceil(shards);
+                let mut merged = FrontierFold::new(hbm, k);
+                for chunk in pts.chunks(size) {
+                    let mut part = FrontierFold::new(hbm, k);
+                    for p in chunk {
+                        part.push(p.clone());
+                    }
+                    merged.merge(part);
+                }
+                check_fold(&merged, &pts, &feas, &want_front, &want_rank, case, k);
+            }
+        }
+    }
+
+    fn check_fold(
+        fold: &FrontierFold,
+        pts: &[PlanPoint],
+        feas: &[PlanPoint],
+        want_front: &[PlanPoint],
+        want_rank: &[PlanPoint],
+        case: u64,
+        k: usize,
+    ) {
+        assert_eq!(fold.counters().evaluated, pts.len() as u64, "case {case} k {k}");
+        assert_eq!(fold.counters().feasible, feas.len() as u64, "case {case} k {k}");
+        assert_eq!(fold.frontier(), want_front, "case {case} k {k}");
+        assert_eq!(fold.ranked(), want_rank, "case {case} k {k}");
+        let by_stage: u64 = fold.counters().by_binding_stage.values().sum();
+        assert_eq!(by_stage, feas.len() as u64, "case {case} k {k}");
+    }
+
+    #[test]
+    fn fold_peak_resident_is_bounded_by_frontier_plus_top_k() {
+        // 100 mutually non-dominated points: the frontier holds all of them,
+        // the ranked list caps at k — resident is exactly frontier + top-k.
+        let k = 5;
+        let mut fold = FrontierFold::new(u64::MAX, k);
+        for i in 0..100u64 {
+            fold.push(point(10 + i, 1.0 - 0.01 * i as f64, 1));
+        }
+        assert_eq!(fold.frontier().len(), 100);
+        assert_eq!(fold.ranked().len(), k);
+        assert_eq!(fold.resident_points(), 100 + k);
+        assert_eq!(fold.peak_resident(), 100 + k);
+        // One dominating point collapses the frontier; the high-water mark
+        // remembers the peak.
+        fold.push(point(1, 0.0, 1));
+        assert_eq!(fold.frontier().len(), 1);
+        assert_eq!(fold.resident_points(), 1 + k);
+        assert_eq!(fold.peak_resident(), 100 + k);
     }
 }

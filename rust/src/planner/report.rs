@@ -3,7 +3,7 @@
 
 use std::collections::BTreeMap;
 
-use super::eval::{Evaluator, PlanPoint};
+use super::eval::{CacheStats, EvalCacheStats, Evaluator, PlanPoint};
 use super::{PlanQuery, PlanResult};
 use crate::analysis::atlas::{ClusterMemoryAtlas, StageInflight};
 use crate::analysis::bubble::{frontier as bubble_frontier, FrontierPoint};
@@ -161,10 +161,32 @@ pub fn to_json(res: &PlanResult) -> Json {
     m.insert("hbm_bytes".into(), Json::Num(res.hbm_bytes as f64));
     m.insert("num_microbatches".into(), Json::Num(res.num_microbatches as f64));
     m.insert("full_grid".into(), Json::Num(res.full_grid as f64));
-    m.insert("evaluated".into(), Json::Num(res.evaluated.len() as f64));
+    m.insert("evaluated".into(), Json::Num(res.evaluated_count() as f64));
     m.insert("feasible".into(), Json::Num(res.feasible_count as f64));
     m.insert("frontier".into(), Json::Arr(res.frontier.iter().map(point_json).collect()));
     m.insert("ranked".into(), Json::Arr(res.ranked.iter().map(point_json).collect()));
+    Json::Obj(m)
+}
+
+/// Memo-cache counters as JSON, one object per cache.
+///
+/// Deliberately **not** part of [`to_json`]: hit/miss splits depend on
+/// thread interleaving and eviction timing, so embedding them would break
+/// the byte-determinism the golden scenario snapshots rely on. The CLI
+/// (`plan --json`) and the throughput bench attach this separately.
+pub fn cache_stats_json(stats: &EvalCacheStats) -> Json {
+    fn one(s: &CacheStats) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("hits".into(), Json::Num(s.hits as f64));
+        m.insert("misses".into(), Json::Num(s.misses as f64));
+        m.insert("evictions".into(), Json::Num(s.evictions as f64));
+        m.insert("hit_rate".into(), Json::Num(s.hit_rate()));
+        Json::Obj(m)
+    }
+    let mut m = BTreeMap::new();
+    m.insert("stage_plans".into(), one(&stats.stage_plans));
+    m.insert("schedule_profiles".into(), one(&stats.schedule_profiles));
+    m.insert("layout_statics".into(), one(&stats.layout_statics));
     Json::Obj(m)
 }
 
@@ -305,6 +327,23 @@ mod tests {
                 panic!("components is not an object");
             }
         }
+    }
+
+    #[test]
+    fn cache_stats_json_reports_all_three_caches() {
+        let res = small_result();
+        let j = cache_stats_json(&res.cache_stats);
+        for cache in ["stage_plans", "schedule_profiles", "layout_statics"] {
+            let c = j.get(cache).unwrap();
+            let hits = c.get("hits").unwrap().as_u64().unwrap();
+            let misses = c.get("misses").unwrap().as_u64().unwrap();
+            assert!(misses >= 1, "{cache} never built anything");
+            let rate = c.get("hit_rate").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&rate));
+            assert!(hits + misses >= 1);
+        }
+        // Not part of the deterministic snapshot surface.
+        assert!(to_json(&res).get("cache_stats").is_err());
     }
 
     #[test]

@@ -154,18 +154,50 @@ impl SearchSpace {
         self.candidates(model).collect()
     }
 
-    /// Lazily yield every valid grid point, in exactly the order (and with
-    /// exactly the pruning) of [`SearchSpace::enumerate`], without
-    /// materializing the grid.
-    pub fn candidates<'a>(&'a self, model: &'a ModelConfig) -> Candidates<'a> {
-        let base_count = self.tp.len()
+    /// Length of the seven-axis base odometer behind
+    /// [`SearchSpace::candidates`] (layout/activation axes, before the
+    /// ZeRO × schedule fan-out and before pruning). Contiguous sub-ranges of
+    /// `0..base_len()` are the planner's **grid regions**: each region's
+    /// candidates share layouts, so a worker's memo caches stay hot within
+    /// it.
+    pub fn base_len(&self) -> usize {
+        self.tp.len()
             * self.pp.len()
             * self.ep.len()
             * self.etp.len()
             * self.sequence_parallel.len()
             * self.micro_batch.len()
-            * self.recompute.len();
-        Candidates { space: self, model, next_base: 0, base_count, pending: None, zs: 0 }
+            * self.recompute.len()
+    }
+
+    /// Lazily yield every valid grid point, in exactly the order (and with
+    /// exactly the pruning) of [`SearchSpace::enumerate`], without
+    /// materializing the grid.
+    pub fn candidates<'a>(&'a self, model: &'a ModelConfig) -> Candidates<'a> {
+        self.candidates_range(model, 0, self.base_len())
+    }
+
+    /// The candidates whose base-odometer index falls in `lo..hi` — one
+    /// **grid region**. The ZeRO × schedule fan-out of a base happens wholly
+    /// inside its region, so concatenating the regions of any in-order
+    /// partition of `0..base_len()` reproduces [`SearchSpace::candidates`]
+    /// exactly. Out-of-range bounds are clamped; an empty range yields no
+    /// candidates.
+    pub fn candidates_range<'a>(
+        &'a self,
+        model: &'a ModelConfig,
+        lo: usize,
+        hi: usize,
+    ) -> Candidates<'a> {
+        let end = hi.min(self.base_len());
+        Candidates {
+            space: self,
+            model,
+            next_base: lo.min(end),
+            end_base: end,
+            pending: None,
+            zs: 0,
+        }
     }
 
     /// Decode flat base index `i` — the odometer over the seven
@@ -224,7 +256,8 @@ pub struct Candidates<'a> {
     model: &'a ModelConfig,
     /// Next flat index into the seven-axis base odometer.
     next_base: usize,
-    base_count: usize,
+    /// One past the last base index of this iterator's region.
+    end_base: usize,
     /// The current valid base point being fanned out, if any.
     pending: Option<(ParallelConfig, ActivationConfig)>,
     /// Flat index into the ZeRO × schedule fan-out of `pending`.
@@ -247,7 +280,7 @@ impl Iterator for Candidates<'_> {
                 self.pending = None;
             }
             loop {
-                if self.next_base >= self.base_count {
+                if self.next_base >= self.end_base {
                     return None;
                 }
                 let i = self.next_base;
@@ -350,6 +383,32 @@ mod tests {
         let m = ModelConfig::deepseek_v3();
         let space = SearchSpace::for_world(1024);
         assert!(space.enumerate(&m).iter().all(|c| c.parallel.pp != 32));
+    }
+
+    #[test]
+    fn region_sharded_candidates_concatenate_to_the_full_stream() {
+        // Any in-order partition of the base odometer into contiguous
+        // regions glues back to the full candidate stream — the invariant
+        // the planner's region-sharded workers rely on.
+        let m = ModelConfig::deepseek_v3();
+        let space = SearchSpace::for_world(1024);
+        let full: Vec<Candidate> = space.candidates(&m).collect();
+        let n = space.base_len();
+        assert!(n > 0);
+        for shards in [1usize, 2, 3, 7, n] {
+            let size = n.div_ceil(shards);
+            let mut glued: Vec<Candidate> = Vec::new();
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + size).min(n);
+                glued.extend(space.candidates_range(&m, lo, hi));
+                lo = hi;
+            }
+            assert_eq!(glued, full, "shards={shards}");
+        }
+        // Degenerate ranges are empty, not panics.
+        assert_eq!(space.candidates_range(&m, n, n + 5).count(), 0);
+        assert_eq!(space.candidates_range(&m, 3, 3).count(), 0);
     }
 
     #[test]

@@ -13,6 +13,11 @@
 //! order regardless of thread count); [`compare`] / [`bless`] / [`line_diff`]
 //! implement the golden-snapshot regression surface consumed by the `suite`
 //! CLI subcommand and the test harness.
+//!
+//! `plan` scenarios run through the planner's streaming fold: the runner
+//! never asks for the evaluated vec (`keep_evaluated` stays off), so even a
+//! ≥1M-device stress scenario holds only frontier + top-k per worker while
+//! its snapshot stays byte-identical to the offline pipeline's.
 
 use std::collections::BTreeMap;
 use std::collections::BTreeSet;
@@ -140,7 +145,10 @@ pub fn envelope(spec: &ScenarioSpec, result: Json) -> Json {
 
 /// Assemble the [`PlanQuery`] a `plan` scenario describes — the same query
 /// the `plan` CLI subcommand builds from its flags, including its
-/// unserviceable-split / unserviceable-schedule rejections.
+/// unserviceable-split / unserviceable-schedule rejections. `top_k = 0` is
+/// a frontier-only query (the ranked table stays empty); the streaming
+/// default (`keep_evaluated = false`) is kept, so scenario memory is
+/// bounded by frontier + top-k at any world size.
 pub fn build_plan_query(spec: &ScenarioSpec) -> anyhow::Result<PlanQuery> {
     let Action::Plan { world, microbatches, top_k, schedule, pp, split } = &spec.action else {
         anyhow::bail!("build_plan_query on a non-plan scenario");

@@ -13,7 +13,7 @@ use dsmem::config::{
 };
 use dsmem::model::CountMode;
 use dsmem::parallel::{build_groups, GroupKind, RankGrid};
-use dsmem::planner::{pareto, plan, PlanQuery, SearchSpace};
+use dsmem::planner::{pareto, plan, plan_offline, plan_with_threads, PlanQuery, SearchSpace};
 use dsmem::schedule::{registry, Schedule, ScheduleSpec};
 use dsmem::util::Rng64;
 
@@ -301,7 +301,8 @@ fn planner_frontier_is_feasible_and_mutually_nondominated() {
     for case in 0..8 {
         let m = planner_model(&mut rng);
         let hbm = [40u64, 80, 160][rng.below(3) as usize] * dsmem::GIB as u64;
-        let query = PlanQuery::new(random_space(&mut rng), hbm);
+        let mut query = PlanQuery::new(random_space(&mut rng), hbm);
+        query.keep_evaluated = true;
         let res = plan(&m, cs.dtypes, &query);
         assert_eq!(
             res.feasible_count,
@@ -327,6 +328,44 @@ fn planner_frontier_is_feasible_and_mutually_nondominated() {
                         && f.device_params == p.device_params)
             });
             assert!(covered, "case {case}: feasible point escapes the frontier");
+        }
+    }
+}
+
+#[test]
+fn planner_streaming_fold_matches_offline_pipeline() {
+    // The streaming FrontierFold must be bit-identical to the offline
+    // feasible → frontier → rank pipeline across random spaces, budgets,
+    // top-k values and worker counts (merge order-independence: each thread
+    // count induces a different region sharding).
+    let cs = CaseStudy::paper();
+    let mut rng = Rng64::new(0x57F01D);
+    for case in 0..6 {
+        let m = planner_model(&mut rng);
+        let hbm = [40u64, 80, 160][rng.below(3) as usize] * dsmem::GIB as u64;
+        let mut query = PlanQuery::new(random_space(&mut rng), hbm);
+        query.top_k = [0usize, 1, 5, 10, 1000][rng.below(5) as usize];
+        query.keep_evaluated = true;
+        let offline = plan_offline(&m, cs.dtypes, &query);
+        for threads in [1usize, 2, 3, 8] {
+            let streaming = plan_with_threads(&m, cs.dtypes, &query, threads);
+            let tag = format!("case {case} threads {threads} k {}", query.top_k);
+            assert_eq!(streaming.evaluated, offline.evaluated, "{tag}");
+            assert_eq!(streaming.feasible_count, offline.feasible_count, "{tag}");
+            assert_eq!(streaming.counters.evaluated, offline.counters.evaluated, "{tag}");
+            assert_eq!(
+                streaming.counters.by_binding_stage, offline.counters.by_binding_stage,
+                "{tag}"
+            );
+            assert_eq!(streaming.frontier, offline.frontier, "{tag}");
+            assert_eq!(streaming.ranked, offline.ranked, "{tag}");
+            // The acceptance criterion verbatim: the rendered snapshot is
+            // byte-identical to the pre-change pipeline's.
+            assert_eq!(
+                dsmem::planner::report::to_json(&streaming).dump(),
+                dsmem::planner::report::to_json(&offline).dump(),
+                "{tag}"
+            );
         }
     }
 }
@@ -415,7 +454,8 @@ fn planner_contains_paper_point_with_schedule_scaled_total() {
     // figure scaled by the schedule's analytic in-flight count at the
     // analysed stage (1F1B at stage 1 of p=16 with m=32: 15 tapes).
     let cs = CaseStudy::paper();
-    let q = PlanQuery::new(SearchSpace::for_world(1024), 80 * dsmem::GIB as u64);
+    let mut q = PlanQuery::new(SearchSpace::for_world(1024), 80 * dsmem::GIB as u64);
+    q.keep_evaluated = true;
     let res = plan(&cs.model, cs.dtypes, &q);
     let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
     let direct = DeviceMemoryReport::build(
