@@ -2,11 +2,12 @@
 //!
 //! Measures points/sec of the streaming region-sharded planner at four
 //! shapes (PP16, world-1024, stress-100k, stress-1M), with the peak
-//! resident-`PlanPoint` proxy and memo-cache hit rates attached, plus the
-//! un-sharded offline baseline (`plan_offline`, collect-then-chunk) at the
+//! resident-`PlanPoint` proxy, the bound-and-prune counters (`pruned`,
+//! `pruned_fraction`) and memo-cache hit rates attached, plus the un-sharded
+//! offline baseline (`plan_offline`, collect-then-chunk, no skipping) at the
 //! stress-100k shape for the sharded-vs-unsharded ratio the acceptance
-//! criterion tracks (target ≥ 2×; the hard guard here is ≥ 1×, re-measured
-//! once before failing — shared CI runners are noisy).
+//! criterion tracks (target ≥ 3× with bound-and-prune; the hard guard here
+//! is ≥ 1×, re-measured once before failing — shared CI runners are noisy).
 //!
 //! Environment:
 //! * `DSMEM_BENCH_QUICK=1` — one timed iteration per shape (CI smoke mode);
@@ -14,7 +15,8 @@
 //! * `DSMEM_BENCH_BASELINE` — checked-in baseline to gate against (default
 //!   `bench/BENCH_planner.baseline.json`; missing file → gate unarmed,
 //!   unparseable file → gate skipped, e.g. `/dev/null` during PGO phases).
-//!   The gate fails on a >25% points/sec regression at stress-100k.
+//!   The gate fails on a >25% points/sec regression at stress-100k, or on a
+//!   >2× growth of the stress-1M `peak_resident_points` residency proxy.
 //!
 //! See `perf.md` for the methodology and how to read the output.
 
@@ -48,6 +50,11 @@ fn shape_json(name: &str, res: &PlanResult, wall_s: f64) -> (f64, Json) {
     m.insert("microbatches".into(), Json::Num(res.num_microbatches as f64));
     m.insert("evaluated".into(), Json::Num(res.evaluated_count() as f64));
     m.insert("feasible".into(), Json::Num(res.feasible_count as f64));
+    m.insert("pruned".into(), Json::Num(res.counters.pruned as f64));
+    m.insert(
+        "pruned_fraction".into(),
+        Json::Num(res.counters.pruned as f64 / res.evaluated_count().max(1) as f64),
+    );
     m.insert("frontier".into(), Json::Num(res.frontier.len() as f64));
     m.insert("wall_s".into(), Json::Num(wall_s));
     m.insert("points_per_sec".into(), Json::Num(pps));
@@ -77,6 +84,7 @@ fn main() {
 
     let mut shapes: Vec<Json> = Vec::new();
     let mut by_name: BTreeMap<String, f64> = BTreeMap::new();
+    let mut by_resident: BTreeMap<String, f64> = BTreeMap::new();
 
     // The four tracked shapes, all through the streaming sharded path.
     let queries: Vec<(&str, PlanQuery)> = vec![
@@ -99,12 +107,14 @@ fn main() {
         let (pps, j) = shape_json(name, &res, wall);
         println!(
             "{name:<12} world {:>8}  {:>7} pts in {wall:.3}s → {pps:>12.0} pts/s  \
-             resident {} pts",
+             pruned {:.0}%  resident {} pts",
             res.world,
             res.evaluated_count(),
+            100.0 * res.counters.pruned as f64 / res.evaluated_count().max(1) as f64,
             res.peak_resident_points,
         );
         by_name.insert((*name).into(), pps);
+        by_resident.insert((*name).into(), res.peak_resident_points as f64);
         shapes.push(j);
     }
 
@@ -129,7 +139,7 @@ fn main() {
     }
     println!(
         "stress100k sharded {spps:.0} pts/s vs un-sharded {opps:.0} pts/s → {ratio:.2}× \
-         (target ≥ 2×, guard ≥ 1×)"
+         (target ≥ 3×, guard ≥ 1×)"
     );
     let mut baseline = BTreeMap::new();
     baseline.insert("name".into(), Json::Str("stress100k_unsharded".into()));
@@ -159,7 +169,9 @@ fn main() {
     println!("wrote {out}");
 
     // Regression gate vs the checked-in baseline (satellite: fail CI on a
-    // >25% points/sec regression at stress-100k).
+    // >25% points/sec regression at stress-100k, or a >2× growth of the
+    // stress-1M resident-PlanPoint proxy — residency regressions would walk
+    // back the streaming-fold memory contract without slowing anything).
     let baseline_path = std::env::var("DSMEM_BENCH_BASELINE")
         .unwrap_or_else(|_| "bench/BENCH_planner.baseline.json".into());
     match std::fs::read_to_string(&baseline_path) {
@@ -171,14 +183,15 @@ fn main() {
         {
             Err(e) => println!("regression gate skipped: unparseable baseline: {e}"),
             Ok(arr) => {
-                let mut old = None;
-                for s in &arr {
-                    let name = s.get("name").ok().and_then(|n| n.as_str().ok().map(String::from));
-                    if name.as_deref() == Some("stress100k") {
-                        old = s.get("points_per_sec").ok().and_then(|v| v.as_f64().ok());
-                    }
-                }
-                match old {
+                let shape_field = |shape: &str, field: &str| -> Option<f64> {
+                    arr.iter()
+                        .find(|s| {
+                            s.get("name").ok().and_then(|n| n.as_str().ok().map(String::from))
+                                == Some(shape.into())
+                        })
+                        .and_then(|s| s.get(field).ok().and_then(|v| v.as_f64().ok()))
+                };
+                match shape_field("stress100k", "points_per_sec") {
                     None => println!("regression gate skipped: baseline has no stress100k shape"),
                     Some(old_pps) => {
                         let mut new_pps = by_name["stress100k"];
@@ -197,6 +210,24 @@ fn main() {
                             new_pps >= 0.75 * old_pps,
                             "planner throughput regressed >25% at stress-100k: \
                              {new_pps:.0} pts/s vs baseline {old_pps:.0} pts/s"
+                        );
+                    }
+                }
+                match shape_field("stress1m", "peak_resident_points") {
+                    None => println!(
+                        "residency gate skipped: baseline has no stress1m \
+                         peak_resident_points"
+                    ),
+                    Some(old_resident) => {
+                        let new_resident = by_resident["stress1m"];
+                        println!(
+                            "residency gate: stress1m {new_resident:.0} resident pts vs \
+                             baseline {old_resident:.0}"
+                        );
+                        assert!(
+                            new_resident <= 2.0 * old_resident.max(1.0),
+                            "planner residency regressed >2× at stress-1M: \
+                             {new_resident:.0} resident pts vs baseline {old_resident:.0}"
                         );
                     }
                 }

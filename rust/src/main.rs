@@ -43,6 +43,7 @@ COMMANDS:
              fit a device budget             [--schedule all|gpipe|1f1b|interleaved[:v]|dualpipe|zb-h1]
                                              [--pp P] [--split front|balanced|N,N,...] [--breakdown]
                                              [--per-stage]  (atlas of the top-ranked point)
+                                             [--threads N]  (worker count; output is identical)
   sweep      Feasibility sweep               [--hbm-gib G] [--model M] [--breakdown]
                                              [--split front|balanced|N,N,...] [--per-stage]
   simulate   Cluster memory simulation       [--schedule gpipe|1f1b|interleaved|dualpipe|zb-h1]
@@ -227,7 +228,21 @@ fn main() -> anyhow::Result<()> {
             };
             let query = scenario::runner::build_plan_query(&spec)?;
             let cs = &spec.case;
-            let res = planner::plan(&cs.model, cs.dtypes, &query);
+            // --threads pins the worker count for reproducible sharded runs;
+            // the default asks the OS for available parallelism. Any count
+            // produces byte-identical output — it only sets parallelism.
+            let res = match a.opt("threads") {
+                Some(t) => {
+                    let threads: usize = t
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--threads must be a positive integer, got {t:?}"))?;
+                    if threads == 0 {
+                        anyhow::bail!("--threads must be at least 1 (0 workers cannot search anything)");
+                    }
+                    planner::plan_with_threads(&cs.model, cs.dtypes, &query, threads)
+                }
+                None => planner::plan(&cs.model, cs.dtypes, &query),
+            };
             if a.has("json") {
                 let mut json = planner::report::to_json(&res);
                 // Memo-cache telemetry lives only in the CLI export: its

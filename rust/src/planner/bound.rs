@@ -1,0 +1,250 @@
+//! Admissible lower bounds on per-device memory — the planner's prune side.
+//!
+//! The exact evaluator ([`super::eval::Evaluator::evaluate`]) prices a
+//! candidate by assembling every pipeline stage's component-tagged ledger.
+//! Most candidates on a tight budget are *hopelessly* over it, and proving
+//! that does not require the full assembly: every term of the device-memory
+//! model is monotone in a direction we can exploit. This module pre-factors
+//! the model into per-axis partial terms and combines them into two bounds:
+//!
+//! * [`candidate_lower_bound`] — a per-candidate bound from the candidate's
+//!   own `(layout, schedule, ZeRO)` coordinates plus an activation *floor*;
+//! * [`BoundTerms::layout_floor`] — a bound valid for **every** candidate
+//!   sharing a parallel layout, used for prefix-level subtree pruning.
+//!
+//! # The admissibility invariant
+//!
+//! Both bounds are **admissible**: `bound(c) ≤ exact_total(c)` for every
+//! candidate `c`, so `bound(c) > hbm_bytes` *proves* infeasibility and a
+//! pruned candidate can never be feasible. Admissibility holds **per
+//! component class**, each with its own monotonicity argument:
+//!
+//! * **statics (P+G+O)** — the candidate bound uses the candidate's exact
+//!   [`crate::analysis::zero::ZeroRow`] (nothing approximated); the layout
+//!   floor uses the ZeRO-3 (`os+g+params`) row, which is component-wise ≤
+//!   every other strategy's row (sharded `dense/DP + moe/EDP` never exceeds
+//!   the unsharded census), with parameter multiplier 1 ≤ every schedule's
+//!   `param_multiplier`;
+//! * **activations** — the floor is the **full-recompute** stage tape (the
+//!   retained-tensor sets nest: `Full ⊆ SelectiveAttention ⊆ None`, so the
+//!   full-recompute ledger is component-wise minimal), passed through
+//!   [`unit_floor`] which under-approximates the per-component integer
+//!   division (see below), times the stage's exact analytic in-flight count;
+//!   the layout floor uses 0 (activations are non-negative);
+//! * **overheads** — the comm band is exact (a constant), and
+//!   [`Overheads::fragmentation_bytes`] is monotone non-decreasing in the
+//!   allocated bytes, so applying it to an under-approximation of the
+//!   allocation under-approximates the fragmentation too.
+//!
+//! The exact path divides the stage tape **per component** before scaling:
+//! `Σ_c ⌊tape_c/u⌋ · I`. A scalar `⌊Σ_c tape_c / u⌋` would *over*-count
+//! (floors don't distribute over sums), so [`unit_floor`] subtracts one
+//! `u−1` rounding allowance per component first — `⌊(X − C·(u−1))/u⌋ ≤
+//! Σ_c ⌊x_c/u⌋` whenever `Σ_c x_c ≥ X`. For `u = 1` (every schedule except
+//! interleaved) the floor is exact.
+//!
+//! # Why prefix bounds read only leading odometer axes
+//!
+//! [`super::space::Candidates`] walks a lexicographic odometer whose
+//! leading (slowest) axes are the parallel layout `(tp, pp, ep, etp)` and
+//! whose trailing axes are `(sp, b, recompute)` × the ZeRO × schedule
+//! fan-out. A bound consulted for *subtree* pruning
+//! ([`super::space::Candidates::skip_subtree`]) must hold for every
+//! candidate in the skipped suffix block — i.e. for **all** values of the
+//! trailing axes. That is only sound if the bound is a function of the
+//! leading axes alone: `layout_floor` therefore reads nothing but the
+//! layout's static partitioning (and floors every trailing-axis term at its
+//! minimum — multiplier 1, ZeRO-3 rows, zero activations). A bound that
+//! peeked at `b` or the schedule would silently stop being a lower bound
+//! for the block's other candidates, and the prune would drop feasible
+//! points.
+
+use crate::analysis::total::Overheads;
+use crate::analysis::zero::{ZeroReport, ZeroStrategy};
+use crate::ledger::NUM_COMPONENTS;
+
+use super::eval::ScheduleProfile;
+
+/// Number of ZeRO strategies ([`ZeroStrategy::ALL`]).
+pub const NUM_ZERO: usize = ZeroStrategy::ALL.len();
+
+/// Dense index of a [`ZeroStrategy`] into [`ZeroStrategy::ALL`]-shaped
+/// arrays (the enum derives no `Hash`; a match beats a map anyway).
+pub fn zero_index(z: ZeroStrategy) -> usize {
+    match z {
+        ZeroStrategy::None => 0,
+        ZeroStrategy::Os => 1,
+        ZeroStrategy::OsG => 2,
+        ZeroStrategy::OsGParams => 3,
+    }
+}
+
+/// Pre-factored static partial terms of one parallel layout: everything a
+/// bound needs that depends only on the odometer's leading axes. Memoized
+/// per layout by [`super::eval::Evaluator::bound_terms`].
+#[derive(Debug, Clone)]
+pub struct BoundTerms {
+    /// `stage_params[s][zero_index(z)]` — exact parameter bytes of stage `s`
+    /// under strategy `z` (before the schedule's replica multiplier).
+    pub stage_params: Vec<[u64; NUM_ZERO]>,
+    /// `stage_go[s][zero_index(z)]` — exact gradient + optimizer bytes.
+    pub stage_go: Vec<[u64; NUM_ZERO]>,
+    /// Admissible floor for **every** candidate of this layout: the ZeRO-3
+    /// statics (multiplier 1, activations 0) of the worst stage, plus their
+    /// fragmentation, plus the comm band. Depends only on leading odometer
+    /// axes, so it may justify skipping a whole suffix subtree.
+    pub layout_floor: u64,
+}
+
+impl BoundTerms {
+    /// Factor a layout's per-stage [`ZeroReport`]s into bound terms.
+    pub fn build(statics: &[ZeroReport], ov: Overheads) -> Self {
+        let mut stage_params = Vec::with_capacity(statics.len());
+        let mut stage_go = Vec::with_capacity(statics.len());
+        let mut worst = 0u64;
+        for zr in statics {
+            let mut params = [0u64; NUM_ZERO];
+            let mut go = [0u64; NUM_ZERO];
+            for (i, &z) in ZeroStrategy::ALL.iter().enumerate() {
+                let row = zr.row(z);
+                params[i] = row.params_bytes;
+                go[i] = row.gradient_bytes + row.optimizer_bytes;
+            }
+            let z3 = zr.row(ZeroStrategy::OsGParams).total_bytes();
+            worst = worst.max(z3 + ov.fragmentation_bytes(z3));
+            stage_params.push(params);
+            stage_go.push(go);
+        }
+        Self { stage_params, stage_go, layout_floor: ov.comm_buffer_bytes + worst }
+    }
+}
+
+/// Admissible per-stage activation floor for one `(layout, b, sp, s, cp)`
+/// shape: the **full-recompute** stage tape total per stage (MLA × all
+/// layers + MoE × MoE layers), the component-wise minimum over recompute
+/// policies. Memoized by [`super::eval::Evaluator::activation_floor`].
+#[derive(Debug, Clone)]
+pub struct ActivationFloor {
+    /// `stage_full_tape[s]` — full-recompute stage tape bytes of stage `s`
+    /// for one microbatch (before unit division and in-flight scaling).
+    pub stage_full_tape: Vec<u64>,
+}
+
+/// Admissible per-unit activation bytes: under-approximates the exact
+/// per-component division `Σ_c ⌊tape_c/u⌋` from the scalar tape total by
+/// granting each of the [`NUM_COMPONENTS`] components its worst-case `u−1`
+/// rounding loss. Exact when `u == 1`.
+pub fn unit_floor(full_tape_total: u64, units_per_microbatch: u64) -> u64 {
+    let u = units_per_microbatch.max(1);
+    full_tape_total.saturating_sub(NUM_COMPONENTS as u64 * (u - 1)) / u
+}
+
+/// Admissible lower bound on a candidate's total device bytes: per stage,
+/// exact statics (candidate's ZeRO row × the schedule's replica multiplier)
+/// plus the activation floor scaled by that stage's exact in-flight count,
+/// plus monotone fragmentation; max over stages, plus the comm band. Always
+/// `≤` [`super::eval::Evaluator::evaluate`]'s `total_bytes()` — and `≥`
+/// [`BoundTerms::layout_floor`], so counting a skipped subtree block at the
+/// layout floor counts exactly the candidates this bound would prune.
+pub fn candidate_lower_bound(
+    terms: &BoundTerms,
+    act: &ActivationFloor,
+    prof: &ScheduleProfile,
+    ov: Overheads,
+    zero: ZeroStrategy,
+) -> u64 {
+    let zi = zero_index(zero);
+    let mut worst = 0u64;
+    for s in 0..terms.stage_params.len() {
+        let act_floor =
+            unit_floor(act.stage_full_tape[s], prof.units_per_microbatch) * prof.inflight_units[s];
+        let allocated =
+            prof.param_multiplier * terms.stage_params[s][zi] + terms.stage_go[s][zi] + act_floor;
+        worst = worst.max(allocated + ov.fragmentation_bytes(allocated));
+    }
+    ov.comm_buffer_bytes + worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_index_matches_all_order() {
+        for (i, &z) in ZeroStrategy::ALL.iter().enumerate() {
+            assert_eq!(zero_index(z), i);
+        }
+    }
+
+    #[test]
+    fn unit_floor_is_exact_at_one_unit_and_admissible_above() {
+        assert_eq!(unit_floor(1000, 1), 1000);
+        assert_eq!(unit_floor(1000, 0), 1000); // degenerate u clamps to 1
+        // u=2: exact per-component division of any split of 1000 into 13
+        // parts is ≥ (1000 − 13·1)/2 = 493 (integer floor).
+        assert_eq!(unit_floor(1000, 2), (1000 - 13) / 2);
+        // Saturates instead of underflowing on tiny tapes.
+        assert_eq!(unit_floor(5, 2), 0);
+        // Worst case realized: 13 components each holding 2u−1 bytes lose
+        // u−1 each — the floor must stay under Σ⌊(2u−1)/u⌋ = 13.
+        let u = 7u64;
+        let total = 13 * (2 * u - 1);
+        assert!(unit_floor(total, u) <= 13);
+    }
+
+    #[test]
+    fn bound_terms_layout_floor_uses_zero3_statics() {
+        use crate::analysis::device::DeviceStaticParams;
+        use crate::analysis::stages::{StagePlan, StageSplit};
+        use crate::config::{DtypePolicy, ModelConfig, ParallelConfig};
+        use crate::model::CountMode;
+        let m = ModelConfig::deepseek_v3();
+        let p = ParallelConfig::paper_case_study();
+        let plan = StagePlan::build(&m, p.pp, StageSplit::FrontLoaded, CountMode::PaperCompat);
+        let statics: Vec<ZeroReport> = (0..plan.stages.len())
+            .map(|s| {
+                let dev = DeviceStaticParams::for_stage(
+                    &m,
+                    &p,
+                    &plan,
+                    s,
+                    crate::config::Dtype::Bf16,
+                );
+                ZeroReport::build(&dev, &p, DtypePolicy::paper_bf16())
+            })
+            .collect();
+        let ov = Overheads::paper_midpoint();
+        let terms = BoundTerms::build(&statics, ov);
+        assert_eq!(terms.stage_params.len(), p.pp as usize);
+        // The floor reproduces comm + max_s(Z3_s + frag(Z3_s)) and is ≤ the
+        // same expression under every other (heavier) strategy.
+        let z3_worst = statics
+            .iter()
+            .map(|zr| {
+                let t = zr.row(ZeroStrategy::OsGParams).total_bytes();
+                t + ov.fragmentation_bytes(t)
+            })
+            .max()
+            .unwrap();
+        assert_eq!(terms.layout_floor, ov.comm_buffer_bytes + z3_worst);
+        for &z in &ZeroStrategy::ALL {
+            let heavier = statics
+                .iter()
+                .map(|zr| {
+                    let t = zr.row(z).total_bytes();
+                    t + ov.fragmentation_bytes(t)
+                })
+                .max()
+                .unwrap();
+            assert!(terms.layout_floor <= ov.comm_buffer_bytes + heavier, "{z:?}");
+        }
+        // Per-stage rows are the exact ZeroRow figures.
+        for (s, zr) in statics.iter().enumerate() {
+            for (i, &z) in ZeroStrategy::ALL.iter().enumerate() {
+                let row = zr.row(z);
+                assert_eq!(terms.stage_params[s][i], row.params_bytes);
+                assert_eq!(terms.stage_go[s][i], row.gradient_bytes + row.optimizer_bytes);
+            }
+        }
+    }
+}

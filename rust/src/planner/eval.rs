@@ -46,6 +46,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::bound::{self, ActivationFloor, BoundTerms};
 use super::space::Candidate;
 use crate::analysis::activation::{mla_tape, moe_tape, ActivationReport};
 use crate::analysis::atlas::{assemble_stage_ledger, StageInflight};
@@ -157,6 +158,33 @@ pub struct ScheduleProfile {
     pub bubble: f64,
 }
 
+/// Reusable per-worker state for [`Evaluator::evaluate_with`]: the activation
+/// tape ledgers of the *current* `(layout, activation)` shape and, per unit
+/// divisor seen under that shape, the per-stage per-unit activation totals.
+/// The odometer yields a layout's whole `(zero, schedule)` fan-out
+/// consecutively, so the tapes — the expensive part, they walk the op-level
+/// tape builders — are rebuilt only when a leading axis moves.
+#[derive(Debug, Clone)]
+pub struct EvalScratch {
+    key: Option<(ParallelConfig, ActivationConfig)>,
+    mla_layer: MemoryLedger,
+    moe_layer: MemoryLedger,
+    /// `(units_per_microbatch, per-stage unit totals)` — at most one entry
+    /// per distinct schedule unit divisor (1 and the interleave depth).
+    unit_totals: Vec<(u64, Vec<u64>)>,
+}
+
+impl Default for EvalScratch {
+    fn default() -> Self {
+        Self {
+            key: None,
+            mla_layer: MemoryLedger::new(),
+            moe_layer: MemoryLedger::new(),
+            unit_totals: Vec::new(),
+        }
+    }
+}
+
 /// Capacity of the `pp → StagePlan` memo (distinct PP degrees).
 const STAGE_PLAN_CACHE_CAP: usize = 64;
 /// Capacity of the `(schedule, pp, m) → ScheduleProfile` memo.
@@ -164,6 +192,11 @@ const SCHEDULE_PROFILE_CACHE_CAP: usize = 512;
 /// Capacity of the `layout → per-stage ZeroReports` memo (the largest
 /// working set: one entry per distinct parallel layout).
 const LAYOUT_STATICS_CACHE_CAP: usize = 1024;
+/// Capacity of the `layout → BoundTerms` memo (mirrors the statics memo).
+const BOUND_TERMS_CACHE_CAP: usize = 1024;
+/// Capacity of the `(layout, b, sp, s, cp) → ActivationFloor` memo: a few
+/// `(b, sp)` shapes per layout.
+const ACT_FLOOR_CACHE_CAP: usize = 4096;
 
 /// Hit/miss/eviction counters of one memo cache. `evictions` counts
 /// *entries dropped* (the bounded caches clear wholesale at capacity).
@@ -204,6 +237,8 @@ pub struct EvalCacheStats {
     pub stage_plans: CacheStats,
     pub schedule_profiles: CacheStats,
     pub layout_statics: CacheStats,
+    pub bound_terms: CacheStats,
+    pub activation_floors: CacheStats,
 }
 
 impl EvalCacheStats {
@@ -212,6 +247,8 @@ impl EvalCacheStats {
         self.stage_plans.add(&other.stage_plans);
         self.schedule_profiles.add(&other.schedule_profiles);
         self.layout_statics.add(&other.layout_statics);
+        self.bound_terms.add(&other.bound_terms);
+        self.activation_floors.add(&other.activation_floors);
     }
 }
 
@@ -283,6 +320,13 @@ pub struct Evaluator<'a> {
     /// evaluation (every `(b, AC, ZeRO, schedule)` point of a layout reuses
     /// it).
     statics: MemoCache<ParallelConfig, Vec<ZeroReport>>,
+    /// `parallel layout → BoundTerms`: the pre-factored static partial terms
+    /// of the admissible lower bound ([`super::bound`]), likewise shared.
+    bounds: MemoCache<ParallelConfig, BoundTerms>,
+    /// `(layout, b, sp, s, cp) → ActivationFloor`: the full-recompute stage
+    /// tape floor (the recompute axis is deliberately *not* in the key — the
+    /// floor under-approximates every policy).
+    act_floors: MemoCache<(ParallelConfig, u64, u64, u64, u64), ActivationFloor>,
 }
 
 impl<'a> Evaluator<'a> {
@@ -304,6 +348,8 @@ impl<'a> Evaluator<'a> {
             plans: MemoCache::new(STAGE_PLAN_CACHE_CAP),
             profiles: MemoCache::new(SCHEDULE_PROFILE_CACHE_CAP),
             statics: MemoCache::new(LAYOUT_STATICS_CACHE_CAP),
+            bounds: MemoCache::new(BOUND_TERMS_CACHE_CAP),
+            act_floors: MemoCache::new(ACT_FLOOR_CACHE_CAP),
         }
     }
 
@@ -361,12 +407,63 @@ impl<'a> Evaluator<'a> {
         })
     }
 
+    /// The memoized [`BoundTerms`] of one parallel layout — the static side
+    /// of the admissible lower bound, factored from the layout's exact
+    /// [`ZeroReport`]s ([`Self::statics_for`]).
+    pub fn bound_terms(&self, parallel: &ParallelConfig) -> Arc<BoundTerms> {
+        self.bounds.get_or_build(*parallel, || {
+            BoundTerms::build(&self.statics_for(parallel), self.overheads)
+        })
+    }
+
+    /// The memoized [`ActivationFloor`] of one `(layout, b, sp, s, cp)`
+    /// shape: the full-recompute stage tapes, an admissible floor for every
+    /// recompute policy of that shape (the retained sets nest).
+    pub fn activation_floor(
+        &self,
+        parallel: &ParallelConfig,
+        act: &ActivationConfig,
+    ) -> Arc<ActivationFloor> {
+        let key = (*parallel, act.micro_batch, act.sp, act.seq_len, act.cp);
+        self.act_floors.get_or_build(key, || {
+            let plan = self.plan_for(parallel.pp);
+            let mla = mla_tape(self.model, act).ledger(RecomputePolicy::Full);
+            let moe = moe_tape(self.model, parallel, act).ledger(RecomputePolicy::Full);
+            ActivationFloor {
+                stage_full_tape: plan
+                    .stages
+                    .iter()
+                    .map(|i| mla.scale(i.num_layers).merged(&moe.scale(i.moe_layers)).total())
+                    .collect(),
+            }
+        })
+    }
+
+    /// Admissible floor for **every** candidate sharing `parallel` — reads
+    /// only the odometer's leading axes, so it may justify
+    /// [`super::space::Candidates::skip_subtree`].
+    pub fn layout_floor(&self, parallel: &ParallelConfig) -> u64 {
+        self.bound_terms(parallel).layout_floor
+    }
+
+    /// Admissible lower bound on `c`'s exact `total_bytes()`:
+    /// `lower_bound(c) > hbm` proves infeasibility without building tapes or
+    /// assembling stage ledgers (see [`super::bound`] for the invariant).
+    pub fn lower_bound(&self, c: &Candidate) -> u64 {
+        let prof = self.schedule_profile(c.schedule, c.parallel.pp);
+        let terms = self.bound_terms(&c.parallel);
+        let floor = self.activation_floor(&c.parallel, &c.act);
+        bound::candidate_lower_bound(&terms, &floor, &prof, self.overheads, c.zero)
+    }
+
     /// Snapshot the hit/miss/eviction counters of every memo cache.
     pub fn cache_stats(&self) -> EvalCacheStats {
         EvalCacheStats {
             stage_plans: self.plans.stats(),
             schedule_profiles: self.profiles.stats(),
             layout_statics: self.statics.stats(),
+            bound_terms: self.bounds.stats(),
+            activation_floors: self.act_floors.stats(),
         }
     }
 
@@ -387,40 +484,76 @@ impl<'a> Evaluator<'a> {
     /// engine replays op by op (asserted per ledger component and per stage
     /// by the integration tests).
     ///
-    /// The pass is incremental: the stage plan, the per-stage ZeRO reports
-    /// (per layout) and the schedule profile (per `(schedule, pp, m)`) are
-    /// memoized, and the activation tapes are built once per candidate —
-    /// each stage then costs only a ledger scale/merge.
+    /// Convenience wrapper over [`Self::evaluate_with`] with a throwaway
+    /// scratch; hot loops should hold an [`EvalScratch`] per worker instead.
     pub fn evaluate(&self, c: &Candidate) -> PlanPoint {
+        self.evaluate_with(c, &mut EvalScratch::default())
+    }
+
+    /// [`Self::evaluate`] with a caller-owned [`EvalScratch`], the planner's
+    /// hot path. Incremental along the odometer: the stage plan, per-stage
+    /// ZeRO reports and schedule profile are memoized (shared `Arc`s), the
+    /// activation tapes are rebuilt only when `(layout, AC)` changes —
+    /// consecutive candidates differ only in the trailing `(zero, schedule)`
+    /// fan-out, which reuses them — and the per-stage scan is a flat
+    /// struct-of-arrays pass over precomputed per-unit stage totals instead
+    /// of assembling a [`MemoryLedger`] per stage. Only the binding stage's
+    /// ledger is assembled, once, after the scan; the scalar arithmetic is
+    /// exactly the ledger total (u64 addition is associative and
+    /// `mult × params = mult × dense + mult × moe` is exact), so the
+    /// returned point is bit-identical to the naive per-stage assembly.
+    pub fn evaluate_with(&self, c: &Candidate, scratch: &mut EvalScratch) -> PlanPoint {
         let plan = self.plan_for(c.parallel.pp);
         let prof = self.schedule_profile(c.schedule, c.parallel.pp);
         let statics = self.statics_for(&c.parallel);
-        let pol = c.act.recompute;
-        let mla_layer = mla_tape(self.model, &c.act).ledger(pol);
-        let moe_layer = moe_tape(self.model, &c.parallel, &c.act).ledger(pol);
+        if scratch.key != Some((c.parallel, c.act)) {
+            let pol = c.act.recompute;
+            scratch.mla_layer = mla_tape(self.model, &c.act).ledger(pol);
+            scratch.moe_layer = moe_tape(self.model, &c.parallel, &c.act).ledger(pol);
+            scratch.unit_totals.clear();
+            scratch.key = Some((c.parallel, c.act));
+        }
+        let u = prof.units_per_microbatch;
+        if !scratch.unit_totals.iter().any(|(uu, _)| *uu == u) {
+            let (mla, moe) = (scratch.mla_layer, scratch.moe_layer);
+            let totals: Vec<u64> = plan
+                .stages
+                .iter()
+                .map(|i| {
+                    mla.scale(i.num_layers).merged(&moe.scale(i.moe_layers)).div(u).total()
+                })
+                .collect();
+            scratch.unit_totals.push((u, totals));
+        }
+        let totals = &scratch.unit_totals.iter().find(|(uu, _)| *uu == u).unwrap().1;
+        let ov = self.overheads;
         let mut binding = 0usize;
-        let mut binding_ledger = MemoryLedger::new();
         let mut binding_total = 0u64;
-        for (s, info) in plan.stages.iter().enumerate() {
-            let ledger = assemble_stage_ledger(
-                statics[s].row(c.zero),
-                &mla_layer,
-                &moe_layer,
-                info.num_layers,
-                info.moe_layers,
-                prof.units_per_microbatch,
-                prof.inflight_units[s],
-                prof.param_multiplier,
-                self.overheads,
-            );
-            let total = ledger.total();
+        for s in 0..plan.stages.len() {
+            let row = statics[s].row(c.zero);
+            let allocated = prof.param_multiplier * row.params_bytes
+                + row.gradient_bytes
+                + row.optimizer_bytes
+                + totals[s] * prof.inflight_units[s];
+            let total = allocated + ov.comm_buffer_bytes + ov.fragmentation_bytes(allocated);
             // Strict `>` keeps the earliest stage on ties.
             if s == 0 || total > binding_total {
                 binding = s;
-                binding_ledger = ledger;
                 binding_total = total;
             }
         }
+        let info = &plan.stages[binding];
+        let ledger = assemble_stage_ledger(
+            statics[binding].row(c.zero),
+            &scratch.mla_layer,
+            &scratch.moe_layer,
+            info.num_layers,
+            info.moe_layers,
+            prof.units_per_microbatch,
+            prof.inflight_units[binding],
+            prof.param_multiplier,
+            ov,
+        );
         PlanPoint {
             parallel: c.parallel,
             micro_batch: c.act.micro_batch,
@@ -430,7 +563,7 @@ impl<'a> Evaluator<'a> {
             schedule: c.schedule,
             binding_stage: binding as u64,
             device_params: prof.param_multiplier * statics[binding].device_params,
-            ledger: binding_ledger,
+            ledger,
             bubble: prof.bubble,
         }
     }
@@ -731,6 +864,63 @@ mod tests {
         // Key 4 survived the last clear: a pure hit, builder untouched.
         assert_eq!(*cache.get_or_build(4, || unreachable!()), 40);
         assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_to_fresh_evaluation() {
+        // One long-lived scratch across a mixed candidate stream (layouts,
+        // batch sizes, recompute, ZeRO, schedules interleaved) must yield
+        // exactly what a throwaway scratch yields.
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        let space = super::super::space::SearchSpace::for_world(1024);
+        let cands: Vec<Candidate> = space
+            .enumerate(&cs.model)
+            .into_iter()
+            .filter(|c| c.schedule.resolve().validate(c.parallel.pp, 32).is_ok())
+            .take(400)
+            .collect();
+        assert!(cands.len() >= 100);
+        let mut scratch = EvalScratch::default();
+        for c in &cands {
+            let warm = ev.evaluate_with(c, &mut scratch);
+            let cold = ev.evaluate(c);
+            assert_eq!(warm, cold);
+        }
+    }
+
+    #[test]
+    fn lower_bound_is_admissible_and_tight_at_full_recompute() {
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        for zero in ZeroStrategy::ALL {
+            for rc in [
+                RecomputePolicy::None,
+                RecomputePolicy::SelectiveAttention,
+                RecomputePolicy::Full,
+            ] {
+                for schedule in crate::schedule::registry() {
+                    let c = Candidate {
+                        parallel: cs.parallel,
+                        act: ActivationConfig { recompute: rc, ..cs.activation },
+                        zero,
+                        schedule,
+                    };
+                    let lb = ev.lower_bound(&c);
+                    let exact = ev.evaluate(&c).total_bytes();
+                    assert!(lb <= exact, "{zero:?} {rc:?} {}: {lb} > {exact}", schedule.name());
+                    // The layout floor bounds every candidate of the layout.
+                    assert!(ev.layout_floor(&c.parallel) <= lb);
+                    // Full recompute + unit divisor 1 (every non-interleaved
+                    // schedule): the activation floor is the exact tape and
+                    // the bound collapses to the exact total.
+                    let prof = ev.schedule_profile(schedule, c.parallel.pp);
+                    if rc == RecomputePolicy::Full && prof.units_per_microbatch == 1 {
+                        assert_eq!(lb, exact, "{zero:?} {}", schedule.name());
+                    }
+                }
+            }
+        }
     }
 
     #[test]

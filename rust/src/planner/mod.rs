@@ -9,6 +9,12 @@
 //!
 //! * [`space`] — [`SearchSpace`]: the full (DP, TP, PP, EP, ETP, SP, b, AC,
 //!   ZeRO, pipeline schedule) grid with validity pruning *before* evaluation;
+//! * [`bound`] — admissible lower bounds on total device bytes from
+//!   pre-factored per-axis partial terms: `lower_bound(c) > hbm` proves a
+//!   candidate infeasible without tapes or ZeRO rows, and a layout-level
+//!   floor lets the hot loop skip whole odometer subtrees
+//!   ([`Candidates::skip_subtree`]) while still counting every skipped
+//!   candidate ([`FoldCounters::pruned`]);
 //! * [`eval`] — [`Evaluator`]: memoized evaluation of valid points into
 //!   [`PlanPoint`] records, with [`crate::analysis::StagePlan`]s memoized
 //!   per PP degree and schedule-derived in-flight/bubble profiles memoized
@@ -37,14 +43,18 @@
 //! assert!(!result.frontier.is_empty());
 //! ```
 
+pub mod bound;
 pub mod eval;
 pub mod pareto;
 pub mod report;
 pub mod space;
 
-pub use eval::{sweep_fixed, CacheStats, EvalCacheStats, Evaluator, PlanPoint, ScheduleProfile};
+pub use bound::{ActivationFloor, BoundTerms};
+pub use eval::{
+    sweep_fixed, CacheStats, EvalCacheStats, EvalScratch, Evaluator, PlanPoint, ScheduleProfile,
+};
 pub use pareto::{FoldCounters, FrontierFold};
-pub use space::{Candidate, Candidates, SearchSpace};
+pub use space::{Candidate, Candidates, SearchSpace, SkippedSubtree};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -139,10 +149,14 @@ impl PlanResult {
 /// Run a planning query: stream the grid → prune → evaluate across
 /// region-sharded workers → fold online into frontier + top-k + counters.
 ///
-/// Pruning happens in two passes: [`SearchSpace::candidates`] applies every
-/// microbatch-independent rule as it streams, then the `(schedule, pp, m)`
+/// Pruning happens in three passes: [`SearchSpace::candidates`] applies
+/// every microbatch-independent rule as it streams; the `(schedule, pp, m)`
 /// shapes a schedule cannot run (e.g. DualPipe with `m < 2·PP`) are dropped
-/// here, where the step microbatch count is known. Neither the candidate
+/// here, where the step microbatch count is known; and candidates whose
+/// **admissible lower bound** ([`bound`]) already exceeds the budget skip
+/// exact evaluation — whole odometer subtrees at once when the layout-level
+/// floor is over budget ([`Candidates::skip_subtree`]) — while still being
+/// counted ([`FoldCounters::pruned`]). Neither the candidate
 /// grid nor the evaluated points are materialized: each worker folds its
 /// regions' points into a [`FrontierFold`] as they are produced, and the
 /// per-region folds merge deterministically in region order — the output is
@@ -236,10 +250,16 @@ pub fn plan_offline(model: &ModelConfig, dtypes: DtypePolicy, query: &PlanQuery)
     const CHUNK: usize = 4096;
     let evaluator = new_evaluator(model, dtypes, query);
     let mut evaluated = Vec::new();
+    let mut pruned = 0u64;
     let mut buf: Vec<Candidate> = Vec::with_capacity(CHUNK);
     for c in query.space.candidates(model) {
         if c.schedule.resolve().validate(c.parallel.pp, query.num_microbatches).is_err() {
             continue;
+        }
+        // The oracle never skips, but it runs the same bound predicate so
+        // `counters.pruned` is byte-comparable against the pruning path.
+        if evaluator.lower_bound(&c) > query.hbm_bytes {
+            pruned += 1;
         }
         buf.push(c);
         if buf.len() == CHUNK {
@@ -256,6 +276,7 @@ pub fn plan_offline(model: &ModelConfig, dtypes: DtypePolicy, query: &PlanQuery)
     let mut counters = FoldCounters {
         evaluated: evaluated.len() as u64,
         feasible: feasible.len() as u64,
+        pruned,
         ..FoldCounters::default()
     };
     for p in &feasible {
@@ -280,6 +301,25 @@ pub fn plan_offline(model: &ModelConfig, dtypes: DtypePolicy, query: &PlanQuery)
 /// Fold the candidates of one grid region (base-odometer range `lo..hi`)
 /// through `ev`, returning the region's fold and (when the query keeps
 /// them) its evaluated points in enumeration order.
+///
+/// This is the bound-and-prune hot loop. Per candidate, cheapest test
+/// first:
+///
+/// 1. the `(schedule, pp, m)` validity filter (a per-PP bitmask, rebuilt
+///    only when PP moves);
+/// 2. the **layout floor** ([`Evaluator::layout_floor`]) — when it already
+///    exceeds the budget, every candidate sharing the layout is provably
+///    infeasible, so the whole remaining odometer subtree is skipped in one
+///    [`Candidates::skip_subtree`] call, with the skipped candidates
+///    reconstructed arithmetically into [`FrontierFold::prune`] (schedule
+///    filter replicated) so the counters match the no-pruning oracle;
+/// 3. the **candidate bound** ([`Evaluator::lower_bound`]) — proves a
+///    single candidate infeasible without tapes or stage assembly;
+/// 4. the exact incremental evaluation ([`Evaluator::evaluate_with`]) with
+///    a per-region scratch.
+///
+/// `keep_evaluated` disables the skips (the caller wants the full evaluated
+/// vec) but still counts `pruned`, so counters stay mode-independent.
 fn fold_region(
     query: &PlanQuery,
     ev: &Evaluator<'_>,
@@ -288,15 +328,69 @@ fn fold_region(
 ) -> (FrontierFold, Vec<PlanPoint>) {
     let mut fold = FrontierFold::new(query.hbm_bytes, query.top_k);
     let mut kept = Vec::new();
-    for c in query.space.candidates_range(ev.model, lo, hi) {
-        if c.schedule.resolve().validate(c.parallel.pp, query.num_microbatches).is_err() {
+    let m = query.num_microbatches;
+    let ns = query.space.schedule.len();
+    let nz = query.space.zero.len() as u64;
+    let mut sched_pp: Option<u64> = None;
+    let mut sched_valid = vec![false; ns];
+    let mut sched_valid_count = 0u64;
+    let mut cur_layout: Option<crate::config::ParallelConfig> = None;
+    let mut layout_over = false;
+    let mut scratch = EvalScratch::default();
+    let mut it = query.space.candidates_range(ev.model, lo, hi);
+    while let Some(c) = it.next() {
+        if sched_pp != Some(c.parallel.pp) {
+            sched_pp = Some(c.parallel.pp);
+            sched_valid_count = 0;
+            for (i, s) in query.space.schedule.iter().enumerate() {
+                sched_valid[i] = s.resolve().validate(c.parallel.pp, m).is_ok();
+                if sched_valid[i] {
+                    sched_valid_count += 1;
+                }
+            }
+        }
+        let si = query.space.schedule.iter().position(|s| *s == c.schedule).unwrap();
+        if !sched_valid[si] {
             continue;
         }
-        let p = ev.evaluate(&c);
+        if cur_layout != Some(c.parallel) {
+            cur_layout = Some(c.parallel);
+            layout_over = ev.layout_floor(&c.parallel) > query.hbm_bytes;
+        }
+        if layout_over && !query.keep_evaluated {
+            // Everything left in this layout's subtree shares the floor:
+            // skip it wholesale, then count what the exact path would have
+            // counted — this candidate, the pending base's remaining
+            // (zero, schedule) fan-out, and the full fan-out of each
+            // skipped base (PP is constant within the block, so the
+            // schedule filter is the same bitmask).
+            let skipped = it.skip_subtree();
+            let mut n = 1u64;
+            if let Some(zs) = skipped.fanout_resume {
+                for z in zs..nz as usize * ns {
+                    if sched_valid[z % ns] {
+                        n += 1;
+                    }
+                }
+            }
+            n += skipped.bases_skipped * nz * sched_valid_count;
+            fold.prune(n);
+            cur_layout = None;
+            continue;
+        }
+        let pruned_by_bound = ev.lower_bound(&c) > query.hbm_bytes;
+        if pruned_by_bound && !query.keep_evaluated {
+            fold.prune(1);
+            continue;
+        }
+        let p = ev.evaluate_with(&c, &mut scratch);
         if query.keep_evaluated {
             kept.push(p.clone());
         }
         fold.push(p);
+        if pruned_by_bound {
+            fold.note_pruned(1);
+        }
     }
     (fold, kept)
 }
@@ -371,10 +465,51 @@ mod tests {
             let streaming = plan_with_threads(&cs.model, cs.dtypes, &q, threads);
             assert_eq!(streaming.evaluated, offline.evaluated, "threads={threads}");
             assert_eq!(streaming.feasible_count, offline.feasible_count);
+            assert_eq!(streaming.counters, offline.counters, "threads={threads}");
             assert_eq!(streaming.frontier, offline.frontier, "threads={threads}");
             assert_eq!(streaming.ranked, offline.ranked, "threads={threads}");
             // The rendered JSON (the golden-snapshot surface) is
             // byte-identical too.
+            assert_eq!(
+                report::to_json(&streaming).dump(),
+                report::to_json(&offline).dump(),
+                "threads={threads}"
+            );
+        }
+        // The same equivalence with the skip path actually armed
+        // (keep_evaluated off): counters — pruned included — and all
+        // output surfaces still match the oracle.
+        q.keep_evaluated = false;
+        let offline = plan_offline(&cs.model, cs.dtypes, &q);
+        for threads in [1usize, 2, 5] {
+            let streaming = plan_with_threads(&cs.model, cs.dtypes, &q, threads);
+            assert_eq!(streaming.counters, offline.counters, "threads={threads}");
+            assert_eq!(streaming.frontier, offline.frontier, "threads={threads}");
+            assert_eq!(streaming.ranked, offline.ranked, "threads={threads}");
+            assert_eq!(
+                report::to_json(&streaming).dump(),
+                report::to_json(&offline).dump(),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn hopeless_budget_prunes_everything_with_exact_accounting() {
+        // 1 GiB is below the constant comm band alone: the layout floor
+        // rules out every layout, the whole grid is skipped subtree by
+        // subtree, and the counters still report the full filtered grid.
+        let cs = CaseStudy::paper();
+        let q = PlanQuery::new(SearchSpace::for_world(1024), crate::GIB as u64);
+        let offline = plan_offline(&cs.model, cs.dtypes, &q);
+        assert!(offline.counters.evaluated > 0);
+        assert_eq!(offline.counters.pruned, offline.counters.evaluated);
+        assert_eq!(offline.feasible_count, 0);
+        for threads in [1usize, 3] {
+            let streaming = plan_with_threads(&cs.model, cs.dtypes, &q, threads);
+            assert_eq!(streaming.counters, offline.counters, "threads={threads}");
+            assert!(streaming.frontier.is_empty());
+            assert!(streaming.ranked.is_empty());
             assert_eq!(
                 report::to_json(&streaming).dump(),
                 report::to_json(&offline).dump(),

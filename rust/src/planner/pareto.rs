@@ -89,6 +89,11 @@ pub struct FoldCounters {
     pub evaluated: u64,
     /// Points that fit the HBM budget.
     pub feasible: u64,
+    /// Candidates proven infeasible by the admissible lower bound
+    /// ([`super::bound`]) — a subset of `evaluated` (pruned candidates still
+    /// count as evaluated, whether or not the exact evaluation was skipped),
+    /// disjoint from `feasible` by admissibility.
+    pub pruned: u64,
     /// Feasible points per binding stage index.
     pub by_binding_stage: BTreeMap<u64, u64>,
 }
@@ -97,6 +102,7 @@ impl FoldCounters {
     fn absorb(&mut self, other: &FoldCounters) {
         self.evaluated += other.evaluated;
         self.feasible += other.feasible;
+        self.pruned += other.pruned;
         for (stage, n) in &other.by_binding_stage {
             *self.by_binding_stage.entry(*stage).or_insert(0) += n;
         }
@@ -154,6 +160,22 @@ impl FrontierFold {
         self.fold_ranked(p.clone());
         self.fold_frontier(p);
         self.note_resident();
+    }
+
+    /// Account `n` candidates whose exact evaluation was *skipped* because
+    /// the admissible lower bound already exceeded the budget: they count as
+    /// evaluated (the counters must match the no-pruning oracle) and as
+    /// pruned. Never feasible — admissibility guarantees it.
+    pub fn prune(&mut self, n: u64) {
+        self.counters.evaluated += n;
+        self.counters.pruned += n;
+    }
+
+    /// Account `n` candidates whose bound exceeded the budget but that were
+    /// exact-evaluated anyway (oracle/`keep_evaluated` paths, where
+    /// [`Self::push`] already bumped `evaluated`).
+    pub fn note_pruned(&mut self, n: u64) {
+        self.counters.pruned += n;
     }
 
     /// Merge a fold built from a *later* region of the stream into this one.
@@ -381,6 +403,28 @@ mod tests {
         assert_eq!(fold.ranked(), want_rank, "case {case} k {k}");
         let by_stage: u64 = fold.counters().by_binding_stage.values().sum();
         assert_eq!(by_stage, feas.len() as u64, "case {case} k {k}");
+    }
+
+    #[test]
+    fn prune_counts_as_evaluated_and_merge_absorbs_pruned() {
+        let mut fold = FrontierFold::new(100, 2);
+        fold.push(point(10, 0.1, 1));
+        fold.prune(3);
+        assert_eq!(fold.counters().evaluated, 4);
+        assert_eq!(fold.counters().pruned, 3);
+        assert_eq!(fold.counters().feasible, 1);
+        // note_pruned marks an already-pushed point without re-counting it.
+        fold.push(point(200, 0.1, 1));
+        fold.note_pruned(1);
+        assert_eq!(fold.counters().evaluated, 5);
+        assert_eq!(fold.counters().pruned, 4);
+
+        let mut later = FrontierFold::new(100, 2);
+        later.prune(7);
+        fold.merge(later);
+        assert_eq!(fold.counters().evaluated, 12);
+        assert_eq!(fold.counters().pruned, 11);
+        assert_eq!(fold.counters().feasible, 1);
     }
 
     #[test]

@@ -163,6 +163,7 @@ pub fn to_json(res: &PlanResult) -> Json {
     m.insert("full_grid".into(), Json::Num(res.full_grid as f64));
     m.insert("evaluated".into(), Json::Num(res.evaluated_count() as f64));
     m.insert("feasible".into(), Json::Num(res.feasible_count as f64));
+    m.insert("pruned".into(), Json::Num(res.counters.pruned as f64));
     m.insert("frontier".into(), Json::Arr(res.frontier.iter().map(point_json).collect()));
     m.insert("ranked".into(), Json::Arr(res.ranked.iter().map(point_json).collect()));
     Json::Obj(m)
@@ -187,6 +188,8 @@ pub fn cache_stats_json(stats: &EvalCacheStats) -> Json {
     m.insert("stage_plans".into(), one(&stats.stage_plans));
     m.insert("schedule_profiles".into(), one(&stats.schedule_profiles));
     m.insert("layout_statics".into(), one(&stats.layout_statics));
+    m.insert("bound_terms".into(), one(&stats.bound_terms));
+    m.insert("activation_floors".into(), one(&stats.activation_floors));
     Json::Obj(m)
 }
 
@@ -314,6 +317,11 @@ mod tests {
             res.frontier.len()
         );
         assert_eq!(back.get("world").unwrap().as_u64().unwrap(), 1024);
+        assert_eq!(
+            back.get("pruned").unwrap().as_u64().unwrap(),
+            res.counters.pruned
+        );
+        assert!(res.counters.pruned <= res.counters.evaluated);
         let ranked = back.get("ranked").unwrap().as_arr().unwrap();
         assert_eq!(ranked.len(), res.ranked.len());
         if let Some(first) = ranked.first() {
@@ -330,10 +338,16 @@ mod tests {
     }
 
     #[test]
-    fn cache_stats_json_reports_all_three_caches() {
+    fn cache_stats_json_reports_every_cache() {
         let res = small_result();
         let j = cache_stats_json(&res.cache_stats);
-        for cache in ["stage_plans", "schedule_profiles", "layout_statics"] {
+        for cache in [
+            "stage_plans",
+            "schedule_profiles",
+            "layout_statics",
+            "bound_terms",
+            "activation_floors",
+        ] {
             let c = j.get(cache).unwrap();
             let hits = c.get("hits").unwrap().as_u64().unwrap();
             let misses = c.get("misses").unwrap().as_u64().unwrap();

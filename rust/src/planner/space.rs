@@ -247,6 +247,23 @@ impl SearchSpace {
     }
 }
 
+/// What [`Candidates::skip_subtree`] threw away, in the units the planner's
+/// pruning accounting needs (see [`crate::planner::FoldCounters`]): skipped
+/// candidates still count toward the `evaluated` stream total, so the
+/// streaming path stays byte-identical to the exhaustive oracle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SkippedSubtree {
+    /// If a base point was mid-fan-out, the flat ZeRO × schedule index its
+    /// fan-out was abandoned at (everything `< fanout_resume` was already
+    /// yielded; everything `≥` it was skipped). `None` if no base was
+    /// pending.
+    pub fanout_resume: Option<usize>,
+    /// Valid base points in the remainder of the current layout block that
+    /// were skipped before any of their ZeRO × schedule fan-out (each would
+    /// have yielded `zero.len() × schedule.len()` candidates).
+    pub bases_skipped: u64,
+}
+
 /// Streaming grid iterator (see [`SearchSpace::candidates`]): walks the
 /// layout/activation odometer, pruning invalid base points, and fans each
 /// surviving base out over the ZeRO × schedule axes — O(1) memory instead of
@@ -262,6 +279,47 @@ pub struct Candidates<'a> {
     pending: Option<(ParallelConfig, ActivationConfig)>,
     /// Flat index into the ZeRO × schedule fan-out of `pending`.
     zs: usize,
+}
+
+impl Candidates<'_> {
+    /// Skip the rest of the current **layout block** — every remaining
+    /// candidate whose `(tp, pp, ep, etp)` prefix equals the last yielded
+    /// candidate's — and report exactly what was skipped.
+    ///
+    /// The odometer's lexicographic order makes a layout block a contiguous
+    /// run of base indices (the trailing `sp × b × recompute` axes cycle
+    /// fastest), so a bound that depends only on the leading layout axes
+    /// (see [`crate::planner::bound`]) can discard the whole suffix subtree
+    /// in one call instead of yielding its candidates one by one. The
+    /// iterator resumes at the first base of the next block (clamped to the
+    /// region's `end_base` — a block split across regions is skipped
+    /// per-region, which counts identically because the accounting is
+    /// per-candidate).
+    ///
+    /// Call this only after [`Iterator::next`] returned `Some`; calling it
+    /// on a fresh or exhausted iterator is a no-op reporting nothing
+    /// skipped.
+    pub fn skip_subtree(&mut self) -> SkippedSubtree {
+        let fanout_resume = self.pending.take().map(|_| self.zs);
+        if self.next_base == 0 || self.next_base > self.end_base {
+            return SkippedSubtree { fanout_resume, bases_skipped: 0 };
+        }
+        // The pending base was decoded from `next_base - 1`; its layout
+        // block spans the trailing sp × b × recompute axes.
+        let cur = self.next_base - 1;
+        let block = self.space.sequence_parallel.len()
+            * self.space.micro_batch.len()
+            * self.space.recompute.len();
+        let end = ((cur / block + 1) * block).min(self.end_base);
+        let mut bases_skipped = 0u64;
+        while self.next_base < end {
+            if self.space.base_at(self.model, self.next_base).is_some() {
+                bases_skipped += 1;
+            }
+            self.next_base += 1;
+        }
+        SkippedSubtree { fanout_resume, bases_skipped }
+    }
 }
 
 impl Iterator for Candidates<'_> {
@@ -409,6 +467,88 @@ mod tests {
         // Degenerate ranges are empty, not panics.
         assert_eq!(space.candidates_range(&m, n, n + 5).count(), 0);
         assert_eq!(space.candidates_range(&m, 3, 3).count(), 0);
+    }
+
+    #[test]
+    fn skip_subtree_jumps_to_the_next_layout_block_with_exact_accounting() {
+        let m = ModelConfig::deepseek_v3();
+        let mut space = SearchSpace::for_world(1024);
+        space.tp = vec![1, 2];
+        space.pp = vec![2, 4];
+        space.ep = vec![4];
+        space.etp = vec![1];
+        let full: Vec<Candidate> = space.candidates(&m).collect();
+        let nz = space.zero.len();
+        let ns = space.schedule.len();
+        let block = space.sequence_parallel.len() * space.micro_batch.len() * space.recompute.len();
+        // Pull k candidates, skip, then drain: the drained tail must equal
+        // the full stream minus the skipped layout block, and the skip
+        // accounting must cover exactly the gap.
+        for k in [1usize, 3, 7, 20, 41] {
+            if k > full.len() {
+                continue;
+            }
+            let mut it = space.candidates(&m);
+            let mut seen = Vec::new();
+            for _ in 0..k {
+                seen.push(it.next().unwrap());
+            }
+            let skipped = it.skip_subtree();
+            let rest: Vec<Candidate> = it.collect();
+            // The tail resumes at the first candidate with a different
+            // layout than the last yielded one.
+            let last_layout = seen.last().unwrap().parallel;
+            if let Some(first) = rest.first() {
+                assert_ne!(first.parallel, last_layout, "k={k}");
+            }
+            // Candidate accounting: yielded + skipped fan-out + skipped
+            // bases' fan-out = the full stream.
+            let fanout_remaining = skipped
+                .fanout_resume
+                .map(|zs| (nz * ns - zs) as u64)
+                .unwrap_or(0);
+            let skipped_total = fanout_remaining + skipped.bases_skipped * (nz * ns) as u64;
+            assert_eq!(
+                seen.len() as u64 + skipped_total + rest.len() as u64,
+                full.len() as u64,
+                "k={k}"
+            );
+            // Everything skipped shares the last yielded candidate's layout
+            // (the defining property the planner's layout bound relies on):
+            // the gap in the full stream is exactly the block remainder.
+            for c in &full[k..full.len() - rest.len()] {
+                assert_eq!(c.parallel, last_layout, "k={k}");
+            }
+        }
+        // A fresh iterator skips nothing.
+        let mut fresh = space.candidates(&m);
+        assert_eq!(
+            fresh.skip_subtree(),
+            SkippedSubtree { fanout_resume: None, bases_skipped: 0 }
+        );
+        // Skipping after the last candidate is a no-op too.
+        let mut done = space.candidates(&m);
+        while done.next().is_some() {}
+        let end_skip = done.skip_subtree();
+        assert_eq!(end_skip.bases_skipped, 0);
+        // Region-clamped iterators stop their skip at the region boundary:
+        // glue of (skip-everything per region) still covers the stream.
+        let n = space.base_len();
+        let size = n.div_ceil(3).max(block / 2).min(n);
+        let mut covered = 0u64;
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + size).min(n);
+            let mut it = space.candidates_range(&m, lo, hi);
+            while let Some(_) = it.next() {
+                covered += 1;
+                let s = it.skip_subtree();
+                covered += s.fanout_resume.map(|zs| (nz * ns - zs) as u64).unwrap_or(0);
+                covered += s.bases_skipped * (nz * ns) as u64;
+            }
+            lo = hi;
+        }
+        assert_eq!(covered, full.len() as u64);
     }
 
     #[test]

@@ -13,7 +13,9 @@ use dsmem::config::{
 };
 use dsmem::model::CountMode;
 use dsmem::parallel::{build_groups, GroupKind, RankGrid};
-use dsmem::planner::{pareto, plan, plan_offline, plan_with_threads, PlanQuery, SearchSpace};
+use dsmem::planner::{
+    pareto, plan, plan_offline, plan_with_threads, Evaluator, PlanQuery, SearchSpace,
+};
 use dsmem::schedule::{registry, Schedule, ScheduleSpec};
 use dsmem::util::Rng64;
 
@@ -366,6 +368,98 @@ fn planner_streaming_fold_matches_offline_pipeline() {
                 dsmem::planner::report::to_json(&offline).dump(),
                 "{tag}"
             );
+        }
+    }
+}
+
+#[test]
+fn pruning_never_drops_feasible_points() {
+    // The bound-and-prune acceptance bar: (a) the admissibility oracle —
+    // every candidate's lower bound is ≤ its exact total, and the layout
+    // floor is ≤ the candidate bound, so a pruned candidate's exact total
+    // provably exceeds the budget; (b) the oracle's per-candidate bound
+    // count equals `counters.pruned` of both paths; (c) the pruning
+    // streaming path stays byte-identical to `plan_offline` across random
+    // spaces, budget edges (0 and `u64::MAX` included), thread counts and
+    // both keep modes.
+    let cs = CaseStudy::paper();
+    let mut rng = Rng64::new(0xB0B0);
+    for case in 0..3 {
+        let m = planner_model(&mut rng);
+        let space = random_space(&mut rng);
+        for hbm in [0u64, 24 * dsmem::GIB as u64, 80 * dsmem::GIB as u64, u64::MAX] {
+            let mut query = PlanQuery::new(space.clone(), hbm);
+            query.top_k = [0usize, 5][rng.below(2) as usize];
+            query.keep_evaluated = true;
+            let offline = plan_offline(&m, cs.dtypes, &query);
+            // Admissibility oracle: walk the filtered grid in enumeration
+            // order, pairing each candidate with its exact evaluated point.
+            let ev = Evaluator::new(
+                &m,
+                cs.dtypes,
+                query.mode,
+                query.space.split.clone(),
+                query.overheads,
+                query.num_microbatches,
+            );
+            let mut i = 0usize;
+            let mut by_bound = 0u64;
+            for c in query.space.candidates(&m) {
+                if c.schedule.resolve().validate(c.parallel.pp, query.num_microbatches).is_err()
+                {
+                    continue;
+                }
+                let exact = offline.evaluated[i].total_bytes();
+                let lb = ev.lower_bound(&c);
+                assert!(lb <= exact, "case {case} hbm {hbm}: {lb} > exact {exact} for {c:?}");
+                assert!(
+                    ev.layout_floor(&c.parallel) <= lb,
+                    "case {case} hbm {hbm}: layout floor above candidate bound for {c:?}"
+                );
+                if lb > hbm {
+                    by_bound += 1;
+                    // The one property pruning rests on: bound-pruned ⇒
+                    // exactly infeasible. A feasible candidate can never
+                    // be pruned.
+                    assert!(exact > hbm, "case {case}: pruned a feasible candidate {c:?}");
+                }
+                i += 1;
+            }
+            assert_eq!(i as u64, offline.counters.evaluated, "case {case} hbm {hbm}");
+            assert_eq!(by_bound, offline.counters.pruned, "case {case} hbm {hbm}");
+            if hbm == u64::MAX {
+                assert_eq!(offline.counters.pruned, 0, "case {case}: nothing exceeds MAX");
+            }
+            if hbm == 0 {
+                assert_eq!(offline.feasible_count, 0, "case {case}");
+                assert_eq!(
+                    offline.counters.pruned, offline.counters.evaluated,
+                    "case {case}: everything exceeds a zero budget"
+                );
+            }
+            // Byte-identity of the pruning path against the no-skip oracle,
+            // with the subtree skips actually armed (keep_evaluated=false)
+            // and disarmed.
+            for threads in [1usize, 3] {
+                for keep in [false, true] {
+                    let mut q = query.clone();
+                    q.keep_evaluated = keep;
+                    let streaming = plan_with_threads(&m, cs.dtypes, &q, threads);
+                    let tag = format!("case {case} hbm {hbm} threads {threads} keep {keep}");
+                    assert_eq!(streaming.counters, offline.counters, "{tag}");
+                    assert_eq!(streaming.feasible_count, offline.feasible_count, "{tag}");
+                    assert_eq!(streaming.frontier, offline.frontier, "{tag}");
+                    assert_eq!(streaming.ranked, offline.ranked, "{tag}");
+                    if keep {
+                        assert_eq!(streaming.evaluated, offline.evaluated, "{tag}");
+                    }
+                    assert_eq!(
+                        dsmem::planner::report::to_json(&streaming).dump(),
+                        dsmem::planner::report::to_json(&offline).dump(),
+                        "{tag}"
+                    );
+                }
+            }
         }
     }
 }
