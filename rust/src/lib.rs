@@ -41,6 +41,15 @@
 //!    against golden files in CI and `cargo test` — one regression surface
 //!    over every subsystem.
 //!
+//! 6. **Resident query service** ([`server`]) — `dsmem serve`, a long-lived
+//!    daemon speaking hand-rolled HTTP/1.1 + JSON over `std::net` that routes
+//!    the endpoints above into the same planner/scenario entry points while
+//!    sharing the evaluator's memo caches ([`planner::EvalCaches`]) across
+//!    queries: repeated and near-neighbor queries skip rebuilding tapes and
+//!    ZeRO tables. The scenario suite doubles as its load generator
+//!    (`suite run --via-server`), byte-comparing served responses against the
+//!    same golden snapshots.
+//!
 //! All three memory-producing pillars speak one algebra: the component-tagged
 //! [`ledger::MemoryLedger`] (params dense/MoE, gradients, optimizer states,
 //! per-block activations, comm buffers, fragmentation, KV cache), rendered by
@@ -78,6 +87,7 @@ pub mod report;
 pub mod runtime;
 pub mod scenario;
 pub mod schedule;
+pub mod server;
 pub mod sim;
 #[cfg(feature = "live")]
 pub mod trainer;

@@ -8,7 +8,10 @@
 //! * `sweep`     — (b × AC × ZeRO) feasibility sweep against an HBM budget;
 //! * `simulate`  — run the cluster memory simulator over a schedule;
 //! * `suite`     — run the declarative scenario suite against its golden
-//!   snapshots (`run|list|diff`, `--bless` to regenerate);
+//!   snapshots (`run|list|diff`, `--bless` to regenerate, `--via-server` to
+//!   drive a running daemon instead of the in-process runner);
+//! * `serve`     — resident HTTP query daemon with cross-query memoization
+//!   ([`dsmem::server`]);
 //! * `train`     — run the live mini pipeline training loop (needs artifacts
 //!   and the `live` cargo feature).
 //!
@@ -51,7 +54,14 @@ COMMANDS:
              [--recompute none|selective|full] [--zero none|os|os_g|os_g_params]
              [--trace FILE.json] [--model M] [--breakdown]
   suite      Declarative scenario suite      run|list|diff [DIR] [--golden DIR] [--bless]
-             vs golden snapshots             [--report FILE]   (DSMEM_BLESS=1 also blesses)
+             vs golden snapshots             [--report FILE] [--threads N]
+                                             (DSMEM_BLESS=1 also blesses)
+                                             [--via-server HOST:PORT]  (drive a running
+                                             daemon; read-only golden comparison)
+  serve      Resident HTTP query daemon      [--addr HOST:PORT] [--threads N]
+             with cross-query memoization    (POST /plan /sweep /simulate /kvcache /atlas
+                                             /report /suite, GET /healthz /stats;
+                                             POST /shutdown stops it)
   kvcache    Inference KV-cache analysis     [--tokens N] [--model M]  (MLA vs MHA vs GQA)
   bubble     Pipeline bubble-vs-memory sweep [--pp P] [--model M]
   train      Live mini pipeline training     [--artifacts DIR] [--steps N] [--dp D]
@@ -121,6 +131,24 @@ impl Args {
 /// ([`CaseStudy::preset`] — the same spelling the scenario suite uses).
 fn case_study(model: &str) -> anyhow::Result<CaseStudy> {
     CaseStudy::preset(model)
+}
+
+/// Parse a `--threads` value: a positive integer, defaulting to the OS's
+/// available parallelism. `what` completes the zero-workers error so it
+/// reads naturally per subcommand ("0 workers cannot search anything").
+fn thread_count(opt: Option<&str>, what: &str) -> anyhow::Result<usize> {
+    match opt {
+        Some(t) => {
+            let threads: usize = t
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--threads must be a positive integer, got {t:?}"))?;
+            if threads == 0 {
+                anyhow::bail!("--threads must be at least 1 (0 workers cannot {what})");
+            }
+            Ok(threads)
+        }
+        None => Ok(std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)),
+    }
 }
 
 /// Parse a schedule name, overriding the interleaved chunk count when the
@@ -232,15 +260,12 @@ fn main() -> anyhow::Result<()> {
             // the default asks the OS for available parallelism. Any count
             // produces byte-identical output — it only sets parallelism.
             let res = match a.opt("threads") {
-                Some(t) => {
-                    let threads: usize = t
-                        .parse()
-                        .map_err(|_| anyhow::anyhow!("--threads must be a positive integer, got {t:?}"))?;
-                    if threads == 0 {
-                        anyhow::bail!("--threads must be at least 1 (0 workers cannot search anything)");
-                    }
-                    planner::plan_with_threads(&cs.model, cs.dtypes, &query, threads)
-                }
+                Some(t) => planner::plan_with_threads(
+                    &cs.model,
+                    cs.dtypes,
+                    &query,
+                    thread_count(Some(t), "search anything")?,
+                ),
                 None => planner::plan(&cs.model, cs.dtypes, &query),
             };
             if a.has("json") {
@@ -567,7 +592,7 @@ fn main() -> anyhow::Result<()> {
                 anyhow::bail!("blessing goldens is `suite run --bless`, not `suite {verb}`");
             }
             if verb == "list" {
-                for flag in ["report", "golden"] {
+                for flag in ["report", "golden", "threads", "via-server"] {
                     if a.has(flag) {
                         anyhow::bail!("--{flag} does not apply to `suite list`");
                     }
@@ -601,7 +626,57 @@ fn main() -> anyhow::Result<()> {
                 }
                 Ok(())
             };
-            let outcomes = match scenario::run_all(&scens) {
+            if let Some(server_addr) = a.opt("via-server") {
+                // Load-generator mode: every scenario goes out as an HTTP
+                // request to a running daemon, and the response bodies are
+                // byte-compared against the same golden files — one
+                // comparison covering the library and the transport.
+                if verb != "run" {
+                    anyhow::bail!("--via-server only applies to `suite run`, not `suite {verb}`");
+                }
+                if a.has("bless") || scenario::bless_requested() {
+                    anyhow::bail!(
+                        "--via-server cannot bless: the comparison is read-only — bless \
+                         locally with `dsmem suite run {} --bless`",
+                        dir.display()
+                    );
+                }
+                let threads = thread_count(a.opt("threads"), "drive the server")?;
+                let report = match dsmem::server::run_suite_via_server(
+                    &dir,
+                    &golden,
+                    server_addr,
+                    threads,
+                ) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        write_report(&format!("suite via {server_addr} failed to run: {e}"))?;
+                        return Err(e);
+                    }
+                };
+                let mut t = dsmem::report::Table::new(
+                    format!(
+                        "Scenario suite via http://{server_addr} vs {}",
+                        golden.display()
+                    ),
+                    &["scenario", "status"],
+                );
+                for (name, status) in &report.entries {
+                    t.row(vec![name.clone(), status.label().to_string()]);
+                }
+                print!("{}", t.render());
+                write_report(&report.summary())?;
+                if !report.is_clean() {
+                    anyhow::bail!(
+                        "scenario suite via {server_addr} failed: {}",
+                        report.summary()
+                    );
+                }
+                println!("scenario suite via {server_addr}: {}", report.summary());
+                return Ok(());
+            }
+            let threads = thread_count(a.opt("threads"), "run any scenario")?;
+            let outcomes = match scenario::run_all_with_threads(&scens, threads) {
                 Ok(o) => o,
                 Err(e) => {
                     write_report(&format!("scenario suite failed to run: {e}"))?;
@@ -666,6 +741,18 @@ fn main() -> anyhow::Result<()> {
                 );
             }
             println!("scenario suite: {}", report.summary());
+        }
+        "serve" => {
+            let a = Args::parse(rest, &[])?;
+            let addr = a.get("addr", "127.0.0.1:7878");
+            let threads = thread_count(a.opt("threads"), "serve anything")?;
+            let handle = dsmem::server::start(&dsmem::server::ServerConfig { addr, threads })?;
+            println!(
+                "dsmem serve: listening on http://{} with {threads} worker threads \
+                 (POST /shutdown to stop)",
+                handle.addr()
+            );
+            handle.join();
         }
         #[cfg(feature = "live")]
         "train" => {

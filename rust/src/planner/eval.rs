@@ -35,12 +35,20 @@
 //!   `plan --microbatches` and the activation multiplier agree even when
 //!   `m < p`.
 //!
+//! The five memo caches live in a standalone [`EvalCaches`] tier behind an
+//! `Arc`: [`Evaluator::new`] spins up a private tier, while
+//! [`Evaluator::with_caches`] shares one across evaluators — the planner's
+//! streaming driver ([`crate::planner::plan_with_threads`]) hands every
+//! worker the same tier, and the `dsmem serve` daemon keeps tiers resident
+//! *across queries* so a warm repeated or near-neighbor query skips straight
+//! to the fold. Each cache is internally sharded by key hash
+//! ([`MEMO_SHARDS`] mutex shards), so concurrent workers rarely contend on
+//! a lock; every cached value is a pure function of its key, so sharing
+//! changes hit rates but never results.
+//!
 //! [`Evaluator::evaluate_all`] fans the grid out over `std::thread::scope`
 //! workers in contiguous chunks, so results come back in input order and the
-//! output is deterministic regardless of thread count. The planner's
-//! streaming driver ([`crate::planner::plan_with_threads`]) instead builds
-//! one evaluator *per worker* and shards by grid region, so each worker's
-//! caches stay hot and uncontended within its regions.
+//! output is deterministic regardless of thread count.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -229,6 +237,17 @@ impl CacheStats {
         self.misses += other.misses;
         self.evictions += other.evictions;
     }
+
+    /// The counters accumulated since `start` (an earlier snapshot of the
+    /// *same* cache). Saturating: counters only grow, so a non-matching
+    /// snapshot can only under-report, never wrap.
+    pub fn since(&self, start: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(start.hits),
+            misses: self.misses.saturating_sub(start.misses),
+            evictions: self.evictions.saturating_sub(start.evictions),
+        }
+    }
 }
 
 /// Per-cache [`CacheStats`] snapshot of one [`Evaluator`].
@@ -250,14 +269,38 @@ impl EvalCacheStats {
         self.bound_terms.add(&other.bound_terms);
         self.activation_floors.add(&other.activation_floors);
     }
+
+    /// The counters accumulated since `start`, cache by cache — how a query
+    /// attributes its share of a long-lived shared tier. Approximate under
+    /// concurrent queries on the same tier (another query's lookups between
+    /// the two snapshots land in the delta); the tier's own totals stay
+    /// exact.
+    pub fn since(&self, start: &EvalCacheStats) -> EvalCacheStats {
+        EvalCacheStats {
+            stage_plans: self.stage_plans.since(&start.stage_plans),
+            schedule_profiles: self.schedule_profiles.since(&start.schedule_profiles),
+            layout_statics: self.layout_statics.since(&start.layout_statics),
+            bound_terms: self.bound_terms.since(&start.bound_terms),
+            activation_floors: self.activation_floors.since(&start.activation_floors),
+        }
+    }
 }
 
-/// A bounded, instrumented memo: `HashMap` behind a mutex, cleared wholesale
-/// when it reaches `cap` (values are pure functions of their key, so a clear
-/// only costs recomputation), with lock-free stat counters.
+/// Mutex shards per memo cache: enough to keep a worker pool off each
+/// other's locks at typical core counts without bloating the struct. Shard
+/// selection hashes the key with the std `DefaultHasher` (fixed keys —
+/// deterministic within and across processes of one build).
+const MEMO_SHARDS: usize = 8;
+
+/// A bounded, instrumented, concurrency-sharded memo: `cap` total entries
+/// spread over hash-selected `Mutex<HashMap>` shards, each cleared wholesale
+/// when it reaches its share of the capacity (values are pure functions of
+/// their key, so a clear only costs recomputation), with lock-free stat
+/// counters shared across shards.
 struct MemoCache<K, V> {
-    map: Mutex<HashMap<K, Arc<V>>>,
-    cap: usize,
+    shards: Vec<Mutex<HashMap<K, Arc<V>>>>,
+    /// Per-shard entry cap: the configured capacity divided over shards.
+    shard_cap: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -265,25 +308,40 @@ struct MemoCache<K, V> {
 
 impl<K: std::hash::Hash + Eq, V> MemoCache<K, V> {
     fn new(cap: usize) -> Self {
+        Self::with_shards(MEMO_SHARDS, cap)
+    }
+
+    /// [`Self::new`] with an explicit shard count (tests pin one shard for a
+    /// deterministic eviction trace).
+    fn with_shards(shards: usize, cap: usize) -> Self {
+        let shards = shards.max(1);
         Self {
-            map: Mutex::new(HashMap::new()),
-            cap: cap.max(1),
+            shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            shard_cap: cap.div_ceil(shards).max(1),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
         }
     }
 
-    /// The value for `key`, building it under the lock on a miss (so
-    /// concurrent readers of the same key build it once).
+    fn shard_of(&self, key: &K) -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// The value for `key`, building it under its shard's lock on a miss (so
+    /// concurrent readers of the same key build it once, and readers of
+    /// other shards never wait on the build).
     fn get_or_build(&self, key: K, build: impl FnOnce() -> V) -> Arc<V> {
-        let mut map = self.map.lock().unwrap();
+        let mut map = self.shards[self.shard_of(&key)].lock().unwrap();
         if let Some(v) = map.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return v.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        if map.len() >= self.cap {
+        if map.len() >= self.shard_cap {
             self.evictions.fetch_add(map.len() as u64, Ordering::Relaxed);
             map.clear();
         }
@@ -301,6 +359,66 @@ impl<K: std::hash::Hash + Eq, V> MemoCache<K, V> {
     }
 }
 
+/// The evaluator's five bounded memo caches as a standalone, shareable tier.
+///
+/// An `Arc<EvalCaches>` can back any number of [`Evaluator`]s — the
+/// planner's worker pool within one query, or a resident daemon's stream of
+/// queries — **provided they fix the same evaluation context**: the cache
+/// keys encode `(pp, layout, schedule, m, batch shape)` but *not* the model,
+/// dtype policy, counting mode, stage split or overheads an evaluator bakes
+/// into the values, so a tier must never be shared across differing ones
+/// (the server keys its registry on exactly that quintuple). Within one
+/// context every cached value is a pure function of its key, so any degree
+/// of sharing is byte-transparent: hit rates change, results never do.
+pub struct EvalCaches {
+    /// `pp → StagePlan`.
+    plans: MemoCache<u64, StagePlan>,
+    /// `(schedule, pp, m) → ScheduleProfile`.
+    profiles: MemoCache<(ScheduleSpec, u64, u64), ScheduleProfile>,
+    /// `parallel layout → per-stage ZeroReports` — the stage-invariant
+    /// static partitioning behind the incremental per-stage evaluation
+    /// (every `(b, AC, ZeRO, schedule)` point of a layout reuses it).
+    statics: MemoCache<ParallelConfig, Vec<ZeroReport>>,
+    /// `parallel layout → BoundTerms`: the pre-factored static partial terms
+    /// of the admissible lower bound ([`super::bound`]).
+    bounds: MemoCache<ParallelConfig, BoundTerms>,
+    /// `(layout, b, sp, s, cp) → ActivationFloor`: the full-recompute stage
+    /// tape floor (the recompute axis is deliberately *not* in the key — the
+    /// floor under-approximates every policy).
+    act_floors: MemoCache<(ParallelConfig, u64, u64, u64, u64), ActivationFloor>,
+}
+
+impl EvalCaches {
+    /// An empty tier at the standard capacities.
+    pub fn new() -> Self {
+        Self {
+            plans: MemoCache::new(STAGE_PLAN_CACHE_CAP),
+            profiles: MemoCache::new(SCHEDULE_PROFILE_CACHE_CAP),
+            statics: MemoCache::new(LAYOUT_STATICS_CACHE_CAP),
+            bounds: MemoCache::new(BOUND_TERMS_CACHE_CAP),
+            act_floors: MemoCache::new(ACT_FLOOR_CACHE_CAP),
+        }
+    }
+
+    /// Snapshot the hit/miss/eviction counters of every cache — lifetime
+    /// totals of the tier, across every evaluator and query that shared it.
+    pub fn stats(&self) -> EvalCacheStats {
+        EvalCacheStats {
+            stage_plans: self.plans.stats(),
+            schedule_profiles: self.profiles.stats(),
+            layout_statics: self.statics.stats(),
+            bound_terms: self.bounds.stats(),
+            activation_floors: self.act_floors.stats(),
+        }
+    }
+}
+
+impl Default for EvalCaches {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Memoized evaluator over one (model, dtypes, mode, split) quadruple.
 pub struct Evaluator<'a> {
     pub model: &'a ModelConfig,
@@ -311,25 +429,13 @@ pub struct Evaluator<'a> {
     /// Microbatches per step: sets both the bubble fraction and the
     /// schedule's in-flight activation counts (paper: 32).
     pub num_microbatches: u64,
-    /// `pp → StagePlan`, shared across all grid points and worker threads.
-    plans: MemoCache<u64, StagePlan>,
-    /// `(schedule, pp, m) → ScheduleProfile`, likewise shared.
-    profiles: MemoCache<(ScheduleSpec, u64, u64), ScheduleProfile>,
-    /// `parallel layout → per-stage ZeroReports`, likewise shared — the
-    /// stage-invariant static partitioning behind the incremental per-stage
-    /// evaluation (every `(b, AC, ZeRO, schedule)` point of a layout reuses
-    /// it).
-    statics: MemoCache<ParallelConfig, Vec<ZeroReport>>,
-    /// `parallel layout → BoundTerms`: the pre-factored static partial terms
-    /// of the admissible lower bound ([`super::bound`]), likewise shared.
-    bounds: MemoCache<ParallelConfig, BoundTerms>,
-    /// `(layout, b, sp, s, cp) → ActivationFloor`: the full-recompute stage
-    /// tape floor (the recompute axis is deliberately *not* in the key — the
-    /// floor under-approximates every policy).
-    act_floors: MemoCache<(ParallelConfig, u64, u64, u64, u64), ActivationFloor>,
+    /// The memo-cache tier, shared across all grid points — and, via
+    /// [`Self::with_caches`], across worker threads and queries.
+    caches: Arc<EvalCaches>,
 }
 
 impl<'a> Evaluator<'a> {
+    /// An evaluator with a private, freshly-cold cache tier.
     pub fn new(
         model: &'a ModelConfig,
         dtypes: DtypePolicy,
@@ -338,26 +444,39 @@ impl<'a> Evaluator<'a> {
         overheads: Overheads,
         num_microbatches: u64,
     ) -> Self {
-        Self {
+        Self::with_caches(
             model,
             dtypes,
             mode,
             split,
             overheads,
             num_microbatches,
-            plans: MemoCache::new(STAGE_PLAN_CACHE_CAP),
-            profiles: MemoCache::new(SCHEDULE_PROFILE_CACHE_CAP),
-            statics: MemoCache::new(LAYOUT_STATICS_CACHE_CAP),
-            bounds: MemoCache::new(BOUND_TERMS_CACHE_CAP),
-            act_floors: MemoCache::new(ACT_FLOOR_CACHE_CAP),
-        }
+            Arc::new(EvalCaches::new()),
+        )
+    }
+
+    /// [`Self::new`] backed by a shared cache tier. The tier must belong to
+    /// this exact `(model, dtypes, mode, split, overheads)` context — see
+    /// [`EvalCaches`] for why (`num_microbatches` may differ; it is part of
+    /// the schedule-profile key).
+    pub fn with_caches(
+        model: &'a ModelConfig,
+        dtypes: DtypePolicy,
+        mode: CountMode,
+        split: StageSplit,
+        overheads: Overheads,
+        num_microbatches: u64,
+        caches: Arc<EvalCaches>,
+    ) -> Self {
+        Self { model, dtypes, mode, split, overheads, num_microbatches, caches }
     }
 
     /// The memoized stage plan for a PP degree. The split must be valid for
     /// `(model.num_hidden_layers, pp)` — [`super::space::SearchSpace`] prunes
     /// candidates that are not.
     pub fn plan_for(&self, pp: u64) -> Arc<StagePlan> {
-        self.plans
+        self.caches
+            .plans
             .get_or_build(pp, || StagePlan::build(self.model, pp, self.split.clone(), self.mode))
     }
 
@@ -366,7 +485,7 @@ impl<'a> Evaluator<'a> {
     /// [`crate::planner::plan`] filters candidates that do not.
     pub fn schedule_profile(&self, spec: ScheduleSpec, pp: u64) -> Arc<ScheduleProfile> {
         let m = self.num_microbatches;
-        self.profiles.get_or_build((spec, pp, m), || {
+        self.caches.profiles.get_or_build((spec, pp, m), || {
             // Single source for the schedule-derived per-stage
             // quantities: the atlas's StageInflight (which validates the
             // shape — silently profiling one the schedule cannot run
@@ -390,7 +509,7 @@ impl<'a> Evaluator<'a> {
     /// layout must be valid for the evaluator's split —
     /// [`super::space::SearchSpace`] prunes candidates that are not.
     pub fn statics_for(&self, parallel: &ParallelConfig) -> Arc<Vec<ZeroReport>> {
-        self.statics.get_or_build(*parallel, || {
+        self.caches.statics.get_or_build(*parallel, || {
             let plan = self.plan_for(parallel.pp);
             (0..plan.stages.len())
                 .map(|s| {
@@ -411,7 +530,7 @@ impl<'a> Evaluator<'a> {
     /// of the admissible lower bound, factored from the layout's exact
     /// [`ZeroReport`]s ([`Self::statics_for`]).
     pub fn bound_terms(&self, parallel: &ParallelConfig) -> Arc<BoundTerms> {
-        self.bounds.get_or_build(*parallel, || {
+        self.caches.bounds.get_or_build(*parallel, || {
             BoundTerms::build(&self.statics_for(parallel), self.overheads)
         })
     }
@@ -425,7 +544,7 @@ impl<'a> Evaluator<'a> {
         act: &ActivationConfig,
     ) -> Arc<ActivationFloor> {
         let key = (*parallel, act.micro_batch, act.sp, act.seq_len, act.cp);
-        self.act_floors.get_or_build(key, || {
+        self.caches.act_floors.get_or_build(key, || {
             let plan = self.plan_for(parallel.pp);
             let mla = mla_tape(self.model, act).ledger(RecomputePolicy::Full);
             let moe = moe_tape(self.model, parallel, act).ledger(RecomputePolicy::Full);
@@ -456,15 +575,11 @@ impl<'a> Evaluator<'a> {
         bound::candidate_lower_bound(&terms, &floor, &prof, self.overheads, c.zero)
     }
 
-    /// Snapshot the hit/miss/eviction counters of every memo cache.
+    /// Snapshot the hit/miss/eviction counters of every memo cache — the
+    /// backing tier's lifetime totals (shared tiers include other
+    /// evaluators' traffic).
     pub fn cache_stats(&self) -> EvalCacheStats {
-        EvalCacheStats {
-            stage_plans: self.plans.stats(),
-            schedule_profiles: self.profiles.stats(),
-            layout_statics: self.statics.stats(),
-            bound_terms: self.bounds.stats(),
-            activation_floors: self.act_floors.stats(),
-        }
+        self.caches.stats()
     }
 
     /// Per-device activation bytes of the paper's archetype stage for one
@@ -850,10 +965,10 @@ mod tests {
 
     #[test]
     fn memo_cache_bounds_and_counts() {
-        // Cap 2, keys 0..5: every insert at len 2 clears first. Trace:
-        // insert 0 (len 0→1), 1 (1→2), 2 (clear 2, →1), 3 (1→2),
+        // One shard, cap 2, keys 0..5: every insert at len 2 clears first.
+        // Trace: insert 0 (len 0→1), 1 (1→2), 2 (clear 2, →1), 3 (1→2),
         // 4 (clear 2, →1) — 5 misses, 4 evicted entries, map = {4}.
-        let cache: MemoCache<u64, u64> = MemoCache::new(2);
+        let cache: MemoCache<u64, u64> = MemoCache::with_shards(1, 2);
         for k in 0..5u64 {
             assert_eq!(*cache.get_or_build(k, || k * 10), k * 10);
         }
@@ -864,6 +979,96 @@ mod tests {
         // Key 4 survived the last clear: a pure hit, builder untouched.
         assert_eq!(*cache.get_or_build(4, || unreachable!()), 40);
         assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn sharded_memo_cache_keeps_cap_entries_and_all_values() {
+        // With the default shard count and a capacity covering the key set,
+        // nothing evicts and every key stays a hit regardless of which shard
+        // it hashed to.
+        let cache: MemoCache<u64, u64> = MemoCache::new(64);
+        for k in 0..64u64 {
+            assert_eq!(*cache.get_or_build(k, || k + 1), k + 1);
+        }
+        for k in 0..64u64 {
+            assert_eq!(*cache.get_or_build(k, || unreachable!()), k + 1);
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 64);
+        assert_eq!(s.hits, 64);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn shared_tier_serves_both_evaluators_and_counts_deltas() {
+        // Two evaluators on one tier: what the first builds, the second
+        // gets as a pointer-equal hit; `since` attributes each phase.
+        let cs = CaseStudy::paper();
+        let tier = Arc::new(EvalCaches::new());
+        let mk = || {
+            Evaluator::with_caches(
+                &cs.model,
+                cs.dtypes,
+                CountMode::PaperCompat,
+                StageSplit::FrontLoaded,
+                Overheads::paper_midpoint(),
+                32,
+                tier.clone(),
+            )
+        };
+        let a = mk();
+        let plan_a = a.plan_for(16);
+        let statics_a = a.statics_for(&cs.parallel);
+        let before_b = tier.stats();
+        assert_eq!(before_b.stage_plans.misses, 1);
+        assert_eq!(before_b.layout_statics.misses, 1);
+        let b = mk();
+        let plan_b = b.plan_for(16);
+        let statics_b = b.statics_for(&cs.parallel);
+        assert!(Arc::ptr_eq(&plan_a, &plan_b));
+        assert!(Arc::ptr_eq(&statics_a, &statics_b));
+        let delta = tier.stats().since(&before_b);
+        assert_eq!(delta.stage_plans, CacheStats { hits: 1, misses: 0, evictions: 0 });
+        assert_eq!(delta.layout_statics, CacheStats { hits: 1, misses: 0, evictions: 0 });
+        // Both evaluators report the same tier-lifetime totals.
+        assert_eq!(a.cache_stats(), b.cache_stats());
+    }
+
+    #[test]
+    fn shared_tier_evaluation_is_byte_identical_to_private_tiers() {
+        // The byte-transparency contract of EvalCaches: a tier warmed by a
+        // previous evaluation stream yields bit-identical points.
+        let cs = CaseStudy::paper();
+        let tier = Arc::new(EvalCaches::new());
+        let warm = Evaluator::with_caches(
+            &cs.model,
+            cs.dtypes,
+            CountMode::PaperCompat,
+            StageSplit::FrontLoaded,
+            Overheads::paper_midpoint(),
+            32,
+            tier.clone(),
+        );
+        let cold = paper_eval(&cs);
+        let space = super::super::space::SearchSpace::for_world(1024);
+        let cands: Vec<Candidate> = space
+            .enumerate(&cs.model)
+            .into_iter()
+            .filter(|c| c.schedule.resolve().validate(c.parallel.pp, 32).is_ok())
+            .take(200)
+            .collect();
+        // First pass warms the tier; the second (all-hit) pass must agree
+        // with a cold private-tier evaluator point for point.
+        for c in &cands {
+            warm.evaluate(c);
+        }
+        let before = tier.stats();
+        for c in &cands {
+            assert_eq!(warm.evaluate(c), cold.evaluate(c));
+        }
+        let delta = tier.stats().since(&before);
+        assert_eq!(delta.layout_statics.misses, 0, "warm pass rebuilt statics");
+        assert!(delta.layout_statics.hits > 0);
     }
 
     #[test]

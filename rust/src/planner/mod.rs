@@ -19,7 +19,10 @@
 //!   [`PlanPoint`] records, with [`crate::analysis::StagePlan`]s memoized
 //!   per PP degree and schedule-derived in-flight/bubble profiles memoized
 //!   per `(schedule, pp, m)` (the sub-results shared by thousands of
-//!   points) — caches bounded and hit-rate-instrumented ([`CacheStats`]);
+//!   points) — caches bounded, hit-rate-instrumented ([`CacheStats`]) and
+//!   factored into a shareable [`EvalCaches`] tier: one query's workers
+//!   share a tier, and `dsmem serve` keeps tiers resident across queries
+//!   ([`plan_with_threads_shared`]);
 //! * [`pareto`] — feasibility filtering against an HBM budget, a Pareto
 //!   frontier over (peak memory, bubble fraction, per-device params) and
 //!   top-k ranking — both as an offline pipeline over a slice and as the
@@ -51,13 +54,14 @@ pub mod space;
 
 pub use bound::{ActivationFloor, BoundTerms};
 pub use eval::{
-    sweep_fixed, CacheStats, EvalCacheStats, EvalScratch, Evaluator, PlanPoint, ScheduleProfile,
+    sweep_fixed, CacheStats, EvalCacheStats, EvalCaches, EvalScratch, Evaluator, PlanPoint,
+    ScheduleProfile,
 };
 pub use pareto::{FoldCounters, FrontierFold};
 pub use space::{Candidate, Candidates, SearchSpace, SkippedSubtree};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::analysis::total::Overheads;
 use crate::config::{DtypePolicy, ModelConfig};
@@ -169,24 +173,49 @@ pub fn plan(model: &ModelConfig, dtypes: DtypePolicy, query: &PlanQuery) -> Plan
 
 /// [`plan`] with an explicit worker count (1 → fold inline on the caller's
 /// thread). Any count produces identical output; it only sets parallelism.
+/// Uses a fresh cache tier per call; a resident server amortizes tiers
+/// across calls via [`plan_with_threads_shared`].
 pub fn plan_with_threads(
     model: &ModelConfig,
     dtypes: DtypePolicy,
     query: &PlanQuery,
     threads: usize,
 ) -> PlanResult {
+    let caches = Arc::new(EvalCaches::new());
+    plan_with_threads_shared(model, dtypes, query, threads, &caches)
+}
+
+/// [`plan_with_threads`] against a caller-owned [`EvalCaches`] tier — the
+/// `dsmem serve` daemon's entry point, where the tier outlives the query and
+/// a warm repeated or near-neighbor query (same model, different budget or
+/// top-k) skips straight to the fold instead of rebuilding stage plans,
+/// tapes and ZeRO tables. The tier must belong to this query's evaluation
+/// context — `(model, dtypes, mode, split, overheads)` — see [`EvalCaches`].
+///
+/// Every worker shares the one tier (the caches are sharded internally, so
+/// they do not serialize the pool). Results are byte-identical to a
+/// fresh-tier run at any thread count and any pre-existing tier content;
+/// only [`PlanResult::cache_stats`] varies — it reports the tier delta over
+/// this call (approximate if concurrent queries share the tier; the tier's
+/// own [`EvalCaches::stats`] totals stay exact).
+pub fn plan_with_threads_shared(
+    model: &ModelConfig,
+    dtypes: DtypePolicy,
+    query: &PlanQuery,
+    threads: usize,
+    caches: &Arc<EvalCaches>,
+) -> PlanResult {
+    let stats_start = caches.stats();
     let regions = region_bounds(query.space.base_len(), threads);
     let mut fold = FrontierFold::new(query.hbm_bytes, query.top_k);
     let mut evaluated: Vec<PlanPoint> = Vec::new();
     let mut slot_resident = 0usize;
-    let cache_stats;
     if threads <= 1 || regions.len() <= 1 {
-        let ev = new_evaluator(model, dtypes, query);
+        let ev = new_evaluator(model, dtypes, query, caches.clone());
         let (part, kept) = fold_region(query, &ev, 0, query.space.base_len());
         slot_resident = part.resident_points();
         fold.merge(part);
         evaluated = kept;
-        cache_stats = ev.cache_stats();
     } else {
         // Workers pull regions off a shared cursor; each region's fold lands
         // in its slot so the merge below runs in region (= enumeration)
@@ -194,20 +223,19 @@ pub fn plan_with_threads(
         let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<(FrontierFold, Vec<PlanPoint>)>>> =
             regions.iter().map(|_| Mutex::new(None)).collect();
-        let stats = Mutex::new(EvalCacheStats::default());
         std::thread::scope(|s| {
             for _ in 0..threads.min(regions.len()) {
                 s.spawn(|| {
-                    // One evaluator per worker: caches stay hot across the
-                    // worker's regions and never contend with other workers.
-                    let ev = new_evaluator(model, dtypes, query);
+                    // Every worker shares the query's tier: what one worker
+                    // builds (a layout's statics, a schedule profile), the
+                    // others hit, and the shards keep the locks uncontended.
+                    let ev = new_evaluator(model, dtypes, query, caches.clone());
                     loop {
                         let r = next.fetch_add(1, Ordering::Relaxed);
                         let Some(&(lo, hi)) = regions.get(r) else { break };
                         let part = fold_region(query, &ev, lo, hi);
                         *slots[r].lock().unwrap() = Some(part);
                     }
-                    stats.lock().unwrap().add(&ev.cache_stats());
                 });
             }
         });
@@ -222,8 +250,8 @@ pub fn plan_with_threads(
             fold.merge(part);
             evaluated.extend(kept);
         }
-        cache_stats = stats.into_inner().unwrap();
     }
+    let cache_stats = caches.stats().since(&stats_start);
     let peak_resident_points = fold.peak_resident().max(slot_resident);
     let (frontier, ranked, counters) = fold.finish();
     PlanResult {
@@ -248,7 +276,7 @@ pub fn plan_with_threads(
 /// evaluated grid.
 pub fn plan_offline(model: &ModelConfig, dtypes: DtypePolicy, query: &PlanQuery) -> PlanResult {
     const CHUNK: usize = 4096;
-    let evaluator = new_evaluator(model, dtypes, query);
+    let evaluator = new_evaluator(model, dtypes, query, Arc::new(EvalCaches::new()));
     let mut evaluated = Vec::new();
     let mut pruned = 0u64;
     let mut buf: Vec<Candidate> = Vec::with_capacity(CHUNK);
@@ -414,14 +442,16 @@ fn new_evaluator<'a>(
     model: &'a ModelConfig,
     dtypes: DtypePolicy,
     query: &PlanQuery,
+    caches: Arc<EvalCaches>,
 ) -> Evaluator<'a> {
-    Evaluator::new(
+    Evaluator::with_caches(
         model,
         dtypes,
         query.mode,
         query.space.split.clone(),
         query.overheads,
         query.num_microbatches,
+        caches,
     )
 }
 
@@ -613,6 +643,43 @@ mod tests {
         let r80 = plan(&cs.model, cs.dtypes, &q80);
         let r40 = plan(&cs.model, cs.dtypes, &q40);
         assert!(r40.feasible_count <= r80.feasible_count);
+    }
+
+    #[test]
+    fn warm_shared_tier_replans_byte_identically_with_cache_hits() {
+        // The serve daemon's contract: planning the same (and a near-
+        // neighbor) query against a tier warmed by a previous call must be
+        // byte-identical to a cold fresh-tier plan, and the warm call's
+        // stats delta must be hit-dominated.
+        let cs = CaseStudy::paper();
+        let mut space = SearchSpace::for_world(1024);
+        space.pp = vec![16];
+        let q = PlanQuery::new(space, 80 * crate::GIB as u64);
+        let tier = Arc::new(EvalCaches::new());
+        let cold = plan_with_threads(&cs.model, cs.dtypes, &q, 2);
+        let first = plan_with_threads_shared(&cs.model, cs.dtypes, &q, 2, &tier);
+        let warm = plan_with_threads_shared(&cs.model, cs.dtypes, &q, 2, &tier);
+        assert_eq!(report::to_json(&first).dump(), report::to_json(&cold).dump());
+        assert_eq!(report::to_json(&warm).dump(), report::to_json(&cold).dump());
+        // Warm stats: the single stage plan (pp=16) must be a pure hit, and
+        // layout statics must be hit-dominated (misses only possible if a
+        // shard ever evicted, which this space does not approach).
+        assert_eq!(warm.cache_stats.stage_plans.misses, 0);
+        assert!(warm.cache_stats.stage_plans.hits > 0);
+        assert!(
+            warm.cache_stats.layout_statics.hits > warm.cache_stats.layout_statics.misses,
+            "warm re-plan rebuilt layout statics: {:?}",
+            warm.cache_stats.layout_statics
+        );
+        // A near-neighbor query (different budget + top-k) reuses the tier
+        // too and still matches its own cold run byte for byte.
+        let mut near = q.clone();
+        near.hbm_bytes = 64 * crate::GIB as u64;
+        near.top_k = 5;
+        let near_cold = plan_with_threads(&cs.model, cs.dtypes, &near, 2);
+        let near_warm = plan_with_threads_shared(&cs.model, cs.dtypes, &near, 2, &tier);
+        assert_eq!(report::to_json(&near_warm).dump(), report::to_json(&near_cold).dump());
+        assert_eq!(near_warm.cache_stats.stage_plans.misses, 0);
     }
 
     #[test]

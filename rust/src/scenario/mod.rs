@@ -26,7 +26,8 @@ pub mod runner;
 pub mod spec;
 
 pub use runner::{
-    bless, bless_requested, compare, has_goldens, line_diff, load_dir, run_all, run_dir,
-    run_scenario, Scenario, SnapshotStatus, SuiteOutcome, SuiteReport,
+    bless, bless_requested, compare, has_goldens, line_diff, load_dir, run_all,
+    run_all_with_threads, run_dir, run_scenario, run_scenario_cached, Scenario, SnapshotStatus,
+    SuiteOutcome, SuiteReport,
 };
 pub use spec::{Action, ScenarioSpec, TomlDoc, TomlValue};

@@ -10,9 +10,18 @@
 //! pin `run_scenario` output to byte-equality with direct entry-point calls.
 //!
 //! [`run_all`] executes a whole suite thread-parallel (results in input
-//! order regardless of thread count); [`compare`] / [`bless`] / [`line_diff`]
+//! order regardless of thread count; [`run_all_with_threads`] takes an
+//! explicit worker count); [`compare`] / [`bless`] / [`line_diff`]
 //! implement the golden-snapshot regression surface consumed by the `suite`
 //! CLI subcommand and the test harness.
+//!
+//! The suite doubles as the `dsmem serve` daemon's load generator: each
+//! [`Scenario`] keeps its raw TOML text, so `suite run --via-server ADDR`
+//! ([`crate::server::client::run_suite_via_server`]) can POST the exact
+//! document to the daemon and byte-compare the response against the same
+//! golden files; [`run_scenario_cached`] is the server-side twin of
+//! [`run_scenario`] that routes `plan` actions through a resident
+//! cross-query cache tier.
 //!
 //! `plan` scenarios run through the planner's streaming fold: the runner
 //! never asks for the evaluated vec (`keep_evaluated` stays off), so even a
@@ -24,7 +33,7 @@ use std::collections::BTreeSet;
 use std::fs;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::spec::{Action, ScenarioSpec};
 use crate::analysis::atlas::{ClusterMemoryAtlas, StageInflight};
@@ -34,7 +43,7 @@ use crate::analysis::zero::ZeroStrategy;
 use crate::analysis::MemoryModel;
 use crate::config::CaseStudy;
 use crate::ledger::ComponentGroup;
-use crate::planner::{self, PlanQuery, SearchSpace};
+use crate::planner::{self, EvalCaches, PlanQuery, SearchSpace};
 use crate::report::ledger::ledger_components_json;
 use crate::sim::{SimEngine, SimResult};
 use crate::util::Json;
@@ -45,6 +54,10 @@ pub struct Scenario {
     /// File name inside the suite directory (e.g. `paper-sweep-v3.toml`).
     pub file: String,
     pub spec: ScenarioSpec,
+    /// The raw TOML document — what `suite run --via-server` POSTs to the
+    /// daemon, so the server parses the identical bytes the local runner
+    /// did.
+    pub toml: String,
 }
 
 /// One executed scenario: its canonical snapshot, ready for golden compare.
@@ -83,7 +96,7 @@ pub fn load_dir(dir: &Path) -> anyhow::Result<Vec<Scenario>> {
         if !seen.insert(spec.name.clone()) {
             anyhow::bail!("duplicate scenario name {:?} (from {file})", spec.name);
         }
-        out.push(Scenario { file, spec });
+        out.push(Scenario { file, spec, toml: text });
     }
     if out.is_empty() {
         anyhow::bail!("no *.toml scenarios found in {}", dir.display());
@@ -125,6 +138,28 @@ pub fn run_scenario(spec: &ScenarioSpec) -> anyhow::Result<Json> {
         }
     };
     Ok(envelope(spec, result))
+}
+
+/// [`run_scenario`] routed through a shared evaluator cache tier — the
+/// `dsmem serve` execution path. `plan` actions go through
+/// [`planner::plan_with_threads_shared`] so repeated and near-neighbor
+/// queries reuse `caches`; every other action is stateless and delegates
+/// to [`run_scenario`] unchanged. The snapshot document is byte-identical
+/// to the uncached runner's at any thread count and any pre-existing tier
+/// content.
+pub fn run_scenario_cached(
+    spec: &ScenarioSpec,
+    caches: &Arc<EvalCaches>,
+    threads: usize,
+) -> anyhow::Result<Json> {
+    if let Action::Plan { .. } = &spec.action {
+        let cs = &spec.case;
+        let query = build_plan_query(spec)?;
+        let res = planner::plan_with_threads_shared(&cs.model, cs.dtypes, &query, threads, caches);
+        Ok(envelope(spec, planner::report::to_json(&res)))
+    } else {
+        run_scenario(spec)
+    }
 }
 
 /// Wrap an action result in the suite's snapshot envelope. `hbm_gib` only
@@ -305,12 +340,23 @@ pub fn kvcache_json(cs: &CaseStudy, tokens: u64, gqa_groups: u64) -> Json {
     Json::Obj(m)
 }
 
-/// Execute a suite thread-parallel. Outcomes come back in input order
-/// regardless of thread count; the first failing scenario aborts the run
-/// with its name attached.
+/// Execute a suite thread-parallel at the machine's parallelism. Outcomes
+/// come back in input order regardless of thread count; the first failing
+/// scenario aborts the run with its name attached.
 pub fn run_all(scenarios: &[Scenario]) -> anyhow::Result<Vec<SuiteOutcome>> {
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    run_all_with_threads(scenarios, threads)
+}
+
+/// [`run_all`] with an explicit worker count (the `suite run --threads N`
+/// knob). `threads` is clamped to at least 1 and at most the scenario
+/// count; results are byte-identical at any thread count.
+pub fn run_all_with_threads(
+    scenarios: &[Scenario],
+    threads: usize,
+) -> anyhow::Result<Vec<SuiteOutcome>> {
     let n = scenarios.len();
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).min(n.max(1));
+    let threads = threads.max(1).min(n.max(1));
     let next = AtomicUsize::new(0);
     let slots: Mutex<Vec<Option<anyhow::Result<SuiteOutcome>>>> =
         Mutex::new((0..n).map(|_| None).collect());

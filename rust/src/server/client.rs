@@ -1,0 +1,163 @@
+//! Client side of the daemon protocol: a keep-alive [`ServerClient`] and
+//! the suite load generator behind `suite run --via-server ADDR`.
+//!
+//! [`run_suite_via_server`] is the serving twin of
+//! [`crate::scenario::runner::run_all`]: it issues every scenario of a
+//! directory as concurrent HTTP requests (each worker thread drives its
+//! own kept-alive connection) and byte-compares the response bodies
+//! against the same golden snapshot files — the daemon answers with the
+//! exact bytes a local `suite run` would write, so one comparison covers
+//! both the library *and* the transport.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::http::read_response;
+use crate::scenario::runner::SuiteOutcome;
+use crate::scenario::{self, SuiteReport};
+use crate::util::Json;
+
+/// A keep-alive HTTP/1.1 connection to a `dsmem serve` daemon. Requests
+/// are serial per client; when the server dropped an idle pooled
+/// connection in the meantime, the client redials once transparently.
+pub struct ServerClient {
+    addr: String,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl ServerClient {
+    /// Connect eagerly — fails fast when nothing is listening at `addr`.
+    pub fn connect(addr: &str) -> anyhow::Result<Self> {
+        let conn = Self::dial(addr)?;
+        Ok(Self { addr: addr.to_string(), conn: Some(conn) })
+    }
+
+    fn dial(addr: &str) -> anyhow::Result<BufReader<TcpStream>> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("cannot connect to dsmem server at {addr}: {e}"))?;
+        Ok(BufReader::new(stream))
+    }
+
+    /// One request/response round trip: `(status, body)`. The endpoints
+    /// are pure, so the single reconnect retry can never double-apply
+    /// anything (at worst a request counter ticks twice).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> anyhow::Result<(u16, String)> {
+        if self.conn.is_some() {
+            if let Ok(out) = self.round_trip(method, path, body) {
+                return Ok(out);
+            }
+            self.conn = None;
+        }
+        self.conn = Some(Self::dial(&self.addr)?);
+        self.round_trip(method, path, body)
+    }
+
+    fn round_trip(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> anyhow::Result<(u16, String)> {
+        let reader = self.conn.as_mut().expect("connection pooled before round trip");
+        let stream = reader.get_mut();
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: dsmem\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len(),
+        )?;
+        stream.write_all(body.as_bytes())?;
+        stream.flush()?;
+        read_response(reader)
+    }
+
+    /// POST a scenario TOML document to its action endpoint and return
+    /// the snapshot body. Non-200 answers become errors carrying the
+    /// server's message.
+    pub fn post_scenario(
+        &mut self,
+        action: &str,
+        name: &str,
+        toml: &str,
+    ) -> anyhow::Result<String> {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(name.into()));
+        m.insert("scenario".into(), Json::Str(toml.into()));
+        let (status, body) = self.request("POST", &format!("/{action}"), &Json::Obj(m).dump())?;
+        if status != 200 {
+            anyhow::bail!("server answered {status} for scenario {name}: {}", body.trim());
+        }
+        Ok(body)
+    }
+}
+
+/// Drive every scenario in `dir` through a running daemon as concurrent
+/// HTTP requests and byte-compare the response bodies against the golden
+/// snapshots in `golden` — the server-side `suite run`. Strictly
+/// read-only: there is no remote blessing, so missing goldens are an
+/// error rather than a bootstrap.
+pub fn run_suite_via_server(
+    dir: &Path,
+    golden: &Path,
+    addr: &str,
+    threads: usize,
+) -> anyhow::Result<SuiteReport> {
+    let scenarios = scenario::load_dir(dir)?;
+    if !scenario::has_goldens(golden) {
+        anyhow::bail!(
+            "no golden snapshots under {} — `--via-server` only compares; run \
+             `dsmem suite run {}` locally and commit the goldens first",
+            golden.display(),
+            dir.display()
+        );
+    }
+    let n = scenarios.len();
+    let workers = threads.max(1).min(n.max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<anyhow::Result<SuiteOutcome>>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                // One kept-alive connection per worker; if the dial fails,
+                // every scenario this worker picks up reports that error.
+                let mut client = ServerClient::connect(addr);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let sc = &scenarios[i];
+                    let res = match &mut client {
+                        Ok(c) => c
+                            .post_scenario(sc.spec.action.name(), &sc.spec.name, &sc.toml)
+                            .map(|snapshot| SuiteOutcome {
+                                name: sc.spec.name.clone(),
+                                file: sc.file.clone(),
+                                action: sc.spec.action.name(),
+                                snapshot,
+                            }),
+                        Err(e) => Err(anyhow::anyhow!("{e}")),
+                    };
+                    slots.lock().expect("suite client poisoned")[i] = Some(res);
+                }
+            });
+        }
+    });
+    let slots = slots.into_inner().expect("suite clients poisoned");
+    let mut outcomes = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        let res = slot.expect("every slot filled");
+        let name = &scenarios[i].spec.name;
+        outcomes.push(res.map_err(|e| anyhow::anyhow!("scenario {name}: {e}"))?);
+    }
+    scenario::compare(golden, &outcomes)
+}

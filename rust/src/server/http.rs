@@ -1,0 +1,239 @@
+//! Minimal HTTP/1.1 framing for the query daemon — hand-rolled on
+//! `std::io` so the offline build stays dependency-free. Just enough
+//! protocol for [`super`] and its load-generating client: request-line +
+//! headers + `Content-Length` bodies in, status + JSON bodies out,
+//! per-connection keep-alive. Deliberately *not* a general web server:
+//! no chunked transfer (rejected with a readable 400), no TLS, no
+//! pipelining beyond serial requests on one kept-alive connection.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Read, Write};
+
+use crate::util::Json;
+
+/// Cap on request-line + header bytes (431 beyond it).
+const MAX_HEAD_BYTES: usize = 64 * 1024;
+
+/// Cap on the declared body size (413 beyond it). Scenario TOMLs are a
+/// few KiB; 8 MiB leaves headroom for generated suites without letting
+/// one connection balloon the process.
+const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// One parsed request. Header names are lower-cased at parse time.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: String,
+    /// Whether the client asked to keep the connection open (the HTTP/1.1
+    /// default; `Connection: close` opts out).
+    pub keep_alive: bool,
+}
+
+/// What reading one request off a connection produced.
+pub enum ReadOutcome {
+    Request(Request),
+    /// Clean EOF before a request line — the client hung up.
+    Closed,
+    /// Unparseable or over-limit input: answer with this response and
+    /// drop the connection (framing can no longer be trusted).
+    Bad(Response),
+}
+
+/// Read one request off `reader`. IO errors (reset, timeout) bubble up as
+/// `Err` — the caller treats them like a hangup.
+pub fn read_request(reader: &mut impl BufRead) -> std::io::Result<ReadOutcome> {
+    let mut head_bytes = 0usize;
+    let Some(line) = read_line(reader, &mut head_bytes)? else {
+        return Ok(ReadOutcome::Closed);
+    };
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(path), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return Ok(ReadOutcome::Bad(Response::error(
+            400,
+            &format!("malformed request line: {line:?}"),
+        )));
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Ok(ReadOutcome::Bad(Response::error(
+            400,
+            &format!("unsupported protocol version {version:?} (this server speaks HTTP/1.1)"),
+        )));
+    }
+    let method = method.to_string();
+    let path = path.to_string();
+    let http11 = version == "HTTP/1.1";
+    let mut headers = BTreeMap::new();
+    loop {
+        let Some(line) = read_line(reader, &mut head_bytes)? else {
+            return Ok(ReadOutcome::Closed);
+        };
+        if head_bytes > MAX_HEAD_BYTES {
+            return Ok(ReadOutcome::Bad(Response::error(
+                431,
+                "request headers exceed 64 KiB",
+            )));
+        }
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Ok(ReadOutcome::Bad(Response::error(
+                400,
+                &format!("malformed header line: {line:?}"),
+            )));
+        };
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    }
+    if headers.contains_key("transfer-encoding") {
+        return Ok(ReadOutcome::Bad(Response::error(
+            400,
+            "chunked transfer encoding is not supported — send a Content-Length body",
+        )));
+    }
+    let len = match headers.get("content-length") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                return Ok(ReadOutcome::Bad(Response::error(
+                    400,
+                    &format!("unparseable Content-Length {v:?}"),
+                )));
+            }
+        },
+        None => 0,
+    };
+    if len > MAX_BODY_BYTES {
+        return Ok(ReadOutcome::Bad(Response::error(
+            413,
+            "request body exceeds 8 MiB",
+        )));
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    let Ok(body) = String::from_utf8(body) else {
+        return Ok(ReadOutcome::Bad(Response::error(
+            400,
+            "request body is not valid UTF-8",
+        )));
+    };
+    let keep_alive = match headers.get("connection").map(|c| c.to_ascii_lowercase()) {
+        Some(c) if c == "close" => false,
+        Some(c) if c == "keep-alive" => true,
+        _ => http11,
+    };
+    Ok(ReadOutcome::Request(Request { method, path, headers, body, keep_alive }))
+}
+
+/// Read one response off a client connection: `(status, body)`.
+pub fn read_response(reader: &mut impl BufRead) -> anyhow::Result<(u16, String)> {
+    let mut head_bytes = 0usize;
+    let Some(line) = read_line(reader, &mut head_bytes)? else {
+        anyhow::bail!("connection closed before a response arrived");
+    };
+    let mut parts = line.split_whitespace();
+    let status: u16 = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/") => code
+            .parse()
+            .map_err(|_| anyhow::anyhow!("unparseable status code in {line:?}"))?,
+        _ => anyhow::bail!("malformed status line: {line:?}"),
+    };
+    let mut len = 0usize;
+    loop {
+        let Some(line) = read_line(reader, &mut head_bytes)? else {
+            anyhow::bail!("connection closed mid-headers");
+        };
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                len = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("unparseable Content-Length {value:?}"))?;
+            }
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8(body)
+        .map_err(|_| anyhow::anyhow!("response body is not valid UTF-8"))?;
+    Ok((status, body))
+}
+
+/// One CRLF- (or bare-LF-) terminated line, `None` on clean EOF. Raw byte
+/// count accumulates into `used` so callers can enforce the head cap.
+/// Lossy on non-UTF-8 — header bytes we act on are ASCII.
+fn read_line(reader: &mut impl BufRead, used: &mut usize) -> std::io::Result<Option<String>> {
+    let mut buf = Vec::new();
+    let n = reader.read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    *used += n;
+    if buf.last() == Some(&b'\n') {
+        buf.pop();
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    Ok(Some(String::from_utf8_lossy(&buf).into_owned()))
+}
+
+/// One response: a status code plus a JSON body. [`Response::write`] adds
+/// the framing headers.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    /// The body — always JSON. Success bodies are pretty-printed and
+    /// newline-terminated (scenario endpoints answer with the exact
+    /// golden-snapshot bytes); errors are compact one-liners.
+    pub body: String,
+}
+
+impl Response {
+    /// 200 whose body is the canonical snapshot encoding of `json` —
+    /// pretty-printed, newline-terminated, byte-identical to what the
+    /// local suite runner writes as a golden file.
+    pub fn ok(json: &Json) -> Self {
+        Self { status: 200, body: format!("{}\n", json.pretty()) }
+    }
+
+    /// An error response wrapping a readable message as `{"error": msg}`.
+    pub fn error(status: u16, msg: &str) -> Self {
+        let mut m = BTreeMap::new();
+        m.insert("error".into(), Json::Str(msg.into()));
+        Self { status, body: format!("{}\n", Json::Obj(m).dump()) }
+    }
+
+    fn reason(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            413 => "Payload Too Large",
+            431 => "Request Header Fields Too Large",
+            500 => "Internal Server Error",
+            _ => "Error",
+        }
+    }
+
+    /// Serialize onto `out` with framing headers; `keep_alive` picks the
+    /// advertised `Connection` disposition.
+    pub fn write(&self, out: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        let conn = if keep_alive { "keep-alive" } else { "close" };
+        write!(
+            out,
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
+            self.status,
+            Self::reason(self.status),
+            self.body.len(),
+        )?;
+        out.write_all(self.body.as_bytes())?;
+        out.flush()
+    }
+}

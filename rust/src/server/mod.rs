@@ -1,0 +1,160 @@
+//! `dsmem serve` — a resident query daemon over the analysis library.
+//!
+//! A one-shot CLI invocation re-parses configs, rebuilds every memo cache
+//! from cold, answers one query and exits — fast per call, but nothing is
+//! amortized across calls. The paper's memory model is a pure function of
+//! `(model, parallel, schedule, ZeRO, recompute)`, which makes it ideal
+//! for cross-query caching: this module keeps the process alive and lifts
+//! the evaluator's five bounded memo caches into process-wide
+//! [`crate::planner::EvalCaches`] tiers (one per evaluator context, see
+//! [`service`]), so a repeated or near-neighbor query — same model,
+//! different budget or top-k — skips straight to the streaming fold
+//! instead of rebuilding activation tapes and ZeRO tables.
+//!
+//! The protocol is hand-rolled HTTP/1.1 + JSON over
+//! [`std::net::TcpListener`] ([`http`]) — no new dependencies, the
+//! offline build stays self-contained. Endpoints and body shapes are
+//! documented on [`service::ServerState::handle`]; the load-generating
+//! client and `suite run --via-server` live in [`client`].
+//!
+//! ## Lifecycle
+//!
+//! [`start`] binds the address and spawns `threads` workers, each running
+//! an accept loop; it returns a [`ServerHandle`] once the socket is
+//! listening, so queries can be issued immediately. [`ServerHandle::join`]
+//! parks until the pool drains; [`serve`] is start-then-join (the CLI
+//! path). Shutdown cascades without polling: the worker that serves
+//! `POST /shutdown` sets the shared flag, and every exiting worker wakes
+//! one blocked sibling with a throwaway connection to its own listener.
+//!
+//! Caveat: a client that parks an *idle* keep-alive connection pins its
+//! worker in a blocking read until the client closes — drop clients
+//! before driving shutdown (the bench, tests and CI smoke job all do).
+
+pub mod client;
+pub mod http;
+pub mod service;
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+pub use client::{run_suite_via_server, ServerClient};
+pub use service::ServerState;
+
+use http::{read_request, ReadOutcome, Response};
+
+/// Where and how wide to serve.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// `HOST:PORT` to bind (`127.0.0.1:0` for an ephemeral test port).
+    pub addr: String,
+    /// Worker threads: the number of connections served concurrently,
+    /// and the planner's worker count inside each query.
+    pub threads: usize,
+}
+
+/// A running daemon: the bound address plus its worker pool.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound socket address (resolves a `:0` bind to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared routing state (stats, shutdown flag).
+    pub fn state(&self) -> &Arc<ServerState> {
+        &self.state
+    }
+
+    /// Park until every worker exits — i.e. until a client POSTs
+    /// `/shutdown` (or [`Self::shutdown`] is called from another thread).
+    pub fn join(self) {
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+
+    /// Programmatic shutdown: set the flag, wake the pool, drain it.
+    pub fn shutdown(self) {
+        self.state.request_shutdown();
+        let _ = TcpStream::connect(self.addr);
+        self.join();
+    }
+}
+
+/// Bind `cfg.addr` and spawn the worker pool.
+pub fn start(cfg: &ServerConfig) -> anyhow::Result<ServerHandle> {
+    let threads = cfg.threads.max(1);
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| anyhow::anyhow!("cannot bind {}: {e}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let listener = Arc::new(listener);
+    let state = Arc::new(ServerState::new(threads));
+    let workers = (0..threads)
+        .map(|_| {
+            let listener = listener.clone();
+            let state = state.clone();
+            std::thread::spawn(move || worker_loop(&listener, addr, &state))
+        })
+        .collect();
+    Ok(ServerHandle { addr, state, workers })
+}
+
+/// [`start`] + [`ServerHandle::join`]: serve until shut down.
+pub fn serve(cfg: &ServerConfig) -> anyhow::Result<()> {
+    start(cfg)?.join();
+    Ok(())
+}
+
+/// One worker's accept loop. On shutdown each exiting worker wakes one
+/// blocked sibling with a throwaway connection, so the whole pool drains
+/// without a poll interval.
+fn worker_loop(listener: &TcpListener, addr: SocketAddr, state: &ServerState) {
+    loop {
+        if state.shutdown_requested() {
+            let _ = TcpStream::connect(addr);
+            return;
+        }
+        // Transient accept errors (aborted handshakes, fd pressure) keep
+        // the worker alive rather than shrinking the pool.
+        if let Ok((stream, _peer)) = listener.accept() {
+            serve_connection(stream, state);
+        }
+    }
+}
+
+/// Serial keep-alive loop over one connection. A handler panic is
+/// answered with a 500 and the connection dropped — one poisoned request
+/// cannot take the daemon down.
+fn serve_connection(stream: TcpStream, state: &ServerState) {
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_request(&mut reader) {
+            Err(_) | Ok(ReadOutcome::Closed) => return,
+            Ok(ReadOutcome::Bad(resp)) => {
+                let _ = resp.write(reader.get_mut(), false);
+                return;
+            }
+            Ok(ReadOutcome::Request(req)) => {
+                let resp = catch_unwind(AssertUnwindSafe(|| state.handle(&req)))
+                    .unwrap_or_else(|_| {
+                        Response::error(500, "internal error: request handler panicked")
+                    });
+                // Stop honoring keep-alive once shutdown is in flight so
+                // draining connections release their workers.
+                let keep = req.keep_alive && !state.shutdown_requested();
+                if resp.write(reader.get_mut(), keep).is_err() || !keep {
+                    return;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! Request routing and shared state for the query daemon.
+//!
+//! [`ServerState`] is everything the worker pool shares: the
+//! [`EvalCaches`] context registry (the cross-query memoization tier),
+//! per-endpoint request counters, and the shutdown flag.
+//! [`ServerState::handle`] is a pure `Request → Response` function — all
+//! transport concerns (keep-alive, write errors, panic recovery) live in
+//! [`super`].
+//!
+//! ## Endpoints
+//!
+//! | route | body | answer |
+//! |---|---|---|
+//! | `POST /plan` `/sweep` `/simulate` `/kvcache` `/atlas` | `{"scenario": "<toml>", "name"?}` | the scenario's snapshot document, byte-identical to a local `suite run` golden |
+//! | `POST /report` | ledger knobs (all optional) | the `report --json` ledger/atlas document |
+//! | `POST /suite` | `{"dir"?}` | read-only golden comparison of an on-disk suite |
+//! | `POST /shutdown` | — | acks, then drains the worker pool |
+//! | `GET /healthz` | — | `{"ok": true}` |
+//! | `GET /stats` | — | contexts, aggregated cache counters, request counts |
+//!
+//! Scenario bodies reuse the suite's TOML dialect verbatim
+//! ([`ScenarioSpec::from_toml`]) so the daemon can never fork into a
+//! second query-assembly path — the load generator POSTs the exact bytes
+//! of each committed scenario file and byte-compares the answer.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::http::{Request, Response};
+use crate::analysis::{MemoryModel, Overheads, StageInflight, ZeroStrategy};
+use crate::config::{CaseStudy, RecomputePolicy};
+use crate::planner::{report::cache_stats_json, EvalCacheStats, EvalCaches};
+use crate::scenario::runner::{self, run_scenario_cached};
+use crate::scenario::{self, Action, ScenarioSpec};
+use crate::schedule::ScheduleSpec;
+use crate::util::Json;
+
+/// Scenario actions with a POST endpoint of the same name.
+const SCENARIO_ACTIONS: [&str; 5] = ["plan", "sweep", "simulate", "kvcache", "atlas"];
+
+/// Cap on distinct evaluator contexts kept warm. Each context owns five
+/// bounded memo caches; 64 contexts bounds resident memory while covering
+/// a model-preset × mode × split × overhead matrix many times over. At
+/// the cap the registry clears wholesale — the same policy as the memo
+/// shards themselves (entries are pure functions of their key, so
+/// dropping them only costs recomputation, never correctness).
+const MAX_CONTEXTS: usize = 64;
+
+/// Shared state of one running daemon.
+pub struct ServerState {
+    /// Cache tiers keyed by context fingerprint — the quintuple the memo
+    /// keys do **not** encode (model, dtypes, count mode, stage split,
+    /// overheads; see [`EvalCaches`]). Sharing a tier across differing
+    /// contexts would alias entries; sharing within one context is the
+    /// whole point of the daemon.
+    contexts: Mutex<HashMap<String, Arc<EvalCaches>>>,
+    /// Per-endpoint request counters, served at `GET /stats`.
+    requests: Mutex<BTreeMap<String, u64>>,
+    shutdown: AtomicBool,
+    /// Planner worker threads per query (the daemon's `--threads`).
+    threads: usize,
+}
+
+impl ServerState {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            contexts: Mutex::new(HashMap::new()),
+            requests: Mutex::new(BTreeMap::new()),
+            shutdown: AtomicBool::new(false),
+            threads: threads.max(1),
+        }
+    }
+
+    /// Whether a shutdown has been requested (workers poll this between
+    /// connections; `super::serve_connection` stops honoring keep-alive).
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Flip the shutdown flag (the `POST /shutdown` handler, and
+    /// [`super::ServerHandle::shutdown`]).
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// The cache tier for this scenario's evaluator context, creating it
+    /// on first sight. Non-`plan` actions get a throwaway tier — they
+    /// never touch an [`crate::planner::Evaluator`].
+    fn tier_for(&self, spec: &ScenarioSpec) -> anyhow::Result<Arc<EvalCaches>> {
+        if !matches!(spec.action, Action::Plan { .. }) {
+            return Ok(Arc::new(EvalCaches::new()));
+        }
+        // The fingerprint is the Debug rendering of the context quintuple:
+        // every field is plain data with derived Debug, and f64's Debug is
+        // shortest-roundtrip, so equal contexts — and only equal contexts —
+        // collide.
+        let query = runner::build_plan_query(spec)?;
+        let key = format!(
+            "{:?}|{:?}|{:?}|{:?}|{:?}",
+            spec.case.model, spec.case.dtypes, query.mode, query.space.split, query.overheads
+        );
+        let mut map = self.contexts.lock().expect("context registry poisoned");
+        if !map.contains_key(&key) && map.len() >= MAX_CONTEXTS {
+            map.clear();
+        }
+        Ok(map.entry(key).or_default().clone())
+    }
+
+    fn count(&self, path: &str) {
+        let mut m = self.requests.lock().expect("request counters poisoned");
+        *m.entry(path.to_string()).or_insert(0) += 1;
+    }
+
+    /// Route one request to its handler. Handler errors become readable
+    /// 400s — every computation here is a deterministic function of the
+    /// request body, so a failure means the body asked for something the
+    /// library rejects.
+    pub fn handle(&self, req: &Request) -> Response {
+        let trimmed = req.path.trim_end_matches('/');
+        let path = if trimmed.is_empty() { "/" } else { trimmed };
+        let action = path.strip_prefix('/').filter(|a| SCENARIO_ACTIONS.contains(a));
+        let known_post = action.is_some() || matches!(path, "/report" | "/suite" | "/shutdown");
+        let known_get = matches!(path, "/healthz" | "/stats");
+        match req.method.as_str() {
+            "GET" if known_get => {
+                self.count(path);
+                match path {
+                    "/healthz" => {
+                        let mut m = BTreeMap::new();
+                        m.insert("ok".into(), Json::Bool(true));
+                        Response::ok(&Json::Obj(m))
+                    }
+                    _ => self.stats_response(),
+                }
+            }
+            "POST" if known_post => {
+                self.count(path);
+                let out = match path {
+                    "/shutdown" => {
+                        self.request_shutdown();
+                        let mut m = BTreeMap::new();
+                        m.insert("ok".into(), Json::Bool(true));
+                        m.insert("shutting_down".into(), Json::Bool(true));
+                        Ok(Response::ok(&Json::Obj(m)))
+                    }
+                    "/report" => self.report_endpoint(&req.body),
+                    "/suite" => self.suite_endpoint(&req.body),
+                    _ => self.scenario_endpoint(action.expect("scenario route"), &req.body),
+                };
+                out.unwrap_or_else(|e| Response::error(400, &e.to_string()))
+            }
+            _ if known_get || known_post => Response::error(
+                405,
+                &format!("{path} does not accept {}", req.method),
+            ),
+            _ => Response::error(
+                404,
+                &format!(
+                    "unknown endpoint {path:?} — serving POST /plan /sweep /simulate /kvcache \
+                     /atlas /report /suite /shutdown and GET /healthz /stats"
+                ),
+            ),
+        }
+    }
+
+    /// `POST /plan` (and friends): body `{"scenario": "<toml>", "name"?}`.
+    /// The TOML document is the exact dialect the suite directory holds;
+    /// the response body is the snapshot the local runner would write —
+    /// pretty JSON, newline-terminated — so clients can byte-compare it
+    /// against golden files.
+    fn scenario_endpoint(&self, endpoint: &str, body: &str) -> anyhow::Result<Response> {
+        let doc = Json::parse(body)
+            .map_err(|e| anyhow::anyhow!("request body is not valid JSON: {e}"))?;
+        let toml = doc.get("scenario")?.as_str()?;
+        let default_name = match doc.opt("name") {
+            Some(n) => n.as_str()?.to_string(),
+            None => format!("http-{endpoint}"),
+        };
+        let spec = ScenarioSpec::from_toml(toml, &default_name)
+            .map_err(|e| anyhow::anyhow!("scenario does not parse: {e}"))?;
+        if spec.action.name() != endpoint {
+            anyhow::bail!(
+                "scenario action is {:?} but was POSTed to /{endpoint} — POST it to /{}",
+                spec.action.name(),
+                spec.action.name()
+            );
+        }
+        let tier = self.tier_for(&spec)?;
+        let json = run_scenario_cached(&spec, &tier, self.threads)?;
+        Ok(Response::ok(&json))
+    }
+
+    /// `POST /report` — the `report --json` CLI surface as JSON knobs
+    /// (all optional, CLI defaults): `model`, `micro_batch`, `recompute`,
+    /// `zero`, `overheads` (bool, default true), `hbm_gib`, `per_stage`
+    /// (bool), `schedule`, `microbatches`. Answers with the same
+    /// ledger/atlas document the CLI prints.
+    fn report_endpoint(&self, body: &str) -> anyhow::Result<Response> {
+        let doc = parse_body_obj(body)?;
+        let model = match doc.opt("model") {
+            Some(v) => v.as_str()?.to_string(),
+            None => "deepseek-v3".into(),
+        };
+        let cs = CaseStudy::preset(&model)?;
+        let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+        let recompute = match doc.opt("recompute") {
+            Some(v) => RecomputePolicy::parse(v.as_str()?)?,
+            None => RecomputePolicy::None,
+        };
+        let act = crate::config::ActivationConfig {
+            micro_batch: match doc.opt("micro_batch") {
+                Some(v) => v.as_u64()?,
+                None => 1,
+            },
+            recompute,
+            ..cs.activation
+        };
+        let zero = match doc.opt("zero") {
+            Some(v) => ZeroStrategy::parse(v.as_str()?)?,
+            None => ZeroStrategy::parse("none")?,
+        };
+        let overheads = match doc.opt("overheads") {
+            Some(v) if !v.as_bool()? => Overheads::none(),
+            _ => Overheads::paper_midpoint(),
+        };
+        let hbm_gib = match doc.opt("hbm_gib") {
+            Some(v) => v.as_f64()?,
+            None => 80.0,
+        };
+        let hbm_bytes = (hbm_gib * crate::GIB) as u64;
+        let per_stage = match doc.opt("per_stage") {
+            Some(v) => v.as_bool()?,
+            None => false,
+        };
+        let json = if per_stage {
+            let inflight = match doc.opt("schedule") {
+                Some(v) => StageInflight::for_schedule(
+                    ScheduleSpec::parse(v.as_str()?)?,
+                    cs.parallel.pp,
+                    match doc.opt("microbatches") {
+                        Some(m) => m.as_u64()?,
+                        None => 32,
+                    },
+                )?,
+                None => StageInflight::per_microbatch(cs.parallel.pp),
+            };
+            runner::atlas_json(&mm.memory_atlas(&act, zero, overheads, &inflight)?, hbm_bytes)
+        } else {
+            crate::report::ledger_json(&mm.device_memory(&act, zero, overheads).ledger)
+        };
+        Ok(Response::ok(&json))
+    }
+
+    /// `POST /suite` — `{"dir"?}` (default `scenarios`): run the on-disk
+    /// suite inside the daemon and compare against its golden directory.
+    /// Strictly read-only — there is no remote blessing; plan scenarios
+    /// run uncached so the self-check exercises the same cold path a
+    /// local `suite run` does.
+    fn suite_endpoint(&self, body: &str) -> anyhow::Result<Response> {
+        let doc = parse_body_obj(body)?;
+        let dir = PathBuf::from(match doc.opt("dir") {
+            Some(v) => v.as_str()?.to_string(),
+            None => "scenarios".to_string(),
+        });
+        let golden = dir.join("golden");
+        if !scenario::has_goldens(&golden) {
+            anyhow::bail!(
+                "no golden snapshots under {} — the suite endpoint only compares; \
+                 run `dsmem suite run` locally and commit the goldens first",
+                golden.display()
+            );
+        }
+        let outcomes = runner::run_all_with_threads(&scenario::load_dir(&dir)?, self.threads)?;
+        let report = scenario::compare(&golden, &outcomes)?;
+        let mut entries = BTreeMap::new();
+        for (name, status) in &report.entries {
+            entries.insert(name.clone(), Json::Str(status.label().to_string()));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("entries".into(), Json::Obj(entries));
+        m.insert("ok".into(), Json::Bool(report.is_clean()));
+        m.insert("summary".into(), Json::Str(report.summary()));
+        Ok(Response::ok(&Json::Obj(m)))
+    }
+
+    /// `GET /stats`: context-registry size, cache counters aggregated
+    /// over every context tier, the aggregate hit rate across all five
+    /// caches, and per-endpoint request counts.
+    fn stats_response(&self) -> Response {
+        let (n_contexts, agg) = {
+            let contexts = self.contexts.lock().expect("context registry poisoned");
+            let mut agg = EvalCacheStats::default();
+            for tier in contexts.values() {
+                agg.add(&tier.stats());
+            }
+            (contexts.len(), agg)
+        };
+        let caches = [
+            &agg.stage_plans,
+            &agg.schedule_profiles,
+            &agg.layout_statics,
+            &agg.bound_terms,
+            &agg.activation_floors,
+        ];
+        let hits: u64 = caches.iter().map(|c| c.hits).sum();
+        let lookups: u64 = caches.iter().map(|c| c.lookups()).sum();
+        let hit_rate = if lookups == 0 { 0.0 } else { hits as f64 / lookups as f64 };
+        let requests = {
+            let counts = self.requests.lock().expect("request counters poisoned");
+            let mut obj = BTreeMap::new();
+            for (k, v) in counts.iter() {
+                obj.insert(k.clone(), Json::Num(*v as f64));
+            }
+            obj
+        };
+        let mut m = BTreeMap::new();
+        m.insert("caches".into(), cache_stats_json(&agg));
+        m.insert("contexts".into(), Json::Num(n_contexts as f64));
+        m.insert("hit_rate".into(), Json::Num(hit_rate));
+        m.insert("requests".into(), Json::Obj(requests));
+        m.insert("threads".into(), Json::Num(self.threads as f64));
+        Response::ok(&Json::Obj(m))
+    }
+}
+
+/// Parse an optionally-empty request body as a JSON object (an empty body
+/// reads as `{}` so knob-style endpoints accept a bare POST).
+fn parse_body_obj(body: &str) -> anyhow::Result<Json> {
+    if body.trim().is_empty() {
+        return Ok(Json::Obj(BTreeMap::new()));
+    }
+    Json::parse(body).map_err(|e| anyhow::anyhow!("request body is not valid JSON: {e}"))
+}

@@ -1,0 +1,210 @@
+//! Serving-equivalence tests for `dsmem serve`: every served response
+//! must be byte-identical to the direct entry-point snapshot, the shared
+//! cache tier must actually share (nonzero hits at `GET /stats`),
+//! concurrent mixed queries must never interleave or corrupt responses,
+//! and protocol errors must come back as readable 4xx JSON.
+
+use dsmem::scenario::{self, ScenarioSpec};
+use dsmem::server::{run_suite_via_server, start, ServerClient, ServerConfig, ServerHandle};
+use dsmem::util::{Json, Rng64};
+use std::path::{Path, PathBuf};
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+fn boot(threads: usize) -> ServerHandle {
+    start(&ServerConfig { addr: "127.0.0.1:0".into(), threads }).expect("test server boots")
+}
+
+fn client_of(handle: &ServerHandle) -> ServerClient {
+    ServerClient::connect(&handle.addr().to_string()).expect("test client connects")
+}
+
+/// The canonical snapshot bytes the local runner would write for `spec`.
+fn direct_snapshot(spec: &ScenarioSpec) -> String {
+    format!("{}\n", scenario::run_scenario(spec).expect("direct run succeeds").pretty())
+}
+
+/// Every cheap committed plan/atlas/kvcache scenario, served over HTTP,
+/// answers with exactly the bytes the in-process runner produces.
+#[test]
+fn served_scenarios_match_direct_entry_points() {
+    let handle = boot(2);
+    let mut client = client_of(&handle);
+    let mut checked = 0;
+    for sc in scenario::load_dir(&scenarios_dir()).expect("suite loads") {
+        if !matches!(sc.spec.action.name(), "plan" | "atlas" | "kvcache")
+            || sc.file.contains("stress")
+        {
+            continue;
+        }
+        let direct = direct_snapshot(&sc.spec);
+        let served = client
+            .post_scenario(sc.spec.action.name(), &sc.spec.name, &sc.toml)
+            .expect("served scenario answers");
+        assert_eq!(served, direct, "served {} diverges from the direct snapshot", sc.spec.name);
+        checked += 1;
+    }
+    assert!(checked >= 6, "expected at least 6 cheap scenarios to compare, got {checked}");
+    drop(client);
+    handle.shutdown();
+}
+
+/// Repeating an identical query serves identical bytes and leaves
+/// nonzero shared-cache hits visible at `GET /stats`.
+#[test]
+fn repeated_queries_report_shared_cache_hits() {
+    let handle = boot(2);
+    let mut client = client_of(&handle);
+    let toml = "model = \"v3\"\naction = \"plan\"\nhbm_gib = 80\n\n\
+                [plan]\nworld = 1024\nmicrobatches = 32\npp = [16]\n";
+    let first = client.post_scenario("plan", "hot", toml).expect("first query answers");
+    let second = client.post_scenario("plan", "hot", toml).expect("second query answers");
+    assert_eq!(first, second, "a repeated identical query must serve identical bytes");
+    let (status, body) = client.request("GET", "/stats", "").expect("stats answers");
+    assert_eq!(status, 200);
+    let stats = Json::parse(&body).expect("stats is JSON");
+    let hit_rate = stats.get("hit_rate").and_then(|v| v.as_f64()).expect("aggregate hit_rate");
+    assert!(hit_rate > 0.0, "identical repeated queries must hit the shared tier: {body}");
+    let plan_hits = stats
+        .get("caches")
+        .and_then(|c| c.get("stage_plans"))
+        .and_then(|c| c.get("hits"))
+        .and_then(|v| v.as_f64())
+        .expect("stage_plans hits");
+    assert!(plan_hits > 0.0, "the stage-plan cache must be shared across queries: {body}");
+    drop(client);
+    handle.shutdown();
+}
+
+/// Four workers hammering three distinct queries concurrently: every
+/// response must be exactly the right one — no interleaving, no
+/// cross-talk between connections, no tier-warmth dependence.
+#[test]
+fn concurrent_mixed_queries_never_interleave() {
+    let toml_of = |hbm: u64| {
+        format!(
+            "model = \"v3\"\naction = \"plan\"\nhbm_gib = {hbm}\n\n\
+             [plan]\nworld = 1024\nmicrobatches = 32\npp = [16]\n"
+        )
+    };
+    let cases: Vec<(String, String, String)> = [64u64, 80, 96]
+        .iter()
+        .map(|&hbm| {
+            let name = format!("mix-{hbm}");
+            let toml = toml_of(hbm);
+            let spec = ScenarioSpec::from_toml(&toml, &name).expect("case parses");
+            let expected = direct_snapshot(&spec);
+            (name, toml, expected)
+        })
+        .collect();
+    let handle = boot(4);
+    let addr = handle.addr().to_string();
+    std::thread::scope(|s| {
+        for worker in 0..4usize {
+            let cases = &cases;
+            let addr = &addr;
+            s.spawn(move || {
+                let mut client = ServerClient::connect(addr).expect("worker connects");
+                for i in 0..6usize {
+                    let (name, toml, expected) = &cases[(worker + i) % cases.len()];
+                    let served =
+                        client.post_scenario("plan", name, toml).expect("mixed query answers");
+                    assert_eq!(
+                        &served, expected,
+                        "worker {worker} iteration {i}: response for {name} was corrupted"
+                    );
+                }
+            });
+        }
+    });
+    handle.shutdown();
+}
+
+/// Generated near-neighbor plan queries (random budget / top-k /
+/// microbatches / schedule over one context) serve byte-identically to
+/// the direct entry point — including against a warm tier, since cases
+/// share the daemon.
+#[test]
+fn proptest_generated_plans_serve_byte_identically() {
+    let handle = boot(2);
+    let mut client = client_of(&handle);
+    let mut rng = Rng64::new(0xd5ee_5e61);
+    for case in 0..6 {
+        let hbm = rng.range(40, 121);
+        let top_k = rng.below(13);
+        let m = [32u64, 64][rng.below(2) as usize];
+        let schedule = ["", "schedule = \"1f1b\"\n", "schedule = \"zb-h1\"\n"]
+            [rng.below(3) as usize];
+        let toml = format!(
+            "model = \"v3\"\naction = \"plan\"\nhbm_gib = {hbm}\n\n\
+             [plan]\nworld = 1024\nmicrobatches = {m}\npp = [16]\ntop_k = {top_k}\n{schedule}"
+        );
+        let name = format!("prop-{case}");
+        let spec = ScenarioSpec::from_toml(&toml, &name).expect("generated scenario parses");
+        let direct = direct_snapshot(&spec);
+        let served = client.post_scenario("plan", &name, &toml).expect("generated query answers");
+        assert_eq!(served, direct, "case {case} ({toml:?}) diverges when served");
+    }
+    drop(client);
+    handle.shutdown();
+}
+
+/// Malformed input comes back as readable JSON errors with the right
+/// status codes, and never kills the daemon.
+#[test]
+fn protocol_errors_are_readable() {
+    let handle = boot(2);
+    let mut client = client_of(&handle);
+    let (status, body) = client.request("POST", "/plan", "{not json").expect("answers");
+    assert_eq!(status, 400, "unparseable JSON body: {body}");
+    assert!(body.contains("error"), "400 carries a message: {body}");
+    let (status, body) = client.request("POST", "/plan", "{}").expect("answers");
+    assert_eq!(status, 400);
+    assert!(body.contains("scenario"), "missing-key error names the key: {body}");
+    let plan_toml = "model = \"v3\"\naction = \"plan\"\nhbm_gib = 80\n\n\
+                     [plan]\nworld = 1024\nmicrobatches = 32\npp = [16]\n";
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("scenario".to_string(), Json::Str(plan_toml.into()));
+    let (status, body) =
+        client.request("POST", "/sweep", &Json::Obj(m).dump()).expect("answers");
+    assert_eq!(status, 400, "action/endpoint mismatch must be rejected");
+    assert!(body.contains("/plan"), "mismatch error points at the right endpoint: {body}");
+    let (status, _) = client.request("GET", "/plan", "").expect("answers");
+    assert_eq!(status, 405, "GET on a POST endpoint");
+    let (status, body) = client.request("POST", "/nope", "{}").expect("answers");
+    assert_eq!(status, 404);
+    assert!(body.contains("/healthz"), "404 lists the live endpoints: {body}");
+    let (status, body) = client.request("GET", "/healthz", "").expect("answers");
+    assert_eq!(status, 200);
+    assert!(body.contains("true"), "healthz acks: {body}");
+    drop(client);
+    handle.shutdown();
+}
+
+/// The full committed suite, driven through a daemon as concurrent HTTP
+/// requests, byte-matches every golden snapshot — the same gate CI's
+/// serve-smoke job runs via the CLI.
+#[test]
+fn suite_via_server_matches_goldens() {
+    let handle = boot(4);
+    let dir = scenarios_dir();
+    let report = run_suite_via_server(&dir, &dir.join("golden"), &handle.addr().to_string(), 4)
+        .expect("served suite runs");
+    assert!(report.is_clean(), "served suite must match goldens: {}", report.summary());
+    handle.shutdown();
+}
+
+/// `POST /shutdown` acks and then drains the whole worker pool — `join`
+/// returning is the proof of a clean shutdown.
+#[test]
+fn shutdown_endpoint_drains_the_pool() {
+    let handle = boot(3);
+    let mut client = client_of(&handle);
+    let (status, body) = client.request("POST", "/shutdown", "").expect("shutdown acks");
+    assert_eq!(status, 200);
+    assert!(body.contains("shutting_down"), "shutdown ack names itself: {body}");
+    drop(client);
+    handle.join();
+}
