@@ -1,0 +1,70 @@
+//! Bench: trace-store population and query latency over the paper's
+//! DualPipe PP16 replay — what recording the full event trace costs on
+//! top of the plain sim, the store's resident size (the numbers quoted
+//! in perf.md), and the latency of the trend / growth / fragtrend
+//! queries the detectors run.
+
+use dsmem::analysis::{MemoryModel, ZeroStrategy};
+use dsmem::config::{ActivationConfig, CaseStudy};
+use dsmem::schedule::ScheduleSpec;
+use dsmem::sim::SimEngine;
+use dsmem::trace_store::{execute, fragtrend_sql, growth_sql, parse, run_query};
+use dsmem::util::bench::{bench, black_box};
+use std::time::Duration;
+
+fn main() {
+    let cs = CaseStudy::paper();
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+    let act = ActivationConfig::paper(1);
+    let m = 32;
+
+    let plain = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+    let base = bench("sim_dualpipe_m32_plain", Duration::from_secs(3), || {
+        black_box(plain.run(ScheduleSpec::DualPipe, m).unwrap());
+    });
+    base.report();
+
+    let mut eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+    eng.record_trace = true;
+    eng.trace_steps = 2;
+    let traced = bench("sim_dualpipe_m32_traced_2steps", Duration::from_secs(3), || {
+        black_box(eng.run(ScheduleSpec::DualPipe, m).unwrap());
+    });
+    traced.report();
+    println!(
+        "  → tracing 2 steps costs {:.2}× the plain 1-step replay",
+        traced.mean_ns / base.mean_ns
+    );
+
+    let res = eng.run(ScheduleSpec::DualPipe, m).unwrap();
+    let store = res.trace.expect("record_trace populates the store");
+    println!(
+        "  → store: {} rows, ~{:.1} MiB resident (DualPipe PP16, m={m}, 2 steps)",
+        store.len(),
+        store.approx_bytes() as f64 / (1024.0 * 1024.0)
+    );
+
+    bench("query_trend_group_by_stage", Duration::from_secs(3), || {
+        black_box(
+            run_query(
+                &store,
+                "SELECT stage, max(total) AS peak, max(activation_attention) AS peak_attn \
+                 FROM trace GROUP BY stage ORDER BY peak DESC, stage",
+            )
+            .unwrap(),
+        );
+    })
+    .report();
+
+    let growth = parse(&growth_sql(512 << 20, 40)).unwrap();
+    bench("query_growth_lag_window", Duration::from_secs(3), || {
+        black_box(execute(&store, &growth).unwrap());
+    })
+    .report();
+
+    let fragtrend = parse(&fragtrend_sql()).unwrap();
+    bench("query_fragtrend_group_by_step_stage", Duration::from_secs(3), || {
+        black_box(execute(&store, &fragtrend).unwrap());
+    })
+    .report();
+}

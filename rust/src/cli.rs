@@ -1,0 +1,266 @@
+//! Shared CLI argument machinery: the tiny `--key value` flag parser and
+//! the [`CommonArgs`] builder that resolves the flags every subcommand
+//! repeats (`--model`, `--schedule`, `--zero`, `--recompute`, `--split`,
+//! `--chunks`, `--breakdown`, `--json`) with one spelling and one error
+//! style — unknown values always fail naming the full valid set.
+//!
+//! `plan|sweep|simulate|report|atlas|query` all build on this table, so a
+//! flag means the same thing everywhere and a typo reads the same
+//! everywhere.
+
+use std::collections::HashMap;
+
+use crate::analysis::{StageSplit, ZeroStrategy};
+use crate::config::{CaseStudy, RecomputePolicy};
+use crate::schedule::ScheduleSpec;
+
+/// The model presets [`CaseStudy::preset`] accepts, for error messages.
+pub const MODEL_PRESETS: &str = "deepseek-v3|v3, deepseek-v2|v2, deepseek-v2-lite|v2-lite, mini";
+
+/// The ZeRO strategies [`ZeroStrategy::parse`] accepts, for error
+/// messages.
+pub const ZERO_STRATEGIES: &str = "none, os, os_g, os_g_params";
+
+/// Tiny flag parser: `--key value` and boolean `--key`.
+pub struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv`, treating every key in `boolean` as a valueless flag.
+    pub fn parse(argv: &[String], boolean: &[&str]) -> anyhow::Result<Self> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                anyhow::bail!("unexpected argument: {a}");
+            };
+            if boolean.contains(&key) {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let v = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
+                flags.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flags.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} must be an integer, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flags.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} must be a number, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+}
+
+/// Parse a `--threads` value: a positive integer, defaulting to the OS's
+/// available parallelism. `what` completes the zero-workers error so it
+/// reads naturally per subcommand.
+pub fn thread_count(opt: Option<&str>, what: &str) -> anyhow::Result<usize> {
+    match opt {
+        Some(t) => {
+            let threads: usize = t
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--threads must be a positive integer, got {t:?}"))?;
+            if threads == 0 {
+                anyhow::bail!("--threads must be at least 1 (0 workers cannot {what})");
+            }
+            Ok(threads)
+        }
+        None => Ok(std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)),
+    }
+}
+
+/// The shared flag table: one resolver per flag the subcommands have in
+/// common. Borrow the parsed [`Args`] and call the accessors you need —
+/// defaults are per-call because subcommands legitimately differ
+/// (`report` defaults `--zero none`, `simulate` defaults `os_g`).
+pub struct CommonArgs<'a> {
+    args: &'a Args,
+}
+
+impl<'a> CommonArgs<'a> {
+    pub fn new(args: &'a Args) -> Self {
+        Self { args }
+    }
+
+    /// The raw `--model` value (the preset spelling, for spec assembly).
+    pub fn model_name(&self) -> String {
+        self.args.get("model", "deepseek-v3")
+    }
+
+    /// Resolve `--model` through the shared preset table
+    /// ([`CaseStudy::preset`] — the same spelling the scenario suite
+    /// uses). Unknown presets fail naming the valid set.
+    pub fn case_study(&self) -> anyhow::Result<CaseStudy> {
+        let model = self.model_name();
+        CaseStudy::preset(&model)
+            .map_err(|_| anyhow::anyhow!("--model must be one of {MODEL_PRESETS}; got {model:?}"))
+    }
+
+    /// Resolve `--zero` with a per-subcommand default.
+    pub fn zero(&self, default: &str) -> anyhow::Result<ZeroStrategy> {
+        let v = self.args.get("zero", default);
+        ZeroStrategy::parse(&v)
+            .map_err(|_| anyhow::anyhow!("--zero must be one of {ZERO_STRATEGIES}; got {v:?}"))
+    }
+
+    /// Resolve `--recompute` with a per-subcommand default.
+    pub fn recompute(&self, default: &str) -> anyhow::Result<RecomputePolicy> {
+        let v = self.args.get("recompute", default);
+        RecomputePolicy::parse(&v).map_err(|e| anyhow::anyhow!("--recompute: {e}"))
+    }
+
+    /// `--chunks`: the interleaved-schedule chunk count, if given.
+    pub fn chunks(&self) -> anyhow::Result<Option<u64>> {
+        match self.args.opt("chunks") {
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--chunks must be an integer, got {v:?}")),
+            None => Ok(None),
+        }
+    }
+
+    /// Resolve `--schedule` (with a default), overriding the interleaved
+    /// chunk count when `--chunks` was passed. `--chunks` with a
+    /// chunk-less schedule is an error rather than silently ignored.
+    pub fn schedule(&self, default: &str) -> anyhow::Result<ScheduleSpec> {
+        let v = self.args.get("schedule", default);
+        let spec = ScheduleSpec::parse(&v).map_err(|e| anyhow::anyhow!("--schedule: {e}"))?;
+        Ok(match (spec, self.chunks()?) {
+            (ScheduleSpec::Interleaved1F1B { .. }, Some(c)) => {
+                ScheduleSpec::Interleaved1F1B { chunks: c }
+            }
+            (_, Some(_)) => anyhow::bail!("--chunks only applies to --schedule interleaved"),
+            (other, None) => other,
+        })
+    }
+
+    /// `--schedule` as an optional override (no default): `None` when the
+    /// flag is absent. Used where absence means "use the generic
+    /// profile" (`report --per-stage`).
+    pub fn schedule_opt(&self) -> anyhow::Result<Option<ScheduleSpec>> {
+        match self.args.opt("schedule") {
+            Some(s) => Ok(Some(
+                ScheduleSpec::parse(s).map_err(|e| anyhow::anyhow!("--schedule: {e}"))?,
+            )),
+            None => Ok(None),
+        }
+    }
+
+    /// `--schedule` for the planner: `all` (or absence) searches every
+    /// registered schedule.
+    pub fn schedule_all(&self) -> anyhow::Result<Option<ScheduleSpec>> {
+        match self.args.opt("schedule") {
+            None | Some("all") => Ok(None),
+            Some(s) => Ok(Some(
+                ScheduleSpec::parse(s).map_err(|e| anyhow::anyhow!("--schedule: {e}"))?,
+            )),
+        }
+    }
+
+    /// `--split`, if given.
+    pub fn split(&self) -> anyhow::Result<Option<StageSplit>> {
+        match self.args.opt("split") {
+            Some(s) => Ok(Some(
+                StageSplit::parse(s).map_err(|e| anyhow::anyhow!("--split: {e}"))?,
+            )),
+            None => Ok(None),
+        }
+    }
+
+    pub fn json(&self) -> bool {
+        self.args.has("json")
+    }
+
+    pub fn breakdown(&self) -> bool {
+        self.args.has("breakdown")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_values_fail_naming_the_valid_set() {
+        let a = Args::parse(&argv(&["--model", "gpt5", "--zero", "os+g"]), &[]).unwrap();
+        let c = CommonArgs::new(&a);
+        let model_err = c.case_study().unwrap_err().to_string();
+        assert!(model_err.contains("deepseek-v2-lite"), "{model_err}");
+        assert!(model_err.contains("gpt5"), "{model_err}");
+        let zero_err = c.zero("none").unwrap_err().to_string();
+        assert!(zero_err.contains("os_g_params"), "{zero_err}");
+        let b =
+            Args::parse(&argv(&["--schedule", "pipedream", "--recompute", "most"]), &[]).unwrap();
+        let cb = CommonArgs::new(&b);
+        let sched_err = cb.schedule("1f1b").unwrap_err().to_string();
+        assert!(sched_err.contains("dualpipe"), "{sched_err}");
+        let rec_err = cb.recompute("none").unwrap_err().to_string();
+        assert!(rec_err.contains("none|selective|full"), "{rec_err}");
+    }
+
+    #[test]
+    fn defaults_are_per_call_and_chunks_gate_on_interleaved() {
+        let a = Args::parse(&argv(&[]), &[]).unwrap();
+        let c = CommonArgs::new(&a);
+        assert!(matches!(c.zero("os_g").unwrap(), ZeroStrategy::OsG));
+        assert!(matches!(c.zero("none").unwrap(), ZeroStrategy::None));
+        assert!(matches!(c.schedule("1f1b").unwrap(), ScheduleSpec::OneFOneB));
+        assert!(c.schedule_opt().unwrap().is_none());
+        let b = Args::parse(&argv(&["--schedule", "interleaved", "--chunks", "4"]), &[]).unwrap();
+        let cb = CommonArgs::new(&b);
+        assert!(matches!(
+            cb.schedule("1f1b").unwrap(),
+            ScheduleSpec::Interleaved1F1B { chunks: 4 }
+        ));
+        let bad = Args::parse(&argv(&["--schedule", "gpipe", "--chunks", "4"]), &[]).unwrap();
+        let err = CommonArgs::new(&bad).schedule("1f1b").unwrap_err().to_string();
+        assert!(err.contains("--chunks only applies"), "{err}");
+    }
+
+    #[test]
+    fn flag_parser_behavior_is_unchanged() {
+        let a = Args::parse(&argv(&["--json", "--microbatches", "8"]), &["json"]).unwrap();
+        assert!(a.has("json"));
+        assert_eq!(a.get_u64("microbatches", 16).unwrap(), 8);
+        assert_eq!(a.get_u64("absent", 16).unwrap(), 16);
+        let err = Args::parse(&argv(&["stray"]), &[]).unwrap_err().to_string();
+        assert!(err.contains("unexpected argument"), "{err}");
+        let err = Args::parse(&argv(&["--model"]), &[]).unwrap_err().to_string();
+        assert!(err.contains("needs a value"), "{err}");
+    }
+}

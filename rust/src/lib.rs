@@ -15,6 +15,11 @@
 //!    accounting. It extends the paper's per-microbatch analysis to schedule-dependent
 //!    peak memory. The schedules themselves (GPipe / 1F1B / interleaved / DualPipe /
 //!    ZB-H1) live in the trait-based [`schedule`] registry shared with the planner.
+//!    With tracing on, the replayed timeline lands in the queryable
+//!    [`trace_store`] — a columnar store with a SQL-subset query layer
+//!    (`dsmem query "SELECT stage, max(allocated) ... GROUP BY stage"`,
+//!    `POST /query`, and the `query` scenario action) for trend-, growth-
+//!    and fragmentation-regression analysis over op-level traces.
 //!
 //! 3. **Live mini-training runtime** (`runtime`, `coordinator`, `trainer`; feature
 //!    `live`) — a real pipeline-parallel training loop over AOT-compiled XLA
@@ -36,7 +41,7 @@
 //!
 //! 5. **Declarative scenario suite** ([`scenario`]) — checked-in TOML-subset
 //!    case studies (model preset + overrides + budget + one of
-//!    `plan`/`sweep`/`simulate`/`kvcache`/`atlas`) executed thread-parallel through
+//!    `plan`/`sweep`/`simulate`/`kvcache`/`atlas`/`query`) executed thread-parallel through
 //!    the pillars above and rendered to canonical JSON snapshots, byte-compared
 //!    against golden files in CI and `cargo test` — one regression surface
 //!    over every subsystem.
@@ -75,6 +80,7 @@
 //! ```
 
 pub mod analysis;
+pub mod cli;
 pub mod config;
 #[cfg(feature = "live")]
 pub mod coordinator;
@@ -89,6 +95,7 @@ pub mod scenario;
 pub mod schedule;
 pub mod server;
 pub mod sim;
+pub mod trace_store;
 #[cfg(feature = "live")]
 pub mod trainer;
 pub mod util;

@@ -7,6 +7,9 @@
 //! * `plan`      — search the full parallel-configuration grid for what fits;
 //! * `sweep`     — (b × AC × ZeRO) feasibility sweep against an HBM budget;
 //! * `simulate`  — run the cluster memory simulator over a schedule;
+//! * `query`     — SQL-subset queries over the sim's op-level memory trace
+//!   ([`dsmem::trace_store`]; positional SQL, `--sql`, or a canned
+//!   `--detector growth|fragtrend`);
 //! * `suite`     — run the declarative scenario suite against its golden
 //!   snapshots (`run|list|diff`, `--bless` to regenerate, `--via-server` to
 //!   drive a running daemon instead of the in-process runner);
@@ -17,16 +20,20 @@
 //!
 //! `plan`, `sweep` and `bubble` all route through [`dsmem::planner`];
 //! `report` and the `--breakdown` flags render [`dsmem::ledger`] ledgers;
-//! `suite` routes through [`dsmem::scenario`].
+//! `suite` and `query` route through [`dsmem::scenario`].
+//!
+//! Flag parsing lives in [`dsmem::cli`]: the [`Args`] scanner plus the
+//! [`CommonArgs`] builder that resolves the shared `--model` / `--schedule` /
+//! `--zero` / `--recompute` / `--split` / `--chunks` flags with uniform
+//! errors naming the valid value set.
 
-use dsmem::analysis::{MemoryModel, Overheads, StageInflight, StageSplit, ZeroStrategy};
-use dsmem::config::{ActivationConfig, CaseStudy, RecomputePolicy};
+use dsmem::analysis::{MemoryModel, Overheads, StageInflight};
+use dsmem::cli::{thread_count, Args, CommonArgs};
+use dsmem::config::{ActivationConfig, RecomputePolicy};
 use dsmem::planner;
 use dsmem::report::{fmt_bytes, gib, ledger_table, tables::paper_table};
 use dsmem::scenario::{self, SnapshotStatus};
-use dsmem::schedule::ScheduleSpec;
 use dsmem::sim::{ComponentGroup, SimEngine};
-use std::collections::HashMap;
 use std::path::PathBuf;
 
 const USAGE: &str = "\
@@ -53,6 +60,11 @@ COMMANDS:
              [--microbatches M] [--micro-batch B] [--chunks V] [--frag]
              [--recompute none|selective|full] [--zero none|os|os_g|os_g_params]
              [--trace FILE.json] [--model M] [--breakdown]
+  query      SQL over the sim's op-level     \"SELECT ...\" | --sql SQL |
+             memory trace (see README        --detector growth|fragtrend
+             \"Memory-trace queries\")         [--threshold-mib T] [--limit N]
+             [--steps N] [--schedule S] [--microbatches M] [--zero Z] [--frag]
+             [--micro-batch B] [--recompute R] [--chunks V] [--model M] [--json]
   suite      Declarative scenario suite      run|list|diff [DIR] [--golden DIR] [--bless]
              vs golden snapshots             [--report FILE] [--threads N]
                                              (DSMEM_BLESS=1 also blesses)
@@ -60,7 +72,7 @@ COMMANDS:
                                              daemon; read-only golden comparison)
   serve      Resident HTTP query daemon      [--addr HOST:PORT] [--threads N]
              with cross-query memoization    (POST /plan /sweep /simulate /kvcache /atlas
-                                             /report /suite, GET /healthz /stats;
+                                             /query /report /suite, GET /healthz /stats;
                                              POST /shutdown stops it)
   kvcache    Inference KV-cache analysis     [--tokens N] [--model M]  (MLA vs MHA vs GQA)
   bubble     Pipeline bubble-vs-memory sweep [--pp P] [--model M]
@@ -71,99 +83,6 @@ COMMANDS:
 
 Model presets: deepseek-v3|v3 (default) | deepseek-v2|v2 | deepseek-v2-lite|v2-lite | mini
 ";
-
-/// Tiny flag parser: `--key value` and boolean `--key`.
-struct Args {
-    flags: HashMap<String, String>,
-}
-
-impl Args {
-    fn parse(argv: &[String], boolean: &[&str]) -> anyhow::Result<Self> {
-        let mut flags = HashMap::new();
-        let mut i = 0;
-        while i < argv.len() {
-            let a = &argv[i];
-            let Some(key) = a.strip_prefix("--") else {
-                anyhow::bail!("unexpected argument: {a}");
-            };
-            if boolean.contains(&key) {
-                flags.insert(key.to_string(), "true".to_string());
-                i += 1;
-            } else {
-                let v = argv
-                    .get(i + 1)
-                    .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
-                flags.insert(key.to_string(), v.clone());
-                i += 2;
-            }
-        }
-        Ok(Self { flags })
-    }
-
-    fn get(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
-    }
-
-    fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
-        match self.flags.get(key) {
-            Some(v) => Ok(v.parse()?),
-            None => Ok(default),
-        }
-    }
-
-    fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
-        match self.flags.get(key) {
-            Some(v) => Ok(v.parse()?),
-            None => Ok(default),
-        }
-    }
-
-    fn has(&self, key: &str) -> bool {
-        self.flags.contains_key(key)
-    }
-
-    fn opt(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
-    }
-}
-
-/// Resolve `--model` through the shared preset table
-/// ([`CaseStudy::preset`] — the same spelling the scenario suite uses).
-fn case_study(model: &str) -> anyhow::Result<CaseStudy> {
-    CaseStudy::preset(model)
-}
-
-/// Parse a `--threads` value: a positive integer, defaulting to the OS's
-/// available parallelism. `what` completes the zero-workers error so it
-/// reads naturally per subcommand ("0 workers cannot search anything").
-fn thread_count(opt: Option<&str>, what: &str) -> anyhow::Result<usize> {
-    match opt {
-        Some(t) => {
-            let threads: usize = t
-                .parse()
-                .map_err(|_| anyhow::anyhow!("--threads must be a positive integer, got {t:?}"))?;
-            if threads == 0 {
-                anyhow::bail!("--threads must be at least 1 (0 workers cannot {what})");
-            }
-            Ok(threads)
-        }
-        None => Ok(std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)),
-    }
-}
-
-/// Parse a schedule name, overriding the interleaved chunk count when the
-/// CLI passed an explicit `--chunks` value. `--chunks` with a chunk-less
-/// schedule is an error rather than silently ignored.
-fn schedule_of(s: &str, chunks: Option<u64>) -> anyhow::Result<ScheduleSpec> {
-    let spec = ScheduleSpec::parse(s)?;
-    Ok(match (spec, chunks) {
-        (ScheduleSpec::Interleaved1F1B { .. }, Some(v)) => {
-            ScheduleSpec::Interleaved1F1B { chunks: v }
-        }
-        (_, Some(_)) => anyhow::bail!("--chunks only applies to --schedule interleaved"),
-        (_, None) => spec,
-    })
-}
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -177,7 +96,7 @@ fn main() -> anyhow::Result<()> {
         "help" | "--help" | "-h" => print!("{USAGE}"),
         "tables" => {
             let a = Args::parse(rest, &[])?;
-            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let cs = CommonArgs::new(&a).case_study()?;
             let nums: Vec<u8> = match a.opt("table") {
                 Some(n) => vec![n.parse()?],
                 None => (1..=10).collect(),
@@ -195,7 +114,7 @@ fn main() -> anyhow::Result<()> {
         }
         "analyze" => {
             let a = Args::parse(rest, &["arch"])?;
-            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let cs = CommonArgs::new(&a).case_study()?;
             let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
             if a.has("arch") {
                 let census = mm.param_table();
@@ -227,18 +146,16 @@ fn main() -> anyhow::Result<()> {
         }
         "plan" => {
             let a = Args::parse(rest, &["json", "frontier-only", "breakdown", "per-stage"])?;
-            let model = a.get("model", "deepseek-v3");
-            let cs = case_study(&model)?;
+            let c = CommonArgs::new(&a);
+            let model = c.model_name();
+            let cs = c.case_study()?;
             // One query builder for the CLI and the scenario suite: the flags
             // resolve into a plan ScenarioSpec and route through
             // scenario::runner::build_plan_query (which also rejects
             // unserviceable --split / --schedule choices with readable
             // errors), so `dsmem plan` output and golden `plan` snapshots can
             // never disagree on query assembly.
-            let schedule = match a.opt("schedule") {
-                None | Some("all") => None,
-                Some(s) => Some(ScheduleSpec::parse(s)?),
-            };
+            let schedule = c.schedule_all()?;
             let spec = scenario::ScenarioSpec {
                 name: "cli-plan".into(),
                 model,
@@ -250,7 +167,7 @@ fn main() -> anyhow::Result<()> {
                     top_k: a.get_u64("top-k", 10)?,
                     schedule,
                     pp: if a.has("pp") { Some(vec![a.get_u64("pp", 16)?]) } else { None },
-                    split: a.opt("split").map(StageSplit::parse).transpose()?,
+                    split: c.split()?,
                 },
                 case: cs,
             };
@@ -340,11 +257,11 @@ fn main() -> anyhow::Result<()> {
         }
         "sweep" => {
             let a = Args::parse(rest, &["breakdown", "per-stage"])?;
-            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let c = CommonArgs::new(&a);
+            let cs = c.case_study()?;
             let hbm_gib = a.get_f64("hbm-gib", 80.0)?;
             let mut mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
-            if let Some(s) = a.opt("split") {
-                let split = StageSplit::parse(s)?;
+            if let Some(split) = c.split()? {
                 // Reject invalid splits here with a readable error instead of
                 // panicking inside the stage-plan builder.
                 split.layer_counts(cs.model.num_hidden_layers, cs.parallel.pp)?;
@@ -401,14 +318,15 @@ fn main() -> anyhow::Result<()> {
         }
         "report" => {
             let a = Args::parse(rest, &["json", "breakdown", "no-overheads", "per-stage"])?;
-            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let c = CommonArgs::new(&a);
+            let cs = c.case_study()?;
             let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
             let act = ActivationConfig {
                 micro_batch: a.get_u64("micro-batch", 1)?,
-                recompute: RecomputePolicy::parse(&a.get("recompute", "none"))?,
+                recompute: c.recompute("none")?,
                 ..cs.activation
             };
-            let zero = ZeroStrategy::parse(&a.get("zero", "none"))?;
+            let zero = c.zero("none")?;
             let ov = if a.has("no-overheads") {
                 Overheads::none()
             } else {
@@ -420,9 +338,9 @@ fn main() -> anyhow::Result<()> {
             // per-microbatch view; --schedule S [--microbatches M] scales
             // each stage by that schedule's analytic in-flight count.
             let atlas = if a.has("per-stage") {
-                let inflight = match a.opt("schedule") {
+                let inflight = match c.schedule_opt()? {
                     Some(s) => StageInflight::for_schedule(
-                        ScheduleSpec::parse(s)?,
+                        s,
                         cs.parallel.pp,
                         a.get_u64("microbatches", 32)?,
                     )?,
@@ -474,7 +392,7 @@ fn main() -> anyhow::Result<()> {
         }
         "kvcache" => {
             let a = Args::parse(rest, &[])?;
-            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let cs = CommonArgs::new(&a).case_study()?;
             let tokens = a.get_u64("tokens", 128 * 1024)?;
             use dsmem::analysis::inference::{kv_cache, mla_vs_mha_ratio, CacheKind};
             let mut t = dsmem::report::Table::new(
@@ -502,31 +420,28 @@ fn main() -> anyhow::Result<()> {
         }
         "bubble" => {
             let a = Args::parse(rest, &[])?;
-            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let cs = CommonArgs::new(&a).case_study()?;
             let pp = a.get_u64("pp", 16)?;
             let t = planner::report::bubble_table(&cs, pp, &[pp, 2 * pp, 4 * pp]);
             print!("{}", t.render());
         }
         "simulate" => {
             let a = Args::parse(rest, &["frag", "breakdown"])?;
-            let cs = case_study(&a.get("model", "deepseek-v3"))?;
+            let c = CommonArgs::new(&a);
+            let cs = c.case_study()?;
             let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
             // `--recompute` takes a policy value, exactly like `report`.
             // (It used to be a boolean flag that silently forced Full no
             // matter what value followed it.)
             let act = ActivationConfig {
                 micro_batch: a.get_u64("micro-batch", 1)?,
-                recompute: RecomputePolicy::parse(&a.get("recompute", "none"))?,
+                recompute: c.recompute("none")?,
                 ..cs.activation
             };
-            let mut eng = SimEngine::new(&mm, act, ZeroStrategy::parse(&a.get("zero", "os_g"))?);
+            let mut eng = SimEngine::new(&mm, act, c.zero("os_g")?);
             eng.simulate_allocator = a.has("frag");
             eng.record_events = a.opt("trace").is_some();
-            let chunks = a.opt("chunks").map(str::parse::<u64>).transpose()?;
-            let res = eng.run(
-                schedule_of(&a.get("schedule", "1f1b"), chunks)?,
-                a.get_u64("microbatches", 16)?,
-            )?;
+            let res = eng.run(c.schedule("1f1b")?, a.get_u64("microbatches", 16)?)?;
             if let Some(path) = a.opt("trace") {
                 let tls: Vec<(u64, &dsmem::sim::MemoryTimeline)> =
                     res.stages.iter().map(|s| (s.stage, &s.timeline)).collect();
@@ -570,6 +485,93 @@ fn main() -> anyhow::Result<()> {
                     )
                     .render()
                 );
+            }
+        }
+        "query" => {
+            // Positional SQL (`dsmem query "SELECT ..."`) or --sql SQL, or a
+            // canned --detector; the rest of the flags shape the sim replay
+            // that populates the trace store.
+            let (sql_pos, flag_args) = match rest.first() {
+                Some(s) if !s.starts_with("--") => (Some(s.clone()), &rest[1..]),
+                _ => (None, rest),
+            };
+            let a = Args::parse(flag_args, &["json", "frag"])?;
+            let c = CommonArgs::new(&a);
+            let sql = match (sql_pos, a.opt("sql"), a.opt("detector")) {
+                (Some(s), None, None) => s,
+                (None, Some(s), None) => s.to_string(),
+                (None, None, Some(d)) => dsmem::trace_store::detector_sql(
+                    d,
+                    (a.get_f64("threshold-mib", 64.0)? * dsmem::MIB) as u64,
+                    a.get_u64("limit", 20)?,
+                )?,
+                (None, None, None) => anyhow::bail!(
+                    "query needs SQL (positional or --sql) or --detector growth|fragtrend"
+                ),
+                _ => anyhow::bail!("give exactly one of: positional SQL, --sql, --detector"),
+            };
+            // Fail on malformed SQL before paying for the sim replay.
+            dsmem::trace_store::parse(&sql)?;
+            let mut cs = c.case_study()?;
+            cs.activation = ActivationConfig {
+                micro_batch: a.get_u64("micro-batch", 1)?,
+                recompute: c.recompute("none")?,
+                ..cs.activation
+            };
+            // One execution path for all three surfaces: the flags assemble
+            // the same ScenarioSpec a `[query]` scenario or a `POST /query`
+            // body resolves to, and the envelope below is the byte-identical
+            // snapshot document (asserted by rust/tests/trace_query.rs).
+            let spec = scenario::ScenarioSpec {
+                name: "cli-query".into(),
+                model: c.model_name(),
+                hbm_gib: 80.0,
+                overheads: Overheads::paper_midpoint(),
+                action: scenario::Action::Query {
+                    schedule: c.schedule("1f1b")?,
+                    microbatches: a.get_u64("microbatches", 16)?,
+                    zero: c.zero("os_g")?,
+                    frag: a.has("frag"),
+                    steps: a.get_u64("steps", 2)?,
+                    sql,
+                },
+                case: cs,
+            };
+            let json = scenario::run_scenario(&spec)?;
+            if c.json() {
+                println!("{}", json.pretty());
+            } else {
+                let result = json.get("result")?;
+                let columns: Vec<String> = result
+                    .get("columns")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| Ok(v.as_str()?.to_string()))
+                    .collect::<anyhow::Result<_>>()?;
+                let headers: Vec<&str> = columns.iter().map(|s| s.as_str()).collect();
+                let mut t = dsmem::report::Table::new(
+                    format!(
+                        "query: {} m={} steps={} ({} of {} trace rows)",
+                        result.get("schedule")?.as_str()?,
+                        result.get("microbatches")?.as_u64()?,
+                        result.get("steps")?.as_u64()?,
+                        result.get("row_count")?.as_u64()?,
+                        result.get("store_rows")?.as_u64()?,
+                    ),
+                    &headers,
+                );
+                for row in result.get("rows")?.as_arr()? {
+                    let cells: Vec<String> = row
+                        .as_arr()?
+                        .iter()
+                        .map(|v| match v {
+                            dsmem::util::Json::Str(s) => s.clone(),
+                            other => other.dump(),
+                        })
+                        .collect();
+                    t.row(cells);
+                }
+                print!("{}", t.render());
             }
         }
         "suite" => {

@@ -5,10 +5,11 @@
 //! CLI invocation can only pin one of them. A **scenario** is a small
 //! TOML-subset file naming a model preset, layout/activation overrides, an
 //! HBM budget, overheads and one action (`plan`, `sweep`, `simulate`,
-//! `kvcache`, `atlas`); the **runner** executes a whole directory of them
-//! thread-parallel through the existing [`crate::planner`] /
-//! [`crate::sim`] / [`crate::analysis::inference`] entry points and renders
-//! each result into a canonical, deterministically-ordered JSON snapshot.
+//! `kvcache`, `atlas`, `query`); the **runner** executes a whole directory
+//! of them thread-parallel through the existing [`crate::planner`] /
+//! [`crate::sim`] / [`crate::analysis::inference`] / [`crate::trace_store`]
+//! entry points and renders each result into a canonical,
+//! deterministically-ordered JSON snapshot.
 //!
 //! Snapshots are byte-compared against golden files under
 //! `scenarios/golden/` — one regression surface covering the analysis,
@@ -30,4 +31,4 @@ pub use runner::{
     run_all_with_threads, run_dir, run_scenario, run_scenario_cached, Scenario, SnapshotStatus,
     SuiteOutcome, SuiteReport,
 };
-pub use spec::{Action, ScenarioSpec, TomlDoc, TomlValue};
+pub use spec::{Action, ScenarioSpec, TomlDoc, TomlValue, ACTION_NAMES};

@@ -2,7 +2,8 @@
 //!
 //! [`run_scenario`] maps one [`ScenarioSpec`] onto the existing entry point
 //! for its action — [`crate::planner::plan`], [`crate::planner::sweep_fixed`],
-//! [`crate::sim::SimEngine`] or [`crate::analysis::inference`] — and renders
+//! [`crate::sim::SimEngine`], [`crate::analysis::inference`] or
+//! [`crate::trace_store::run_query`] — and renders
 //! the result to one canonical [`Json`] snapshot (deterministically ordered:
 //! `BTreeMap` keys, enumeration-ordered arrays, exact-integer byte values
 //! from the ledger). The runner never re-implements any arithmetic; the
@@ -126,6 +127,19 @@ pub fn run_scenario(spec: &ScenarioSpec) -> anyhow::Result<Json> {
             simulate_json(&res, *zero)
         }
         Action::KvCache { tokens, gqa_groups } => kvcache_json(cs, *tokens, *gqa_groups),
+        Action::Query { schedule, microbatches, zero, frag, steps, sql } => {
+            let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+            let mut eng = SimEngine::new(&mm, cs.activation, *zero);
+            eng.simulate_allocator = *frag;
+            eng.record_trace = true;
+            eng.trace_steps = *steps;
+            let res = eng.run(*schedule, *microbatches)?;
+            let qr = {
+                let store = res.trace.as_ref().expect("record_trace populates the store");
+                crate::trace_store::run_query(store, sql)?
+            };
+            query_json(&res, &qr, *zero, *steps, sql)
+        }
         Action::Atlas { schedule, microbatches, zero } => {
             let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
             let inflight = match schedule {
@@ -309,6 +323,32 @@ pub fn atlas_json(atlas: &ClusterMemoryAtlas, budget_bytes: u64) -> Json {
     m.insert("schedule".into(), Json::Str(atlas.schedule_label.clone()));
     m.insert("stages".into(), Json::Arr(stages));
     m.insert("zero".into(), Json::Str(atlas.zero.name().into()));
+    Json::Obj(m)
+}
+
+/// Canonical `query` snapshot: the query's column headers and rows (from
+/// [`crate::trace_store::QueryResult::to_json`]) plus the replay context —
+/// the literal SQL, schedule, microbatch/step counts and the trace-store
+/// row count, so a snapshot records exactly what was asked of what data.
+pub fn query_json(
+    res: &SimResult,
+    qr: &crate::trace_store::QueryResult,
+    zero: ZeroStrategy,
+    steps: u64,
+    sql: &str,
+) -> Json {
+    let store = res.trace.as_ref().expect("query snapshots need a recorded trace");
+    let mut m = BTreeMap::new();
+    if let Json::Obj(cols_rows) = qr.to_json() {
+        m.extend(cols_rows); // "columns", "rows"
+    }
+    m.insert("microbatches".into(), Json::Num(res.num_microbatches as f64));
+    m.insert("row_count".into(), Json::Num(qr.rows.len() as f64));
+    m.insert("schedule".into(), Json::Str(res.spec.name()));
+    m.insert("sql".into(), Json::Str(sql.into()));
+    m.insert("steps".into(), Json::Num(steps as f64));
+    m.insert("store_rows".into(), Json::Num(store.len() as f64));
+    m.insert("zero".into(), Json::Str(zero.name().into()));
     Json::Obj(m)
 }
 

@@ -333,7 +333,26 @@ pub enum Action {
     /// scenario's HBM budget. `schedule = None` is the per-microbatch view
     /// (one in-flight tape per stage, the paper's table convention).
     Atlas { schedule: Option<ScheduleSpec>, microbatches: u64, zero: ZeroStrategy },
+    /// A SQL-subset query over the replayed op-level memory trace
+    /// ([`crate::trace_store`]): the sim runs with `record_trace` on for
+    /// `steps` training steps and `sql` executes against the resulting
+    /// store. The SQL is validated at parse time; canned detectors
+    /// (`detector = "growth" | "fragtrend"`) resolve to SQL here so the
+    /// snapshot records the exact query it ran.
+    Query {
+        schedule: ScheduleSpec,
+        microbatches: u64,
+        zero: ZeroStrategy,
+        frag: bool,
+        steps: u64,
+        sql: String,
+    },
 }
+
+/// Every action keyword the suite accepts, in documentation order — the one
+/// list shared by the spec parser's unknown-action error, `suite list`
+/// validation and the server's scenario routing table.
+pub const ACTION_NAMES: [&str; 6] = ["plan", "sweep", "simulate", "kvcache", "atlas", "query"];
 
 impl Action {
     /// The action keyword (also the section name carrying its knobs).
@@ -344,6 +363,7 @@ impl Action {
             Action::Simulate { .. } => "simulate",
             Action::KvCache { .. } => "kvcache",
             Action::Atlas { .. } => "atlas",
+            Action::Query { .. } => "query",
         }
     }
 }
@@ -397,7 +417,8 @@ impl ScenarioSpec {
         for sec in doc.section_names() {
             let allowed = sec == "parallel"
                 || sec == "activation"
-                || (sec == action_str && matches!(sec, "plan" | "simulate" | "kvcache" | "atlas"));
+                || (sec == action_str
+                    && matches!(sec, "plan" | "simulate" | "kvcache" | "atlas" | "query"));
             if !allowed {
                 anyhow::bail!(
                     "scenario {name}: unexpected section [{sec}] for action {action_str:?}"
@@ -407,7 +428,7 @@ impl ScenarioSpec {
         // Keys an action cannot consume are errors, not silence — an inert
         // pin would bless a snapshot of a different study than the author
         // wrote (the loud-failure guarantee in the module docs).
-        if matches!(action_str.as_str(), "simulate" | "kvcache") {
+        if matches!(action_str.as_str(), "simulate" | "kvcache" | "query") {
             for k in ["hbm_gib", "overheads"] {
                 if doc.root().contains_key(k) {
                     anyhow::bail!(
@@ -633,10 +654,93 @@ impl ScenarioSpec {
                 }
                 Action::KvCache { tokens, gqa_groups }
             }
+            "query" => {
+                let empty = BTreeMap::new();
+                let sec = doc.section("query").unwrap_or(&empty);
+                check_keys(
+                    sec,
+                    "query",
+                    &[
+                        "schedule",
+                        "microbatches",
+                        "zero",
+                        "frag",
+                        "steps",
+                        "sql",
+                        "detector",
+                        "threshold_mib",
+                        "limit",
+                    ],
+                )?;
+                let schedule = match sec.get("schedule") {
+                    Some(v) => ScheduleSpec::parse(v.as_str()?)?,
+                    None => ScheduleSpec::OneFOneB,
+                };
+                let microbatches = get_u64_or(sec, "microbatches", 16)?;
+                schedule
+                    .resolve()
+                    .validate(case.parallel.pp, microbatches)
+                    .map_err(|e| anyhow::anyhow!("scenario {name}: {e}"))?;
+                let zero = match sec.get("zero") {
+                    Some(v) => ZeroStrategy::parse(v.as_str()?)?,
+                    None => ZeroStrategy::OsG,
+                };
+                let frag = match sec.get("frag") {
+                    Some(v) => v.as_bool()?,
+                    None => false,
+                };
+                let steps = get_u64_or(sec, "steps", 2)?;
+                if steps == 0 {
+                    anyhow::bail!("scenario {name}: [query] steps must be >= 1");
+                }
+                // `sql` XOR `detector`: detectors resolve to SQL right here,
+                // so the Action (and therefore the snapshot) always carries
+                // the literal query it ran.
+                let sql = match (sec.get("sql"), sec.get("detector")) {
+                    (Some(v), None) => {
+                        for k in ["threshold_mib", "limit"] {
+                            if sec.contains_key(k) {
+                                anyhow::bail!(
+                                    "scenario {name}: `{k}` only applies to `detector` \
+                                     queries — remove it"
+                                );
+                            }
+                        }
+                        v.as_str()?.to_string()
+                    }
+                    (None, Some(v)) => {
+                        let threshold_mib = match sec.get("threshold_mib") {
+                            Some(t) => t.as_f64()?,
+                            None => 64.0,
+                        };
+                        crate::trace_store::detector_sql(
+                            v.as_str()?,
+                            (threshold_mib * crate::MIB) as u64,
+                            get_u64_or(sec, "limit", 20)?,
+                        )
+                        .map_err(|e| anyhow::anyhow!("scenario {name}: {e}"))?
+                    }
+                    (Some(_), Some(_)) => {
+                        anyhow::bail!("scenario {name}: [query] takes `sql` or `detector`, \
+                                       not both")
+                    }
+                    (None, None) => {
+                        anyhow::bail!(
+                            "scenario {name}: [query] needs `sql` or `detector` \
+                             (growth|fragtrend)"
+                        )
+                    }
+                };
+                // A spec that parses is a spec that can run: malformed SQL
+                // fails at load, not mid-suite.
+                crate::trace_store::parse(&sql)
+                    .map_err(|e| anyhow::anyhow!("scenario {name}: {e}"))?;
+                Action::Query { schedule, microbatches, zero, frag, steps, sql }
+            }
             other => {
                 anyhow::bail!(
-                    "scenario {name}: action must be plan|sweep|simulate|kvcache|atlas, \
-                     got {other:?}"
+                    "scenario {name}: action must be {}, got {other:?}",
+                    ACTION_NAMES.join("|")
                 )
             }
         };
@@ -840,6 +944,62 @@ mod tests {
         // kvcache ignores [activation] entirely.
         let t = "action = \"kvcache\"\n\n[activation]\nseq_len = 8192\n";
         assert!(ScenarioSpec::from_toml(t, "x").is_err());
+    }
+
+    #[test]
+    fn query_action_parses_validates_and_resolves_detectors() {
+        let text = "model = \"v3\"\naction = \"query\"\n\n[query]\nschedule = \"dualpipe\"\n\
+                    microbatches = 32\nzero = \"os_g\"\nsteps = 3\n\
+                    sql = \"SELECT stage, max(total) AS peak FROM trace GROUP BY stage\"\n";
+        let s = ScenarioSpec::from_toml(text, "q").unwrap();
+        match &s.action {
+            Action::Query { schedule, microbatches, zero, frag, steps, sql } => {
+                assert_eq!(*schedule, ScheduleSpec::DualPipe);
+                assert_eq!(*microbatches, 32);
+                assert_eq!(*zero, ZeroStrategy::OsG);
+                assert!(!*frag);
+                assert_eq!(*steps, 3);
+                assert!(sql.contains("GROUP BY stage"));
+            }
+            other => panic!("wrong action: {other:?}"),
+        }
+        // Detectors resolve to literal SQL at parse time.
+        let text = "action = \"query\"\n\n[query]\nschedule = \"dualpipe\"\nmicrobatches = 32\n\
+                    detector = \"growth\"\nthreshold_mib = 512\nlimit = 40\n";
+        let s = ScenarioSpec::from_toml(text, "q").unwrap();
+        match &s.action {
+            Action::Query { sql, .. } => {
+                assert!(sql.contains("lag(total) OVER"), "{sql}");
+                assert!(sql.contains(&(512 * crate::MIB as u64).to_string()), "{sql}");
+                assert!(sql.contains("LIMIT 40"), "{sql}");
+            }
+            other => panic!("wrong action: {other:?}"),
+        }
+        // Malformed SQL, sql+detector, neither, inert detector knobs and
+        // budget keys all fail at load.
+        let bad = "action = \"query\"\n\n[query]\nsql = \"SELECT FROM\"\n";
+        assert!(ScenarioSpec::from_toml(bad, "q").is_err());
+        let bad = "action = \"query\"\n\n[query]\nsql = \"SELECT step FROM trace\"\n\
+                   detector = \"growth\"\n";
+        assert!(ScenarioSpec::from_toml(bad, "q").is_err());
+        assert!(ScenarioSpec::from_toml("action = \"query\"\n", "q").is_err());
+        let bad = "action = \"query\"\n\n[query]\nsql = \"SELECT step FROM trace\"\n\
+                   threshold_mib = 64\n";
+        assert!(ScenarioSpec::from_toml(bad, "q").is_err());
+        let bad = "action = \"query\"\nhbm_gib = 80\n\n[query]\nsql = \"SELECT step FROM trace\"\n";
+        assert!(ScenarioSpec::from_toml(bad, "q").is_err());
+        let bad = "action = \"query\"\n\n[query]\nsql = \"SELECT step FROM trace\"\nsteps = 0\n";
+        assert!(ScenarioSpec::from_toml(bad, "q").is_err());
+        // Schedule shape validation matches `simulate`.
+        let bad = "action = \"query\"\n\n[query]\nschedule = \"dualpipe\"\nmicrobatches = 8\n\
+                   sql = \"SELECT step FROM trace\"\n";
+        assert!(ScenarioSpec::from_toml(bad, "q").is_err());
+    }
+
+    #[test]
+    fn unknown_action_error_names_the_full_set() {
+        let err = ScenarioSpec::from_toml("action = \"fly\"\n", "x").unwrap_err().to_string();
+        assert!(err.contains("plan|sweep|simulate|kvcache|atlas|query"), "{err}");
     }
 
     #[test]

@@ -81,7 +81,9 @@ impl ServerClient {
 
     /// POST a scenario TOML document to its action endpoint and return
     /// the snapshot body. Non-200 answers become errors carrying the
-    /// server's message.
+    /// message decoded from the server's uniform error body
+    /// (`{"error": {"code", "endpoint", "message"}}`), falling back to
+    /// the raw body if it is not in that shape.
     pub fn post_scenario(
         &mut self,
         action: &str,
@@ -93,10 +95,22 @@ impl ServerClient {
         m.insert("scenario".into(), Json::Str(toml.into()));
         let (status, body) = self.request("POST", &format!("/{action}"), &Json::Obj(m).dump())?;
         if status != 200 {
-            anyhow::bail!("server answered {status} for scenario {name}: {}", body.trim());
+            let msg = error_message(&body);
+            anyhow::bail!("server answered {status} for scenario {name}: {msg}");
         }
         Ok(body)
     }
+}
+
+/// Pull `error.message` out of the server's uniform error body; when the
+/// body is not in that shape (a proxy answered, or the body was cut off)
+/// fall back to the trimmed raw text so the caller still sees something.
+fn error_message(body: &str) -> String {
+    let decoded = || -> Option<String> {
+        let doc = Json::parse(body).ok()?;
+        Some(doc.get("error").ok()?.get("message").ok()?.as_str().ok()?.to_string())
+    };
+    decoded().unwrap_or_else(|| body.trim().to_string())
 }
 
 /// Drive every scenario in `dir` through a running daemon as concurrent

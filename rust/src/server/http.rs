@@ -53,12 +53,14 @@ pub fn read_request(reader: &mut impl BufRead) -> std::io::Result<ReadOutcome> {
     else {
         return Ok(ReadOutcome::Bad(Response::error(
             400,
+            "",
             &format!("malformed request line: {line:?}"),
         )));
     };
     if version != "HTTP/1.1" && version != "HTTP/1.0" {
         return Ok(ReadOutcome::Bad(Response::error(
             400,
+            path,
             &format!("unsupported protocol version {version:?} (this server speaks HTTP/1.1)"),
         )));
     }
@@ -73,6 +75,7 @@ pub fn read_request(reader: &mut impl BufRead) -> std::io::Result<ReadOutcome> {
         if head_bytes > MAX_HEAD_BYTES {
             return Ok(ReadOutcome::Bad(Response::error(
                 431,
+                &path,
                 "request headers exceed 64 KiB",
             )));
         }
@@ -82,6 +85,7 @@ pub fn read_request(reader: &mut impl BufRead) -> std::io::Result<ReadOutcome> {
         let Some((name, value)) = line.split_once(':') else {
             return Ok(ReadOutcome::Bad(Response::error(
                 400,
+                &path,
                 &format!("malformed header line: {line:?}"),
             )));
         };
@@ -90,6 +94,7 @@ pub fn read_request(reader: &mut impl BufRead) -> std::io::Result<ReadOutcome> {
     if headers.contains_key("transfer-encoding") {
         return Ok(ReadOutcome::Bad(Response::error(
             400,
+            &path,
             "chunked transfer encoding is not supported — send a Content-Length body",
         )));
     }
@@ -99,6 +104,7 @@ pub fn read_request(reader: &mut impl BufRead) -> std::io::Result<ReadOutcome> {
             Err(_) => {
                 return Ok(ReadOutcome::Bad(Response::error(
                     400,
+                    &path,
                     &format!("unparseable Content-Length {v:?}"),
                 )));
             }
@@ -108,6 +114,7 @@ pub fn read_request(reader: &mut impl BufRead) -> std::io::Result<ReadOutcome> {
     if len > MAX_BODY_BYTES {
         return Ok(ReadOutcome::Bad(Response::error(
             413,
+            &path,
             "request body exceeds 8 MiB",
         )));
     }
@@ -116,6 +123,7 @@ pub fn read_request(reader: &mut impl BufRead) -> std::io::Result<ReadOutcome> {
     let Ok(body) = String::from_utf8(body) else {
         return Ok(ReadOutcome::Bad(Response::error(
             400,
+            &path,
             "request body is not valid UTF-8",
         )));
     };
@@ -202,10 +210,18 @@ impl Response {
         Self { status: 200, body: format!("{}\n", json.pretty()) }
     }
 
-    /// An error response wrapping a readable message as `{"error": msg}`.
-    pub fn error(status: u16, msg: &str) -> Self {
+    /// An error response in the one shape every endpoint answers with:
+    /// `{"error": {"code": status, "endpoint": path, "message": msg}}`
+    /// (compact, newline-terminated). `endpoint` is the request path when
+    /// one was parsed, `""` when framing failed before a path was known —
+    /// clients branch on structure, never on prose.
+    pub fn error(status: u16, endpoint: &str, msg: &str) -> Self {
+        let mut inner = BTreeMap::new();
+        inner.insert("code".into(), Json::Num(status as f64));
+        inner.insert("endpoint".into(), Json::Str(endpoint.into()));
+        inner.insert("message".into(), Json::Str(msg.into()));
         let mut m = BTreeMap::new();
-        m.insert("error".into(), Json::Str(msg.into()));
+        m.insert("error".into(), Json::Obj(inner));
         Self { status, body: format!("{}\n", Json::Obj(m).dump()) }
     }
 

@@ -146,7 +146,7 @@ fn serve_connection(stream: TcpStream, state: &ServerState) {
             Ok(ReadOutcome::Request(req)) => {
                 let resp = catch_unwind(AssertUnwindSafe(|| state.handle(&req)))
                     .unwrap_or_else(|_| {
-                        Response::error(500, "internal error: request handler panicked")
+                        Response::error(500, &req.path, "internal error: request handler panicked")
                     });
                 // Stop honoring keep-alive once shutdown is in flight so
                 // draining connections release their workers.

@@ -11,7 +11,7 @@
 //!
 //! | route | body | answer |
 //! |---|---|---|
-//! | `POST /plan` `/sweep` `/simulate` `/kvcache` `/atlas` | `{"scenario": "<toml>", "name"?}` | the scenario's snapshot document, byte-identical to a local `suite run` golden |
+//! | `POST /plan` `/sweep` `/simulate` `/kvcache` `/atlas` `/query` | `{"scenario": "<toml>", "name"?}` | the scenario's snapshot document, byte-identical to a local `suite run` golden |
 //! | `POST /report` | ledger knobs (all optional) | the `report --json` ledger/atlas document |
 //! | `POST /suite` | `{"dir"?}` | read-only golden comparison of an on-disk suite |
 //! | `POST /shutdown` | — | acks, then drains the worker pool |
@@ -22,6 +22,10 @@
 //! ([`ScenarioSpec::from_toml`]) so the daemon can never fork into a
 //! second query-assembly path — the load generator POSTs the exact bytes
 //! of each committed scenario file and byte-compares the answer.
+//!
+//! Every error path — routing, framing, handler failures — answers with
+//! one uniform body: `{"error": {"code", "endpoint", "message"}}` (see
+//! [`Response::error`]), so clients branch on structure, not prose.
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
@@ -37,8 +41,10 @@ use crate::scenario::{self, Action, ScenarioSpec};
 use crate::schedule::ScheduleSpec;
 use crate::util::Json;
 
-/// Scenario actions with a POST endpoint of the same name.
-const SCENARIO_ACTIONS: [&str; 5] = ["plan", "sweep", "simulate", "kvcache", "atlas"];
+/// Scenario actions with a POST endpoint of the same name — the full
+/// action set the suite knows, shared with the spec parser so a new
+/// action can never route here without also parsing there.
+const SCENARIO_ACTIONS: [&str; 6] = scenario::ACTION_NAMES;
 
 /// Cap on distinct evaluator contexts kept warm. Each context owns five
 /// bounded memo caches; 64 contexts bounds resident memory while covering
@@ -149,17 +155,19 @@ impl ServerState {
                     "/suite" => self.suite_endpoint(&req.body),
                     _ => self.scenario_endpoint(action.expect("scenario route"), &req.body),
                 };
-                out.unwrap_or_else(|e| Response::error(400, &e.to_string()))
+                out.unwrap_or_else(|e| Response::error(400, path, &e.to_string()))
             }
             _ if known_get || known_post => Response::error(
                 405,
+                path,
                 &format!("{path} does not accept {}", req.method),
             ),
             _ => Response::error(
                 404,
+                path,
                 &format!(
                     "unknown endpoint {path:?} — serving POST /plan /sweep /simulate /kvcache \
-                     /atlas /report /suite /shutdown and GET /healthz /stats"
+                     /atlas /query /report /suite /shutdown and GET /healthz /stats"
                 ),
             ),
         }

@@ -22,6 +22,7 @@ use crate::analysis::{DeviceStaticParams, MemoryModel, ZeroReport, ZeroStrategy}
 use crate::config::ActivationConfig;
 use crate::ledger::{Component, MemoryLedger};
 use crate::schedule::{PipelineOp, Schedule, ScheduleSpec};
+use crate::trace_store::{OpKind, OpMeta, TraceStore};
 
 /// Cap on transient communication buffers per stage, in bytes. §6 of the
 /// paper bounds temporal comm buffers to 0.8–2 GB per device: collectives
@@ -65,6 +66,9 @@ pub struct SimResult {
     pub spec: ScheduleSpec,
     pub num_microbatches: u64,
     pub stages: Vec<StageSimResult>,
+    /// The queryable event-level trace, populated when the engine ran
+    /// with [`SimEngine::record_trace`] on.
+    pub trace: Option<TraceStore>,
 }
 
 impl SimResult {
@@ -83,6 +87,14 @@ pub struct SimEngine<'a> {
     pub simulate_allocator: bool,
     /// Record per-event timelines (needed for `sim::trace` export).
     pub record_events: bool,
+    /// Populate a queryable [`TraceStore`] with the op-level timeline
+    /// (implies event recording; see [`SimEngine::trace_steps`]).
+    pub record_trace: bool,
+    /// Training steps to replay when tracing. Steps beyond the first
+    /// repeat the identical op stream (steady state), which is exactly
+    /// what the cross-step LAG growth query needs as a baseline. With
+    /// `record_trace` off this is ignored and one step is replayed.
+    pub trace_steps: u64,
     /// Gradient-bucket size for the collective plan.
     pub bucket_bytes: u64,
 }
@@ -95,6 +107,8 @@ impl<'a> SimEngine<'a> {
             zero,
             simulate_allocator: false,
             record_events: false,
+            record_trace: false,
+            trace_steps: 1,
             bucket_bytes: 500 << 20,
         }
     }
@@ -108,6 +122,8 @@ impl<'a> SimEngine<'a> {
         let unit_div = sched.units_per_microbatch().max(1);
         let param_mult = sched.param_multiplier();
 
+        let steps = if self.record_trace { self.trace_steps.max(1) } else { 1 };
+        let mut trace = self.record_trace.then(TraceStore::default);
         let mut stages = Vec::with_capacity(plan.stages.len());
         for sinfo in &plan.stages {
             let s = sinfo.stage;
@@ -153,10 +169,15 @@ impl<'a> SimEngine<'a> {
             );
 
             let mut tl = MemoryTimeline::new();
-            tl.record_events = self.record_events;
+            tl.record_events = self.record_events || self.record_trace;
             let mut alloc = self.simulate_allocator.then(CachingAllocator::default);
             let mut live_allocs: std::collections::HashMap<(u64, u64), Vec<u64>> =
                 Default::default();
+            // Trace side-channels: one meta per replayed op and one
+            // allocator reserved-bytes sample per op boundary; the store
+            // joins timeline events to both by time.
+            let mut metas: Vec<OpMeta> = Vec::new();
+            let mut samples: Vec<(u64, u64)> = Vec::new();
 
             let mut t = 0u64;
             // t0: static state. Weights carry the schedule's replica
@@ -176,79 +197,110 @@ impl<'a> SimEngine<'a> {
                 a.alloc(zrow.gradient_bytes);
                 a.alloc(zrow.optimizer_bytes);
             }
+            if self.record_trace {
+                metas.push(OpMeta { time: 0, step: 0, op: OpKind::Setup, mb: 0, chunk: 0 });
+                if let Some(a) = alloc.as_ref() {
+                    samples.push((0, a.stats().reserved));
+                }
+            }
 
             let mut inflight = 0u64;
             let mut peak_inflight = 0u64;
-            for op in &schedule.ops[s as usize] {
-                t += 1;
-                match *op {
-                    PipelineOp::Forward { mb, chunk } => {
-                        // Transient PP recv + SP gather buffers around the op.
-                        let buf = cplan.peak_buffer_bytes().min(COMM_BUFFER_CAP_BYTES);
-                        tl.alloc(t, Component::CommBuffer, buf);
-                        // The activation tape of this unit, itemized so the
-                        // allocator sees realistic block sizes. A unit covers
-                        // 1/unit_div of the stage's layers, so the allocator
-                        // replay charges the same share the timeline does.
-                        if let Some(a) = alloc.as_mut() {
-                            let ids = self.tape_allocs(
-                                a,
-                                &ar,
-                                sinfo.moe_layers / unit_div,
-                                sinfo.num_layers / unit_div,
-                            );
-                            live_allocs.insert((mb, chunk), ids);
-                        }
-                        // One timeline allocation per tagged component: the
-                        // peak decomposes into the ledger taxonomy.
-                        for (c, bytes) in act_unit.iter() {
-                            if bytes > 0 {
-                                tl.alloc(t, c, bytes);
-                            }
-                        }
-                        tl.free(t, Component::CommBuffer, buf);
-                        inflight += 1;
-                        peak_inflight = peak_inflight.max(inflight);
+            for step in 0..steps {
+                for op in &schedule.ops[s as usize] {
+                    t += 1;
+                    if self.record_trace {
+                        let (kind, mb, chunk) = match *op {
+                            PipelineOp::Forward { mb, chunk } => (OpKind::Forward, mb, chunk),
+                            PipelineOp::Backward { mb, chunk } => (OpKind::Backward, mb, chunk),
+                            PipelineOp::WeightGrad { mb, chunk } => (OpKind::WeightGrad, mb, chunk),
+                        };
+                        metas.push(OpMeta { time: t, step, op: kind, mb, chunk });
                     }
-                    PipelineOp::Backward { mb, chunk } => {
-                        // Backward transient: dgrad workspace ≈ one layer's
-                        // activation + comm buffers.
-                        let buf = cplan.peak_buffer_bytes().min(COMM_BUFFER_CAP_BYTES);
-                        let wsp = act_bytes_per_unit / sinfo.num_layers.max(1);
-                        tl.alloc(t, Component::CommBuffer, buf);
-                        tl.alloc(t, Component::Workspace, wsp);
-                        for (c, bytes) in act_unit.iter() {
-                            if bytes > 0 {
-                                tl.free(t, c, bytes);
+                    match *op {
+                        PipelineOp::Forward { mb, chunk } => {
+                            // Transient PP recv + SP gather buffers around the op.
+                            let buf = cplan.peak_buffer_bytes().min(COMM_BUFFER_CAP_BYTES);
+                            tl.alloc(t, Component::CommBuffer, buf);
+                            // The activation tape of this unit, itemized so the
+                            // allocator sees realistic block sizes. A unit covers
+                            // 1/unit_div of the stage's layers, so the allocator
+                            // replay charges the same share the timeline does.
+                            if let Some(a) = alloc.as_mut() {
+                                let ids = self.tape_allocs(
+                                    a,
+                                    &ar,
+                                    sinfo.moe_layers / unit_div,
+                                    sinfo.num_layers / unit_div,
+                                );
+                                live_allocs.insert((mb, chunk), ids);
                             }
-                        }
-                        if let Some(a) = alloc.as_mut() {
-                            for id in live_allocs.remove(&(mb, chunk)).unwrap_or_default() {
-                                a.free(id);
+                            // One timeline allocation per tagged component: the
+                            // peak decomposes into the ledger taxonomy.
+                            for (c, bytes) in act_unit.iter() {
+                                if bytes > 0 {
+                                    tl.alloc(t, c, bytes);
+                                }
                             }
+                            tl.free(t, Component::CommBuffer, buf);
+                            inflight += 1;
+                            peak_inflight = peak_inflight.max(inflight);
                         }
-                        tl.free(t, Component::Workspace, wsp);
-                        tl.free(t, Component::CommBuffer, buf);
-                        inflight -= 1;
+                        PipelineOp::Backward { mb, chunk } => {
+                            // Backward transient: dgrad workspace ≈ one layer's
+                            // activation + comm buffers.
+                            let buf = cplan.peak_buffer_bytes().min(COMM_BUFFER_CAP_BYTES);
+                            let wsp = act_bytes_per_unit / sinfo.num_layers.max(1);
+                            tl.alloc(t, Component::CommBuffer, buf);
+                            tl.alloc(t, Component::Workspace, wsp);
+                            for (c, bytes) in act_unit.iter() {
+                                if bytes > 0 {
+                                    tl.free(t, c, bytes);
+                                }
+                            }
+                            if let Some(a) = alloc.as_mut() {
+                                for id in live_allocs.remove(&(mb, chunk)).unwrap_or_default() {
+                                    a.free(id);
+                                }
+                            }
+                            tl.free(t, Component::Workspace, wsp);
+                            tl.free(t, Component::CommBuffer, buf);
+                            inflight -= 1;
+                        }
+                        PipelineOp::WeightGrad { .. } => {
+                            // Zero-bubble weight-gradient pass: the activation
+                            // tape is already released by the input-gradient
+                            // pass; only a one-layer workspace is transiently
+                            // alive.
+                            let wsp = act_bytes_per_unit / sinfo.num_layers.max(1);
+                            tl.alloc(t, Component::Workspace, wsp);
+                            tl.free(t, Component::Workspace, wsp);
+                        }
                     }
-                    PipelineOp::WeightGrad { .. } => {
-                        // Zero-bubble weight-gradient pass: the activation
-                        // tape is already released by the input-gradient
-                        // pass; only a one-layer workspace is transiently
-                        // alive.
-                        let wsp = act_bytes_per_unit / sinfo.num_layers.max(1);
-                        tl.alloc(t, Component::Workspace, wsp);
-                        tl.free(t, Component::Workspace, wsp);
+                    if self.record_trace {
+                        if let Some(a) = alloc.as_ref() {
+                            samples.push((t, a.stats().reserved));
+                        }
                     }
                 }
+                // Optimizer step at the end of the step window: grads all-reduced
+                // (bucket buffers), then Adam update in place.
+                t += 1;
+                if self.record_trace {
+                    metas.push(OpMeta { time: t, step, op: OpKind::Optimizer, mb: 0, chunk: 0 });
+                }
+                let buf = (2 * self.bucket_bytes).min(COMM_BUFFER_CAP_BYTES);
+                tl.alloc(t, Component::CommBuffer, buf);
+                tl.free(t + 1, Component::CommBuffer, buf);
+                // Keep op times strictly increasing into the next step: the
+                // optimizer's bucket free lands at t+1, so the next step's
+                // first op must start at t+2 for the trace join to stay exact.
+                t += 1;
             }
-            // Optimizer step at the end of the step window: grads all-reduced
-            // (bucket buffers), then Adam update in place.
-            t += 1;
-            let buf = (2 * self.bucket_bytes).min(COMM_BUFFER_CAP_BYTES);
-            tl.alloc(t, Component::CommBuffer, buf);
-            tl.free(t + 1, Component::CommBuffer, buf);
 
+            if let Some(store) = trace.as_mut() {
+                store.add_stage(s, tl.events(), &metas, &samples);
+            }
             stages.push(StageSimResult {
                 stage: s,
                 timeline: tl,
@@ -257,7 +309,7 @@ impl<'a> SimEngine<'a> {
             });
         }
 
-        Ok(SimResult { spec, num_microbatches, stages })
+        Ok(SimResult { spec, num_microbatches, stages, trace })
     }
 
     /// Component-tagged activation ledger of one microbatch on a stage with
@@ -439,6 +491,29 @@ mod tests {
             st.timeline.ledger_at_total_peak().total(),
             st.timeline.total_peak()
         );
+    }
+
+    #[test]
+    fn trace_recording_preserves_peaks_and_populates_store() {
+        let mm = mm();
+        let act = ActivationConfig::paper(1);
+        let eng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+        let base = eng.run(ScheduleSpec::OneFOneB, 8).unwrap();
+        assert!(base.trace.is_none());
+        let mut teng = SimEngine::new(&mm, act, ZeroStrategy::OsG);
+        teng.record_trace = true;
+        teng.trace_steps = 2;
+        let traced = teng.run(ScheduleSpec::OneFOneB, 8).unwrap();
+        let store = traced.trace.as_ref().unwrap();
+        assert!(store.len() > 0);
+        // Replaying extra steady-state steps must not move any peak: every
+        // step repeats the identical op stream and nets to zero.
+        for (a, b) in base.stages.iter().zip(&traced.stages) {
+            assert_eq!(a.timeline.total_peak(), b.timeline.total_peak(), "stage {}", a.stage);
+            for (c, bytes) in a.peak_ledger().iter() {
+                assert_eq!(b.timeline.peak(c), bytes, "{c:?}");
+            }
+        }
     }
 
     #[test]

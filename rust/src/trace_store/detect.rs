@@ -1,0 +1,58 @@
+//! Canned detector reports built on the query engine. Detectors resolve
+//! to plain SQL strings at configuration time, so a snapshot of a
+//! detector run records the exact query it executed — reproducible with
+//! `dsmem query "<sql>"` verbatim.
+
+/// The cross-step memory-growth detector (probing's LAG idiom): for each
+/// logical event position `(stage, seq)`, compare the running total
+/// against the previous step's total at the same position and keep the
+/// largest absolute deltas. In a steady-state replay every step > 1 row
+/// nets to zero, so anything the threshold catches is warm-up divergence
+/// or a genuine per-step leak.
+pub fn growth_sql(threshold_bytes: u64, limit: u64) -> String {
+    format!(
+        "SELECT stage, step, seq, op, component, total, total - lag(total) OVER \
+         (PARTITION BY stage, seq ORDER BY step) AS delta_bytes FROM trace \
+         HAVING abs(delta_bytes) > {threshold_bytes} ORDER BY delta_bytes DESC, \
+         stage, step, seq LIMIT {limit}"
+    )
+}
+
+/// The fragmentation-trend detector: per (step, stage), the gap between
+/// the caching allocator's reserved peak and the ledger's allocated peak.
+/// Needs the sim to run with the allocator replay on (`frag = true`);
+/// without it `reserved` is 0 and the gap goes negative.
+pub fn fragtrend_sql() -> String {
+    "SELECT step, stage, max(reserved) AS peak_reserved, max(total) AS peak_allocated, \
+     max(reserved) - max(total) AS frag_bytes FROM trace GROUP BY step, stage \
+     ORDER BY step, stage"
+        .to_string()
+}
+
+/// Resolve a detector name to its SQL. Unknown names fail naming the
+/// valid set.
+pub fn detector_sql(name: &str, threshold_bytes: u64, limit: u64) -> anyhow::Result<String> {
+    match name {
+        "growth" => Ok(growth_sql(threshold_bytes, limit)),
+        "fragtrend" => Ok(fragtrend_sql()),
+        other => anyhow::bail!("unknown detector {other:?} (detectors: growth, fragtrend)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detector_sql_parses_through_the_query_layer() {
+        for sql in [growth_sql(64 << 20, 20), fragtrend_sql()] {
+            crate::trace_store::parse(&sql).unwrap_or_else(|e| panic!("{sql}: {e}"));
+        }
+    }
+
+    #[test]
+    fn unknown_detector_names_the_valid_set() {
+        let err = detector_sql("leak", 0, 0).unwrap_err().to_string();
+        assert!(err.contains("growth, fragtrend"), "{err}");
+    }
+}

@@ -1,0 +1,608 @@
+//! Query executor: `WHERE` filter → (grouped aggregation | LAG window
+//! precompute | plain projection) → `HAVING` → stable `ORDER BY` →
+//! `LIMIT`. Everything is deterministic: groups come out of a `BTreeMap`,
+//! sorts are stable, and [`Value`] carries a total order, so identical
+//! stores always produce byte-identical results — the property the golden
+//! snapshots and the CLI/server byte-identity test lean on.
+
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+
+use crate::report::Table;
+use crate::util::Json;
+
+use super::sql::{AggFn, CmpOp, Cond, Expr, Query};
+use super::store::{column_ref, ColRef, TraceStore};
+
+/// A query cell. `Null` is produced by LAG's first-in-partition rows and
+/// by `max`/`min`/`avg` over empty groups; it propagates through
+/// arithmetic and makes every comparison false (SQL-like).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+impl Value {
+    /// JSON rendering: integers stay exact, `Null` maps to JSON null.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Value::Null => Json::Null,
+            Value::Int(i) => Json::Num(*i as f64),
+            Value::Float(f) => Json::Num(*f),
+            Value::Str(s) => Json::Str(s.clone()),
+        }
+    }
+
+    /// Plain-text rendering for the CLI table.
+    pub fn render(&self) -> String {
+        match self {
+            Value::Null => "null".into(),
+            Value::Int(i) => i.to_string(),
+            Value::Float(f) => {
+                if f.fract() == 0.0 && f.abs() < 9e15 {
+                    format!("{}", *f as i64)
+                } else {
+                    format!("{f}")
+                }
+            }
+            Value::Str(s) => s.clone(),
+        }
+    }
+}
+
+/// Total order over values: `Null < numbers < strings`, numbers compared
+/// numerically across `Int`/`Float` (ties broken by variant so the order
+/// is consistent with equality for map keys).
+pub fn cmp_values(a: &Value, b: &Value) -> Ordering {
+    use Value::*;
+    match (a, b) {
+        (Null, Null) => Ordering::Equal,
+        (Null, _) => Ordering::Less,
+        (_, Null) => Ordering::Greater,
+        (Str(x), Str(y)) => x.cmp(y),
+        (Str(_), _) => Ordering::Greater,
+        (_, Str(_)) => Ordering::Less,
+        (Int(x), Int(y)) => x.cmp(y),
+        (Int(x), Float(y)) => (*x as f64).total_cmp(y).then(Ordering::Less),
+        (Float(x), Int(y)) => x.total_cmp(&(*y as f64)).then(Ordering::Greater),
+        (Float(x), Float(y)) => x.total_cmp(y),
+    }
+}
+
+/// Grouping key wrapper giving `Vec<Value>` the total order above.
+#[derive(Debug, Clone, PartialEq)]
+struct GroupKey(Vec<Value>);
+
+impl Eq for GroupKey {}
+
+impl Ord for GroupKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        for (a, b) in self.0.iter().zip(other.0.iter()) {
+            let o = cmp_values(a, b);
+            if o != Ordering::Equal {
+                return o;
+            }
+        }
+        self.0.len().cmp(&other.0.len())
+    }
+}
+
+impl PartialOrd for GroupKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The result of a query: output column names plus row-major values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryResult {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Value>>,
+}
+
+impl QueryResult {
+    /// `{"columns": [...], "rows": [[...], ...]}` — the shape embedded in
+    /// query snapshots and served by `POST /query`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "columns".to_string(),
+            Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+        );
+        m.insert(
+            "rows".to_string(),
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(Value::to_json).collect()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    /// Render through the standard CLI table renderer.
+    pub fn table(&self, title: &str) -> Table {
+        let headers: Vec<&str> = self.columns.iter().map(String::as_str).collect();
+        let mut t = Table::new(title, &headers);
+        for row in &self.rows {
+            t.row(row.iter().map(Value::render).collect());
+        }
+        t
+    }
+}
+
+/// Evaluation context: what a bare column name resolves to.
+enum Ctx<'a> {
+    /// Per-row (WHERE, and SELECT outside aggregate mode): store columns,
+    /// with precomputed LAG vectors keyed by rendered expression.
+    Row { store: &'a TraceStore, row: usize, lags: &'a BTreeMap<String, Vec<Value>>, pos: usize },
+    /// Per-group (SELECT in aggregate mode): group-key columns and
+    /// aggregates over the group's rows.
+    Group { store: &'a TraceStore, rows: &'a [usize], keys: &'a BTreeMap<String, Value> },
+    /// Post-projection (HAVING, ORDER BY): output columns of this row.
+    Out { cols: &'a [String], vals: &'a [Value] },
+}
+
+fn eval(e: &Expr, ctx: &Ctx) -> anyhow::Result<Value> {
+    match e {
+        Expr::Num(n) => Ok(Value::Int(*n)),
+        Expr::Str(s) => Ok(Value::Str(s.clone())),
+        Expr::Col(name) => match ctx {
+            Ctx::Row { store, row, .. } => Ok(store.value(*row, column_ref(name)?)),
+            Ctx::Group { keys, .. } => keys
+                .get(name)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("column {name:?} is not a group column")),
+            Ctx::Out { cols, vals } => cols
+                .iter()
+                .position(|c| c == name)
+                .map(|i| vals[i].clone())
+                .ok_or_else(|| anyhow::anyhow!("{name:?} is not an output column")),
+        },
+        Expr::Agg(f, arg) => match ctx {
+            Ctx::Group { store, rows, .. } => aggregate(*f, arg.as_deref(), store, rows),
+            _ => anyhow::bail!("aggregate {} outside GROUP BY evaluation", e.display()),
+        },
+        Expr::Lag { .. } => match ctx {
+            Ctx::Row { lags, pos, .. } => {
+                let vals = lags
+                    .get(&e.display())
+                    .ok_or_else(|| anyhow::anyhow!("LAG vector missing for {}", e.display()))?;
+                Ok(vals[*pos].clone())
+            }
+            _ => anyhow::bail!("LAG outside row evaluation"),
+        },
+        Expr::Abs(inner) => match eval(inner, ctx)? {
+            Value::Null => Ok(Value::Null),
+            Value::Int(i) => Ok(Value::Int(i.abs())),
+            Value::Float(f) => Ok(Value::Float(f.abs())),
+            Value::Str(_) => anyhow::bail!("abs() over a string column"),
+        },
+        Expr::Add(a, b) => arith(eval(a, ctx)?, eval(b, ctx)?, false),
+        Expr::Sub(a, b) => arith(eval(a, ctx)?, eval(b, ctx)?, true),
+    }
+}
+
+fn arith(a: Value, b: Value, sub: bool) -> anyhow::Result<Value> {
+    match (a, b) {
+        (Value::Null, _) | (_, Value::Null) => Ok(Value::Null),
+        (Value::Int(x), Value::Int(y)) => {
+            Ok(Value::Int(if sub { x.wrapping_sub(y) } else { x.wrapping_add(y) }))
+        }
+        (Value::Str(_), _) | (_, Value::Str(_)) => {
+            anyhow::bail!("arithmetic over a string column")
+        }
+        (x, y) => {
+            let (x, y) = (as_f64(&x), as_f64(&y));
+            Ok(Value::Float(if sub { x - y } else { x + y }))
+        }
+    }
+}
+
+fn as_f64(v: &Value) -> f64 {
+    match v {
+        Value::Int(i) => *i as f64,
+        Value::Float(f) => *f,
+        _ => f64::NAN,
+    }
+}
+
+fn aggregate(
+    f: AggFn,
+    col: Option<&str>,
+    store: &TraceStore,
+    rows: &[usize],
+) -> anyhow::Result<Value> {
+    if f == AggFn::Count {
+        return Ok(Value::Int(rows.len() as i64));
+    }
+    let col = col.ok_or_else(|| anyhow::anyhow!("aggregate needs a column argument"))?;
+    let cref = column_ref(col)?;
+    match f {
+        AggFn::Max | AggFn::Min => {
+            let mut best: Option<Value> = None;
+            for &r in rows {
+                let v = store.value(r, cref);
+                best = Some(match best {
+                    None => v,
+                    Some(b) => {
+                        let take = match cmp_values(&v, &b) {
+                            Ordering::Greater => f == AggFn::Max,
+                            Ordering::Less => f == AggFn::Min,
+                            Ordering::Equal => false,
+                        };
+                        if take {
+                            v
+                        } else {
+                            b
+                        }
+                    }
+                });
+            }
+            Ok(best.unwrap_or(Value::Null))
+        }
+        AggFn::Sum | AggFn::Avg => {
+            let mut sum_i: i64 = 0;
+            let mut sum_f: f64 = 0.0;
+            let mut float = false;
+            for &r in rows {
+                match store.value(r, cref) {
+                    Value::Int(i) => {
+                        sum_i = sum_i.wrapping_add(i);
+                        sum_f += i as f64;
+                    }
+                    Value::Float(x) => {
+                        float = true;
+                        sum_f += x;
+                    }
+                    Value::Null => {}
+                    Value::Str(_) => anyhow::bail!("{}({col}) over a string column", match f {
+                        AggFn::Sum => "sum",
+                        _ => "avg",
+                    }),
+                }
+            }
+            if f == AggFn::Sum {
+                Ok(if float { Value::Float(sum_f) } else { Value::Int(sum_i) })
+            } else if rows.is_empty() {
+                Ok(Value::Null)
+            } else {
+                Ok(Value::Float(sum_f / rows.len() as f64))
+            }
+        }
+        AggFn::Count => unreachable!("handled above"),
+    }
+}
+
+fn cond_true(cond: &Cond, ctx: &Ctx) -> anyhow::Result<bool> {
+    let lhs = eval(&cond.lhs, ctx)?;
+    let rhs = eval(&cond.rhs, ctx)?;
+    // SQL-like three-valued comparison collapsed to bool: anything
+    // involving Null (or a string/number type mismatch) is false.
+    let ord = match (&lhs, &rhs) {
+        (Value::Null, _) | (_, Value::Null) => return Ok(false),
+        (Value::Str(a), Value::Str(b)) => a.cmp(b),
+        (Value::Str(_), _) | (_, Value::Str(_)) => return Ok(false),
+        (a, b) => as_f64(a).total_cmp(&as_f64(b)),
+    };
+    Ok(match cond.op {
+        CmpOp::Eq => ord == Ordering::Equal,
+        CmpOp::Ne => ord != Ordering::Equal,
+        CmpOp::Lt => ord == Ordering::Less,
+        CmpOp::Le => ord != Ordering::Greater,
+        CmpOp::Gt => ord == Ordering::Greater,
+        CmpOp::Ge => ord != Ordering::Less,
+    })
+}
+
+/// Precompute one lagged-value vector per distinct LAG expression,
+/// aligned with the filtered row positions. The window sort is stable
+/// over (partition cols, order cols), so ties keep store order.
+fn precompute_lags(
+    store: &TraceStore,
+    idx: &[usize],
+    q: &Query,
+) -> anyhow::Result<BTreeMap<String, Vec<Value>>> {
+    let mut lags = BTreeMap::new();
+    for item in &q.items {
+        let mut exprs = Vec::new();
+        item.expr.visit_lags(&mut exprs);
+        for (col, partition, order) in exprs {
+            let key = Expr::Lag {
+                col: col.clone(),
+                partition: partition.clone(),
+                order: order.clone(),
+            }
+            .display();
+            if lags.contains_key(&key) {
+                continue;
+            }
+            let part_refs: Vec<ColRef> =
+                partition.iter().map(|c| column_ref(c)).collect::<anyhow::Result<_>>()?;
+            let order_refs: Vec<ColRef> =
+                order.iter().map(|c| column_ref(c)).collect::<anyhow::Result<_>>()?;
+            let val_ref = column_ref(&col)?;
+            let mut sorted: Vec<usize> = (0..idx.len()).collect();
+            sorted.sort_by(|&a, &b| {
+                for &c in part_refs.iter().chain(order_refs.iter()) {
+                    let o = cmp_values(&store.value(idx[a], c), &store.value(idx[b], c));
+                    if o != Ordering::Equal {
+                        return o;
+                    }
+                }
+                Ordering::Equal
+            });
+            let mut vals = vec![Value::Null; idx.len()];
+            for w in 1..sorted.len() {
+                let (prev, cur) = (sorted[w - 1], sorted[w]);
+                let same_partition = part_refs.iter().all(|&c| {
+                    cmp_values(&store.value(idx[prev], c), &store.value(idx[cur], c))
+                        == Ordering::Equal
+                });
+                if same_partition {
+                    vals[cur] = store.value(idx[prev], val_ref);
+                }
+            }
+            lags.insert(key, vals);
+        }
+    }
+    Ok(lags)
+}
+
+impl Expr {
+    fn visit_lags(&self, out: &mut Vec<(String, Vec<String>, Vec<String>)>) {
+        match self {
+            Expr::Lag { col, partition, order } => {
+                out.push((col.clone(), partition.clone(), order.clone()))
+            }
+            Expr::Abs(e) => e.visit_lags(out),
+            Expr::Add(a, b) | Expr::Sub(a, b) => {
+                a.visit_lags(out);
+                b.visit_lags(out);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Execute a parsed query against a store.
+pub fn execute(store: &TraceStore, q: &Query) -> anyhow::Result<QueryResult> {
+    let empty_lags = BTreeMap::new();
+    // WHERE.
+    let mut idx = Vec::new();
+    'rows: for row in 0..store.len() {
+        let ctx = Ctx::Row { store, row, lags: &empty_lags, pos: 0 };
+        for cond in &q.where_ {
+            if !cond_true(cond, &ctx)? {
+                continue 'rows;
+            }
+        }
+        idx.push(row);
+    }
+    let columns = q.output_columns();
+    let mut rows = Vec::new();
+    if q.aggregate_mode() {
+        let group_refs: Vec<ColRef> =
+            q.group_by.iter().map(|c| column_ref(c)).collect::<anyhow::Result<_>>()?;
+        let mut groups: BTreeMap<GroupKey, Vec<usize>> = BTreeMap::new();
+        if group_refs.is_empty() {
+            // Implicit single group over all filtered rows.
+            groups.insert(GroupKey(Vec::new()), idx);
+        } else {
+            for &row in &idx {
+                let key = GroupKey(group_refs.iter().map(|&c| store.value(row, c)).collect());
+                groups.entry(key).or_default().push(row);
+            }
+        }
+        for (key, grp_rows) in &groups {
+            let keys: BTreeMap<String, Value> =
+                q.group_by.iter().cloned().zip(key.0.iter().cloned()).collect();
+            let ctx = Ctx::Group { store, rows: grp_rows, keys: &keys };
+            rows.push(
+                q.items.iter().map(|i| eval(&i.expr, &ctx)).collect::<anyhow::Result<Vec<_>>>()?,
+            );
+        }
+    } else {
+        let lags = precompute_lags(store, &idx, q)?;
+        for (pos, &row) in idx.iter().enumerate() {
+            let ctx = Ctx::Row { store, row, lags: &lags, pos };
+            rows.push(
+                q.items.iter().map(|i| eval(&i.expr, &ctx)).collect::<anyhow::Result<Vec<_>>>()?,
+            );
+        }
+    }
+    // HAVING over output columns.
+    if !q.having.is_empty() {
+        let mut kept = Vec::with_capacity(rows.len());
+        for row in rows {
+            let ctx = Ctx::Out { cols: &columns, vals: &row };
+            let mut keep = true;
+            for cond in &q.having {
+                if !cond_true(cond, &ctx)? {
+                    keep = false;
+                    break;
+                }
+            }
+            if keep {
+                kept.push(row);
+            }
+        }
+        rows = kept;
+    }
+    // Stable multi-key ORDER BY: sort by each key right-to-left.
+    for (col, desc) in q.order_by.iter().rev() {
+        let ci = columns
+            .iter()
+            .position(|c| c == col)
+            .ok_or_else(|| anyhow::anyhow!("ORDER BY references unknown column {col:?}"))?;
+        rows.sort_by(|a, b| {
+            let o = cmp_values(&a[ci], &b[ci]);
+            if *desc {
+                o.reverse()
+            } else {
+                o
+            }
+        });
+    }
+    if let Some(n) = q.limit {
+        rows.truncate(n);
+    }
+    Ok(QueryResult { columns, rows })
+}
+
+/// Parse + execute in one step.
+pub fn run_query(store: &TraceStore, sql: &str) -> anyhow::Result<QueryResult> {
+    execute(store, &super::sql::parse(sql)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::store::{OpKind, OpMeta};
+    use super::*;
+    use crate::ledger::Component;
+    use crate::sim::tracker::MemEvent;
+
+    /// Two steps of a toy trace: setup + one forward per step, with a
+    /// deliberate 10-byte activation growth at step 1.
+    fn toy_store() -> TraceStore {
+        let mut st = TraceStore::default();
+        for stage in 0..2u64 {
+            let events = [
+                MemEvent { time: 0, class: Component::ParamsDense, delta: 100 },
+                MemEvent { time: 1, class: Component::ActivationAttention, delta: 50 },
+                MemEvent { time: 2, class: Component::ActivationAttention, delta: -50 },
+                MemEvent { time: 3, class: Component::ActivationAttention, delta: 60 },
+                MemEvent { time: 4, class: Component::ActivationAttention, delta: -60 },
+            ];
+            let ops = [
+                OpMeta { time: 0, step: 0, op: OpKind::Setup, mb: 0, chunk: 0 },
+                OpMeta { time: 1, step: 0, op: OpKind::Forward, mb: 0, chunk: 0 },
+                OpMeta { time: 2, step: 0, op: OpKind::Optimizer, mb: 0, chunk: 0 },
+                OpMeta { time: 3, step: 1, op: OpKind::Forward, mb: 0, chunk: 0 },
+                OpMeta { time: 4, step: 1, op: OpKind::Optimizer, mb: 0, chunk: 0 },
+            ];
+            st.add_stage(stage, &events, &ops, &[]);
+        }
+        st
+    }
+
+    #[test]
+    fn group_by_aggregates_match_hand_counts() {
+        let st = toy_store();
+        let r = run_query(
+            &st,
+            "SELECT stage, max(total) AS peak, count(*) AS n FROM trace GROUP BY stage \
+             ORDER BY stage",
+        )
+        .unwrap();
+        assert_eq!(r.columns, ["stage", "peak", "n"]);
+        assert_eq!(
+            r.rows,
+            vec![
+                vec![Value::Int(0), Value::Int(160), Value::Int(5)],
+                vec![Value::Int(1), Value::Int(160), Value::Int(5)],
+            ]
+        );
+    }
+
+    #[test]
+    fn where_filters_and_avg_is_float() {
+        let st = toy_store();
+        let r = run_query(
+            &st,
+            "SELECT avg(delta) AS d, sum(delta) AS s FROM trace WHERE op = 'forward' \
+             AND stage = 0",
+        )
+        .unwrap();
+        assert_eq!(r.rows, vec![vec![Value::Float(55.0), Value::Int(110)]]);
+    }
+
+    #[test]
+    fn lag_partitions_by_stage_and_seq_across_steps() {
+        let st = toy_store();
+        // seq 0 of step 0 is setup; step 1's events start at seq 0 again,
+        // so (stage, seq) pairs align the forward alloc/free across steps.
+        let r = run_query(
+            &st,
+            "SELECT stage, seq, step, total - lag(total) OVER (PARTITION BY stage, seq \
+             ORDER BY step) AS growth FROM trace WHERE step > 0 OR op = 'forward' \
+             HAVING growth > 0 ORDER BY growth DESC, stage, seq",
+        )
+        .unwrap();
+        // Step 0 forward rows are seq 1 (alloc) with totals 150/100; step 1
+        // rows are seq 0/1 with totals 160/100. Partition (stage, seq=1):
+        // step0 alloc total=150 vs step1 free total=100 → negative; seq 0
+        // has no step-0 partner after WHERE except... forward alloc step0
+        // seq1. The only positive growths come from aligned pairs.
+        for row in &r.rows {
+            assert!(matches!(row[3], Value::Int(n) if n > 0), "{row:?}");
+        }
+    }
+
+    #[test]
+    fn lag_first_row_is_null_and_null_comparisons_drop() {
+        let st = toy_store();
+        let r = run_query(
+            &st,
+            "SELECT stage, seq, lag(total) OVER (PARTITION BY stage, seq ORDER BY step) \
+             AS prev FROM trace ORDER BY stage, seq LIMIT 1",
+        )
+        .unwrap();
+        assert_eq!(r.rows[0][2], Value::Null);
+        let filtered = run_query(
+            &st,
+            "SELECT lag(total) OVER (PARTITION BY stage, seq ORDER BY step) AS prev \
+             FROM trace HAVING prev >= 0",
+        )
+        .unwrap();
+        // Every surviving row has a non-null lag.
+        assert!(filtered.rows.iter().all(|r| r[0] != Value::Null));
+        assert!(!filtered.rows.is_empty());
+    }
+
+    #[test]
+    fn order_by_is_stable_and_limit_truncates() {
+        let st = toy_store();
+        let r = run_query(
+            &st,
+            "SELECT stage, seq, step FROM trace ORDER BY step DESC, stage, seq LIMIT 3",
+        )
+        .unwrap();
+        assert_eq!(r.rows.len(), 3);
+        assert_eq!(r.rows[0][2], Value::Int(1));
+        // Secondary keys ascending under the primary DESC key.
+        assert!(cmp_values(&r.rows[0][0], &r.rows[1][0]) != Ordering::Greater);
+    }
+
+    #[test]
+    fn component_columns_and_string_aggregates_work() {
+        let st = toy_store();
+        let r = run_query(
+            &st,
+            "SELECT max(activation_attention) AS peak_act, max(op) AS last_op FROM trace",
+        )
+        .unwrap();
+        assert_eq!(r.rows, vec![vec![Value::Int(60), Value::Str("setup".into())]]);
+    }
+
+    #[test]
+    fn json_and_table_renderings_agree_on_shape() {
+        let st = toy_store();
+        let r = run_query(&st, "SELECT stage, max(total) AS peak FROM trace GROUP BY stage")
+            .unwrap();
+        let json = r.to_json();
+        let t = r.table("query");
+        let rendered = t.render();
+        assert!(rendered.contains("peak"), "{rendered}");
+        match json {
+            Json::Obj(m) => {
+                assert!(m.contains_key("columns") && m.contains_key("rows"));
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
+    }
+}

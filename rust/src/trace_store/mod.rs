@@ -1,0 +1,39 @@
+//! Queryable memory-trace store: the sim's op-level allocation timeline
+//! persisted into a small columnar store with a hand-rolled SQL-subset
+//! query layer on top.
+//!
+//! The engine replays every allocator event per op/stage/microbatch but
+//! historically only reported peaks. With `record_trace` on,
+//! [`crate::sim::SimEngine`] feeds the full step/stage/op-level timeline
+//! into a [`TraceStore`] (component-tagged via the 13-component ledger
+//! taxonomy), and the whole family of trend-, growth- and
+//! fragmentation-regression questions becomes a query:
+//!
+//! ```text
+//! SELECT stage, max(allocated) AS peak FROM trace GROUP BY stage
+//! SELECT stage, step, total - lag(total) OVER (PARTITION BY stage, seq
+//!     ORDER BY step) AS delta_bytes FROM trace
+//!     HAVING abs(delta_bytes) > 67108864 ORDER BY delta_bytes DESC
+//! ```
+//!
+//! One engine, four surfaces: `dsmem query "SELECT ..."` on the CLI, a
+//! `query` scenario action riding the golden snapshot gate, `POST /query`
+//! on the serve daemon (byte-identical to the CLI — all three call
+//! [`crate::scenario::run_scenario`] on the same spec), and the canned
+//! `growth`/`fragtrend` detectors in [`detect`] which resolve to plain
+//! SQL so every report names the query that produced it.
+//!
+//! Module layout: [`store`] (columnar storage + schema), [`sql`]
+//! (tokenizer/parser/validator), [`exec`] (deterministic executor),
+//! [`detect`] (canned detector queries). No dependencies, ~zero-copy
+//! reads: queries walk the column vectors directly.
+
+pub mod detect;
+pub mod exec;
+pub mod sql;
+pub mod store;
+
+pub use detect::{detector_sql, fragtrend_sql, growth_sql};
+pub use exec::{cmp_values, execute, run_query, QueryResult, Value};
+pub use sql::{parse, Query};
+pub use store::{column_ref, ColRef, OpKind, OpMeta, TraceStore};

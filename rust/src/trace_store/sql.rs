@@ -1,0 +1,692 @@
+//! Hand-rolled tokenizer + recursive-descent parser for the query
+//! subset: `SELECT` projections and aggregates, `WHERE` comparisons,
+//! `GROUP BY`, `HAVING`, `ORDER BY`, `LIMIT`, and a `LAG(col) OVER
+//! (PARTITION BY ... ORDER BY ...)` window special-case — exactly enough
+//! for the probing-style trend and growth-detection queries, no more.
+//!
+//! Parsing also *validates*: every referenced store column must resolve
+//! via [`super::store::column_ref`] and every `HAVING`/`ORDER BY` name
+//! must be an output column, so a scenario file with a bad query fails at
+//! spec-parse time with a readable error instead of at replay time.
+
+use super::store::column_ref;
+
+/// Aggregate functions (`avg` yields a float, the rest keep the column
+/// type).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggFn {
+    Max,
+    Min,
+    Avg,
+    Sum,
+    Count,
+}
+
+impl AggFn {
+    fn name(self) -> &'static str {
+        match self {
+            AggFn::Max => "max",
+            AggFn::Min => "min",
+            AggFn::Avg => "avg",
+            AggFn::Sum => "sum",
+            AggFn::Count => "count",
+        }
+    }
+}
+
+/// Comparison operators of `WHERE` / `HAVING` conditions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Expression tree. `+`/`-` chains, `abs(...)`, literals, columns,
+/// aggregates and the LAG window special-case; no parenthesized grouping
+/// beyond function arguments (the subset doesn't need precedence).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Num(i64),
+    Str(String),
+    Col(String),
+    /// `count(*)` is `Agg(Count, None)`.
+    Agg(AggFn, Option<String>),
+    Lag {
+        col: String,
+        partition: Vec<String>,
+        order: Vec<String>,
+    },
+    Abs(Box<Expr>),
+    Add(Box<Expr>, Box<Expr>),
+    Sub(Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    /// Canonical rendering; doubles as the synthesized output-column name
+    /// of unaliased select items and as the memo key for LAG vectors.
+    pub fn display(&self) -> String {
+        match self {
+            Expr::Num(n) => n.to_string(),
+            Expr::Str(s) => format!("'{s}'"),
+            Expr::Col(c) => c.clone(),
+            Expr::Agg(AggFn::Count, None) => "count(*)".into(),
+            Expr::Agg(f, Some(c)) => format!("{}({c})", f.name()),
+            Expr::Agg(f, None) => format!("{}()", f.name()),
+            Expr::Lag { col, partition, order } => {
+                if partition.is_empty() {
+                    format!("lag({col}) over (order by {})", order.join(", "))
+                } else {
+                    format!(
+                        "lag({col}) over (partition by {} order by {})",
+                        partition.join(", "),
+                        order.join(", ")
+                    )
+                }
+            }
+            Expr::Abs(e) => format!("abs({})", e.display()),
+            Expr::Add(a, b) => format!("{} + {}", a.display(), b.display()),
+            Expr::Sub(a, b) => format!("{} - {}", a.display(), b.display()),
+        }
+    }
+
+    fn visit(&self, f: &mut impl FnMut(&Expr)) {
+        f(self);
+        match self {
+            Expr::Abs(e) => e.visit(f),
+            Expr::Add(a, b) | Expr::Sub(a, b) => {
+                a.visit(f);
+                b.visit(f);
+            }
+            _ => {}
+        }
+    }
+
+    fn has_agg(&self) -> bool {
+        let mut found = false;
+        self.visit(&mut |e| found |= matches!(e, Expr::Agg(..)));
+        found
+    }
+
+    fn has_lag(&self) -> bool {
+        let mut found = false;
+        self.visit(&mut |e| found |= matches!(e, Expr::Lag { .. }));
+        found
+    }
+}
+
+/// One comparison, `lhs op rhs`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cond {
+    pub lhs: Expr,
+    pub op: CmpOp,
+    pub rhs: Expr,
+}
+
+/// One `SELECT` item: the expression plus its output-column name
+/// (the `AS` alias, or the rendered expression when unaliased).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectItem {
+    pub expr: Expr,
+    pub name: String,
+}
+
+/// A parsed, validated query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    pub items: Vec<SelectItem>,
+    pub where_: Vec<Cond>,
+    pub group_by: Vec<String>,
+    pub having: Vec<Cond>,
+    /// `(output column, descending)` pairs, applied left-to-right.
+    pub order_by: Vec<(String, bool)>,
+    pub limit: Option<usize>,
+}
+
+impl Query {
+    /// Aggregate mode: grouped evaluation (one output row per group, or a
+    /// single row over all filtered rows when `GROUP BY` is absent).
+    pub fn aggregate_mode(&self) -> bool {
+        !self.group_by.is_empty() || self.items.iter().any(|i| i.expr.has_agg())
+    }
+
+    /// Output column names, in select order.
+    pub fn output_columns(&self) -> Vec<String> {
+        self.items.iter().map(|i| i.name.clone()).collect()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Num(i64),
+    Str(String),
+    Comma,
+    LParen,
+    RParen,
+    Star,
+    Plus,
+    Minus,
+    Cmp(CmpOp),
+}
+
+impl Tok {
+    fn describe(&self) -> String {
+        match self {
+            Tok::Ident(s) => format!("{s:?}"),
+            Tok::Num(n) => n.to_string(),
+            Tok::Str(s) => format!("'{s}'"),
+            Tok::Comma => "','".into(),
+            Tok::LParen => "'('".into(),
+            Tok::RParen => "')'".into(),
+            Tok::Star => "'*'".into(),
+            Tok::Plus => "'+'".into(),
+            Tok::Minus => "'-'".into(),
+            Tok::Cmp(_) => "comparison".into(),
+        }
+    }
+}
+
+fn tokenize(sql: &str) -> anyhow::Result<Vec<Tok>> {
+    let mut toks = Vec::new();
+    let bytes = sql.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            ' ' | '\t' | '\n' | '\r' => i += 1,
+            ',' => {
+                toks.push(Tok::Comma);
+                i += 1;
+            }
+            '(' => {
+                toks.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                toks.push(Tok::RParen);
+                i += 1;
+            }
+            '*' => {
+                toks.push(Tok::Star);
+                i += 1;
+            }
+            '+' => {
+                toks.push(Tok::Plus);
+                i += 1;
+            }
+            '-' => {
+                toks.push(Tok::Minus);
+                i += 1;
+            }
+            '=' => {
+                toks.push(Tok::Cmp(CmpOp::Eq));
+                i += 1;
+            }
+            '!' => {
+                if bytes.get(i + 1) == Some(&b'=') {
+                    toks.push(Tok::Cmp(CmpOp::Ne));
+                    i += 2;
+                } else {
+                    anyhow::bail!("unexpected '!' in query (use != or <>)");
+                }
+            }
+            '<' => match bytes.get(i + 1) {
+                Some(b'=') => {
+                    toks.push(Tok::Cmp(CmpOp::Le));
+                    i += 2;
+                }
+                Some(b'>') => {
+                    toks.push(Tok::Cmp(CmpOp::Ne));
+                    i += 2;
+                }
+                _ => {
+                    toks.push(Tok::Cmp(CmpOp::Lt));
+                    i += 1;
+                }
+            },
+            '>' => {
+                if bytes.get(i + 1) == Some(&b'=') {
+                    toks.push(Tok::Cmp(CmpOp::Ge));
+                    i += 2;
+                } else {
+                    toks.push(Tok::Cmp(CmpOp::Gt));
+                    i += 1;
+                }
+            }
+            '\'' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < bytes.len() && bytes[j] != b'\'' {
+                    j += 1;
+                }
+                if j >= bytes.len() {
+                    anyhow::bail!("unterminated string literal in query");
+                }
+                toks.push(Tok::Str(sql[start..j].to_string()));
+                i = j + 1;
+            }
+            '0'..='9' => {
+                let start = i;
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let text = &sql[start..i];
+                let n: i64 = text
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("integer literal {text:?} out of range"))?;
+                toks.push(Tok::Num(n));
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let start = i;
+                while i < bytes.len()
+                    && ((bytes[i] as char).is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                toks.push(Tok::Ident(sql[start..i].to_string()));
+            }
+            other => anyhow::bail!("unexpected character {other:?} in query"),
+        }
+    }
+    Ok(toks)
+}
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> anyhow::Result<Tok> {
+        let t = self
+            .toks
+            .get(self.pos)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("query ends unexpectedly"))?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    /// Consume the next token iff it is the given keyword
+    /// (case-insensitive).
+    fn eat_kw(&mut self, kw: &str) -> bool {
+        if let Some(Tok::Ident(s)) = self.peek() {
+            if s.eq_ignore_ascii_case(kw) {
+                self.pos += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> anyhow::Result<()> {
+        if self.eat_kw(kw) {
+            return Ok(());
+        }
+        match self.peek() {
+            Some(t) => anyhow::bail!("expected {kw} in query, got {}", t.describe()),
+            None => anyhow::bail!("expected {kw} in query, got end of input"),
+        }
+    }
+
+    fn expect(&mut self, tok: Tok) -> anyhow::Result<()> {
+        let t = self.next()?;
+        if t != tok {
+            anyhow::bail!("expected {} in query, got {}", tok.describe(), t.describe());
+        }
+        Ok(())
+    }
+
+    fn ident(&mut self, what: &str) -> anyhow::Result<String> {
+        match self.next()? {
+            Tok::Ident(s) => Ok(s.to_ascii_lowercase()),
+            t => anyhow::bail!("expected {what} in query, got {}", t.describe()),
+        }
+    }
+
+    fn ident_list(&mut self, what: &str) -> anyhow::Result<Vec<String>> {
+        let mut out = vec![self.ident(what)?];
+        while matches!(self.peek(), Some(Tok::Comma)) {
+            self.pos += 1;
+            out.push(self.ident(what)?);
+        }
+        Ok(out)
+    }
+
+    fn agg_fn(name: &str) -> Option<AggFn> {
+        match name.to_ascii_lowercase().as_str() {
+            "max" => Some(AggFn::Max),
+            "min" => Some(AggFn::Min),
+            "avg" => Some(AggFn::Avg),
+            "sum" => Some(AggFn::Sum),
+            "count" => Some(AggFn::Count),
+            _ => None,
+        }
+    }
+
+    fn term(&mut self) -> anyhow::Result<Expr> {
+        match self.next()? {
+            Tok::Num(n) => Ok(Expr::Num(n)),
+            Tok::Str(s) => Ok(Expr::Str(s)),
+            Tok::Ident(name) => {
+                if !matches!(self.peek(), Some(Tok::LParen)) {
+                    return Ok(Expr::Col(name.to_ascii_lowercase()));
+                }
+                self.pos += 1; // '('
+                if let Some(f) = Self::agg_fn(&name) {
+                    let arg = if matches!(self.peek(), Some(Tok::Star)) {
+                        self.pos += 1;
+                        if f != AggFn::Count {
+                            anyhow::bail!("'*' is only valid as count(*), not {}(*)", f.name());
+                        }
+                        None
+                    } else {
+                        Some(self.ident("a column name")?)
+                    };
+                    self.expect(Tok::RParen)?;
+                    return Ok(Expr::Agg(f, arg));
+                }
+                if name.eq_ignore_ascii_case("lag") {
+                    let col = self.ident("a column name")?;
+                    self.expect(Tok::RParen)?;
+                    self.expect_kw("over")?;
+                    self.expect(Tok::LParen)?;
+                    let mut partition = Vec::new();
+                    if self.eat_kw("partition") {
+                        self.expect_kw("by")?;
+                        partition = self.ident_list("a partition column")?;
+                    }
+                    self.expect_kw("order")?;
+                    self.expect_kw("by")?;
+                    let order = self.ident_list("an order column")?;
+                    self.expect(Tok::RParen)?;
+                    return Ok(Expr::Lag { col, partition, order });
+                }
+                if name.eq_ignore_ascii_case("abs") {
+                    let inner = self.expr()?;
+                    self.expect(Tok::RParen)?;
+                    return Ok(Expr::Abs(Box::new(inner)));
+                }
+                anyhow::bail!(
+                    "unknown function {name:?} (functions: max, min, avg, sum, count, abs, lag)"
+                );
+            }
+            t => anyhow::bail!("expected an expression in query, got {}", t.describe()),
+        }
+    }
+
+    fn expr(&mut self) -> anyhow::Result<Expr> {
+        let mut lhs = self.term()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Plus) => {
+                    self.pos += 1;
+                    let rhs = self.term()?;
+                    lhs = Expr::Add(Box::new(lhs), Box::new(rhs));
+                }
+                Some(Tok::Minus) => {
+                    self.pos += 1;
+                    let rhs = self.term()?;
+                    lhs = Expr::Sub(Box::new(lhs), Box::new(rhs));
+                }
+                _ => return Ok(lhs),
+            }
+        }
+    }
+
+    fn cond(&mut self) -> anyhow::Result<Cond> {
+        let lhs = self.expr()?;
+        let op = match self.next()? {
+            Tok::Cmp(op) => op,
+            t => anyhow::bail!("expected a comparison operator in query, got {}", t.describe()),
+        };
+        let rhs = self.expr()?;
+        Ok(Cond { lhs, op, rhs })
+    }
+
+    fn cond_list(&mut self) -> anyhow::Result<Vec<Cond>> {
+        let mut out = vec![self.cond()?];
+        while self.eat_kw("and") {
+            out.push(self.cond()?);
+        }
+        Ok(out)
+    }
+
+    fn select_item(&mut self) -> anyhow::Result<SelectItem> {
+        let expr = self.expr()?;
+        let name = if self.eat_kw("as") {
+            self.ident("an output column alias")?
+        } else {
+            expr.display()
+        };
+        Ok(SelectItem { expr, name })
+    }
+}
+
+/// Parse *and validate* a query against the trace schema. Every error is
+/// a one-liner naming what was expected; scenario specs call this at
+/// parse time so bad SQL never reaches a replay.
+pub fn parse(sql: &str) -> anyhow::Result<Query> {
+    let mut p = Parser { toks: tokenize(sql)?, pos: 0 };
+    p.expect_kw("select")?;
+    let mut items = vec![p.select_item()?];
+    while matches!(p.peek(), Some(Tok::Comma)) {
+        p.pos += 1;
+        items.push(p.select_item()?);
+    }
+    if p.eat_kw("from") {
+        let table = p.ident("a table name")?;
+        if table != "trace" {
+            anyhow::bail!("unknown table {table:?} (the only table is 'trace')");
+        }
+    }
+    let mut where_ = Vec::new();
+    if p.eat_kw("where") {
+        where_ = p.cond_list()?;
+    }
+    let mut group_by = Vec::new();
+    if p.eat_kw("group") {
+        p.expect_kw("by")?;
+        group_by = p.ident_list("a group column")?;
+    }
+    let mut having = Vec::new();
+    if p.eat_kw("having") {
+        having = p.cond_list()?;
+    }
+    let mut order_by = Vec::new();
+    if p.eat_kw("order") {
+        p.expect_kw("by")?;
+        loop {
+            let col = p.ident("an order column")?;
+            let desc = if p.eat_kw("desc") {
+                true
+            } else {
+                p.eat_kw("asc");
+                false
+            };
+            order_by.push((col, desc));
+            if matches!(p.peek(), Some(Tok::Comma)) {
+                p.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+    let mut limit = None;
+    if p.eat_kw("limit") {
+        match p.next()? {
+            Tok::Num(n) if n >= 0 => limit = Some(n as usize),
+            t => anyhow::bail!("expected a non-negative LIMIT count, got {}", t.describe()),
+        }
+    }
+    if let Some(t) = p.peek() {
+        anyhow::bail!("trailing {} after the end of the query", t.describe());
+    }
+    let q = Query { items, where_, group_by, having, order_by, limit };
+    validate(&q)?;
+    Ok(q)
+}
+
+fn validate(q: &Query) -> anyhow::Result<()> {
+    let aggregate = q.aggregate_mode();
+    let has_lag = q.items.iter().any(|i| i.expr.has_lag());
+    if aggregate && has_lag {
+        anyhow::bail!("LAG cannot be combined with GROUP BY or aggregate functions");
+    }
+    for cond in &q.where_ {
+        for e in [&cond.lhs, &cond.rhs] {
+            if e.has_agg() || e.has_lag() {
+                anyhow::bail!("WHERE cannot contain aggregates or LAG (use HAVING)");
+            }
+            check_store_cols(e)?;
+        }
+    }
+    for col in &q.group_by {
+        column_ref(col)?;
+    }
+    for item in &q.items {
+        let mut err = Ok(());
+        item.expr.visit(&mut |e| {
+            if err.is_err() {
+                return;
+            }
+            err = match e {
+                Expr::Col(c) => {
+                    if aggregate && !q.group_by.iter().any(|g| g == c) {
+                        Err(anyhow::anyhow!(
+                            "column {c:?} must appear in GROUP BY or inside an aggregate"
+                        ))
+                    } else {
+                        column_ref(c).map(|_| ())
+                    }
+                }
+                Expr::Agg(_, Some(c)) => column_ref(c).map(|_| ()),
+                Expr::Lag { col, partition, order } => partition
+                    .iter()
+                    .chain(order.iter())
+                    .chain(std::iter::once(col))
+                    .try_for_each(|c| column_ref(c).map(|_| ())),
+                _ => Ok(()),
+            };
+        });
+        err?;
+    }
+    let out_cols = q.output_columns();
+    let check_out = |name: &str, clause: &str| {
+        if out_cols.iter().any(|c| c == name) {
+            Ok(())
+        } else {
+            Err(anyhow::anyhow!(
+                "{clause} references {name:?}, which is not an output column (outputs: {})",
+                out_cols.join(", ")
+            ))
+        }
+    };
+    for cond in &q.having {
+        for e in [&cond.lhs, &cond.rhs] {
+            if e.has_agg() || e.has_lag() {
+                anyhow::bail!(
+                    "HAVING references output columns by name; alias the aggregate in SELECT"
+                );
+            }
+            let mut err = Ok(());
+            e.visit(&mut |x| {
+                if err.is_ok() {
+                    if let Expr::Col(c) = x {
+                        err = check_out(c, "HAVING");
+                    }
+                }
+            });
+            err?;
+        }
+    }
+    for (col, _) in &q.order_by {
+        check_out(col, "ORDER BY")?;
+    }
+    Ok(())
+}
+
+fn check_store_cols(e: &Expr) -> anyhow::Result<()> {
+    let mut err = Ok(());
+    e.visit(&mut |x| {
+        if err.is_ok() {
+            if let Expr::Col(c) = x {
+                err = column_ref(c).map(|_| ());
+            }
+        }
+    });
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_probing_trend_query() {
+        let q = parse(
+            "SELECT step, stage, avg(total) AS avg_bytes, max(allocated) AS peak_bytes \
+             FROM trace WHERE step > 0 GROUP BY step, stage ORDER BY step, stage",
+        )
+        .unwrap();
+        assert!(q.aggregate_mode());
+        assert_eq!(q.output_columns(), ["step", "stage", "avg_bytes", "peak_bytes"]);
+        assert_eq!(q.group_by, ["step", "stage"]);
+        assert_eq!(q.order_by, [("step".to_string(), false), ("stage".to_string(), false)]);
+    }
+
+    #[test]
+    fn parses_the_lag_growth_query() {
+        let q = parse(
+            "SELECT stage, step, total, total - lag(total) OVER (PARTITION BY stage, seq \
+             ORDER BY step) AS delta_bytes FROM trace HAVING abs(delta_bytes) > 1000 \
+             ORDER BY delta_bytes DESC LIMIT 5",
+        )
+        .unwrap();
+        assert!(!q.aggregate_mode());
+        assert_eq!(q.limit, Some(5));
+        assert_eq!(q.order_by, [("delta_bytes".to_string(), true)]);
+        assert!(q.items[3].expr.has_lag());
+    }
+
+    #[test]
+    fn keywords_are_case_insensitive_and_unaliased_names_render() {
+        let q = parse("select Stage, MAX(total) from trace group by stage").unwrap();
+        assert_eq!(q.output_columns(), ["stage", "max(total)"]);
+    }
+
+    #[test]
+    fn rejects_bad_queries_with_readable_errors() {
+        let cases = [
+            ("SELECT bogus FROM trace", "unknown column"),
+            ("SELECT total FROM tracee", "unknown table"),
+            ("SELECT stage, total GROUP BY stage", "must appear in GROUP BY"),
+            ("SELECT max(total) WHERE max(total) > 1", "WHERE cannot contain aggregates"),
+            ("SELECT stage, max(total) GROUP BY stage ORDER BY total", "not an output column"),
+            ("SELECT lag(total) OVER (ORDER BY step), max(total)", "LAG cannot be combined"),
+            ("SELECT frob(total)", "unknown function"),
+            ("SELECT total FROM trace LIMIT", "end of input"),
+            ("SELECT total FROM trace nonsense", "trailing"),
+            ("SELECT sum(*)", "only valid as count(*)"),
+        ];
+        for (sql, needle) in cases {
+            let err = parse(sql).unwrap_err().to_string();
+            assert!(err.contains(needle), "query {sql:?}: expected {needle:?} in {err:?}");
+        }
+    }
+
+    #[test]
+    fn having_without_group_by_is_allowed() {
+        let q = parse("SELECT total AS t FROM trace HAVING t > 10").unwrap();
+        assert!(!q.aggregate_mode());
+        assert_eq!(q.having.len(), 1);
+    }
+}

@@ -1,0 +1,320 @@
+//! The columnar store itself: one row per replayed allocator event,
+//! tagged with the schedule position (step/stage/op/microbatch/chunk) it
+//! happened under and the full running 13-component ledger after it.
+//!
+//! Rows are *event*-granular rather than op-granular on purpose: transient
+//! components (comm buffers, workspaces) alloc and free inside a single
+//! op, so only per-event sampling of the running ledger makes
+//! `max(<component>)` over the store agree exactly with the tracker's
+//! [`crate::sim::MemoryTimeline::peak`] — the reconciliation invariant the
+//! property tests pin for every registered schedule.
+
+use crate::ledger::{Component, NUM_COMPONENTS};
+use crate::sim::tracker::MemEvent;
+
+use super::exec::Value;
+
+/// The kind of schedule op a trace row is attributed to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// The t=0 static allocations (params/grads/optimizer states).
+    Setup,
+    Forward,
+    Backward,
+    /// Zero-bubble weight-gradient pass.
+    WeightGrad,
+    /// End-of-step optimizer update (gradient bucket buffers).
+    Optimizer,
+}
+
+impl OpKind {
+    /// The value of the `op` column (stable across snapshots).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Setup => "setup",
+            OpKind::Forward => "forward",
+            OpKind::Backward => "backward",
+            OpKind::WeightGrad => "wgrad",
+            OpKind::Optimizer => "optimizer",
+        }
+    }
+}
+
+/// Metadata of one replayed op, emitted by the engine alongside the
+/// timeline: which logical time it ran at, which step it belongs to and
+/// which microbatch/chunk it processed. Events are joined to the op whose
+/// time window contains them (ops have strictly increasing times).
+#[derive(Debug, Clone, Copy)]
+pub struct OpMeta {
+    /// Logical time of the op (the engine's schedule tick).
+    pub time: u64,
+    /// Training step (0-based; steps > 0 replay the identical op stream).
+    pub step: u64,
+    pub op: OpKind,
+    pub mb: u64,
+    pub chunk: u64,
+}
+
+/// Column references resolved from query column names. `Comp(i)` indexes
+/// the per-component current-bytes columns (named by [`Component::name`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColRef {
+    Step,
+    Stage,
+    Seq,
+    Time,
+    Mb,
+    Chunk,
+    Op,
+    Component,
+    Delta,
+    Total,
+    Reserved,
+    Comp(usize),
+}
+
+/// Resolve a column name. `allocated` is an alias of `total` (the probing
+/// idiom's spelling); the 13 component columns use [`Component::name`].
+/// Unknown names fail with the full valid set.
+pub fn column_ref(name: &str) -> anyhow::Result<ColRef> {
+    Ok(match name {
+        "step" => ColRef::Step,
+        "stage" => ColRef::Stage,
+        "seq" => ColRef::Seq,
+        "time" => ColRef::Time,
+        "mb" => ColRef::Mb,
+        "chunk" => ColRef::Chunk,
+        "op" => ColRef::Op,
+        "component" => ColRef::Component,
+        "delta" => ColRef::Delta,
+        "total" | "allocated" => ColRef::Total,
+        "reserved" => ColRef::Reserved,
+        other => {
+            if let Some(i) = Component::ALL.iter().position(|c| c.name() == other) {
+                return Ok(ColRef::Comp(i));
+            }
+            anyhow::bail!(
+                "unknown column {other:?} (columns: step, stage, seq, time, mb, chunk, op, \
+                 component, delta, total (alias: allocated), reserved, and per-component bytes: {})",
+                Component::ALL.map(Component::name).join(", ")
+            );
+        }
+    })
+}
+
+/// The columnar trace store: struct-of-vectors, one entry per event.
+///
+/// * `step`/`stage`/`seq`/`time`/`mb`/`chunk` — schedule position. `seq` is
+///   the event ordinal within its (stage, step), so the pair `(stage, seq)`
+///   identifies the *same logical event* across steps — the partition key
+///   of the LAG-based cross-step growth query.
+/// * `op`/`component`/`delta` — what happened: the op kind the event ran
+///   under, the ledger component touched and the signed byte delta.
+/// * `total` (alias `allocated`) — the running total after the event.
+/// * `reserved` — the caching allocator's reserved bytes at the end of the
+///   enclosing op (0 when the fragmentation replay is off).
+/// * one current-bytes column per ledger component (row-major block).
+#[derive(Debug, Clone, Default)]
+pub struct TraceStore {
+    step: Vec<u64>,
+    stage: Vec<u64>,
+    seq: Vec<u64>,
+    time: Vec<u64>,
+    mb: Vec<u64>,
+    chunk: Vec<u64>,
+    op: Vec<OpKind>,
+    component: Vec<Component>,
+    delta: Vec<i64>,
+    total: Vec<u64>,
+    reserved: Vec<u64>,
+    ledger: Vec<[u64; NUM_COMPONENTS]>,
+}
+
+impl TraceStore {
+    pub fn len(&self) -> usize {
+        self.step.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.step.is_empty()
+    }
+
+    /// Approximate resident size of the store in bytes (the perf note in
+    /// `perf.md` quotes this for the PP16 sims).
+    pub fn approx_bytes(&self) -> usize {
+        let per_row = 8 * NUM_COMPONENTS          // ledger block
+            + 8 * 9                               // u64/i64 columns
+            + std::mem::size_of::<OpKind>()
+            + std::mem::size_of::<Component>();
+        self.len() * per_row
+    }
+
+    /// Ingest one stage's replay: the recorded timeline events, the op
+    /// metadata stream and the allocator's `(time, reserved)` samples.
+    ///
+    /// The walk reconstructs the running ledger from the event deltas and
+    /// joins each event to the op meta whose time window contains it (ops
+    /// carry strictly increasing times, so a free recorded at `t + 1` —
+    /// the optimizer's bucket release — still lands on the op at `t`).
+    pub fn add_stage(
+        &mut self,
+        stage: u64,
+        events: &[MemEvent],
+        ops: &[OpMeta],
+        samples: &[(u64, u64)],
+    ) {
+        let mut running = [0u64; NUM_COMPONENTS];
+        let mut total = 0u64;
+        let mut op_i = 0usize;
+        let mut samp_i = 0usize;
+        let mut reserved = 0u64;
+        let mut seq = 0u64;
+        let mut cur_step = ops.first().map(|o| o.step).unwrap_or(0);
+        for ev in events {
+            while op_i + 1 < ops.len() && ops[op_i + 1].time <= ev.time {
+                op_i += 1;
+            }
+            while samp_i < samples.len() && samples[samp_i].0 <= ev.time {
+                reserved = samples[samp_i].1;
+                samp_i += 1;
+            }
+            let meta = ops.get(op_i).copied().unwrap_or(OpMeta {
+                time: 0,
+                step: 0,
+                op: OpKind::Setup,
+                mb: 0,
+                chunk: 0,
+            });
+            if meta.step != cur_step {
+                cur_step = meta.step;
+                seq = 0;
+            }
+            let i = ev.class.index();
+            if ev.delta >= 0 {
+                running[i] += ev.delta as u64;
+                total += ev.delta as u64;
+            } else {
+                let d = ev.delta.unsigned_abs();
+                running[i] = running[i].saturating_sub(d);
+                total = total.saturating_sub(d);
+            }
+            self.step.push(meta.step);
+            self.stage.push(stage);
+            self.seq.push(seq);
+            self.time.push(ev.time);
+            self.mb.push(meta.mb);
+            self.chunk.push(meta.chunk);
+            self.op.push(meta.op);
+            self.component.push(ev.class);
+            self.delta.push(ev.delta);
+            self.total.push(total);
+            self.reserved.push(reserved);
+            self.ledger.push(running);
+            seq += 1;
+        }
+    }
+
+    /// Read one cell. `row` must be `< len()` (executor-internal).
+    pub(crate) fn value(&self, row: usize, col: ColRef) -> Value {
+        match col {
+            ColRef::Step => Value::Int(self.step[row] as i64),
+            ColRef::Stage => Value::Int(self.stage[row] as i64),
+            ColRef::Seq => Value::Int(self.seq[row] as i64),
+            ColRef::Time => Value::Int(self.time[row] as i64),
+            ColRef::Mb => Value::Int(self.mb[row] as i64),
+            ColRef::Chunk => Value::Int(self.chunk[row] as i64),
+            ColRef::Op => Value::Str(self.op[row].name().to_string()),
+            ColRef::Component => Value::Str(self.component[row].name().to_string()),
+            ColRef::Delta => Value::Int(self.delta[row]),
+            ColRef::Total => Value::Int(self.total[row] as i64),
+            ColRef::Reserved => Value::Int(self.reserved[row] as i64),
+            ColRef::Comp(i) => Value::Int(self.ledger[row][i] as i64),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(time: u64, class: Component, delta: i64) -> MemEvent {
+        MemEvent { time, class, delta }
+    }
+
+    fn meta(time: u64, step: u64, op: OpKind, mb: u64) -> OpMeta {
+        OpMeta { time, step, op, mb, chunk: 0 }
+    }
+
+    #[test]
+    fn add_stage_reconstructs_running_totals_and_joins_ops() {
+        let mut st = TraceStore::default();
+        let events = [
+            ev(0, Component::ParamsDense, 100),
+            ev(1, Component::CommBuffer, 10),
+            ev(1, Component::ActivationAttention, 40),
+            ev(1, Component::CommBuffer, -10),
+            ev(2, Component::CommBuffer, 8),
+            ev(3, Component::CommBuffer, -8), // optimizer free at t+1
+        ];
+        let ops = [
+            meta(0, 0, OpKind::Setup, 0),
+            meta(1, 0, OpKind::Forward, 3),
+            meta(2, 0, OpKind::Optimizer, 0),
+        ];
+        st.add_stage(7, &events, &ops, &[(1, 64)]);
+        assert_eq!(st.len(), 6);
+        // Running total after each event.
+        assert_eq!(st.value(0, ColRef::Total), Value::Int(100));
+        assert_eq!(st.value(1, ColRef::Total), Value::Int(110));
+        assert_eq!(st.value(2, ColRef::Total), Value::Int(150));
+        assert_eq!(st.value(3, ColRef::Total), Value::Int(140));
+        // Op join: the trailing free at t=3 still belongs to the optimizer.
+        assert_eq!(st.value(0, ColRef::Op), Value::Str("setup".into()));
+        assert_eq!(st.value(1, ColRef::Op), Value::Str("forward".into()));
+        assert_eq!(st.value(1, ColRef::Mb), Value::Int(3));
+        assert_eq!(st.value(5, ColRef::Op), Value::Str("optimizer".into()));
+        // Reserved joins the last sample at or before the event time.
+        assert_eq!(st.value(0, ColRef::Reserved), Value::Int(0));
+        assert_eq!(st.value(1, ColRef::Reserved), Value::Int(64));
+        // Component columns track the per-component running bytes.
+        assert_eq!(st.value(2, ColRef::Comp(Component::ParamsDense.index())), Value::Int(100));
+        assert_eq!(
+            st.value(2, ColRef::Comp(Component::ActivationAttention.index())),
+            Value::Int(40)
+        );
+        assert_eq!(st.value(0, ColRef::Stage), Value::Int(7));
+    }
+
+    #[test]
+    fn seq_resets_per_step() {
+        let mut st = TraceStore::default();
+        let events = [
+            ev(1, Component::Workspace, 5),
+            ev(1, Component::Workspace, -5),
+            ev(2, Component::Workspace, 5),
+            ev(2, Component::Workspace, -5),
+        ];
+        let ops = [meta(1, 0, OpKind::WeightGrad, 0), meta(2, 1, OpKind::WeightGrad, 0)];
+        st.add_stage(0, &events, &ops, &[]);
+        assert_eq!(st.value(0, ColRef::Seq), Value::Int(0));
+        assert_eq!(st.value(1, ColRef::Seq), Value::Int(1));
+        // Step 1 restarts the ordinal: (stage, seq) aligns across steps.
+        assert_eq!(st.value(2, ColRef::Step), Value::Int(1));
+        assert_eq!(st.value(2, ColRef::Seq), Value::Int(0));
+        assert_eq!(st.value(2, ColRef::Op), Value::Str("wgrad".into()));
+    }
+
+    #[test]
+    fn column_resolution_covers_aliases_and_components() {
+        assert_eq!(column_ref("total").unwrap(), ColRef::Total);
+        assert_eq!(column_ref("allocated").unwrap(), ColRef::Total);
+        assert_eq!(
+            column_ref("params_moe").unwrap(),
+            ColRef::Comp(Component::ParamsMoe.index())
+        );
+        let err = column_ref("alocated").unwrap_err().to_string();
+        assert!(err.contains("unknown column"), "{err}");
+        assert!(err.contains("allocated"), "error names the valid set: {err}");
+        assert!(err.contains("kv_cache"), "error names the component columns: {err}");
+    }
+}

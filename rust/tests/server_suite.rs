@@ -151,18 +151,36 @@ fn proptest_generated_plans_serve_byte_identically() {
     handle.shutdown();
 }
 
+/// Decode the uniform error body and assert its exact shape:
+/// `{"error": {"code": <status>, "endpoint": <path>, "message": ...}}`.
+/// Returns the message so callers can assert on its content too.
+fn assert_error_shape(body: &str, status: u16, endpoint: &str) -> String {
+    let doc = Json::parse(body).unwrap_or_else(|e| panic!("error body is not JSON ({e}): {body}"));
+    let err = doc.get("error").expect("body has an 'error' object");
+    let code = err.get("code").and_then(|v| v.as_u64()).expect("error.code is a number");
+    assert_eq!(code, status as u64, "error.code mirrors the status line: {body}");
+    let ep = err.get("endpoint").and_then(|v| v.as_str()).expect("error.endpoint is a string");
+    assert_eq!(ep, endpoint, "error.endpoint names the request path: {body}");
+    err.get("message")
+        .and_then(|v| v.as_str())
+        .expect("error.message is a string")
+        .to_string()
+}
+
 /// Malformed input comes back as readable JSON errors with the right
-/// status codes, and never kills the daemon.
+/// status codes and the one uniform `{"error": {...}}` body shape on
+/// every error path, and never kills the daemon.
 #[test]
 fn protocol_errors_are_readable() {
     let handle = boot(2);
     let mut client = client_of(&handle);
     let (status, body) = client.request("POST", "/plan", "{not json").expect("answers");
     assert_eq!(status, 400, "unparseable JSON body: {body}");
-    assert!(body.contains("error"), "400 carries a message: {body}");
+    assert_error_shape(&body, 400, "/plan");
     let (status, body) = client.request("POST", "/plan", "{}").expect("answers");
     assert_eq!(status, 400);
-    assert!(body.contains("scenario"), "missing-key error names the key: {body}");
+    let msg = assert_error_shape(&body, 400, "/plan");
+    assert!(msg.contains("scenario"), "missing-key error names the key: {msg}");
     let plan_toml = "model = \"v3\"\naction = \"plan\"\nhbm_gib = 80\n\n\
                      [plan]\nworld = 1024\nmicrobatches = 32\npp = [16]\n";
     let mut m = std::collections::BTreeMap::new();
@@ -170,12 +188,16 @@ fn protocol_errors_are_readable() {
     let (status, body) =
         client.request("POST", "/sweep", &Json::Obj(m).dump()).expect("answers");
     assert_eq!(status, 400, "action/endpoint mismatch must be rejected");
-    assert!(body.contains("/plan"), "mismatch error points at the right endpoint: {body}");
-    let (status, _) = client.request("GET", "/plan", "").expect("answers");
+    let msg = assert_error_shape(&body, 400, "/sweep");
+    assert!(msg.contains("/plan"), "mismatch error points at the right endpoint: {msg}");
+    let (status, body) = client.request("GET", "/plan", "").expect("answers");
     assert_eq!(status, 405, "GET on a POST endpoint");
+    assert_error_shape(&body, 405, "/plan");
     let (status, body) = client.request("POST", "/nope", "{}").expect("answers");
     assert_eq!(status, 404);
-    assert!(body.contains("/healthz"), "404 lists the live endpoints: {body}");
+    let msg = assert_error_shape(&body, 404, "/nope");
+    assert!(msg.contains("/healthz"), "404 lists the live endpoints: {msg}");
+    assert!(msg.contains("/query"), "404 lists the query endpoint: {msg}");
     let (status, body) = client.request("GET", "/healthz", "").expect("answers");
     assert_eq!(status, 200);
     assert!(body.contains("true"), "healthz acks: {body}");

@@ -1,0 +1,159 @@
+//! Trace-store integration tests.
+//!
+//! * **Reconciliation**: for every registered schedule, per-stage
+//!   `max(total)` / `max(<component>)` read back out of the store must
+//!   equal the tracker's [`MemoryTimeline`] peaks exactly — the store is
+//!   a second bookkeeping path over the same event stream, so any
+//!   divergence is a bug in one of them.
+//! * **Steady state**: with the LAG window re-anchored past step 0, every
+//!   cross-step delta is exactly zero — replayed steps are identical, so
+//!   the growth detector can only ever flag warm-up divergence.
+//! * **Byte-identity**: the `dsmem query --json` CLI, the scenario
+//!   runner and `POST /query` produce the same snapshot bytes for the
+//!   paper's DualPipe PP16 sim.
+
+use dsmem::analysis::{MemoryModel, ZeroStrategy};
+use dsmem::config::CaseStudy;
+use dsmem::ledger::Component;
+use dsmem::scenario::{self, ScenarioSpec};
+use dsmem::schedule::{registry, ScheduleSpec};
+use dsmem::server::{start, ServerClient, ServerConfig};
+use dsmem::sim::{SimEngine, SimResult};
+use dsmem::trace_store::{growth_sql, run_query, Value};
+use dsmem::util::Rng64;
+
+fn traced_run(model: &str, spec: ScheduleSpec, m: u64, zero: &str, steps: u64) -> SimResult {
+    let cs = CaseStudy::preset(model).unwrap();
+    let mm = MemoryModel::new(&cs.model, &cs.parallel, cs.dtypes);
+    let mut eng = SimEngine::new(&mm, cs.activation, ZeroStrategy::parse(zero).unwrap());
+    eng.record_trace = true;
+    eng.trace_steps = steps;
+    eng.run(spec, m).unwrap()
+}
+
+/// `SELECT max(...)` per stage reconciles with the tracker's peaks: the
+/// total and all 13 per-component running columns, for every registered
+/// schedule, under randomized microbatch counts and ZeRO strategies.
+#[test]
+fn store_aggregates_reconcile_with_tracker_for_every_schedule() {
+    let mut rng = Rng64::new(0x7247_CE01);
+    let comps: Vec<String> =
+        Component::ALL.iter().map(|c| format!("max({0}) AS peak_{0}", c.name())).collect();
+    let sql = format!(
+        "SELECT stage, max(total) AS peak, {} FROM trace GROUP BY stage ORDER BY stage",
+        comps.join(", ")
+    );
+    for spec in registry() {
+        // DualPipe on the mini preset (p=2) needs an even m >= 4.
+        let m = if spec == ScheduleSpec::DualPipe { 4 } else { rng.range(2, 8) };
+        let zero = ["none", "os", "os_g", "os_g_params"][rng.below(4) as usize];
+        let res = traced_run("mini", spec, m, zero, 2);
+        let store = res.trace.as_ref().expect("record_trace populates the store");
+        let r = run_query(store, &sql).unwrap();
+        assert_eq!(r.rows.len(), res.stages.len(), "{} stage count", spec.name());
+        for (row, st) in r.rows.iter().zip(&res.stages) {
+            assert_eq!(row[0], Value::Int(st.stage as i64), "{}", spec.name());
+            assert_eq!(
+                row[1],
+                Value::Int(st.timeline.total_peak() as i64),
+                "{} stage {} total peak",
+                spec.name(),
+                st.stage
+            );
+            for (i, c) in Component::ALL.iter().enumerate() {
+                assert_eq!(
+                    row[2 + i],
+                    Value::Int(st.timeline.peak(*c) as i64),
+                    "{} stage {} component {}",
+                    spec.name(),
+                    st.stage,
+                    c.name()
+                );
+            }
+        }
+    }
+}
+
+/// Steps past warm-up replay the identical op stream, so anchoring the
+/// LAG partition at `step > 0` must find zero cross-step drift — for
+/// every registered schedule.
+#[test]
+fn lag_window_confirms_zero_steady_state_drift() {
+    for spec in registry() {
+        let res = traced_run("mini", spec, 4, "os_g", 3);
+        let store = res.trace.as_ref().expect("store populated");
+        let r = run_query(
+            store,
+            "SELECT stage, step, seq, total - lag(total) OVER (PARTITION BY stage, seq \
+             ORDER BY step) AS delta FROM trace WHERE step > 0 HAVING abs(delta) > 0",
+        )
+        .unwrap();
+        assert!(
+            r.rows.is_empty(),
+            "{}: cross-step drift in steady state: {:?}",
+            spec.name(),
+            r.rows.first()
+        );
+    }
+}
+
+/// The growth detector over a full 3-step trace flags only step-1 rows:
+/// step 0's ordinals include the setup allocations, so step 1 surfaces as
+/// warm-up divergence, while step-2 rows (steady state) never appear.
+#[test]
+fn growth_detector_flags_only_warmup_divergence() {
+    let res = traced_run("mini", ScheduleSpec::OneFOneB, 4, "os_g", 3);
+    let store = res.trace.as_ref().expect("store populated");
+    let r = run_query(store, &growth_sql(1, 100_000)).unwrap();
+    assert!(!r.rows.is_empty(), "a 1-byte threshold must catch the warm-up misalignment");
+    let step_ix = r.columns.iter().position(|c| c == "step").unwrap();
+    for row in &r.rows {
+        assert_eq!(row[step_ix], Value::Int(1), "steady-state row flagged as growth: {row:?}");
+    }
+}
+
+/// Acceptance gate: `dsmem query` over a DualPipe PP16 sim returns
+/// byte-identical results via the CLI (`--json`), the scenario runner and
+/// `POST /query` — all three surfaces resolve to one spec and one
+/// execution path.
+#[test]
+fn query_is_byte_identical_across_cli_runner_and_server() {
+    let sql = "SELECT stage, max(total) AS peak_total, count(*) AS events FROM trace \
+               GROUP BY stage ORDER BY peak_total DESC, stage";
+    let toml = format!(
+        "model = \"v3\"\naction = \"query\"\n\n[activation]\nmicro_batch = 1\n\
+         recompute = \"none\"\n\n[query]\nschedule = \"dualpipe\"\nmicrobatches = 32\n\
+         zero = \"os_g\"\nsteps = 2\nsql = \"{sql}\"\n"
+    );
+    let spec = ScenarioSpec::from_toml(&toml, "cli-query").expect("query scenario parses");
+    let direct = format!("{}\n", scenario::run_scenario(&spec).expect("direct run").pretty());
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_dsmem"))
+        .args([
+            "query",
+            sql,
+            "--model",
+            "v3",
+            "--schedule",
+            "dualpipe",
+            "--microbatches",
+            "32",
+            "--json",
+        ])
+        .output()
+        .expect("CLI runs");
+    assert!(out.status.success(), "CLI failed: {}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(
+        String::from_utf8(out.stdout).expect("CLI output is UTF-8"),
+        direct,
+        "CLI --json diverges from the runner snapshot"
+    );
+
+    let handle =
+        start(&ServerConfig { addr: "127.0.0.1:0".into(), threads: 2 }).expect("server boots");
+    let mut client = ServerClient::connect(&handle.addr().to_string()).expect("client connects");
+    let served = client.post_scenario("query", "cli-query", &toml).expect("served query answers");
+    assert_eq!(served, direct, "POST /query diverges from the runner snapshot");
+    drop(client);
+    handle.shutdown();
+}
