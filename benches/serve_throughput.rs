@@ -10,7 +10,14 @@
 //! * **hard**: warm queries/sec strictly greater than cold (one clean
 //!   re-measure before failing — shared machines jitter);
 //! * **hard**: aggregate shared-cache `hit_rate` > 0 at `GET /stats`;
-//! * **tracked**: warm/cold ≥ 3× (reported in the artifact, not enforced).
+//! * **hard**: a burst of byte-identical concurrent duplicates must show
+//!   nonzero single-flight `coalescing.coalesced` at `GET /stats`
+//!   (retried with a fresh flight key if a burst serialized);
+//! * **tracked**: warm/cold ≥ 3× (reported in the artifact, not enforced);
+//! * **baseline**: warm qps within 4× of the committed
+//!   `bench/BENCH_serve.json` (delta printed on every armed run;
+//!   `DSMEM_BENCH_BASELINE` overrides the path, a missing file or a
+//!   `"bootstrap": true` placeholder leaves it unarmed).
 //!
 //! `DSMEM_BENCH_QUICK=1` shrinks the timed passes; `DSMEM_BENCH_OUT`
 //! overrides the artifact path. The artifact is written *before* the
@@ -97,6 +104,59 @@ fn warm_pass(qs: &[(String, String)], passes: usize) -> WarmRun {
     WarmRun { latencies, total_s, stats }
 }
 
+struct CoalesceRun {
+    coalesced: f64,
+    leaders: f64,
+    attempts: u32,
+}
+
+/// Fire `n` byte-identical plan POSTs at one daemon concurrently and read
+/// the single-flight counters back from `GET /stats`. Retries with a
+/// fresh flight key if a burst happened to serialize — single-flight has
+/// no memory, so only overlapping duplicates can coalesce.
+fn coalesce_pass(n: usize) -> CoalesceRun {
+    let handle = start(&ServerConfig { addr: "127.0.0.1:0".into(), threads: n.max(2) })
+        .expect("bench server boots");
+    let addr = handle.addr().to_string();
+    // The full default world-1024 space: slow enough (even with warm memo
+    // tiers) that simultaneous duplicates overlap the evaluation.
+    let toml = "model = \"v3\"\naction = \"plan\"\nhbm_gib = 80\n\n\
+                [plan]\nworld = 1024\nmicrobatches = 32\n";
+    let mut run = CoalesceRun { coalesced: 0.0, leaders: 0.0, attempts: 0 };
+    for attempt in 0..5u32 {
+        run.attempts = attempt + 1;
+        let name = format!("bench-dup-{attempt}");
+        std::thread::scope(|s| {
+            for _ in 0..n {
+                let (addr, name) = (&addr, &name);
+                s.spawn(move || {
+                    let mut client = ServerClient::connect(addr).expect("dup client connects");
+                    client.post_scenario("plan", name, toml).expect("dup query answers");
+                });
+            }
+        });
+        let mut client = ServerClient::connect(&addr).expect("stats client connects");
+        let (status, body) = client.request("GET", "/stats", "").expect("stats answers");
+        assert_eq!(status, 200, "GET /stats failed: {body}");
+        let stats = Json::parse(&body).expect("stats is JSON");
+        let field = |f: &str| {
+            stats
+                .get("coalescing")
+                .and_then(|c| c.get(f))
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|_| panic!("stats.coalescing.{f} missing: {body}"))
+        };
+        run.coalesced = field("coalesced");
+        run.leaders = field("leaders");
+        drop(client);
+        if run.coalesced > 0.0 {
+            break;
+        }
+    }
+    handle.shutdown();
+    run
+}
+
 fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
@@ -147,8 +207,14 @@ fn main() {
     warm_obj.insert("passes".into(), Json::Num(passes as f64));
     warm_obj.insert("qps".into(), Json::Num(warm_qps));
     warm_obj.insert("total_s".into(), Json::Num(warm.total_s));
+    let coalesce = coalesce_pass(4);
+    let mut co_obj = BTreeMap::new();
+    co_obj.insert("attempts".into(), Json::Num(coalesce.attempts as f64));
+    co_obj.insert("coalesced".into(), Json::Num(coalesce.coalesced));
+    co_obj.insert("leaders".into(), Json::Num(coalesce.leaders));
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("serve_throughput".into()));
+    doc.insert("coalescing".into(), Json::Obj(co_obj));
     doc.insert("cold".into(), Json::Obj(cold_obj));
     doc.insert("queries".into(), Json::Num(qs.len() as f64));
     doc.insert("quick".into(), Json::Bool(quick));
@@ -163,6 +229,50 @@ fn main() {
         "serve_throughput: cold {cold_qps:.2} qps, warm {warm_qps:.2} qps ({ratio:.1}x), \
          p50 {p50_ms:.2} ms, p99 {p99_ms:.2} ms, shared-cache hit rate {hit_rate:.3} -> {out}"
     );
+    println!(
+        "serve_throughput: coalescing {:.0} coalesced / {:.0} leaders in {} attempt(s)",
+        coalesce.coalesced, coalesce.leaders, coalesce.attempts
+    );
+
+    // Baseline gate: warm qps must stay within 4× of the committed
+    // baseline (generous — serving is dominated by planner evaluation and
+    // CI runners vary widely; the tight perf signal is the planner bench).
+    let baseline_path = std::env::var("DSMEM_BENCH_BASELINE")
+        .unwrap_or_else(|_| "bench/BENCH_serve.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Err(_) => println!(
+            "serve baseline unarmed: no baseline at {baseline_path} \
+             (commit a CI BENCH_serve.json there to arm it)"
+        ),
+        Ok(text) => match Json::parse(&text) {
+            Err(e) => println!("serve baseline skipped: unparseable baseline: {e}"),
+            Ok(bdoc) => {
+                if matches!(bdoc.get("bootstrap").and_then(|v| v.as_bool()), Ok(true)) {
+                    println!(
+                        "serve baseline unarmed: bootstrap placeholder at {baseline_path} — \
+                         replace it with a measured CI artifact to arm the gate"
+                    );
+                } else {
+                    match bdoc.get("warm").and_then(|w| w.get("qps")).and_then(|v| v.as_f64()) {
+                        Err(_) => println!("serve baseline skipped: baseline has no warm.qps"),
+                        Ok(old_qps) if old_qps > 0.0 => {
+                            println!(
+                                "serve baseline: warm {warm_qps:.2} qps vs baseline \
+                                 {old_qps:.2} qps (Δ {:+.1}%)",
+                                100.0 * (warm_qps - old_qps) / old_qps
+                            );
+                            assert!(
+                                warm_qps >= old_qps / 4.0,
+                                "warm serving fell more than 4× below the committed baseline: \
+                                 {warm_qps:.2} qps vs {old_qps:.2} qps"
+                            );
+                        }
+                        Ok(_) => println!("serve baseline skipped: baseline warm.qps is zero"),
+                    }
+                }
+            }
+        },
+    }
     if ratio < 3.0 {
         println!(
             "serve_throughput: NOTE warm/cold {ratio:.2}x is below the tracked 3x target \
@@ -177,5 +287,10 @@ fn main() {
         warm_qps > cold_qps,
         "warm serving must strictly beat cold: warm {warm_qps:.2} qps vs cold {cold_qps:.2} qps \
          (after one re-measure)"
+    );
+    assert!(
+        coalesce.coalesced > 0.0,
+        "concurrent identical queries never coalesced after {} attempts",
+        coalesce.attempts
     );
 }

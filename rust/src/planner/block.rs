@@ -1,0 +1,481 @@
+//! Layout-block-at-a-time evaluation — the planner's vectorizable kernel.
+//!
+//! The candidate-at-a-time hot path ([`Evaluator::evaluate_with`]) pays per
+//! candidate for work that is constant across a whole **layout block** of the
+//! odometer: a fixed `(parallel, act)` base point fans out over the trailing
+//! ZeRO × schedule axes, and every candidate of that fan-out shares the same
+//! stage plan, ZeRO rows, activation tapes and schedule profiles — the scalar
+//! path re-fetches each of them (a hash + mutex-shard memo lookup) for every
+//! single candidate. [`Evaluator::begin_block`] hoists all of it out of the
+//! fan-out loop into a [`BlockScratch`] of flat struct-of-arrays tables:
+//!
+//! * `params_flat[zi·S + s]` / `go_flat[zi·S + s]` — the exact
+//!   [`crate::analysis::zero::ZeroRow`] statics of stage `s` under ZeRO
+//!   strategy `zi`, one contiguous `u64` run per strategy;
+//! * per schedule `si`: `act_term[si·S + s]` — the exact per-unit stage tape
+//!   total times that stage's analytic in-flight count — and
+//!   `lb_act_term[si·S + s]`, the admissible [`unit_floor`] twin the lower
+//!   bound uses (see [`super::bound`]).
+//!
+//! A candidate `(zero, schedule)` then reduces to one branch-light pass over
+//! three contiguous `u64` slices:
+//!
+//! ```text
+//! alloc[s] = mult·params[s] + go[s] + act[s];   binding = argmax_s alloc[s]
+//! ```
+//!
+//! which LLVM autovectorizes (no hash, no `Arc`, no per-stage branching —
+//! just fused multiply-add and max). The reduction runs over **allocated**
+//! bytes rather than totals: the comm band is a constant and
+//! [`crate::analysis::total::Overheads::fragmentation_bytes`] is monotone
+//! non-decreasing, so `alloc + comm + frag(alloc)` is strictly increasing in
+//! `alloc` — the argmax (earliest on ties, strict `>`) and the max *value*
+//! are bit-identical to the scalar loop's max over totals. Only the winning
+//! stage's ledger is assembled, exactly as the scalar path does, so
+//! [`Evaluator::evaluate_block`] is bit-identical to the `evaluate_with`
+//! loop (proptested by `block_eval_matches_candidate_eval`).
+
+use std::sync::Arc;
+
+use super::bound::{unit_floor, zero_index, NUM_ZERO};
+use super::eval::{Evaluator, PlanPoint, ScheduleProfile};
+use super::space::Candidate;
+use crate::analysis::activation::{mla_tape, moe_tape};
+use crate::analysis::atlas::assemble_stage_ledger;
+use crate::analysis::stages::StagePlan;
+use crate::analysis::zero::{ZeroReport, ZeroStrategy};
+use crate::config::{ActivationConfig, ParallelConfig};
+use crate::ledger::MemoryLedger;
+use crate::schedule::ScheduleSpec;
+
+/// Reusable per-worker state of the block kernel: everything
+/// [`Evaluator::begin_block`] hoists out of a layout block's ZeRO × schedule
+/// fan-out. Three staleness tiers, each rebuilt only when its key moves —
+/// the odometer yields blocks in layout-major order, so the expensive tiers
+/// change rarest:
+///
+/// * **layout** (`parallel`): stage plan, per-stage ZeRO rows flattened into
+///   `params_flat`/`go_flat`;
+/// * **schedules** (`pp`, schedule list): one memoized
+///   [`ScheduleProfile`] per schedule of the space (`None` for shapes the
+///   schedule cannot run at the evaluator's microbatch count);
+/// * **base** (`parallel, act`): activation tape ledgers, per-unit stage
+///   totals per distinct unit divisor, and the flat `act_term`/`lb_act_term`
+///   tables.
+pub struct BlockScratch {
+    layout: Option<ParallelConfig>,
+    plan: Option<Arc<StagePlan>>,
+    statics: Option<Arc<Vec<ZeroReport>>>,
+    /// `params_flat[zi·S + s]` — stage `s` parameter bytes under
+    /// `ZeroStrategy::ALL[zi]` (before the schedule replica multiplier).
+    params_flat: Vec<u64>,
+    /// `go_flat[zi·S + s]` — stage `s` gradient + optimizer bytes.
+    go_flat: Vec<u64>,
+    schedules: Vec<ScheduleSpec>,
+    profiles: Vec<Option<Arc<ScheduleProfile>>>,
+    base: Option<(ParallelConfig, ActivationConfig)>,
+    mla_layer: MemoryLedger,
+    moe_layer: MemoryLedger,
+    /// `(units_per_microbatch, per-stage per-unit tape totals)` — at most
+    /// one entry per distinct unit divisor among the block's schedules.
+    unit_totals: Vec<(u64, Vec<u64>)>,
+    /// `act_term[si·S + s]` — exact per-unit stage total × stage `s`'s
+    /// analytic in-flight count under schedule `si`.
+    act_term: Vec<u64>,
+    /// `lb_act_term[si·S + s]` — the admissible [`unit_floor`] twin of
+    /// `act_term` (full-recompute tape, rounding allowance granted).
+    lb_act_term: Vec<u64>,
+}
+
+impl Default for BlockScratch {
+    fn default() -> Self {
+        Self {
+            layout: None,
+            plan: None,
+            statics: None,
+            params_flat: Vec::new(),
+            go_flat: Vec::new(),
+            schedules: Vec::new(),
+            profiles: Vec::new(),
+            base: None,
+            mla_layer: MemoryLedger::new(),
+            moe_layer: MemoryLedger::new(),
+            unit_totals: Vec::new(),
+            act_term: Vec::new(),
+            lb_act_term: Vec::new(),
+        }
+    }
+}
+
+impl BlockScratch {
+    /// Pipeline stages of the current block (0 before any [`Evaluator::begin_block`]).
+    fn n_stages(&self) -> usize {
+        self.plan.as_ref().map(|p| p.stages.len()).unwrap_or(0)
+    }
+
+    /// Is schedule `si` runnable at the block's `(pp, m)` shape?
+    pub fn schedule_valid(&self, si: usize) -> bool {
+        self.profiles.get(si).map(|p| p.is_some()).unwrap_or(false)
+    }
+}
+
+/// The kernel's inner reduction: argmax over
+/// `mult·params[s] + go[s] + act[s]` with strict `>` (earliest stage wins
+/// ties), over three contiguous `u64` slices — fused multiply-add and max,
+/// no branches LLVM cannot lower to vector selects.
+fn binding_alloc(params: &[u64], go: &[u64], act: &[u64], mult: u64) -> (usize, u64) {
+    let mut best = 0usize;
+    let mut best_alloc = 0u64;
+    for (s, ((&p, &g), &a)) in params.iter().zip(go).zip(act).enumerate() {
+        let alloc = mult * p + g + a;
+        if alloc > best_alloc {
+            best = s;
+            best_alloc = alloc;
+        }
+    }
+    (best, best_alloc)
+}
+
+impl Evaluator<'_> {
+    /// Point `scratch` at one layout block: the `(parallel, act)` base and
+    /// the schedule axis it fans out over. Rebuilds only the staleness tiers
+    /// whose key moved (see [`BlockScratch`]); after this, every
+    /// `(zero, schedule-index)` of the fan-out is served by
+    /// [`Self::block_lower_bound`] / [`Self::block_binding`] /
+    /// [`Self::block_point`] without touching a memo cache.
+    ///
+    /// `(parallel, act)` must be a valid point of the space (the candidate
+    /// stream only yields valid bases). Schedules that cannot run at the
+    /// evaluator's microbatch count get no profile —
+    /// [`BlockScratch::schedule_valid`] — and must be filtered by the caller
+    /// exactly as on the scalar path.
+    pub fn begin_block(
+        &self,
+        parallel: &ParallelConfig,
+        act: &ActivationConfig,
+        schedules: &[ScheduleSpec],
+        scratch: &mut BlockScratch,
+    ) {
+        let pp_changed = scratch.layout.map(|l| l.pp) != Some(parallel.pp);
+        let layout_changed = scratch.layout != Some(*parallel);
+        if layout_changed {
+            let plan = self.plan_for(parallel.pp);
+            let statics = self.statics_for(parallel);
+            let n = plan.stages.len();
+            scratch.params_flat.clear();
+            scratch.go_flat.clear();
+            scratch.params_flat.reserve(NUM_ZERO * n);
+            scratch.go_flat.reserve(NUM_ZERO * n);
+            for &z in ZeroStrategy::ALL.iter() {
+                for zr in statics.iter() {
+                    let row = zr.row(z);
+                    scratch.params_flat.push(row.params_bytes);
+                    scratch.go_flat.push(row.gradient_bytes + row.optimizer_bytes);
+                }
+            }
+            scratch.plan = Some(plan);
+            scratch.statics = Some(statics);
+            scratch.layout = Some(*parallel);
+        }
+        let scheds_changed = pp_changed || scratch.schedules != schedules;
+        if scheds_changed {
+            scratch.schedules.clear();
+            scratch.schedules.extend_from_slice(schedules);
+            scratch.profiles.clear();
+            for &spec in schedules {
+                let valid = spec.resolve().validate(parallel.pp, self.num_microbatches).is_ok();
+                scratch
+                    .profiles
+                    .push(valid.then(|| self.schedule_profile(spec, parallel.pp)));
+            }
+        }
+        let base_changed = scratch.base != Some((*parallel, *act));
+        if !base_changed && !scheds_changed {
+            return;
+        }
+        if base_changed {
+            let pol = act.recompute;
+            scratch.mla_layer = mla_tape(self.model, act).ledger(pol);
+            scratch.moe_layer = moe_tape(self.model, parallel, act).ledger(pol);
+            scratch.unit_totals.clear();
+            scratch.base = Some((*parallel, *act));
+        }
+        let plan = scratch.plan.as_ref().expect("layout tier initialized").clone();
+        let n = plan.stages.len();
+        let floor = self.activation_floor(parallel, act);
+        let ns = schedules.len();
+        scratch.act_term.clear();
+        scratch.act_term.resize(ns * n, 0);
+        scratch.lb_act_term.clear();
+        scratch.lb_act_term.resize(ns * n, 0);
+        for si in 0..ns {
+            let Some(prof) = scratch.profiles[si].clone() else { continue };
+            let u = prof.units_per_microbatch;
+            if !scratch.unit_totals.iter().any(|(uu, _)| *uu == u) {
+                let (mla, moe) = (scratch.mla_layer, scratch.moe_layer);
+                let totals: Vec<u64> = plan
+                    .stages
+                    .iter()
+                    .map(|i| {
+                        mla.scale(i.num_layers).merged(&moe.scale(i.moe_layers)).div(u).total()
+                    })
+                    .collect();
+                scratch.unit_totals.push((u, totals));
+            }
+            let totals = &scratch.unit_totals.iter().find(|(uu, _)| *uu == u).unwrap().1;
+            for s in 0..n {
+                scratch.act_term[si * n + s] = totals[s] * prof.inflight_units[s];
+                scratch.lb_act_term[si * n + s] =
+                    unit_floor(floor.stage_full_tape[s], u) * prof.inflight_units[s];
+            }
+        }
+    }
+
+    /// Admissible lower bound on the `(zero, schedule `si`)` candidate of the
+    /// current block — bit-identical to
+    /// [`super::bound::candidate_lower_bound`] (the max over per-stage
+    /// frag-adjusted floors is attained at the max floor allocation, by the
+    /// same monotonicity that justifies the binding reduction), but a flat
+    /// slice pass instead of three memo lookups.
+    pub fn block_lower_bound(&self, scratch: &BlockScratch, zero: ZeroStrategy, si: usize) -> u64 {
+        let prof = scratch.profiles[si].as_ref().expect("schedule must be valid for the block");
+        let n = scratch.n_stages();
+        let zi = zero_index(zero);
+        let (_, alloc) = binding_alloc(
+            &scratch.params_flat[zi * n..(zi + 1) * n],
+            &scratch.go_flat[zi * n..(zi + 1) * n],
+            &scratch.lb_act_term[si * n..(si + 1) * n],
+            prof.param_multiplier,
+        );
+        let ov = self.overheads;
+        ov.comm_buffer_bytes + alloc + ov.fragmentation_bytes(alloc)
+    }
+
+    /// The binding stage and exact total bytes of the `(zero, schedule `si`)`
+    /// candidate — the scalar loop's per-stage max, as one vectorizable
+    /// reduction over the block's flat tables. The total is bit-identical to
+    /// the assembled ledger's `total_bytes()`, so callers can test
+    /// feasibility before paying for [`Self::block_point_at`].
+    pub fn block_binding(
+        &self,
+        scratch: &BlockScratch,
+        zero: ZeroStrategy,
+        si: usize,
+    ) -> (usize, u64) {
+        let prof = scratch.profiles[si].as_ref().expect("schedule must be valid for the block");
+        let n = scratch.n_stages();
+        let zi = zero_index(zero);
+        let (binding, alloc) = binding_alloc(
+            &scratch.params_flat[zi * n..(zi + 1) * n],
+            &scratch.go_flat[zi * n..(zi + 1) * n],
+            &scratch.act_term[si * n..(si + 1) * n],
+            prof.param_multiplier,
+        );
+        let ov = self.overheads;
+        (binding, alloc + ov.comm_buffer_bytes + ov.fragmentation_bytes(alloc))
+    }
+
+    /// Assemble the [`PlanPoint`] of the `(zero, schedule `si`)` candidate
+    /// given its already-reduced binding stage ([`Self::block_binding`]) —
+    /// the only per-candidate ledger assembly the kernel ever does.
+    pub fn block_point_at(
+        &self,
+        scratch: &BlockScratch,
+        zero: ZeroStrategy,
+        si: usize,
+        binding: usize,
+    ) -> PlanPoint {
+        let prof = scratch.profiles[si].as_ref().expect("schedule must be valid for the block");
+        let plan = scratch.plan.as_ref().expect("begin_block not called");
+        let statics = scratch.statics.as_ref().expect("begin_block not called");
+        let (parallel, act) = scratch.base.expect("begin_block not called");
+        let info = &plan.stages[binding];
+        let ledger = assemble_stage_ledger(
+            statics[binding].row(zero),
+            &scratch.mla_layer,
+            &scratch.moe_layer,
+            info.num_layers,
+            info.moe_layers,
+            prof.units_per_microbatch,
+            prof.inflight_units[binding],
+            prof.param_multiplier,
+            self.overheads,
+        );
+        PlanPoint {
+            parallel,
+            micro_batch: act.micro_batch,
+            sp: act.sp,
+            recompute: act.recompute,
+            zero,
+            schedule: scratch.schedules[si],
+            binding_stage: binding as u64,
+            device_params: prof.param_multiplier * statics[binding].device_params,
+            ledger,
+            bubble: prof.bubble,
+        }
+    }
+
+    /// Evaluate one fan-out candidate of the current block:
+    /// [`Self::block_binding`] + [`Self::block_point_at`]. Bit-identical to
+    /// [`Self::evaluate_with`] on the corresponding [`Candidate`]. A
+    /// schedule the block marked invalid falls back to the scalar path,
+    /// reproducing its behavior exactly (including the memoized panic on a
+    /// truly unrunnable shape).
+    pub fn block_point(&self, scratch: &BlockScratch, zero: ZeroStrategy, si: usize) -> PlanPoint {
+        if scratch.profiles[si].is_none() {
+            let (parallel, act) = scratch.base.expect("begin_block not called");
+            return self.evaluate(&Candidate {
+                parallel,
+                act,
+                zero,
+                schedule: scratch.schedules[si],
+            });
+        }
+        let (binding, _) = self.block_binding(scratch, zero, si);
+        self.block_point_at(scratch, zero, si, binding)
+    }
+
+    /// Evaluate one whole layout block: the full `zeros × schedules` fan-out
+    /// of the `(parallel, act)` base, in fan-out order (ZeRO-major, schedule
+    /// minor — the odometer's trailing-axis order), skipping schedules that
+    /// cannot run at the evaluator's microbatch count (the same
+    /// `(schedule, pp, m)` filter [`crate::planner::plan`] applies). Output
+    /// is bit-identical to running [`Self::evaluate_with`] over the filtered
+    /// candidates in the same order.
+    pub fn evaluate_block(
+        &self,
+        parallel: &ParallelConfig,
+        act: &ActivationConfig,
+        zeros: &[ZeroStrategy],
+        schedules: &[ScheduleSpec],
+        scratch: &mut BlockScratch,
+    ) -> Vec<PlanPoint> {
+        self.begin_block(parallel, act, schedules, scratch);
+        let mut out = Vec::with_capacity(zeros.len() * schedules.len());
+        for &zero in zeros {
+            for si in 0..schedules.len() {
+                if !scratch.schedule_valid(si) {
+                    continue;
+                }
+                out.push(self.block_point(scratch, zero, si));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::stages::StageSplit;
+    use crate::analysis::total::Overheads;
+    use crate::config::CaseStudy;
+    use crate::model::CountMode;
+    use crate::planner::{EvalScratch, SearchSpace};
+
+    fn paper_eval(cs: &CaseStudy) -> Evaluator<'_> {
+        Evaluator::new(
+            &cs.model,
+            cs.dtypes,
+            CountMode::PaperCompat,
+            StageSplit::FrontLoaded,
+            Overheads::paper_midpoint(),
+            32,
+        )
+    }
+
+    #[test]
+    fn block_fanout_is_bit_identical_to_scalar_evaluation() {
+        // Walk the world-1024 stream base by base through the block kernel;
+        // every point must equal the scalar path's, and the block's binding
+        // total must equal the assembled ledger's grand total.
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        let space = SearchSpace::for_world(1024);
+        let schedules = space.schedule.clone();
+        let mut scratch = BlockScratch::default();
+        let mut eval_scratch = EvalScratch::default();
+        let mut it = space.candidates(&cs.model);
+        let mut bases = 0;
+        while let Some((parallel, act)) = it.next_base() {
+            if bases >= 40 {
+                break;
+            }
+            bases += 1;
+            ev.begin_block(&parallel, &act, &schedules, &mut scratch);
+            for &zero in &space.zero {
+                for (si, &schedule) in schedules.iter().enumerate() {
+                    if !scratch.schedule_valid(si) {
+                        continue;
+                    }
+                    let c = Candidate { parallel, act, zero, schedule };
+                    let want = ev.evaluate_with(&c, &mut eval_scratch);
+                    let (binding, total) = ev.block_binding(&scratch, zero, si);
+                    assert_eq!(binding as u64, want.binding_stage, "{c:?}");
+                    assert_eq!(total, want.total_bytes(), "{c:?}");
+                    assert_eq!(ev.block_point(&scratch, zero, si), want, "{c:?}");
+                    // The flat lower bound matches the memoized one.
+                    assert_eq!(
+                        ev.block_lower_bound(&scratch, zero, si),
+                        ev.lower_bound(&c),
+                        "{c:?}"
+                    );
+                }
+            }
+        }
+        assert_eq!(bases, 40);
+    }
+
+    #[test]
+    fn evaluate_block_matches_filtered_evaluate_stream() {
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        let space = SearchSpace::for_world(1024);
+        let mut it = space.candidates(&cs.model);
+        let mut scratch = BlockScratch::default();
+        for _ in 0..10 {
+            let (parallel, act) = it.next_base().expect("stream has bases");
+            let got =
+                ev.evaluate_block(&parallel, &act, &space.zero, &space.schedule, &mut scratch);
+            let want: Vec<PlanPoint> = space
+                .zero
+                .iter()
+                .flat_map(|&zero| {
+                    space.schedule.iter().filter_map(move |&schedule| {
+                        schedule
+                            .resolve()
+                            .validate(parallel.pp, 32)
+                            .is_ok()
+                            .then_some(Candidate { parallel, act, zero, schedule })
+                    })
+                })
+                .map(|c| ev.evaluate(&c))
+                .collect();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn block_scratch_survives_layout_and_schedule_set_changes() {
+        // Reusing one scratch across different layouts, pp degrees and
+        // schedule subsets must never leak stale tables.
+        let cs = CaseStudy::paper();
+        let ev = paper_eval(&cs);
+        let space = SearchSpace::for_world(1024);
+        let subsets: Vec<Vec<ScheduleSpec>> = vec![
+            space.schedule.clone(),
+            vec![space.schedule[0]],
+            space.schedule.iter().rev().copied().collect(),
+        ];
+        let mut scratch = BlockScratch::default();
+        let mut it = space.candidates(&cs.model);
+        for round in 0..12 {
+            let (parallel, act) = it.next_base().expect("stream has bases");
+            let scheds = &subsets[round % subsets.len()];
+            let got = ev.evaluate_block(&parallel, &act, &space.zero, scheds, &mut scratch);
+            let mut fresh = BlockScratch::default();
+            let want = ev.evaluate_block(&parallel, &act, &space.zero, scheds, &mut fresh);
+            assert_eq!(got, want, "round {round}");
+        }
+    }
+}

@@ -687,24 +687,55 @@ impl<'a> Evaluator<'a> {
     ///
     /// Contiguous chunks preserve input order, so the result is identical to
     /// `cands.iter().map(|c| self.evaluate(c))` regardless of parallelism.
+    /// Each worker owns one [`super::block::BlockScratch`] for its whole
+    /// chunk and routes the contiguous `(parallel, act)` runs of its slice
+    /// through the block kernel — enumeration-ordered batches (the common
+    /// caller) evaluate whole fan-out blocks per table build instead of
+    /// re-fetching the memoized sub-results per candidate.
     pub fn evaluate_all(&self, cands: &[Candidate]) -> Vec<PlanPoint> {
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         if threads <= 1 || cands.len() < 64 {
-            return cands.iter().map(|c| self.evaluate(c)).collect();
+            return self.evaluate_run(cands);
         }
         let chunk = cands.len().div_ceil(threads);
         std::thread::scope(|s| {
-            let handles: Vec<_> = cands
-                .chunks(chunk)
-                .map(|part| {
-                    s.spawn(move || part.iter().map(|c| self.evaluate(c)).collect::<Vec<_>>())
-                })
-                .collect();
+            let handles: Vec<_> =
+                cands.chunks(chunk).map(|part| s.spawn(move || self.evaluate_run(part))).collect();
             handles
                 .into_iter()
                 .flat_map(|h| h.join().expect("planner worker panicked"))
                 .collect()
         })
+    }
+
+    /// One worker's share of [`Self::evaluate_all`]: scan the slice for
+    /// contiguous runs sharing a `(parallel, act)` base, point one reusable
+    /// block scratch at each run, and evaluate its candidates off the flat
+    /// tables. Order and results are identical to per-candidate
+    /// [`Self::evaluate`] (the block kernel's bit-identity contract).
+    fn evaluate_run(&self, cands: &[Candidate]) -> Vec<PlanPoint> {
+        let mut scratch = super::block::BlockScratch::default();
+        let mut scheds: Vec<ScheduleSpec> = Vec::new();
+        let mut out = Vec::with_capacity(cands.len());
+        let mut i = 0;
+        while i < cands.len() {
+            let base = (cands[i].parallel, cands[i].act);
+            let mut j = i;
+            scheds.clear();
+            while j < cands.len() && (cands[j].parallel, cands[j].act) == base {
+                if !scheds.contains(&cands[j].schedule) {
+                    scheds.push(cands[j].schedule);
+                }
+                j += 1;
+            }
+            self.begin_block(&cands[i].parallel, &cands[i].act, &scheds, &mut scratch);
+            for c in &cands[i..j] {
+                let si = scheds.iter().position(|s| *s == c.schedule).unwrap();
+                out.push(self.block_point(&scratch, c.zero, si));
+            }
+            i = j;
+        }
+        out
     }
 }
 

@@ -46,12 +46,14 @@
 //! assert!(!result.frontier.is_empty());
 //! ```
 
+pub mod block;
 pub mod bound;
 pub mod eval;
 pub mod pareto;
 pub mod report;
 pub mod space;
 
+pub use block::BlockScratch;
 pub use bound::{ActivationFloor, BoundTerms};
 pub use eval::{
     sweep_fixed, CacheStats, EvalCacheStats, EvalCaches, EvalScratch, Evaluator, PlanPoint,
@@ -181,8 +183,36 @@ pub fn plan_with_threads(
     query: &PlanQuery,
     threads: usize,
 ) -> PlanResult {
+    plan_with_threads_kernel(model, dtypes, query, threads, PlanKernel::Block)
+}
+
+/// Which hot-loop implementation [`plan_with_threads`] folds regions with.
+/// Both produce byte-identical output (proptested); the planner always runs
+/// [`PlanKernel::Block`] — [`PlanKernel::Scalar`] survives as the
+/// throughput bench's before/after baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKernel {
+    /// Layout-block-at-a-time evaluation through [`BlockScratch`]: flat
+    /// per-stage struct-of-arrays tables built once per base, candidates
+    /// reduced with a branch-light vectorizable max ([`block`]).
+    Block,
+    /// The historical candidate-at-a-time path: memoized
+    /// [`Evaluator::lower_bound`] + [`Evaluator::evaluate_with`] per
+    /// candidate.
+    Scalar,
+}
+
+/// [`plan_with_threads`] with an explicit [`PlanKernel`] and a fresh cache
+/// tier — the bench's entry point for block-vs-scalar ratio measurement.
+pub fn plan_with_threads_kernel(
+    model: &ModelConfig,
+    dtypes: DtypePolicy,
+    query: &PlanQuery,
+    threads: usize,
+    kernel: PlanKernel,
+) -> PlanResult {
     let caches = Arc::new(EvalCaches::new());
-    plan_with_threads_shared(model, dtypes, query, threads, &caches)
+    plan_with_threads_shared_kernel(model, dtypes, query, threads, &caches, kernel)
 }
 
 /// [`plan_with_threads`] against a caller-owned [`EvalCaches`] tier — the
@@ -205,14 +235,28 @@ pub fn plan_with_threads_shared(
     threads: usize,
     caches: &Arc<EvalCaches>,
 ) -> PlanResult {
+    plan_with_threads_shared_kernel(model, dtypes, query, threads, caches, PlanKernel::Block)
+}
+
+/// [`plan_with_threads_shared`] with an explicit [`PlanKernel`].
+pub fn plan_with_threads_shared_kernel(
+    model: &ModelConfig,
+    dtypes: DtypePolicy,
+    query: &PlanQuery,
+    threads: usize,
+    caches: &Arc<EvalCaches>,
+    kernel: PlanKernel,
+) -> PlanResult {
     let stats_start = caches.stats();
-    let regions = region_bounds(query.space.base_len(), threads);
+    // Regions snap to layout-block boundaries so a block's fan-out (and its
+    // `BlockScratch` tables) never straddles two workers.
+    let regions = region_bounds(query.space.base_len(), threads, query.space.layout_block_len());
     let mut fold = FrontierFold::new(query.hbm_bytes, query.top_k);
     let mut evaluated: Vec<PlanPoint> = Vec::new();
     let mut slot_resident = 0usize;
     if threads <= 1 || regions.len() <= 1 {
         let ev = new_evaluator(model, dtypes, query, caches.clone());
-        let (part, kept) = fold_region(query, &ev, 0, query.space.base_len());
+        let (part, kept) = fold_region(query, &ev, 0, query.space.base_len(), kernel);
         slot_resident = part.resident_points();
         fold.merge(part);
         evaluated = kept;
@@ -233,7 +277,7 @@ pub fn plan_with_threads_shared(
                     loop {
                         let r = next.fetch_add(1, Ordering::Relaxed);
                         let Some(&(lo, hi)) = regions.get(r) else { break };
-                        let part = fold_region(query, &ev, lo, hi);
+                        let part = fold_region(query, &ev, lo, hi, kernel);
                         *slots[r].lock().unwrap() = Some(part);
                     }
                 });
@@ -353,6 +397,120 @@ fn fold_region(
     ev: &Evaluator<'_>,
     lo: usize,
     hi: usize,
+    kernel: PlanKernel,
+) -> (FrontierFold, Vec<PlanPoint>) {
+    match kernel {
+        PlanKernel::Block => fold_region_block(query, ev, lo, hi),
+        PlanKernel::Scalar => fold_region_scalar(query, ev, lo, hi),
+    }
+}
+
+/// The block-kernel hot loop: walk the region one `(parallel, act)` base at
+/// a time ([`Candidates::next_base`]), point a per-region [`BlockScratch`]
+/// at each base once ([`Evaluator::begin_block`]), then reduce the whole
+/// ZeRO × schedule fan-out over the scratch's flat tables — no memo-cache
+/// lookups inside the fan-out. The same three prune tiers as the scalar
+/// path, at coarser granularity:
+///
+/// 1. the `(schedule, pp, m)` bitmask (a base with no runnable schedule is
+///    skipped before its block is built);
+/// 2. the layout floor — an over-budget layout skips its whole subtree
+///    ([`Candidates::skip_subtree`]) *before* any table is built: the
+///    current base plus every skipped base account for their full filtered
+///    fan-out, exactly what the scalar path counts candidate by candidate;
+/// 3. the per-candidate bound ([`Evaluator::block_lower_bound`]) and exact
+///    binding total ([`Evaluator::block_binding`]) — the exact total is a
+///    by-product of the binding reduction, so an infeasible candidate is
+///    counted ([`FrontierFold::count_infeasible`]) without assembling its
+///    ledger (a [`FrontierFold::push`] of an infeasible point does nothing
+///    more).
+///
+/// Byte-identical to [`fold_region_scalar`] in all modes (proptested).
+fn fold_region_block(
+    query: &PlanQuery,
+    ev: &Evaluator<'_>,
+    lo: usize,
+    hi: usize,
+) -> (FrontierFold, Vec<PlanPoint>) {
+    let mut fold = FrontierFold::new(query.hbm_bytes, query.top_k);
+    let mut kept = Vec::new();
+    let m = query.num_microbatches;
+    let ns = query.space.schedule.len();
+    let nz = query.space.zero.len() as u64;
+    let mut sched_pp: Option<u64> = None;
+    let mut sched_valid = vec![false; ns];
+    let mut sched_valid_count = 0u64;
+    let mut cur_layout: Option<crate::config::ParallelConfig> = None;
+    let mut layout_over = false;
+    let mut scratch = BlockScratch::default();
+    let mut it = query.space.candidates_range(ev.model, lo, hi);
+    while let Some((parallel, act)) = it.next_base() {
+        if sched_pp != Some(parallel.pp) {
+            sched_pp = Some(parallel.pp);
+            sched_valid_count = 0;
+            for (i, s) in query.space.schedule.iter().enumerate() {
+                sched_valid[i] = s.resolve().validate(parallel.pp, m).is_ok();
+                if sched_valid[i] {
+                    sched_valid_count += 1;
+                }
+            }
+        }
+        if sched_valid_count == 0 {
+            continue;
+        }
+        if cur_layout != Some(parallel) {
+            cur_layout = Some(parallel);
+            layout_over = ev.layout_floor(&parallel) > query.hbm_bytes;
+        }
+        if layout_over && !query.keep_evaluated {
+            // This base was consumed before any fan-out, so it accounts for
+            // its full filtered fan-out alongside the skipped bases' (PP is
+            // constant within the block — one bitmask covers them all).
+            let skipped = it.skip_subtree();
+            fold.prune((1 + skipped.bases_skipped) * nz * sched_valid_count);
+            cur_layout = None;
+            continue;
+        }
+        ev.begin_block(&parallel, &act, &query.space.schedule, &mut scratch);
+        for &zero in &query.space.zero {
+            for (si, valid) in sched_valid.iter().enumerate() {
+                if !valid {
+                    continue;
+                }
+                if query.keep_evaluated {
+                    let pruned_by_bound =
+                        ev.block_lower_bound(&scratch, zero, si) > query.hbm_bytes;
+                    let p = ev.block_point(&scratch, zero, si);
+                    kept.push(p.clone());
+                    fold.push(p);
+                    if pruned_by_bound {
+                        fold.note_pruned(1);
+                    }
+                    continue;
+                }
+                if ev.block_lower_bound(&scratch, zero, si) > query.hbm_bytes {
+                    fold.prune(1);
+                    continue;
+                }
+                let (binding, total) = ev.block_binding(&scratch, zero, si);
+                if total > query.hbm_bytes {
+                    fold.count_infeasible(1);
+                    continue;
+                }
+                fold.push(ev.block_point_at(&scratch, zero, si, binding));
+            }
+        }
+    }
+    (fold, kept)
+}
+
+/// The historical candidate-at-a-time hot loop — the block kernel's
+/// before/after baseline ([`PlanKernel::Scalar`]).
+fn fold_region_scalar(
+    query: &PlanQuery,
+    ev: &Evaluator<'_>,
+    lo: usize,
+    hi: usize,
 ) -> (FrontierFold, Vec<PlanPoint>) {
     let mut fold = FrontierFold::new(query.hbm_bytes, query.top_k);
     let mut kept = Vec::new();
@@ -425,13 +583,18 @@ fn fold_region(
 
 /// Split `0..base_len` into contiguous regions — a few per worker, so the
 /// shared-cursor scheduler can balance regions whose pruned candidate
-/// counts differ.
-fn region_bounds(base_len: usize, threads: usize) -> Vec<(usize, usize)> {
+/// counts differ. Region boundaries land on multiples of `block` (the
+/// layout-block length): a layout block never straddles two regions, so
+/// each worker's [`BlockScratch`] tables and [`Candidates::skip_subtree`]
+/// calls always cover whole blocks.
+fn region_bounds(base_len: usize, threads: usize, block: usize) -> Vec<(usize, usize)> {
     if base_len == 0 {
         return Vec::new();
     }
-    let n = (threads.max(1) * 4).min(base_len);
-    let size = base_len.div_ceil(n);
+    let block = block.max(1);
+    let n_blocks = base_len.div_ceil(block);
+    let n = (threads.max(1) * 4).min(n_blocks);
+    let size = n_blocks.div_ceil(n) * block;
     (0..n)
         .map(|i| (i * size, ((i + 1) * size).min(base_len)))
         .filter(|&(lo, hi)| lo < hi)
@@ -684,9 +847,17 @@ mod tests {
 
     #[test]
     fn region_bounds_partition_the_odometer() {
-        assert!(region_bounds(0, 4).is_empty());
-        for (len, threads) in [(1usize, 1usize), (5, 4), (9, 4), (4410, 8), (100, 200)] {
-            let regions = region_bounds(len, threads);
+        assert!(region_bounds(0, 4, 6).is_empty());
+        for (len, threads, block) in [
+            (1usize, 1usize, 1usize),
+            (5, 4, 1),
+            (9, 4, 2),
+            (4410, 8, 18),
+            (100, 200, 7),
+            (4410, 8, 1),
+            (17, 3, 64),
+        ] {
+            let regions = region_bounds(len, threads, block);
             assert!(!regions.is_empty());
             assert_eq!(regions[0].0, 0);
             assert_eq!(regions.last().unwrap().1, len);
@@ -694,6 +865,12 @@ mod tests {
                 assert_eq!(w[0].1, w[1].0, "regions must tile contiguously");
             }
             assert!(regions.iter().all(|&(lo, hi)| lo < hi));
+            // Every boundary except the final end lands on a layout-block
+            // multiple: no block ever straddles two regions.
+            for &(lo, hi) in &regions {
+                assert_eq!(lo % block, 0, "len={len} threads={threads} block={block}");
+                assert!(hi == len || hi % block == 0);
+            }
         }
     }
 }

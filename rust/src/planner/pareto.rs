@@ -178,6 +178,15 @@ impl FrontierFold {
         self.counters.pruned += n;
     }
 
+    /// Account `n` candidates whose *exact* total is known to exceed the
+    /// budget without assembling their ledgers (the block kernel's binding
+    /// reduction yields the exact total before any assembly). Equivalent to
+    /// [`Self::push`]ing the assembled infeasible points: those only bump
+    /// `evaluated` too.
+    pub fn count_infeasible(&mut self, n: u64) {
+        self.counters.evaluated += n;
+    }
+
     /// Merge a fold built from a *later* region of the stream into this one.
     /// Order matters for tie-breaking: `self` must cover the earlier
     /// enumeration indices.

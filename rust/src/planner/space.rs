@@ -170,6 +170,16 @@ impl SearchSpace {
             * self.recompute.len()
     }
 
+    /// Base odometer indices per **layout block** — the contiguous run of
+    /// base points sharing one `(tp, pp, ep, etp)` layout prefix (the
+    /// trailing `sp × b × recompute` axes cycle fastest). This is the unit
+    /// [`Candidates::skip_subtree`] discards, the granularity the block
+    /// evaluation kernel ([`crate::planner::BlockScratch`]) amortizes over,
+    /// and the boundary the planner snaps its grid regions to.
+    pub fn layout_block_len(&self) -> usize {
+        (self.sequence_parallel.len() * self.micro_batch.len() * self.recompute.len()).max(1)
+    }
+
     /// Lazily yield every valid grid point, in exactly the order (and with
     /// exactly the pruning) of [`SearchSpace::enumerate`], without
     /// materializing the grid.
@@ -282,6 +292,26 @@ pub struct Candidates<'a> {
 }
 
 impl Candidates<'_> {
+    /// Advance to the next valid **base point** of the region, abandoning
+    /// any fan-out in progress: the block-kernel driver's way of walking the
+    /// stream one `(parallel, act)` base at a time, fanning the ZeRO ×
+    /// schedule axes out itself. Yields exactly the bases whose fan-outs
+    /// [`Iterator::next`] would have produced, in the same order.
+    /// [`Candidates::skip_subtree`] composes with it: after `next_base`
+    /// returns `Some`, a skip discards the remaining valid bases of the
+    /// returned base's layout block (the base itself was already consumed).
+    pub fn next_base(&mut self) -> Option<(ParallelConfig, ActivationConfig)> {
+        self.pending = None;
+        while self.next_base < self.end_base {
+            let i = self.next_base;
+            self.next_base += 1;
+            if let Some(base) = self.space.base_at(self.model, i) {
+                return Some(base);
+            }
+        }
+        None
+    }
+
     /// Skip the rest of the current **layout block** — every remaining
     /// candidate whose `(tp, pp, ep, etp)` prefix equals the last yielded
     /// candidate's — and report exactly what was skipped.
@@ -307,9 +337,7 @@ impl Candidates<'_> {
         // The pending base was decoded from `next_base - 1`; its layout
         // block spans the trailing sp × b × recompute axes.
         let cur = self.next_base - 1;
-        let block = self.space.sequence_parallel.len()
-            * self.space.micro_batch.len()
-            * self.space.recompute.len();
+        let block = self.space.layout_block_len();
         let end = ((cur / block + 1) * block).min(self.end_base);
         let mut bases_skipped = 0u64;
         while self.next_base < end {
@@ -549,6 +577,42 @@ mod tests {
             lo = hi;
         }
         assert_eq!(covered, full.len() as u64);
+    }
+
+    #[test]
+    fn next_base_walks_exactly_the_fanned_out_bases() {
+        let m = ModelConfig::deepseek_v3();
+        let space = SearchSpace::for_world(1024);
+        let full: Vec<Candidate> = space.candidates(&m).collect();
+        // The distinct (parallel, act) bases of the stream, in order.
+        let mut want: Vec<(ParallelConfig, ActivationConfig)> = Vec::new();
+        for c in &full {
+            if want.last() != Some(&(c.parallel, c.act)) {
+                want.push((c.parallel, c.act));
+            }
+        }
+        let mut it = space.candidates(&m);
+        let mut got = Vec::new();
+        while let Some(base) = it.next_base() {
+            got.push(base);
+        }
+        assert_eq!(got, want);
+        // A fan-out in progress is abandoned: after one next(), next_base
+        // lands on the second base, not the first's remaining fan-out.
+        let mut it = space.candidates(&m);
+        it.next().unwrap();
+        assert_eq!(it.next_base(), Some(want[1]));
+        // Composes with skip_subtree: the skip discards the remaining valid
+        // bases of the returned base's layout block.
+        let block = space.layout_block_len();
+        let mut it = space.candidates(&m);
+        let first = it.next_base().unwrap();
+        let skipped = it.skip_subtree();
+        assert_eq!(skipped.fanout_resume, None);
+        let next = it.next_base().unwrap();
+        assert_ne!(next.0, first.0, "skip must land in the next layout block");
+        let in_first_block = want.iter().take_while(|(p, _)| *p == first.0).count().min(block);
+        assert_eq!(skipped.bases_skipped, (in_first_block - 1) as u64);
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! Single-flight coalescing of identical in-flight requests.
+//!
+//! A burst of clients POSTing the *same* scenario body — a dashboard
+//! refresh fan-out, a retrying load generator, CI smoke workers racing —
+//! would each run the full evaluation even though the answer is a pure
+//! function of the body. [`SingleFlight`] collapses the burst: the first
+//! request with a given key becomes the **leader** and computes; every
+//! request that arrives with the same key *while the leader is still
+//! computing* becomes a **follower** and blocks until the leader's
+//! [`Response`] is ready, then returns a byte-identical clone.
+//!
+//! This is single-flight, **not** a response cache: the key is removed
+//! from the in-flight map *before* followers are woken, so a request
+//! arriving after the leader finished starts a fresh flight. Staleness is
+//! impossible — every answer was computed during the lifetime of the
+//! request that received it — and the memo tiers in
+//! [`crate::planner::EvalCaches`] remain the only cross-request reuse.
+//!
+//! Keys must be canonical: the caller hashes the *parsed* body (the
+//! [`crate::util::Json`] dump is BTreeMap-ordered), never the raw bytes,
+//! so whitespace or key-order variants of one document still coalesce —
+//! and the endpoint is part of the key, so the same body POSTed to two
+//! routes never shares a flight.
+//!
+//! A leader that panics does not strand its followers: a drop guard
+//! completes the flight with a 500 before the panic unwinds to the
+//! connection handler's `catch_unwind` (which answers the leader's own
+//! client with the same 500).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::http::Response;
+
+/// One in-flight computation: the leader fills `done` and broadcasts.
+struct Slot {
+    done: Mutex<Option<Response>>,
+    cv: Condvar,
+}
+
+/// The coalescing table plus its lifetime counters (served at
+/// `GET /stats` under `"coalescing"`).
+pub struct SingleFlight {
+    inflight: Mutex<HashMap<String, Arc<Slot>>>,
+    /// Flights led to completion (each distinct evaluation, coalesced or
+    /// not, counts once).
+    leaders: AtomicU64,
+    /// Requests that piggybacked on another request's in-flight
+    /// evaluation instead of computing.
+    coalesced: AtomicU64,
+}
+
+impl SingleFlight {
+    pub fn new() -> Self {
+        Self {
+            inflight: Mutex::new(HashMap::new()),
+            leaders: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
+
+    /// Run `compute` for `key`, unless an identical flight is already in
+    /// the air — then block until that flight lands and return its
+    /// response verbatim. `endpoint` only labels the error body a panicked
+    /// leader leaves for its followers.
+    pub fn run(&self, endpoint: &str, key: String, compute: impl FnOnce() -> Response) -> Response {
+        let slot = {
+            let mut map = self.inflight.lock().expect("single-flight map poisoned");
+            if let Some(slot) = map.get(&key) {
+                // Count before waiting so tests (and /stats readers) see
+                // the coalescing happen even while the leader computes.
+                self.coalesced.fetch_add(1, Ordering::SeqCst);
+                let slot = slot.clone();
+                drop(map);
+                let mut done = slot.done.lock().expect("single-flight slot poisoned");
+                while done.is_none() {
+                    done = slot.cv.wait(done).expect("single-flight slot poisoned");
+                }
+                return done.clone().expect("flight landed without a response");
+            }
+            let slot = Arc::new(Slot { done: Mutex::new(None), cv: Condvar::new() });
+            map.insert(key.clone(), slot.clone());
+            slot
+        };
+        // Leader path. The guard completes the flight on every exit —
+        // normal or unwinding — so followers can never block forever.
+        self.leaders.fetch_add(1, Ordering::SeqCst);
+        let mut guard =
+            FlightGuard { flight: self, endpoint: endpoint.to_string(), key, slot, response: None };
+        guard.response = Some(compute());
+        let resp = guard.response.clone().expect("just stored");
+        drop(guard);
+        resp
+    }
+
+    /// Requests answered from another request's in-flight evaluation.
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced.load(Ordering::SeqCst)
+    }
+
+    /// Evaluations actually led (completed flights).
+    pub fn leaders(&self) -> u64 {
+        self.leaders.load(Ordering::SeqCst)
+    }
+
+    /// Flights currently in the air.
+    pub fn inflight(&self) -> usize {
+        self.inflight.lock().expect("single-flight map poisoned").len()
+    }
+
+    /// Land a flight: unregister the key *first* (so late arrivals start
+    /// fresh — single-flight, not a cache), then wake every follower.
+    fn finish(&self, key: &str, slot: &Slot, resp: Response) {
+        self.inflight.lock().expect("single-flight map poisoned").remove(key);
+        *slot.done.lock().expect("single-flight slot poisoned") = Some(resp);
+        slot.cv.notify_all();
+    }
+}
+
+impl Default for SingleFlight {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Completes the leader's flight on drop. If `response` is still `None`
+/// the leader is unwinding out of `compute` — followers get a 500 (the
+/// leader's own client gets one from the connection-level `catch_unwind`).
+struct FlightGuard<'a> {
+    flight: &'a SingleFlight,
+    endpoint: String,
+    key: String,
+    slot: Arc<Slot>,
+    response: Option<Response>,
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        let resp = self.response.take().unwrap_or_else(|| {
+            Response::error(500, &self.endpoint, "internal error: coalesced leader panicked")
+        });
+        self.flight.finish(&self.key, &self.slot, resp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::time::Duration;
+
+    fn resp(s: &str) -> Response {
+        Response { status: 200, body: s.to_string() }
+    }
+
+    #[test]
+    fn identical_keys_share_one_computation() {
+        let flight = Arc::new(SingleFlight::new());
+        let release = Arc::new(AtomicBool::new(false));
+        const FOLLOWERS: usize = 4;
+
+        std::thread::scope(|s| {
+            let leader = {
+                let (flight, release) = (flight.clone(), release.clone());
+                s.spawn(move || {
+                    flight.run("/plan", "k".into(), || {
+                        // Hold the flight open until every follower has
+                        // registered as coalesced.
+                        while !release.load(Ordering::SeqCst) {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        resp("answer")
+                    })
+                })
+            };
+            // Wait until the leader's flight is actually in the air.
+            while flight.inflight() == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let followers: Vec<_> = (0..FOLLOWERS)
+                .map(|_| {
+                    let flight = flight.clone();
+                    s.spawn(move || {
+                        flight.run("/plan", "k".into(), || panic!("follower must not compute"))
+                    })
+                })
+                .collect();
+            // Followers count themselves before blocking, so this
+            // converges while the leader is still held open.
+            while flight.coalesced() < FOLLOWERS as u64 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            release.store(true, Ordering::SeqCst);
+            assert_eq!(leader.join().expect("leader").body, "answer");
+            for f in followers {
+                assert_eq!(f.join().expect("follower").body, "answer");
+            }
+        });
+        assert_eq!(flight.leaders(), 1);
+        assert_eq!(flight.coalesced(), FOLLOWERS as u64);
+        assert_eq!(flight.inflight(), 0);
+    }
+
+    #[test]
+    fn distinct_keys_never_coalesce() {
+        let flight = SingleFlight::new();
+        let a = flight.run("/plan", "a".into(), || resp("a"));
+        let b = flight.run("/plan", "b".into(), || resp("b"));
+        assert_eq!((a.body.as_str(), b.body.as_str()), ("a", "b"));
+        assert_eq!(flight.leaders(), 2);
+        assert_eq!(flight.coalesced(), 0);
+    }
+
+    #[test]
+    fn completed_flights_do_not_cache() {
+        let flight = SingleFlight::new();
+        let first = flight.run("/plan", "k".into(), || resp("first"));
+        // Same key after landing → a fresh flight, not the old answer.
+        let second = flight.run("/plan", "k".into(), || resp("second"));
+        assert_eq!((first.body.as_str(), second.body.as_str()), ("first", "second"));
+        assert_eq!(flight.leaders(), 2);
+        assert_eq!(flight.coalesced(), 0);
+        assert_eq!(flight.inflight(), 0);
+    }
+
+    #[test]
+    fn panicking_leader_releases_followers_with_a_500() {
+        let flight = Arc::new(SingleFlight::new());
+        std::thread::scope(|s| {
+            let leader = {
+                let flight = flight.clone();
+                s.spawn(move || {
+                    flight.run("/plan", "k".into(), || -> Response {
+                        // Give a follower time to board the flight.
+                        while flight.coalesced() == 0 {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        panic!("leader dies")
+                    })
+                })
+            };
+            while flight.inflight() == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let follower = {
+                let flight = flight.clone();
+                s.spawn(move || flight.run("/plan", "k".into(), || panic!("must not compute")))
+            };
+            let resp = follower.join().expect("follower must not panic");
+            assert_eq!(resp.status, 500);
+            assert!(resp.body.contains("coalesced leader panicked"), "body: {}", resp.body);
+            assert!(leader.join().is_err(), "leader panic must propagate");
+        });
+        assert_eq!(flight.inflight(), 0, "panicked flight must still unregister");
+    }
+}

@@ -9,7 +9,10 @@
 //! [`crate::planner::EvalCaches`] tiers (one per evaluator context, see
 //! [`service`]), so a repeated or near-neighbor query — same model,
 //! different budget or top-k — skips straight to the streaming fold
-//! instead of rebuilding activation tapes and ZeRO tables.
+//! instead of rebuilding activation tapes and ZeRO tables. Identical
+//! scenario requests that arrive *concurrently* do not even reach the
+//! fold: [`flight`] coalesces them into a single evaluation and fans the
+//! one response out byte-identically.
 //!
 //! The protocol is hand-rolled HTTP/1.1 + JSON over
 //! [`std::net::TcpListener`] ([`http`]) — no new dependencies, the
@@ -32,6 +35,7 @@
 //! before driving shutdown (the bench, tests and CI smoke job all do).
 
 pub mod client;
+pub mod flight;
 pub mod http;
 pub mod service;
 

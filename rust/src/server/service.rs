@@ -16,7 +16,7 @@
 //! | `POST /suite` | `{"dir"?}` | read-only golden comparison of an on-disk suite |
 //! | `POST /shutdown` | — | acks, then drains the worker pool |
 //! | `GET /healthz` | — | `{"ok": true}` |
-//! | `GET /stats` | — | contexts, aggregated cache counters, request counts |
+//! | `GET /stats` | — | contexts, aggregated cache counters, request counts, coalescing counters |
 //!
 //! Scenario bodies reuse the suite's TOML dialect verbatim
 //! ([`ScenarioSpec::from_toml`]) so the daemon can never fork into a
@@ -32,6 +32,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::flight::SingleFlight;
 use super::http::{Request, Response};
 use crate::analysis::{MemoryModel, Overheads, StageInflight, ZeroStrategy};
 use crate::config::{CaseStudy, RecomputePolicy};
@@ -64,6 +65,9 @@ pub struct ServerState {
     contexts: Mutex<HashMap<String, Arc<EvalCaches>>>,
     /// Per-endpoint request counters, served at `GET /stats`.
     requests: Mutex<BTreeMap<String, u64>>,
+    /// Single-flight table for scenario endpoints: identical in-flight
+    /// bodies share one evaluation (see [`super::flight`]).
+    flight: SingleFlight,
     shutdown: AtomicBool,
     /// Planner worker threads per query (the daemon's `--threads`).
     threads: usize,
@@ -74,6 +78,7 @@ impl ServerState {
         Self {
             contexts: Mutex::new(HashMap::new()),
             requests: Mutex::new(BTreeMap::new()),
+            flight: SingleFlight::new(),
             shutdown: AtomicBool::new(false),
             threads: threads.max(1),
         }
@@ -153,7 +158,10 @@ impl ServerState {
                     }
                     "/report" => self.report_endpoint(&req.body),
                     "/suite" => self.suite_endpoint(&req.body),
-                    _ => self.scenario_endpoint(action.expect("scenario route"), &req.body),
+                    _ => {
+                        let endpoint = action.expect("scenario route");
+                        Ok(self.coalesced_scenario(path, endpoint, &req.body))
+                    }
                 };
                 out.unwrap_or_else(|e| Response::error(400, path, &e.to_string()))
             }
@@ -170,6 +178,29 @@ impl ServerState {
                      /atlas /query /report /suite /shutdown and GET /healthz /stats"
                 ),
             ),
+        }
+    }
+
+    /// Scenario endpoints behind single-flight coalescing: identical
+    /// in-flight bodies share one evaluation. The key is the endpoint
+    /// plus the *canonical* dump of the parsed body ([`Json`] is
+    /// BTreeMap-backed, so key order and whitespace variants of one
+    /// document coalesce; different documents never do). Errors are
+    /// mapped *inside* the flight so followers of a failing leader get
+    /// the same 400 bytes a direct call would produce. Bodies that do
+    /// not parse as JSON have no canonical form — they bypass the table
+    /// and fail with the usual readable 400.
+    fn coalesced_scenario(&self, path: &str, endpoint: &str, body: &str) -> Response {
+        let answer = || {
+            self.scenario_endpoint(endpoint, body)
+                .unwrap_or_else(|e| Response::error(400, path, &e.to_string()))
+        };
+        match Json::parse(body) {
+            Ok(doc) => {
+                let key = format!("{endpoint}\n{}", doc.dump());
+                self.flight.run(path, key, answer)
+            }
+            Err(_) => answer(),
         }
     }
 
@@ -323,8 +354,16 @@ impl ServerState {
             }
             obj
         };
+        let coalescing = {
+            let mut obj = BTreeMap::new();
+            obj.insert("coalesced".into(), Json::Num(self.flight.coalesced() as f64));
+            obj.insert("inflight".into(), Json::Num(self.flight.inflight() as f64));
+            obj.insert("leaders".into(), Json::Num(self.flight.leaders() as f64));
+            obj
+        };
         let mut m = BTreeMap::new();
         m.insert("caches".into(), cache_stats_json(&agg));
+        m.insert("coalescing".into(), Json::Obj(coalescing));
         m.insert("contexts".into(), Json::Num(n_contexts as f64));
         m.insert("hit_rate".into(), Json::Num(hit_rate));
         m.insert("requests".into(), Json::Obj(requests));

@@ -14,7 +14,8 @@ use dsmem::config::{
 use dsmem::model::CountMode;
 use dsmem::parallel::{build_groups, GroupKind, RankGrid};
 use dsmem::planner::{
-    pareto, plan, plan_offline, plan_with_threads, Evaluator, PlanQuery, SearchSpace,
+    pareto, plan, plan_offline, plan_with_threads, plan_with_threads_kernel, BlockScratch,
+    Evaluator, PlanKernel, PlanQuery, SearchSpace,
 };
 use dsmem::schedule::{registry, Schedule, ScheduleSpec};
 use dsmem::util::Rng64;
@@ -455,6 +456,97 @@ fn pruning_never_drops_feasible_points() {
                     }
                     assert_eq!(
                         dsmem::planner::report::to_json(&streaming).dump(),
+                        dsmem::planner::report::to_json(&offline).dump(),
+                        "{tag}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn block_eval_matches_candidate_eval() {
+    // The block kernel's acceptance bar: (a) per candidate, the block
+    // fan-out (begin_block + block_point over the trailing schedule × ZeRO
+    // axes) is bit-identical to the scalar `evaluate` path — binding stage,
+    // full ledger, every counter input; (b) end to end, a plan run on the
+    // block kernel is byte-identical to the scalar kernel AND the offline
+    // oracle across random spaces, budget edges (0 and `u64::MAX` — pruning
+    // fully armed and fully disarmed), thread counts and both keep modes.
+    let cs = CaseStudy::paper();
+    let mut rng = Rng64::new(0xB10C);
+    for case in 0..3 {
+        let m = planner_model(&mut rng);
+        let space = random_space(&mut rng);
+
+        // (a) Per-candidate bit-identity on a prefix of the filtered grid.
+        let ev = Evaluator::new(
+            &m,
+            cs.dtypes,
+            CountMode::PaperCompat,
+            StageSplit::FrontLoaded,
+            Overheads::paper_midpoint(),
+            32,
+        );
+        let mut scratch = BlockScratch::default();
+        let mut it = space.candidates(&m);
+        let mut bases = 0usize;
+        while let Some((parallel, act)) = it.next_base() {
+            if bases >= 24 {
+                break;
+            }
+            bases += 1;
+            let block =
+                ev.evaluate_block(&parallel, &act, &space.zero, &space.schedule, &mut scratch);
+            let scalar: Vec<_> = space
+                .zero
+                .iter()
+                .flat_map(|&zero| {
+                    space.schedule.iter().filter_map(move |&schedule| {
+                        schedule
+                            .resolve()
+                            .validate(parallel.pp, 32)
+                            .ok()
+                            .map(|_| dsmem::planner::Candidate { parallel, act, zero, schedule })
+                    })
+                })
+                .map(|c| ev.evaluate(&c))
+                .collect();
+            assert_eq!(block, scalar, "case {case}: block fan-out diverges at base {bases}");
+        }
+
+        // (b) End-to-end byte-identity of the block-kernel plan runs.
+        for hbm in [0u64, 24 * dsmem::GIB as u64, 80 * dsmem::GIB as u64, u64::MAX] {
+            let mut query = PlanQuery::new(space.clone(), hbm);
+            query.top_k = [0usize, 5][rng.below(2) as usize];
+            query.keep_evaluated = true;
+            let offline = plan_offline(&m, cs.dtypes, &query);
+            for threads in [1usize, 3] {
+                for keep in [false, true] {
+                    let mut q = query.clone();
+                    q.keep_evaluated = keep;
+                    let block =
+                        plan_with_threads_kernel(&m, cs.dtypes, &q, threads, PlanKernel::Block);
+                    let scalar =
+                        plan_with_threads_kernel(&m, cs.dtypes, &q, threads, PlanKernel::Scalar);
+                    let tag = format!("case {case} hbm {hbm} threads {threads} keep {keep}");
+                    assert_eq!(block.counters, scalar.counters, "{tag}");
+                    assert_eq!(block.counters, offline.counters, "{tag}");
+                    assert_eq!(block.feasible_count, offline.feasible_count, "{tag}");
+                    assert_eq!(block.frontier, offline.frontier, "{tag}");
+                    assert_eq!(block.ranked, offline.ranked, "{tag}");
+                    if keep {
+                        assert_eq!(block.evaluated, offline.evaluated, "{tag}");
+                        assert_eq!(block.evaluated, scalar.evaluated, "{tag}");
+                    }
+                    assert_eq!(
+                        dsmem::planner::report::to_json(&block).dump(),
+                        dsmem::planner::report::to_json(&scalar).dump(),
+                        "{tag}"
+                    );
+                    assert_eq!(
+                        dsmem::planner::report::to_json(&block).dump(),
                         dsmem::planner::report::to_json(&offline).dump(),
                         "{tag}"
                     );

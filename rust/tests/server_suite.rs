@@ -218,6 +218,90 @@ fn suite_via_server_matches_goldens() {
     handle.shutdown();
 }
 
+/// Read `coalescing.<field>` out of a fresh `GET /stats` snapshot.
+fn coalescing_stat(handle: &ServerHandle, field: &str) -> f64 {
+    let mut client = client_of(handle);
+    let (status, body) = client.request("GET", "/stats", "").expect("stats answers");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).expect("stats is JSON");
+    doc.opt("coalescing")
+        .and_then(|c| c.opt(field))
+        .and_then(|v| v.as_f64().ok())
+        .unwrap_or_else(|| panic!("stats.coalescing.{field} missing: {body}"))
+}
+
+/// Identical concurrent POSTs single-flight: one evaluation leads, the
+/// duplicates ride along and every response is byte-identical. The burst
+/// retries with a fresh flight key if the duplicates happened to land
+/// sequentially (single-flight has no memory, so a landed flight cannot
+/// coalesce late arrivals — that is the point).
+#[test]
+fn identical_concurrent_queries_coalesce() {
+    let handle = boot(4);
+    let addr = handle.addr().to_string();
+    // The full default world-1024 space: slow enough (even against warm
+    // memo tiers) that 4 simultaneous duplicates overlap the evaluation.
+    let toml = "model = \"v3\"\naction = \"plan\"\nhbm_gib = 80\n\n\
+                [plan]\nworld = 1024\nmicrobatches = 32\n";
+    const N: usize = 4;
+    let mut coalesced = 0.0;
+    for attempt in 0..5 {
+        let name = format!("dup-{attempt}");
+        let answers: Vec<String> = std::thread::scope(|s| {
+            let workers: Vec<_> = (0..N)
+                .map(|_| {
+                    let (addr, name) = (&addr, &name);
+                    s.spawn(move || {
+                        let mut client = ServerClient::connect(addr).expect("dup worker connects");
+                        client.post_scenario("plan", name, toml).expect("dup query answers")
+                    })
+                })
+                .collect();
+            workers.into_iter().map(|w| w.join().expect("dup worker")).collect()
+        });
+        for a in &answers[1..] {
+            assert_eq!(a, &answers[0], "coalesced duplicates must serve identical bytes");
+        }
+        coalesced = coalescing_stat(&handle, "coalesced");
+        if coalesced > 0.0 {
+            break;
+        }
+    }
+    assert!(coalesced > 0.0, "identical concurrent queries never coalesced");
+    assert!(coalescing_stat(&handle, "leaders") > 0.0, "every flight needs a leader");
+    assert_eq!(coalescing_stat(&handle, "inflight"), 0.0, "all flights must have landed");
+    handle.shutdown();
+}
+
+/// Distinct concurrent bodies never share a flight: every request leads
+/// its own evaluation and the coalesced counter stays at zero.
+#[test]
+fn distinct_concurrent_queries_never_coalesce() {
+    let handle = boot(4);
+    let addr = handle.addr().to_string();
+    std::thread::scope(|s| {
+        for (i, hbm) in [64u64, 80, 96, 112].into_iter().enumerate() {
+            let addr = &addr;
+            s.spawn(move || {
+                let toml = format!(
+                    "model = \"v3\"\naction = \"plan\"\nhbm_gib = {hbm}\n\n\
+                     [plan]\nworld = 1024\nmicrobatches = 32\npp = [16]\n"
+                );
+                let name = format!("uniq-{i}");
+                let mut client = ServerClient::connect(addr).expect("uniq worker connects");
+                client.post_scenario("plan", &name, &toml).expect("distinct query answers");
+            });
+        }
+    });
+    assert_eq!(
+        coalescing_stat(&handle, "coalesced"),
+        0.0,
+        "distinct bodies must never share a flight"
+    );
+    assert_eq!(coalescing_stat(&handle, "leaders"), 4.0, "each distinct body leads once");
+    handle.shutdown();
+}
+
 /// `POST /shutdown` acks and then drains the whole worker pool — `join`
 /// returning is the proof of a clean shutdown.
 #[test]
